@@ -1,0 +1,74 @@
+//! Configuration-parameter exploration (Experiment 1 as an application).
+//!
+//! Walks the full 66-point SPI sweep on both Spartan-7 devices, prints
+//! the Fig 7 grids, and demonstrates the *practical* use of the sweep: a
+//! deployment helper that picks the most energy-efficient configuration
+//! settings subject to a power-budget ceiling (the paper notes the
+//! fastest settings need a higher power budget — §5.2's closing caveat).
+//!
+//! ```sh
+//! cargo run --release --example config_sweep
+//! ```
+
+use idlewait::config::schema::{FpgaModel, SpiConfig};
+use idlewait::experiments::exp1;
+use idlewait::util::table::{fnum, Table};
+
+/// Pick the lowest-energy setting whose loading-stage power fits `cap_mw`.
+fn best_under_power_cap(result: &exp1::Exp1Result, cap_mw: f64) -> Option<&exp1::SweepPoint> {
+    result
+        .points
+        .iter()
+        .filter(|p| p.profile.loading().power.milliwatts() <= cap_mw)
+        .min_by(|a, b| {
+            a.config_energy_mj()
+                .partial_cmp(&b.config_energy_mj())
+                .unwrap()
+        })
+}
+
+fn main() {
+    idlewait::util::logging::init();
+
+    for model in [FpgaModel::Xc7s15, FpgaModel::Xc7s25] {
+        let result = exp1::run(model);
+        print!("{}", result.render_fig7());
+        print!("{}", result.render_summary());
+        println!();
+    }
+
+    // Deployment helper: optimal settings under decreasing power budgets.
+    let result = exp1::run(FpgaModel::Xc7s15);
+    let mut t = Table::new(&[
+        "power cap (mW)",
+        "best setting",
+        "config energy (mJ)",
+        "config time (ms)",
+    ])
+    .with_title("configuration choice under a loading-stage power budget");
+    for cap in [500.0, 420.0, 380.0, 340.0, 325.0] {
+        match best_under_power_cap(&result, cap) {
+            Some(p) => {
+                t.row(&[
+                    fnum(cap, 0),
+                    p.spi.label(),
+                    fnum(p.config_energy_mj(), 2),
+                    fnum(p.config_time_ms(), 1),
+                ]);
+            }
+            None => {
+                t.row(&[fnum(cap, 0), "none feasible".into(), "—".into(), "—".into()]);
+            }
+        }
+    }
+    print!("{}", t.render());
+
+    // Sanity anchors from the paper.
+    let opt = result.point(SpiConfig::optimal());
+    println!(
+        "\npaper anchor: optimal = {} -> {:.2} mJ / {:.2} ms (paper: 11.85 mJ / 36.15 ms)",
+        SpiConfig::optimal().label(),
+        opt.config_energy_mj(),
+        opt.config_time_ms()
+    );
+}

@@ -1,0 +1,64 @@
+//! Quickstart: load the AOT-compiled LSTM accelerator, run one inference
+//! through the PJRT runtime, and price a single workload item with the
+//! energy model — the smallest end-to-end tour of the library.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::{Context, Result};
+use idlewait::config::paper_default;
+use idlewait::config::schema::StrategyKind;
+use idlewait::energy::analytical::Analytical;
+use idlewait::energy::crossover;
+use idlewait::runtime::inference::Variant;
+use idlewait::util::units::Duration;
+
+fn main() -> Result<()> {
+    idlewait::util::logging::init();
+
+    // 1. Load + compile the AOT artifacts (python never runs here).
+    let runtime = idlewait::runtime::pool::default_runtime()
+        .context("run `make artifacts` first")?;
+    let max_err = runtime.self_check()?;
+    println!("runtime self-check vs JAX: max |err| = {max_err:.2e}");
+
+    // 2. One real inference on the self-check window.
+    let window = runtime.manifest.selfcheck.window.clone();
+    let result = runtime.forecast(&window, Variant::Forecast)?;
+    println!(
+        "forecast = {:.6} ({:.3} ms host latency on the CPU stand-in)",
+        result.forecast,
+        result.latency.millis()
+    );
+
+    // 3. Price one workload item with the paper's energy model (Table 2).
+    let cfg = paper_default();
+    let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
+    println!(
+        "\nenergy per workload item (Table 2 calibration):\n  \
+         On-Off       : {:.3} mJ (config {:.2} mJ dominates)\n  \
+         Idle-Waiting : {:.4} mJ active + {:.1} mW while idle",
+        model.item.e_item_onoff().millijoules(),
+        model.item.e_config.millijoules(),
+        model.item.e_active.millijoules(),
+        model.item.idle_power_baseline.milliwatts(),
+    );
+
+    // 4. The paper's core decision rule.
+    let t40 = Duration::from_millis(40.0);
+    let onoff = model.predict(StrategyKind::OnOff, t40);
+    let iw = model.predict(StrategyKind::IdleWaiting, t40);
+    println!(
+        "\nat T_req = 40 ms within {} J:\n  On-Off       : {} items\n  Idle-Waiting : {} items ({:.2}x)",
+        cfg.workload.energy_budget.joules(),
+        onoff.n_max.unwrap(),
+        iw.n_max.unwrap(),
+        iw.n_max.unwrap() as f64 / onoff.n_max.unwrap() as f64
+    );
+    println!(
+        "break-even request period: {:.2} ms (paper: 89.21 ms)",
+        crossover::asymptotic(&model, model.item.idle_power_baseline).millis()
+    );
+    Ok(())
+}

@@ -1,0 +1,92 @@
+"""L2 profiling: HLO cost analysis of the lowered modules (§Perf).
+
+Runs XLA's cost analysis over each AOT artifact's computation to report
+FLOPs, transcendentals and bytes accessed — the numbers behind the §Perf
+claims about the lowered module (no redundant recomputation, scan keeps
+one loop body). Usage:
+
+    cd python && python -m compile.analysis
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def cost_of(fn, *specs) -> dict:
+    """Lower `fn` and run XLA's HLO cost analysis on the module."""
+    lowered = jax.jit(fn).lower(*specs)
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(lowered.compiler_ir("stablehlo")), use_tuple_args=False, return_tuple=True
+    )
+    props = xc._xla.hlo_module_cost_analysis(
+        xc._xla.get_default_c_api_topology.__self__ if False else _cpu_client(),
+        comp.as_hlo_module(),
+    )
+    return dict(props)
+
+
+_CLIENT = None
+
+
+def _cpu_client():
+    global _CLIENT
+    if _CLIENT is None:
+        _CLIENT = jax.devices("cpu")[0].client
+    return _CLIENT
+
+
+def analyze_all(seed: int = 0x15D4) -> dict:
+    """Cost analysis for every artifact variant; returns {name: props}."""
+    params = model.init_params(seed)
+    window_spec = jax.ShapeDtypeStruct((model.WINDOW, model.INPUT), jnp.float32)
+    x_spec = jax.ShapeDtypeStruct((1, model.INPUT), jnp.float32)
+    h_spec = jax.ShapeDtypeStruct((1, model.HIDDEN), jnp.float32)
+
+    out = {
+        "lstm_step": cost_of(
+            lambda x, h, c: model.lstm_step(params, x, h, c), x_spec, h_spec, h_spec
+        ),
+        "lstm_forecast": cost_of(
+            lambda w: (model.forecast(params, w),), window_spec
+        ),
+        "lstm_forecast_int8": cost_of(
+            lambda w: (model.forecast_int8(params, w),), window_spec
+        ),
+    }
+    return out
+
+
+def theoretical_step_flops(
+    batch: int = 1, inp: int = model.INPUT, hidden: int = model.HIDDEN
+) -> int:
+    """Hand-counted MACs×2 for one LSTM step (matmuls only)."""
+    return 2 * batch * (inp * 4 * hidden + hidden * 4 * hidden)
+
+
+def main() -> None:
+    results = analyze_all()
+    print(f"{'module':24s} {'flops':>12s} {'transcendentals':>16s} {'bytes':>12s}")
+    for name, props in results.items():
+        print(
+            f"{name:24s} {props.get('flops', float('nan')):>12.0f} "
+            f"{props.get('transcendentals', float('nan')):>16.0f} "
+            f"{props.get('bytes accessed', float('nan')):>12.0f}"
+        )
+    step_flops = results["lstm_step"].get("flops", 0)
+    theory = theoretical_step_flops()
+    print(
+        f"\nlstm_step matmul FLOPs (theory): {theory} "
+        f"(analysis/theory = {step_flops / theory:.2f}; the overhead is the "
+        f"elementwise gate math). NOTE: XLA cost analysis counts a while-loop "
+        f"body once, so the scanned forecast reports ~1 step of FLOPs; the "
+        f"true total is WINDOW (= {model.WINDOW}) times the body."
+    )
+
+
+if __name__ == "__main__":
+    main()

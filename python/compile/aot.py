@@ -1,0 +1,164 @@
+"""AOT lowering: JAX/Pallas model -> HLO text artifacts + manifest.
+
+Run once at build time (`make artifacts`); the rust runtime loads the HLO
+text via `HloModuleProto::from_text_file`, compiles it on the PJRT CPU
+client and executes it on the request path. Python never runs at serve
+time.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+`xla` crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts (weights baked in as constants — the bitstream analogue):
+  lstm_step.hlo.txt       (x(1,6), h(1,20), c(1,20)) -> (h', c')
+  lstm_forecast.hlo.txt   (window(24,6),)            -> (forecast(1,),)
+  lstm_forecast_int8.hlo.txt  same signature, int8 activation path
+  manifest.json           shapes/dtypes for the rust loader
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    `print_large_constants=True` is load-bearing: the default HLO printer
+    elides big constants as `{...}`, which the rust side's unverified-
+    module parser silently reads back as zeros — the baked LSTM weights
+    would vanish. (Caught by the runtime self-check.)
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax 0.8 emits source_end_line/column metadata the 0.5.1-era HLO
+    # parser on the rust side rejects; metadata is debug-only, drop it.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def build_artifacts(out_dir: str, seed: int = 0x15D4) -> dict:
+    """Lower every model variant; returns the manifest dict."""
+    params = model.init_params(seed)
+
+    window_spec = jax.ShapeDtypeStruct((model.WINDOW, model.INPUT), jnp.float32)
+    x_spec = jax.ShapeDtypeStruct((1, model.INPUT), jnp.float32)
+    h_spec = jax.ShapeDtypeStruct((1, model.HIDDEN), jnp.float32)
+
+    # Weights are closed over -> lowered as HLO constants.
+    def step_fn(x, h, c):
+        return model.lstm_step(params, x, h, c)
+
+    def forecast_fn(window):
+        return (model.forecast(params, window),)
+
+    def forecast_int8_fn(window):
+        return (model.forecast_int8(params, window),)
+
+    def forecast_batch_fn(windows):
+        return (model.forecast_batched(params, windows),)
+
+    entries = [
+        {
+            "name": "lstm_step",
+            "fn": step_fn,
+            "specs": [x_spec, h_spec, h_spec],
+            "inputs": [[1, model.INPUT], [1, model.HIDDEN], [1, model.HIDDEN]],
+            "outputs": [[1, model.HIDDEN], [1, model.HIDDEN]],
+        },
+        {
+            "name": "lstm_forecast",
+            "fn": forecast_fn,
+            "specs": [window_spec],
+            "inputs": [[model.WINDOW, model.INPUT]],
+            "outputs": [[1]],
+        },
+        {
+            "name": "lstm_forecast_int8",
+            "fn": forecast_int8_fn,
+            "specs": [window_spec],
+            "inputs": [[model.WINDOW, model.INPUT]],
+            "outputs": [[1]],
+        },
+        {
+            "name": "lstm_forecast_batch8",
+            "fn": forecast_batch_fn,
+            "specs": [
+                jax.ShapeDtypeStruct((8, model.WINDOW, model.INPUT), jnp.float32)
+            ],
+            "inputs": [[8, model.WINDOW, model.INPUT]],
+            "outputs": [[8]],
+        },
+    ]
+
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "schema_version": 1,
+        "seed": seed,
+        "hidden_size": model.HIDDEN,
+        "input_size": model.INPUT,
+        "window": model.WINDOW,
+        "quant_scale": model.QUANT_SCALE,
+        "dtype": "f32",
+        "artifacts": [],
+    }
+    for e in entries:
+        lowered = jax.jit(e["fn"]).lower(*e["specs"])
+        text = to_hlo_text(lowered)
+        fname = f"{e['name']}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": e["name"],
+                "file": fname,
+                "inputs": e["inputs"],
+                "outputs": e["outputs"],
+            }
+        )
+        print(f"  lowered {e['name']:24s} -> {fname} ({len(text)} chars)")
+
+    # Reference outputs on a known window so the rust runtime can
+    # self-check numerics end to end (quickstart + integration test).
+    window = model.make_synthetic_window(seed=0)
+    ref_forecast = float(model.forecast(params, window)[0])
+    ref_forecast_int8 = float(model.forecast_int8(params, window)[0])
+    manifest["selfcheck"] = {
+        "window_seed": 0,
+        "forecast": ref_forecast,
+        "forecast_int8": ref_forecast_int8,
+        # full window, row-major, so rust needs no RNG reimplementation
+        "window": [float(v) for v in window.reshape(-1)],
+    }
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote manifest.json (selfcheck forecast = {ref_forecast:.6f})")
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--seed", type=int, default=0x15D4)
+    args = parser.parse_args()
+    print(f"AOT-lowering LSTM accelerator artifacts into {args.out_dir}")
+    build_artifacts(args.out_dir, args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""L1 Pallas kernel: dense output head.
+
+The forecast head that maps the LSTM's final hidden state to the output.
+Trivial compute, but kept as its own kernel so the AOT graph mirrors the
+FPGA accelerator's structure (LSTM core + dense head as separate pipeline
+stages in reference [13])."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref):
+    o_ref[...] = (
+        jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    ).astype(o_ref.dtype)
+
+
+def dense(x, w, b, *, interpret: bool = True):
+    """(B, H) @ (H, O) + (O,) -> (B, O) as a Pallas kernel."""
+    batch = x.shape[0]
+    out = w.shape[1]
+    b2 = b.reshape(1, -1)
+    return pl.pallas_call(
+        _dense_kernel,
+        out_shape=jax.ShapeDtypeStruct((batch, out), x.dtype),
+        interpret=interpret,
+    )(x, w, b2)

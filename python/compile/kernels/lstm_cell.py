@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: fused LSTM cell.
+
+The paper's compute payload is an embedded LSTM accelerator (reference
+[13], hidden size 20). On the FPGA it is a streaming fixed-point MAC
+pipeline; the TPU-idiom rethink (DESIGN.md §Hardware-Adaptation) is a
+single fused kernel that keeps the whole working set in VMEM:
+
+* both gate matmuls (x·Wx and h·Wh) target the MXU,
+* the gate nonlinearities and the cell-state update run on the VPU in the
+  same kernel, so no intermediate ever round-trips through HBM.
+
+With H = 20 the padded VMEM tiles are tiny (§Perf in EXPERIMENTS.md
+estimates the footprint), so a single grid-less pallas_call whose
+BlockSpecs map each operand entirely into VMEM is the right schedule —
+the FPGA's "weights resident in BRAM" becomes "weights resident in VMEM".
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO for both testing and
+the AOT artifacts. Real-TPU lowering would only change the pallas_call
+flag; performance on TPU is *estimated*, not measured (DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_cell_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, h_out_ref, c_out_ref):
+    """Fused gates-matmul + elementwise LSTM update.
+
+    All refs live in VMEM. Gate layout [i, f, g, o] along the last axis,
+    matching `ref.lstm_cell_ref`.
+    """
+    x = x_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+    # MXU work: two (B,I)x(I,4H) / (B,H)x(H,4H) matmuls, fused here so the
+    # (B,4H) gate tensor never leaves VMEM.
+    gates = (
+        jnp.dot(x, wx_ref[...], preferred_element_type=jnp.float32)
+        + jnp.dot(h, wh_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+    hidden = h.shape[-1]
+    i = gates[:, 0 * hidden : 1 * hidden]
+    f = gates[:, 1 * hidden : 2 * hidden]
+    g = gates[:, 2 * hidden : 3 * hidden]
+    o = gates[:, 3 * hidden : 4 * hidden]
+    # VPU work: nonlinearities + state update.
+    c_next = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_next = jax.nn.sigmoid(o) * jnp.tanh(c_next)
+    h_out_ref[...] = h_next.astype(h_out_ref.dtype)
+    c_out_ref[...] = c_next.astype(c_out_ref.dtype)
+
+
+def lstm_cell(x, h, c, w_x, w_h, b, *, interpret: bool = True):
+    """One LSTM step as a fused Pallas kernel.
+
+    Shapes: x (B, I), h/c (B, H), w_x (I, 4H), w_h (H, 4H), b (4H,).
+    Returns (h_next, c_next).
+    """
+    batch, hidden = h.shape
+    out_shape = [
+        jax.ShapeDtypeStruct((batch, hidden), h.dtype),
+        jax.ShapeDtypeStruct((batch, hidden), c.dtype),
+    ]
+    # Bias broadcast: pallas wants explicit 2D refs on TPU; reshape (4H,)
+    # to (1, 4H) so the in-kernel add broadcasts over the batch.
+    b2 = b.reshape(1, -1)
+    h_next, c_next = pl.pallas_call(
+        _lstm_cell_kernel,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, h, c, w_x, w_h, b2)
+    return h_next, c_next
+
+
+def vmem_footprint_bytes(batch: int, inp: int, hidden: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for the fused cell (§Perf).
+
+    Counts every resident operand plus the (B, 4H) gate intermediate.
+    """
+    operands = (
+        batch * inp  # x
+        + 2 * batch * hidden  # h, c
+        + inp * 4 * hidden  # w_x
+        + hidden * 4 * hidden  # w_h
+        + 4 * hidden  # b
+        + 2 * batch * hidden  # outputs
+        + batch * 4 * hidden  # gates intermediate
+    )
+    return operands * dtype_bytes
+
+
+def mxu_utilization_estimate(batch: int, inp: int, hidden: int) -> float:
+    """Fraction of MXU lanes doing useful work for the padded tiles.
+
+    The 128×128 MXU pads I and H up; with the paper's I=6, H=20 the
+    useful-work fraction is tiny — exactly why the FPGA (sized to the
+    problem) wins on energy, which is the paper's premise (§Perf).
+    """
+    pad = lambda n: max(128, ((n + 127) // 128) * 128)
+    useful = batch * inp * 4 * hidden + batch * hidden * 4 * hidden
+    padded = pad(batch) * pad(inp) * pad(4 * hidden) + pad(batch) * pad(hidden) * pad(4 * hidden)
+    return useful / padded

@@ -1,0 +1,44 @@
+"""L1 Pallas kernels: symmetric int8 quantize / dequantize.
+
+The paper's FPGA accelerator (reference [13]) is fixed-point; these
+kernels mirror that numeric regime on the TPU path (DESIGN.md
+§Hardware-Adaptation: 8-bit MACs → int8 storage, f32 accumulation). The
+quantized forecast variant in `model.py` uses them to bound the accuracy
+cost of the fixed-point substitution."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quantize_kernel(x_ref, o_ref, *, inv_scale: float):
+    q = jnp.clip(jnp.round(x_ref[...] * inv_scale), -127.0, 127.0)
+    o_ref[...] = q.astype(jnp.int8)
+
+
+def quantize(x, scale: float, *, interpret: bool = True):
+    """Symmetric int8 quantization with a static scale."""
+    from functools import partial
+
+    return pl.pallas_call(
+        partial(_quantize_kernel, inv_scale=1.0 / scale),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.int8),
+        interpret=interpret,
+    )(x)
+
+
+def _dequantize_kernel(q_ref, o_ref, *, scale: float):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * scale
+
+
+def dequantize(q, scale: float, *, interpret: bool = True):
+    """Inverse of :func:`quantize` (modulo rounding)."""
+    from functools import partial
+
+    return pl.pallas_call(
+        partial(_dequantize_kernel, scale=scale),
+        out_shape=jax.ShapeDtypeStruct(q.shape, jnp.float32),
+        interpret=interpret,
+    )(q)

@@ -1,0 +1,74 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this
+package must match its oracle to float32 tolerance (pytest + hypothesis
+sweep shapes and dtypes). Keeping the oracles dependency-free (no pallas,
+no custom ops) makes them auditable line-by-line against the LSTM
+equations in the paper's reference [13].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_cell_ref(x, h, c, w_x, w_h, b):
+    """One LSTM cell step.
+
+    Gate layout follows the JAX/Flax convention: the 4H gate dimension is
+    split as [i, f, g, o] (input, forget, cell, output).
+
+    Args:
+      x:   (B, I)  input at this timestep
+      h:   (B, H)  previous hidden state
+      c:   (B, H)  previous cell state
+      w_x: (I, 4H) input projection
+      w_h: (H, 4H) recurrent projection
+      b:   (4H,)   bias
+
+    Returns:
+      (h_next, c_next), each (B, H).
+    """
+    gates = x @ w_x + h @ w_h + b
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c_next = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_next = jax.nn.sigmoid(o) * jnp.tanh(c_next)
+    return h_next, c_next
+
+
+def dense_ref(x, w, b):
+    """Dense head: (B, H) @ (H, O) + (O,) -> (B, O)."""
+    return x @ w + b
+
+
+def quantize_ref(x, scale):
+    """Symmetric int8 quantization: round(x/scale) clamped to [-127, 127]."""
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    return q.astype(jnp.int8)
+
+
+def dequantize_ref(q, scale):
+    """Inverse of :func:`quantize_ref` (modulo rounding)."""
+    return q.astype(jnp.float32) * scale
+
+
+def lstm_forecast_ref(window, params):
+    """Run the LSTM over a (T, I) window and emit a scalar forecast.
+
+    Mirrors the paper's reference-[13] accelerator: hidden-size-20 LSTM,
+    dense head on the final hidden state.
+    """
+    w_x, w_h, b, w_out, b_out = (
+        params["w_x"],
+        params["w_h"],
+        params["b"],
+        params["w_out"],
+        params["b_out"],
+    )
+    hidden = w_h.shape[0]
+    h = jnp.zeros((1, hidden), dtype=window.dtype)
+    c = jnp.zeros((1, hidden), dtype=window.dtype)
+    for t in range(window.shape[0]):
+        h, c = lstm_cell_ref(window[t : t + 1, :], h, c, w_x, w_h, b)
+    return dense_ref(h, w_out, b_out)[0]

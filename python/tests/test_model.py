@@ -1,0 +1,97 @@
+"""L2 correctness: the JAX model (scan over the fused cell + dense head)
+vs the pure-jnp reference, plus the int8 fixed-point variant's accuracy
+bound."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params()
+
+
+@pytest.fixture(scope="module")
+def window():
+    return model.make_synthetic_window(seed=0)
+
+
+def test_forecast_matches_reference(params, window):
+    got = model.forecast(params, window)
+    want = ref.lstm_forecast_ref(window, params)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_forecast_deterministic(params, window):
+    a = model.forecast(params, window)
+    b = model.forecast(params, window)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_forecast_shape_and_dtype(params, window):
+    out = model.forecast(params, window)
+    assert out.shape == (1,)
+    assert out.dtype == jnp.float32
+
+
+def test_step_composes_to_forecast(params, window):
+    # manually unrolling lstm_step must equal the scanned forecast
+    h = jnp.zeros((1, model.HIDDEN), jnp.float32)
+    c = jnp.zeros((1, model.HIDDEN), jnp.float32)
+    for t in range(window.shape[0]):
+        h, c = model.lstm_step(params, window[t : t + 1, :], h, c)
+    manual = (h @ params["w_out"] + params["b_out"])[0]
+    scanned = model.forecast(params, window)
+    np.testing.assert_allclose(manual, scanned, rtol=1e-5, atol=1e-6)
+
+
+def test_int8_variant_close_to_f32(params, window):
+    f32 = float(model.forecast(params, window)[0])
+    q = float(model.forecast_int8(params, window)[0])
+    # int8 activation path: bounded quantization error, not equality
+    assert abs(f32 - q) < 0.1, (f32, q)
+    assert abs(f32 - q) > 0.0  # it must actually quantize
+
+
+def test_different_windows_different_forecasts(params):
+    w0 = model.make_synthetic_window(seed=0)
+    w1 = model.make_synthetic_window(seed=1, t0=11.0)
+    f0 = float(model.forecast(params, w0)[0])
+    f1 = float(model.forecast(params, w1)[0])
+    assert f0 != f1
+
+
+def test_params_deterministic_across_processes():
+    a = model.init_params()
+    b = model.init_params()
+    for key in a:
+        np.testing.assert_array_equal(np.asarray(a[key]), np.asarray(b[key]))
+
+
+def test_hidden_size_is_papers_20(params):
+    assert params["w_h"].shape == (20, 80)
+
+
+def test_jit_forecast(params, window):
+    jitted = jax.jit(lambda w: model.forecast(params, w))
+    np.testing.assert_allclose(
+        jitted(window), model.forecast(params, window), rtol=1e-5, atol=1e-6
+    )
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])
+
+
+def test_batched_forecast_matches_singles(params):
+    windows = jnp.stack(
+        [model.make_synthetic_window(seed=s, t0=3.0 * s) for s in range(4)]
+    )
+    batched = model.forecast_batched(params, windows)
+    singles = jnp.stack([model.forecast(params, w)[0] for w in windows])
+    np.testing.assert_allclose(batched, singles, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,90 @@
+"""Tiled LSTM kernel vs the oracle and vs the untiled kernel."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.lstm_cell import lstm_cell
+from compile.kernels.lstm_cell_tiled import (
+    lstm_cell_tiled,
+    pack_gates,
+    unpack_gates,
+    vmem_footprint_bytes_tiled,
+)
+from tests.test_kernels import make_cell_inputs
+
+
+def test_pack_unpack_round_trip():
+    w = jax.random.normal(jax.random.PRNGKey(0), (6, 80), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(unpack_gates(pack_gates(w, 20))), np.asarray(w))
+
+
+def test_pack_matches_split_convention():
+    # pack_gates must agree with jnp.split(gates, 4) gate ordering
+    hidden = 8
+    w = jnp.arange(4 * hidden, dtype=jnp.float32).reshape(1, 4 * hidden)
+    packed = pack_gates(w, hidden)
+    splits = jnp.split(w, 4, axis=-1)
+    for g in range(4):
+        np.testing.assert_array_equal(np.asarray(packed[0, g]), np.asarray(splits[g][0]))
+
+
+@pytest.mark.parametrize("hidden,block_h", [(20, 5), (20, 20), (64, 16), (128, 32)])
+def test_tiled_matches_ref(hidden, block_h):
+    x, h, c, wx, wh, b = make_cell_inputs(1, 6, hidden, seed=1)
+    h_t, c_t = lstm_cell_tiled(x, h, c, wx, wh, b, block_h=block_h)
+    h_r, c_r = ref.lstm_cell_ref(x, h, c, wx, wh, b)
+    np.testing.assert_allclose(h_t, h_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c_t, c_r, rtol=1e-5, atol=1e-6)
+
+
+def test_tiled_matches_untiled_kernel():
+    x, h, c, wx, wh, b = make_cell_inputs(2, 8, 32, seed=3)
+    h_t, c_t = lstm_cell_tiled(x, h, c, wx, wh, b, block_h=8)
+    h_u, c_u = lstm_cell(x, h, c, wx, wh, b)
+    np.testing.assert_allclose(h_t, h_u, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c_t, c_u, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    batch=st.integers(1, 3),
+    inp=st.integers(1, 12),
+    blocks=st.integers(1, 6),
+    block_h=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tiled_hypothesis_sweep(batch, inp, blocks, block_h, seed):
+    hidden = blocks * block_h
+    x, h, c, wx, wh, b = make_cell_inputs(batch, inp, hidden, seed)
+    h_t, c_t = lstm_cell_tiled(x, h, c, wx, wh, b, block_h=block_h)
+    h_r, c_r = ref.lstm_cell_ref(x, h, c, wx, wh, b)
+    np.testing.assert_allclose(h_t, h_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c_t, c_r, rtol=1e-5, atol=1e-6)
+
+
+def test_bad_block_size_rejected():
+    x, h, c, wx, wh, b = make_cell_inputs(1, 6, 20)
+    with pytest.raises(ValueError, match="must divide"):
+        lstm_cell_tiled(x, h, c, wx, wh, b, block_h=7)
+
+
+def test_tiling_shrinks_vmem_footprint():
+    whole = vmem_footprint_bytes_tiled(1, 6, 512, 512)
+    tiled = vmem_footprint_bytes_tiled(1, 6, 512, 128)
+    assert tiled < whole / 2
+
+
+def test_jit_compatible():
+    x, h, c, wx, wh, b = make_cell_inputs(1, 6, 40, seed=5)
+    jitted = jax.jit(lambda *a: lstm_cell_tiled(*a, block_h=10))
+    h_t, _ = jitted(x, h, c, wx, wh, b)
+    h_r, _ = ref.lstm_cell_ref(x, h, c, wx, wh, b)
+    np.testing.assert_allclose(h_t, h_r, rtol=1e-5, atol=1e-6)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

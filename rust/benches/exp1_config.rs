@@ -1,0 +1,43 @@
+//! Bench: regenerate Experiment 1 / Fig 7 (the 66-point configuration
+//! sweep on both devices) and time the underlying device-model paths.
+//!
+//! Run: `cargo bench --bench exp1_config`
+
+use idlewait::bench::{black_box, Bench};
+use idlewait::config::schema::{FpgaModel, SpiConfig};
+use idlewait::device::bitstream::Bitstream;
+use idlewait::device::compression::compress;
+use idlewait::device::config_fsm::ConfigProfile;
+use idlewait::device::flash::StoredImage;
+use idlewait::experiments::exp1;
+
+fn main() {
+    // --- regenerate the table/figure ---
+    for model in [FpgaModel::Xc7s15, FpgaModel::Xc7s25] {
+        let result = exp1::run(model);
+        print!("{}", result.render_fig7());
+        print!("{}", result.render_summary());
+        println!();
+    }
+
+    // --- timing ---
+    let mut bench = Bench::new("exp1: configuration sweep machinery");
+    bench.bench("full 66-point sweep (XC7S15)", || {
+        black_box(exp1::run(FpgaModel::Xc7s15).energy_improvement());
+    });
+    let bitstream = Bitstream::lstm_accelerator(FpgaModel::Xc7s15);
+    bench.bench("bitstream synthesis (1333 frames)", || {
+        black_box(Bitstream::lstm_accelerator(FpgaModel::Xc7s15).n_frames());
+    });
+    bench.bench("frame-dedup compression", || {
+        black_box(compress(&bitstream).bits);
+    });
+    let image = StoredImage::new(bitstream.clone(), true);
+    bench.bench("single ConfigProfile::compute", || {
+        black_box(
+            ConfigProfile::compute(FpgaModel::Xc7s15, SpiConfig::optimal(), &image)
+                .total_energy(),
+        );
+    });
+    bench.finish();
+}

@@ -1,0 +1,56 @@
+//! Bench: regenerate Experiment 2 / Figs 8–9 (Idle-Waiting vs On-Off
+//! sweep at the paper's 0.01 ms resolution) and time the analytical path.
+//!
+//! Run: `cargo bench --bench exp2_strategies`
+
+use idlewait::bench::{black_box, quick_mode, Bench};
+use idlewait::config::paper_default;
+use idlewait::config::schema::StrategyKind;
+use idlewait::energy::analytical::Analytical;
+use idlewait::energy::crossover;
+use idlewait::experiments::exp2;
+use idlewait::util::units::Duration;
+
+fn main() {
+    let cfg = paper_default();
+
+    // --- regenerate the figures at paper resolution ---
+    let step = if quick_mode() { 1.0 } else { 0.01 };
+    let result = exp2::run(&cfg, step);
+    print!("{}", result.render_figs());
+    print!("{}", result.render_summary(&cfg));
+
+    // --- timing ---
+    let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
+    let mut bench = Bench::new("exp2: analytical model hot path");
+    bench.bench("single n_max prediction (Idle-Waiting)", || {
+        black_box(
+            model
+                .predict(StrategyKind::IdleWaiting, Duration::from_millis(40.0))
+                .n_max,
+        );
+    });
+    bench.bench("single n_max prediction (On-Off)", || {
+        black_box(
+            model
+                .predict(StrategyKind::OnOff, Duration::from_millis(40.0))
+                .n_max,
+        );
+    });
+    bench.bench("crossover (closed form)", || {
+        black_box(crossover::asymptotic(&model, model.item.idle_power_baseline).millis());
+    });
+    bench.bench("crossover (bisection, 0.01 ms tol)", || {
+        black_box(crossover::exact(
+            &model,
+            model.item.idle_power_baseline,
+            Duration::from_millis(37.0),
+            Duration::from_millis(600.0),
+            Duration::from_millis(0.01),
+        ));
+    });
+    bench.bench("full Fig 8/9 sweep (11,001 pts × 2 strategies)", || {
+        black_box(exp2::run(&cfg, 0.01).samples.len());
+    });
+    bench.finish();
+}

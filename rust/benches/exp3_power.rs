@@ -1,0 +1,37 @@
+//! Bench: regenerate Experiment 3 / Table 3 + Figs 10–11 (idle power
+//! saving) and time the rail-model queries.
+//!
+//! Run: `cargo bench --bench exp3_power`
+
+use idlewait::bench::{black_box, quick_mode, Bench};
+use idlewait::config::paper_default;
+use idlewait::device::rails::{PowerSaving, RailSet};
+use idlewait::experiments::exp3;
+
+fn main() {
+    let cfg = paper_default();
+
+    // --- regenerate ---
+    let step = if quick_mode() { 1.0 } else { 0.01 };
+    let result = exp3::run(&cfg, step);
+    print!("{}", result.render_table3());
+    print!("{}", result.render_figs());
+    print!("{}", result.render_summary());
+
+    // --- timing ---
+    let mut bench = Bench::new("exp3: rail model + sweep");
+    bench.bench("RailSet::idle_power(M12) (Table 3 query)", || {
+        black_box(RailSet::idle_power(PowerSaving::M12).milliwatts());
+    });
+    bench.bench("enter/exit idle transition pair", || {
+        let mut rails = RailSet::new();
+        rails.power_up();
+        rails.enter_idle(PowerSaving::M12);
+        rails.exit_idle();
+        black_box(rails.static_power().milliwatts());
+    });
+    bench.bench("full Fig 10/11 sweep (11,001 pts × 3 modes)", || {
+        black_box(exp3::run(&cfg, 0.01).m12_items_x());
+    });
+    bench.finish();
+}

@@ -1,0 +1,26 @@
+//! Bench: regenerate Fig 2 (energy breakdown of a workload item) and
+//! time the phase-breakdown computation.
+//!
+//! Run: `cargo bench --bench fig2_breakdown`
+
+use idlewait::bench::{black_box, Bench};
+use idlewait::config::paper_default;
+use idlewait::energy::phase::Breakdown;
+use idlewait::experiments::fig2;
+
+fn main() {
+    // --- regenerate the figure ---
+    let profile = fig2::run();
+    print!("{}", profile.render());
+
+    // --- timing ---
+    let item = paper_default().item;
+    let mut bench = Bench::new("fig2: workload-item energy breakdown");
+    bench.bench("fig2::run (device-model reconstruction)", || {
+        black_box(fig2::run().config_fraction());
+    });
+    bench.bench("Breakdown::of_item (Table 2 item)", || {
+        black_box(Breakdown::of_item(&item).total);
+    });
+    bench.finish();
+}

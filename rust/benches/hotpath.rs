@@ -1,0 +1,133 @@
+//! Bench: the whole-stack hot paths (§Perf deliverable).
+//!
+//! * L3 DES: simulated workload items per second (the validation run's
+//!   cost driver) + event-queue throughput.
+//! * L3 serving: end-to-end request cost including real PJRT inference.
+//! * PJRT: raw LSTM forecast latency (f32 and int8 variants) — the L1/L2
+//!   artifact executing under the CPU stand-in.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use idlewait::bench::{black_box, Bench};
+use idlewait::config::paper_default;
+use idlewait::coordinator::requests::Periodic;
+use idlewait::coordinator::server::{serve, SensorSource, ServerConfig};
+use idlewait::energy::analytical::Analytical;
+use idlewait::runtime::inference::Variant;
+use idlewait::sim::{EventQueue, SimTime};
+use idlewait::strategies::simulate::simulate;
+use idlewait::strategies::strategy::{IdleWaiting, OnOff};
+use idlewait::util::units::Duration;
+
+fn main() {
+    let cfg = paper_default();
+    let mut bench = Bench::new("whole-stack hot paths");
+
+    // --- L3 DES ---
+    let mut des_cfg = cfg.clone();
+    des_cfg.workload.max_items = Some(10_000);
+    bench.bench("DES: 10k idle-waiting items", || {
+        let mut arrivals = Periodic {
+            period: Duration::from_millis(40.0),
+        };
+        black_box(simulate(&des_cfg, &IdleWaiting::baseline(), &mut arrivals).items);
+    });
+    bench.bench("DES: 10k on-off items (config FSM each)", || {
+        let mut arrivals = Periodic {
+            period: Duration::from_millis(40.0),
+        };
+        black_box(simulate(&des_cfg, &OnOff, &mut arrivals).items);
+    });
+
+    // --- sim core ---
+    bench.bench("event queue: 1k schedule+pop", || {
+        let mut q = EventQueue::with_capacity(1024);
+        for i in 0..1000u64 {
+            q.schedule(SimTime::from_nanos(i * 7919 % 4096), i);
+        }
+        let mut acc = 0u64;
+        while let Some((_, id)) = q.pop() {
+            acc = acc.wrapping_add(id);
+        }
+        black_box(acc);
+    });
+
+    // --- analytical (used inside every sweep point) ---
+    let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
+    bench.bench("analytical n_max (idle-waiting)", || {
+        black_box(model.n_max_idle_waiting(
+            Duration::from_millis(40.0),
+            model.item.idle_power_baseline,
+        ));
+    });
+
+    // --- PJRT inference (requires artifacts) ---
+    match idlewait::runtime::pool::default_runtime() {
+        Ok(runtime) => {
+            let window = runtime.manifest.selfcheck.window.clone();
+            bench.bench("PJRT LSTM forecast (f32, 24x6 window)", || {
+                black_box(
+                    runtime
+                        .forecast(&window, Variant::Forecast)
+                        .unwrap()
+                        .forecast,
+                );
+            });
+            bench.bench("PJRT LSTM forecast (int8 activations)", || {
+                black_box(
+                    runtime
+                        .forecast(&window, Variant::ForecastInt8)
+                        .unwrap()
+                        .forecast,
+                );
+            });
+            if let Some(batch) = runtime.batch_size() {
+                let (rows, cols) = runtime.window_shape();
+                let mut buffer = Vec::with_capacity(batch * rows * cols);
+                for b in 0..batch {
+                    buffer.extend(window.iter().map(|v| v + 0.01 * b as f32));
+                }
+                bench.bench(
+                    format!("PJRT LSTM forecast (batch of {batch}, 1 dispatch)"),
+                    || {
+                        black_box(runtime.forecast_batch(&buffer).unwrap().len());
+                    },
+                );
+            }
+            let mut sensor = SensorSource::new(
+                runtime.manifest.window,
+                runtime.manifest.input_size,
+                1,
+            );
+            bench.bench("sensor window synthesis", || {
+                black_box(sensor.next_window().len());
+            });
+            // end-to-end serving cost per request (energy sim + real infer)
+            bench.bench("serve: 50-request duty cycle (idle-waiting)", || {
+                let server_cfg = ServerConfig {
+                    sim: &cfg,
+                    variant: Variant::Forecast,
+                    max_requests: 50,
+                };
+                let mut arrivals = Periodic {
+                    period: Duration::from_millis(40.0),
+                };
+                black_box(
+                    serve(&server_cfg, &runtime, &IdleWaiting::baseline(), &mut arrivals)
+                        .unwrap()
+                        .metrics
+                        .requests,
+                );
+            });
+        }
+        Err(err) => {
+            eprintln!("skipping PJRT benches: {err:#} (run `make artifacts`)");
+        }
+    }
+
+    bench.finish();
+
+    // derived headline: DES items/sec for the §Perf log
+    println!("\nnote: 'DES: 10k items' p50 ÷ 10,000 = per-item cost;");
+    println!("      the full §5.3 validation simulates ~1.12M items.");
+}

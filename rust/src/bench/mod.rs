@@ -1,0 +1,179 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! `harness = false` bench binaries use [`Bench`] to time closures with
+//! warmup, fixed-duration sampling, and p50/p95 reporting, and to print
+//! one consistent table per bench target. Wall-clock timing via
+//! `std::time::Instant`; a `black_box` re-export prevents the optimizer
+//! from deleting measured work.
+
+pub use std::hint::black_box;
+
+use std::time::{Duration as StdDuration, Instant};
+
+use crate::util::stats::Summary;
+use crate::util::table::{fnum, Table};
+
+/// One benchmark's collected results.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: u64,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn ns_per_iter(&self) -> f64 {
+        self.summary.p50
+    }
+
+    pub fn iters_per_sec(&self) -> f64 {
+        1e9 / self.summary.p50
+    }
+}
+
+/// The harness: collects results, prints a table on drop/finish.
+pub struct Bench {
+    title: String,
+    warmup: StdDuration,
+    measure: StdDuration,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(title: impl Into<String>) -> Bench {
+        Bench {
+            title: title.into(),
+            warmup: StdDuration::from_millis(200),
+            measure: StdDuration::from_millis(800),
+            results: Vec::new(),
+        }
+    }
+
+    /// Shorter windows for CI/quick runs.
+    pub fn quick(mut self) -> Bench {
+        self.warmup = StdDuration::from_millis(50);
+        self.measure = StdDuration::from_millis(200);
+        self
+    }
+
+    /// Time `f` (called repeatedly): warmup, then sample batches until the
+    /// measurement window elapses. Batch size auto-scales so that cheap
+    /// closures aren't dominated by timer overhead.
+    pub fn bench(&mut self, name: impl Into<String>, mut f: impl FnMut()) -> &BenchResult {
+        let name = name.into();
+        // warmup + batch-size calibration
+        let warm_start = Instant::now();
+        let mut calls = 0u64;
+        while warm_start.elapsed() < self.warmup {
+            f();
+            calls += 1;
+        }
+        let per_call = self.warmup.as_nanos() as f64 / calls.max(1) as f64;
+        // target ≥ ~2 µs per timed batch
+        let batch = ((2_000.0 / per_call).ceil() as u64).clamp(1, 1 << 20);
+
+        let mut samples_ns = Vec::new();
+        let mut iterations = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.measure {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let elapsed = t0.elapsed().as_nanos() as f64 / batch as f64;
+            samples_ns.push(elapsed);
+            iterations += batch;
+        }
+        let summary = Summary::of(&samples_ns).expect("at least one sample");
+        self.results.push(BenchResult {
+            name,
+            iterations,
+            summary,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Render the results table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            "benchmark",
+            "iters",
+            "p50 (ns)",
+            "p95 (ns)",
+            "mean (ns)",
+            "ops/sec",
+        ])
+        .with_title(format!("bench: {}", self.title));
+        for r in &self.results {
+            t.row(&[
+                r.name.clone(),
+                r.iterations.to_string(),
+                fnum(r.summary.p50, 1),
+                fnum(r.summary.p95, 1),
+                fnum(r.summary.mean, 1),
+                fnum(r.iters_per_sec(), 0),
+            ]);
+        }
+        t.render()
+    }
+
+    /// Print the table (bench binaries call this at the end).
+    pub fn finish(self) {
+        print!("{}", self.render());
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// True when `cargo bench` should run abbreviated (CI smoke): set
+/// IDLEWAIT_BENCH_QUICK=1.
+pub fn quick_mode() -> bool {
+    std::env::var("IDLEWAIT_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn benches_a_closure() {
+        let mut b = Bench::new("test").quick();
+        let mut acc = 0u64;
+        let r = b.bench("increment", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.iterations > 1000);
+        assert!(r.summary.p50 > 0.0);
+        assert!(r.iters_per_sec() > 1000.0);
+    }
+
+    #[test]
+    fn render_lists_benchmarks() {
+        let mut b = Bench::new("render-test").quick();
+        b.bench("noop", || {});
+        let s = b.render();
+        assert!(s.contains("bench: render-test"));
+        assert!(s.contains("noop"));
+        assert!(s.contains("ops/sec"));
+    }
+
+    #[test]
+    fn slower_work_measures_slower() {
+        let mut b = Bench::new("ordering").quick();
+        let fast = b.bench("fast", || {
+            black_box(1 + 1);
+        }).ns_per_iter();
+        let slow = b
+            .bench("slow", || {
+                let mut s = 0f64;
+                for i in 0..100 {
+                    s += black_box(i as f64).sqrt();
+                }
+                black_box(s);
+            })
+            .ns_per_iter();
+        assert!(slow > fast, "slow={slow} fast={fast}");
+    }
+}

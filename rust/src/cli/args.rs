@@ -1,0 +1,196 @@
+//! Minimal argument parser (clap is not in the offline vendor set).
+//!
+//! Supports the shapes the `repro` CLI needs: a subcommand followed by
+//! `--key value` / `--flag` options. Unknown options are errors, values
+//! are typed on extraction, and every subcommand gets `--help` for free.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum ArgError {
+    #[error("unknown option '--{0}'")]
+    Unknown(String),
+    #[error("option '--{0}' requires a value")]
+    MissingValue(String),
+    #[error("option '--{name}': cannot parse '{value}' as {ty}")]
+    BadValue {
+        name: String,
+        value: String,
+        ty: &'static str,
+    },
+    #[error("unexpected positional argument '{0}'")]
+    UnexpectedPositional(String),
+}
+
+/// Parsed arguments for one subcommand.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Options this command accepts: (name, takes_value).
+    accepted: Vec<(&'static str, bool)>,
+}
+
+impl Args {
+    /// Parse `argv` (after the subcommand) against a declared option set.
+    pub fn parse(
+        argv: &[String],
+        accepted: &[(&'static str, bool)],
+    ) -> Result<Args, ArgError> {
+        let mut args = Args {
+            accepted: accepted.to_vec(),
+            ..Default::default()
+        };
+        let mut i = 0;
+        while i < argv.len() {
+            let token = &argv[i];
+            let Some(name) = token.strip_prefix("--") else {
+                return Err(ArgError::UnexpectedPositional(token.clone()));
+            };
+            // allow --key=value
+            let (name, inline) = match name.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (name, None),
+            };
+            let Some((_, takes_value)) = accepted.iter().find(|(n, _)| *n == name) else {
+                return Err(ArgError::Unknown(name.to_string()));
+            };
+            if *takes_value {
+                let value = match inline {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| ArgError::MissingValue(name.to_string()))?
+                    }
+                };
+                args.values.insert(name.to_string(), value);
+            } else {
+                args.flags.push(name.to_string());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn f64_opt(&self, name: &str) -> Result<Option<f64>, ArgError> {
+        self.typed_opt(name, "number", |v| v.parse::<f64>().ok())
+    }
+
+    pub fn u64_opt(&self, name: &str) -> Result<Option<u64>, ArgError> {
+        self.typed_opt(name, "integer", |v| v.parse::<u64>().ok())
+    }
+
+    fn typed_opt<T>(
+        &self,
+        name: &str,
+        ty: &'static str,
+        parse: impl Fn(&str) -> Option<T>,
+    ) -> Result<Option<T>, ArgError> {
+        match self.values.get(name) {
+            None => Ok(None),
+            Some(v) => parse(v).map(Some).ok_or_else(|| ArgError::BadValue {
+                name: name.to_string(),
+                value: v.clone(),
+                ty,
+            }),
+        }
+    }
+
+    /// Render the accepted options as help text.
+    pub fn help(&self) -> String {
+        self.accepted
+            .iter()
+            .map(|(name, takes_value)| {
+                if *takes_value {
+                    format!("  --{name} <value>")
+                } else {
+                    format!("  --{name}")
+                }
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    const ACCEPTED: &[(&str, bool)] = &[
+        ("period", true),
+        ("step", true),
+        ("requests", true),
+        ("verbose", false),
+    ];
+
+    #[test]
+    fn parses_values_and_flags() {
+        let a = Args::parse(&sv(&["--period", "40", "--verbose"]), ACCEPTED).unwrap();
+        assert_eq!(a.f64_opt("period").unwrap(), Some(40.0));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.f64_opt("step").unwrap(), None);
+    }
+
+    #[test]
+    fn parses_key_equals_value() {
+        let a = Args::parse(&sv(&["--period=89.21"]), ACCEPTED).unwrap();
+        assert_eq!(a.f64_opt("period").unwrap(), Some(89.21));
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(matches!(
+            Args::parse(&sv(&["--bogus"]), ACCEPTED),
+            Err(ArgError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_missing_value() {
+        assert!(matches!(
+            Args::parse(&sv(&["--period"]), ACCEPTED),
+            Err(ArgError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_bad_type() {
+        let a = Args::parse(&sv(&["--requests", "many"]), ACCEPTED).unwrap();
+        assert!(matches!(
+            a.u64_opt("requests"),
+            Err(ArgError::BadValue { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(matches!(
+            Args::parse(&sv(&["oops"]), ACCEPTED),
+            Err(ArgError::UnexpectedPositional(_))
+        ));
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let a = Args::parse(&[], ACCEPTED).unwrap();
+        let h = a.help();
+        assert!(h.contains("--period <value>"));
+        assert!(h.contains("--verbose"));
+        assert!(!h.contains("--verbose <value>"));
+    }
+}

@@ -1,0 +1,480 @@
+//! `repro` CLI subcommands.
+//!
+//! ```text
+//! repro fig2                          # Fig 2 energy breakdown
+//! repro exp1 [--model XC7S25] [--csv PATH]
+//! repro exp2 [--step 0.01] [--csv PATH] [--config FILE]
+//! repro exp3 [--step 0.01] [--csv PATH]
+//! repro validate [--period 40]
+//! repro serve [--strategy idle-waiting] [--period 40] [--requests 100]
+//!             [--variant int8] [--arrival poisson]
+//! repro plan --period 75              # strategy recommendation
+//! repro all                           # every experiment, paper order
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::args::Args;
+use crate::config::loader::{load_file, paper_default, SimConfig};
+use crate::config::schema::{FpgaModel, StrategyKind};
+use crate::coordinator::requests;
+use crate::coordinator::server::{serve, ServerConfig};
+use crate::energy::analytical::Analytical;
+use crate::energy::crossover;
+use crate::experiments::{exp1, exp2, exp3, fig2, validation};
+use crate::runtime::inference::Variant;
+use crate::strategies::strategy::build;
+use crate::util::units::Duration;
+
+pub const USAGE: &str = "\
+repro — reproduction of 'Idle is the New Sleep' (CS.AR 2024)
+
+USAGE: repro <command> [options]
+
+COMMANDS:
+  fig2        Fig 2: energy breakdown of a workload item
+  exp1        Experiment 1 (Fig 7): configuration-parameter sweep
+  exp2        Experiment 2 (Figs 8-9): Idle-Waiting vs On-Off
+  exp3        Experiment 3 (Table 3, Figs 10-11): idle power-saving
+  validate    \u{a7}5.3 validation: analytical model vs discrete-event sim
+  ablate      ablations: flash floor, power-on transient, multi-accel
+  multi       event-driven multi-accelerator simulation (\u{a7}4.2 extension)
+  serve       Duty-cycle serving with REAL LSTM inference via PJRT
+  plan        Recommend a strategy for a given request period
+  all         Run every experiment in paper order
+
+Run 'repro <command> --help' for options.";
+
+fn load_config(args: &Args) -> Result<SimConfig> {
+    match args.str_opt("config") {
+        Some(path) => load_file(path).with_context(|| format!("loading config {path}")),
+        None => Ok(paper_default()),
+    }
+}
+
+fn maybe_write_csv(args: &Args, csv: crate::util::csv::Csv) -> Result<()> {
+    if let Some(path) = args.str_opt("csv") {
+        csv.write_to(path).with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+pub fn run(argv: &[String]) -> Result<()> {
+    let Some(command) = argv.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match command.as_str() {
+        "fig2" => cmd_fig2(rest),
+        "exp1" => cmd_exp1(rest),
+        "exp2" => cmd_exp2(rest),
+        "exp3" => cmd_exp3(rest),
+        "validate" => cmd_validate(rest),
+        "ablate" => cmd_ablate(rest),
+        "multi" => cmd_multi(rest),
+        "serve" => cmd_serve(rest),
+        "plan" => cmd_plan(rest),
+        "all" => cmd_all(rest),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn help_and_done(args: &Args, name: &str) -> bool {
+    if args.flag("help") {
+        println!("options for '{name}':\n{}", args.help());
+        true
+    } else {
+        false
+    }
+}
+
+fn cmd_fig2(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &[("help", false)])?;
+    if help_and_done(&args, "fig2") {
+        return Ok(());
+    }
+    print!("{}", fig2::run().render());
+    Ok(())
+}
+
+fn cmd_exp1(argv: &[String]) -> Result<()> {
+    let args = Args::parse(
+        argv,
+        &[("model", true), ("csv", true), ("full", false), ("help", false)],
+    )?;
+    if help_and_done(&args, "exp1") {
+        return Ok(());
+    }
+    let model = match args.str_opt("model") {
+        Some(name) => FpgaModel::parse(name)
+            .with_context(|| format!("unknown FPGA model '{name}'"))?,
+        None => FpgaModel::Xc7s15,
+    };
+    let result = exp1::run(model);
+    if args.flag("full") {
+        print!("{}", result.render_fig7());
+    }
+    print!("{}", result.render_summary());
+    maybe_write_csv(&args, result.to_csv())
+}
+
+fn cmd_exp2(argv: &[String]) -> Result<()> {
+    let args = Args::parse(
+        argv,
+        &[("step", true), ("csv", true), ("config", true), ("help", false)],
+    )?;
+    if help_and_done(&args, "exp2") {
+        return Ok(());
+    }
+    let config = load_config(&args)?;
+    let step = args.f64_opt("step")?.unwrap_or(0.01);
+    let result = exp2::run(&config, step);
+    print!("{}", result.render_figs());
+    print!("{}", result.render_summary(&config));
+    maybe_write_csv(&args, result.to_csv())
+}
+
+fn cmd_exp3(argv: &[String]) -> Result<()> {
+    let args = Args::parse(
+        argv,
+        &[("step", true), ("csv", true), ("config", true), ("help", false)],
+    )?;
+    if help_and_done(&args, "exp3") {
+        return Ok(());
+    }
+    let config = load_config(&args)?;
+    let step = args.f64_opt("step")?.unwrap_or(0.01);
+    let result = exp3::run(&config, step);
+    print!("{}", result.render_table3());
+    print!("{}", result.render_figs());
+    print!("{}", result.render_summary());
+    maybe_write_csv(&args, result.to_csv())
+}
+
+fn cmd_validate(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &[("period", true), ("config", true), ("help", false)])?;
+    if help_and_done(&args, "validate") {
+        return Ok(());
+    }
+    let config = load_config(&args)?;
+    let period = args.f64_opt("period")?.unwrap_or(40.0);
+    print!("{}", validation::run(&config, period).render());
+    Ok(())
+}
+
+fn cmd_ablate(argv: &[String]) -> Result<()> {
+    let args = Args::parse(
+        argv,
+        &[("requests", true), ("seed", true), ("config", true), ("help", false)],
+    )?;
+    if help_and_done(&args, "ablate") {
+        return Ok(());
+    }
+    let config = load_config(&args)?;
+    let requests = args.u64_opt("requests")?.unwrap_or(5_000);
+    let seed = args.u64_opt("seed")?.unwrap_or(7);
+    print!("{}", crate::experiments::ablation::flash_floor(&config).render());
+    print!(
+        "{}",
+        crate::experiments::ablation::transient_sensitivity(&config).render()
+    );
+    print!(
+        "{}",
+        crate::experiments::ablation::multi_accel(&config, requests, seed).render()
+    );
+    Ok(())
+}
+
+fn cmd_multi(argv: &[String]) -> Result<()> {
+    use crate::coordinator::multi_sim::{run as run_multi, MultiSimConfig};
+    use crate::coordinator::scheduler::Policy;
+    use crate::device::rails::PowerSaving;
+    use crate::util::table::{fnum, Table};
+
+    let args = Args::parse(
+        argv,
+        &[
+            ("requests", true),
+            ("burst", true),
+            ("seed", true),
+            ("config", true),
+            ("help", false),
+        ],
+    )?;
+    if help_and_done(&args, "multi") {
+        return Ok(());
+    }
+    let config = load_config(&args)?;
+    let requests = args.u64_opt("requests")?.unwrap_or(2_000);
+    let burst = args.u64_opt("burst")?.unwrap_or(4);
+    let seed = args.u64_opt("seed")?.unwrap_or(17);
+
+    let mut t = Table::new(&[
+        "mix",
+        "policy",
+        "reconfigs",
+        "reordered",
+        "energy (J)",
+        "mean lat (ms)",
+        "late (%)",
+    ])
+    .with_title(format!(
+        "event-driven multi-accelerator sim: {requests} requests, burst {burst}"
+    ));
+    for mix in [0.0, 0.1, 0.25, 0.5] {
+        for (label, policy) in [
+            ("fifo", Policy::Fifo),
+            ("batch-8", Policy::BatchBySlot { window: 8 }),
+        ] {
+            let report = run_multi(
+                &config,
+                &MultiSimConfig {
+                    mix,
+                    requests,
+                    burst,
+                    policy,
+                    saving: PowerSaving::M12,
+                    seed,
+                },
+            );
+            t.row(&[
+                fnum(mix, 2),
+                label.into(),
+                report.reconfigurations.to_string(),
+                report.reordered.to_string(),
+                fnum(report.energy.joules(), 3),
+                fnum(report.mean_latency.millis(), 2),
+                fnum(report.p_late * 100.0, 1),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let args = Args::parse(
+        argv,
+        &[
+            ("strategy", true),
+            ("period", true),
+            ("requests", true),
+            ("variant", true),
+            ("arrival", true),
+            ("trace", true),
+            ("seed", true),
+            ("config", true),
+            ("help", false),
+        ],
+    )?;
+    if help_and_done(&args, "serve") {
+        return Ok(());
+    }
+    let config = load_config(&args)?;
+    let kind = match args.str_opt("strategy") {
+        Some(name) => StrategyKind::parse(name)
+            .with_context(|| format!("unknown strategy '{name}'"))?,
+        None => StrategyKind::IdleWaiting,
+    };
+    let period = Duration::from_millis(args.f64_opt("period")?.unwrap_or(40.0));
+    let max_requests = args.u64_opt("requests")?.unwrap_or(100);
+    let seed = args.u64_opt("seed")?.unwrap_or(0);
+    let variant = match args.str_opt("variant") {
+        Some("int8") => Variant::ForecastInt8,
+        Some("f32") | None => Variant::Forecast,
+        Some(other) => bail!("unknown variant '{other}' (expected f32 or int8)"),
+    };
+    let mut arrivals: Box<dyn requests::ArrivalProcess> = if let Some(path) =
+        args.str_opt("trace")
+    {
+        Box::new(
+            requests::TraceReplay::from_file(path)
+                .with_context(|| format!("loading arrival trace {path}"))?,
+        )
+    } else {
+        match args.str_opt("arrival") {
+            Some("poisson") => Box::new(requests::Poisson::new(
+                period,
+                Duration::from_millis(0.05),
+                seed,
+            )),
+            Some("periodic") | None => Box::new(requests::Periodic { period }),
+            Some(other) => bail!("unknown arrival process '{other}'"),
+        }
+    };
+
+    let runtime = crate::runtime::pool::default_runtime()
+        .context("loading artifacts (run `make artifacts` first)")?;
+    runtime.self_check().context("runtime self-check")?;
+
+    let model = Analytical::new(&config.item, config.workload.energy_budget);
+    let strategy = build(kind, &model);
+    let server_cfg = ServerConfig {
+        sim: &config,
+        variant,
+        max_requests,
+    };
+    let report = serve(&server_cfg, &runtime, strategy.as_ref(), arrivals.as_mut())?;
+    print!("{}", report.metrics.render());
+    println!(
+        "configurations: {} | budget exhausted: {}",
+        report.configurations, report.budget_exhausted
+    );
+    if let Some(last) = report.served.last() {
+        println!(
+            "last forecast: {:.6} (host latency {:.3} ms)",
+            last.forecast,
+            last.host_latency.millis()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_plan(argv: &[String]) -> Result<()> {
+    let args = Args::parse(
+        argv,
+        &[("period", true), ("budget", true), ("config", true), ("help", false)],
+    )?;
+    if help_and_done(&args, "plan") {
+        return Ok(());
+    }
+    let mut config = load_config(&args)?;
+    if let Some(budget) = args.f64_opt("budget")? {
+        config.workload.energy_budget = crate::util::units::Energy::from_joules(budget);
+    }
+    let period = Duration::from_millis(
+        args.f64_opt("period")?
+            .context("--period <ms> is required for plan")?,
+    );
+    let model = Analytical::new(&config.item, config.workload.energy_budget);
+
+    println!("strategy plan for T_req = {:.2} ms, budget = {:.0} J:", period.millis(), config.workload.energy_budget.joules());
+    let mut best: Option<(StrategyKind, u64)> = None;
+    for kind in [
+        StrategyKind::OnOff,
+        StrategyKind::IdleWaiting,
+        StrategyKind::IdleWaitingM1,
+        StrategyKind::IdleWaitingM12,
+    ] {
+        let p = model.predict(kind, period);
+        match p.n_max {
+            Some(n) => {
+                println!(
+                    "  {:<18} {:>12} items, lifetime {:>8.2} h",
+                    kind.name(),
+                    crate::util::table::fcount(n),
+                    p.lifetime.hours()
+                );
+                if best.map(|(_, bn)| n > bn).unwrap_or(true) {
+                    best = Some((kind, n));
+                }
+            }
+            None => println!("  {:<18} infeasible (period below item latency)", kind.name()),
+        }
+    }
+    if let Some((kind, _)) = best {
+        println!("recommendation: {}", kind.name());
+    }
+    for (label, k) in [
+        ("baseline", StrategyKind::IdleWaiting),
+        ("method 1", StrategyKind::IdleWaitingM1),
+        ("method 1+2", StrategyKind::IdleWaitingM12),
+    ] {
+        let t = crossover::asymptotic(&model, model.item.idle_power(k));
+        println!("crossover vs On-Off ({label}): {:.2} ms", t.millis());
+    }
+    Ok(())
+}
+
+fn cmd_all(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &[("step", true), ("help", false)])?;
+    if help_and_done(&args, "all") {
+        return Ok(());
+    }
+    let step = args.f64_opt("step")?.unwrap_or(0.01);
+    let config = paper_default();
+    println!("=== Fig 2 ===");
+    print!("{}", fig2::run().render());
+    println!("\n=== Experiment 1 (Fig 7) ===");
+    let e1 = exp1::run(FpgaModel::Xc7s15);
+    print!("{}", e1.render_summary());
+    let e1b = exp1::run(FpgaModel::Xc7s25);
+    print!("{}", e1b.render_summary());
+    println!("\n=== Experiment 2 (Figs 8-9) ===");
+    let e2 = exp2::run(&config, step);
+    print!("{}", e2.render_figs());
+    print!("{}", e2.render_summary(&config));
+    println!("\n=== Experiment 3 (Table 3, Figs 10-11) ===");
+    let e3 = exp3::run(&config, step);
+    print!("{}", e3.render_table3());
+    print!("{}", e3.render_figs());
+    print!("{}", e3.render_summary());
+    println!("\n=== Validation (\u{a7}5.3) ===");
+    print!("{}", validation::run(&config, 40.0).render());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn no_args_prints_usage() {
+        run(&[]).unwrap();
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(&sv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn fig2_runs() {
+        run(&sv(&["fig2"])).unwrap();
+    }
+
+    #[test]
+    fn exp1_runs_with_model() {
+        run(&sv(&["exp1", "--model", "XC7S25"])).unwrap();
+    }
+
+    #[test]
+    fn exp2_coarse_runs() {
+        run(&sv(&["exp2", "--step", "5"])).unwrap();
+    }
+
+    #[test]
+    fn exp3_coarse_runs() {
+        run(&sv(&["exp3", "--step", "5"])).unwrap();
+    }
+
+    #[test]
+    fn plan_runs() {
+        run(&sv(&["plan", "--period", "75"])).unwrap();
+    }
+
+    #[test]
+    fn plan_requires_period() {
+        assert!(run(&sv(&["plan"])).is_err());
+    }
+
+    #[test]
+    fn helps_run() {
+        for cmd in [
+            "fig2", "exp1", "exp2", "exp3", "validate", "ablate", "multi", "serve", "plan",
+            "all",
+        ] {
+            run(&sv(&[cmd, "--help"])).unwrap();
+        }
+    }
+}

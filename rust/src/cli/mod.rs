@@ -1,0 +1,6 @@
+//! The `repro` command-line interface.
+
+pub mod args;
+pub mod commands;
+
+pub use commands::{run, USAGE};

@@ -1,0 +1,13 @@
+//! Configuration system: YAML-subset/JSON parsing, typed schema mirroring
+//! the paper's simulator inputs (§5.1), loading and semantic validation.
+
+pub mod loader;
+pub mod schema;
+pub mod validate;
+pub mod yaml;
+
+pub use loader::{load_file, load_str, paper_default, SimConfig};
+pub use schema::{
+    ArrivalSpec, FpgaModel, PhaseSpec, PlatformSpec, SpiConfig, StrategyKind, WorkloadItemSpec,
+    WorkloadSpec,
+};

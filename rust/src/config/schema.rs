@@ -1,0 +1,617 @@
+//! Typed configuration schema mirroring the paper's simulator inputs
+//! (§5.1): a *workload* description and a *workload item* description,
+//! plus our platform description that parameterizes the device substrate.
+//!
+//! All types decode from the [`Json`] value produced by either the YAML or
+//! JSON parser, so configs can be written in both formats.
+
+use std::fmt;
+
+use crate::util::json::Json;
+use crate::util::units::{Duration, Energy, Power};
+
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[error("config error at {path}: {msg}")]
+pub struct ConfigError {
+    pub path: String,
+    pub msg: String,
+}
+
+fn cerr(path: &str, msg: impl Into<String>) -> ConfigError {
+    ConfigError {
+        path: path.to_string(),
+        msg: msg.into(),
+    }
+}
+
+fn req<'a>(v: &'a Json, path: &str, key: &str) -> Result<&'a Json, ConfigError> {
+    v.get(key)
+        .ok_or_else(|| cerr(&format!("{path}.{key}"), "missing required field"))
+}
+
+fn req_f64(v: &Json, path: &str, key: &str) -> Result<f64, ConfigError> {
+    req(v, path, key)?
+        .as_f64()
+        .ok_or_else(|| cerr(&format!("{path}.{key}"), "expected a number"))
+}
+
+fn req_str<'a>(v: &'a Json, path: &str, key: &str) -> Result<&'a str, ConfigError> {
+    req(v, path, key)?
+        .as_str()
+        .ok_or_else(|| cerr(&format!("{path}.{key}"), "expected a string"))
+}
+
+fn opt_f64(v: &Json, path: &str, key: &str) -> Result<Option<f64>, ConfigError> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(x) => x
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| cerr(&format!("{path}.{key}"), "expected a number")),
+    }
+}
+
+fn opt_bool(v: &Json, path: &str, key: &str, default: bool) -> Result<bool, ConfigError> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(x) => x
+            .as_bool()
+            .ok_or_else(|| cerr(&format!("{path}.{key}"), "expected a boolean")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Strategy selection
+// ---------------------------------------------------------------------------
+
+/// Power-management strategy (paper §4.2) plus the idle-power-saving
+/// methods of §5.4 and our adaptive extension (paper §7 future work).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StrategyKind {
+    /// Power off between requests; reconfigure every request (Fig 5).
+    OnOff,
+    /// Configure once, idle between requests (Fig 6), at baseline idle power.
+    IdleWaiting,
+    /// Idle-Waiting + Method 1 (gate IOs + clock reference).
+    IdleWaitingM1,
+    /// Idle-Waiting + Methods 1+2 (also undervolt VCCINT/VCCAUX).
+    IdleWaitingM12,
+    /// Pick On-Off or Idle-Waiting per the analytical crossover (extension).
+    Adaptive,
+}
+
+impl StrategyKind {
+    pub fn parse(s: &str) -> Option<StrategyKind> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "on-off" | "onoff" => Some(StrategyKind::OnOff),
+            "idle-waiting" | "idlewaiting" | "idle-waiting-baseline" => {
+                Some(StrategyKind::IdleWaiting)
+            }
+            "idle-waiting-m1" | "method1" => Some(StrategyKind::IdleWaitingM1),
+            "idle-waiting-m12" | "method1+2" | "method12" => Some(StrategyKind::IdleWaitingM12),
+            "adaptive" => Some(StrategyKind::Adaptive),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyKind::OnOff => "on-off",
+            StrategyKind::IdleWaiting => "idle-waiting",
+            StrategyKind::IdleWaitingM1 => "idle-waiting-m1",
+            StrategyKind::IdleWaitingM12 => "idle-waiting-m12",
+            StrategyKind::Adaptive => "adaptive",
+        }
+    }
+
+    pub const ALL: [StrategyKind; 5] = [
+        StrategyKind::OnOff,
+        StrategyKind::IdleWaiting,
+        StrategyKind::IdleWaitingM1,
+        StrategyKind::IdleWaitingM12,
+        StrategyKind::Adaptive,
+    ];
+}
+
+impl fmt::Display for StrategyKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Arrival process
+// ---------------------------------------------------------------------------
+
+/// How inference requests arrive. The paper studies `Periodic`; the other
+/// processes implement its stated future work (irregular requests).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalSpec {
+    /// Constant request period (the paper's T_req).
+    Periodic { period: Duration },
+    /// Period with additive Gaussian jitter (clamped at min_period).
+    Jittered {
+        period: Duration,
+        std_dev: Duration,
+        min_period: Duration,
+    },
+    /// Poisson process with the given mean inter-arrival time.
+    Poisson { mean_period: Duration },
+}
+
+impl ArrivalSpec {
+    pub fn mean_period(&self) -> Duration {
+        match self {
+            ArrivalSpec::Periodic { period } => *period,
+            ArrivalSpec::Jittered { period, .. } => *period,
+            ArrivalSpec::Poisson { mean_period } => *mean_period,
+        }
+    }
+
+    fn from_json(v: &Json, path: &str) -> Result<ArrivalSpec, ConfigError> {
+        // Plain number or missing "kind" → periodic.
+        let kind = match v.get("arrival_kind") {
+            Some(k) => k
+                .as_str()
+                .ok_or_else(|| cerr(&format!("{path}.arrival_kind"), "expected a string"))?,
+            None => "periodic",
+        };
+        let period = Duration::from_millis(req_f64(v, path, "request_period_ms")?);
+        match kind {
+            "periodic" => Ok(ArrivalSpec::Periodic { period }),
+            "jittered" => Ok(ArrivalSpec::Jittered {
+                period,
+                std_dev: Duration::from_millis(req_f64(v, path, "jitter_std_ms")?),
+                min_period: Duration::from_millis(
+                    opt_f64(v, path, "min_period_ms")?.unwrap_or(0.1),
+                ),
+            }),
+            "poisson" => Ok(ArrivalSpec::Poisson {
+                mean_period: period,
+            }),
+            other => Err(cerr(
+                &format!("{path}.arrival_kind"),
+                format!("unknown arrival kind '{other}'"),
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workload description (paper §5.1: budget + request period)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    pub energy_budget: Energy,
+    pub arrival: ArrivalSpec,
+    pub strategy: StrategyKind,
+    /// Optional hard cap on simulated items (for bounded runs); None = run
+    /// until the budget is exhausted, as in the paper.
+    pub max_items: Option<u64>,
+    /// RNG seed for stochastic arrival processes.
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    pub fn from_json(root: &Json) -> Result<WorkloadSpec, ConfigError> {
+        let v = root.get("workload").unwrap_or(root);
+        let path = "workload";
+        let strategy_name = req_str(v, path, "strategy")?;
+        let strategy = StrategyKind::parse(strategy_name).ok_or_else(|| {
+            cerr(
+                &format!("{path}.strategy"),
+                format!(
+                    "unknown strategy '{strategy_name}' (expected one of: {})",
+                    StrategyKind::ALL.map(|s| s.name()).join(", ")
+                ),
+            )
+        })?;
+        let max_items = match v.get("max_items") {
+            None | Some(Json::Null) => None,
+            Some(x) => Some(x.as_u64().ok_or_else(|| {
+                cerr(&format!("{path}.max_items"), "expected a non-negative integer")
+            })?),
+        };
+        Ok(WorkloadSpec {
+            energy_budget: Energy::from_joules(req_f64(v, path, "energy_budget_j")?),
+            arrival: ArrivalSpec::from_json(v, path)?,
+            strategy,
+            max_items,
+            seed: opt_f64(v, path, "seed")?.unwrap_or(0.0) as u64,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workload item description (paper Table 2)
+// ---------------------------------------------------------------------------
+
+/// One named phase of a workload item with its average power and duration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseSpec {
+    pub name: String,
+    pub power: Power,
+    pub time: Duration,
+}
+
+impl PhaseSpec {
+    pub fn energy(&self) -> Energy {
+        self.power * self.time
+    }
+}
+
+/// The paper's workload-item description: the active phases (configuration,
+/// data loading, inference, data offloading) plus the idle power used by
+/// Idle-Waiting. Mirrors Table 2 exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadItemSpec {
+    pub configuration: PhaseSpec,
+    pub data_loading: PhaseSpec,
+    pub inference: PhaseSpec,
+    pub data_offloading: PhaseSpec,
+    /// Idle power for the Idle-Waiting strategy (duration varies with T_req).
+    pub idle_power: Power,
+    /// Extra energy On-Off pays per power cycle (rail ramp + inrush). The
+    /// paper's published n_max implies this constant; see DESIGN.md §6.
+    pub power_on_transient: Energy,
+}
+
+impl WorkloadItemSpec {
+    pub fn from_json(root: &Json) -> Result<WorkloadItemSpec, ConfigError> {
+        let v = root.get("workload_item").unwrap_or(root);
+        let path = "workload_item";
+        let phases = req(v, path, "phases")?
+            .as_arr()
+            .ok_or_else(|| cerr(&format!("{path}.phases"), "expected a sequence"))?;
+        let mut by_name: Vec<PhaseSpec> = Vec::new();
+        for (i, p) in phases.iter().enumerate() {
+            let ppath = format!("{path}.phases[{i}]");
+            by_name.push(PhaseSpec {
+                name: req_str(p, &ppath, "name")?.to_string(),
+                power: Power::from_milliwatts(req_f64(p, &ppath, "power_mw")?),
+                time: Duration::from_millis(req_f64(p, &ppath, "time_ms")?),
+            });
+        }
+        let find = |name: &str| -> Result<PhaseSpec, ConfigError> {
+            by_name
+                .iter()
+                .find(|p| p.name == name)
+                .cloned()
+                .ok_or_else(|| cerr(&format!("{path}.phases"), format!("missing phase '{name}'")))
+        };
+        Ok(WorkloadItemSpec {
+            configuration: find("configuration")?,
+            data_loading: find("data_loading")?,
+            inference: find("inference")?,
+            data_offloading: find("data_offloading")?,
+            idle_power: Power::from_milliwatts(req_f64(v, path, "idle_power_mw")?),
+            power_on_transient: Energy::from_millijoules(
+                opt_f64(v, path, "power_on_transient_mj")?.unwrap_or(0.0),
+            ),
+        })
+    }
+
+    /// Latency of one workload item including configuration (On-Off path).
+    pub fn latency_with_config(&self) -> Duration {
+        self.configuration.time
+            + self.data_loading.time
+            + self.inference.time
+            + self.data_offloading.time
+    }
+
+    /// Latency excluding configuration (Idle-Waiting path after init).
+    pub fn latency_without_config(&self) -> Duration {
+        self.data_loading.time + self.inference.time + self.data_offloading.time
+    }
+
+    /// Energy of the non-configuration phases.
+    pub fn active_energy_without_config(&self) -> Energy {
+        self.data_loading.energy() + self.inference.energy() + self.data_offloading.energy()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Platform description (device substrate parameters)
+// ---------------------------------------------------------------------------
+
+/// Supported FPGA models (paper evaluates XC7S15 and XC7S25).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FpgaModel {
+    Xc7s15,
+    Xc7s25,
+}
+
+impl FpgaModel {
+    pub fn parse(s: &str) -> Option<FpgaModel> {
+        match s.to_ascii_uppercase().as_str() {
+            "XC7S15" => Some(FpgaModel::Xc7s15),
+            "XC7S25" => Some(FpgaModel::Xc7s25),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FpgaModel::Xc7s15 => "XC7S15",
+            FpgaModel::Xc7s25 => "XC7S25",
+        }
+    }
+
+    /// Full configuration bitstream length in bits (UG470 Table 1-1).
+    pub fn bitstream_bits(&self) -> u64 {
+        match self {
+            FpgaModel::Xc7s15 => 4_310_752,
+            FpgaModel::Xc7s25 => 9_934_432,
+        }
+    }
+}
+
+impl fmt::Display for FpgaModel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// SPI configuration-port parameters swept in Experiment 1 (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpiConfig {
+    /// Bus width in data lines: 1 (single), 2 (dual), 4 (quad).
+    pub buswidth: u8,
+    /// Clock frequency in MHz (3..=66 per the flash/config port).
+    pub freq_mhz: f64,
+    /// Bitstream compression option (7-series MFWR-based).
+    pub compressed: bool,
+}
+
+impl SpiConfig {
+    pub const BUSWIDTHS: [u8; 3] = [1, 2, 4];
+    pub const FREQS_MHZ: [f64; 11] = [
+        3.0, 6.0, 9.0, 12.0, 16.0, 22.0, 26.0, 33.0, 40.0, 50.0, 66.0,
+    ];
+
+    /// The paper's optimal setting: Quad SPI, 66 MHz, compressed.
+    pub fn optimal() -> SpiConfig {
+        SpiConfig {
+            buswidth: 4,
+            freq_mhz: 66.0,
+            compressed: true,
+        }
+    }
+
+    /// The paper's least-efficient setting: Single SPI, 3 MHz, uncompressed.
+    pub fn worst() -> SpiConfig {
+        SpiConfig {
+            buswidth: 1,
+            freq_mhz: 3.0,
+            compressed: false,
+        }
+    }
+
+    /// All 66 sweep points of Experiment 1.
+    pub fn sweep() -> Vec<SpiConfig> {
+        let mut out = Vec::with_capacity(66);
+        for &compressed in &[false, true] {
+            for &buswidth in &Self::BUSWIDTHS {
+                for &freq_mhz in &Self::FREQS_MHZ {
+                    out.push(SpiConfig {
+                        buswidth,
+                        freq_mhz,
+                        compressed,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    pub fn label(&self) -> String {
+        let bus = match self.buswidth {
+            1 => "Single",
+            2 => "Dual",
+            4 => "Quad",
+            _ => "?",
+        };
+        format!(
+            "{bus} SPI @ {} MHz, {}",
+            self.freq_mhz,
+            if self.compressed { "compressed" } else { "uncompressed" }
+        )
+    }
+}
+
+/// Platform description: everything the device substrate needs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformSpec {
+    pub fpga: FpgaModel,
+    pub spi: SpiConfig,
+    /// Battery energy budget (defaults to the paper's 4147 J).
+    pub battery_budget: Energy,
+    /// Flash standby power (paper §5.4: ≈15.2 mW floor).
+    pub flash_standby: Power,
+    /// Enable Method 1 (gate IOs + clock reference while idle).
+    pub method1: bool,
+    /// Enable Method 2 (undervolt VCCINT 1.0→0.75 V, VCCAUX 1.8→1.5 V).
+    pub method2: bool,
+}
+
+impl Default for PlatformSpec {
+    fn default() -> Self {
+        PlatformSpec {
+            fpga: FpgaModel::Xc7s15,
+            spi: SpiConfig::optimal(),
+            battery_budget: Energy::from_joules(4147.0),
+            flash_standby: Power::from_milliwatts(15.2),
+            method1: false,
+            method2: false,
+        }
+    }
+}
+
+impl PlatformSpec {
+    pub fn from_json(root: &Json) -> Result<PlatformSpec, ConfigError> {
+        let v = match root.get("platform") {
+            Some(p) => p,
+            None => return Ok(PlatformSpec::default()),
+        };
+        let path = "platform";
+        let mut spec = PlatformSpec::default();
+        if let Some(f) = v.get("fpga") {
+            let model = req_str(f, &format!("{path}.fpga"), "model")?;
+            spec.fpga = FpgaModel::parse(model).ok_or_else(|| {
+                cerr(
+                    &format!("{path}.fpga.model"),
+                    format!("unknown FPGA model '{model}' (expected XC7S15 or XC7S25)"),
+                )
+            })?;
+        }
+        if let Some(s) = v.get("spi") {
+            let spath = format!("{path}.spi");
+            let buswidth = req_f64(s, &spath, "buswidth")? as u8;
+            spec.spi = SpiConfig {
+                buswidth,
+                freq_mhz: req_f64(s, &spath, "freq_mhz")?,
+                compressed: opt_bool(s, &spath, "compressed", true)?,
+            };
+        }
+        if let Some(b) = opt_f64(v, path, "battery_budget_j")? {
+            spec.battery_budget = Energy::from_joules(b);
+        }
+        if let Some(fl) = opt_f64(v, path, "flash_standby_mw")? {
+            spec.flash_standby = Power::from_milliwatts(fl);
+        }
+        spec.method1 = opt_bool(v, path, "method1", false)?;
+        spec.method2 = opt_bool(v, path, "method2", false)?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::yaml;
+
+    fn paper_item_yaml() -> &'static str {
+        "\
+workload_item:
+  phases:
+    - name: configuration
+      power_mw: 327.9
+      time_ms: 36.145
+    - name: data_loading
+      power_mw: 138.7
+      time_ms: 0.0100
+    - name: inference
+      power_mw: 171.4
+      time_ms: 0.0281
+    - name: data_offloading
+      power_mw: 144.1
+      time_ms: 0.0020
+  idle_power_mw: 134.3
+  power_on_transient_mj: 0.1244
+"
+    }
+
+    #[test]
+    fn workload_item_matches_table2() {
+        let v = yaml::parse(paper_item_yaml()).unwrap();
+        let item = WorkloadItemSpec::from_json(&v).unwrap();
+        assert!((item.configuration.energy().millijoules() - 11.852).abs() < 1e-2);
+        assert!((item.idle_power.milliwatts() - 134.3).abs() < 1e-9);
+        assert!((item.latency_with_config().millis() - 36.1851).abs() < 1e-6);
+        assert!((item.latency_without_config().millis() - 0.0401).abs() < 1e-9);
+    }
+
+    #[test]
+    fn workload_spec_parses() {
+        let v = yaml::parse(
+            "workload:\n  energy_budget_j: 4147\n  request_period_ms: 40\n  strategy: idle-waiting\n",
+        )
+        .unwrap();
+        let w = WorkloadSpec::from_json(&v).unwrap();
+        assert_eq!(w.energy_budget, Energy::from_joules(4147.0));
+        assert_eq!(w.strategy, StrategyKind::IdleWaiting);
+        assert_eq!(w.arrival.mean_period(), Duration::from_millis(40.0));
+        assert_eq!(w.max_items, None);
+    }
+
+    #[test]
+    fn poisson_arrival_parses() {
+        let v = yaml::parse(
+            "energy_budget_j: 100\nrequest_period_ms: 40\narrival_kind: poisson\nstrategy: on-off\nseed: 7\n",
+        )
+        .unwrap();
+        let w = WorkloadSpec::from_json(&v).unwrap();
+        assert!(matches!(w.arrival, ArrivalSpec::Poisson { .. }));
+        assert_eq!(w.seed, 7);
+    }
+
+    #[test]
+    fn missing_phase_is_error() {
+        let v = yaml::parse(
+            "workload_item:\n  phases:\n    - name: configuration\n      power_mw: 1\n      time_ms: 1\n  idle_power_mw: 1\n",
+        )
+        .unwrap();
+        let e = WorkloadItemSpec::from_json(&v).unwrap_err();
+        assert!(e.msg.contains("missing phase"));
+    }
+
+    #[test]
+    fn unknown_strategy_is_error() {
+        let v = yaml::parse(
+            "energy_budget_j: 1\nrequest_period_ms: 1\nstrategy: warp-drive\n",
+        )
+        .unwrap();
+        let e = WorkloadSpec::from_json(&v).unwrap_err();
+        assert!(e.msg.contains("unknown strategy"));
+    }
+
+    #[test]
+    fn strategy_names_round_trip() {
+        for kind in StrategyKind::ALL {
+            assert_eq!(StrategyKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(StrategyKind::parse("Method1+2"), Some(StrategyKind::IdleWaitingM12));
+    }
+
+    #[test]
+    fn platform_defaults() {
+        let spec = PlatformSpec::from_json(&Json::Null).unwrap();
+        assert_eq!(spec.fpga, FpgaModel::Xc7s15);
+        assert_eq!(spec.spi, SpiConfig::optimal());
+        assert!((spec.battery_budget.joules() - 4147.0).abs() < 1e-9);
+        assert!(!spec.method1);
+    }
+
+    #[test]
+    fn platform_parses_overrides() {
+        let v = yaml::parse(
+            "platform:\n  fpga:\n    model: xc7s25\n  spi:\n    buswidth: 1\n    freq_mhz: 3\n    compressed: false\n  method1: true\n  method2: true\n",
+        )
+        .unwrap();
+        let spec = PlatformSpec::from_json(&v).unwrap();
+        assert_eq!(spec.fpga, FpgaModel::Xc7s25);
+        assert_eq!(spec.spi, SpiConfig::worst());
+        assert!(spec.method1 && spec.method2);
+    }
+
+    #[test]
+    fn spi_sweep_covers_table1() {
+        let sweep = SpiConfig::sweep();
+        assert_eq!(sweep.len(), 66); // 3 widths × 11 freqs × 2 compression
+        assert!(sweep.contains(&SpiConfig::optimal()));
+        assert!(sweep.contains(&SpiConfig::worst()));
+    }
+
+    #[test]
+    fn fpga_bitstream_sizes_from_ug470() {
+        assert_eq!(FpgaModel::Xc7s15.bitstream_bits(), 4_310_752);
+        assert_eq!(FpgaModel::Xc7s25.bitstream_bits(), 9_934_432);
+    }
+
+    #[test]
+    fn spi_labels() {
+        assert_eq!(SpiConfig::optimal().label(), "Quad SPI @ 66 MHz, compressed");
+        assert_eq!(SpiConfig::worst().label(), "Single SPI @ 3 MHz, uncompressed");
+    }
+}

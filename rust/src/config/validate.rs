@@ -1,0 +1,174 @@
+//! Semantic validation of loaded configurations.
+//!
+//! Syntactic decoding lives in `schema`; this module enforces the physical
+//! and paper-specific feasibility constraints, e.g. the paper's observation
+//! that On-Off cannot serve request periods shorter than the configuration
+//! time (Fig 8 omits On-Off below 36.15 ms).
+
+use crate::config::loader::SimConfig;
+use crate::config::schema::{SpiConfig, StrategyKind};
+
+/// Validate a full configuration; returns a human-readable reason on error.
+pub fn validate(cfg: &SimConfig) -> Result<(), String> {
+    validate_spi(&cfg.platform.spi)?;
+    validate_item(cfg)?;
+    validate_workload(cfg)?;
+    Ok(())
+}
+
+fn validate_spi(spi: &SpiConfig) -> Result<(), String> {
+    if !SpiConfig::BUSWIDTHS.contains(&spi.buswidth) {
+        return Err(format!(
+            "spi.buswidth must be 1, 2 or 4 (got {})",
+            spi.buswidth
+        ));
+    }
+    if !(3.0..=66.0).contains(&spi.freq_mhz) {
+        return Err(format!(
+            "spi.freq_mhz must be within the config port's 3..=66 MHz (got {})",
+            spi.freq_mhz
+        ));
+    }
+    Ok(())
+}
+
+fn validate_item(cfg: &SimConfig) -> Result<(), String> {
+    let item = &cfg.item;
+    for (name, phase) in [
+        ("configuration", &item.configuration),
+        ("data_loading", &item.data_loading),
+        ("inference", &item.inference),
+        ("data_offloading", &item.data_offloading),
+    ] {
+        if !(phase.power.watts().is_finite() && phase.power.watts() > 0.0) {
+            return Err(format!("phase '{name}': power must be positive and finite"));
+        }
+        if !(phase.time.secs().is_finite() && phase.time.secs() > 0.0) {
+            return Err(format!("phase '{name}': time must be positive and finite"));
+        }
+    }
+    if item.idle_power.watts() <= 0.0 || !item.idle_power.watts().is_finite() {
+        return Err("idle_power_mw must be positive and finite".into());
+    }
+    if item.power_on_transient.joules() < 0.0 {
+        return Err("power_on_transient_mj must be non-negative".into());
+    }
+    // Idle power below the flash standby floor is physically impossible on
+    // this board (§5.4: the flash draws ~15.2 mW whenever rails are up).
+    if item.idle_power < cfg.platform.flash_standby {
+        return Err(format!(
+            "idle power {:.4} is below the flash standby floor {:.4}",
+            item.idle_power, cfg.platform.flash_standby
+        ));
+    }
+    Ok(())
+}
+
+fn validate_workload(cfg: &SimConfig) -> Result<(), String> {
+    let w = &cfg.workload;
+    if w.energy_budget.joules() <= 0.0 || !w.energy_budget.joules().is_finite() {
+        return Err("energy_budget_j must be positive and finite".into());
+    }
+    let period = w.arrival.mean_period();
+    if period.secs() <= 0.0 || !period.secs().is_finite() {
+        return Err("request_period_ms must be positive and finite".into());
+    }
+    // Feasibility (paper §5.3): under On-Off the FPGA must finish
+    // configuration + the workload item within one period, otherwise it
+    // "can not be prepared to process an incoming workload".
+    if w.strategy == StrategyKind::OnOff && period < cfg.item.latency_with_config() {
+        return Err(format!(
+            "on-off infeasible: request period {:.3} < workload-item latency {:.3} \
+             (the paper omits On-Off below 36.15 ms for this reason)",
+            period, cfg.item.latency_with_config()
+        ));
+    }
+    // Idle-Waiting needs the non-config latency to fit in the period.
+    if matches!(
+        w.strategy,
+        StrategyKind::IdleWaiting | StrategyKind::IdleWaitingM1 | StrategyKind::IdleWaitingM12
+    ) && period < cfg.item.latency_without_config()
+    {
+        return Err(format!(
+            "idle-waiting infeasible: request period {:.5} < item latency {:.5}",
+            period, cfg.item.latency_without_config()
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::loader::{load_str, paper_default, PAPER_DEFAULT_YAML};
+
+    fn mutate(from: &str, to: &str) -> Result<SimConfig, String> {
+        let doc = PAPER_DEFAULT_YAML.replace(from, to);
+        match load_str(&doc) {
+            Ok(cfg) => Ok(cfg),
+            Err(crate::config::loader::LoadError::Invalid(msg)) => Err(msg),
+            Err(other) => panic!("unexpected load error: {other}"),
+        }
+    }
+
+    #[test]
+    fn paper_default_is_valid() {
+        assert!(validate(&paper_default()).is_ok());
+    }
+
+    #[test]
+    fn onoff_below_config_time_rejected() {
+        let e = mutate("strategy: idle-waiting", "strategy: on-off")
+            .map(|_| ())
+            .and(mutate_onoff_short())
+            .unwrap_err();
+        assert!(e.contains("on-off infeasible"));
+    }
+
+    fn mutate_onoff_short() -> Result<(), String> {
+        let doc = PAPER_DEFAULT_YAML
+            .replace("request_period_ms: 40.0", "request_period_ms: 20.0")
+            .replace("strategy: idle-waiting", "strategy: on-off");
+        match load_str(&doc) {
+            Ok(_) => Ok(()),
+            Err(crate::config::loader::LoadError::Invalid(msg)) => Err(msg),
+            Err(other) => panic!("unexpected: {other}"),
+        }
+    }
+
+    #[test]
+    fn onoff_at_40ms_is_feasible() {
+        let cfg = mutate("strategy: idle-waiting", "strategy: on-off").unwrap();
+        assert!(validate(&cfg).is_ok());
+    }
+
+    #[test]
+    fn bad_buswidth_rejected() {
+        let e = mutate("buswidth: 4", "buswidth: 3").unwrap_err();
+        assert!(e.contains("buswidth"));
+    }
+
+    #[test]
+    fn bad_freq_rejected() {
+        let e = mutate("freq_mhz: 66", "freq_mhz: 100").unwrap_err();
+        assert!(e.contains("freq_mhz"));
+    }
+
+    #[test]
+    fn negative_budget_rejected() {
+        let e = mutate("energy_budget_j: 4147", "energy_budget_j: -1").unwrap_err();
+        assert!(e.contains("energy_budget"));
+    }
+
+    #[test]
+    fn idle_below_flash_floor_rejected() {
+        let e = mutate("idle_power_mw: 134.3", "idle_power_mw: 10.0").unwrap_err();
+        assert!(e.contains("flash standby floor"));
+    }
+
+    #[test]
+    fn zero_phase_time_rejected() {
+        let e = mutate("time_ms: 0.0281", "time_ms: 0").unwrap_err();
+        assert!(e.contains("inference"));
+    }
+}

@@ -1,0 +1,526 @@
+//! Indentation-based YAML-subset parser.
+//!
+//! The paper's simulator (§5.1) is driven by two YAML documents: a
+//! *workload* description (energy budget, request period) and a *workload
+//! item* description (per-phase power/duration). The offline vendor set has
+//! no YAML crate, so this is a purpose-built parser for the subset those
+//! documents (and our platform descriptions) use:
+//!
+//! * block mappings (`key: value`, nested by indentation)
+//! * block sequences (`- item`, including sequences of mappings)
+//! * scalars: strings (bare / single / double-quoted), numbers, booleans
+//!   (`true`/`false`), `null`/`~`
+//! * inline sequences of scalars (`[1, 2, 4]`)
+//! * `#` comments and blank lines
+//!
+//! Not supported (rejected with errors, never silently misparsed): anchors,
+//! aliases, tags, multi-document streams, flow mappings, block scalars.
+//!
+//! Parsed values are represented as [`Json`] so the schema layer has a
+//! single accessor API for both formats.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[error("yaml parse error at line {line}: {msg}")]
+pub struct YamlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// A pre-processed line: indentation, content, original line number.
+#[derive(Debug)]
+struct Line<'a> {
+    indent: usize,
+    text: &'a str,
+    number: usize,
+}
+
+pub fn parse(input: &str) -> Result<Json, YamlError> {
+    let lines = preprocess(input)?;
+    if lines.is_empty() {
+        return Ok(Json::Null);
+    }
+    let mut pos = 0;
+    let value = parse_block(&lines, &mut pos, lines[0].indent)?;
+    if pos != lines.len() {
+        return Err(err(lines[pos].number, "unexpected dedent/content"));
+    }
+    Ok(value)
+}
+
+fn err(line: usize, msg: impl Into<String>) -> YamlError {
+    YamlError {
+        line,
+        msg: msg.into(),
+    }
+}
+
+/// Strip comments/blank lines, compute indentation, reject tabs.
+fn preprocess(input: &str) -> Result<Vec<Line<'_>>, YamlError> {
+    let mut out = Vec::new();
+    for (i, raw) in input.lines().enumerate() {
+        let number = i + 1;
+        if raw.contains('\t') {
+            return Err(err(number, "tabs are not allowed in indentation"));
+        }
+        let content = strip_comment(raw);
+        let trimmed_end = content.trim_end();
+        let indent = trimmed_end.len() - trimmed_end.trim_start().len();
+        let text = trimmed_end.trim_start();
+        if text.is_empty() {
+            continue;
+        }
+        if text == "---" {
+            if !out.is_empty() {
+                return Err(err(number, "multi-document streams are unsupported"));
+            }
+            continue; // allow a single leading document marker
+        }
+        out.push(Line {
+            indent,
+            text,
+            number,
+        });
+    }
+    Ok(out)
+}
+
+/// Remove a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let bytes = line.as_bytes();
+    let mut in_single = false;
+    let mut in_double = false;
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\'' if !in_double => in_single = !in_single,
+            b'"' if !in_single => in_double = !in_double,
+            b'\\' if in_double => i += 1, // skip escaped char
+            b'#' if !in_single && !in_double => {
+                // yaml requires '#' to be preceded by space/start to be a comment
+                if i == 0 || bytes[i - 1] == b' ' {
+                    return &line[..i];
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    line
+}
+
+fn parse_block(lines: &[Line<'_>], pos: &mut usize, indent: usize) -> Result<Json, YamlError> {
+    let first = &lines[*pos];
+    if first.indent != indent {
+        return Err(err(first.number, "inconsistent indentation"));
+    }
+    if first.text.starts_with("- ") || first.text == "-" {
+        parse_sequence(lines, pos, indent)
+    } else {
+        parse_mapping(lines, pos, indent)
+    }
+}
+
+fn parse_sequence(
+    lines: &[Line<'_>],
+    pos: &mut usize,
+    indent: usize,
+) -> Result<Json, YamlError> {
+    let mut items = Vec::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent < indent {
+            break;
+        }
+        if line.indent > indent {
+            return Err(err(line.number, "unexpected indent inside sequence"));
+        }
+        if !(line.text.starts_with("- ") || line.text == "-") {
+            break;
+        }
+        let number = line.number;
+        let rest = line.text[1..].trim_start();
+        *pos += 1;
+        if rest.is_empty() {
+            // nested block on following lines
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child_indent = lines[*pos].indent;
+                items.push(parse_block(lines, pos, child_indent)?);
+            } else {
+                items.push(Json::Null);
+            }
+        } else if let Some((key, value)) = split_key_value(rest) {
+            // "- key: value" — a mapping item starting inline
+            let item_indent = indent + (line.text.len() - rest.len());
+            items.push(parse_inline_mapping_item(
+                lines,
+                pos,
+                item_indent,
+                key,
+                value,
+                number,
+            )?);
+        } else {
+            items.push(parse_scalar(rest, number)?);
+        }
+    }
+    Ok(Json::Arr(items))
+}
+
+/// Handle `- key: value` followed by further keys at the item's indent.
+fn parse_inline_mapping_item(
+    lines: &[Line<'_>],
+    pos: &mut usize,
+    item_indent: usize,
+    first_key: &str,
+    first_value: &str,
+    number: usize,
+) -> Result<Json, YamlError> {
+    let mut map = BTreeMap::new();
+    insert_entry(&mut map, lines, pos, item_indent, first_key, first_value, number)?;
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent != item_indent || line.text.starts_with("- ") {
+            break;
+        }
+        let (key, value) = split_key_value(line.text)
+            .ok_or_else(|| err(line.number, "expected 'key: value'"))?;
+        let number = line.number;
+        *pos += 1;
+        insert_entry(&mut map, lines, pos, item_indent, key, value, number)?;
+    }
+    Ok(Json::Obj(map))
+}
+
+fn parse_mapping(
+    lines: &[Line<'_>],
+    pos: &mut usize,
+    indent: usize,
+) -> Result<Json, YamlError> {
+    let mut map = BTreeMap::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent < indent {
+            break;
+        }
+        if line.indent > indent {
+            return Err(err(line.number, "unexpected indent inside mapping"));
+        }
+        if line.text.starts_with("- ") {
+            return Err(err(line.number, "sequence item inside mapping"));
+        }
+        let (key, value) = split_key_value(line.text)
+            .ok_or_else(|| err(line.number, "expected 'key: value'"))?;
+        let number = line.number;
+        *pos += 1;
+        insert_entry(&mut map, lines, pos, indent, key, value, number)?;
+    }
+    Ok(Json::Obj(map))
+}
+
+fn insert_entry(
+    map: &mut BTreeMap<String, Json>,
+    lines: &[Line<'_>],
+    pos: &mut usize,
+    indent: usize,
+    key: &str,
+    value: &str,
+    number: usize,
+) -> Result<(), YamlError> {
+    let key = unquote(key, number)?;
+    if map.contains_key(&key) {
+        return Err(err(number, format!("duplicate key '{key}'")));
+    }
+    let parsed = if value.is_empty() {
+        // nested block (or empty value)
+        if *pos < lines.len() && lines[*pos].indent > indent {
+            let child_indent = lines[*pos].indent;
+            parse_block(lines, pos, child_indent)?
+        } else {
+            Json::Null
+        }
+    } else {
+        parse_scalar(value, number)?
+    };
+    map.insert(key, parsed);
+    Ok(())
+}
+
+/// Split "key: value" at the first unquoted `: ` (or trailing `:`).
+fn split_key_value(text: &str) -> Option<(&str, &str)> {
+    let bytes = text.as_bytes();
+    let mut in_single = false;
+    let mut in_double = false;
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\'' if !in_double => in_single = !in_single,
+            b'"' if !in_single => in_double = !in_double,
+            b'\\' if in_double => i += 1,
+            b':' if !in_single && !in_double => {
+                if i + 1 == bytes.len() {
+                    return Some((text[..i].trim(), ""));
+                }
+                if bytes[i + 1] == b' ' {
+                    return Some((text[..i].trim(), text[i + 2..].trim()));
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    None
+}
+
+fn parse_scalar(text: &str, number: usize) -> Result<Json, YamlError> {
+    debug_assert!(!text.is_empty());
+    // inline sequence [a, b, c]
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(number, "unterminated inline sequence"))?;
+        if inner.trim().is_empty() {
+            return Ok(Json::Arr(Vec::new()));
+        }
+        let items = split_inline_items(inner, number)?
+            .into_iter()
+            .map(|item| parse_scalar(item.trim(), number))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Json::Arr(items));
+    }
+    if text.starts_with('{') {
+        return Err(err(number, "flow mappings are unsupported"));
+    }
+    if text.starts_with('&') || text.starts_with('*') || text.starts_with('!') {
+        return Err(err(number, "anchors/aliases/tags are unsupported"));
+    }
+    if text.starts_with('|') || text.starts_with('>') {
+        return Err(err(number, "block scalars are unsupported"));
+    }
+    if text.starts_with('"') || text.starts_with('\'') {
+        return Ok(Json::Str(unquote(text, number)?));
+    }
+    match text {
+        "null" | "~" | "Null" | "NULL" => return Ok(Json::Null),
+        "true" | "True" | "TRUE" => return Ok(Json::Bool(true)),
+        "false" | "False" | "FALSE" => return Ok(Json::Bool(false)),
+        _ => {}
+    }
+    if let Ok(n) = text.parse::<f64>() {
+        if n.is_finite() {
+            return Ok(Json::Num(n));
+        }
+    }
+    Ok(Json::Str(text.to_string()))
+}
+
+/// Split inline-sequence items at top-level commas (no nesting support
+/// beyond quoted strings — sufficient for `[1, 2, 4]`-style lists).
+fn split_inline_items(inner: &str, number: usize) -> Result<Vec<&str>, YamlError> {
+    let bytes = inner.as_bytes();
+    let mut items = Vec::new();
+    let mut start = 0;
+    let mut in_single = false;
+    let mut in_double = false;
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\'' if !in_double => in_single = !in_single,
+            b'"' if !in_single => in_double = !in_double,
+            b'\\' if in_double => i += 1,
+            b'[' if !in_single && !in_double => {
+                return Err(err(number, "nested inline sequences are unsupported"))
+            }
+            b',' if !in_single && !in_double => {
+                items.push(&inner[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    items.push(&inner[start..]);
+    Ok(items)
+}
+
+fn unquote(text: &str, number: usize) -> Result<String, YamlError> {
+    if let Some(inner) = text.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| err(number, "unterminated double-quoted string"))?;
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    Some(other) => {
+                        return Err(err(number, format!("unknown escape '\\{other}'")))
+                    }
+                    None => return Err(err(number, "dangling escape")),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        Ok(out)
+    } else if let Some(inner) = text.strip_prefix('\'') {
+        let inner = inner
+            .strip_suffix('\'')
+            .ok_or_else(|| err(number, "unterminated single-quoted string"))?;
+        Ok(inner.replace("''", "'"))
+    } else {
+        Ok(text.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_workload_description() {
+        let doc = "\
+# workload description (paper §5.1)
+workload:
+  energy_budget_j: 4147
+  request_period_ms: 40.0
+  strategy: idle-waiting
+";
+        let v = parse(doc).unwrap();
+        let w = v.get("workload").unwrap();
+        assert_eq!(w.get("energy_budget_j").unwrap().as_f64(), Some(4147.0));
+        assert_eq!(w.get("request_period_ms").unwrap().as_f64(), Some(40.0));
+        assert_eq!(w.get("strategy").unwrap().as_str(), Some("idle-waiting"));
+    }
+
+    #[test]
+    fn parses_workload_item_phases() {
+        let doc = "\
+phases:
+  - name: configuration
+    power_mw: 327.9
+    time_ms: 36.145
+  - name: inference
+    power_mw: 171.4
+    time_ms: 0.0281
+";
+        let v = parse(doc).unwrap();
+        let phases = v.get("phases").unwrap().as_arr().unwrap();
+        assert_eq!(phases.len(), 2);
+        assert_eq!(phases[0].get("name").unwrap().as_str(), Some("configuration"));
+        assert_eq!(phases[1].get("power_mw").unwrap().as_f64(), Some(171.4));
+    }
+
+    #[test]
+    fn parses_inline_sequences() {
+        let v = parse("buswidths: [1, 2, 4]\nfreqs_mhz: [3, 66]\n").unwrap();
+        let b: Vec<f64> = v
+            .get("buswidths")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap())
+            .collect();
+        assert_eq!(b, vec![1.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn parses_scalars() {
+        let v = parse("a: true\nb: null\nc: ~\nd: 'qu''oted'\ne: \"x\\ny\"\nf: bare str\n")
+            .unwrap();
+        assert_eq!(v.get("a").unwrap().as_bool(), Some(true));
+        assert_eq!(*v.get("b").unwrap(), Json::Null);
+        assert_eq!(*v.get("c").unwrap(), Json::Null);
+        assert_eq!(v.get("d").unwrap().as_str(), Some("qu'oted"));
+        assert_eq!(v.get("e").unwrap().as_str(), Some("x\ny"));
+        assert_eq!(v.get("f").unwrap().as_str(), Some("bare str"));
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let v = parse("# header\n\na: 1 # trailing\n\n# tail\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let v = parse("a: \"x # y\"\nb: 'p # q'\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_str(), Some("x # y"));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("p # q"));
+    }
+
+    #[test]
+    fn nested_mappings() {
+        let doc = "\
+platform:
+  fpga:
+    model: XC7S15
+    vccint_v: 1.0
+  mcu:
+    model: RP2040
+";
+        let v = parse(doc).unwrap();
+        assert_eq!(
+            v.get("platform").unwrap().get("fpga").unwrap().get("model").unwrap().as_str(),
+            Some("XC7S15")
+        );
+    }
+
+    #[test]
+    fn sequence_of_scalars() {
+        let v = parse("- 1\n- 2\n- three\n").unwrap();
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr[0].as_f64(), Some(1.0));
+        assert_eq!(arr[2].as_str(), Some("three"));
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        let e = parse("a: 1\na: 2\n").unwrap_err();
+        assert!(e.msg.contains("duplicate"));
+    }
+
+    #[test]
+    fn tabs_rejected() {
+        assert!(parse("a:\n\tb: 1\n").is_err());
+    }
+
+    #[test]
+    fn unsupported_features_rejected() {
+        assert!(parse("a: &anchor 1\n").is_err());
+        assert!(parse("a: |\n  block\n").is_err());
+        assert!(parse("a: {flow: map}\n").is_err());
+        assert!(parse("---\na: 1\n---\nb: 2\n").is_err());
+    }
+
+    #[test]
+    fn bad_indent_rejected() {
+        assert!(parse("a: 1\n   b: 2\n").is_err());
+    }
+
+    #[test]
+    fn empty_doc_is_null() {
+        assert_eq!(parse("").unwrap(), Json::Null);
+        assert_eq!(parse("# only comments\n").unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn leading_document_marker_ok() {
+        let v = parse("---\na: 1\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn key_with_colon_in_quoted_string() {
+        let v = parse("note: \"time: 36.15 ms\"\n").unwrap();
+        assert_eq!(v.get("note").unwrap().as_str(), Some("time: 36.15 ms"));
+    }
+}

@@ -1,0 +1,142 @@
+//! Serving metrics: request latencies, deadline tracking, energy summary.
+//!
+//! The duty-cycle server records per-request host latency (PJRT inference
+//! wall time), deadline misses (a request must finish before the next one
+//! arrives — the paper's T_latency < T_req condition) and the simulated
+//! energy ledger, and renders the summary the e2e example prints.
+
+use crate::util::stats::{Summary, Welford};
+use crate::util::table::{fnum, Table};
+use crate::util::units::{Duration, Energy};
+
+/// Rolling serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    latencies_ms: Vec<f64>,
+    welford: Welford,
+    pub requests: u64,
+    pub deadline_misses: u64,
+    pub forecasts_emitted: u64,
+    /// Simulated FPGA-side energy attributed to served requests.
+    pub sim_energy: Energy,
+    /// Simulated elapsed duty-cycle time.
+    pub sim_elapsed: Duration,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            welford: Welford::new(),
+            ..Default::default()
+        }
+    }
+
+    pub fn record_request(&mut self, host_latency: Duration, deadline: Duration) {
+        self.requests += 1;
+        self.forecasts_emitted += 1;
+        let ms = host_latency.millis();
+        self.latencies_ms.push(ms);
+        self.welford.push(ms);
+        if host_latency > deadline {
+            self.deadline_misses += 1;
+        }
+    }
+
+    pub fn latency_summary(&self) -> Option<Summary> {
+        Summary::of(&self.latencies_ms)
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        self.welford.mean()
+    }
+
+    /// Requests per simulated second.
+    pub fn throughput_per_sim_sec(&self) -> f64 {
+        if self.sim_elapsed.secs() == 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / self.sim_elapsed.secs()
+        }
+    }
+
+    /// Render the end-of-run report table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["metric", "value"]).with_title("serving metrics");
+        t.row(&["requests".into(), self.requests.to_string()]);
+        t.row(&["deadline misses".into(), self.deadline_misses.to_string()]);
+        if let Some(s) = self.latency_summary() {
+            t.row(&["host latency p50 (ms)".into(), fnum(s.p50, 4)]);
+            t.row(&["host latency p95 (ms)".into(), fnum(s.p95, 4)]);
+            t.row(&["host latency p99 (ms)".into(), fnum(s.p99, 4)]);
+            t.row(&["host latency max (ms)".into(), fnum(s.max, 4)]);
+        }
+        t.row(&[
+            "sim energy (J)".into(),
+            fnum(self.sim_energy.joules(), 4),
+        ]);
+        t.row(&[
+            "sim elapsed (s)".into(),
+            fnum(self.sim_elapsed.secs(), 3),
+        ]);
+        t.row(&[
+            "throughput (req/sim-s)".into(),
+            fnum(self.throughput_per_sim_sec(), 2),
+        ]);
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut m = Metrics::new();
+        for i in 0..100 {
+            m.record_request(
+                Duration::from_millis(0.5 + i as f64 * 0.01),
+                Duration::from_millis(40.0),
+            );
+        }
+        assert_eq!(m.requests, 100);
+        assert_eq!(m.deadline_misses, 0);
+        let s = m.latency_summary().unwrap();
+        assert!(s.p50 > 0.5 && s.p50 < 1.5);
+    }
+
+    #[test]
+    fn deadline_misses_counted() {
+        let mut m = Metrics::new();
+        m.record_request(Duration::from_millis(50.0), Duration::from_millis(40.0));
+        m.record_request(Duration::from_millis(1.0), Duration::from_millis(40.0));
+        assert_eq!(m.deadline_misses, 1);
+    }
+
+    #[test]
+    fn throughput_from_sim_time() {
+        let mut m = Metrics::new();
+        m.requests = 250;
+        m.sim_elapsed = Duration::from_secs(10.0);
+        assert!((m.throughput_per_sim_sec() - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_contains_key_rows() {
+        let mut m = Metrics::new();
+        m.record_request(Duration::from_millis(0.8), Duration::from_millis(40.0));
+        m.sim_energy = Energy::from_joules(1.5);
+        let s = m.render();
+        assert!(s.contains("requests"));
+        assert!(s.contains("host latency p95"));
+        assert!(s.contains("1.5000"));
+    }
+
+    #[test]
+    fn empty_metrics_render() {
+        let m = Metrics::new();
+        let s = m.render();
+        assert!(s.contains("requests"));
+        assert!(!s.contains("p50")); // no latency rows without data
+    }
+}

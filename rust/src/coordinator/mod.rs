@@ -1,0 +1,13 @@
+//! The duty-cycle serving coordinator (L3): request generation, metrics,
+//! and the serving loop that executes real inference via the PJRT runtime
+//! while accounting energy on the simulated board.
+
+pub mod metrics;
+pub mod requests;
+pub mod multi_sim;
+pub mod scheduler;
+pub mod server;
+
+pub use metrics::Metrics;
+pub use requests::{ArrivalProcess, Periodic, Poisson, TraceReplay};
+pub use server::{serve, SensorSource, ServeReport, ServerConfig, Served};

@@ -1,0 +1,322 @@
+//! Event-driven multi-accelerator workload simulation.
+//!
+//! Connects the [`Engine`](crate::sim::Engine) (discrete events), the
+//! [`MultiAccelScheduler`] (the §4.2-extension policy layer) and the
+//! [`Board`] (energy): requests for several accelerators arrive as
+//! timed events, the scheduler picks service order within its reordering
+//! window, and the board pays configuration/phase/idle energy for every
+//! decision. This is the full-system version of the closed-form
+//! multi-accel ablation — latency and energy emerge from the event flow.
+
+use crate::config::loader::SimConfig;
+use crate::config::schema::FpgaModel;
+use crate::coordinator::scheduler::{Dispatch, MultiAccelScheduler, Policy, SlotRequest};
+use crate::device::bitstream::Bitstream;
+use crate::device::board::Board;
+use crate::device::rails::PowerSaving;
+use crate::sim::{Ctx, Engine, SimTime};
+use crate::strategies::simulate::item_phases;
+use crate::util::rng::Xoshiro256ss;
+use crate::util::stats::Welford;
+use crate::util::units::{Duration, Energy};
+
+/// Events of the multi-accelerator duty cycle.
+#[derive(Debug)]
+enum Event {
+    /// A request for `slot` arrives.
+    Arrival { id: u64, slot: usize },
+    /// The fabric becomes free; pull the next scheduled request.
+    FabricFree,
+}
+
+/// Per-run configuration.
+#[derive(Debug, Clone)]
+pub struct MultiSimConfig {
+    /// Probability that a request targets accelerator B (slot 1).
+    pub mix: f64,
+    pub requests: u64,
+    /// Requests arriving together per period tick (a sensor event fanning
+    /// out to several model evaluations). `1` = the paper's duty cycle;
+    /// >1 creates queue pressure, which is where scheduling matters.
+    pub burst: u64,
+    pub policy: Policy,
+    /// Idle mode between servicing (the gap strategy).
+    pub saving: PowerSaving,
+    pub seed: u64,
+}
+
+/// Outcome of a multi-accelerator run.
+#[derive(Debug, Clone)]
+pub struct MultiSimReport {
+    pub served: u64,
+    pub reconfigurations: u64,
+    pub reordered: u64,
+    pub energy: Energy,
+    pub mean_latency: Duration,
+    pub p_late: f64,
+    pub sim_time: Duration,
+}
+
+struct State {
+    board: Board,
+    scheduler: MultiAccelScheduler,
+    busy_until: SimTime,
+    served: u64,
+    late: u64,
+    latency: Welford,
+    period: Duration,
+    phases: [(crate::util::units::Power, Duration); 3],
+    spi: crate::config::schema::SpiConfig,
+    saving: PowerSaving,
+    /// Last time the board's ledger was advanced (for idle accounting).
+    ledger_at: SimTime,
+    dead: bool,
+}
+
+impl State {
+    /// Advance the energy ledger to `now`, charging idle power for the
+    /// uncovered interval.
+    fn idle_until(&mut self, now: SimTime) {
+        if now > self.ledger_at {
+            let dur = now.since(self.ledger_at);
+            if self.board.fpga.is_configured() {
+                if self.board.idle_for(self.saving, dur).is_err() {
+                    self.dead = true;
+                }
+            } else if self.board.off_for(dur, false).is_err() {
+                self.dead = true;
+            }
+            self.ledger_at = now;
+        }
+    }
+
+    /// Serve one dispatch starting at `now`; returns the completion time.
+    fn serve(&mut self, now: SimTime, dispatch: &Dispatch) -> SimTime {
+        self.idle_until(now);
+        let mut finish = now;
+        if dispatch.reconfigure {
+            // a switch means loading a different image: power-cycle path
+            if self.board.fpga.is_configured() {
+                self.board.fpga.power_off();
+            }
+            match self.board.power_on_and_configure("lstm", self.spi) {
+                Ok(t) => finish += t,
+                Err(_) => {
+                    self.dead = true;
+                    return now;
+                }
+            }
+        }
+        match self.board.run_item_phases(&self.phases) {
+            Ok(t) => finish += t,
+            Err(_) => {
+                self.dead = true;
+                return now;
+            }
+        }
+        self.ledger_at = finish;
+        self.served += 1;
+        let arrival = SimTime::ZERO + dispatch.request.arrival;
+        self.latency.push(finish.since(arrival).millis());
+        if finish.since(arrival) > self.period {
+            self.late += 1;
+        }
+        finish
+    }
+}
+
+/// Run the event-driven multi-accelerator simulation.
+pub fn run(config: &SimConfig, ms: &MultiSimConfig) -> MultiSimReport {
+    let period = config.workload.arrival.mean_period();
+    let mut board = Board::paper_setup(config.platform.fpga, config.platform.spi.compressed);
+    // program a second accelerator image (same geometry, distinct slot)
+    board.flash.program(
+        "lstm_b",
+        Bitstream::synthesize(
+            FpgaModel::Xc7s15,
+            crate::device::calib::design_occupied_frames(FpgaModel::Xc7s15),
+            0xB0B,
+        ),
+        config.platform.spi.compressed,
+    );
+
+    let mut state = State {
+        board,
+        scheduler: MultiAccelScheduler::new(
+            ms.policy,
+            config.item.configuration.time,
+            config.item.latency_without_config(),
+        ),
+        busy_until: SimTime::ZERO,
+        served: 0,
+        late: 0,
+        latency: Welford::new(),
+        period,
+        phases: item_phases(&config.item),
+        spi: config.platform.spi,
+        saving: ms.saving,
+        ledger_at: SimTime::ZERO,
+        dead: false,
+    };
+
+    let mut engine: Engine<Event> = Engine::new();
+    let mut rng = Xoshiro256ss::new(ms.seed);
+    let burst = ms.burst.max(1);
+    for i in 0..ms.requests {
+        let slot = if rng.bernoulli(ms.mix) { 1 } else { 0 };
+        let tick = i / burst;
+        engine.schedule_at(
+            SimTime::ZERO + period * tick as f64,
+            Event::Arrival { id: i, slot },
+        );
+    }
+
+    let handler = |ctx: &mut Ctx<Event>, state: &mut State, event: Event| {
+        if state.dead {
+            ctx.stop();
+            return;
+        }
+        match event {
+            Event::Arrival { id, slot } => {
+                let arrival = ctx.now().as_duration();
+                state.scheduler.submit(SlotRequest {
+                    id,
+                    slot,
+                    arrival,
+                    deadline: arrival + state.period,
+                });
+                if ctx.now() >= state.busy_until {
+                    ctx.schedule_at(ctx.now(), Event::FabricFree);
+                }
+            }
+            Event::FabricFree => {
+                if ctx.now() < state.busy_until {
+                    return; // stale wake-up
+                }
+                if let Some(dispatch) = state.scheduler.next() {
+                    let finish = state.serve(ctx.now(), &dispatch);
+                    state.busy_until = finish;
+                    ctx.schedule_at(finish, Event::FabricFree);
+                }
+            }
+        }
+    };
+
+    let stats = engine.run(&mut state, u64::MAX, handler);
+
+    MultiSimReport {
+        served: state.served,
+        reconfigurations: state.board.fpga.configurations,
+        reordered: state.scheduler.stats.reordered,
+        energy: state.board.fpga_energy,
+        mean_latency: Duration::from_millis(if state.latency.count() > 0 {
+            state.latency.mean()
+        } else {
+            0.0
+        }),
+        p_late: if state.served > 0 {
+            state.late as f64 / state.served as f64
+        } else {
+            0.0
+        },
+        sim_time: stats.end_time.as_duration(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_default;
+
+    fn base(mix: f64, policy: Policy) -> MultiSimConfig {
+        MultiSimConfig {
+            mix,
+            requests: 500,
+            burst: 1,
+            policy,
+            saving: PowerSaving::M12,
+            seed: 17,
+        }
+    }
+
+    fn bursty(mix: f64, policy: Policy) -> MultiSimConfig {
+        MultiSimConfig {
+            burst: 4,
+            ..base(mix, policy)
+        }
+    }
+
+    #[test]
+    fn single_slot_configures_once_and_serves_all() {
+        let cfg = paper_default();
+        let r = run(&cfg, &base(0.0, Policy::Fifo));
+        assert_eq!(r.served, 500);
+        assert_eq!(r.reconfigurations, 1);
+        assert_eq!(r.p_late, 0.0);
+        // energy ≈ init + 500 items + idle gaps at M12 24 mW
+        let expected_mj = 11.98 + 500.0 * 0.0065 + 0.024 * (500.0 * 39.96);
+        assert!(
+            (r.energy.millijoules() - expected_mj).abs() / expected_mj < 0.02,
+            "{} vs {}",
+            r.energy.millijoules(),
+            expected_mj
+        );
+    }
+
+    #[test]
+    fn mixed_slots_cost_switches_under_fifo() {
+        let cfg = paper_default();
+        let r = run(&cfg, &base(0.5, Policy::Fifo));
+        assert_eq!(r.served, 500);
+        assert!(r.reconfigurations > 100, "{}", r.reconfigurations);
+        // with one request per period, a switch (36.19 ms) still fits the
+        // 40 ms period — no lateness, but plenty of switch energy
+        assert_eq!(r.p_late, 0.0);
+        assert!(r.energy > run(&cfg, &base(0.0, Policy::Fifo)).energy * 2.0);
+    }
+
+    #[test]
+    fn bursts_make_fifo_thrash_and_miss_deadlines() {
+        let cfg = paper_default();
+        let r = run(&cfg, &bursty(0.5, Policy::Fifo));
+        assert_eq!(r.served, 500);
+        // 4 requests per 40 ms tick, each switch 36 ms → queue backs up
+        assert!(r.p_late > 0.1, "p_late={}", r.p_late);
+    }
+
+    #[test]
+    fn batching_reduces_switches_energy_and_lateness() {
+        let cfg = paper_default();
+        let fifo = run(&cfg, &bursty(0.3, Policy::Fifo));
+        let batched = run(&cfg, &bursty(0.3, Policy::BatchBySlot { window: 8 }));
+        assert_eq!(fifo.served, batched.served);
+        assert!(
+            batched.reconfigurations < fifo.reconfigurations,
+            "batched {} vs fifo {}",
+            batched.reconfigurations,
+            fifo.reconfigurations
+        );
+        assert!(batched.energy < fifo.energy);
+        assert!(batched.reordered > 0);
+        assert!(batched.p_late <= fifo.p_late);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = paper_default();
+        let a = run(&cfg, &base(0.25, Policy::Fifo));
+        let b = run(&cfg, &base(0.25, Policy::Fifo));
+        assert_eq!(a.served, b.served);
+        assert_eq!(a.reconfigurations, b.reconfigurations);
+        assert_eq!(a.energy, b.energy);
+    }
+
+    #[test]
+    fn event_count_and_time_are_sane() {
+        let cfg = paper_default();
+        let r = run(&cfg, &base(0.1, Policy::Fifo));
+        // 500 arrivals at 40 ms: run spans ≥ 499 periods
+        assert!(r.sim_time.secs() >= 499.0 * 0.040);
+        assert!(r.mean_latency.millis() > 0.0);
+    }
+}

@@ -1,0 +1,315 @@
+//! Inference-request arrival generators.
+//!
+//! The paper studies strictly periodic requests (constant T_req); its
+//! stated future work is "irregularly occurring inference requests". Both
+//! are covered here: periodic, periodic-with-jitter, Poisson, and replay
+//! of an explicit inter-arrival trace. Generators are deterministic given
+//! their seed.
+
+use crate::config::schema::ArrivalSpec;
+use crate::util::rng::Xoshiro256ss;
+use crate::util::units::Duration;
+
+/// A source of inter-arrival gaps (time from one request to the next).
+pub trait ArrivalProcess: Send {
+    /// The next inter-arrival gap.
+    fn next_gap(&mut self) -> Duration;
+
+    /// Mean inter-arrival time (for reporting / analytical comparison).
+    fn mean(&self) -> Duration;
+
+    fn label(&self) -> String;
+}
+
+/// Strictly periodic arrivals — the paper's T_req.
+#[derive(Debug, Clone)]
+pub struct Periodic {
+    pub period: Duration,
+}
+
+impl ArrivalProcess for Periodic {
+    fn next_gap(&mut self) -> Duration {
+        self.period
+    }
+
+    fn mean(&self) -> Duration {
+        self.period
+    }
+
+    fn label(&self) -> String {
+        format!("periodic({:.2} ms)", self.period.millis())
+    }
+}
+
+/// Periodic with additive Gaussian jitter, clamped below at `min_gap`.
+#[derive(Debug, Clone)]
+pub struct Jittered {
+    pub period: Duration,
+    pub std_dev: Duration,
+    pub min_gap: Duration,
+    rng: Xoshiro256ss,
+}
+
+impl Jittered {
+    pub fn new(period: Duration, std_dev: Duration, min_gap: Duration, seed: u64) -> Jittered {
+        Jittered {
+            period,
+            std_dev,
+            min_gap,
+            rng: Xoshiro256ss::new(seed),
+        }
+    }
+}
+
+impl ArrivalProcess for Jittered {
+    fn next_gap(&mut self) -> Duration {
+        let gap = self.rng.normal(self.period.secs(), self.std_dev.secs());
+        Duration::from_secs(gap.max(self.min_gap.secs()))
+    }
+
+    fn mean(&self) -> Duration {
+        self.period
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "jittered({:.2} ± {:.2} ms)",
+            self.period.millis(),
+            self.std_dev.millis()
+        )
+    }
+}
+
+/// Poisson arrivals (exponential gaps), clamped below at `min_gap` so an
+/// arrival cannot land inside the previous item's latency.
+#[derive(Debug, Clone)]
+pub struct Poisson {
+    pub mean_gap: Duration,
+    pub min_gap: Duration,
+    rng: Xoshiro256ss,
+}
+
+impl Poisson {
+    pub fn new(mean_gap: Duration, min_gap: Duration, seed: u64) -> Poisson {
+        Poisson {
+            mean_gap,
+            min_gap,
+            rng: Xoshiro256ss::new(seed),
+        }
+    }
+}
+
+impl ArrivalProcess for Poisson {
+    fn next_gap(&mut self) -> Duration {
+        let gap = self.rng.exponential(self.mean_gap.secs());
+        Duration::from_secs(gap.max(self.min_gap.secs()))
+    }
+
+    fn mean(&self) -> Duration {
+        self.mean_gap
+    }
+
+    fn label(&self) -> String {
+        format!("poisson(mean {:.2} ms)", self.mean_gap.millis())
+    }
+}
+
+/// Replay an explicit gap trace, cycling when exhausted.
+#[derive(Debug, Clone)]
+pub struct TraceReplay {
+    gaps: Vec<Duration>,
+    pos: usize,
+}
+
+impl TraceReplay {
+    pub fn new(gaps: Vec<Duration>) -> TraceReplay {
+        assert!(!gaps.is_empty(), "empty arrival trace");
+        TraceReplay { gaps, pos: 0 }
+    }
+
+    /// Load a gap trace from a text/CSV file: one inter-arrival gap in
+    /// milliseconds per line; `#` comments, blank lines and an optional
+    /// `gap_ms` header are skipped.
+    pub fn from_file(path: impl AsRef<std::path::Path>) -> std::io::Result<TraceReplay> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        let mut gaps = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') || line.eq_ignore_ascii_case("gap_ms")
+            {
+                continue;
+            }
+            let ms: f64 = line.parse().map_err(|_| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("line {}: cannot parse '{line}' as a gap in ms", i + 1),
+                )
+            })?;
+            if !(ms.is_finite() && ms > 0.0) {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("line {}: gap must be positive ({ms})", i + 1),
+                ));
+            }
+            gaps.push(Duration::from_millis(ms));
+        }
+        if gaps.is_empty() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "trace file contains no gaps",
+            ));
+        }
+        Ok(TraceReplay { gaps, pos: 0 })
+    }
+}
+
+impl ArrivalProcess for TraceReplay {
+    fn next_gap(&mut self) -> Duration {
+        let gap = self.gaps[self.pos];
+        self.pos = (self.pos + 1) % self.gaps.len();
+        gap
+    }
+
+    fn mean(&self) -> Duration {
+        let total: f64 = self.gaps.iter().map(|g| g.secs()).sum();
+        Duration::from_secs(total / self.gaps.len() as f64)
+    }
+
+    fn label(&self) -> String {
+        format!("trace({} gaps)", self.gaps.len())
+    }
+}
+
+/// Build an arrival process from its config spec.
+pub fn build(spec: &ArrivalSpec, seed: u64) -> Box<dyn ArrivalProcess> {
+    match spec {
+        ArrivalSpec::Periodic { period } => Box::new(Periodic { period: *period }),
+        ArrivalSpec::Jittered {
+            period,
+            std_dev,
+            min_period,
+        } => Box::new(Jittered::new(*period, *std_dev, *min_period, seed)),
+        ArrivalSpec::Poisson { mean_period } => Box::new(Poisson::new(
+            *mean_period,
+            Duration::from_millis(0.05),
+            seed,
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn periodic_is_constant() {
+        let mut p = Periodic {
+            period: Duration::from_millis(40.0),
+        };
+        for _ in 0..10 {
+            assert_eq!(p.next_gap().millis(), 40.0);
+        }
+        assert_eq!(p.mean().millis(), 40.0);
+    }
+
+    #[test]
+    fn jittered_mean_converges_and_respects_floor() {
+        let mut j = Jittered::new(
+            Duration::from_millis(40.0),
+            Duration::from_millis(10.0),
+            Duration::from_millis(1.0),
+            42,
+        );
+        let n = 50_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let g = j.next_gap();
+            assert!(g.millis() >= 1.0);
+            sum += g.millis();
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 40.0).abs() < 0.3, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_mean_converges() {
+        let mut p = Poisson::new(Duration::from_millis(40.0), Duration::from_millis(0.05), 7);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| p.next_gap().millis()).sum::<f64>() / n as f64;
+        assert!((mean - 40.0).abs() < 0.5, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_is_deterministic_per_seed() {
+        let mut a = Poisson::new(Duration::from_millis(40.0), Duration::ZERO, 3);
+        let mut b = Poisson::new(Duration::from_millis(40.0), Duration::ZERO, 3);
+        for _ in 0..100 {
+            assert_eq!(a.next_gap().secs(), b.next_gap().secs());
+        }
+    }
+
+    #[test]
+    fn trace_replay_cycles() {
+        let mut t = TraceReplay::new(vec![
+            Duration::from_millis(10.0),
+            Duration::from_millis(20.0),
+        ]);
+        assert_eq!(t.next_gap().millis(), 10.0);
+        assert_eq!(t.next_gap().millis(), 20.0);
+        assert_eq!(t.next_gap().millis(), 10.0);
+        assert_eq!(t.mean().millis(), 15.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty arrival trace")]
+    fn empty_trace_rejected() {
+        TraceReplay::new(vec![]);
+    }
+
+    #[test]
+    fn trace_file_round_trip() {
+        let dir = std::env::temp_dir().join("idlewait_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("gaps.csv");
+        std::fs::write(&path, "# sensor trace\ngap_ms\n40.0\n\n55.5\n12.25\n").unwrap();
+        let mut t = TraceReplay::from_file(&path).unwrap();
+        assert_eq!(t.next_gap().millis(), 40.0);
+        assert_eq!(t.next_gap().millis(), 55.5);
+        assert_eq!(t.next_gap().millis(), 12.25);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn trace_file_rejects_garbage() {
+        let dir = std::env::temp_dir().join("idlewait_trace_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (name, content) in [
+            ("nonnum.csv", "40\nnot-a-number\n"),
+            ("negative.csv", "40\n-1\n"),
+            ("empty.csv", "# nothing here\n"),
+        ] {
+            let path = dir.join(name);
+            std::fs::write(&path, content).unwrap();
+            assert!(TraceReplay::from_file(&path).is_err(), "{name}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn build_from_spec() {
+        let p = build(
+            &ArrivalSpec::Periodic {
+                period: Duration::from_millis(40.0),
+            },
+            0,
+        );
+        assert!(p.label().starts_with("periodic"));
+        let p = build(
+            &ArrivalSpec::Poisson {
+                mean_period: Duration::from_millis(40.0),
+            },
+            0,
+        );
+        assert!(p.label().starts_with("poisson"));
+    }
+}

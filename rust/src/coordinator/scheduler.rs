@@ -1,0 +1,301 @@
+//! Multi-accelerator scheduling — the paper's stated out-of-scope case
+//! ("The underlying assumption is that the same accelerator is
+//! constantly (re)used for all inference requests. An analysis of
+//! supporting different accelerators is outside the scope of this
+//! work", §4.2) built out as a first-class coordinator feature.
+//!
+//! With several accelerators sharing one FPGA, Idle-Waiting only avoids
+//! reconfiguration while consecutive requests target the *currently
+//! loaded* accelerator; a switch always costs a full configuration
+//! phase. The scheduler therefore decides *order*: within a small
+//! reordering window (bounded by each request's deadline slack) it may
+//! batch same-accelerator requests to amortize switches.
+//!
+//! Policies:
+//! * [`Policy::Fifo`] — strict arrival order; switch whenever the next
+//!   request's accelerator differs (the naive baseline).
+//! * [`Policy::BatchBySlot`] — greedy same-slot batching inside the
+//!   window; switches once per batch.
+
+use std::collections::VecDeque;
+
+use crate::util::units::{Duration, Energy};
+
+/// A pending inference request for a named accelerator slot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlotRequest {
+    pub id: u64,
+    /// Flash slot / accelerator identity.
+    pub slot: usize,
+    /// Arrival time offset (for latency accounting).
+    pub arrival: Duration,
+    /// Latest acceptable completion (arrival + deadline slack).
+    pub deadline: Duration,
+}
+
+/// Scheduling policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Fifo,
+    BatchBySlot {
+        /// Maximum requests inspected for reordering.
+        window: usize,
+    },
+}
+
+/// One scheduling decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dispatch {
+    pub request: SlotRequest,
+    /// True if serving this request requires loading its accelerator.
+    pub reconfigure: bool,
+}
+
+/// Outcome statistics for a scheduling run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SchedStats {
+    pub dispatched: u64,
+    pub reconfigurations: u64,
+    pub reordered: u64,
+    pub deadline_violations: u64,
+}
+
+/// The multi-accelerator scheduler.
+#[derive(Debug)]
+pub struct MultiAccelScheduler {
+    policy: Policy,
+    queue: VecDeque<SlotRequest>,
+    /// Accelerator currently resident in the FPGA fabric (None = cold).
+    loaded: Option<usize>,
+    /// Configuration-phase duration (per switch).
+    config_time: Duration,
+    /// Per-item active latency (excluding configuration).
+    item_latency: Duration,
+    pub stats: SchedStats,
+    /// Virtual clock for deadline accounting.
+    now: Duration,
+}
+
+impl MultiAccelScheduler {
+    pub fn new(policy: Policy, config_time: Duration, item_latency: Duration) -> Self {
+        MultiAccelScheduler {
+            policy,
+            queue: VecDeque::new(),
+            loaded: None,
+            config_time,
+            item_latency,
+            stats: SchedStats::default(),
+            now: Duration::ZERO,
+        }
+    }
+
+    pub fn loaded_slot(&self) -> Option<usize> {
+        self.loaded
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Enqueue a request.
+    pub fn submit(&mut self, request: SlotRequest) {
+        debug_assert!(request.deadline.secs() >= request.arrival.secs());
+        self.queue.push_back(request);
+    }
+
+    /// Pick the next request according to the policy. Returns `None` when
+    /// the queue is empty.
+    pub fn next(&mut self) -> Option<Dispatch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let pick_index = match self.policy {
+            Policy::Fifo => 0,
+            Policy::BatchBySlot { window } => self.pick_batched(window),
+        };
+        let request = self.queue.remove(pick_index).expect("index in range");
+        if pick_index != 0 {
+            self.stats.reordered += 1;
+        }
+        let reconfigure = self.loaded != Some(request.slot);
+        if reconfigure {
+            self.loaded = Some(request.slot);
+            self.stats.reconfigurations += 1;
+            self.now += self.config_time;
+        }
+        self.now = self.now.max(request.arrival) + self.item_latency;
+        if self.now > request.deadline {
+            self.stats.deadline_violations += 1;
+        }
+        self.stats.dispatched += 1;
+        Some(Dispatch {
+            request,
+            reconfigure,
+        })
+    }
+
+    /// Greedy batching: prefer the earliest request using the loaded
+    /// slot, but never jump past a request whose deadline would be
+    /// violated by the extra wait (one item latency per skip, plus the
+    /// eventual switch).
+    fn pick_batched(&self, window: usize) -> usize {
+        let Some(loaded) = self.loaded else {
+            return 0; // cold fabric: any choice reconfigures; keep order
+        };
+        let horizon = window.min(self.queue.len());
+        let mut candidate = None;
+        for i in 0..horizon {
+            if self.queue[i].slot == loaded {
+                candidate = Some(i);
+                break;
+            }
+        }
+        let Some(i) = candidate else { return 0 };
+        // skipping queue[0..i] delays each by ≈ i item latencies; veto the
+        // reorder if any skipped request would blow its deadline
+        let delay = self.item_latency * i as f64 + self.config_time;
+        for j in 0..i {
+            let projected = self.now.max(self.queue[j].arrival) + delay + self.item_latency;
+            if projected > self.queue[j].deadline {
+                return 0;
+            }
+        }
+        i
+    }
+
+    /// Energy attributable to reconfigurations so far.
+    pub fn reconfiguration_energy(&self, per_config: Energy) -> Energy {
+        per_config * self.stats.reconfigurations as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, slot: usize, arrival_ms: f64, slack_ms: f64) -> SlotRequest {
+        SlotRequest {
+            id,
+            slot,
+            arrival: Duration::from_millis(arrival_ms),
+            deadline: Duration::from_millis(arrival_ms + slack_ms),
+        }
+    }
+
+    fn scheduler(policy: Policy) -> MultiAccelScheduler {
+        MultiAccelScheduler::new(
+            policy,
+            Duration::from_millis(36.15),
+            Duration::from_millis(0.04),
+        )
+    }
+
+    #[test]
+    fn fifo_switches_on_every_alternation() {
+        let mut s = scheduler(Policy::Fifo);
+        for i in 0..10 {
+            s.submit(req(i, (i % 2) as usize, i as f64 * 40.0, 1000.0));
+        }
+        let mut order = Vec::new();
+        while let Some(d) = s.next() {
+            order.push(d.request.id);
+        }
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+        assert_eq!(s.stats.reconfigurations, 10); // A,B,A,B,... every one
+        assert_eq!(s.stats.reordered, 0);
+    }
+
+    #[test]
+    fn batching_amortizes_switches() {
+        let mut s = scheduler(Policy::BatchBySlot { window: 8 });
+        for i in 0..10 {
+            s.submit(req(i, (i % 2) as usize, 0.0, 10_000.0));
+        }
+        let mut dispatched = Vec::new();
+        while let Some(d) = s.next() {
+            dispatched.push((d.request.slot, d.reconfigure));
+        }
+        assert_eq!(dispatched.len(), 10);
+        // all slot-0 requests batch first, then all slot-1 → 2 configs
+        assert_eq!(s.stats.reconfigurations, 2, "{dispatched:?}");
+        assert!(s.stats.reordered > 0);
+    }
+
+    #[test]
+    fn batching_respects_deadlines() {
+        let mut s = scheduler(Policy::BatchBySlot { window: 8 });
+        // load slot 0 first
+        s.submit(req(0, 0, 0.0, 1000.0));
+        assert!(s.next().unwrap().reconfigure);
+        // a tight-deadline slot-1 request followed by slot-0 fillers:
+        // skipping it (delay ≈ config 36.15 ms) would violate its 5 ms slack
+        s.submit(req(1, 1, 40.0, 5.0));
+        s.submit(req(2, 0, 41.0, 10_000.0));
+        let d = s.next().unwrap();
+        assert_eq!(d.request.id, 1, "tight deadline must not be skipped");
+    }
+
+    #[test]
+    fn single_slot_never_reconfigures_after_first() {
+        let mut s = scheduler(Policy::BatchBySlot { window: 4 });
+        for i in 0..20 {
+            s.submit(req(i, 0, i as f64 * 40.0, 1000.0));
+        }
+        while s.next().is_some() {}
+        assert_eq!(s.stats.reconfigurations, 1);
+        assert_eq!(s.stats.deadline_violations, 0);
+    }
+
+    #[test]
+    fn reconfiguration_energy_accounting() {
+        let mut s = scheduler(Policy::Fifo);
+        for i in 0..4 {
+            s.submit(req(i, i as usize % 2, 0.0, 10_000.0));
+        }
+        while s.next().is_some() {}
+        let e = s.reconfiguration_energy(Energy::from_millijoules(11.85));
+        assert!((e.millijoules() - 4.0 * 11.85).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_queue_returns_none() {
+        let mut s = scheduler(Policy::Fifo);
+        assert!(s.next().is_none());
+        assert_eq!(s.stats.dispatched, 0);
+    }
+
+    #[test]
+    fn deadline_violation_detected_under_fifo_thrash() {
+        let mut s = scheduler(Policy::Fifo);
+        // alternating slots with only 10 ms slack: each 36.15 ms switch
+        // blows the deadline
+        for i in 0..6 {
+            s.submit(req(i, (i % 2) as usize, i as f64 * 1.0, 10.0));
+        }
+        while s.next().is_some() {}
+        assert!(s.stats.deadline_violations > 0);
+    }
+
+    #[test]
+    fn batching_beats_fifo_on_switch_count() {
+        let run = |policy| {
+            let mut s = scheduler(policy);
+            let mut seq = 0u64;
+            // bursty pattern: AABABBAB... seeded deterministic
+            let mut rng = crate::util::rng::Xoshiro256ss::new(99);
+            for i in 0..200 {
+                let slot = if rng.bernoulli(0.5) { 0 } else { 1 };
+                s.submit(req(seq, slot, i as f64 * 40.0, 40_000.0));
+                seq += 1;
+            }
+            while s.next().is_some() {}
+            s.stats.reconfigurations
+        };
+        let fifo = run(Policy::Fifo);
+        let batched = run(Policy::BatchBySlot { window: 16 });
+        assert!(
+            batched < fifo,
+            "batching ({batched}) must beat fifo ({fifo})"
+        );
+    }
+}

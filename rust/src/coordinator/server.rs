@@ -1,0 +1,254 @@
+//! The duty-cycle serving loop — the end-to-end composition of all three
+//! layers.
+//!
+//! Per request (paper Fig 1):
+//! 1. The MCU (request source) wakes with a fresh sensor window.
+//! 2. The coordinator drives the simulated board through the strategy's
+//!    phases (configuration if needed, data loading, inference window,
+//!    data offloading) — this is the *energy* ledger.
+//! 3. The *computation* of the inference phase is real: the AOT-compiled
+//!    LSTM HLO executes on the PJRT CPU client and its forecast is
+//!    returned to the caller.
+//!
+//! Simulated time (duty-cycle energy accounting at Table 2 timings) and
+//! host time (actual PJRT latency) are tracked separately: the host CPU
+//! stands in for the FPGA fabric, so its latency is a functional check
+//! (must fit the request period), not an energy input.
+
+use anyhow::Result;
+
+use crate::config::loader::SimConfig;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::requests::ArrivalProcess;
+use crate::device::board::Board;
+use crate::device::fpga::FpgaState;
+use crate::runtime::inference::{LstmRuntime, Variant};
+use crate::strategies::simulate::item_phases;
+use crate::strategies::strategy::{GapAction, Strategy};
+use crate::util::units::Duration;
+
+/// One served request's outcome.
+#[derive(Debug, Clone, Copy)]
+pub struct Served {
+    pub request_id: u64,
+    pub forecast: f32,
+    pub host_latency: Duration,
+}
+
+/// Configuration for a serving run.
+pub struct ServerConfig<'a> {
+    pub sim: &'a SimConfig,
+    pub variant: Variant,
+    /// Stop after this many requests (the budget still applies).
+    pub max_requests: u64,
+}
+
+/// Outcome of a serving run.
+pub struct ServeReport {
+    pub metrics: Metrics,
+    pub served: Vec<Served>,
+    pub configurations: u64,
+    /// True if the run ended because the battery budget was exhausted.
+    pub budget_exhausted: bool,
+}
+
+/// A rolling sensor-data source: synthesizes the next window per request
+/// (the MCU "gathering data" between requests).
+pub struct SensorSource {
+    window: usize,
+    channels: usize,
+    t: f64,
+    rng: crate::util::rng::Xoshiro256ss,
+}
+
+impl SensorSource {
+    pub fn new(window: usize, channels: usize, seed: u64) -> SensorSource {
+        SensorSource {
+            window,
+            channels,
+            t: 0.0,
+            rng: crate::util::rng::Xoshiro256ss::new(seed),
+        }
+    }
+
+    /// Next (window × channels) row-major buffer: superposed sines plus
+    /// noise, advancing in time — the synthetic stand-in for the paper's
+    /// periodically-gathered sensor data.
+    pub fn next_window(&mut self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.window * self.channels);
+        for r in 0..self.window {
+            let t = self.t + r as f64;
+            for ch in 0..self.channels {
+                let c = ch as f64;
+                let base = (0.19 * t + 0.7 * c).sin() + 0.4 * (0.067 * t * (c + 1.0)).sin();
+                let noise = 0.05 * self.rng.normal(0.0, 1.0);
+                out.push((base + noise) as f32);
+            }
+        }
+        self.t += self.window as f64;
+        out
+    }
+}
+
+/// Run the duty-cycle server: real inference, simulated energy.
+pub fn serve(
+    cfg: &ServerConfig<'_>,
+    runtime: &LstmRuntime,
+    strategy: &dyn Strategy,
+    arrivals: &mut dyn ArrivalProcess,
+) -> Result<ServeReport> {
+    let sim = cfg.sim;
+    let mut board = Board::paper_setup(sim.platform.fpga, sim.platform.spi.compressed);
+    let mut metrics = Metrics::new();
+    let mut served = Vec::new();
+    let (rows, cols) = runtime.window_shape();
+    let mut sensor = SensorSource::new(rows, cols, sim.workload.seed ^ 0x5EED);
+    let phases = item_phases(&sim.item);
+    let mut budget_exhausted = false;
+
+    log::info!(
+        "serving: strategy={} arrivals={} variant={:?} max={}",
+        strategy.label(),
+        arrivals.label(),
+        cfg.variant,
+        cfg.max_requests
+    );
+
+    for request_id in 0..cfg.max_requests {
+        // 1. configure if needed (energy)
+        if !matches!(board.fpga.state, FpgaState::Idle(_) | FpgaState::Busy) {
+            if board
+                .power_on_and_configure("lstm", sim.platform.spi)
+                .is_err()
+            {
+                budget_exhausted = true;
+                break;
+            }
+        }
+        // 2. energy for the active phases (Table 2 timings)
+        if board.run_item_phases(&phases).is_err() {
+            budget_exhausted = true;
+            break;
+        }
+        // 3. real compute on the PJRT runtime
+        let window = sensor.next_window();
+        let result = runtime.forecast(&window, cfg.variant)?;
+        metrics.record_request(result.latency, arrivals.mean());
+        served.push(Served {
+            request_id,
+            forecast: result.forecast,
+            host_latency: result.latency,
+        });
+
+        // 4. gap handling per strategy
+        let gap = arrivals.next_gap();
+        let busy = sim.item.latency_without_config();
+        let idle_time = if gap.secs() > busy.secs() {
+            gap - busy
+        } else {
+            Duration::ZERO
+        };
+        let ran_dry = match strategy.gap_action(gap) {
+            GapAction::PowerOff => board.off_for(idle_time, false).is_err(),
+            GapAction::Idle(saving) => board.idle_for(saving, idle_time).is_err(),
+        };
+        if ran_dry {
+            budget_exhausted = true;
+            break;
+        }
+    }
+
+    metrics.sim_energy = board.fpga_energy;
+    metrics.sim_elapsed = board.now.as_duration();
+    Ok(ServeReport {
+        metrics,
+        served,
+        configurations: board.fpga.configurations,
+        budget_exhausted,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_default;
+    use crate::coordinator::requests::Periodic;
+    use crate::strategies::strategy::{IdleWaiting, OnOff};
+
+    fn runtime() -> Option<std::rc::Rc<LstmRuntime>> {
+        let dir = crate::runtime::artifact::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(crate::runtime::pool::runtime(dir).unwrap())
+    }
+
+    #[test]
+    fn serves_requests_with_real_inference() {
+        let Some(rt) = runtime() else { return };
+        let sim = paper_default();
+        let cfg = ServerConfig {
+            sim: &sim,
+            variant: Variant::Forecast,
+            max_requests: 25,
+        };
+        let mut arr = Periodic {
+            period: Duration::from_millis(40.0),
+        };
+        let report = serve(&cfg, &rt, &IdleWaiting::baseline(), &mut arr).unwrap();
+        assert_eq!(report.metrics.requests, 25);
+        assert_eq!(report.configurations, 1);
+        assert!(!report.budget_exhausted);
+        // forecasts vary across windows and are finite
+        let fs: Vec<f32> = report.served.iter().map(|s| s.forecast).collect();
+        assert!(fs.iter().all(|f| f.is_finite()));
+        assert!(fs.windows(2).any(|w| w[0] != w[1]));
+        // energy ledger: init + 25 items + 25 gaps (the server keeps
+        // idling after the last request, unlike Eq 2's n−1 gaps)
+        let e = report.metrics.sim_energy.millijoules();
+        assert!((e - (11.98 + 25.0 * 0.0065 + 25.0 * 5.3666)).abs() < 0.5, "e={e}");
+    }
+
+    #[test]
+    fn onoff_reconfigures_every_request() {
+        let Some(rt) = runtime() else { return };
+        let sim = paper_default();
+        let cfg = ServerConfig {
+            sim: &sim,
+            variant: Variant::Forecast,
+            max_requests: 10,
+        };
+        let mut arr = Periodic {
+            period: Duration::from_millis(40.0),
+        };
+        let report = serve(&cfg, &rt, &OnOff, &mut arr).unwrap();
+        assert_eq!(report.configurations, 10);
+        assert!(report.metrics.sim_energy.millijoules() > 10.0 * 11.9);
+    }
+
+    #[test]
+    fn int8_variant_serves() {
+        let Some(rt) = runtime() else { return };
+        let sim = paper_default();
+        let cfg = ServerConfig {
+            sim: &sim,
+            variant: Variant::ForecastInt8,
+            max_requests: 5,
+        };
+        let mut arr = Periodic {
+            period: Duration::from_millis(40.0),
+        };
+        let report = serve(&cfg, &rt, &IdleWaiting::method12(), &mut arr).unwrap();
+        assert_eq!(report.metrics.requests, 5);
+    }
+
+    #[test]
+    fn sensor_windows_advance() {
+        let mut s = SensorSource::new(24, 6, 1);
+        let a = s.next_window();
+        let b = s.next_window();
+        assert_eq!(a.len(), 144);
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,178 @@
+//! Synthetic configuration bitstreams.
+//!
+//! The paper generates real Vivado bitstreams for its LSTM accelerator; we
+//! cannot, so this module synthesizes a *structurally faithful* stand-in:
+//! a header plus a sequence of 7-series configuration frames (101×32-bit
+//! words, UG470), of which a design-dependent subset is "occupied"
+//! (incompressible pseudo-random content) and the rest are empty (all
+//! zeros). The frame-dedup compressor in [`crate::device::compression`]
+//! then produces compression ratios that emerge from the same mechanism
+//! the 7-series compressed-bitstream option uses (multi-frame writes for
+//! identical frames), rather than from a hardcoded ratio.
+//!
+//! Occupancy for the paper's LSTM h=20 design is calibrated in
+//! `device::calib` so that loading times reproduce Fig 7 / §5.2.
+
+use crate::config::schema::FpgaModel;
+use crate::device::calib::{design_occupied_frames, FRAME_BITS};
+use crate::util::rng::Xoshiro256ss;
+
+/// One configuration frame: occupied frames carry a content hash standing
+/// in for their 3232 bits of data; empty frames are all-zero. We store a
+/// 64-bit digest, not the raw words — the simulator only needs identity
+/// (for dedup) and size (for transfer timing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Frame {
+    Empty,
+    Occupied { digest: u64 },
+}
+
+impl Frame {
+    pub fn bits(&self) -> u64 {
+        FRAME_BITS
+    }
+
+    pub fn is_empty(&self) -> bool {
+        matches!(self, Frame::Empty)
+    }
+}
+
+/// A synthetic bitstream: header + frames.
+#[derive(Debug, Clone)]
+pub struct Bitstream {
+    pub model: FpgaModel,
+    pub header_bits: u64,
+    pub frames: Vec<Frame>,
+}
+
+impl Bitstream {
+    /// Synthesize the bitstream for a design with `occupied` non-empty
+    /// frames on `model`, deterministically from `seed`.
+    ///
+    /// The frame count and header size are derived from the device's total
+    /// bitstream length (UG470 Table 1-1): `frames = floor(bits / 3232)`,
+    /// remainder becomes the header (sync word, command writes).
+    pub fn synthesize(model: FpgaModel, occupied: u64, seed: u64) -> Bitstream {
+        let total_bits = model.bitstream_bits();
+        let n_frames = total_bits / FRAME_BITS;
+        let header_bits = total_bits - n_frames * FRAME_BITS;
+        assert!(
+            occupied <= n_frames,
+            "design occupies {occupied} frames but {model} only has {n_frames}"
+        );
+        // Spread occupied frames deterministically across the address space
+        // (real designs cluster by clock region; for dedup only the counts
+        // matter, but spreading exercises the compressor's run handling).
+        let mut rng = Xoshiro256ss::new(seed ^ 0xB175_7EA4);
+        let mut index: Vec<u64> = (0..n_frames).collect();
+        rng.shuffle(&mut index);
+        let occupied_set: std::collections::HashSet<u64> =
+            index.into_iter().take(occupied as usize).collect();
+        let frames = (0..n_frames)
+            .map(|i| {
+                if occupied_set.contains(&i) {
+                    // unique digest per frame → incompressible by dedup
+                    Frame::Occupied {
+                        digest: rng.next_u64_raw() | 1,
+                    }
+                } else {
+                    Frame::Empty
+                }
+            })
+            .collect();
+        Bitstream {
+            model,
+            header_bits,
+            frames,
+        }
+    }
+
+    /// The paper's LSTM hidden-size-20 accelerator bitstream for `model`.
+    pub fn lstm_accelerator(model: FpgaModel) -> Bitstream {
+        Bitstream::synthesize(model, design_occupied_frames(model), 0x15D4)
+    }
+
+    /// Total (uncompressed) length in bits — matches UG470 for the device.
+    pub fn total_bits(&self) -> u64 {
+        self.header_bits + self.frames.len() as u64 * FRAME_BITS
+    }
+
+    pub fn n_frames(&self) -> usize {
+        self.frames.len()
+    }
+
+    pub fn occupied_frames(&self) -> usize {
+        self.frames.iter().filter(|f| !f.is_empty()).count()
+    }
+
+    /// Fraction of frames carrying design content.
+    pub fn occupancy(&self) -> f64 {
+        self.occupied_frames() as f64 / self.n_frames() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_bits_matches_ug470() {
+        for model in [FpgaModel::Xc7s15, FpgaModel::Xc7s25] {
+            let bs = Bitstream::lstm_accelerator(model);
+            assert_eq!(bs.total_bits(), model.bitstream_bits());
+        }
+    }
+
+    #[test]
+    fn frame_counts() {
+        let bs15 = Bitstream::lstm_accelerator(FpgaModel::Xc7s15);
+        assert_eq!(bs15.n_frames(), (4_310_752 / 3232) as usize); // 1333
+        assert_eq!(bs15.occupied_frames(), 704);
+        let bs25 = Bitstream::lstm_accelerator(FpgaModel::Xc7s25);
+        assert_eq!(bs25.n_frames(), (9_934_432 / 3232) as usize); // 3073
+        assert_eq!(bs25.occupied_frames(), 794);
+    }
+
+    #[test]
+    fn synthesis_is_deterministic() {
+        let a = Bitstream::synthesize(FpgaModel::Xc7s15, 100, 7);
+        let b = Bitstream::synthesize(FpgaModel::Xc7s15, 100, 7);
+        assert_eq!(a.frames, b.frames);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = Bitstream::synthesize(FpgaModel::Xc7s15, 100, 7);
+        let b = Bitstream::synthesize(FpgaModel::Xc7s15, 100, 8);
+        assert_ne!(a.frames, b.frames);
+    }
+
+    #[test]
+    fn occupied_digests_are_unique() {
+        let bs = Bitstream::lstm_accelerator(FpgaModel::Xc7s15);
+        let mut digests: Vec<u64> = bs
+            .frames
+            .iter()
+            .filter_map(|f| match f {
+                Frame::Occupied { digest } => Some(*digest),
+                Frame::Empty => None,
+            })
+            .collect();
+        let n = digests.len();
+        digests.sort_unstable();
+        digests.dedup();
+        assert_eq!(digests.len(), n, "digest collision would break dedup stats");
+    }
+
+    #[test]
+    #[should_panic(expected = "only has")]
+    fn over_occupancy_panics() {
+        Bitstream::synthesize(FpgaModel::Xc7s15, 10_000, 0);
+    }
+
+    #[test]
+    fn occupancy_fraction() {
+        let bs = Bitstream::lstm_accelerator(FpgaModel::Xc7s15);
+        assert!((bs.occupancy() - 704.0 / 1333.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,248 @@
+//! Calibration constants for the device substrate.
+//!
+//! Every constant here is traceable either to the paper's published
+//! measurements, to the Xilinx UG470 configuration guide, or to a fit
+//! against the paper's published endpoints. DESIGN.md §6 derives each fit;
+//! the unit tests below re-derive the paper's headline numbers from them,
+//! so a drive-by edit of any constant fails the build.
+//!
+//! Layout of the idle-power decomposition (Table 3):
+//!
+//! ```text
+//!   134.3 mW baseline idle
+//!   ├── 98.8 mW clock reference oscillator   (gated by Method 1)
+//!   ├──  1.3 mW FPGA IO standby              (gated by Method 1)
+//!   ├── 14.0 mW VCCINT static @ 1.0 V        (scaled by Method 2)
+//!   ├──  5.0 mW VCCAUX static @ 1.8 V        (scaled by Method 2)
+//!   └── 15.2 mW flash standby                (unavoidable on this board)
+//! ```
+//!
+//! Method 2 undervolts VCCINT 1.0→0.75 V and VCCAUX 1.8→1.5 V; static
+//! (leakage-dominated) power scales as (V/V_nom)^LEAKAGE_EXP with
+//! LEAKAGE_EXP = 3: leakage falls super-quadratically with voltage, and
+//! the cubic fit reproduces Table 3's 24.0 mW exactly.
+
+use crate::config::schema::FpgaModel;
+use crate::util::units::{Duration, Power, Voltage};
+
+// ---------------------------------------------------------------------------
+// Configuration-phase stages (paper §4.1 / Fig 4)
+// ---------------------------------------------------------------------------
+
+/// Setup-stage duration after all rails are up (paper: 27 ms, model-
+/// dependent and not optimizable). Includes the memory-clear sub-stage.
+pub const SETUP_TIME: Duration = Duration(27.0e-3);
+
+/// Setup-stage power draw (paper §5.2: "consistent ~288 mW").
+pub const SETUP_POWER: Power = Power(288.0e-3);
+
+/// Fig 4 sub-stage split of the 27 ms setup (for stage-level reporting):
+/// power-on-reset, INIT/clear-configuration-memory, mode-sample remainder.
+pub const SETUP_SUBSTAGES: [(&str, Duration); 3] = [
+    ("power_on_reset", Duration(2.0e-3)),
+    ("clear_config_memory", Duration(23.0e-3)),
+    ("mode_sample", Duration(2.0e-3)),
+];
+
+/// Startup stage (GTS release, DONE high): sub-ms, folded into loading end
+/// in the paper's accounting; kept explicit but zero-cost here.
+pub const STARTUP_TIME: Duration = Duration(0.0);
+
+// ---------------------------------------------------------------------------
+// SPI bitstream loading (fits to Fig 7 endpoints; DESIGN.md §6)
+// ---------------------------------------------------------------------------
+
+/// SPI protocol overhead (read command, address, dummy cycles, resync
+/// words) as a fraction of raw transfer time. Fitted: the worst setting
+/// (Single/3 MHz/uncompressed) must take 41.4× the optimal 36.145 ms.
+pub const SPI_OVERHEAD: f64 = 0.02275;
+
+/// Loading-stage static power floor while the config engine runs, per
+/// device (fits: 318.3 mW at (1,3,off) and 445.7 mW at (4,66,on) for the
+/// XC7S15; 538.7 mW optimal-setting aggregate for the XC7S25).
+pub fn loading_static_power(model: FpgaModel) -> Power {
+    match model {
+        FpgaModel::Xc7s15 => Power::from_milliwatts(317.03),
+        FpgaModel::Xc7s25 => Power::from_milliwatts(410.0),
+    }
+}
+
+/// Dynamic SPI switching power per (MHz × lane): fitted to the same two
+/// XC7S15 endpoints.
+pub const SPI_DYN_MW_PER_MHZ_LANE: f64 = 0.42385;
+
+/// Extra switching activity on the SPI data lines when the bitstream is
+/// compressed (paper §5.2: "compression led to higher power ... likely due
+/// to more switching activities").
+pub const COMPRESSED_ACTIVITY: f64 = 1.15;
+pub const UNCOMPRESSED_ACTIVITY: f64 = 1.0;
+
+// ---------------------------------------------------------------------------
+// Synthetic bitstream / frame model (UG470 + fit)
+// ---------------------------------------------------------------------------
+
+/// One 7-series configuration frame: 101 words × 32 bits.
+pub const FRAME_BITS: u64 = 101 * 32;
+
+/// MFWR (multi-frame write) command overhead per deduplicated frame:
+/// 4 words (write-to-FAR + MFWR + data + NOP).
+pub const MFWR_CMD_BITS: u64 = 4 * 32;
+
+/// Occupied (non-empty, incompressible) frames for the paper's LSTM
+/// hidden-size-20 accelerator, per device. Fitted so the frame-dedup
+/// compressor reproduces the loading times implied by Fig 7 / §5.2
+/// (XC7S15: 36.145 ms total; XC7S25: 38.09 ms total at optimal settings).
+pub fn design_occupied_frames(model: FpgaModel) -> u64 {
+    match model {
+        FpgaModel::Xc7s15 => 704,
+        FpgaModel::Xc7s25 => 794,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Idle-power decomposition (Table 3; DESIGN.md §6)
+// ---------------------------------------------------------------------------
+
+/// Clock-reference oscillator draw (Table 2 footnote: clock reference +
+/// flash = 114 mW ⇒ 114 − 15.2 = 98.8 mW).
+pub const CLKREF_POWER: Power = Power(98.8e-3);
+
+/// FPGA IO-bank standby draw (gated by Method 1 along with the clock ref;
+/// Method 1 saves 100.1 mW total ⇒ 100.1 − 98.8 = 1.3 mW).
+pub const IO_STANDBY_POWER: Power = Power(1.3e-3);
+
+/// VCCINT static (leakage) draw at the nominal 1.0 V.
+pub const VCCINT_STATIC_NOM: Power = Power(14.0e-3);
+
+/// VCCAUX static draw at the nominal 1.8 V.
+pub const VCCAUX_STATIC_NOM: Power = Power(5.0e-3);
+
+/// Flash standby draw — the floor the paper calls out as the limit of its
+/// optimization (§5.4).
+pub const FLASH_STANDBY_POWER: Power = Power(15.2e-3);
+
+/// Leakage-vs-voltage exponent for undervolted static power.
+pub const LEAKAGE_EXP: f64 = 3.0;
+
+/// Nominal and retention (Method 2) rail voltages.
+pub const VCCINT_NOM: Voltage = Voltage(1.0);
+pub const VCCINT_RETENTION: Voltage = Voltage(0.75);
+pub const VCCAUX_NOM: Voltage = Voltage(1.8);
+pub const VCCAUX_RETENTION: Voltage = Voltage(1.5);
+
+// ---------------------------------------------------------------------------
+// On-Off power-cycle transient (DESIGN.md §6)
+// ---------------------------------------------------------------------------
+
+/// Energy charged once per power-on (rail ramp + decoupling-capacitor
+/// inrush). The paper's published n_max = 346,073 under 4147 J implies
+/// 0.1244 mJ per item above the Table 2 phase sum; the same constant
+/// independently reproduces both published crossovers (89.21 / 499.06 ms).
+pub const POWER_ON_TRANSIENT_MJ: f64 = 0.1244;
+
+// ---------------------------------------------------------------------------
+// MCU (RP2040) and battery
+// ---------------------------------------------------------------------------
+
+/// RP2040 sleep current (paper §2: 180 µA) at the 3.3 V MCU rail.
+pub const MCU_SLEEP_CURRENT_UA: f64 = 180.0;
+pub const MCU_RAIL: Voltage = Voltage(3.3);
+
+/// RP2040 active draw while coordinating a request (datasheet-typical
+/// ~20 mA at 3.3 V; brief, not part of the paper's FPGA-side budget).
+pub const MCU_ACTIVE_POWER: Power = Power(66.0e-3);
+
+/// Battery budget (paper §2: 320 mAh LiPo ≈ 4147 J).
+pub const BATTERY_BUDGET_J: f64 = 4147.0;
+pub const BATTERY_CAPACITY_MAH: f64 = 320.0;
+
+/// PAC1934 sampling rate (paper §2: 1024 samples/s per rail).
+pub const PAC1934_HZ: f64 = 1024.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::Energy;
+
+    #[test]
+    fn idle_decomposition_sums_to_baseline() {
+        let total = CLKREF_POWER
+            + IO_STANDBY_POWER
+            + VCCINT_STATIC_NOM
+            + VCCAUX_STATIC_NOM
+            + FLASH_STANDBY_POWER;
+        assert!((total.milliwatts() - 134.3).abs() < 1e-9, "{}", total.milliwatts());
+    }
+
+    #[test]
+    fn method1_reproduces_table3() {
+        // Gate clkref + IO: 134.3 − (98.8 + 1.3) = 34.2 mW
+        let m1 = VCCINT_STATIC_NOM + VCCAUX_STATIC_NOM + FLASH_STANDBY_POWER;
+        assert!((m1.milliwatts() - 34.2).abs() < 1e-9);
+        // Paper says 74.38%; its rounded Table 3 powers give 74.53% —
+        // the authors evidently divided unrounded measurements. We assert
+        // against the rounded-consistent value with a note in EXPERIMENTS.md.
+        let saved = 1.0 - m1.milliwatts() / 134.3;
+        assert!((saved - 0.7453).abs() < 2e-3, "saved={saved}");
+    }
+
+    #[test]
+    fn method12_reproduces_table3() {
+        let scale_int = (VCCINT_RETENTION.volts() / VCCINT_NOM.volts()).powf(LEAKAGE_EXP);
+        let scale_aux = (VCCAUX_RETENTION.volts() / VCCAUX_NOM.volts()).powf(LEAKAGE_EXP);
+        let m12 = VCCINT_STATIC_NOM * scale_int
+            + VCCAUX_STATIC_NOM * scale_aux
+            + FLASH_STANDBY_POWER;
+        assert!((m12.milliwatts() - 24.0).abs() < 0.05, "{}", m12.milliwatts());
+        // Paper says 81.98%; rounded Table 3 powers give 82.13% (same
+        // rounding effect as Method 1).
+        let saved = 1.0 - m12.milliwatts() / 134.3;
+        assert!((saved - 0.8213).abs() < 2e-3, "saved={saved}");
+    }
+
+    #[test]
+    fn clkref_plus_flash_is_table2_footnote() {
+        // Table 2: inference power "includes the 114 mW for clock reference
+        // and flash chip"
+        let p = CLKREF_POWER + FLASH_STANDBY_POWER;
+        assert!((p.milliwatts() - 114.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn setup_substages_sum_to_setup_time() {
+        let total: Duration = SETUP_SUBSTAGES
+            .iter()
+            .fold(Duration::ZERO, |acc, (_, d)| acc + *d);
+        assert!((total.secs() - SETUP_TIME.secs()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn setup_energy_near_papers_7mj_floor() {
+        // "the configuration phase can only be reduced from 11.85 mJ to 7 mJ"
+        let e: Energy = SETUP_POWER * SETUP_TIME;
+        assert!((e.millijoules() - 7.776).abs() < 1e-9);
+    }
+
+    #[test]
+    fn loading_power_fits_published_endpoints() {
+        // worst: single SPI, 3 MHz, uncompressed → ≈318.3 mW
+        let worst = loading_static_power(FpgaModel::Xc7s15).milliwatts()
+            + SPI_DYN_MW_PER_MHZ_LANE * 1.0 * 3.0 * UNCOMPRESSED_ACTIVITY;
+        assert!((worst - 318.3).abs() < 0.1, "worst={worst}");
+        // optimal: quad SPI, 66 MHz, compressed → ≈445.7 mW
+        let opt = loading_static_power(FpgaModel::Xc7s15).milliwatts()
+            + SPI_DYN_MW_PER_MHZ_LANE * 4.0 * 66.0 * COMPRESSED_ACTIVITY;
+        assert!((opt - 445.7).abs() < 0.2, "opt={opt}");
+    }
+
+    #[test]
+    fn battery_budget_matches_paper() {
+        assert_eq!(BATTERY_BUDGET_J, 4147.0);
+    }
+
+    #[test]
+    fn mcu_sleep_power_sub_milliwatt() {
+        let p = MCU_RAIL * crate::util::units::Current::from_microamps(MCU_SLEEP_CURRENT_UA);
+        assert!((p.milliwatts() - 0.594).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,207 @@
+//! The FPGA configuration finite-state machine (paper Fig 4).
+//!
+//! Stages on power-up of an SRAM FPGA:
+//!
+//! ```text
+//! Power-On → Setup (POR, clear configuration memory, mode sample; 27 ms,
+//!            model-dependent, not optimizable)
+//!          → Load Configuration Data (the stage Experiment 1 optimizes:
+//!            SPI buswidth × clock frequency × compression)
+//!          → Startup (GTS release, DONE; sub-ms, folded per the paper)
+//! ```
+//!
+//! [`ConfigProfile::compute`] produces the per-stage time/power/energy
+//! breakdown for a given device, SPI setting and stored image — the exact
+//! quantity Fig 7 plots in its three columns (configuration phase, Setup
+//! stage, Bitstream Loading stage).
+
+use crate::config::schema::{FpgaModel, SpiConfig};
+use crate::device::calib::{SETUP_POWER, SETUP_SUBSTAGES, SETUP_TIME, STARTUP_TIME};
+use crate::device::flash::StoredImage;
+use crate::device::spi::{loading_power, transfer_time};
+use crate::util::units::{Duration, Energy, Power};
+
+/// One stage of the configuration phase.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stage {
+    pub name: &'static str,
+    pub time: Duration,
+    pub power: Power,
+}
+
+impl Stage {
+    pub fn energy(&self) -> Energy {
+        self.power * self.time
+    }
+}
+
+/// Complete per-stage profile of one configuration phase.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfigProfile {
+    pub model: FpgaModel,
+    pub spi: SpiConfig,
+    pub stages: Vec<Stage>,
+}
+
+impl ConfigProfile {
+    /// Compute the profile for loading `image` on `model` through `spi`.
+    pub fn compute(model: FpgaModel, spi: SpiConfig, image: &StoredImage) -> ConfigProfile {
+        let bits = image.stream_bits();
+        let stages = vec![
+            Stage {
+                name: "setup",
+                time: SETUP_TIME,
+                power: SETUP_POWER,
+            },
+            Stage {
+                name: "bitstream_loading",
+                time: transfer_time(&spi, bits),
+                power: loading_power(model, &spi),
+            },
+            Stage {
+                name: "startup",
+                time: STARTUP_TIME,
+                power: SETUP_POWER, // same rail state; zero-duration anyway
+            },
+        ];
+        ConfigProfile { model, spi, stages }
+    }
+
+    pub fn stage(&self, name: &str) -> &Stage {
+        self.stages
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("no stage named '{name}'"))
+    }
+
+    pub fn setup(&self) -> &Stage {
+        self.stage("setup")
+    }
+
+    pub fn loading(&self) -> &Stage {
+        self.stage("bitstream_loading")
+    }
+
+    /// Total configuration-phase time (the paper's T_config).
+    pub fn total_time(&self) -> Duration {
+        self.stages
+            .iter()
+            .fold(Duration::ZERO, |acc, s| acc + s.time)
+    }
+
+    /// Total configuration-phase energy (the paper's E_config).
+    pub fn total_energy(&self) -> Energy {
+        self.stages.iter().map(|s| s.energy()).sum()
+    }
+
+    /// Time-weighted average power over the configuration phase — the
+    /// quantity Table 2 reports as "Configuration: 327.9 mW".
+    pub fn avg_power(&self) -> Power {
+        self.total_energy() / self.total_time()
+    }
+
+    /// Fig 4 sub-stage breakdown of the setup stage (reporting only).
+    pub fn setup_substages(&self) -> Vec<Stage> {
+        SETUP_SUBSTAGES
+            .iter()
+            .map(|(name, time)| Stage {
+                name,
+                time: *time,
+                power: SETUP_POWER,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::bitstream::Bitstream;
+
+    fn profile(spi: SpiConfig) -> ConfigProfile {
+        let image = StoredImage::new(Bitstream::lstm_accelerator(FpgaModel::Xc7s15), spi.compressed);
+        ConfigProfile::compute(FpgaModel::Xc7s15, spi, &image)
+    }
+
+    #[test]
+    fn optimal_setting_reproduces_table2_configuration_row() {
+        let p = profile(SpiConfig::optimal());
+        // paper: 36.145 ms, 327.9 mW, 11.85 mJ
+        assert!((p.total_time().millis() - 36.145).abs() < 0.01, "{}", p.total_time().millis());
+        assert!((p.avg_power().milliwatts() - 327.9).abs() < 0.4, "{}", p.avg_power().milliwatts());
+        assert!((p.total_energy().millijoules() - 11.85).abs() < 0.02, "{}", p.total_energy().millijoules());
+    }
+
+    #[test]
+    fn worst_setting_reproduces_fig7_endpoint() {
+        let p = profile(SpiConfig::worst());
+        // paper: 41.4× slower, 475.56 mJ
+        assert!((p.total_time().millis() - 1496.6).abs() < 1.5, "{}", p.total_time().millis());
+        assert!((p.total_energy().millijoules() - 475.56).abs() < 1.0, "{}", p.total_energy().millijoules());
+    }
+
+    #[test]
+    fn headline_ratios_hold() {
+        let opt = profile(SpiConfig::optimal());
+        let worst = profile(SpiConfig::worst());
+        let time_ratio = worst.total_time() / opt.total_time();
+        let energy_ratio = worst.total_energy() / opt.total_energy();
+        assert!((time_ratio - 41.4).abs() < 0.1, "time ratio {time_ratio}");
+        assert!((energy_ratio - 40.13).abs() < 0.15, "energy ratio {energy_ratio}");
+    }
+
+    #[test]
+    fn xc7s25_reproduces_section52() {
+        let image = StoredImage::new(Bitstream::lstm_accelerator(FpgaModel::Xc7s25), true);
+        let p = ConfigProfile::compute(FpgaModel::Xc7s25, SpiConfig::optimal(), &image);
+        // paper: 38.09 ms, 13.75 mJ
+        assert!((p.total_time().millis() - 38.09).abs() < 0.05, "{}", p.total_time().millis());
+        assert!((p.total_energy().millijoules() - 13.75).abs() < 0.05, "{}", p.total_energy().millijoules());
+    }
+
+    #[test]
+    fn setup_stage_is_constant_across_settings() {
+        for spi in SpiConfig::sweep() {
+            let p = profile(spi);
+            assert_eq!(p.setup().time, SETUP_TIME);
+            assert_eq!(p.setup().power, SETUP_POWER);
+        }
+    }
+
+    #[test]
+    fn loading_time_monotone_decreasing_in_rate() {
+        let mut last = Duration::from_secs(f64::INFINITY);
+        for &f in &SpiConfig::FREQS_MHZ {
+            let p = profile(SpiConfig {
+                buswidth: 4,
+                freq_mhz: f,
+                compressed: true,
+            });
+            assert!(p.loading().time < last);
+            last = p.loading().time;
+        }
+    }
+
+    #[test]
+    fn substages_sum_to_setup() {
+        let p = profile(SpiConfig::optimal());
+        let total: Duration = p
+            .setup_substages()
+            .iter()
+            .fold(Duration::ZERO, |acc, s| acc + s.time);
+        assert!((total.secs() - p.setup().time.secs()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn total_time_is_stage_sum() {
+        let p = profile(SpiConfig::optimal());
+        let sum: Duration = p.stages.iter().fold(Duration::ZERO, |a, s| a + s.time);
+        assert_eq!(p.total_time().secs(), sum.secs());
+    }
+
+    #[test]
+    #[should_panic(expected = "no stage named")]
+    fn unknown_stage_panics() {
+        profile(SpiConfig::optimal()).stage("warp");
+    }
+}

@@ -1,0 +1,202 @@
+//! SPI NOR flash model.
+//!
+//! Stores configuration bitstreams (slot per accelerator) and exposes the
+//! read-side constraints of the paper's part: 3–66 MHz clock, ×1/×2/×4
+//! buswidths. Its standby draw (≈15.2 mW) is the idle-power floor the
+//! paper's §5.4 identifies as the remaining hardware constraint; its
+//! *active* read power during bitstream loading is part of the fitted
+//! loading-stage power in `device::spi`, not double-counted here.
+
+use std::collections::BTreeMap;
+
+use crate::config::schema::SpiConfig;
+use crate::device::bitstream::Bitstream;
+use crate::device::calib::FLASH_STANDBY_POWER;
+use crate::device::compression::{compress, stream_bits};
+use crate::util::units::Power;
+
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum FlashError {
+    #[error("no bitstream stored in slot '{0}'")]
+    EmptySlot(String),
+    #[error("spi setting unsupported by flash: {0}")]
+    Unsupported(String),
+}
+
+/// A stored image: the bitstream plus whether it was written compressed.
+///
+/// The on-wire size is computed once at construction: the frame-dedup
+/// compressor walks all ~1333 frames, and On-Off workloads reconfigure
+/// per request — recompressing per configuration made On-Off DES items
+/// ~500× slower than Idle-Waiting ones (§Perf log in EXPERIMENTS.md).
+#[derive(Debug, Clone)]
+pub struct StoredImage {
+    pub bitstream: Bitstream,
+    pub compressed: bool,
+    cached_stream_bits: u64,
+}
+
+impl StoredImage {
+    pub fn new(bitstream: Bitstream, compressed: bool) -> StoredImage {
+        let cached_stream_bits = stream_bits(&bitstream, compressed);
+        StoredImage {
+            bitstream,
+            compressed,
+            cached_stream_bits,
+        }
+    }
+
+    /// Bits that will cross the SPI link when this image is loaded.
+    #[inline]
+    pub fn stream_bits(&self) -> u64 {
+        self.cached_stream_bits
+    }
+}
+
+/// The flash chip: bitstream slots + electrical limits.
+#[derive(Debug, Clone)]
+pub struct Flash {
+    slots: BTreeMap<String, StoredImage>,
+    pub standby_power: Power,
+    pub max_freq_mhz: f64,
+    pub supported_widths: [u8; 3],
+}
+
+impl Default for Flash {
+    fn default() -> Self {
+        Flash::new()
+    }
+}
+
+impl Flash {
+    pub fn new() -> Flash {
+        Flash {
+            slots: BTreeMap::new(),
+            standby_power: FLASH_STANDBY_POWER,
+            max_freq_mhz: 66.0,
+            supported_widths: [1, 2, 4],
+        }
+    }
+
+    /// Program a bitstream into a named slot (build-time operation; not on
+    /// the energy-accounted request path).
+    pub fn program(&mut self, slot: impl Into<String>, bitstream: Bitstream, compressed: bool) {
+        self.slots
+            .insert(slot.into(), StoredImage::new(bitstream, compressed));
+    }
+
+    /// Validate an SPI setting against the chip's limits.
+    pub fn check_spi(&self, spi: &SpiConfig) -> Result<(), FlashError> {
+        if !self.supported_widths.contains(&spi.buswidth) {
+            return Err(FlashError::Unsupported(format!(
+                "buswidth {}",
+                spi.buswidth
+            )));
+        }
+        if spi.freq_mhz < 3.0 || spi.freq_mhz > self.max_freq_mhz {
+            return Err(FlashError::Unsupported(format!(
+                "freq {} MHz",
+                spi.freq_mhz
+            )));
+        }
+        Ok(())
+    }
+
+    /// Fetch a stored image for configuration.
+    pub fn image(&self, slot: &str) -> Result<&StoredImage, FlashError> {
+        self.slots
+            .get(slot)
+            .ok_or_else(|| FlashError::EmptySlot(slot.to_string()))
+    }
+
+    pub fn slots(&self) -> impl Iterator<Item = &str> {
+        self.slots.keys().map(|s| s.as_str())
+    }
+
+    /// Report the on-flash compression ratio of a slot (1.0 if stored raw).
+    pub fn compression_ratio(&self, slot: &str) -> Result<f64, FlashError> {
+        let image = self.image(slot)?;
+        Ok(if image.compressed {
+            compress(&image.bitstream).ratio()
+        } else {
+            1.0
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::FpgaModel;
+
+    fn flash_with_lstm(compressed: bool) -> Flash {
+        let mut f = Flash::new();
+        f.program(
+            "lstm",
+            Bitstream::lstm_accelerator(FpgaModel::Xc7s15),
+            compressed,
+        );
+        f
+    }
+
+    #[test]
+    fn standby_power_is_the_papers_floor() {
+        assert!((Flash::new().standby_power.milliwatts() - 15.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn program_and_fetch() {
+        let f = flash_with_lstm(true);
+        let img = f.image("lstm").unwrap();
+        assert!(img.compressed);
+        assert_eq!(f.slots().collect::<Vec<_>>(), vec!["lstm"]);
+    }
+
+    #[test]
+    fn empty_slot_errors() {
+        let f = Flash::new();
+        assert!(matches!(f.image("nope"), Err(FlashError::EmptySlot(_))));
+    }
+
+    #[test]
+    fn stream_bits_depend_on_compression() {
+        let raw = flash_with_lstm(false).image("lstm").unwrap().stream_bits();
+        let comp = flash_with_lstm(true).image("lstm").unwrap().stream_bits();
+        assert!(comp < raw);
+        assert_eq!(raw, FpgaModel::Xc7s15.bitstream_bits());
+    }
+
+    #[test]
+    fn spi_limits_enforced() {
+        let f = Flash::new();
+        assert!(f.check_spi(&SpiConfig::optimal()).is_ok());
+        assert!(f
+            .check_spi(&SpiConfig {
+                buswidth: 8,
+                freq_mhz: 33.0,
+                compressed: false
+            })
+            .is_err());
+        assert!(f
+            .check_spi(&SpiConfig {
+                buswidth: 4,
+                freq_mhz: 80.0,
+                compressed: false
+            })
+            .is_err());
+        assert!(f
+            .check_spi(&SpiConfig {
+                buswidth: 4,
+                freq_mhz: 1.0,
+                compressed: false
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn compression_ratio_reporting() {
+        assert_eq!(flash_with_lstm(false).compression_ratio("lstm").unwrap(), 1.0);
+        let r = flash_with_lstm(true).compression_ratio("lstm").unwrap();
+        assert!((r - 1.826).abs() < 0.01);
+    }
+}

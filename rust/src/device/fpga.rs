@@ -1,0 +1,284 @@
+//! The Spartan-7 FPGA device state machine.
+//!
+//! Tracks power state, configuration state (SRAM — lost on power-off) and
+//! legality of operations; the strategy simulations and the serving
+//! coordinator drive this machine and account energy from the state/phase
+//! powers. Invalid transitions (e.g. inference while unconfigured, data
+//! transfer in retention mode) are hard errors — they would be silent
+//! wrong-energy bugs otherwise.
+
+use crate::config::schema::{FpgaModel, SpiConfig};
+use crate::device::config_fsm::ConfigProfile;
+use crate::device::flash::{Flash, FlashError};
+use crate::device::rails::{PowerSaving, RailSet};
+use crate::util::units::{Energy, Power};
+
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum FpgaError {
+    #[error("operation requires the FPGA powered on (state: {0})")]
+    PoweredOff(&'static str),
+    #[error("operation requires a configured FPGA")]
+    NotConfigured,
+    #[error("operation requires operational rails (currently in {0} power-saving)")]
+    NotOperational(&'static str),
+    #[error(transparent)]
+    Flash(#[from] FlashError),
+}
+
+/// FPGA top-level state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FpgaState {
+    /// All FPGA rails down; configuration lost.
+    Off,
+    /// Rails up, fabric unconfigured (before/without configuration).
+    Unconfigured,
+    /// Configured and idle, under a power-saving setting.
+    Idle(PowerSaving),
+    /// Configured and executing a workload phase.
+    Busy,
+}
+
+impl FpgaState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FpgaState::Off => "off",
+            FpgaState::Unconfigured => "unconfigured",
+            FpgaState::Idle(_) => "idle",
+            FpgaState::Busy => "busy",
+        }
+    }
+}
+
+/// The FPGA device model.
+#[derive(Debug, Clone)]
+pub struct Fpga {
+    pub model: FpgaModel,
+    pub state: FpgaState,
+    rails: RailSet,
+    /// Name of the accelerator currently configured, if any.
+    configured_with: Option<String>,
+    /// Total configurations performed (the quantity the paper minimizes).
+    pub configurations: u64,
+    /// Total power-on events (each costs the inrush transient).
+    pub power_ons: u64,
+}
+
+impl Fpga {
+    pub fn new(model: FpgaModel) -> Fpga {
+        Fpga {
+            model,
+            state: FpgaState::Off,
+            rails: RailSet::new(),
+            configured_with: None,
+            configurations: 0,
+            power_ons: 0,
+        }
+    }
+
+    pub fn is_configured(&self) -> bool {
+        self.configured_with.is_some()
+    }
+
+    pub fn configured_with(&self) -> Option<&str> {
+        self.configured_with.as_deref()
+    }
+
+    /// Power the FPGA rails up. Returns the inrush/ramp transient energy
+    /// the power cycle costs (DESIGN.md §6).
+    pub fn power_on(&mut self) -> Energy {
+        debug_assert!(self.state == FpgaState::Off, "double power-on");
+        self.rails.power_up();
+        self.state = FpgaState::Unconfigured;
+        self.power_ons += 1;
+        Energy::from_millijoules(crate::device::calib::POWER_ON_TRANSIENT_MJ)
+    }
+
+    /// Cut the rails. SRAM configuration is lost (the paper's core
+    /// problem statement §3).
+    pub fn power_off(&mut self) {
+        self.rails.power_down();
+        self.configured_with = None;
+        self.state = FpgaState::Off;
+    }
+
+    /// Run the configuration FSM from `flash` slot `slot` via `spi`.
+    /// Returns the stage profile whose time/energy the caller accounts.
+    pub fn configure(
+        &mut self,
+        flash: &Flash,
+        slot: &str,
+        spi: SpiConfig,
+    ) -> Result<ConfigProfile, FpgaError> {
+        if self.state == FpgaState::Off {
+            return Err(FpgaError::PoweredOff(self.state.name()));
+        }
+        flash.check_spi(&spi)?;
+        let image = flash.image(slot)?;
+        let profile = ConfigProfile::compute(self.model, spi, image);
+        self.configured_with = Some(slot.to_string());
+        self.configurations += 1;
+        self.state = FpgaState::Idle(PowerSaving::BASELINE);
+        Ok(profile)
+    }
+
+    /// Enter idle under a power-saving configuration (paper §4.2).
+    pub fn enter_idle(&mut self, saving: PowerSaving) -> Result<(), FpgaError> {
+        match self.state {
+            FpgaState::Off => Err(FpgaError::PoweredOff("off")),
+            FpgaState::Unconfigured => Err(FpgaError::NotConfigured),
+            FpgaState::Idle(_) | FpgaState::Busy => {
+                self.rails.enter_idle(saving);
+                self.state = FpgaState::Idle(saving);
+                Ok(())
+            }
+        }
+    }
+
+    /// Leave idle and begin a workload phase (data load / inference /
+    /// offload). Exiting power-saving restores operational rails; the
+    /// paper verified configuration survives this on hardware.
+    pub fn begin_work(&mut self) -> Result<(), FpgaError> {
+        match self.state {
+            FpgaState::Off => Err(FpgaError::PoweredOff("off")),
+            FpgaState::Unconfigured => Err(FpgaError::NotConfigured),
+            FpgaState::Idle(_) => {
+                self.rails.exit_idle();
+                debug_assert!(self.rails.operational());
+                self.state = FpgaState::Busy;
+                Ok(())
+            }
+            FpgaState::Busy => Ok(()),
+        }
+    }
+
+    /// Finish the workload phases, returning to baseline idle.
+    pub fn finish_work(&mut self) -> Result<(), FpgaError> {
+        match self.state {
+            FpgaState::Busy => {
+                self.state = FpgaState::Idle(PowerSaving::BASELINE);
+                Ok(())
+            }
+            _ => Err(FpgaError::NotOperational(self.state.name())),
+        }
+    }
+
+    /// Static power draw of the FPGA-side rails in the current state.
+    /// (Active phases add their Table 2 dynamic power on top.)
+    pub fn static_power(&self) -> Power {
+        match self.state {
+            FpgaState::Off => {
+                // Only the always-on flash floor remains on the board.
+                let mut rails = RailSet::new();
+                rails.power_down();
+                rails.static_power()
+            }
+            _ => self.rails.static_power(),
+        }
+    }
+
+    /// Idle power in the given saving mode (Table 3 query).
+    pub fn idle_power(saving: PowerSaving) -> Power {
+        RailSet::idle_power(saving)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::bitstream::Bitstream;
+
+    fn setup() -> (Fpga, Flash) {
+        let mut flash = Flash::new();
+        flash.program(
+            "lstm",
+            Bitstream::lstm_accelerator(FpgaModel::Xc7s15),
+            true,
+        );
+        (Fpga::new(FpgaModel::Xc7s15), flash)
+    }
+
+    #[test]
+    fn full_lifecycle() {
+        let (mut fpga, flash) = setup();
+        let inrush = fpga.power_on();
+        assert!((inrush.millijoules() - 0.1244).abs() < 1e-9);
+        let profile = fpga.configure(&flash, "lstm", SpiConfig::optimal()).unwrap();
+        assert!((profile.total_energy().millijoules() - 11.85).abs() < 0.02);
+        assert!(fpga.is_configured());
+        fpga.begin_work().unwrap();
+        fpga.finish_work().unwrap();
+        fpga.enter_idle(PowerSaving::M12).unwrap();
+        assert_eq!(fpga.state, FpgaState::Idle(PowerSaving::M12));
+        fpga.power_off();
+        assert!(!fpga.is_configured());
+        assert_eq!(fpga.configurations, 1);
+        assert_eq!(fpga.power_ons, 1);
+    }
+
+    #[test]
+    fn configure_while_off_fails() {
+        let (mut fpga, flash) = setup();
+        assert!(matches!(
+            fpga.configure(&flash, "lstm", SpiConfig::optimal()),
+            Err(FpgaError::PoweredOff(_))
+        ));
+    }
+
+    #[test]
+    fn work_requires_configuration() {
+        let (mut fpga, _) = setup();
+        fpga.power_on();
+        assert!(matches!(fpga.begin_work(), Err(FpgaError::NotConfigured)));
+        assert!(matches!(
+            fpga.enter_idle(PowerSaving::BASELINE),
+            Err(FpgaError::NotConfigured)
+        ));
+    }
+
+    #[test]
+    fn power_off_loses_configuration() {
+        let (mut fpga, flash) = setup();
+        fpga.power_on();
+        fpga.configure(&flash, "lstm", SpiConfig::optimal()).unwrap();
+        fpga.power_off();
+        fpga.power_on();
+        // must reconfigure — SRAM config is gone
+        assert!(matches!(fpga.begin_work(), Err(FpgaError::NotConfigured)));
+    }
+
+    #[test]
+    fn idle_power_saving_survives_work_cycles() {
+        let (mut fpga, flash) = setup();
+        fpga.power_on();
+        fpga.configure(&flash, "lstm", SpiConfig::optimal()).unwrap();
+        fpga.enter_idle(PowerSaving::M12).unwrap();
+        let idle_p = fpga.static_power();
+        assert!((idle_p.milliwatts() - 24.0).abs() < 0.05);
+        fpga.begin_work().unwrap();
+        assert!(fpga.static_power() > idle_p); // operational rails restored
+        fpga.finish_work().unwrap();
+        assert!(fpga.is_configured());
+    }
+
+    #[test]
+    fn off_state_draws_only_flash_floor() {
+        let (fpga, _) = setup();
+        assert!((fpga.static_power().milliwatts() - 15.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn missing_slot_propagates() {
+        let (mut fpga, flash) = setup();
+        fpga.power_on();
+        assert!(matches!(
+            fpga.configure(&flash, "nonexistent", SpiConfig::optimal()),
+            Err(FpgaError::Flash(FlashError::EmptySlot(_)))
+        ));
+    }
+
+    #[test]
+    fn finish_without_begin_fails() {
+        let (mut fpga, _) = setup();
+        assert!(fpga.finish_work().is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! RP2040 MCU model.
+//!
+//! The MCU's role in the paper's system (§2) is coordination: it sleeps at
+//! 180 µA, wakes on a timer when enough sensor data has accumulated,
+//! issues an inference request to the FPGA over SPI, collects the result
+//! and goes back to sleep. Its energy lives on its own rail and is *not*
+//! part of the paper's FPGA-side budget accounting; we model it so the
+//! serving coordinator has a faithful request source and so whole-board
+//! energy can be reported alongside the paper's FPGA-only numbers.
+
+use crate::device::calib::{MCU_ACTIVE_POWER, MCU_RAIL, MCU_SLEEP_CURRENT_UA};
+use crate::util::units::{Current, Duration, Energy, Power};
+
+/// MCU operating state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum McuState {
+    Sleep,
+    /// Awake handling a request (SPI transfers, bookkeeping).
+    Active,
+}
+
+/// The RP2040 coordinator MCU.
+#[derive(Debug, Clone)]
+pub struct Mcu {
+    pub state: McuState,
+    /// Cumulative energy on the MCU rail.
+    pub energy: Energy,
+    /// Cumulative time spent awake.
+    pub active_time: Duration,
+    /// Requests issued so far.
+    pub requests_issued: u64,
+}
+
+impl Default for Mcu {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Mcu {
+    pub fn new() -> Mcu {
+        Mcu {
+            state: McuState::Sleep,
+            energy: Energy::ZERO,
+            active_time: Duration::ZERO,
+            requests_issued: 0,
+        }
+    }
+
+    pub fn sleep_power() -> Power {
+        MCU_RAIL * Current::from_microamps(MCU_SLEEP_CURRENT_UA)
+    }
+
+    pub fn active_power() -> Power {
+        MCU_ACTIVE_POWER
+    }
+
+    /// Account a sleeping interval.
+    pub fn sleep_for(&mut self, dur: Duration) {
+        debug_assert!(self.state == McuState::Sleep);
+        self.energy += Self::sleep_power() * dur;
+    }
+
+    /// Wake, coordinate one request for `dur`, and return to sleep.
+    /// Returns the energy spent awake.
+    pub fn coordinate_request(&mut self, dur: Duration) -> Energy {
+        self.state = McuState::Active;
+        let e = Self::active_power() * dur;
+        self.energy += e;
+        self.active_time += dur;
+        self.requests_issued += 1;
+        self.state = McuState::Sleep;
+        e
+    }
+
+    /// Duty-cycle estimate: mean MCU power for a request period where the
+    /// MCU is awake `active` per period and asleep otherwise.
+    pub fn mean_power(period: Duration, active: Duration) -> Power {
+        debug_assert!(active.secs() <= period.secs());
+        let e = Self::active_power() * active + Self::sleep_power() * (period - active);
+        e / period
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sleep_power_is_180ua_at_3v3() {
+        assert!((Mcu::sleep_power().milliwatts() - 0.594).abs() < 1e-9);
+    }
+
+    #[test]
+    fn request_accounting() {
+        let mut mcu = Mcu::new();
+        let e = mcu.coordinate_request(Duration::from_millis(1.0));
+        assert!((e.microjoules() - 66.0).abs() < 1e-9);
+        assert_eq!(mcu.requests_issued, 1);
+        assert_eq!(mcu.state, McuState::Sleep);
+    }
+
+    #[test]
+    fn sleep_accumulates() {
+        let mut mcu = Mcu::new();
+        mcu.sleep_for(Duration::from_secs(1.0));
+        assert!((mcu.energy.microjoules() - 594.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_power_between_sleep_and_active() {
+        let p = Mcu::mean_power(Duration::from_millis(40.0), Duration::from_millis(1.0));
+        assert!(p > Mcu::sleep_power());
+        assert!(p < Mcu::active_power());
+        // 1/40 duty: ≈ 0.594·(39/40) + 66·(1/40) ≈ 2.229 mW
+        assert!((p.milliwatts() - 2.229).abs() < 0.01, "{}", p.milliwatts());
+    }
+
+    #[test]
+    fn mcu_energy_is_negligible_vs_fpga_item() {
+        // Sanity: the paper ignores MCU energy in the FPGA budget; one
+        // sleeping 40 ms period costs ~24 µJ vs the 11,983 µJ On-Off item.
+        let per_period = Mcu::sleep_power() * Duration::from_millis(40.0);
+        assert!(per_period.microjoules() < 25.0);
+    }
+}

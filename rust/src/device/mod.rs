@@ -1,0 +1,41 @@
+//! Device substrate: models of every hardware component on the paper's
+//! heterogeneous platform (Fig 3) that affects energy.
+//!
+//! * [`calib`] — every fitted/datasheet constant, unit-tested against the
+//!   paper's published numbers.
+//! * [`bitstream`] / [`compression`] — synthetic 7-series frame streams
+//!   and the MFWR-style dedup compressor (ratios emerge, not hardcoded).
+//! * [`spi`] / [`flash`] — configuration-port link timing/power and the
+//!   NOR flash with its 15.2 mW standby floor.
+//! * [`config_fsm`] — the Fig 4 configuration FSM; produces the per-stage
+//!   profiles Experiment 1 sweeps.
+//! * [`regulator`] / [`rails`] — per-rail power tree with Method 1 gating
+//!   and Method 2 retention undervolting (reproduces Table 3).
+//! * [`fpga`] / [`mcu`] / [`battery`] / [`monitor`] — the Spartan-7 state
+//!   machine, the RP2040 request source, the 4147 J budget and the
+//!   PAC1934 sampling monitor.
+//! * [`board`] — the assembled platform the simulations drive.
+
+pub mod battery;
+pub mod bitstream;
+pub mod board;
+pub mod calib;
+pub mod compression;
+pub mod config_fsm;
+pub mod flash;
+pub mod fpga;
+pub mod mcu;
+pub mod monitor;
+pub mod rails;
+pub mod regulator;
+pub mod spi;
+
+pub use battery::Battery;
+pub use bitstream::Bitstream;
+pub use board::Board;
+pub use config_fsm::ConfigProfile;
+pub use flash::Flash;
+pub use fpga::{Fpga, FpgaState};
+pub use mcu::Mcu;
+pub use monitor::Pac1934;
+pub use rails::{PowerSaving, RailSet};

@@ -1,0 +1,195 @@
+//! PAC1934 energy-monitor model.
+//!
+//! The paper's board carries two PAC1934 four-channel power monitors
+//! sampling each rail at 1024 Hz (§2); all "hardware measurements" in the
+//! paper are integrals of those samples. We reproduce the measurement
+//! chain: the simulator produces piecewise-constant power segments, the
+//! monitor samples them on its own 1/1024 s grid and accumulates
+//! `V·I·Δt`. The difference between this sampled integral and the exact
+//! one is precisely the kind of few-percent gap the paper reports between
+//! hardware measurements and its simulator (2.8% / 2.7%, §5.3).
+
+use crate::device::calib::PAC1934_HZ;
+use crate::sim::time::SimTime;
+use crate::util::units::{Energy, Power};
+
+/// One monitored power segment: constant `power` over `[start, end)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Segment {
+    pub start: SimTime,
+    pub end: SimTime,
+    pub power: Power,
+}
+
+/// A sampling energy accumulator for one rail.
+#[derive(Debug, Clone)]
+pub struct Pac1934 {
+    sample_period_ns: u64,
+    /// Next sample timestamp (ns).
+    next_sample_ns: u64,
+    /// Accumulated sampled energy.
+    accumulated: Energy,
+    /// Number of samples taken.
+    samples: u64,
+    /// Exact (reference) integral for error reporting.
+    exact: Energy,
+}
+
+impl Default for Pac1934 {
+    fn default() -> Self {
+        Self::new(PAC1934_HZ)
+    }
+}
+
+impl Pac1934 {
+    pub fn new(sample_rate_hz: f64) -> Pac1934 {
+        assert!(sample_rate_hz > 0.0);
+        Pac1934 {
+            sample_period_ns: (1e9 / sample_rate_hz).round() as u64,
+            next_sample_ns: 0,
+            accumulated: Energy::ZERO,
+            samples: 0,
+            exact: Energy::ZERO,
+        }
+    }
+
+    /// Feed a piecewise-constant segment. Segments must be fed in
+    /// non-overlapping, time-ascending order.
+    ///
+    /// O(1) per segment: the number of sample ticks inside the segment is
+    /// computed arithmetically, so multi-hour lifetime simulations (tens
+    /// of millions of ticks) cost nothing extra.
+    pub fn observe(&mut self, seg: Segment) {
+        debug_assert!(seg.end >= seg.start);
+        let start = seg.start.nanos();
+        let end = seg.end.nanos();
+        self.exact += seg.power * seg.end.since(seg.start);
+        let period = self.sample_period_ns;
+        // Advance past any gap before this segment without accumulating
+        // (ticks in uncovered gaps measure whatever rail state the caller
+        // chose not to report — physically, a segment is always fed).
+        if self.next_sample_ns < start {
+            let skipped = (start - self.next_sample_ns).div_ceil(period);
+            self.next_sample_ns += skipped * period;
+        }
+        if self.next_sample_ns >= end {
+            return;
+        }
+        // Ticks at next, next+T, ... strictly below end.
+        let count = (end - self.next_sample_ns).div_ceil(period);
+        self.accumulated += seg.power
+            * crate::util::units::Duration::from_nanos((count * period) as f64);
+        self.samples += count;
+        self.next_sample_ns += count * period;
+    }
+
+    /// Energy as the instrument reports it (sampled integral).
+    pub fn measured(&self) -> Energy {
+        self.accumulated
+    }
+
+    /// Exact integral of everything observed (for error analysis).
+    pub fn exact(&self) -> Energy {
+        self.exact
+    }
+
+    /// Relative measurement error vs the exact integral.
+    pub fn rel_error(&self) -> f64 {
+        if self.exact.joules() == 0.0 {
+            0.0
+        } else {
+            (self.measured().joules() - self.exact.joules()).abs() / self.exact.joules()
+        }
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::Duration;
+
+    fn t(ms: f64) -> SimTime {
+        SimTime::ZERO + Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn constant_power_long_window_converges() {
+        let mut m = Pac1934::default();
+        m.observe(Segment {
+            start: t(0.0),
+            end: t(10_000.0), // 10 s
+            power: Power::from_milliwatts(134.3),
+        });
+        // 10 s at 1024 Hz = 10240 samples exactly
+        assert_eq!(m.samples(), 10_240);
+        assert!(m.rel_error() < 1e-3, "err={}", m.rel_error());
+        assert!((m.exact().millijoules() - 1343.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn short_burst_between_samples_is_missed() {
+        // A 28 µs inference burst (Table 2) fits entirely between two
+        // 976 µs sample ticks → the instrument can miss it. This is the
+        // physical source of the paper's hardware-vs-simulator gap.
+        let mut m = Pac1934::default();
+        m.observe(Segment {
+            start: t(0.1),
+            end: t(0.1281),
+            power: Power::from_milliwatts(171.4),
+        });
+        assert_eq!(m.samples(), 0);
+        assert_eq!(m.measured(), Energy::ZERO);
+        assert!(m.exact().microjoules() > 4.0);
+    }
+
+    #[test]
+    fn sampling_error_is_bounded_for_mixed_load() {
+        // Alternating config/idle segments like a real run: error stays
+        // within a few percent (the paper's 2.8%).
+        let mut m = Pac1934::default();
+        let mut now = 0.0;
+        for _ in 0..200 {
+            m.observe(Segment {
+                start: t(now),
+                end: t(now + 36.145),
+                power: Power::from_milliwatts(327.9),
+            });
+            now += 36.145;
+            m.observe(Segment {
+                start: t(now),
+                end: t(now + 3.855),
+                power: Power::from_milliwatts(134.3),
+            });
+            now += 3.855;
+        }
+        assert!(m.rel_error() < 0.03, "err={}", m.rel_error());
+    }
+
+    #[test]
+    fn zero_duration_segment_is_noop() {
+        let mut m = Pac1934::default();
+        m.observe(Segment {
+            start: t(1.0),
+            end: t(1.0),
+            power: Power::from_milliwatts(100.0),
+        });
+        assert_eq!(m.measured(), Energy::ZERO);
+        assert_eq!(m.exact(), Energy::ZERO);
+    }
+
+    #[test]
+    fn custom_sample_rate() {
+        let mut m = Pac1934::new(10.0); // 10 Hz
+        m.observe(Segment {
+            start: t(0.0),
+            end: t(1000.0),
+            power: Power::from_watts(1.0),
+        });
+        assert_eq!(m.samples(), 10);
+        assert!((m.measured().joules() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,281 @@
+//! The platform's power-rail tree (paper Fig 3: seven monitored rails).
+//!
+//! [`RailSet`] composes the FPGA supply regulators (VCCINT/VCCAUX/VCCO),
+//! the clock-reference and flash rails, and the MCU rail, and computes the
+//! aggregate idle power for each power-saving configuration — reproducing
+//! Table 3 from the per-rail decomposition rather than hardcoding totals.
+
+use crate::device::calib::{
+    CLKREF_POWER, FLASH_STANDBY_POWER, IO_STANDBY_POWER, MCU_RAIL, MCU_SLEEP_CURRENT_UA,
+    VCCAUX_NOM, VCCAUX_RETENTION, VCCAUX_STATIC_NOM, VCCINT_NOM, VCCINT_RETENTION,
+    VCCINT_STATIC_NOM,
+};
+use crate::device::regulator::{RegMode, Regulator};
+use crate::util::units::{Current, Power};
+
+/// Identifiers for the seven monitored rails (Fig 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rail {
+    McuVdd,
+    Fpga3v3Vcco,
+    FpgaVccint,
+    FpgaVccaux,
+    Flash3v3,
+    ClkRef3v3,
+    Monitor3v3,
+}
+
+impl Rail {
+    pub const ALL: [Rail; 7] = [
+        Rail::McuVdd,
+        Rail::Fpga3v3Vcco,
+        Rail::FpgaVccint,
+        Rail::FpgaVccaux,
+        Rail::Flash3v3,
+        Rail::ClkRef3v3,
+        Rail::Monitor3v3,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rail::McuVdd => "MCU_VDD",
+            Rail::Fpga3v3Vcco => "FPGA_VCCO",
+            Rail::FpgaVccint => "FPGA_VCCINT",
+            Rail::FpgaVccaux => "FPGA_VCCAUX",
+            Rail::Flash3v3 => "FLASH_3V3",
+            Rail::ClkRef3v3 => "CLKREF_3V3",
+            Rail::Monitor3v3 => "MONITOR_3V3",
+        }
+    }
+}
+
+/// Idle-phase power-saving configuration (paper §4.2 / §5.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PowerSaving {
+    /// Method 1: deactivate IOs and the clock reference while idle.
+    pub method1: bool,
+    /// Method 2: drop VCCINT/VCCAUX to retention voltages while idle.
+    pub method2: bool,
+}
+
+impl PowerSaving {
+    pub const BASELINE: PowerSaving = PowerSaving {
+        method1: false,
+        method2: false,
+    };
+    pub const M1: PowerSaving = PowerSaving {
+        method1: true,
+        method2: false,
+    };
+    pub const M12: PowerSaving = PowerSaving {
+        method1: true,
+        method2: true,
+    };
+
+    pub fn label(&self) -> &'static str {
+        match (self.method1, self.method2) {
+            (false, false) => "baseline",
+            (true, false) => "method1",
+            (true, true) => "method1+2",
+            (false, true) => "method2-only",
+        }
+    }
+}
+
+/// The FPGA-side rail tree.
+#[derive(Debug, Clone)]
+pub struct RailSet {
+    pub vccint: Regulator,
+    pub vccaux: Regulator,
+    /// Clock-reference oscillator currently powered?
+    pub clkref_on: bool,
+    /// FPGA IO banks active?
+    pub io_on: bool,
+    /// Flash chip present (standby floor whenever the board is powered).
+    pub flash_on: bool,
+}
+
+impl Default for RailSet {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RailSet {
+    /// All rails off (board cold).
+    pub fn new() -> RailSet {
+        RailSet {
+            vccint: Regulator::new("VCCINT", VCCINT_NOM, VCCINT_RETENTION, VCCINT_STATIC_NOM),
+            vccaux: Regulator::new("VCCAUX", VCCAUX_NOM, VCCAUX_RETENTION, VCCAUX_STATIC_NOM),
+            clkref_on: false,
+            io_on: false,
+            flash_on: false,
+        }
+    }
+
+    /// Power everything up to the operational state.
+    pub fn power_up(&mut self) {
+        self.vccint.mode = RegMode::Nominal;
+        self.vccaux.mode = RegMode::Nominal;
+        self.clkref_on = true;
+        self.io_on = true;
+        self.flash_on = true;
+    }
+
+    /// Cut all FPGA rails (configuration is lost — SRAM device).
+    pub fn power_down(&mut self) {
+        self.vccint.mode = RegMode::Off;
+        self.vccaux.mode = RegMode::Off;
+        self.clkref_on = false;
+        self.io_on = false;
+        // flash stays powered: it shares the always-on 3V3 (paper §5.4
+        // counts its 15.2 mW floor; the paper's *accounting* zeroes the
+        // off state — Board::off_for handles that distinction)
+        self.flash_on = true;
+    }
+
+    /// Enter the idle state under a power-saving configuration.
+    pub fn enter_idle(&mut self, saving: PowerSaving) {
+        if saving.method1 {
+            self.clkref_on = false;
+            self.io_on = false;
+        } else {
+            self.clkref_on = true;
+            self.io_on = true;
+        }
+        let mode = if saving.method2 {
+            RegMode::Retention
+        } else {
+            RegMode::Nominal
+        };
+        self.vccint.mode = mode;
+        self.vccaux.mode = mode;
+        self.flash_on = true;
+    }
+
+    /// Restore operational state from idle (exit power-saving). The paper
+    /// verified on hardware that configuration is retained across this.
+    pub fn exit_idle(&mut self) {
+        self.power_up();
+    }
+
+    /// True if the FPGA's configuration SRAM still holds its bitstream.
+    pub fn configuration_retained(&self) -> bool {
+        self.vccint.retains_state() && self.vccaux.retains_state()
+    }
+
+    /// True if the fabric can actually run (data transfer + inference).
+    pub fn operational(&self) -> bool {
+        self.vccint.operational() && self.vccaux.operational() && self.io_on
+    }
+
+    /// Aggregate idle/static power of the FPGA-side rails in their current
+    /// state (excludes active-phase dynamic power, which comes from the
+    /// workload-item profile).
+    pub fn static_power(&self) -> Power {
+        let mut p = Power::ZERO;
+        if self.flash_on {
+            p += FLASH_STANDBY_POWER;
+        }
+        if self.clkref_on {
+            p += CLKREF_POWER;
+        }
+        if self.io_on {
+            p += IO_STANDBY_POWER;
+        }
+        p += self.vccint.static_power();
+        p += self.vccaux.static_power();
+        p
+    }
+
+    /// Idle power for a saving configuration (pure query; Table 3).
+    pub fn idle_power(saving: PowerSaving) -> Power {
+        let mut rails = RailSet::new();
+        rails.enter_idle(saving);
+        rails.static_power()
+    }
+
+    /// MCU sleep power (separate budget domain; paper measures the FPGA
+    /// side, the MCU is "usually in sleep mode, consuming 180 µA").
+    pub fn mcu_sleep_power() -> Power {
+        MCU_RAIL * Current::from_microamps(MCU_SLEEP_CURRENT_UA)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_baseline() {
+        let p = RailSet::idle_power(PowerSaving::BASELINE);
+        assert!((p.milliwatts() - 134.3).abs() < 1e-9, "{}", p.milliwatts());
+    }
+
+    #[test]
+    fn table3_method1() {
+        let p = RailSet::idle_power(PowerSaving::M1);
+        assert!((p.milliwatts() - 34.2).abs() < 1e-9, "{}", p.milliwatts());
+    }
+
+    #[test]
+    fn table3_method12() {
+        let p = RailSet::idle_power(PowerSaving::M12);
+        assert!((p.milliwatts() - 24.0).abs() < 0.05, "{}", p.milliwatts());
+    }
+
+    #[test]
+    fn power_down_loses_configuration() {
+        let mut rails = RailSet::new();
+        rails.power_up();
+        assert!(rails.configuration_retained());
+        rails.power_down();
+        assert!(!rails.configuration_retained());
+        // flash still draws its floor while the board lives
+        assert_eq!(rails.static_power(), FLASH_STANDBY_POWER);
+    }
+
+    #[test]
+    fn idle_retains_configuration_in_all_modes() {
+        for saving in [PowerSaving::BASELINE, PowerSaving::M1, PowerSaving::M12] {
+            let mut rails = RailSet::new();
+            rails.power_up();
+            rails.enter_idle(saving);
+            assert!(rails.configuration_retained(), "{saving:?}");
+            rails.exit_idle();
+            assert!(rails.operational());
+            assert!(rails.configuration_retained());
+        }
+    }
+
+    #[test]
+    fn retention_mode_is_not_operational() {
+        let mut rails = RailSet::new();
+        rails.power_up();
+        rails.enter_idle(PowerSaving::M12);
+        assert!(!rails.operational());
+    }
+
+    #[test]
+    fn operational_power_exceeds_every_idle_mode() {
+        let mut rails = RailSet::new();
+        rails.power_up();
+        let active_static = rails.static_power();
+        for saving in [PowerSaving::BASELINE, PowerSaving::M1, PowerSaving::M12] {
+            assert!(active_static >= RailSet::idle_power(saving));
+        }
+    }
+
+    #[test]
+    fn mcu_sleep_power_matches_paper() {
+        let p = RailSet::mcu_sleep_power();
+        assert!((p.milliwatts() - 0.594).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rail_names_unique() {
+        let names: std::collections::BTreeSet<_> =
+            Rail::ALL.iter().map(|r| r.name()).collect();
+        assert_eq!(names.len(), 7);
+    }
+}

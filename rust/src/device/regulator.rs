@@ -1,0 +1,152 @@
+//! Voltage-regulator model with retention-mode undervolting (Method 2).
+//!
+//! The paper's Method 2 lowers VCCINT 1.0→0.75 V and VCCAUX 1.8→1.5 V
+//! during idle — enough to retain configuration SRAM state but below the
+//! operational minimum. The authors' own hardware lacked dynamic voltage
+//! scaling, so they simulated it; we model a regulator whose static-load
+//! power scales as `(V/V_nom)^k` (leakage-dominated, k = 3, fitted so the
+//! combined Table 3 idle power lands on 24.0 mW — DESIGN.md §6).
+
+use crate::device::calib::LEAKAGE_EXP;
+use crate::util::units::{Power, Voltage};
+
+/// Regulator operating mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegMode {
+    /// Rail off (FPGA powered down).
+    Off,
+    /// Nominal operating voltage.
+    Nominal,
+    /// Retention voltage: state held, logic non-operational (Method 2).
+    Retention,
+}
+
+/// One adjustable regulator feeding an FPGA supply rail.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Regulator {
+    pub name: &'static str,
+    pub nominal: Voltage,
+    pub retention: Voltage,
+    /// Static power drawn by the load at nominal voltage.
+    pub static_load_nom: Power,
+    pub mode: RegMode,
+}
+
+impl Regulator {
+    pub fn new(
+        name: &'static str,
+        nominal: Voltage,
+        retention: Voltage,
+        static_load_nom: Power,
+    ) -> Regulator {
+        assert!(retention.volts() <= nominal.volts());
+        Regulator {
+            name,
+            nominal,
+            retention,
+            static_load_nom,
+            mode: RegMode::Off,
+        }
+    }
+
+    pub fn voltage(&self) -> Voltage {
+        match self.mode {
+            RegMode::Off => Voltage::from_volts(0.0),
+            RegMode::Nominal => self.nominal,
+            RegMode::Retention => self.retention,
+        }
+    }
+
+    /// Static load power in the current mode: `P_nom · (V/V_nom)^k`.
+    pub fn static_power(&self) -> Power {
+        match self.mode {
+            RegMode::Off => Power::ZERO,
+            RegMode::Nominal => self.static_load_nom,
+            RegMode::Retention => {
+                let scale =
+                    (self.retention.volts() / self.nominal.volts()).powf(LEAKAGE_EXP);
+                self.static_load_nom * scale
+            }
+        }
+    }
+
+    /// Whether the FPGA can operate (transmit data / run inference) at the
+    /// rail's current voltage. Retention holds state only.
+    pub fn operational(&self) -> bool {
+        self.mode == RegMode::Nominal
+    }
+
+    /// Whether configuration SRAM state survives the current mode.
+    pub fn retains_state(&self) -> bool {
+        self.mode != RegMode::Off
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::calib::{
+        VCCAUX_NOM, VCCAUX_RETENTION, VCCAUX_STATIC_NOM, VCCINT_NOM, VCCINT_RETENTION,
+        VCCINT_STATIC_NOM,
+    };
+
+    fn vccint() -> Regulator {
+        Regulator::new("VCCINT", VCCINT_NOM, VCCINT_RETENTION, VCCINT_STATIC_NOM)
+    }
+
+    fn vccaux() -> Regulator {
+        Regulator::new("VCCAUX", VCCAUX_NOM, VCCAUX_RETENTION, VCCAUX_STATIC_NOM)
+    }
+
+    #[test]
+    fn off_mode_draws_nothing_and_loses_state() {
+        let r = vccint();
+        assert_eq!(r.static_power(), Power::ZERO);
+        assert!(!r.retains_state());
+        assert!(!r.operational());
+    }
+
+    #[test]
+    fn nominal_mode_draws_nominal() {
+        let mut r = vccint();
+        r.mode = RegMode::Nominal;
+        assert_eq!(r.static_power(), VCCINT_STATIC_NOM);
+        assert!(r.operational());
+        assert!(r.retains_state());
+    }
+
+    #[test]
+    fn retention_scales_cubically_and_keeps_state() {
+        let mut r = vccint();
+        r.mode = RegMode::Retention;
+        let expected = VCCINT_STATIC_NOM.milliwatts() * (0.75f64).powi(3);
+        assert!((r.static_power().milliwatts() - expected).abs() < 1e-9);
+        assert!(!r.operational());
+        assert!(r.retains_state());
+        assert_eq!(r.voltage(), VCCINT_RETENTION);
+    }
+
+    #[test]
+    fn both_rails_in_retention_hit_table3() {
+        // VCCINT + VCCAUX retention static + flash floor = 24.0 mW
+        let mut int = vccint();
+        let mut aux = vccaux();
+        int.mode = RegMode::Retention;
+        aux.mode = RegMode::Retention;
+        let total = int.static_power()
+            + aux.static_power()
+            + crate::device::calib::FLASH_STANDBY_POWER;
+        assert!((total.milliwatts() - 24.0).abs() < 0.05, "{}", total.milliwatts());
+    }
+
+    #[test]
+    #[should_panic]
+    fn retention_above_nominal_rejected() {
+        Regulator::new(
+            "bad",
+            Voltage::from_volts(1.0),
+            Voltage::from_volts(1.2),
+            Power::ZERO,
+        );
+    }
+}

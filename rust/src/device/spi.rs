@@ -1,0 +1,119 @@
+//! SPI configuration-port link model.
+//!
+//! Transfer timing for bitstream loading through the FPGA's master-SPI
+//! configuration interface: `T = bits · (1 + η) / (width · f)` where η is
+//! the protocol overhead (read command, address, dummy cycles, resync) and
+//! `width · f` is the aggregate line rate. Loading power is a static floor
+//! (configuration engine + flash read) plus a dynamic term proportional to
+//! the switching rate, higher for compressed streams (denser transitions).
+//! Constants are fitted to the paper's published endpoints (DESIGN.md §6).
+
+use crate::config::schema::{FpgaModel, SpiConfig};
+use crate::device::calib::{
+    loading_static_power, COMPRESSED_ACTIVITY, SPI_DYN_MW_PER_MHZ_LANE, SPI_OVERHEAD,
+    UNCOMPRESSED_ACTIVITY,
+};
+use crate::util::units::{Duration, Power};
+
+/// Raw line rate in bits/second for a setting.
+pub fn line_rate_bps(spi: &SpiConfig) -> f64 {
+    spi.buswidth as f64 * spi.freq_mhz * 1e6
+}
+
+/// Time to shift `bits` through the port, including protocol overhead.
+pub fn transfer_time(spi: &SpiConfig, bits: u64) -> Duration {
+    Duration::from_secs(bits as f64 * (1.0 + SPI_OVERHEAD) / line_rate_bps(spi))
+}
+
+/// Average power during the loading stage for a setting.
+pub fn loading_power(model: FpgaModel, spi: &SpiConfig) -> Power {
+    let activity = if spi.compressed {
+        COMPRESSED_ACTIVITY
+    } else {
+        UNCOMPRESSED_ACTIVITY
+    };
+    loading_static_power(model)
+        + Power::from_milliwatts(
+            SPI_DYN_MW_PER_MHZ_LANE * spi.buswidth as f64 * spi.freq_mhz * activity,
+        )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_rates() {
+        assert_eq!(line_rate_bps(&SpiConfig::worst()), 3e6);
+        assert_eq!(line_rate_bps(&SpiConfig::optimal()), 264e6);
+    }
+
+    #[test]
+    fn worst_case_transfer_time_matches_fig7() {
+        // Single SPI @ 3 MHz, uncompressed XC7S15 stream → ≈1469.6 ms
+        let t = transfer_time(&SpiConfig::worst(), FpgaModel::Xc7s15.bitstream_bits());
+        assert!((t.millis() - 1469.6).abs() < 1.0, "t={}", t.millis());
+    }
+
+    #[test]
+    fn transfer_time_scales_inversely_with_rate() {
+        let bits = 1_000_000;
+        let slow = transfer_time(&SpiConfig::worst(), bits);
+        let fast = transfer_time(&SpiConfig::optimal(), bits);
+        assert!((slow / fast - 88.0).abs() < 1e-9); // 264/3
+    }
+
+    #[test]
+    fn loading_power_endpoints() {
+        let worst = loading_power(FpgaModel::Xc7s15, &SpiConfig::worst());
+        assert!((worst.milliwatts() - 318.3).abs() < 0.1);
+        let opt = loading_power(FpgaModel::Xc7s15, &SpiConfig::optimal());
+        assert!((opt.milliwatts() - 445.7).abs() < 0.2);
+    }
+
+    #[test]
+    fn compression_increases_loading_power() {
+        let mut spi = SpiConfig::optimal();
+        let with = loading_power(FpgaModel::Xc7s15, &spi);
+        spi.compressed = false;
+        let without = loading_power(FpgaModel::Xc7s15, &spi);
+        assert!(with > without);
+    }
+
+    #[test]
+    fn power_monotone_in_width_and_freq() {
+        let mut last = Power::ZERO;
+        for &w in &SpiConfig::BUSWIDTHS {
+            let p = loading_power(
+                FpgaModel::Xc7s15,
+                &SpiConfig {
+                    buswidth: w,
+                    freq_mhz: 33.0,
+                    compressed: false,
+                },
+            );
+            assert!(p > last);
+            last = p;
+        }
+        last = Power::ZERO;
+        for &f in &SpiConfig::FREQS_MHZ {
+            let p = loading_power(
+                FpgaModel::Xc7s15,
+                &SpiConfig {
+                    buswidth: 2,
+                    freq_mhz: f,
+                    compressed: false,
+                },
+            );
+            assert!(p > last);
+            last = p;
+        }
+    }
+
+    #[test]
+    fn xc7s25_draws_more_during_loading() {
+        let p15 = loading_power(FpgaModel::Xc7s15, &SpiConfig::optimal());
+        let p25 = loading_power(FpgaModel::Xc7s25, &SpiConfig::optimal());
+        assert!(p25 > p15);
+    }
+}

@@ -1,0 +1,345 @@
+//! The paper's analytical model (§4.3, Equations 1–4).
+//!
+//! * Eq 1: `E_Sum^OnOff(n)    = Σᵢ E_Item^OnOff`
+//! * Eq 2: `E_Sum^IdleWait(n) = E_Init + Σᵢ E_Item^IdleWait + Σᵢⁿ⁻¹ E_Idle`
+//! * Eq 3: `n_max = max{ n ∈ ℕ | E_Sum(n) ≤ E_Budget }`
+//! * Eq 4: `T_lifetime = n_max · T_req`
+//!
+//! Per-item energies are derived from the workload-item description
+//! (Table 2) plus the calibrated power-on transient (DESIGN.md §6):
+//!
+//! * `E_Item^OnOff   = E_transient + E_config + E_active`
+//! * `E_Init         = E_transient + E_config` (one-time, Idle-Waiting)
+//! * `E_Item^IdleWait = E_active` (configuration-related overheads zero)
+//! * `E_Idle         = P_idle · (T_req − T_latency_noconfig)`
+
+use crate::config::schema::{StrategyKind, WorkloadItemSpec};
+use crate::device::rails::{PowerSaving, RailSet};
+use crate::util::units::{Duration, Energy, Power};
+
+/// Energy quantities derived once from a workload-item description.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ItemEnergetics {
+    /// Configuration-phase energy (Table 2: ≈11.85 mJ at optimal settings).
+    pub e_config: Energy,
+    /// Data loading + inference + data offloading energy (≈6.49 µJ).
+    pub e_active: Energy,
+    /// Power-cycle transient charged per On-Off item (≈0.124 mJ).
+    pub e_transient: Energy,
+    /// Item latency including configuration (On-Off critical path).
+    pub latency_with_config: Duration,
+    /// Item latency excluding configuration (Idle-Waiting critical path).
+    pub latency_without_config: Duration,
+    /// Baseline idle power from the item description (134.3 mW).
+    pub idle_power_baseline: Power,
+}
+
+impl ItemEnergetics {
+    pub fn from_spec(item: &WorkloadItemSpec) -> ItemEnergetics {
+        ItemEnergetics {
+            e_config: item.configuration.energy(),
+            e_active: item.active_energy_without_config(),
+            e_transient: item.power_on_transient,
+            latency_with_config: item.latency_with_config(),
+            latency_without_config: item.latency_without_config(),
+            idle_power_baseline: item.idle_power,
+        }
+    }
+
+    /// Full per-item energy under On-Off.
+    pub fn e_item_onoff(&self) -> Energy {
+        self.e_transient + self.e_config + self.e_active
+    }
+
+    /// One-time initial overhead under Idle-Waiting.
+    pub fn e_init(&self) -> Energy {
+        self.e_transient + self.e_config
+    }
+
+    /// Idle power for a strategy: the baseline comes from the measured
+    /// item description; the power-saving methods from the rail model.
+    pub fn idle_power(&self, kind: StrategyKind) -> Power {
+        match kind {
+            StrategyKind::IdleWaiting => self.idle_power_baseline,
+            StrategyKind::IdleWaitingM1 => RailSet::idle_power(PowerSaving::M1),
+            StrategyKind::IdleWaitingM12 => RailSet::idle_power(PowerSaving::M12),
+            StrategyKind::OnOff | StrategyKind::Adaptive => self.idle_power_baseline,
+        }
+    }
+}
+
+/// Result of an analytical evaluation for one (strategy, T_req) point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Prediction {
+    pub strategy: StrategyKind,
+    pub t_req: Duration,
+    /// Eq 3: maximum executable workload items. `None` = infeasible
+    /// (On-Off with T_req below the item latency — Fig 8's gap).
+    pub n_max: Option<u64>,
+    /// Eq 4: system lifetime.
+    pub lifetime: Duration,
+    /// Mean per-item energy at large n (reporting).
+    pub e_per_item: Energy,
+}
+
+/// The analytical model bound to an item description and a budget.
+#[derive(Debug, Clone)]
+pub struct Analytical {
+    pub item: ItemEnergetics,
+    pub budget: Energy,
+}
+
+impl Analytical {
+    pub fn new(item: &WorkloadItemSpec, budget: Energy) -> Analytical {
+        Analytical {
+            item: ItemEnergetics::from_spec(item),
+            budget,
+        }
+    }
+
+    /// Eq 1: cumulative On-Off energy for n items.
+    pub fn e_sum_onoff(&self, n: u64) -> Energy {
+        self.item.e_item_onoff() * n as f64
+    }
+
+    /// Eq 2: cumulative Idle-Waiting energy for n items at `t_req` with
+    /// idle power `p_idle`.
+    pub fn e_sum_idle_waiting(&self, n: u64, t_req: Duration, p_idle: Power) -> Energy {
+        if n == 0 {
+            return self.item.e_init();
+        }
+        let e_idle = self.e_idle(t_req, p_idle);
+        self.item.e_init()
+            + self.item.e_active * n as f64
+            + e_idle * (n - 1) as f64
+    }
+
+    /// Per-gap idle energy: `P_idle · (T_req − T_latency)`.
+    pub fn e_idle(&self, t_req: Duration, p_idle: Power) -> Energy {
+        let t_idle = t_req - self.item.latency_without_config;
+        debug_assert!(t_idle.secs() >= 0.0, "period shorter than item latency");
+        p_idle * t_idle
+    }
+
+    /// On-Off feasibility (paper §5.3: no On-Off below 36.15 ms).
+    pub fn onoff_feasible(&self, t_req: Duration) -> bool {
+        t_req >= self.item.latency_with_config
+    }
+
+    /// Eq 3 for On-Off: `floor(E_Budget / E_Item)`, or None if infeasible.
+    pub fn n_max_onoff(&self, t_req: Duration) -> Option<u64> {
+        if !self.onoff_feasible(t_req) {
+            return None;
+        }
+        Some((self.budget / self.item.e_item_onoff()).floor() as u64)
+    }
+
+    /// Eq 3 for Idle-Waiting at idle power `p_idle`:
+    /// `n ≤ (E_Budget − E_Init + E_Idle) / (E_Item + E_Idle)`.
+    pub fn n_max_idle_waiting(&self, t_req: Duration, p_idle: Power) -> Option<u64> {
+        if t_req < self.item.latency_without_config {
+            return None;
+        }
+        let e_idle = self.e_idle(t_req, p_idle);
+        let per_item = self.item.e_active + e_idle;
+        let numerator = self.budget - self.item.e_init() + e_idle;
+        if numerator.joules() < 0.0 {
+            return Some(0);
+        }
+        Some((numerator / per_item).floor() as u64)
+    }
+
+    /// Evaluate Eqs 3–4 for a strategy at `t_req`.
+    pub fn predict(&self, strategy: StrategyKind, t_req: Duration) -> Prediction {
+        let (n_max, e_per_item) = match strategy {
+            StrategyKind::OnOff => (self.n_max_onoff(t_req), self.item.e_item_onoff()),
+            StrategyKind::IdleWaiting
+            | StrategyKind::IdleWaitingM1
+            | StrategyKind::IdleWaitingM12 => {
+                let p_idle = self.item.idle_power(strategy);
+                (
+                    self.n_max_idle_waiting(t_req, p_idle),
+                    self.item.e_active + self.e_idle(t_req, p_idle),
+                )
+            }
+            StrategyKind::Adaptive => {
+                // the adaptive strategy picks the better of the two
+                let onoff = self.predict(StrategyKind::OnOff, t_req);
+                let iw = self.predict(StrategyKind::IdleWaiting, t_req);
+                return if onoff.n_max.unwrap_or(0) >= iw.n_max.unwrap_or(0) {
+                    Prediction {
+                        strategy: StrategyKind::Adaptive,
+                        ..onoff
+                    }
+                } else {
+                    Prediction {
+                        strategy: StrategyKind::Adaptive,
+                        ..iw
+                    }
+                };
+            }
+        };
+        Prediction {
+            strategy,
+            t_req,
+            n_max,
+            lifetime: t_req * n_max.unwrap_or(0) as f64, // Eq 4
+            e_per_item,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_default;
+
+    fn model() -> Analytical {
+        let cfg = paper_default();
+        Analytical::new(&cfg.item, cfg.workload.energy_budget)
+    }
+
+    fn ms(x: f64) -> Duration {
+        Duration::from_millis(x)
+    }
+
+    #[test]
+    fn e_item_onoff_is_calibrated() {
+        let m = model();
+        assert!(
+            (m.item.e_item_onoff().millijoules() - 11.983).abs() < 0.001,
+            "{}",
+            m.item.e_item_onoff().millijoules()
+        );
+    }
+
+    #[test]
+    fn onoff_nmax_matches_paper_fig8() {
+        // paper: 346,073 items independent of T_req (≥ 36.15 ms)
+        let m = model();
+        for t in [40.0, 60.0, 90.0, 120.0] {
+            let n = m.n_max_onoff(ms(t)).unwrap();
+            assert!(n.abs_diff(346_073) <= 150, "t={t}: n={n}");
+        }
+    }
+
+    #[test]
+    fn onoff_infeasible_below_config_time() {
+        let m = model();
+        assert_eq!(m.n_max_onoff(ms(36.0)), None);
+        assert_eq!(m.n_max_onoff(ms(10.0)), None);
+        assert!(m.n_max_onoff(ms(36.19)).is_some());
+    }
+
+    #[test]
+    fn idle_waiting_nmax_matches_paper_extremes() {
+        // paper Fig 8: ≈3,085,319 at 10 ms; ≈257,305 at 120 ms
+        let m = model();
+        let n10 = m
+            .n_max_idle_waiting(ms(10.0), m.item.idle_power_baseline)
+            .unwrap();
+        assert!(n10.abs_diff(3_085_319) < 600, "n10={n10}");
+        let n120 = m
+            .n_max_idle_waiting(ms(120.0), m.item.idle_power_baseline)
+            .unwrap();
+        assert!(n120.abs_diff(257_305) < 60, "n120={n120}");
+    }
+
+    #[test]
+    fn idle_waiting_beats_onoff_2_23x_at_40ms() {
+        let m = model();
+        let iw = m.predict(StrategyKind::IdleWaiting, ms(40.0)).n_max.unwrap();
+        let onoff = m.predict(StrategyKind::OnOff, ms(40.0)).n_max.unwrap();
+        let ratio = iw as f64 / onoff as f64;
+        assert!((ratio - 2.23).abs() < 0.005, "ratio={ratio}");
+    }
+
+    #[test]
+    fn method12_yields_12_39x_lifetime_at_40ms() {
+        // paper conclusion: ≈12.39× the On-Off items/lifetime at 40 ms
+        let m = model();
+        let m12 = m.predict(StrategyKind::IdleWaitingM12, ms(40.0)).n_max.unwrap();
+        let onoff = m.predict(StrategyKind::OnOff, ms(40.0)).n_max.unwrap();
+        let ratio = m12 as f64 / onoff as f64;
+        assert!((ratio - 12.39).abs() < 0.05, "ratio={ratio}");
+    }
+
+    #[test]
+    fn idle_waiting_lifetime_approx_8_58h() {
+        let m = model();
+        for t in [10.0, 40.0, 80.0, 120.0] {
+            let p = m.predict(StrategyKind::IdleWaiting, ms(t));
+            assert!(
+                (p.lifetime.hours() - 8.58).abs() < 0.03,
+                "t={t}: {}h",
+                p.lifetime.hours()
+            );
+        }
+    }
+
+    #[test]
+    fn onoff_lifetime_linear_in_t_req() {
+        let m = model();
+        let l40 = m.predict(StrategyKind::OnOff, ms(40.0)).lifetime;
+        let l80 = m.predict(StrategyKind::OnOff, ms(80.0)).lifetime;
+        assert!((l80 / l40 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eq2_matches_manual_sum() {
+        let m = model();
+        let p_idle = m.item.idle_power_baseline;
+        let n = 1000u64;
+        let manual = m.item.e_init()
+            + m.item.e_active * n as f64
+            + m.e_idle(ms(40.0), p_idle) * (n - 1) as f64;
+        let eq2 = m.e_sum_idle_waiting(n, ms(40.0), p_idle);
+        assert!((manual.joules() - eq2.joules()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq3_boundary_exactness() {
+        // E_Sum(n_max) ≤ budget < E_Sum(n_max + 1)
+        let m = model();
+        let p_idle = m.item.idle_power_baseline;
+        let n = m.n_max_idle_waiting(ms(40.0), p_idle).unwrap();
+        assert!(m.e_sum_idle_waiting(n, ms(40.0), p_idle) <= m.budget);
+        assert!(m.e_sum_idle_waiting(n + 1, ms(40.0), p_idle) > m.budget);
+        let n = m.n_max_onoff(ms(40.0)).unwrap();
+        assert!(m.e_sum_onoff(n) <= m.budget);
+        assert!(m.e_sum_onoff(n + 1) > m.budget);
+    }
+
+    #[test]
+    fn adaptive_picks_the_winner() {
+        let m = model();
+        // short period → Idle-Waiting wins
+        let a = m.predict(StrategyKind::Adaptive, ms(40.0));
+        let iw = m.predict(StrategyKind::IdleWaiting, ms(40.0));
+        assert_eq!(a.n_max, iw.n_max);
+        // long period → On-Off wins
+        let a = m.predict(StrategyKind::Adaptive, ms(200.0));
+        let onoff = m.predict(StrategyKind::OnOff, ms(200.0));
+        assert_eq!(a.n_max, onoff.n_max);
+    }
+
+    #[test]
+    fn zero_items_allowed_if_budget_tiny() {
+        let cfg = paper_default();
+        let m = Analytical::new(&cfg.item, Energy::from_millijoules(1.0));
+        // budget below even E_Init
+        assert_eq!(
+            m.n_max_idle_waiting(ms(40.0), m.item.idle_power_baseline),
+            Some(0)
+        );
+        assert_eq!(m.n_max_onoff(ms(40.0)), Some(0));
+    }
+
+    #[test]
+    fn method_idle_powers_from_rail_model() {
+        let m = model();
+        assert!((m.item.idle_power(StrategyKind::IdleWaiting).milliwatts() - 134.3).abs() < 1e-9);
+        assert!((m.item.idle_power(StrategyKind::IdleWaitingM1).milliwatts() - 34.2).abs() < 1e-9);
+        assert!((m.item.idle_power(StrategyKind::IdleWaitingM12).milliwatts() - 24.0).abs() < 0.05);
+    }
+}

@@ -1,0 +1,157 @@
+//! Crossover-point solver: the request period where Idle-Waiting and
+//! On-Off break even (paper: 89.21 ms baseline, 499.06 ms with both
+//! power-saving methods).
+//!
+//! Two solvers:
+//!
+//! * [`asymptotic`] — closed form. At large n the E_Init amortizes away
+//!   and the strategies tie when per-item energies match:
+//!   `E_Item^OnOff = E_active + P_idle · (T* − T_latency)` ⟹
+//!   `T* = (E_Item^OnOff − E_active)/P_idle + T_latency`.
+//! * [`exact`] — bisection on the integer n_max difference under the
+//!   finite budget; validates that the closed form is the right answer to
+//!   within the sweep resolution the paper used (0.01 ms).
+
+use crate::energy::analytical::Analytical;
+use crate::util::units::{Duration, Power};
+
+/// Closed-form asymptotic crossover for a given idle power.
+pub fn asymptotic(model: &Analytical, p_idle: Power) -> Duration {
+    let surplus = model.item.e_item_onoff() - model.item.e_active;
+    surplus / p_idle + model.item.latency_without_config
+}
+
+/// Exact finite-budget crossover by bisection: the largest `T_req` (within
+/// `[lo, hi]`, to `tol`) where Idle-Waiting still executes at least as many
+/// items as On-Off. Returns `None` if there is no sign change in the range.
+pub fn exact(
+    model: &Analytical,
+    p_idle: Power,
+    lo: Duration,
+    hi: Duration,
+    tol: Duration,
+) -> Option<Duration> {
+    let iw_wins = |t: Duration| -> bool {
+        let iw = model.n_max_idle_waiting(t, p_idle).unwrap_or(0);
+        let onoff = model.n_max_onoff(t).unwrap_or(0);
+        iw >= onoff
+    };
+    let (mut lo, mut hi) = (lo, hi);
+    if !iw_wins(lo) || iw_wins(hi) {
+        return None; // no crossover bracketed
+    }
+    while (hi - lo).secs() > tol.secs() {
+        let mid = Duration::from_secs((lo.secs() + hi.secs()) / 2.0);
+        if iw_wins(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Some(lo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_default;
+    use crate::config::schema::StrategyKind;
+    use crate::util::units::Energy;
+
+    fn model() -> Analytical {
+        let cfg = paper_default();
+        Analytical::new(&cfg.item, cfg.workload.energy_budget)
+    }
+
+    #[test]
+    fn baseline_crossover_is_89_21ms() {
+        let m = model();
+        let t = asymptotic(&m, m.item.idle_power(StrategyKind::IdleWaiting));
+        assert!((t.millis() - 89.21).abs() < 0.02, "t={}", t.millis());
+    }
+
+    #[test]
+    fn method12_crossover_is_499_06ms() {
+        let m = model();
+        let t = asymptotic(&m, m.item.idle_power(StrategyKind::IdleWaitingM12));
+        assert!((t.millis() - 499.06).abs() < 0.1, "t={}", t.millis());
+    }
+
+    #[test]
+    fn method1_crossover_around_350ms() {
+        // not quoted by the paper; implied by its model (34.2 mW)
+        let m = model();
+        let t = asymptotic(&m, m.item.idle_power(StrategyKind::IdleWaitingM1));
+        assert!((t.millis() - 350.2).abs() < 0.5, "t={}", t.millis());
+    }
+
+    #[test]
+    fn exact_agrees_with_asymptotic_at_paper_resolution() {
+        let m = model();
+        for kind in [
+            StrategyKind::IdleWaiting,
+            StrategyKind::IdleWaitingM1,
+            StrategyKind::IdleWaitingM12,
+        ] {
+            let p = m.item.idle_power(kind);
+            let closed = asymptotic(&m, p);
+            let bisected = exact(
+                &m,
+                p,
+                Duration::from_millis(37.0),
+                Duration::from_millis(600.0),
+                Duration::from_millis(0.01), // the paper's sweep step
+            )
+            .unwrap();
+            assert!(
+                (closed.millis() - bisected.millis()).abs() < 0.05,
+                "{kind}: closed={} exact={}",
+                closed.millis(),
+                bisected.millis()
+            );
+        }
+    }
+
+    #[test]
+    fn no_crossover_when_range_misses_it() {
+        let m = model();
+        let p = m.item.idle_power(StrategyKind::IdleWaiting);
+        assert!(exact(
+            &m,
+            p,
+            Duration::from_millis(37.0),
+            Duration::from_millis(50.0),
+            Duration::from_millis(0.01)
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn crossover_scales_with_idle_power() {
+        // halving idle power should roughly double the crossover period
+        let m = model();
+        let t1 = asymptotic(&m, Power::from_milliwatts(100.0));
+        let t2 = asymptotic(&m, Power::from_milliwatts(50.0));
+        assert!((t2.millis() / t1.millis() - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn crossover_below_latency_never_happens() {
+        // with absurdly high idle power the formula floors at the latency
+        let m = model();
+        let t = asymptotic(&m, Power::from_watts(10_000.0));
+        assert!(t >= m.item.latency_without_config);
+    }
+
+    #[test]
+    fn bigger_budget_does_not_move_asymptotic_crossover() {
+        let cfg = paper_default();
+        let small = Analytical::new(&cfg.item, Energy::from_joules(100.0));
+        let large = Analytical::new(&cfg.item, Energy::from_joules(100_000.0));
+        let p = small.item.idle_power(StrategyKind::IdleWaiting);
+        assert_eq!(
+            asymptotic(&small, p).millis(),
+            asymptotic(&large, p).millis()
+        );
+    }
+}

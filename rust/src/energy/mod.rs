@@ -1,0 +1,9 @@
+//! Energy model: workload-item phases (Table 2), the paper's analytical
+//! model (Eqs 1–4) and the strategy crossover solvers.
+
+pub mod analytical;
+pub mod crossover;
+pub mod phase;
+
+pub use analytical::{Analytical, ItemEnergetics, Prediction};
+pub use phase::{Breakdown, Phase, PhaseProfile};

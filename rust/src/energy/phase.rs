@@ -1,0 +1,153 @@
+//! Workload-item phases (paper Fig 1/2, Table 2).
+//!
+//! A workload item is the sequence of operations the FPGA performs per
+//! inference request: configuration, data loading, inference, data
+//! offloading — plus, under Idle-Waiting, the idle gap until the next
+//! request. This module gives the phases identity (for breakdowns like
+//! Fig 2) on top of the raw `PhaseSpec` power/duration pairs.
+
+use crate::config::schema::WorkloadItemSpec;
+use crate::util::units::{Duration, Energy, Power};
+
+/// Phase identity within a workload item.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Phase {
+    Configuration,
+    DataLoading,
+    Inference,
+    DataOffloading,
+    Idle,
+}
+
+impl Phase {
+    pub const ACTIVE: [Phase; 4] = [
+        Phase::Configuration,
+        Phase::DataLoading,
+        Phase::Inference,
+        Phase::DataOffloading,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Configuration => "configuration",
+            Phase::DataLoading => "data_loading",
+            Phase::Inference => "inference",
+            Phase::DataOffloading => "data_offloading",
+            Phase::Idle => "idle",
+        }
+    }
+}
+
+/// Power and duration of a phase instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseProfile {
+    pub phase: Phase,
+    pub power: Power,
+    pub time: Duration,
+}
+
+impl PhaseProfile {
+    pub fn energy(&self) -> Energy {
+        self.power * self.time
+    }
+}
+
+/// The active phases of an item from its spec (Table 2 order).
+pub fn active_profiles(item: &WorkloadItemSpec) -> [PhaseProfile; 4] {
+    [
+        PhaseProfile {
+            phase: Phase::Configuration,
+            power: item.configuration.power,
+            time: item.configuration.time,
+        },
+        PhaseProfile {
+            phase: Phase::DataLoading,
+            power: item.data_loading.power,
+            time: item.data_loading.time,
+        },
+        PhaseProfile {
+            phase: Phase::Inference,
+            power: item.inference.power,
+            time: item.inference.time,
+        },
+        PhaseProfile {
+            phase: Phase::DataOffloading,
+            power: item.data_offloading.power,
+            time: item.data_offloading.time,
+        },
+    ]
+}
+
+/// Per-phase energy breakdown with fractions (the Fig 2 pie).
+#[derive(Debug, Clone)]
+pub struct Breakdown {
+    pub entries: Vec<(Phase, Energy)>,
+    pub total: Energy,
+}
+
+impl Breakdown {
+    pub fn of_item(item: &WorkloadItemSpec) -> Breakdown {
+        let entries: Vec<(Phase, Energy)> = active_profiles(item)
+            .iter()
+            .map(|p| (p.phase, p.energy()))
+            .collect();
+        let total = entries.iter().map(|(_, e)| *e).sum();
+        Breakdown { entries, total }
+    }
+
+    /// Fraction of total energy attributable to `phase`, in [0, 1].
+    pub fn fraction(&self, phase: Phase) -> f64 {
+        self.entries
+            .iter()
+            .find(|(p, _)| *p == phase)
+            .map(|(_, e)| *e / self.total)
+            .unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_default;
+
+    #[test]
+    fn active_profile_energies_match_table2() {
+        let item = paper_default().item;
+        let profiles = active_profiles(&item);
+        let e: Vec<f64> = profiles.iter().map(|p| p.energy().microjoules()).collect();
+        assert!((e[0] - 11852.0).abs() < 10.0); // configuration
+        assert!((e[1] - 1.387).abs() < 1e-3); // data loading
+        assert!((e[2] - 4.816).abs() < 1e-2); // inference
+        assert!((e[3] - 0.2882).abs() < 1e-3); // data offloading
+    }
+
+    #[test]
+    fn configuration_dominates_optimized_item() {
+        // Even at the optimal configuration setting, configuration is
+        // >99.9% of the (active) item — the motivation for Idle-Waiting.
+        let item = paper_default().item;
+        let b = Breakdown::of_item(&item);
+        assert!(b.fraction(Phase::Configuration) > 0.999);
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let item = paper_default().item;
+        let b = Breakdown::of_item(&item);
+        let sum: f64 = Phase::ACTIVE.iter().map(|p| b.fraction(*p)).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_fraction_of_active_breakdown_is_zero() {
+        let item = paper_default().item;
+        let b = Breakdown::of_item(&item);
+        assert_eq!(b.fraction(Phase::Idle), 0.0);
+    }
+
+    #[test]
+    fn phase_names() {
+        assert_eq!(Phase::Configuration.name(), "configuration");
+        assert_eq!(Phase::Idle.name(), "idle");
+    }
+}

@@ -1,0 +1,293 @@
+//! Experiment 1 (paper §5.2, Fig 7): configuration-phase optimization.
+//!
+//! Sweeps the three bitstream-loading knobs of Table 1 — SPI buswidth
+//! {1,2,4} × clock {3..66 MHz, 11 values} × compression {off,on} — on the
+//! synthetic-bitstream device model and reports, per setting, the
+//! time/power/energy of the configuration phase and of its Setup and
+//! Bitstream-Loading stages: exactly Fig 7's 3×3 grid of series, plus the
+//! paper's XC7S25 spot-check.
+
+use crate::config::schema::{FpgaModel, SpiConfig};
+use crate::device::bitstream::Bitstream;
+use crate::device::config_fsm::ConfigProfile;
+use crate::device::flash::StoredImage;
+use crate::experiments::paper;
+use crate::util::csv::Csv;
+use crate::util::table::{fnum, Table};
+
+/// One sweep point of Fig 7.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub spi: SpiConfig,
+    pub profile: ConfigProfile,
+}
+
+impl SweepPoint {
+    pub fn config_time_ms(&self) -> f64 {
+        self.profile.total_time().millis()
+    }
+
+    pub fn config_energy_mj(&self) -> f64 {
+        self.profile.total_energy().millijoules()
+    }
+
+    pub fn config_power_mw(&self) -> f64 {
+        self.profile.avg_power().milliwatts()
+    }
+}
+
+/// Full Experiment 1 results.
+#[derive(Debug, Clone)]
+pub struct Exp1Result {
+    pub model: FpgaModel,
+    pub points: Vec<SweepPoint>,
+}
+
+/// Run the 66-point sweep for `model`.
+pub fn run(model: FpgaModel) -> Exp1Result {
+    let bitstream = Bitstream::lstm_accelerator(model);
+    let points = SpiConfig::sweep()
+        .into_iter()
+        .map(|spi| {
+            let image = StoredImage::new(bitstream.clone(), spi.compressed);
+            SweepPoint {
+                spi,
+                profile: ConfigProfile::compute(model, spi, &image),
+            }
+        })
+        .collect();
+    Exp1Result { model, points }
+}
+
+impl Exp1Result {
+    pub fn point(&self, spi: SpiConfig) -> &SweepPoint {
+        self.points
+            .iter()
+            .find(|p| p.spi == spi)
+            .expect("sweep covers all settings")
+    }
+
+    pub fn optimal(&self) -> &SweepPoint {
+        self.point(SpiConfig::optimal())
+    }
+
+    pub fn worst(&self) -> &SweepPoint {
+        self.point(SpiConfig::worst())
+    }
+
+    /// The headline 40.13× energy reduction.
+    pub fn energy_improvement(&self) -> f64 {
+        self.worst().config_energy_mj() / self.optimal().config_energy_mj()
+    }
+
+    /// The headline 41.4× time reduction.
+    pub fn time_improvement(&self) -> f64 {
+        self.worst().config_time_ms() / self.optimal().config_time_ms()
+    }
+
+    /// Fig 7's selected frequencies (3, 33, 66 MHz) as a printed table —
+    /// the same data points the paper plots "due to space constraints".
+    pub fn render_fig7(&self) -> String {
+        let mut out = String::new();
+        for (metric, extract) in [
+            (
+                "time (ms)",
+                Box::new(|p: &SweepPoint, stage: &str| match stage {
+                    "config" => p.config_time_ms(),
+                    "setup" => p.profile.setup().time.millis(),
+                    _ => p.profile.loading().time.millis(),
+                }) as Box<dyn Fn(&SweepPoint, &str) -> f64>,
+            ),
+            (
+                "power (mW)",
+                Box::new(|p: &SweepPoint, stage: &str| match stage {
+                    "config" => p.config_power_mw(),
+                    "setup" => p.profile.setup().power.milliwatts(),
+                    _ => p.profile.loading().power.milliwatts(),
+                }),
+            ),
+            (
+                "energy (mJ)",
+                Box::new(|p: &SweepPoint, stage: &str| match stage {
+                    "config" => p.config_energy_mj(),
+                    "setup" => p.profile.setup().energy().millijoules(),
+                    _ => p.profile.loading().energy().millijoules(),
+                }),
+            ),
+        ] {
+            for stage in ["config", "setup", "loading"] {
+                let mut t = Table::new(&["buswidth", "compressed", "3 MHz", "33 MHz", "66 MHz"])
+                    .with_title(format!(
+                        "Fig 7 [{}] — {} stage ({})",
+                        metric, stage, self.model
+                    ));
+                for &compressed in &[false, true] {
+                    for &buswidth in &SpiConfig::BUSWIDTHS {
+                        let cells: Vec<String> = [3.0, 33.0, 66.0]
+                            .iter()
+                            .map(|&freq_mhz| {
+                                let p = self.point(SpiConfig {
+                                    buswidth,
+                                    freq_mhz,
+                                    compressed,
+                                });
+                                fnum(extract(p, stage), 3)
+                            })
+                            .collect();
+                        t.row(&[
+                            buswidth.to_string(),
+                            compressed.to_string(),
+                            cells[0].clone(),
+                            cells[1].clone(),
+                            cells[2].clone(),
+                        ]);
+                    }
+                }
+                out.push_str(&t.render());
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// Headline summary with paper comparison.
+    pub fn render_summary(&self) -> String {
+        let mut t = Table::new(&["metric", "paper", "measured"])
+            .with_title(format!("Experiment 1 summary ({})", self.model));
+        let opt = self.optimal();
+        let worst = self.worst();
+        t.row(&[
+            "optimal config time (ms)".into(),
+            fnum(paper::exp1::OPT_TIME_MS, 3),
+            fnum(opt.config_time_ms(), 3),
+        ]);
+        t.row(&[
+            "optimal config energy (mJ)".into(),
+            fnum(paper::exp1::OPT_ENERGY_MJ, 2),
+            fnum(opt.config_energy_mj(), 2),
+        ]);
+        t.row(&[
+            "optimal config power (mW)".into(),
+            fnum(paper::exp1::OPT_POWER_MW, 1),
+            fnum(opt.config_power_mw(), 1),
+        ]);
+        t.row(&[
+            "worst config energy (mJ)".into(),
+            fnum(paper::exp1::WORST_ENERGY_MJ, 2),
+            fnum(worst.config_energy_mj(), 2),
+        ]);
+        t.row(&[
+            "energy improvement (×)".into(),
+            fnum(paper::exp1::ENERGY_IMPROVEMENT, 2),
+            fnum(self.energy_improvement(), 2),
+        ]);
+        t.row(&[
+            "time improvement (×)".into(),
+            fnum(paper::exp1::TIME_IMPROVEMENT, 1),
+            fnum(self.time_improvement(), 1),
+        ]);
+        t.render()
+    }
+
+    /// Full-sweep CSV (all 66 points × all stages).
+    pub fn to_csv(&self) -> Csv {
+        let mut csv = Csv::new(&[
+            "buswidth",
+            "freq_mhz",
+            "compressed",
+            "config_time_ms",
+            "config_power_mw",
+            "config_energy_mj",
+            "setup_time_ms",
+            "setup_power_mw",
+            "setup_energy_mj",
+            "loading_time_ms",
+            "loading_power_mw",
+            "loading_energy_mj",
+        ]);
+        for p in &self.points {
+            csv.row_f64(&[
+                p.spi.buswidth as f64,
+                p.spi.freq_mhz,
+                p.spi.compressed as u8 as f64,
+                p.config_time_ms(),
+                p.config_power_mw(),
+                p.config_energy_mj(),
+                p.profile.setup().time.millis(),
+                p.profile.setup().power.milliwatts(),
+                p.profile.setup().energy().millijoules(),
+                p.profile.loading().time.millis(),
+                p.profile.loading().power.milliwatts(),
+                p.profile.loading().energy().millijoules(),
+            ]);
+        }
+        csv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_numbers_reproduce() {
+        let r = run(FpgaModel::Xc7s15);
+        assert_eq!(r.points.len(), 66);
+        assert!((r.optimal().config_time_ms() - 36.145).abs() < 0.01);
+        assert!((r.optimal().config_energy_mj() - 11.85).abs() < 0.02);
+        assert!((r.energy_improvement() - 40.13).abs() < 0.15);
+        assert!((r.time_improvement() - 41.4).abs() < 0.1);
+    }
+
+    #[test]
+    fn xc7s25_matches_paper_spotcheck() {
+        let r = run(FpgaModel::Xc7s25);
+        assert!((r.optimal().config_time_ms() - 38.09).abs() < 0.05);
+        assert!((r.optimal().config_energy_mj() - 13.75).abs() < 0.05);
+    }
+
+    #[test]
+    fn energy_monotone_decreasing_in_freq_at_fixed_width() {
+        // the paper's key trend: higher frequency → lower config energy
+        let r = run(FpgaModel::Xc7s15);
+        for &buswidth in &SpiConfig::BUSWIDTHS {
+            for &compressed in &[false, true] {
+                let mut last = f64::INFINITY;
+                for &freq_mhz in &SpiConfig::FREQS_MHZ {
+                    let e = r
+                        .point(SpiConfig {
+                            buswidth,
+                            freq_mhz,
+                            compressed,
+                        })
+                        .config_energy_mj();
+                    assert!(e < last, "w={buswidth} c={compressed} f={freq_mhz}");
+                    last = e;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compression_always_helps_energy() {
+        let r = run(FpgaModel::Xc7s15);
+        for &buswidth in &SpiConfig::BUSWIDTHS {
+            for &freq_mhz in &SpiConfig::FREQS_MHZ {
+                let on = r.point(SpiConfig { buswidth, freq_mhz, compressed: true });
+                let off = r.point(SpiConfig { buswidth, freq_mhz, compressed: false });
+                assert!(on.config_energy_mj() < off.config_energy_mj());
+            }
+        }
+    }
+
+    #[test]
+    fn renders_and_csv() {
+        let r = run(FpgaModel::Xc7s15);
+        let fig7 = r.render_fig7();
+        assert!(fig7.contains("Fig 7 [time (ms)] — config stage"));
+        assert!(fig7.contains("Fig 7 [energy (mJ)] — loading stage"));
+        let summary = r.render_summary();
+        assert!(summary.contains("40.13"));
+        assert_eq!(r.to_csv().n_rows(), 66);
+    }
+}

@@ -1,0 +1,259 @@
+//! Experiment 2 (paper §5.3, Table 2, Figs 8–9): Idle-Waiting vs On-Off.
+//!
+//! Sweeps the request period 10–120 ms at the paper's 0.01 ms resolution
+//! through the analytical model (which is what the paper's simulator
+//! implements), producing the Fig 8 executable-item series and the Fig 9
+//! lifetime series, the 89.21 ms crossover, and the 40 ms case study.
+
+use crate::config::loader::SimConfig;
+use crate::energy::analytical::Analytical;
+use crate::energy::crossover;
+use crate::experiments::paper;
+use crate::util::csv::Csv;
+use crate::util::table::{fcount, fnum, Table};
+use crate::util::units::Duration;
+
+/// One sweep sample.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    pub t_req_ms: f64,
+    /// None = infeasible (On-Off below the configuration time).
+    pub onoff_items: Option<u64>,
+    pub iw_items: u64,
+    pub onoff_lifetime_h: Option<f64>,
+    pub iw_lifetime_h: f64,
+}
+
+/// Full Experiment 2 results.
+#[derive(Debug, Clone)]
+pub struct Exp2Result {
+    pub samples: Vec<Sample>,
+    pub crossover_ms: f64,
+    pub step_ms: f64,
+}
+
+/// Run the sweep with the paper's parameters (or a coarser step for quick
+/// runs — pass `step_ms = 0.01` for full fidelity).
+pub fn run(config: &SimConfig, step_ms: f64) -> Exp2Result {
+    let model = Analytical::new(&config.item, config.workload.energy_budget);
+    let p_idle = model.item.idle_power_baseline;
+    let mut samples = Vec::new();
+    let mut t = paper::exp2::T_REQ_MIN_MS;
+    while t <= paper::exp2::T_REQ_MAX_MS + 1e-9 {
+        let t_req = Duration::from_millis(t);
+        let onoff_items = model.n_max_onoff(t_req);
+        let iw_items = model.n_max_idle_waiting(t_req, p_idle).unwrap_or(0);
+        samples.push(Sample {
+            t_req_ms: t,
+            onoff_items,
+            iw_items,
+            onoff_lifetime_h: onoff_items
+                .map(|n| (t_req * n as f64).hours()),
+            iw_lifetime_h: (t_req * iw_items as f64).hours(),
+        });
+        t += step_ms;
+    }
+    Exp2Result {
+        samples,
+        crossover_ms: crossover::asymptotic(&model, p_idle).millis(),
+        step_ms,
+    }
+}
+
+impl Exp2Result {
+    pub fn at(&self, t_req_ms: f64) -> &Sample {
+        self.samples
+            .iter()
+            .min_by(|a, b| {
+                (a.t_req_ms - t_req_ms)
+                    .abs()
+                    .partial_cmp(&(b.t_req_ms - t_req_ms).abs())
+                    .unwrap()
+            })
+            .expect("non-empty sweep")
+    }
+
+    /// The paper's 40 ms case-study ratio.
+    pub fn ratio_at_40ms(&self) -> f64 {
+        let s = self.at(40.0);
+        s.iw_items as f64 / s.onoff_items.expect("40 ms is feasible") as f64
+    }
+
+    /// Average Idle-Waiting lifetime across the sweep (paper: ≈8.58 h).
+    pub fn iw_avg_lifetime_h(&self) -> f64 {
+        self.samples.iter().map(|s| s.iw_lifetime_h).sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Fig 8 + Fig 9 at the paper's displayed 10 ms intervals.
+    pub fn render_figs(&self) -> String {
+        let mut t = Table::new(&[
+            "T_req (ms)",
+            "On-Off items",
+            "Idle-Waiting items",
+            "On-Off lifetime (h)",
+            "Idle-Waiting lifetime (h)",
+        ])
+        .with_title("Fig 8 (items) + Fig 9 (lifetime): Idle-Waiting vs On-Off");
+        let mut ms = 10.0;
+        while ms <= 120.0 + 1e-9 {
+            let s = self.at(ms);
+            t.row(&[
+                fnum(ms, 0),
+                s.onoff_items.map(fcount).unwrap_or_else(|| "—".into()),
+                fcount(s.iw_items),
+                s.onoff_lifetime_h
+                    .map(|h| fnum(h, 2))
+                    .unwrap_or_else(|| "—".into()),
+                fnum(s.iw_lifetime_h, 2),
+            ]);
+            ms += 10.0;
+        }
+        t.render()
+    }
+
+    /// Table 2 echo + headline summary with paper comparison.
+    pub fn render_summary(&self, config: &SimConfig) -> String {
+        let mut out = String::new();
+        let mut t2 = Table::new(&["phase", "power (mW)", "time (ms)"])
+            .with_title("Table 2: workload-item characterization");
+        for (name, p, ms) in [
+            ("configuration", config.item.configuration.power, config.item.configuration.time),
+            ("data loading", config.item.data_loading.power, config.item.data_loading.time),
+            ("inference", config.item.inference.power, config.item.inference.time),
+            ("data offloading", config.item.data_offloading.power, config.item.data_offloading.time),
+        ] {
+            t2.row(&[name.into(), fnum(p.milliwatts(), 1), fnum(ms.millis(), 4)]);
+        }
+        t2.row(&[
+            "idle-waiting".into(),
+            fnum(config.item.idle_power.milliwatts(), 1),
+            "varying".into(),
+        ]);
+        out.push_str(&t2.render());
+        out.push('\n');
+
+        let s40 = self.at(40.0);
+        let mut t = Table::new(&["metric", "paper", "measured"])
+            .with_title("Experiment 2 summary");
+        t.row(&[
+            "On-Off items".into(),
+            fcount(paper::exp2::ONOFF_ITEMS),
+            s40.onoff_items.map(fcount).unwrap_or_default(),
+        ]);
+        t.row(&[
+            "Idle-Waiting items @10 ms".into(),
+            fcount(paper::exp2::IW_ITEMS_MAX),
+            fcount(self.at(10.0).iw_items),
+        ]);
+        t.row(&[
+            "Idle-Waiting items @120 ms".into(),
+            fcount(paper::exp2::IW_ITEMS_MIN),
+            fcount(self.at(120.0).iw_items),
+        ]);
+        t.row(&[
+            "ratio @40 ms (×)".into(),
+            fnum(paper::exp2::RATIO_AT_40MS, 2),
+            fnum(self.ratio_at_40ms(), 2),
+        ]);
+        t.row(&[
+            "crossover (ms)".into(),
+            fnum(paper::exp2::CROSSOVER_MS, 2),
+            fnum(self.crossover_ms, 2),
+        ]);
+        t.row(&[
+            "Idle-Waiting avg lifetime (h)".into(),
+            fnum(paper::exp2::IW_AVG_LIFETIME_H, 2),
+            fnum(self.iw_avg_lifetime_h(), 2),
+        ]);
+        out.push_str(&t.render());
+        out
+    }
+
+    pub fn to_csv(&self) -> Csv {
+        let mut csv = Csv::new(&[
+            "t_req_ms",
+            "onoff_items",
+            "iw_items",
+            "onoff_lifetime_h",
+            "iw_lifetime_h",
+        ]);
+        for s in &self.samples {
+            csv.row(&[
+                format!("{}", s.t_req_ms),
+                s.onoff_items.map(|n| n.to_string()).unwrap_or_default(),
+                s.iw_items.to_string(),
+                s.onoff_lifetime_h.map(|h| format!("{h}")).unwrap_or_default(),
+                format!("{}", s.iw_lifetime_h),
+            ]);
+        }
+        csv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_default;
+
+    fn result() -> Exp2Result {
+        run(&paper_default(), 1.0) // coarse step for unit tests
+    }
+
+    #[test]
+    fn reproduces_fig8_endpoints() {
+        let r = result();
+        assert!(r.at(10.0).iw_items.abs_diff(paper::exp2::IW_ITEMS_MAX) < 600);
+        assert!(r.at(120.0).iw_items.abs_diff(paper::exp2::IW_ITEMS_MIN) < 60);
+        assert!(r
+            .at(40.0)
+            .onoff_items
+            .unwrap()
+            .abs_diff(paper::exp2::ONOFF_ITEMS)
+            < 150);
+    }
+
+    #[test]
+    fn onoff_gap_below_36_15ms() {
+        let r = result();
+        assert!(r.at(36.0).onoff_items.is_none());
+        assert!(r.at(37.0).onoff_items.is_some());
+    }
+
+    #[test]
+    fn crossover_and_ratio() {
+        let r = result();
+        assert!((r.crossover_ms - 89.21).abs() < 0.05, "{}", r.crossover_ms);
+        assert!((r.ratio_at_40ms() - 2.23).abs() < 0.01);
+    }
+
+    #[test]
+    fn iw_lifetime_flat_onoff_linear() {
+        let r = result();
+        // IW ≈ flat around 8.58 h
+        assert!((r.iw_avg_lifetime_h() - 8.58).abs() < 0.03);
+        // On-Off linear: lifetime(120)/lifetime(40) = 3
+        let l40 = r.at(40.0).onoff_lifetime_h.unwrap();
+        let l120 = r.at(120.0).onoff_lifetime_h.unwrap();
+        assert!((l120 / l40 - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn renders() {
+        let cfg = paper_default();
+        let r = result();
+        let figs = r.render_figs();
+        assert!(figs.contains("Fig 8"));
+        assert!(figs.contains("—")); // infeasible markers below 36.15 ms
+        let summary = r.render_summary(&cfg);
+        assert!(summary.contains("Table 2"));
+        assert!(summary.contains("89.21"));
+        assert!(r.to_csv().n_rows() > 100);
+    }
+
+    #[test]
+    fn full_resolution_sweep_matches_paper_grid() {
+        let r = run(&paper_default(), paper::exp2::T_REQ_STEP_MS);
+        // 10..120 ms at 0.01 ms = 11,001 samples
+        assert_eq!(r.samples.len(), 11_001);
+    }
+}

@@ -1,0 +1,290 @@
+//! Experiment 3 (paper §5.4, Table 3, Figs 10–11): idle-power saving.
+//!
+//! Evaluates the Idle-Waiting strategy with Method 1 (gate IOs + clock
+//! reference) and Methods 1+2 (+ retention undervolting) against the
+//! baseline: Table 3's idle powers (reproduced by the rail model, not
+//! hardcoded), the Fig 10/11 item and lifetime series, the sweep-average
+//! multipliers (3.92× / 5.57×), the extended 499.06 ms crossover and the
+//! combined 12.39× headline vs On-Off at 40 ms.
+
+use crate::config::loader::SimConfig;
+use crate::config::schema::StrategyKind;
+use crate::device::fpga::Fpga;
+use crate::device::rails::PowerSaving;
+use crate::energy::analytical::Analytical;
+use crate::energy::crossover;
+use crate::experiments::paper;
+use crate::util::csv::Csv;
+use crate::util::table::{fcount, fnum, Table};
+use crate::util::units::Duration;
+
+/// One sweep sample across the three idle modes.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    pub t_req_ms: f64,
+    pub baseline_items: u64,
+    pub m1_items: u64,
+    pub m12_items: u64,
+}
+
+/// Full Experiment 3 results.
+#[derive(Debug, Clone)]
+pub struct Exp3Result {
+    pub samples: Vec<Sample>,
+    pub idle_baseline_mw: f64,
+    pub idle_m1_mw: f64,
+    pub idle_m12_mw: f64,
+    pub m12_crossover_ms: f64,
+    pub m12_vs_onoff_at_40ms: f64,
+}
+
+/// Run the sweep (paper range 10–120 ms for the multipliers; the
+/// crossover analysis extends to 600 ms internally).
+pub fn run(config: &SimConfig, step_ms: f64) -> Exp3Result {
+    let model = Analytical::new(&config.item, config.workload.energy_budget);
+    let p_base = model.item.idle_power(StrategyKind::IdleWaiting);
+    let p_m1 = model.item.idle_power(StrategyKind::IdleWaitingM1);
+    let p_m12 = model.item.idle_power(StrategyKind::IdleWaitingM12);
+
+    let mut samples = Vec::new();
+    let mut t = paper::exp2::T_REQ_MIN_MS;
+    while t <= paper::exp2::T_REQ_MAX_MS + 1e-9 {
+        let t_req = Duration::from_millis(t);
+        samples.push(Sample {
+            t_req_ms: t,
+            baseline_items: model.n_max_idle_waiting(t_req, p_base).unwrap_or(0),
+            m1_items: model.n_max_idle_waiting(t_req, p_m1).unwrap_or(0),
+            m12_items: model.n_max_idle_waiting(t_req, p_m12).unwrap_or(0),
+        });
+        t += step_ms;
+    }
+
+    let onoff_40 = model
+        .n_max_onoff(Duration::from_millis(40.0))
+        .expect("40 ms feasible") as f64;
+    let m12_40 = model
+        .n_max_idle_waiting(Duration::from_millis(40.0), p_m12)
+        .unwrap() as f64;
+
+    Exp3Result {
+        samples,
+        idle_baseline_mw: p_base.milliwatts(),
+        idle_m1_mw: p_m1.milliwatts(),
+        idle_m12_mw: p_m12.milliwatts(),
+        m12_crossover_ms: crossover::asymptotic(&model, p_m12).millis(),
+        m12_vs_onoff_at_40ms: m12_40 / onoff_40,
+    }
+}
+
+impl Exp3Result {
+    /// Sweep-average item multiplier vs baseline for Method 1.
+    pub fn m1_items_x(&self) -> f64 {
+        self.avg_ratio(|s| s.m1_items as f64 / s.baseline_items as f64)
+    }
+
+    /// Sweep-average item multiplier vs baseline for Methods 1+2.
+    pub fn m12_items_x(&self) -> f64 {
+        self.avg_ratio(|s| s.m12_items as f64 / s.baseline_items as f64)
+    }
+
+    fn avg_ratio(&self, f: impl Fn(&Sample) -> f64) -> f64 {
+        self.samples.iter().map(&f).sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Average lifetime in hours for a mode across the sweep.
+    pub fn avg_lifetime_h(&self, mode: PowerSaving) -> f64 {
+        self.samples
+            .iter()
+            .map(|s| {
+                let items = match mode {
+                    PowerSaving { method1: false, .. } => s.baseline_items,
+                    PowerSaving { method1: true, method2: false } => s.m1_items,
+                    PowerSaving { method1: true, method2: true } => s.m12_items,
+                };
+                Duration::from_millis(s.t_req_ms).hours() * items as f64
+            })
+            .sum::<f64>()
+            / self.samples.len() as f64
+    }
+
+    /// Table 3 with paper comparison (powers come from the rail model).
+    pub fn render_table3(&self) -> String {
+        let mut t = Table::new(&["metric", "baseline", "method 1", "method 1+2"])
+            .with_title("Table 3: idle power");
+        t.row(&[
+            "idle power (mW), paper".into(),
+            fnum(paper::exp3::BASELINE_IDLE_MW, 1),
+            fnum(paper::exp3::M1_IDLE_MW, 1),
+            fnum(paper::exp3::M12_IDLE_MW, 1),
+        ]);
+        t.row(&[
+            "idle power (mW), rail model".into(),
+            fnum(self.idle_baseline_mw, 1),
+            fnum(self.idle_m1_mw, 1),
+            fnum(self.idle_m12_mw, 1),
+        ]);
+        t.row(&[
+            "saved power (%)".into(),
+            "-".into(),
+            fnum((1.0 - self.idle_m1_mw / self.idle_baseline_mw) * 100.0, 2),
+            fnum((1.0 - self.idle_m12_mw / self.idle_baseline_mw) * 100.0, 2),
+        ]);
+        t.render()
+    }
+
+    /// Figs 10–11 at 10 ms intervals.
+    pub fn render_figs(&self) -> String {
+        let mut t = Table::new(&[
+            "T_req (ms)",
+            "baseline items",
+            "m1 items",
+            "m1+2 items",
+            "baseline life (h)",
+            "m1 life (h)",
+            "m1+2 life (h)",
+        ])
+        .with_title("Fig 10 (items) + Fig 11 (lifetime): power-saving methods");
+        for s in self.samples.iter().filter(|s| (s.t_req_ms % 10.0).abs() < 1e-9) {
+            let h = |items: u64| fnum(Duration::from_millis(s.t_req_ms).hours() * items as f64, 2);
+            t.row(&[
+                fnum(s.t_req_ms, 0),
+                fcount(s.baseline_items),
+                fcount(s.m1_items),
+                fcount(s.m12_items),
+                h(s.baseline_items),
+                h(s.m1_items),
+                h(s.m12_items),
+            ]);
+        }
+        t.render()
+    }
+
+    /// Headline summary with paper comparison.
+    pub fn render_summary(&self) -> String {
+        let mut t = Table::new(&["metric", "paper", "measured"])
+            .with_title("Experiment 3 summary");
+        t.row(&[
+            "method 1 items (× baseline)".into(),
+            fnum(paper::exp3::M1_ITEMS_X, 2),
+            fnum(self.m1_items_x(), 2),
+        ]);
+        t.row(&[
+            "method 1+2 items (× baseline)".into(),
+            fnum(paper::exp3::M12_ITEMS_X, 2),
+            fnum(self.m12_items_x(), 2),
+        ]);
+        t.row(&[
+            "method 1 avg lifetime (h)".into(),
+            fnum(paper::exp3::M1_AVG_LIFETIME_H, 2),
+            fnum(self.avg_lifetime_h(PowerSaving::M1), 2),
+        ]);
+        t.row(&[
+            "method 1+2 avg lifetime (h)".into(),
+            fnum(paper::exp3::M12_AVG_LIFETIME_H, 2),
+            fnum(self.avg_lifetime_h(PowerSaving::M12), 2),
+        ]);
+        t.row(&[
+            "m1+2 crossover (ms)".into(),
+            fnum(paper::exp3::M12_CROSSOVER_MS, 2),
+            fnum(self.m12_crossover_ms, 2),
+        ]);
+        t.row(&[
+            "m1+2 vs On-Off @40 ms (×)".into(),
+            fnum(paper::exp3::M12_VS_ONOFF_AT_40MS, 2),
+            fnum(self.m12_vs_onoff_at_40ms, 2),
+        ]);
+        t.render()
+    }
+
+    pub fn to_csv(&self) -> Csv {
+        let mut csv = Csv::new(&["t_req_ms", "baseline_items", "m1_items", "m12_items"]);
+        for s in &self.samples {
+            csv.row_f64(&[
+                s.t_req_ms,
+                s.baseline_items as f64,
+                s.m1_items as f64,
+                s.m12_items as f64,
+            ]);
+        }
+        csv
+    }
+}
+
+/// Cross-check: the Table 3 idle powers must also be exactly what the
+/// FPGA state machine reports when driven into each idle mode.
+pub fn table3_from_device() -> [f64; 3] {
+    [
+        Fpga::idle_power(PowerSaving::BASELINE).milliwatts(),
+        Fpga::idle_power(PowerSaving::M1).milliwatts(),
+        Fpga::idle_power(PowerSaving::M12).milliwatts(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_default;
+
+    fn result() -> Exp3Result {
+        run(&paper_default(), 1.0)
+    }
+
+    #[test]
+    fn table3_powers_from_rail_model() {
+        let r = result();
+        assert!((r.idle_baseline_mw - 134.3).abs() < 1e-9);
+        assert!((r.idle_m1_mw - 34.2).abs() < 1e-9);
+        assert!((r.idle_m12_mw - 24.0).abs() < 0.05);
+        let dev = table3_from_device();
+        assert!((dev[0] - 134.3).abs() < 1e-9);
+        assert!((dev[1] - 34.2).abs() < 1e-9);
+        assert!((dev[2] - 24.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn multipliers_match_paper() {
+        let r = result();
+        assert!((r.m1_items_x() - 3.92).abs() < 0.03, "{}", r.m1_items_x());
+        assert!((r.m12_items_x() - 5.57).abs() < 0.04, "{}", r.m12_items_x());
+    }
+
+    #[test]
+    fn lifetimes_match_paper() {
+        let r = result();
+        assert!(
+            (r.avg_lifetime_h(PowerSaving::M1) - 33.64).abs() < 0.3,
+            "{}",
+            r.avg_lifetime_h(PowerSaving::M1)
+        );
+        assert!(
+            (r.avg_lifetime_h(PowerSaving::M12) - 47.80).abs() < 0.4,
+            "{}",
+            r.avg_lifetime_h(PowerSaving::M12)
+        );
+    }
+
+    #[test]
+    fn extended_crossover_and_combined_headline() {
+        let r = result();
+        assert!((r.m12_crossover_ms - 499.06).abs() < 0.2, "{}", r.m12_crossover_ms);
+        assert!((r.m12_vs_onoff_at_40ms - 12.39).abs() < 0.05, "{}", r.m12_vs_onoff_at_40ms);
+    }
+
+    #[test]
+    fn ordering_invariant_m12_ge_m1_ge_baseline() {
+        let r = result();
+        for s in &r.samples {
+            assert!(s.m12_items >= s.m1_items);
+            assert!(s.m1_items >= s.baseline_items);
+        }
+    }
+
+    #[test]
+    fn renders() {
+        let r = result();
+        assert!(r.render_table3().contains("Table 3"));
+        assert!(r.render_figs().contains("Fig 10"));
+        assert!(r.render_summary().contains("499.06"));
+        assert!(r.to_csv().n_rows() > 100);
+    }
+}

@@ -1,0 +1,154 @@
+//! Fig 2 (paper §1/§3): energy breakdown of a workload item.
+//!
+//! The 87.15%-configuration pie comes from the authors' *prior* study
+//! (Cichiwskyj et al. [5]): single-SPI configuration before the
+//! Experiment-1 optimization, and a heavier data-transmission workload
+//! than the Table 2 LSTM. We reconstruct that regime from the same device
+//! mechanism (single SPI @ 26 MHz, uncompressed) plus a documented
+//! prior-study phase profile, and show the fraction emerges.
+
+use crate::config::schema::{FpgaModel, SpiConfig};
+use crate::device::bitstream::Bitstream;
+use crate::device::config_fsm::ConfigProfile;
+use crate::device::flash::StoredImage;
+use crate::experiments::paper;
+use crate::util::table::{fnum, Table};
+use crate::util::units::{Duration, Energy, Power};
+
+/// The reconstructed prior-study ([5]) workload item.
+#[derive(Debug, Clone)]
+pub struct Fig2Profile {
+    pub config: ConfigProfile,
+    pub phases: Vec<(&'static str, Power, Duration)>,
+}
+
+/// Build the pre-optimization profile.
+pub fn run() -> Fig2Profile {
+    // Prior-study configuration path: single SPI (the [5] platform did
+    // not use multi-bit configuration), mid-range clock, no compression.
+    let spi = SpiConfig {
+        buswidth: 1,
+        freq_mhz: 26.0,
+        compressed: false,
+    };
+    let image = StoredImage::new(Bitstream::lstm_accelerator(FpgaModel::Xc7s15), false);
+    let config = ConfigProfile::compute(FpgaModel::Xc7s15, spi, &image);
+    // Prior-study active phases (heavier data movement than Table 2's
+    // LSTM: [5] streamed full sensor batches per inference).
+    let phases = vec![
+        (
+            "data_loading",
+            Power::from_milliwatts(138.7),
+            Duration::from_millis(60.0),
+        ),
+        (
+            "inference",
+            Power::from_milliwatts(171.4),
+            Duration::from_millis(5.0),
+        ),
+        (
+            "data_offloading",
+            Power::from_milliwatts(144.1),
+            Duration::from_millis(1.2),
+        ),
+    ];
+    Fig2Profile { config, phases }
+}
+
+impl Fig2Profile {
+    pub fn config_energy(&self) -> Energy {
+        self.config.total_energy()
+    }
+
+    pub fn other_energy(&self) -> Energy {
+        self.phases.iter().map(|(_, p, t)| *p * *t).sum()
+    }
+
+    pub fn total_energy(&self) -> Energy {
+        self.config_energy() + self.other_energy()
+    }
+
+    /// The Fig 2 headline: configuration share of the item.
+    pub fn config_fraction(&self) -> f64 {
+        self.config_energy() / self.total_energy()
+    }
+
+    /// §3's thought experiment: items executable if configuration energy
+    /// were eliminated, as a multiple of the status quo.
+    pub fn items_multiplier_without_config(&self) -> f64 {
+        self.total_energy() / self.other_energy()
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["phase", "energy (mJ)", "share (%)"])
+            .with_title("Fig 2: energy breakdown of a workload item (prior-study regime)");
+        let total = self.total_energy();
+        t.row(&[
+            "configuration".into(),
+            fnum(self.config_energy().millijoules(), 2),
+            fnum(self.config_fraction() * 100.0, 2),
+        ]);
+        for (name, p, dur) in &self.phases {
+            let e = *p * *dur;
+            t.row(&[
+                (*name).into(),
+                fnum(e.millijoules(), 2),
+                fnum(e / total * 100.0, 2),
+            ]);
+        }
+        t.row(&[
+            "TOTAL".into(),
+            fnum(total.millijoules(), 2),
+            "100.00".into(),
+        ]);
+        let mut out = t.render();
+        out.push_str(&format!(
+            "\npaper config share: {:.2}% | measured: {:.2}%\n\
+             eliminating configuration would allow {:.2}x the workload items (paper: 'up to 6x more')\n",
+            paper::fig2::CONFIG_FRACTION * 100.0,
+            self.config_fraction() * 100.0,
+            self.items_multiplier_without_config()
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_share_matches_fig2() {
+        let f = run();
+        assert!(
+            (f.config_fraction() - paper::fig2::CONFIG_FRACTION).abs() < 0.002,
+            "share={}",
+            f.config_fraction()
+        );
+    }
+
+    #[test]
+    fn zeroing_other_phases_changes_little() {
+        // §3: "Reducing the energy consumption of these phases to zero
+        // would only lead to a 12.85% decrease"
+        let f = run();
+        let decrease = f.other_energy() / f.total_energy();
+        assert!((decrease - 0.1285).abs() < 0.002, "{decrease}");
+    }
+
+    #[test]
+    fn eliminating_config_allows_6x_more_items() {
+        // 1 / 0.1285 ≈ 7.8× the items ⇒ ~6–7 additional per one — the
+        // paper says "up to 6 additional inference requests"
+        let f = run();
+        let x = f.items_multiplier_without_config();
+        assert!(x > 6.5 && x < 8.5, "{x}");
+    }
+
+    #[test]
+    fn render_contains_breakdown() {
+        let s = run().render();
+        assert!(s.contains("configuration"));
+        assert!(s.contains("87."));
+    }
+}

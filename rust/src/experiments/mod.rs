@@ -1,0 +1,19 @@
+//! Experiment harness: regenerates every table and figure in the paper's
+//! evaluation (§5) and validates the models against each other.
+//!
+//! | Paper artifact | Module |
+//! |---|---|
+//! | Fig 2 energy breakdown | [`fig2`] |
+//! | Fig 7 + §5.2 headline numbers | [`exp1`] |
+//! | Table 2, Figs 8–9, 89.21 ms crossover | [`exp2`] |
+//! | Table 3, Figs 10–11, 499.06 ms, 12.39× | [`exp3`] |
+//! | §5.3 validation (2.8%/2.7%) | [`validation`] |
+//! | Published values | [`paper`] |
+
+pub mod ablation;
+pub mod exp1;
+pub mod exp2;
+pub mod exp3;
+pub mod fig2;
+pub mod paper;
+pub mod validation;

@@ -1,0 +1,114 @@
+//! The paper's published numbers, as constants.
+//!
+//! Every experiment report prints "paper vs measured" using these values;
+//! the integration tests assert agreement within stated tolerances. Keep
+//! this file the *only* place paper numbers live, so a failed
+//! reproduction points at exactly one diff.
+
+/// §5.2 / Fig 7 — Experiment 1 (configuration-phase optimization).
+pub mod exp1 {
+    /// Optimal setting: Quad SPI, 66 MHz, compressed.
+    pub const OPT_TIME_MS: f64 = 36.145;
+    pub const OPT_ENERGY_MJ: f64 = 11.85;
+    pub const OPT_POWER_MW: f64 = 327.9;
+    /// Worst setting: Single SPI, 3 MHz, uncompressed.
+    pub const WORST_ENERGY_MJ: f64 = 475.56;
+    /// Headline ratios.
+    pub const TIME_IMPROVEMENT: f64 = 41.4;
+    pub const ENERGY_IMPROVEMENT: f64 = 40.13;
+    /// Setup stage (§5.2): constant across settings.
+    pub const SETUP_POWER_MW: f64 = 288.0;
+    pub const SETUP_TIME_MS: f64 = 27.0;
+    /// XC7S25 at optimal settings (§5.2).
+    pub const XC7S25_TIME_MS: f64 = 38.09;
+    pub const XC7S25_ENERGY_MJ: f64 = 13.75;
+}
+
+/// Table 2 — workload-item characterization on hardware.
+pub mod table2 {
+    pub const CONFIG_POWER_MW: f64 = 327.9;
+    pub const CONFIG_TIME_MS: f64 = 36.145;
+    pub const LOAD_POWER_MW: f64 = 138.7;
+    pub const LOAD_TIME_MS: f64 = 0.0100;
+    pub const INFER_POWER_MW: f64 = 171.4;
+    pub const INFER_TIME_MS: f64 = 0.0281;
+    pub const OFFLOAD_POWER_MW: f64 = 144.1;
+    pub const OFFLOAD_TIME_MS: f64 = 0.0020;
+    pub const IDLE_POWER_MW: f64 = 134.3;
+}
+
+/// §5.3 / Figs 8–9 — Experiment 2 (Idle-Waiting vs On-Off).
+pub mod exp2 {
+    pub const BUDGET_J: f64 = 4147.0;
+    /// Sweep range and step used by the paper.
+    pub const T_REQ_MIN_MS: f64 = 10.0;
+    pub const T_REQ_MAX_MS: f64 = 120.0;
+    pub const T_REQ_STEP_MS: f64 = 0.01;
+    /// On-Off items (constant over feasible periods).
+    pub const ONOFF_ITEMS: u64 = 346_073;
+    /// Idle-Waiting items at the sweep extremes.
+    pub const IW_ITEMS_MAX: u64 = 3_085_319; // at 10 ms
+    pub const IW_ITEMS_MIN: u64 = 257_305; // at 120 ms
+    /// Ratio at the paper's 40 ms case study.
+    pub const RATIO_AT_40MS: f64 = 2.23;
+    /// Efficiency cross point.
+    pub const CROSSOVER_MS: f64 = 89.21;
+    /// On-Off infeasible below the configuration time.
+    pub const ONOFF_MIN_PERIOD_MS: f64 = 36.15;
+    /// Idle-Waiting average lifetime.
+    pub const IW_AVG_LIFETIME_H: f64 = 8.58;
+    /// Hardware-vs-simulator validation gaps at 40 ms (§5.3).
+    pub const HW_ITEMS_GAP: f64 = 0.028;
+    pub const HW_LIFETIME_GAP: f64 = 0.027;
+}
+
+/// Table 3 + §5.4 / Figs 10–11 — Experiment 3 (idle power-saving).
+pub mod exp3 {
+    pub const BASELINE_IDLE_MW: f64 = 134.3;
+    pub const M1_IDLE_MW: f64 = 34.2;
+    pub const M12_IDLE_MW: f64 = 24.0;
+    /// Paper's quoted savings (computed from unrounded measurements; the
+    /// rounded Table 3 powers give 74.53% / 82.13%).
+    pub const M1_SAVED_PCT: f64 = 74.38;
+    pub const M12_SAVED_PCT: f64 = 81.98;
+    /// Item-count multipliers vs baseline Idle-Waiting (sweep averages).
+    pub const M1_ITEMS_X: f64 = 3.92;
+    pub const M12_ITEMS_X: f64 = 5.57;
+    /// Average lifetimes.
+    pub const M1_AVG_LIFETIME_H: f64 = 33.64;
+    pub const M12_AVG_LIFETIME_H: f64 = 47.80;
+    /// Extended advantageous request period.
+    pub const M12_CROSSOVER_MS: f64 = 499.06;
+    /// Combined headline: vs On-Off at 40 ms.
+    pub const M12_VS_ONOFF_AT_40MS: f64 = 12.39;
+}
+
+/// Fig 2 — energy breakdown of a workload item (from prior study [5],
+/// pre-optimization configuration settings).
+pub mod fig2 {
+    /// Configuration phase share of total item energy.
+    pub const CONFIG_FRACTION: f64 = 0.8715;
+    /// Everything else (data transmission + inference).
+    pub const REST_FRACTION: f64 = 0.1285;
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fractions_sum_to_one() {
+        assert!((super::fig2::CONFIG_FRACTION + super::fig2::REST_FRACTION - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table2_config_energy_is_optimal_exp1_energy() {
+        let e = super::table2::CONFIG_POWER_MW * super::table2::CONFIG_TIME_MS / 1000.0;
+        assert!((e - super::exp1::OPT_ENERGY_MJ).abs() < 0.01);
+    }
+
+    #[test]
+    fn paper_internal_consistency_of_ratios() {
+        // 475.56 / 11.85 ≈ 40.13
+        let r = super::exp1::WORST_ENERGY_MJ / super::exp1::OPT_ENERGY_MJ;
+        assert!((r - super::exp1::ENERGY_IMPROVEMENT).abs() < 0.01);
+    }
+}

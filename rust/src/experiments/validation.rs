@@ -1,0 +1,152 @@
+//! Validation experiment (paper §5.3): model vs "measurement".
+//!
+//! The paper validates its simulator against direct hardware measurement
+//! at a 40 ms request period (2.8% gap in items, 2.7% in lifetime). We
+//! have no hardware, so the validation chain becomes:
+//!
+//! * **analytical model** (Eqs 1–4, what the paper's simulator computes)
+//!   vs the **discrete-event simulation** of the full device substrate —
+//!   these must agree almost exactly on item counts (same physics,
+//!   mechanism vs closed form), and
+//! * **exact energy integral** vs the **PAC1934-sampled energy** the DES
+//!   monitor records — the instrument-side gap, which is the physical
+//!   origin of the paper's few-percent hardware-vs-simulator discrepancy.
+
+use crate::config::loader::SimConfig;
+use crate::config::schema::StrategyKind;
+use crate::coordinator::requests::Periodic;
+use crate::energy::analytical::Analytical;
+use crate::experiments::paper;
+use crate::strategies::simulate::{simulate, SimReport};
+use crate::strategies::strategy::build;
+use crate::util::table::{fcount, fnum, Table};
+use crate::util::units::Duration;
+
+/// One strategy's validation row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub strategy: StrategyKind,
+    pub analytical_items: u64,
+    pub des_items: u64,
+    pub items_gap: f64,
+    pub analytical_lifetime_h: f64,
+    pub des_lifetime_h: f64,
+    pub lifetime_gap: f64,
+    pub monitor_rel_error: f64,
+}
+
+/// Full validation results at one request period.
+#[derive(Debug, Clone)]
+pub struct ValidationResult {
+    pub t_req_ms: f64,
+    pub rows: Vec<Row>,
+}
+
+/// Run the validation at `t_req_ms` (paper uses 40 ms).
+pub fn run(config: &SimConfig, t_req_ms: f64) -> ValidationResult {
+    let model = Analytical::new(&config.item, config.workload.energy_budget);
+    let t_req = Duration::from_millis(t_req_ms);
+    let rows = [StrategyKind::OnOff, StrategyKind::IdleWaiting]
+        .into_iter()
+        .map(|kind| {
+            let prediction = model.predict(kind, t_req);
+            let analytical_items = prediction.n_max.expect("feasible period");
+            let strategy = build(kind, &model);
+            let mut arrivals = Periodic { period: t_req };
+            let report: SimReport = simulate(config, strategy.as_ref(), &mut arrivals);
+            let des_lifetime_h = report.lifetime.hours();
+            let analytical_lifetime_h = prediction.lifetime.hours();
+            Row {
+                strategy: kind,
+                analytical_items,
+                des_items: report.items,
+                items_gap: (report.items as f64 - analytical_items as f64).abs()
+                    / analytical_items as f64,
+                analytical_lifetime_h,
+                des_lifetime_h,
+                lifetime_gap: (des_lifetime_h - analytical_lifetime_h).abs()
+                    / analytical_lifetime_h,
+                monitor_rel_error: report.monitor_rel_error,
+            }
+        })
+        .collect();
+    ValidationResult { t_req_ms, rows }
+}
+
+impl ValidationResult {
+    pub fn row(&self, kind: StrategyKind) -> &Row {
+        self.rows
+            .iter()
+            .find(|r| r.strategy == kind)
+            .expect("strategy present")
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            "strategy",
+            "items (Eq 3)",
+            "items (DES)",
+            "gap (%)",
+            "lifetime (Eq 4, h)",
+            "lifetime (DES, h)",
+            "monitor err (%)",
+        ])
+        .with_title(format!(
+            "Validation at {} ms (paper §5.3: hw-vs-sim gaps were {:.1}% / {:.1}%)",
+            self.t_req_ms,
+            paper::exp2::HW_ITEMS_GAP * 100.0,
+            paper::exp2::HW_LIFETIME_GAP * 100.0
+        ));
+        for r in &self.rows {
+            t.row(&[
+                r.strategy.name().into(),
+                fcount(r.analytical_items),
+                fcount(r.des_items),
+                fnum(r.items_gap * 100.0, 4),
+                fnum(r.analytical_lifetime_h, 3),
+                fnum(r.des_lifetime_h, 3),
+                fnum(r.monitor_rel_error * 100.0, 3),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_default;
+
+    #[test]
+    fn des_agrees_with_analytical_at_40ms() {
+        let result = run(&paper_default(), 40.0);
+        for row in &result.rows {
+            // mechanism vs closed form: far tighter than the paper's
+            // hardware-vs-simulator 2.8%
+            assert!(
+                row.items_gap < 0.002,
+                "{}: items {} vs {}",
+                row.strategy,
+                row.des_items,
+                row.analytical_items
+            );
+            assert!(row.lifetime_gap < 0.002, "{}", row.strategy);
+            // the instrument gap is nonzero but bounded (paper-level few %)
+            assert!(row.monitor_rel_error < 0.03, "{}", row.monitor_rel_error);
+        }
+    }
+
+    #[test]
+    fn onoff_des_item_count_matches_paper() {
+        let result = run(&paper_default(), 40.0);
+        let onoff = result.row(StrategyKind::OnOff);
+        assert!(onoff.des_items.abs_diff(paper::exp2::ONOFF_ITEMS) < 300, "{}", onoff.des_items);
+    }
+
+    #[test]
+    fn render_mentions_paper_gaps() {
+        let s = run(&paper_default(), 40.0).render();
+        assert!(s.contains("2.8%"));
+        assert!(s.contains("on-off"));
+    }
+}

@@ -1,0 +1,33 @@
+//! # idlewait — "Idle is the New Sleep" reproduction
+//!
+//! A production-quality reproduction of Qian et al., *Idle is the New
+//! Sleep: Configuration-Aware Alternative to Powering Off FPGA-Based DL
+//! Accelerators During Inactivity* (CS.AR 2024), built as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the duty-cycle coordinator, the full device
+//!   substrate (Spartan-7 configuration FSM, SPI/flash, power rails,
+//!   battery, PAC1934 monitors, RP2040 MCU), a discrete-event simulator,
+//!   the paper's analytical model (Eqs 1–4), the On-Off / Idle-Waiting
+//!   strategies with idle-power-saving methods, and the experiment
+//!   harness regenerating every table and figure.
+//! * **L2/L1 (python, build-time only)** — the LSTM accelerator payload
+//!   (JAX model + Pallas kernels) AOT-lowered to HLO text, executed from
+//!   Rust via the PJRT C API (`runtime` module). Python is never on the
+//!   request path.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod util;
+pub mod device;
+pub mod energy;
+pub mod experiments;
+pub mod strategies;
+pub mod coordinator;

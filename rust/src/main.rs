@@ -1,0 +1,13 @@
+//! `repro` — CLI entrypoint for the "Idle is the New Sleep" reproduction.
+
+use idlewait::cli;
+use idlewait::util::logging;
+
+fn main() {
+    logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(err) = cli::run(&argv) {
+        eprintln!("error: {err:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,272 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+//!
+//! `artifacts/manifest.json` describes each AOT-lowered HLO module (entry
+//! shapes, outputs) plus a numeric self-check (a known input window and
+//! the forecast the JAX model produced for it), so the rust runtime can
+//! prove end-to-end numerical agreement with L2 at startup.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io error reading {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+    #[error("manifest parse error: {0}")]
+    Parse(#[from] crate::util::json::JsonError),
+    #[error("manifest malformed: {0}")]
+    Malformed(String),
+}
+
+/// One AOT artifact entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// HLO text file, relative to the manifest's directory.
+    pub file: PathBuf,
+    /// Input tensor shapes (row-major f32 unless int8 path).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output tensor shapes.
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// The numeric self-check payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SelfCheck {
+    /// Flattened (WINDOW × INPUT) f32 window, row-major.
+    pub window: Vec<f32>,
+    /// Expected `lstm_forecast` output for that window.
+    pub forecast: f32,
+    /// Expected `lstm_forecast_int8` output.
+    pub forecast_int8: f32,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub hidden_size: usize,
+    pub input_size: usize,
+    pub window: usize,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub selfcheck: SelfCheck,
+}
+
+fn malformed(msg: impl Into<String>) -> ManifestError {
+    ManifestError::Malformed(msg.into())
+}
+
+fn shape_list(v: &Json, what: &str) -> Result<Vec<Vec<usize>>, ManifestError> {
+    v.as_arr()
+        .ok_or_else(|| malformed(format!("{what}: expected array of shapes")))?
+        .iter()
+        .map(|shape| {
+            shape
+                .as_arr()
+                .ok_or_else(|| malformed(format!("{what}: expected shape array")))?
+                .iter()
+                .map(|d| {
+                    d.as_u64()
+                        .map(|d| d as usize)
+                        .ok_or_else(|| malformed(format!("{what}: bad dim")))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, ManifestError> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|source| ManifestError::Io {
+            path: path.display().to_string(),
+            source,
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest, ManifestError> {
+        let root = Json::parse(text)?;
+        let get_usize = |key: &str| -> Result<usize, ManifestError> {
+            root.get(key)
+                .and_then(Json::as_u64)
+                .map(|v| v as usize)
+                .ok_or_else(|| malformed(format!("missing numeric field '{key}'")))
+        };
+        let artifacts = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| malformed("missing 'artifacts' array"))?
+            .iter()
+            .map(|a| -> Result<ArtifactEntry, ManifestError> {
+                Ok(ArtifactEntry {
+                    name: a
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| malformed("artifact missing 'name'"))?
+                        .to_string(),
+                    file: PathBuf::from(
+                        a.get("file")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| malformed("artifact missing 'file'"))?,
+                    ),
+                    inputs: shape_list(
+                        a.get("inputs").ok_or_else(|| malformed("missing inputs"))?,
+                        "inputs",
+                    )?,
+                    outputs: shape_list(
+                        a.get("outputs").ok_or_else(|| malformed("missing outputs"))?,
+                        "outputs",
+                    )?,
+                })
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+
+        let sc = root
+            .get("selfcheck")
+            .ok_or_else(|| malformed("missing 'selfcheck'"))?;
+        let window: Vec<f32> = sc
+            .get("window")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| malformed("selfcheck missing 'window'"))?
+            .iter()
+            .map(|v| v.as_f64().map(|f| f as f32))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| malformed("selfcheck window has non-numbers"))?;
+        let selfcheck = SelfCheck {
+            window,
+            forecast: sc
+                .get("forecast")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| malformed("selfcheck missing 'forecast'"))?
+                as f32,
+            forecast_int8: sc
+                .get("forecast_int8")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| malformed("selfcheck missing 'forecast_int8'"))?
+                as f32,
+        };
+
+        let manifest = Manifest {
+            dir,
+            hidden_size: get_usize("hidden_size")?,
+            input_size: get_usize("input_size")?,
+            window: get_usize("window")?,
+            artifacts,
+            selfcheck,
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    fn validate(&self) -> Result<(), ManifestError> {
+        if self.selfcheck.window.len() != self.window * self.input_size {
+            return Err(malformed(format!(
+                "selfcheck window has {} values, expected {}×{}",
+                self.selfcheck.window.len(),
+                self.window,
+                self.input_size
+            )));
+        }
+        for name in ["lstm_step", "lstm_forecast"] {
+            if self.entry(name).is_none() {
+                return Err(malformed(format!("required artifact '{name}' missing")));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+/// Default artifacts directory: `$IDLEWAIT_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("IDLEWAIT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal_manifest() -> String {
+        r#"{
+            "schema_version": 1, "seed": 5588,
+            "hidden_size": 20, "input_size": 2, "window": 3,
+            "quant_scale": 0.015, "dtype": "f32",
+            "artifacts": [
+                {"name": "lstm_step", "file": "lstm_step.hlo.txt",
+                 "inputs": [[1,2],[1,20],[1,20]], "outputs": [[1,20],[1,20]]},
+                {"name": "lstm_forecast", "file": "lstm_forecast.hlo.txt",
+                 "inputs": [[3,2]], "outputs": [[1]]}
+            ],
+            "selfcheck": {"window_seed": 0, "forecast": -0.25, "forecast_int8": -0.24,
+                          "window": [1,2,3,4,5,6]}
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let m = Manifest::parse(&minimal_manifest(), PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.hidden_size, 20);
+        assert_eq!(m.artifacts.len(), 2);
+        let step = m.entry("lstm_step").unwrap();
+        assert_eq!(step.inputs, vec![vec![1, 2], vec![1, 20], vec![1, 20]]);
+        assert_eq!(m.hlo_path(step), PathBuf::from("/tmp/a/lstm_step.hlo.txt"));
+        assert_eq!(m.selfcheck.forecast, -0.25);
+    }
+
+    #[test]
+    fn window_size_mismatch_rejected() {
+        let text = minimal_manifest().replace("\"window\": 3", "\"window\": 5");
+        let e = Manifest::parse(&text, PathBuf::from("/tmp")).unwrap_err();
+        assert!(e.to_string().contains("window has"));
+    }
+
+    #[test]
+    fn missing_required_artifact_rejected() {
+        let text = minimal_manifest().replace("lstm_forecast", "other_thing");
+        let e = Manifest::parse(&text, PathBuf::from("/tmp")).unwrap_err();
+        assert!(e.to_string().contains("lstm_forecast"));
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Runs against `make artifacts` output when present (CI builds it).
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.hidden_size, 20);
+        assert_eq!(m.input_size, 6);
+        assert_eq!(m.window, 24);
+        assert_eq!(m.selfcheck.window.len(), 144);
+        assert!(m.entry("lstm_forecast_int8").is_some());
+    }
+
+    #[test]
+    fn missing_dir_is_io_error() {
+        assert!(matches!(
+            Manifest::load("/nonexistent/dir"),
+            Err(ManifestError::Io { .. })
+        ));
+    }
+}

@@ -1,0 +1,151 @@
+//! PJRT client wrapper: load HLO text → compile → execute.
+//!
+//! Thin, typed layer over the `xla` crate following the pattern validated
+//! in /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. All computations were lowered with
+//! `return_tuple=True`, so every result is a tuple literal that we
+//! decompose into per-output f32 vectors.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A compiled, executable HLO module.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// The process-wide PJRT CPU client.
+pub struct Client {
+    client: xla::PjRtClient,
+}
+
+impl Client {
+    /// Create the PJRT CPU client (one per process is plenty; see
+    /// [`crate::runtime::pool`] for the cached instance).
+    pub fn cpu() -> Result<Client> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Client { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO text file.
+    pub fn compile_hlo_file(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path is not valid UTF-8")?,
+        )
+        .with_context(|| format!("parsing HLO text at {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let name = comp.name();
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name })
+    }
+
+    /// Compile HLO text from a string (tests / in-memory modules).
+    pub fn compile_hlo_text(&self, text: &str) -> Result<Executable> {
+        let dir = std::env::temp_dir().join(format!(
+            "idlewait_hlo_{}_{}",
+            std::process::id(),
+            text.len()
+        ));
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join("module.hlo.txt");
+        std::fs::write(&path, text)?;
+        let result = self.compile_hlo_file(&path);
+        let _ = std::fs::remove_dir_all(&dir);
+        result
+    }
+}
+
+impl Executable {
+    /// Execute with f32 tensor inputs (shape, row-major data) and return
+    /// every output as a flat f32 vector.
+    pub fn run_f32(&self, inputs: &[(&[i64], &[f32])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(shape, data)| -> Result<xla::Literal> {
+                let expected: i64 = shape.iter().product();
+                anyhow::ensure!(
+                    expected as usize == data.len(),
+                    "input shape {shape:?} wants {expected} values, got {}",
+                    data.len()
+                );
+                Ok(xla::Literal::vec1(data).reshape(shape)?)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // Lowered with return_tuple=True → always a tuple, one element per
+        // model output.
+        let outputs = tuple.to_tuple().context("decomposing result tuple")?;
+        outputs
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-written HLO: f32[2,2] matmul + broadcast add, returned as a
+    /// 1-tuple — exercises the full load/compile/execute path without
+    /// needing the python artifacts.
+    const MATMUL_HLO: &str = r#"HloModule matmul_add, entry_computation_layout={(f32[2,2]{1,0}, f32[2,2]{1,0})->(f32[2,2]{1,0})}
+
+ENTRY main {
+  x = f32[2,2]{1,0} parameter(0)
+  y = f32[2,2]{1,0} parameter(1)
+  dot = f32[2,2]{1,0} dot(x, y), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  c = f32[] constant(2)
+  cb = f32[2,2]{1,0} broadcast(c), dimensions={}
+  sum = f32[2,2]{1,0} add(dot, cb)
+  ROOT t = (f32[2,2]{1,0}) tuple(sum)
+}
+"#;
+
+    #[test]
+    fn compile_and_execute_handwritten_hlo() {
+        let client = Client::cpu().unwrap();
+        let exe = client.compile_hlo_text(MATMUL_HLO).unwrap();
+        let x = [1f32, 2.0, 3.0, 4.0];
+        let y = [1f32, 1.0, 1.0, 1.0];
+        let out = exe.run_f32(&[(&[2, 2], &x), (&[2, 2], &y)]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], vec![5.0, 5.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error() {
+        let client = Client::cpu().unwrap();
+        let exe = client.compile_hlo_text(MATMUL_HLO).unwrap();
+        let bad = [1f32; 3];
+        assert!(exe.run_f32(&[(&[2, 2], &bad), (&[2, 2], &bad)]).is_err());
+    }
+
+    #[test]
+    fn garbage_hlo_fails_to_parse() {
+        let client = Client::cpu().unwrap();
+        assert!(client.compile_hlo_text("HloModule nope\nENTRY broken {").is_err());
+    }
+}

@@ -1,0 +1,293 @@
+//! Typed inference API over the compiled LSTM artifacts.
+//!
+//! [`LstmRuntime`] is what the serving coordinator holds: compiled
+//! executables for each model variant, shape-checked against the
+//! manifest, plus the startup self-check proving numerical agreement with
+//! the L2 JAX model that produced the artifacts.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::artifact::Manifest;
+use crate::runtime::client::{Client, Executable};
+use crate::util::units::Duration;
+
+/// Which model variant to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// f32 forecast over a full window.
+    Forecast,
+    /// int8-activation (fixed-point FPGA-like) forecast.
+    ForecastInt8,
+}
+
+impl Variant {
+    pub fn artifact_name(&self) -> &'static str {
+        match self {
+            Variant::Forecast => "lstm_forecast",
+            Variant::ForecastInt8 => "lstm_forecast_int8",
+        }
+    }
+}
+
+/// Result of one inference with its host-side latency.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InferenceResult {
+    pub forecast: f32,
+    pub latency: Duration,
+}
+
+/// Compiled runtime for the LSTM accelerator artifacts.
+pub struct LstmRuntime {
+    pub manifest: Manifest,
+    forecast: Executable,
+    forecast_int8: Option<Executable>,
+    /// Fixed-batch variant (one dispatch for a burst of windows).
+    forecast_batch: Option<(Executable, usize)>,
+    step: Executable,
+}
+
+impl LstmRuntime {
+    /// Compile all artifacts in `manifest` on `client`.
+    pub fn load(client: &Client, manifest: Manifest) -> Result<LstmRuntime> {
+        let compile = |name: &str| -> Result<Executable> {
+            let entry = manifest
+                .entry(name)
+                .with_context(|| format!("artifact '{name}' missing from manifest"))?;
+            client.compile_hlo_file(manifest.hlo_path(entry))
+        };
+        let forecast = compile("lstm_forecast")?;
+        let step = compile("lstm_step")?;
+        let forecast_int8 = if manifest.entry("lstm_forecast_int8").is_some() {
+            Some(compile("lstm_forecast_int8")?)
+        } else {
+            None
+        };
+        let forecast_batch = match manifest.entry("lstm_forecast_batch8") {
+            Some(entry) => {
+                let batch = entry.inputs[0][0];
+                Some((compile("lstm_forecast_batch8")?, batch))
+            }
+            None => None,
+        };
+        Ok(LstmRuntime {
+            manifest,
+            forecast,
+            forecast_int8,
+            forecast_batch,
+            step,
+        })
+    }
+
+    /// Batch size of the batched artifact, if present.
+    pub fn batch_size(&self) -> Option<usize> {
+        self.forecast_batch.as_ref().map(|(_, b)| *b)
+    }
+
+    /// Run a fixed-size batch of windows in ONE executable dispatch.
+    /// `windows` is row-major `(batch × window × input)`.
+    pub fn forecast_batch(&self, windows: &[f32]) -> Result<Vec<f32>> {
+        let (exe, batch) = self
+            .forecast_batch
+            .as_ref()
+            .context("batched artifact not available")?;
+        let (rows, cols) = self.window_shape();
+        anyhow::ensure!(
+            windows.len() == batch * rows * cols,
+            "batch buffer has {} values, expected {batch}×{rows}×{cols}",
+            windows.len()
+        );
+        let out = exe.run_f32(&[(
+            &[*batch as i64, rows as i64, cols as i64],
+            windows,
+        )])?;
+        anyhow::ensure!(out.len() == 1 && out[0].len() == *batch, "bad batch output");
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Window length × channels expected by the forecast entry points.
+    pub fn window_shape(&self) -> (usize, usize) {
+        (self.manifest.window, self.manifest.input_size)
+    }
+
+    /// Run a forecast over a row-major `(window × input)` f32 buffer.
+    pub fn forecast(&self, window: &[f32], variant: Variant) -> Result<InferenceResult> {
+        let (rows, cols) = self.window_shape();
+        anyhow::ensure!(
+            window.len() == rows * cols,
+            "window has {} values, expected {rows}×{cols}",
+            window.len()
+        );
+        let exe = match variant {
+            Variant::Forecast => &self.forecast,
+            Variant::ForecastInt8 => self
+                .forecast_int8
+                .as_ref()
+                .context("int8 artifact not available")?,
+        };
+        let start = Instant::now();
+        let out = exe.run_f32(&[(&[rows as i64, cols as i64], window)])?;
+        let latency = Duration::from_secs(start.elapsed().as_secs_f64());
+        anyhow::ensure!(out.len() == 1 && out[0].len() == 1, "unexpected output arity");
+        Ok(InferenceResult {
+            forecast: out[0][0],
+            latency,
+        })
+    }
+
+    /// Run a single LSTM cell step: `(x, h, c) -> (h', c')`.
+    pub fn step(&self, x: &[f32], h: &[f32], c: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let inp = self.manifest.input_size as i64;
+        let hid = self.manifest.hidden_size as i64;
+        let mut out = self.step.run_f32(&[
+            (&[1, inp], x),
+            (&[1, hid], h),
+            (&[1, hid], c),
+        ])?;
+        anyhow::ensure!(out.len() == 2, "step must return (h, c)");
+        let c_next = out.pop().unwrap();
+        let h_next = out.pop().unwrap();
+        Ok((h_next, c_next))
+    }
+
+    /// Startup self-check: run the manifest's known window through both
+    /// variants and compare with the JAX-produced expectations. Returns
+    /// the max absolute error observed.
+    pub fn self_check(&self) -> Result<f32> {
+        let sc = &self.manifest.selfcheck;
+        let got = self.forecast(&sc.window, Variant::Forecast)?;
+        let err_f32 = (got.forecast - sc.forecast).abs();
+        anyhow::ensure!(
+            err_f32 < 1e-4,
+            "f32 self-check failed: rust={} jax={}",
+            got.forecast,
+            sc.forecast
+        );
+        let mut max_err = err_f32;
+        if self.forecast_int8.is_some() {
+            let got8 = self.forecast(&sc.window, Variant::ForecastInt8)?;
+            let err_int8 = (got8.forecast - sc.forecast_int8).abs();
+            anyhow::ensure!(
+                err_int8 < 1e-4,
+                "int8 self-check failed: rust={} jax={}",
+                got8.forecast,
+                sc.forecast_int8
+            );
+            max_err = max_err.max(err_int8);
+        }
+        log::info!("runtime self-check passed (max |err| = {max_err:.2e})");
+        Ok(max_err)
+    }
+
+    /// Reconstruct the forecast by stepping the cell over the self-check
+    /// window — proves the step artifact and the forecast artifact
+    /// implement the same recurrence (used by integration tests).
+    pub fn forecast_via_steps(&self, window: &[f32]) -> Result<Vec<f32>> {
+        let (rows, cols) = self.window_shape();
+        let hid = self.manifest.hidden_size;
+        let mut h = vec![0f32; hid];
+        let mut c = vec![0f32; hid];
+        for t in 0..rows {
+            let x = &window[t * cols..(t + 1) * cols];
+            let (h2, c2) = self.step(x, &h, &c)?;
+            h = h2;
+            c = c2;
+        }
+        Ok(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::default_dir;
+
+    fn runtime() -> Option<LstmRuntime> {
+        let dir = default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        let client = Client::cpu().unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        Some(LstmRuntime::load(&client, manifest).unwrap())
+    }
+
+    #[test]
+    fn self_check_against_jax() {
+        let Some(rt) = runtime() else { return };
+        let err = rt.self_check().unwrap();
+        assert!(err < 1e-4, "max err {err}");
+    }
+
+    #[test]
+    fn forecast_latency_measured() {
+        let Some(rt) = runtime() else { return };
+        let sc = rt.manifest.selfcheck.clone();
+        let r = rt.forecast(&sc.window, Variant::Forecast).unwrap();
+        assert!(r.latency.secs() > 0.0);
+        assert!(r.latency.secs() < 1.0, "CPU inference should be fast");
+    }
+
+    #[test]
+    fn bad_window_size_rejected() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.forecast(&[0.0; 7], Variant::Forecast).is_err());
+    }
+
+    #[test]
+    fn int8_variant_differs_but_is_close() {
+        let Some(rt) = runtime() else { return };
+        let sc = rt.manifest.selfcheck.clone();
+        let f = rt.forecast(&sc.window, Variant::Forecast).unwrap().forecast;
+        let q = rt.forecast(&sc.window, Variant::ForecastInt8).unwrap().forecast;
+        assert!((f - q).abs() < 0.1, "f32={f} int8={q}");
+        assert_ne!(f, q);
+    }
+
+    #[test]
+    fn batched_forecast_matches_singles() {
+        let Some(rt) = runtime() else { return };
+        let Some(batch) = rt.batch_size() else {
+            eprintln!("skipping: no batched artifact");
+            return;
+        };
+        let (rows, cols) = rt.window_shape();
+        let base = rt.manifest.selfcheck.window.clone();
+        // build `batch` distinct windows by shifting the self-check one
+        let mut buffer = Vec::with_capacity(batch * rows * cols);
+        let mut singles = Vec::new();
+        for b in 0..batch {
+            let shifted: Vec<f32> =
+                base.iter().map(|v| v + 0.01 * b as f32).collect();
+            singles.push(rt.forecast(&shifted, Variant::Forecast).unwrap().forecast);
+            buffer.extend_from_slice(&shifted);
+        }
+        let batched = rt.forecast_batch(&buffer).unwrap();
+        assert_eq!(batched.len(), batch);
+        for (b, (one, many)) in singles.iter().zip(&batched).enumerate() {
+            assert!((one - many).abs() < 1e-5, "lane {b}: {one} vs {many}");
+        }
+    }
+
+    #[test]
+    fn batched_forecast_rejects_bad_size() {
+        let Some(rt) = runtime() else { return };
+        if rt.batch_size().is_none() {
+            return;
+        }
+        assert!(rt.forecast_batch(&[0.0; 10]).is_err());
+    }
+
+    #[test]
+    fn stepping_matches_forecast_recurrence() {
+        let Some(rt) = runtime() else { return };
+        let sc = rt.manifest.selfcheck.clone();
+        let h = rt.forecast_via_steps(&sc.window).unwrap();
+        assert_eq!(h.len(), 20);
+        // final hidden state must be bounded (sigmoid·tanh) and non-trivial
+        assert!(h.iter().all(|v| v.abs() <= 1.0));
+        assert!(h.iter().any(|v| v.abs() > 1e-3));
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime (L3 side of the AOT bridge): loads the HLO text artifacts
+//! produced by `python/compile/aot.py`, compiles them on the PJRT CPU
+//! client and executes them on the request path. Python never runs here.
+
+pub mod artifact;
+pub mod client;
+pub mod inference;
+pub mod pool;
+
+pub use artifact::Manifest;
+pub use client::{Client, Executable};
+pub use inference::{InferenceResult, LstmRuntime, Variant};

@@ -1,0 +1,78 @@
+//! Per-thread runtime pool.
+//!
+//! PJRT client creation and HLO compilation are expensive (tens of ms);
+//! the serving hot path must never pay them per request. The `xla`
+//! crate's handles are `!Send` (Rc-backed), so the pool is thread-local:
+//! one lazily-created CPU client and one compiled [`LstmRuntime`] per
+//! artifacts directory *per thread*. The serving coordinator runs its
+//! entire request loop on one thread, so in practice there is exactly one
+//! client and one compiled runtime per process.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::runtime::artifact::Manifest;
+use crate::runtime::client::Client;
+use crate::runtime::inference::LstmRuntime;
+
+thread_local! {
+    static CLIENT: RefCell<Option<Rc<Client>>> = const { RefCell::new(None) };
+    static RUNTIMES: RefCell<HashMap<PathBuf, Rc<LstmRuntime>>> =
+        RefCell::new(HashMap::new());
+}
+
+/// The thread's PJRT CPU client (created on first use).
+pub fn client() -> Result<Rc<Client>> {
+    CLIENT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if let Some(c) = slot.as_ref() {
+            return Ok(c.clone());
+        }
+        let c = Rc::new(Client::cpu()?);
+        *slot = Some(c.clone());
+        Ok(c)
+    })
+}
+
+/// Get (or build) the compiled runtime for an artifacts directory.
+pub fn runtime(dir: impl AsRef<Path>) -> Result<Rc<LstmRuntime>> {
+    let dir = dir.as_ref().to_path_buf();
+    if let Some(rt) = RUNTIMES.with(|m| m.borrow().get(&dir).cloned()) {
+        return Ok(rt);
+    }
+    let manifest = Manifest::load(&dir)?;
+    let rt = Rc::new(LstmRuntime::load(client()?.as_ref(), manifest)?);
+    RUNTIMES.with(|m| m.borrow_mut().insert(dir, rt.clone()));
+    Ok(rt)
+}
+
+/// The default-artifacts runtime (used by the CLI and examples).
+pub fn default_runtime() -> Result<Rc<LstmRuntime>> {
+    runtime(crate::runtime::artifact::default_dir())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_returns_same_instance() {
+        let dir = crate::runtime::artifact::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let a = runtime(&dir).unwrap();
+        let b = runtime(&dir).unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn missing_dir_errors_cleanly() {
+        assert!(runtime("/nonexistent/artifacts").is_err());
+    }
+}

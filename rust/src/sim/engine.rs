@@ -1,0 +1,212 @@
+//! The discrete-event simulation engine.
+//!
+//! Generic over the event type `E` and a state `S`. The engine owns the
+//! clock and the queue; handlers receive a [`Ctx`] through which they can
+//! read the current time and schedule follow-up events. This split (state
+//! separate from scheduler) keeps handler borrows simple and makes the
+//! platform simulation in `strategies::simulate` a plain `match` over an
+//! event enum.
+
+use crate::sim::event::EventQueue;
+use crate::sim::time::SimTime;
+use crate::util::units::Duration;
+
+/// Scheduling context passed to event handlers.
+pub struct Ctx<E> {
+    now: SimTime,
+    queue: EventQueue<E>,
+    stopped: bool,
+    fired: u64,
+}
+
+impl<E> Ctx<E> {
+    /// Current simulated time.
+    #[inline]
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Schedule an event after a relative delay.
+    #[inline]
+    pub fn schedule_in(&mut self, delay: Duration, event: E) {
+        self.queue.schedule(self.now + delay, event);
+    }
+
+    /// Schedule an event at an absolute time (must not be in the past).
+    pub fn schedule_at(&mut self, at: SimTime, event: E) {
+        debug_assert!(at >= self.now, "scheduling into the past");
+        self.queue.schedule(at, event);
+    }
+
+    /// Request the run loop to stop after the current handler returns.
+    pub fn stop(&mut self) {
+        self.stopped = true;
+    }
+
+    /// Number of events fired so far.
+    pub fn events_fired(&self) -> u64 {
+        self.fired
+    }
+}
+
+/// Outcome of a simulation run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunStats {
+    /// Total events processed.
+    pub events: u64,
+    /// Final simulated time.
+    pub end_time: SimTime,
+    /// True if a handler called `stop()` (vs the queue draining).
+    pub stopped_early: bool,
+}
+
+/// The engine: event queue + clock + run loop.
+pub struct Engine<E> {
+    ctx: Ctx<E>,
+}
+
+impl<E> Default for Engine<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Engine<E> {
+    pub fn new() -> Self {
+        Engine {
+            ctx: Ctx {
+                now: SimTime::ZERO,
+                queue: EventQueue::new(),
+                stopped: false,
+                fired: 0,
+            },
+        }
+    }
+
+    /// Seed the initial event(s) before running.
+    pub fn schedule_at(&mut self, at: SimTime, event: E) {
+        self.ctx.queue.schedule(at, event);
+    }
+
+    pub fn schedule_in(&mut self, delay: Duration, event: E) {
+        let at = self.ctx.now + delay;
+        self.ctx.queue.schedule(at, event);
+    }
+
+    /// Run until the queue drains, a handler stops the run, or `max_events`
+    /// is hit (guard against runaway self-scheduling loops).
+    pub fn run<S>(
+        &mut self,
+        state: &mut S,
+        max_events: u64,
+        mut handler: impl FnMut(&mut Ctx<E>, &mut S, E),
+    ) -> RunStats {
+        let ctx = &mut self.ctx;
+        while !ctx.stopped {
+            let Some((at, event)) = ctx.queue.pop() else {
+                break;
+            };
+            debug_assert!(at >= ctx.now, "time went backwards");
+            ctx.now = at;
+            ctx.fired += 1;
+            handler(ctx, state, event);
+            if ctx.fired >= max_events {
+                break;
+            }
+        }
+        RunStats {
+            events: ctx.fired,
+            end_time: ctx.now,
+            stopped_early: ctx.stopped,
+        }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.ctx.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq)]
+    enum Ev {
+        Tick(u32),
+        Stop,
+    }
+
+    #[test]
+    fn self_scheduling_ticks() {
+        let mut engine = Engine::new();
+        engine.schedule_at(SimTime::ZERO, Ev::Tick(0));
+        let mut seen = Vec::new();
+        let stats = engine.run(&mut seen, u64::MAX, |ctx, seen, ev| match ev {
+            Ev::Tick(n) => {
+                seen.push((ctx.now().nanos(), n));
+                if n < 4 {
+                    ctx.schedule_in(Duration::from_millis(40.0), Ev::Tick(n + 1));
+                }
+            }
+            Ev::Stop => ctx.stop(),
+        });
+        assert_eq!(stats.events, 5);
+        assert!(!stats.stopped_early);
+        assert_eq!(
+            seen,
+            vec![
+                (0, 0),
+                (40_000_000, 1),
+                (80_000_000, 2),
+                (120_000_000, 3),
+                (160_000_000, 4)
+            ]
+        );
+        assert_eq!(stats.end_time.nanos(), 160_000_000);
+    }
+
+    #[test]
+    fn stop_aborts_remaining_events() {
+        let mut engine = Engine::new();
+        engine.schedule_at(SimTime::from_nanos(1), Ev::Stop);
+        engine.schedule_at(SimTime::from_nanos(2), Ev::Tick(99));
+        let mut seen: Vec<(u64, u32)> = Vec::new();
+        let stats = engine.run(&mut seen, u64::MAX, |ctx, seen, ev| match ev {
+            Ev::Tick(n) => seen.push((ctx.now().nanos(), n)),
+            Ev::Stop => ctx.stop(),
+        });
+        assert!(stats.stopped_early);
+        assert_eq!(stats.events, 1);
+        assert!(seen.is_empty());
+    }
+
+    #[test]
+    fn max_events_guard() {
+        let mut engine = Engine::new();
+        engine.schedule_at(SimTime::ZERO, Ev::Tick(0));
+        let mut count = 0u64;
+        let stats = engine.run(&mut count, 1000, |ctx, count, ev| {
+            if let Ev::Tick(_) = ev {
+                *count += 1;
+                ctx.schedule_in(Duration::from_nanos(1.0), Ev::Tick(0));
+            }
+        });
+        assert_eq!(stats.events, 1000);
+        assert_eq!(count, 1000);
+    }
+
+    #[test]
+    fn events_at_same_time_run_in_schedule_order() {
+        let mut engine = Engine::new();
+        engine.schedule_at(SimTime::ZERO, Ev::Tick(1));
+        engine.schedule_at(SimTime::ZERO, Ev::Tick(2));
+        engine.schedule_at(SimTime::ZERO, Ev::Tick(3));
+        let mut order = Vec::new();
+        engine.run(&mut order, u64::MAX, |_, order, ev| {
+            if let Ev::Tick(n) = ev {
+                order.push(n)
+            }
+        });
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+}

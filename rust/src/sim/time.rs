@@ -1,0 +1,145 @@
+//! Simulated time: an integer nanosecond timestamp.
+//!
+//! The paper's phase durations span five orders of magnitude (2 µs data
+//! offload → 1.5 s worst-case configuration → multi-hour lifetimes), so
+//! float timestamps would accumulate error over the millions of events in
+//! a lifetime simulation. `SimTime` is a `u64` count of nanoseconds since
+//! simulation start: exact addition, total ordering, ~584 years of range.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+use crate::util::units::Duration;
+
+/// Absolute simulated time (nanoseconds since simulation start).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+    pub const MAX: SimTime = SimTime(u64::MAX);
+
+    #[inline]
+    pub fn from_nanos(ns: u64) -> SimTime {
+        SimTime(ns)
+    }
+
+    #[inline]
+    pub fn nanos(self) -> u64 {
+        self.0
+    }
+
+    #[inline]
+    pub fn as_duration(self) -> Duration {
+        Duration::from_nanos(self.0 as f64)
+    }
+
+    /// Elapsed duration since `earlier`. Panics in debug if negative.
+    #[inline]
+    pub fn since(self, earlier: SimTime) -> Duration {
+        debug_assert!(self >= earlier, "since() would be negative");
+        Duration::from_nanos((self.0 - earlier.0) as f64)
+    }
+
+    #[inline]
+    pub fn saturating_sub(self, other: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(other.0))
+    }
+}
+
+/// Convert a physical duration to integer nanoseconds (round-to-nearest).
+#[inline]
+pub fn dur_to_nanos(d: Duration) -> u64 {
+    let ns = d.secs() * 1e9;
+    debug_assert!(ns >= 0.0 && ns.is_finite(), "bad duration {ns}");
+    ns.round() as u64
+}
+
+impl Add<Duration> for SimTime {
+    type Output = SimTime;
+    #[inline]
+    fn add(self, rhs: Duration) -> SimTime {
+        SimTime(self.0 + dur_to_nanos(rhs))
+    }
+}
+
+impl AddAssign<Duration> for SimTime {
+    #[inline]
+    fn add_assign(&mut self, rhs: Duration) {
+        self.0 += dur_to_nanos(rhs);
+    }
+}
+
+impl Sub<SimTime> for SimTime {
+    type Output = Duration;
+    #[inline]
+    fn sub(self, rhs: SimTime) -> Duration {
+        self.since(rhs)
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let ms = self.0 as f64 / 1e6;
+        write!(f, "t={ms:.6}ms")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_duration_is_exact() {
+        let t = SimTime::ZERO + Duration::from_millis(36.145);
+        assert_eq!(t.nanos(), 36_145_000);
+    }
+
+    #[test]
+    fn accumulation_over_many_periods_is_exact() {
+        // One million 40 ms periods: float accumulation would drift; u64
+        // nanoseconds must be exact.
+        let mut t = SimTime::ZERO;
+        let period = Duration::from_millis(40.0);
+        for _ in 0..1_000_000 {
+            t += period;
+        }
+        assert_eq!(t.nanos(), 40_000_000 * 1_000_000u64);
+    }
+
+    #[test]
+    fn since_and_sub() {
+        let a = SimTime::from_nanos(1_000_000);
+        let b = SimTime::from_nanos(3_500_000);
+        assert!((b.since(a).millis() - 2.5).abs() < 1e-12);
+        assert!(((b - a).millis() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ordering_is_total() {
+        let a = SimTime::from_nanos(10);
+        let b = SimTime::from_nanos(20);
+        assert!(a < b);
+        assert_eq!(a.max(b), b);
+    }
+
+    #[test]
+    fn rounding_of_sub_nanosecond() {
+        // 0.0002 ms = 200 ns exactly; 0.00005 ms = 50 ns
+        assert_eq!(dur_to_nanos(Duration::from_millis(0.0002)), 200);
+        assert_eq!(dur_to_nanos(Duration::from_millis(0.00005)), 50);
+    }
+
+    #[test]
+    fn display_formats_ms() {
+        let t = SimTime::from_nanos(36_145_000);
+        assert_eq!(format!("{t}"), "t=36.145000ms");
+    }
+
+    #[test]
+    fn saturating_sub_floors_at_zero() {
+        let a = SimTime::from_nanos(5);
+        let b = SimTime::from_nanos(10);
+        assert_eq!(a.saturating_sub(b), SimTime::ZERO);
+    }
+}

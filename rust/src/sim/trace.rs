@@ -1,0 +1,155 @@
+//! Simulation tracing: a bounded log of labelled spans used for debugging
+//! simulations and for the validation experiment's detailed output.
+//!
+//! A [`Trace`] records `(t_start, t_end, label)` spans (e.g. one span per
+//! FPGA phase). It is bounded: when full it stops recording but keeps
+//! counting, so long lifetime runs don't accumulate gigabytes of spans.
+
+use std::collections::BTreeMap;
+
+use crate::sim::time::SimTime;
+use crate::util::units::Duration;
+
+/// A labelled time span in the simulation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    pub start: SimTime,
+    pub end: SimTime,
+    pub label: &'static str,
+}
+
+impl Span {
+    pub fn duration(&self) -> Duration {
+        self.end.since(self.start)
+    }
+}
+
+/// Bounded span recorder with per-label aggregate durations.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    spans: Vec<Span>,
+    capacity: usize,
+    dropped: u64,
+    totals: BTreeMap<&'static str, (u64, Duration)>,
+}
+
+impl Trace {
+    pub fn new(capacity: usize) -> Trace {
+        Trace {
+            spans: Vec::new(),
+            capacity,
+            dropped: 0,
+            totals: BTreeMap::new(),
+        }
+    }
+
+    /// A trace that only aggregates (records no individual spans).
+    pub fn aggregate_only() -> Trace {
+        Trace::new(0)
+    }
+
+    pub fn record(&mut self, start: SimTime, end: SimTime, label: &'static str) {
+        debug_assert!(end >= start, "span ends before it starts");
+        let entry = self.totals.entry(label).or_insert((0, Duration::ZERO));
+        entry.0 += 1;
+        entry.1 += end.since(start);
+        if self.spans.len() < self.capacity {
+            self.spans.push(Span { start, end, label });
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Number of spans recorded for a label (including dropped ones).
+    pub fn count(&self, label: &str) -> u64 {
+        self.totals.get(label).map(|(n, _)| *n).unwrap_or(0)
+    }
+
+    /// Total duration across all spans with this label.
+    pub fn total_duration(&self, label: &str) -> Duration {
+        self.totals
+            .get(label)
+            .map(|(_, d)| *d)
+            .unwrap_or(Duration::ZERO)
+    }
+
+    /// All labels seen, in sorted order.
+    pub fn labels(&self) -> Vec<&'static str> {
+        self.totals.keys().copied().collect()
+    }
+
+    /// Render an aggregate summary table (label, count, total ms).
+    pub fn summary(&self) -> String {
+        use crate::util::table::{fnum, Table};
+        let mut t = Table::new(&["phase", "count", "total_ms"]);
+        for (label, (count, dur)) in &self.totals {
+            t.row(&[label.to_string(), count.to_string(), fnum(dur.millis(), 4)]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(ns: u64) -> SimTime {
+        SimTime::from_nanos(ns)
+    }
+
+    #[test]
+    fn records_and_aggregates() {
+        let mut tr = Trace::new(10);
+        tr.record(t(0), t(100), "config");
+        tr.record(t(100), t(150), "inference");
+        tr.record(t(150), t(250), "config");
+        assert_eq!(tr.spans().len(), 3);
+        assert_eq!(tr.count("config"), 2);
+        assert!((tr.total_duration("config").secs() - 200e-9).abs() < 1e-18);
+        assert_eq!(tr.count("missing"), 0);
+    }
+
+    #[test]
+    fn bounded_capacity_keeps_counting() {
+        let mut tr = Trace::new(2);
+        for i in 0..5 {
+            tr.record(t(i * 10), t(i * 10 + 5), "x");
+        }
+        assert_eq!(tr.spans().len(), 2);
+        assert_eq!(tr.dropped(), 3);
+        assert_eq!(tr.count("x"), 5);
+    }
+
+    #[test]
+    fn aggregate_only_records_nothing() {
+        let mut tr = Trace::aggregate_only();
+        tr.record(t(0), t(10), "y");
+        assert!(tr.spans().is_empty());
+        assert_eq!(tr.count("y"), 1);
+    }
+
+    #[test]
+    fn summary_renders_labels() {
+        let mut tr = Trace::new(4);
+        tr.record(t(0), t(36_145_000), "configuration");
+        let s = tr.summary();
+        assert!(s.contains("configuration"));
+        assert!(s.contains("36.145"));
+    }
+
+    #[test]
+    fn labels_sorted() {
+        let mut tr = Trace::new(4);
+        tr.record(t(0), t(1), "b");
+        tr.record(t(1), t(2), "a");
+        assert_eq!(tr.labels(), vec!["a", "b"]);
+    }
+}

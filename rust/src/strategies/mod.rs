@@ -1,0 +1,8 @@
+//! Power-management strategies (paper §4.2) and the strategy-level
+//! discrete-event simulation that evaluates them against the budget.
+
+pub mod simulate;
+pub mod strategy;
+
+pub use simulate::{simulate, SimReport};
+pub use strategy::{build, Adaptive, GapAction, IdleWaiting, OnOff, Strategy};

@@ -1,0 +1,214 @@
+//! The strategy abstraction: what the platform does in the gap between
+//! finishing a workload item and the next inference request.
+//!
+//! The paper's two strategies (§4.2) plus our adaptive extension are all
+//! expressible as a *gap policy*:
+//!
+//! * **On-Off** — power off; pay power-on transient + full reconfiguration
+//!   at the next request.
+//! * **Idle-Waiting** — stay configured; draw the Table 3 idle power of
+//!   the selected power-saving mode.
+//! * **Adaptive** (paper §7 future work) — choose per gap: power off when
+//!   the gap is longer than the analytical crossover, idle otherwise.
+//!   For periodic workloads this degenerates to whichever single strategy
+//!   wins at T_req; its value shows with irregular arrivals.
+
+use crate::config::schema::StrategyKind;
+use crate::device::rails::PowerSaving;
+use crate::energy::analytical::Analytical;
+use crate::util::units::Duration;
+
+/// What to do during an inter-request gap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GapAction {
+    /// Cut FPGA rails; configuration is lost.
+    PowerOff,
+    /// Hold configuration at the given power-saving level.
+    Idle(PowerSaving),
+}
+
+/// A gap policy. Object-safe so the simulator and the serving coordinator
+/// can hold `Box<dyn Strategy>`.
+pub trait Strategy: Send {
+    fn kind(&self) -> StrategyKind;
+
+    /// Decide the action for a gap of length `gap` (time from item
+    /// completion to the next request arrival).
+    fn gap_action(&self, gap: Duration) -> GapAction;
+
+    /// Human-readable label for reports.
+    fn label(&self) -> String {
+        self.kind().name().to_string()
+    }
+}
+
+/// The paper's On-Off strategy (Fig 5).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OnOff;
+
+impl Strategy for OnOff {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::OnOff
+    }
+
+    fn gap_action(&self, _gap: Duration) -> GapAction {
+        GapAction::PowerOff
+    }
+}
+
+/// The paper's Idle-Waiting strategy (Fig 6) at a power-saving level.
+#[derive(Debug, Clone, Copy)]
+pub struct IdleWaiting {
+    pub saving: PowerSaving,
+}
+
+impl IdleWaiting {
+    pub fn baseline() -> IdleWaiting {
+        IdleWaiting {
+            saving: PowerSaving::BASELINE,
+        }
+    }
+
+    pub fn method1() -> IdleWaiting {
+        IdleWaiting {
+            saving: PowerSaving::M1,
+        }
+    }
+
+    pub fn method12() -> IdleWaiting {
+        IdleWaiting {
+            saving: PowerSaving::M12,
+        }
+    }
+}
+
+impl Strategy for IdleWaiting {
+    fn kind(&self) -> StrategyKind {
+        match (self.saving.method1, self.saving.method2) {
+            (false, _) => StrategyKind::IdleWaiting,
+            (true, false) => StrategyKind::IdleWaitingM1,
+            (true, true) => StrategyKind::IdleWaitingM12,
+        }
+    }
+
+    fn gap_action(&self, _gap: Duration) -> GapAction {
+        GapAction::Idle(self.saving)
+    }
+}
+
+/// Per-gap adaptive strategy: powers off for gaps beyond the analytical
+/// crossover of its idle mode, idles otherwise.
+#[derive(Debug, Clone, Copy)]
+pub struct Adaptive {
+    pub saving: PowerSaving,
+    /// Break-even gap duration (precomputed from the analytical model).
+    pub crossover: Duration,
+}
+
+impl Adaptive {
+    /// Build from the analytical model: the crossover is where the energy
+    /// of idling for the gap equals the energy of a power cycle +
+    /// reconfiguration.
+    pub fn from_model(model: &Analytical, saving: PowerSaving) -> Adaptive {
+        let p_idle = crate::device::rails::RailSet::idle_power(saving);
+        Adaptive {
+            saving,
+            crossover: crate::energy::crossover::asymptotic(model, p_idle),
+        }
+    }
+}
+
+impl Strategy for Adaptive {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::Adaptive
+    }
+
+    fn gap_action(&self, gap: Duration) -> GapAction {
+        if gap > self.crossover {
+            GapAction::PowerOff
+        } else {
+            GapAction::Idle(self.saving)
+        }
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "adaptive({}, crossover {:.2} ms)",
+            self.saving.label(),
+            self.crossover.millis()
+        )
+    }
+}
+
+/// Construct the strategy for a config-level [`StrategyKind`].
+pub fn build(kind: StrategyKind, model: &Analytical) -> Box<dyn Strategy> {
+    match kind {
+        StrategyKind::OnOff => Box::new(OnOff),
+        StrategyKind::IdleWaiting => Box::new(IdleWaiting::baseline()),
+        StrategyKind::IdleWaitingM1 => Box::new(IdleWaiting::method1()),
+        StrategyKind::IdleWaitingM12 => Box::new(IdleWaiting::method12()),
+        StrategyKind::Adaptive => Box::new(Adaptive::from_model(model, PowerSaving::M12)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_default;
+
+    fn model() -> Analytical {
+        let cfg = paper_default();
+        Analytical::new(&cfg.item, cfg.workload.energy_budget)
+    }
+
+    #[test]
+    fn onoff_always_powers_off() {
+        assert_eq!(OnOff.gap_action(Duration::from_millis(1.0)), GapAction::PowerOff);
+        assert_eq!(OnOff.gap_action(Duration::from_secs(100.0)), GapAction::PowerOff);
+        assert_eq!(OnOff.kind(), StrategyKind::OnOff);
+    }
+
+    #[test]
+    fn idle_waiting_always_idles_at_its_level() {
+        let s = IdleWaiting::method12();
+        assert_eq!(
+            s.gap_action(Duration::from_secs(10.0)),
+            GapAction::Idle(PowerSaving::M12)
+        );
+        assert_eq!(s.kind(), StrategyKind::IdleWaitingM12);
+        assert_eq!(IdleWaiting::baseline().kind(), StrategyKind::IdleWaiting);
+        assert_eq!(IdleWaiting::method1().kind(), StrategyKind::IdleWaitingM1);
+    }
+
+    #[test]
+    fn adaptive_switches_at_crossover() {
+        let m = model();
+        let a = Adaptive::from_model(&m, PowerSaving::BASELINE);
+        assert!((a.crossover.millis() - 89.21).abs() < 0.05);
+        assert_eq!(
+            a.gap_action(Duration::from_millis(50.0)),
+            GapAction::Idle(PowerSaving::BASELINE)
+        );
+        assert_eq!(
+            a.gap_action(Duration::from_millis(200.0)),
+            GapAction::PowerOff
+        );
+    }
+
+    #[test]
+    fn adaptive_m12_crossover_is_499ms() {
+        let m = model();
+        let a = Adaptive::from_model(&m, PowerSaving::M12);
+        assert!((a.crossover.millis() - 499.06).abs() < 0.15, "{}", a.crossover.millis());
+    }
+
+    #[test]
+    fn build_covers_all_kinds() {
+        let m = model();
+        for kind in StrategyKind::ALL {
+            let s = build(kind, &m);
+            assert_eq!(s.kind(), kind);
+            assert!(!s.label().is_empty());
+        }
+    }
+}

@@ -1,0 +1,6 @@
+//! Test support: the mini property-testing framework used by unit and
+//! integration tests (offline substitute for proptest — see DESIGN.md §3).
+
+pub mod prop;
+
+pub use prop::{check, Below, Gen, InRange, Shrink};

@@ -1,0 +1,219 @@
+//! Mini property-testing framework (proptest is not in the offline
+//! vendor set).
+//!
+//! Deterministic, seed-reported, with linear input shrinking: on failure
+//! the runner re-tries progressively "smaller" inputs (via the
+//! [`Shrink`] trait) and reports the smallest failing case plus the seed
+//! to reproduce. Scoped to what this project's invariants need — numeric
+//! scalars and small tuples — not a general-purpose engine.
+
+use crate::util::rng::Xoshiro256ss;
+
+/// Number of cases per property (override with IDLEWAIT_PROP_CASES).
+pub fn default_cases() -> u32 {
+    std::env::var("IDLEWAIT_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256)
+}
+
+/// Generate a random value of `Self` from the PRNG.
+pub trait Gen: Sized + std::fmt::Debug + Clone {
+    fn gen(rng: &mut Xoshiro256ss) -> Self;
+}
+
+/// Produce candidate "smaller" values for shrinking.
+pub trait Shrink: Sized + Clone {
+    fn shrink(&self) -> Vec<Self>;
+}
+
+/// A uniform f64 in a range (inclusive lo, exclusive hi).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InRange<const LO: i64, const HI: i64>(pub f64);
+
+impl<const LO: i64, const HI: i64> Gen for InRange<LO, HI> {
+    fn gen(rng: &mut Xoshiro256ss) -> Self {
+        InRange(rng.uniform(LO as f64, HI as f64))
+    }
+}
+
+impl<const LO: i64, const HI: i64> Shrink for InRange<LO, HI> {
+    fn shrink(&self) -> Vec<Self> {
+        let lo = LO as f64;
+        let mut out = Vec::new();
+        // shrink toward the low end of the range
+        let candidates = [lo, (self.0 + lo) / 2.0, self.0 - (self.0 - lo) * 0.1];
+        for c in candidates {
+            if c < self.0 && c >= lo {
+                out.push(InRange(c));
+            }
+        }
+        out
+    }
+}
+
+/// A u64 below a bound.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Below<const N: u64>(pub u64);
+
+impl<const N: u64> Gen for Below<N> {
+    fn gen(rng: &mut Xoshiro256ss) -> Self {
+        Below(rng.below(N))
+    }
+}
+
+impl<const N: u64> Shrink for Below<N> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.0 > 0 {
+            out.push(Below(0));
+            out.push(Below(self.0 / 2));
+            out.push(Below(self.0 - 1));
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl<A: Gen, B: Gen> Gen for (A, B) {
+    fn gen(rng: &mut Xoshiro256ss) -> Self {
+        (A::gen(rng), B::gen(rng))
+    }
+}
+
+impl<A: Shrink + std::fmt::Debug, B: Shrink + std::fmt::Debug> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Gen, B: Gen, C: Gen> Gen for (A, B, C) {
+    fn gen(rng: &mut Xoshiro256ss) -> Self {
+        (A::gen(rng), B::gen(rng), C::gen(rng))
+    }
+}
+
+impl<A, B, C> Shrink for (A, B, C)
+where
+    A: Shrink + std::fmt::Debug,
+    B: Shrink + std::fmt::Debug,
+    C: Shrink + std::fmt::Debug,
+{
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink()
+                .into_iter()
+                .map(|b| (self.0.clone(), b, self.2.clone())),
+        );
+        out.extend(
+            self.2
+                .shrink()
+                .into_iter()
+                .map(|c| (self.0.clone(), self.1.clone(), c)),
+        );
+        out
+    }
+}
+
+/// Check `property` over `cases` random inputs; panic with the smallest
+/// failing input (after bounded shrinking) and the reproduction seed.
+pub fn check<T: Gen + Shrink>(name: &str, cases: u32, property: impl Fn(&T) -> bool) {
+    let seed = std::env::var("IDLEWAIT_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut rng = Xoshiro256ss::new(seed);
+    for case in 0..cases {
+        let input = T::gen(&mut rng);
+        if property(&input) {
+            continue;
+        }
+        // shrink: repeatedly take the first failing shrink candidate
+        let mut smallest = input.clone();
+        let mut budget = 200;
+        'shrinking: while budget > 0 {
+            for candidate in smallest.shrink() {
+                budget -= 1;
+                if !property(&candidate) {
+                    smallest = candidate;
+                    continue 'shrinking;
+                }
+                if budget == 0 {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property '{name}' failed at case {case} (seed {seed}):\n  \
+             original: {input:?}\n  shrunk:   {smallest:?}\n\
+             reproduce with IDLEWAIT_PROP_SEED={seed}"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check::<InRange<0, 100>>("nonneg", 128, |x| x.0 >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_reports() {
+        check::<InRange<0, 100>>("always-false", 16, |_| false);
+    }
+
+    #[test]
+    fn shrinking_moves_toward_lo() {
+        let x = InRange::<10, 100>(50.0);
+        for candidate in x.shrink() {
+            assert!(candidate.0 < 50.0 && candidate.0 >= 10.0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn shrunk_failure_is_smaller_than_original() {
+        // property fails for x >= 20; the shrinker should land near 20
+        check::<InRange<0, 100>>("ge20", 256, |x| x.0 < 20.0);
+    }
+
+    #[test]
+    fn tuples_generate_and_shrink() {
+        check::<(InRange<1, 10>, Below<5>)>("tuple", 64, |(a, b)| {
+            a.0 >= 1.0 && b.0 < 5
+        });
+        let t = (InRange::<0, 10>(5.0), Below::<10>(3));
+        assert!(!t.shrink().is_empty());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Xoshiro256ss::new(1);
+        let mut b = Xoshiro256ss::new(1);
+        for _ in 0..32 {
+            assert_eq!(
+                InRange::<0, 1000>::gen(&mut a).0,
+                InRange::<0, 1000>::gen(&mut b).0
+            );
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Minimal CSV writer for experiment series (Fig 7/8/9/10/11 data dumps).
+//!
+//! We only *write* CSV (the figures are regenerated from these files), so
+//! this is a small escaping-correct serializer, not a parser.
+
+use std::fmt::Write as _;
+use std::io;
+use std::path::Path;
+
+/// An in-memory CSV document with a fixed header.
+#[derive(Debug, Clone)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Csv {
+        Csv {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Csv {
+        assert_eq!(cells.len(), self.header.len(), "csv row width mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_f64(&mut self, cells: &[f64]) -> &mut Csv {
+        let cells: Vec<String> = cells.iter().map(|c| format!("{c}")).collect();
+        self.row(&cells)
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// RFC-4180 escaping: quote fields containing comma/quote/newline.
+    fn escape(field: &str) -> String {
+        if field.contains([',', '"', '\n', '\r']) {
+            format!("\"{}\"", field.replace('"', "\"\""))
+        } else {
+            field.to_string()
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let write_row = |out: &mut String, cells: &[String]| {
+            let escaped: Vec<String> = cells.iter().map(|c| Self::escape(c)).collect();
+            let _ = writeln!(out, "{}", escaped.join(","));
+        };
+        write_row(&mut out, &self.header);
+        for row in &self.rows {
+            write_row(&mut out, row);
+        }
+        out
+    }
+
+    /// Write to disk, creating parent directories as needed.
+    pub fn write_to(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut c = Csv::new(&["t_req_ms", "items"]);
+        c.row_f64(&[40.0, 771781.0]);
+        let s = c.render();
+        assert_eq!(s, "t_req_ms,items\n40,771781\n");
+    }
+
+    #[test]
+    fn escapes_specials() {
+        let mut c = Csv::new(&["name", "note"]);
+        c.row(&["a,b".into(), "say \"hi\"".into()]);
+        let s = c.render();
+        assert!(s.contains("\"a,b\",\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn rejects_bad_width() {
+        let mut c = Csv::new(&["a"]);
+        c.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn writes_to_disk() {
+        let dir = std::env::temp_dir().join("idlewait_csv_test");
+        let path = dir.join("sub/out.csv");
+        let mut c = Csv::new(&["x"]);
+        c.row_f64(&[1.5]);
+        c.write_to(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "x\n1.5\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

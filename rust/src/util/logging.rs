@@ -1,0 +1,104 @@
+//! Tiny `log` facade backend: timestamped stderr logger with env filtering.
+//!
+//! `env_logger` is not in the offline vendor set; this logger covers what
+//! the coordinator and experiments need: level filtering via
+//! `IDLEWAIT_LOG` (error|warn|info|debug|trace, default info) and
+//! monotonic-elapsed timestamps so serving-loop logs can be correlated with
+//! simulated time.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+use once_cell::sync::Lazy;
+
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+struct StderrLogger {
+    level: LevelFilter,
+}
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata<'_>) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record<'_>) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let elapsed = START.elapsed();
+        let tag = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!(
+            "[{:>9.3}s {} {}] {}",
+            elapsed.as_secs_f64(),
+            tag,
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Parse a level name, defaulting to Info.
+fn parse_level(s: &str) -> LevelFilter {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => LevelFilter::Off,
+        "error" => LevelFilter::Error,
+        "warn" => LevelFilter::Warn,
+        "debug" => LevelFilter::Debug,
+        "trace" => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    }
+}
+
+/// Install the logger (idempotent). Reads `IDLEWAIT_LOG` for the level.
+pub fn init() {
+    init_with_level(
+        std::env::var("IDLEWAIT_LOG")
+            .map(|v| parse_level(&v))
+            .unwrap_or(LevelFilter::Info),
+    );
+}
+
+/// Install with an explicit level (idempotent; first call wins).
+pub fn init_with_level(level: LevelFilter) {
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    Lazy::force(&START);
+    let logger = Box::leak(Box::new(StderrLogger { level }));
+    if log::set_logger(logger).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(parse_level("error"), LevelFilter::Error);
+        assert_eq!(parse_level("WARN"), LevelFilter::Warn);
+        assert_eq!(parse_level("debug"), LevelFilter::Debug);
+        assert_eq!(parse_level("trace"), LevelFilter::Trace);
+        assert_eq!(parse_level("off"), LevelFilter::Off);
+        assert_eq!(parse_level("bogus"), LevelFilter::Info);
+    }
+
+    #[test]
+    fn init_is_idempotent() {
+        init_with_level(LevelFilter::Warn);
+        init_with_level(LevelFilter::Trace); // ignored
+        log::info!("this should not panic");
+    }
+}

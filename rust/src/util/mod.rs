@@ -1,0 +1,16 @@
+//! Shared utilities: unit-safe numerics, deterministic PRNGs, statistics,
+//! and report serialization (ASCII tables, CSV, JSON).
+//!
+//! These are the substrate pieces the offline environment could not supply
+//! as crates (serde/csv/env_logger are absent from the vendor set); each is
+//! a small, fully-tested implementation scoped to what this project needs.
+
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;
+
+pub use units::{battery_energy, Current, Duration, Energy, Power, Voltage};

@@ -1,0 +1,263 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline vendor set ships `rand_core` (traits) but no PRNG
+//! implementation crate, so we implement two small, well-known generators:
+//!
+//! * [`SplitMix64`] — Steele/Lea/Flood splittable generator; used to seed.
+//! * [`Xoshiro256ss`] — Blackman/Vigna xoshiro256**, the general-purpose
+//!   generator used by the simulator, the property-test framework and the
+//!   workload generators.
+//!
+//! Determinism matters here: every experiment and property test takes an
+//! explicit seed so runs are reproducible bit-for-bit.
+
+use rand_core::{impls, Error, RngCore, SeedableRng};
+
+/// SplitMix64 — tiny, passes BigCrush, ideal for seeding other generators.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    #[inline]
+    pub fn next(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** 1.0 — the simulator's general-purpose PRNG.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256ss {
+    s: [u64; 4],
+}
+
+impl Xoshiro256ss {
+    /// Seed via SplitMix64 as recommended by the xoshiro authors.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Xoshiro256ss {
+            s: [sm.next(), sm.next(), sm.next(), sm.next()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64_raw(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 top bits → [0,1) with full double precision
+        (self.next_u64_raw() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64_raw();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= n.wrapping_neg() % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range_inclusive(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Exponentially-distributed sample with the given mean (for Poisson
+    /// arrival processes in the irregular-request extension).
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        // inverse CDF; guard against ln(0)
+        let u = 1.0 - self.next_f64();
+        -mean * u.ln()
+    }
+
+    /// Standard normal via Box–Muller (for jittered request periods).
+    pub fn normal(&mut self, mean: f64, std_dev: f64) -> f64 {
+        let u1 = (1.0 - self.next_f64()).max(f64::MIN_POSITIVE);
+        let u2 = self.next_f64();
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        mean + std_dev * z
+    }
+
+    /// Random boolean with probability `p` of true.
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Pick a uniformly random element of a non-empty slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.below(items.len() as u64) as usize]
+    }
+
+    /// Fisher–Yates shuffle in place.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            items.swap(i, j);
+        }
+    }
+}
+
+impl RngCore for Xoshiro256ss {
+    fn next_u32(&mut self) -> u32 {
+        (self.next_u64_raw() >> 32) as u32
+    }
+    fn next_u64(&mut self) -> u64 {
+        self.next_u64_raw()
+    }
+    fn fill_bytes(&mut self, dest: &mut [u8]) {
+        impls::fill_bytes_via_next(self, dest)
+    }
+    fn try_fill_bytes(&mut self, dest: &mut [u8]) -> Result<(), Error> {
+        self.fill_bytes(dest);
+        Ok(())
+    }
+}
+
+impl SeedableRng for Xoshiro256ss {
+    type Seed = [u8; 8];
+    fn from_seed(seed: Self::Seed) -> Self {
+        Xoshiro256ss::new(u64::from_le_bytes(seed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vector() {
+        // Reference values for seed=0 from the public-domain splitmix64.c
+        let mut sm = SplitMix64::new(0);
+        assert_eq!(sm.next(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(sm.next(), 0x6E78_9E6A_A1B9_65F4);
+        assert_eq!(sm.next(), 0x06C4_5D18_8009_454F);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Xoshiro256ss::new(42);
+        let mut b = Xoshiro256ss::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64_raw(), b.next_u64_raw());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Xoshiro256ss::new(1);
+        let mut b = Xoshiro256ss::new(2);
+        let same = (0..64).filter(|_| a.next_u64_raw() == b.next_u64_raw()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Xoshiro256ss::new(7);
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_ish_and_in_range() {
+        let mut rng = Xoshiro256ss::new(3);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[rng.below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            // each bucket ≈ 10_000; allow 10% tolerance
+            assert!((9_000..11_000).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn exponential_mean_converges() {
+        let mut rng = Xoshiro256ss::new(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.exponential(40.0)).sum::<f64>() / n as f64;
+        assert!((mean - 40.0).abs() < 0.7, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments_converge() {
+        let mut rng = Xoshiro256ss::new(13);
+        let n = 100_000;
+        let samples: Vec<f64> = (0..n).map(|_| rng.normal(10.0, 2.0)).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 10.0).abs() < 0.05, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.15, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = Xoshiro256ss::new(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn range_inclusive_covers_endpoints() {
+        let mut rng = Xoshiro256ss::new(17);
+        let mut saw_lo = false;
+        let mut saw_hi = false;
+        for _ in 0..10_000 {
+            match rng.range_inclusive(3, 6) {
+                3 => saw_lo = true,
+                6 => saw_hi = true,
+                4 | 5 => {}
+                other => panic!("out of range: {other}"),
+            }
+        }
+        assert!(saw_lo && saw_hi);
+    }
+
+    #[test]
+    fn rand_core_trait_impl_works() {
+        let mut rng = Xoshiro256ss::new(23);
+        let mut buf = [0u8; 17];
+        rng.fill_bytes(&mut buf);
+        assert!(buf.iter().any(|&b| b != 0));
+    }
+}

@@ -1,0 +1,199 @@
+//! ASCII table rendering for experiment reports.
+//!
+//! The benches and the `repro` CLI print the paper's tables/figure series
+//! as plain-text tables; this module owns alignment, headers and separators
+//! so every report looks the same.
+
+use std::fmt::Write as _;
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple ASCII table builder.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: Option<String>,
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            title: None,
+            aligns: vec![Align::Right; headers.len()],
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn with_title(mut self, title: impl Into<String>) -> Table {
+        self.title = Some(title.into());
+        self
+    }
+
+    /// Set per-column alignment (defaults to right-aligned).
+    pub fn with_aligns(mut self, aligns: &[Align]) -> Table {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Table {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.headers.len()
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: row from displayable items.
+    pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Table {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render to a string with box-drawing separators.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+
+        let sep = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+
+        let fmt_row = |cells: &[String], aligns: &[Align]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncols {
+                let cell = &cells[i];
+                match aligns[i] {
+                    Align::Left => {
+                        let _ = write!(line, " {:<width$} |", cell, width = widths[i]);
+                    }
+                    Align::Right => {
+                        let _ = write!(line, " {:>width$} |", cell, width = widths[i]);
+                    }
+                }
+            }
+            line
+        };
+
+        let mut out = String::new();
+        if let Some(title) = &self.title {
+            let _ = writeln!(out, "{title}");
+        }
+        let _ = writeln!(out, "{sep}");
+        let _ = writeln!(out, "{}", fmt_row(&self.headers, &vec![Align::Left; ncols]));
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &self.aligns));
+        }
+        let _ = writeln!(out, "{sep}");
+        out
+    }
+}
+
+/// Format a float with a fixed number of decimals (report helper).
+pub fn fnum(x: f64, decimals: usize) -> String {
+    format!("{:.*}", decimals, x)
+}
+
+/// Format a large count with thousands separators (e.g. 3,085,319).
+pub fn fcount(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    let bytes = s.as_bytes();
+    for (i, b) in bytes.iter().enumerate() {
+        if i > 0 && (bytes.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(*b as char);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut t = Table::new(&["strategy", "items"]).with_title("Fig 8");
+        t.row(&["On-Off".into(), "346,073".into()]);
+        t.row(&["Idle-Waiting".into(), "771,781".into()]);
+        let s = t.render();
+        assert!(s.contains("Fig 8"));
+        assert!(s.contains("| strategy     | items   |"));
+        assert!(s.contains("|       On-Off | 346,073 |"));
+        // all data lines same width
+        let widths: Vec<usize> = s.lines().skip(1).map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_mismatched_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn left_alignment() {
+        let mut t = Table::new(&["k", "v"]).with_aligns(&[Align::Left, Align::Right]);
+        t.row(&["x".into(), "1".into()]);
+        t.row(&["longer".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.contains("| x      |  1 |"));
+    }
+
+    #[test]
+    fn fcount_groups_thousands() {
+        assert_eq!(fcount(0), "0");
+        assert_eq!(fcount(999), "999");
+        assert_eq!(fcount(1000), "1,000");
+        assert_eq!(fcount(3_085_319), "3,085,319");
+        assert_eq!(fcount(346_073), "346,073");
+    }
+
+    #[test]
+    fn fnum_decimals() {
+        assert_eq!(fnum(11.8523, 2), "11.85");
+        assert_eq!(fnum(40.131, 2), "40.13");
+    }
+
+    #[test]
+    fn empty_table_renders_headers_only() {
+        let t = Table::new(&["h1", "h2"]);
+        assert!(t.is_empty());
+        let s = t.render();
+        assert!(s.contains("h1"));
+        assert_eq!(s.lines().count(), 4); // sep, header, sep, sep
+    }
+}

@@ -1,0 +1,481 @@
+//! Physical-unit newtypes used across the energy model.
+//!
+//! The paper's quantities live on very different scales (180 µA MCU sleep
+//! current vs 4147 J battery budget vs 2 µs data-offload phases), so raw
+//! `f64`s invite unit mistakes. These newtypes make the units explicit and
+//! give the arithmetic the obvious physical identities:
+//!
+//! * `Power * Duration = Energy`
+//! * `Energy / Duration = Power`
+//! * `Voltage * Current = Power`
+//!
+//! Internal representations: watts, joules, seconds, volts, amperes (SI
+//! base), with milli-scaled constructors/accessors because the paper's
+//! tables are in mW / mJ / ms.
+
+use std::cmp::Ordering;
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub, SubAssign};
+
+macro_rules! unit_newtype {
+    ($(#[$doc:meta])* $name:ident, $sym:expr) => {
+        $(#[$doc])*
+        #[derive(Debug, Clone, Copy, PartialEq, Default)]
+        pub struct $name(pub(crate) f64);
+
+        impl $name {
+            pub const ZERO: $name = $name(0.0);
+
+            /// Raw SI-base value (W, J, s, V, A respectively).
+            #[inline]
+            pub fn raw(self) -> f64 {
+                self.0
+            }
+
+            /// True if the value is finite (neither NaN nor ±inf).
+            #[inline]
+            pub fn is_finite(self) -> bool {
+                self.0.is_finite()
+            }
+
+            /// Absolute value.
+            #[inline]
+            pub fn abs(self) -> $name {
+                $name(self.0.abs())
+            }
+
+            /// Elementwise max.
+            #[inline]
+            pub fn max(self, other: $name) -> $name {
+                $name(self.0.max(other.0))
+            }
+
+            /// Elementwise min.
+            #[inline]
+            pub fn min(self, other: $name) -> $name {
+                $name(self.0.min(other.0))
+            }
+
+            /// Relative difference |a-b| / max(|a|,|b|,eps); 0 for two zeros.
+            pub fn rel_diff(self, other: $name) -> f64 {
+                let denom = self.0.abs().max(other.0.abs());
+                if denom == 0.0 {
+                    0.0
+                } else {
+                    (self.0 - other.0).abs() / denom
+                }
+            }
+        }
+
+        impl Add for $name {
+            type Output = $name;
+            #[inline]
+            fn add(self, rhs: $name) -> $name {
+                $name(self.0 + rhs.0)
+            }
+        }
+
+        impl AddAssign for $name {
+            #[inline]
+            fn add_assign(&mut self, rhs: $name) {
+                self.0 += rhs.0;
+            }
+        }
+
+        impl Sub for $name {
+            type Output = $name;
+            #[inline]
+            fn sub(self, rhs: $name) -> $name {
+                $name(self.0 - rhs.0)
+            }
+        }
+
+        impl SubAssign for $name {
+            #[inline]
+            fn sub_assign(&mut self, rhs: $name) {
+                self.0 -= rhs.0;
+            }
+        }
+
+        impl Neg for $name {
+            type Output = $name;
+            #[inline]
+            fn neg(self) -> $name {
+                $name(-self.0)
+            }
+        }
+
+        impl Mul<f64> for $name {
+            type Output = $name;
+            #[inline]
+            fn mul(self, rhs: f64) -> $name {
+                $name(self.0 * rhs)
+            }
+        }
+
+        impl Mul<$name> for f64 {
+            type Output = $name;
+            #[inline]
+            fn mul(self, rhs: $name) -> $name {
+                $name(self * rhs.0)
+            }
+        }
+
+        impl Div<f64> for $name {
+            type Output = $name;
+            #[inline]
+            fn div(self, rhs: f64) -> $name {
+                $name(self.0 / rhs)
+            }
+        }
+
+        impl Div<$name> for $name {
+            /// Ratio of two same-unit quantities is dimensionless.
+            type Output = f64;
+            #[inline]
+            fn div(self, rhs: $name) -> f64 {
+                self.0 / rhs.0
+            }
+        }
+
+        impl PartialOrd for $name {
+            #[inline]
+            fn partial_cmp(&self, other: &$name) -> Option<Ordering> {
+                self.0.partial_cmp(&other.0)
+            }
+        }
+
+        impl Sum for $name {
+            fn sum<I: Iterator<Item = $name>>(iter: I) -> $name {
+                $name(iter.map(|v| v.0).sum())
+            }
+        }
+
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                if let Some(prec) = f.precision() {
+                    write!(f, "{:.*} {}", prec, self.0, $sym)
+                } else {
+                    write!(f, "{} {}", self.0, $sym)
+                }
+            }
+        }
+    };
+}
+
+unit_newtype!(
+    /// Electrical power. SI base: watts.
+    Power,
+    "W"
+);
+unit_newtype!(
+    /// Energy. SI base: joules.
+    Energy,
+    "J"
+);
+unit_newtype!(
+    /// Time duration. SI base: seconds.
+    Duration,
+    "s"
+);
+unit_newtype!(
+    /// Electrical potential. SI base: volts.
+    Voltage,
+    "V"
+);
+unit_newtype!(
+    /// Electrical current. SI base: amperes.
+    Current,
+    "A"
+);
+
+impl Power {
+    #[inline]
+    pub fn from_watts(w: f64) -> Power {
+        Power(w)
+    }
+    #[inline]
+    pub fn from_milliwatts(mw: f64) -> Power {
+        Power(mw * 1e-3)
+    }
+    #[inline]
+    pub fn from_microwatts(uw: f64) -> Power {
+        Power(uw * 1e-6)
+    }
+    #[inline]
+    pub fn watts(self) -> f64 {
+        self.0
+    }
+    #[inline]
+    pub fn milliwatts(self) -> f64 {
+        self.0 * 1e3
+    }
+    #[inline]
+    pub fn microwatts(self) -> f64 {
+        self.0 * 1e6
+    }
+}
+
+impl Energy {
+    #[inline]
+    pub fn from_joules(j: f64) -> Energy {
+        Energy(j)
+    }
+    #[inline]
+    pub fn from_millijoules(mj: f64) -> Energy {
+        Energy(mj * 1e-3)
+    }
+    #[inline]
+    pub fn from_microjoules(uj: f64) -> Energy {
+        Energy(uj * 1e-6)
+    }
+    #[inline]
+    pub fn joules(self) -> f64 {
+        self.0
+    }
+    #[inline]
+    pub fn millijoules(self) -> f64 {
+        self.0 * 1e3
+    }
+    #[inline]
+    pub fn microjoules(self) -> f64 {
+        self.0 * 1e6
+    }
+}
+
+impl Duration {
+    #[inline]
+    pub fn from_secs(s: f64) -> Duration {
+        Duration(s)
+    }
+    #[inline]
+    pub fn from_millis(ms: f64) -> Duration {
+        Duration(ms * 1e-3)
+    }
+    #[inline]
+    pub fn from_micros(us: f64) -> Duration {
+        Duration(us * 1e-6)
+    }
+    #[inline]
+    pub fn from_nanos(ns: f64) -> Duration {
+        Duration(ns * 1e-9)
+    }
+    #[inline]
+    pub fn from_hours(h: f64) -> Duration {
+        Duration(h * 3600.0)
+    }
+    #[inline]
+    pub fn secs(self) -> f64 {
+        self.0
+    }
+    #[inline]
+    pub fn millis(self) -> f64 {
+        self.0 * 1e3
+    }
+    #[inline]
+    pub fn micros(self) -> f64 {
+        self.0 * 1e6
+    }
+    #[inline]
+    pub fn hours(self) -> f64 {
+        self.0 / 3600.0
+    }
+}
+
+impl Voltage {
+    #[inline]
+    pub fn from_volts(v: f64) -> Voltage {
+        Voltage(v)
+    }
+    #[inline]
+    pub fn volts(self) -> f64 {
+        self.0
+    }
+    #[inline]
+    pub fn millivolts(self) -> f64 {
+        self.0 * 1e3
+    }
+}
+
+impl Current {
+    #[inline]
+    pub fn from_amps(a: f64) -> Current {
+        Current(a)
+    }
+    #[inline]
+    pub fn from_milliamps(ma: f64) -> Current {
+        Current(ma * 1e-3)
+    }
+    #[inline]
+    pub fn from_microamps(ua: f64) -> Current {
+        Current(ua * 1e-6)
+    }
+    #[inline]
+    pub fn amps(self) -> f64 {
+        self.0
+    }
+    #[inline]
+    pub fn milliamps(self) -> f64 {
+        self.0 * 1e3
+    }
+}
+
+// ---- cross-unit physics ----
+
+impl Mul<Duration> for Power {
+    type Output = Energy;
+    #[inline]
+    fn mul(self, rhs: Duration) -> Energy {
+        Energy(self.0 * rhs.0)
+    }
+}
+
+impl Mul<Power> for Duration {
+    type Output = Energy;
+    #[inline]
+    fn mul(self, rhs: Power) -> Energy {
+        Energy(self.0 * rhs.0)
+    }
+}
+
+impl Div<Duration> for Energy {
+    type Output = Power;
+    #[inline]
+    fn div(self, rhs: Duration) -> Power {
+        Power(self.0 / rhs.0)
+    }
+}
+
+impl Div<Power> for Energy {
+    type Output = Duration;
+    #[inline]
+    fn div(self, rhs: Power) -> Duration {
+        Duration(self.0 / rhs.0)
+    }
+}
+
+impl Mul<Current> for Voltage {
+    type Output = Power;
+    #[inline]
+    fn mul(self, rhs: Current) -> Power {
+        Power(self.0 * rhs.0)
+    }
+}
+
+impl Mul<Voltage> for Current {
+    type Output = Power;
+    #[inline]
+    fn mul(self, rhs: Voltage) -> Power {
+        Power(self.0 * rhs.0)
+    }
+}
+
+impl Div<Voltage> for Power {
+    type Output = Current;
+    #[inline]
+    fn div(self, rhs: Voltage) -> Current {
+        Current(self.0 / rhs.0)
+    }
+}
+
+/// Battery capacity helper: charge (mAh) at a nominal voltage → energy.
+///
+/// The paper's 320 mAh LiPo at a 3.6 V nominal ≈ 4147 J energy budget.
+pub fn battery_energy(capacity_mah: f64, nominal: Voltage) -> Energy {
+    // mAh → coulombs: 1 mAh = 3.6 C
+    let coulombs = capacity_mah * 3.6;
+    Energy(coulombs * nominal.volts())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_times_duration_is_energy() {
+        let e = Power::from_milliwatts(327.9) * Duration::from_millis(36.145);
+        assert!((e.millijoules() - 11.8520).abs() < 1e-3);
+    }
+
+    #[test]
+    fn energy_div_duration_is_power() {
+        let p = Energy::from_millijoules(10.0) / Duration::from_millis(5.0);
+        assert!((p.milliwatts() - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_div_power_is_duration() {
+        let t = Energy::from_joules(4147.0) / Power::from_milliwatts(134.3);
+        assert!((t.hours() - 4147.0 / 0.1343 / 3600.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn voltage_times_current_is_power() {
+        // RP2040 sleep: 180 µA at 3.3 V
+        let p = Voltage::from_volts(3.3) * Current::from_microamps(180.0);
+        assert!((p.milliwatts() - 0.594).abs() < 1e-9);
+    }
+
+    #[test]
+    fn milli_round_trips() {
+        assert!((Power::from_milliwatts(134.3).milliwatts() - 134.3).abs() < 1e-12);
+        assert!((Energy::from_millijoules(11.85).millijoules() - 11.85).abs() < 1e-12);
+        assert!((Duration::from_millis(36.15).millis() - 36.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn micro_round_trips() {
+        assert!((Power::from_microwatts(594.0).microwatts() - 594.0).abs() < 1e-9);
+        assert!((Energy::from_microjoules(4.816).microjoules() - 4.816).abs() < 1e-12);
+        assert!((Duration::from_micros(28.1).micros() - 28.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn battery_energy_matches_paper_budget() {
+        // 320 mAh LiPo ≈ 4147 J (paper §2) at 3.6 V nominal
+        let e = battery_energy(320.0, Voltage::from_volts(3.6));
+        assert!((e.joules() - 4147.2).abs() < 0.5, "{}", e.joules());
+    }
+
+    #[test]
+    fn sum_of_energies() {
+        let phases = [
+            Energy::from_millijoules(11.852),
+            Energy::from_microjoules(1.387),
+            Energy::from_microjoules(4.816),
+            Energy::from_microjoules(0.2882),
+        ];
+        let total: Energy = phases.iter().copied().sum();
+        assert!((total.millijoules() - 11.8585).abs() < 1e-3);
+    }
+
+    #[test]
+    fn ordering_and_ratio() {
+        let a = Duration::from_millis(89.21);
+        let b = Duration::from_millis(499.06);
+        assert!(a < b);
+        assert!((b / a - 499.06 / 89.21).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_diff_zero_and_nonzero() {
+        assert_eq!(Energy::ZERO.rel_diff(Energy::ZERO), 0.0);
+        let d = Energy::from_joules(1.0).rel_diff(Energy::from_joules(1.028));
+        assert!((d - 0.028 / 1.028).abs() < 1e-12);
+    }
+
+    #[test]
+    fn display_precision() {
+        let p = Power::from_milliwatts(134.3);
+        assert_eq!(format!("{:.4}", p), "0.1343 W");
+    }
+
+    #[test]
+    fn negation_and_sub_assign() {
+        let mut e = Energy::from_joules(5.0);
+        e -= Energy::from_joules(2.0);
+        assert_eq!(e, Energy::from_joules(3.0));
+        assert_eq!(-e, Energy::from_joules(-3.0));
+    }
+}

@@ -1,0 +1,176 @@
+//! Failure injection: every subsystem must fail loudly and cleanly, not
+//! silently account wrong energy.
+
+use idlewait::config::loader::{load_str, LoadError, PAPER_DEFAULT_YAML};
+use idlewait::config::paper_default;
+use idlewait::config::schema::{FpgaModel, SpiConfig};
+use idlewait::coordinator::requests::Periodic;
+use idlewait::device::board::{Board, BoardError};
+use idlewait::device::flash::{Flash, FlashError};
+use idlewait::device::fpga::{Fpga, FpgaError};
+use idlewait::device::rails::PowerSaving;
+use idlewait::energy::analytical::Analytical;
+use idlewait::strategies::simulate::simulate;
+use idlewait::strategies::strategy::OnOff;
+use idlewait::util::units::{Duration, Energy, Power};
+
+// ---- device-level misuse ----
+
+#[test]
+fn configure_unpowered_fpga_rejected() {
+    let mut fpga = Fpga::new(FpgaModel::Xc7s15);
+    let flash = Flash::new();
+    assert!(matches!(
+        fpga.configure(&flash, "lstm", SpiConfig::optimal()),
+        Err(FpgaError::PoweredOff(_))
+    ));
+}
+
+#[test]
+fn inference_without_configuration_rejected() {
+    let mut fpga = Fpga::new(FpgaModel::Xc7s15);
+    fpga.power_on();
+    assert!(matches!(fpga.begin_work(), Err(FpgaError::NotConfigured)));
+}
+
+#[test]
+fn missing_bitstream_slot_rejected() {
+    let mut board = Board::paper_setup(FpgaModel::Xc7s15, true);
+    let err = board.power_on_and_configure("wrong_slot", SpiConfig::optimal());
+    assert!(matches!(
+        err,
+        Err(BoardError::Fpga(FpgaError::Flash(FlashError::EmptySlot(_))))
+    ));
+}
+
+#[test]
+fn unsupported_spi_settings_rejected_by_flash() {
+    let mut board = Board::paper_setup(FpgaModel::Xc7s15, true);
+    for bad in [
+        SpiConfig { buswidth: 8, freq_mhz: 33.0, compressed: false },
+        SpiConfig { buswidth: 4, freq_mhz: 80.0, compressed: false },
+        SpiConfig { buswidth: 4, freq_mhz: 1.0, compressed: false },
+    ] {
+        // note: board tracks a fresh power-on per attempt
+        let result = board.power_on_and_configure("lstm", bad);
+        assert!(result.is_err(), "{bad:?} must be rejected");
+        board.fpga.power_off();
+    }
+}
+
+#[test]
+fn configuration_lost_after_power_cycle_enforced() {
+    let mut board = Board::paper_setup(FpgaModel::Xc7s15, true);
+    board
+        .power_on_and_configure("lstm", SpiConfig::optimal())
+        .unwrap();
+    board.fpga.power_off();
+    board.fpga.power_on();
+    // attempting to work without reconfiguring is an error, not silence
+    assert!(board
+        .run_item_phases(&[(Power::from_milliwatts(100.0), Duration::from_millis(1.0))])
+        .is_err());
+}
+
+// ---- budget exhaustion mid-operation ----
+
+#[test]
+fn exhaustion_during_configuration_stops_cleanly() {
+    let mut board = Board::paper_setup(FpgaModel::Xc7s15, true);
+    // drain to just under one configuration's worth
+    let remaining = Energy::from_millijoules(5.0);
+    let drain = board.battery.remaining() - remaining;
+    board.spend(Power::from_watts(1.0), drain / Power::from_watts(1.0)).unwrap();
+    let before_items = board.fpga.configurations;
+    let err = board.power_on_and_configure("lstm", SpiConfig::optimal());
+    assert!(matches!(err, Err(BoardError::Exhausted(_))));
+    // configuration was attempted exactly once; energy never exceeded cap
+    assert_eq!(board.fpga.configurations, before_items + 1);
+    assert!(board.battery.drawn() <= board.battery.capacity());
+}
+
+#[test]
+fn simulate_stops_at_exhaustion_without_counting_partial_item() {
+    let mut cfg = paper_default();
+    // budget fits exactly 2 On-Off items plus change
+    cfg.workload.energy_budget = Energy::from_millijoules(25.0);
+    let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
+    let expected = model.n_max_onoff(Duration::from_millis(40.0)).unwrap();
+    assert_eq!(expected, 2);
+    // the full-board simulate uses the 4147 J battery; emulate the small
+    // budget via max_items and verify the DES energy for 2 items fits
+    cfg.workload.max_items = Some(expected);
+    let mut arrivals = Periodic {
+        period: Duration::from_millis(40.0),
+    };
+    let report = simulate(&cfg, &OnOff, &mut arrivals);
+    assert_eq!(report.items, 2);
+    assert!(report.energy_exact <= cfg.workload.energy_budget);
+}
+
+// ---- config-layer failures ----
+
+#[test]
+fn zoo_of_malformed_configs() {
+    let cases: Vec<(String, &str)> = vec![
+        (PAPER_DEFAULT_YAML.replace("strategy: idle-waiting", "strategy: wrong"), "strategy"),
+        (PAPER_DEFAULT_YAML.replace("energy_budget_j: 4147", "energy_budget_j: nope"), "number"),
+        (PAPER_DEFAULT_YAML.replace("power_mw: 327.9", "power_mw: -1"), "positive"),
+        (PAPER_DEFAULT_YAML.replace("model: XC7S15", "model: VIRTEX7"), "FPGA"),
+        (PAPER_DEFAULT_YAML.replace("request_period_ms: 40.0", "request_period_ms: 0"), "positive"),
+    ];
+    for (doc, needle) in cases {
+        let err = load_str(&doc).unwrap_err();
+        let msg = format!("{err:#}").to_lowercase();
+        assert!(
+            msg.contains(&needle.to_lowercase()),
+            "expected '{needle}' in '{msg}'"
+        );
+    }
+}
+
+#[test]
+fn yaml_injection_of_unsupported_features_rejected() {
+    for feature in ["a: &x 1", "a: *x", "a: !tag v", "a: |\n  block", "a: {f: 1}"] {
+        assert!(matches!(load_str(feature), Err(LoadError::Yaml(_))), "{feature}");
+    }
+}
+
+// ---- runtime failures (artifact layer) ----
+
+#[test]
+fn corrupt_manifest_rejected() {
+    let dir = std::env::temp_dir().join("idlewait_bad_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    assert!(idlewait::runtime::artifact::Manifest::load(&dir).is_err());
+    std::fs::write(dir.join("manifest.json"), "{\"artifacts\": []}").unwrap();
+    assert!(idlewait::runtime::artifact::Manifest::load(&dir).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn retention_mode_blocks_work_until_exit() {
+    let mut board = Board::paper_setup(FpgaModel::Xc7s15, true);
+    board
+        .power_on_and_configure("lstm", SpiConfig::optimal())
+        .unwrap();
+    board.fpga.enter_idle(PowerSaving::M12).unwrap();
+    // begin_work restores rails (the paper verified config survives);
+    // but the state machine must pass through the idle-exit path — the
+    // invariant is that work NEVER happens at retention voltage.
+    board.fpga.begin_work().unwrap();
+    assert_eq!(board.fpga.state.name(), "busy");
+}
+
+#[test]
+fn double_power_on_is_a_bug_in_debug() {
+    // power_on on an already-on FPGA indicates a driver bug; debug builds
+    // assert. In release it is tolerated (idempotent rails) — here we
+    // only verify the off→on→off→on path stays consistent.
+    let mut fpga = Fpga::new(FpgaModel::Xc7s15);
+    fpga.power_on();
+    fpga.power_off();
+    fpga.power_on();
+    assert_eq!(fpga.power_ons, 2);
+}

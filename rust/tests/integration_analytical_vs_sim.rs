@@ -1,0 +1,139 @@
+//! Integration: the analytical model (Eqs 1–4) vs the discrete-event
+//! simulation of the full device substrate must agree — the reproduction
+//! of the paper's §5.3 validation logic, across strategies and periods.
+
+use idlewait::config::paper_default;
+use idlewait::config::schema::{ArrivalSpec, StrategyKind};
+use idlewait::coordinator::requests::Periodic;
+use idlewait::energy::analytical::Analytical;
+use idlewait::strategies::simulate::simulate;
+use idlewait::strategies::strategy::build;
+use idlewait::util::units::{Duration, Energy};
+
+/// DES driven to the analytical n_max must stay within the (shrunken)
+/// budget for every strategy × period combination — Eq 3's criterion.
+#[test]
+fn des_matches_eq3_across_grid() {
+    let mut cfg = paper_default();
+    // 20 J budget → a few thousand items max; fast enough for a grid
+    cfg.workload.energy_budget = Energy::from_joules(20.0);
+    let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
+
+    for kind in [
+        StrategyKind::OnOff,
+        StrategyKind::IdleWaiting,
+        StrategyKind::IdleWaitingM1,
+        StrategyKind::IdleWaitingM12,
+    ] {
+        for t_ms in [37.0, 40.0, 60.0, 89.0, 90.0, 120.0] {
+            let t_req = Duration::from_millis(t_ms);
+            let Some(expected) = model.predict(kind, t_req).n_max else {
+                continue;
+            };
+            let mut capped = cfg.clone();
+            capped.workload.arrival = ArrivalSpec::Periodic { period: t_req };
+            capped.workload.max_items = Some(expected);
+            let strategy = build(kind, &model);
+            let mut arrivals = Periodic { period: t_req };
+            let report = simulate(&capped, strategy.as_ref(), &mut arrivals);
+            assert_eq!(report.items, expected, "{kind} at {t_ms} ms");
+            assert!(
+                report.energy_exact <= cfg.workload.energy_budget * 1.0005,
+                "{kind} at {t_ms} ms: {} J > {} J",
+                report.energy_exact.joules(),
+                cfg.workload.energy_budget.joules()
+            );
+        }
+    }
+}
+
+/// Running one item beyond n_max must break the budget (tightness of Eq 3).
+#[test]
+fn eq3_is_tight_against_des() {
+    let mut cfg = paper_default();
+    cfg.workload.energy_budget = Energy::from_joules(5.0);
+    let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
+    let t_req = Duration::from_millis(50.0);
+    let n = model
+        .n_max_idle_waiting(t_req, model.item.idle_power_baseline)
+        .unwrap();
+
+    let mut capped = cfg.clone();
+    capped.workload.max_items = Some(n + 1);
+    capped.workload.arrival = ArrivalSpec::Periodic { period: t_req };
+    let strategy = build(StrategyKind::IdleWaiting, &model);
+    let mut arrivals = Periodic { period: t_req };
+    let report = simulate(&capped, strategy.as_ref(), &mut arrivals);
+    assert!(
+        report.energy_exact > cfg.workload.energy_budget,
+        "n_max+1 items must exceed the budget ({} J <= {} J)",
+        report.energy_exact.joules(),
+        cfg.workload.energy_budget.joules()
+    );
+}
+
+/// Full-budget DES at the paper's 40 ms: the real §5.3 validation run
+/// (~1.1M simulated items across both strategies).
+#[test]
+fn full_budget_validation_at_40ms() {
+    let cfg = paper_default();
+    let result = idlewait::experiments::validation::run(&cfg, 40.0);
+    for row in &result.rows {
+        assert!(row.items_gap < 0.002, "{}: {}", row.strategy, row.items_gap);
+        assert!(row.lifetime_gap < 0.002, "{}", row.strategy);
+        assert!(row.monitor_rel_error < 0.03);
+    }
+    // absolute item counts near the paper's Fig 8 values
+    let onoff = result.row(StrategyKind::OnOff);
+    assert!(onoff.des_items.abs_diff(346_073) < 300, "{}", onoff.des_items);
+    let iw = result.row(StrategyKind::IdleWaiting);
+    assert!(iw.des_items.abs_diff(771_807) < 800, "{}", iw.des_items);
+}
+
+/// The DES's per-item marginal energy must equal the analytical per-item
+/// energy for both strategies (differential check, immune to init terms).
+#[test]
+fn marginal_item_energy_matches() {
+    let cfg = paper_default();
+    let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
+    let t_req = Duration::from_millis(40.0);
+
+    for (kind, expected_mj) in [
+        (StrategyKind::OnOff, model.item.e_item_onoff().millijoules()),
+        (
+            StrategyKind::IdleWaiting,
+            (model.item.e_active + model.e_idle(t_req, model.item.idle_power_baseline))
+                .millijoules(),
+        ),
+    ] {
+        let run = |n: u64| {
+            let mut capped = cfg.clone();
+            capped.workload.max_items = Some(n);
+            let strategy = build(kind, &model);
+            let mut arrivals = Periodic { period: t_req };
+            simulate(&capped, strategy.as_ref(), &mut arrivals)
+                .energy_exact
+                .millijoules()
+        };
+        let e1k = run(1000);
+        let e2k = run(2000);
+        let marginal = (e2k - e1k) / 1000.0;
+        let rel = (marginal - expected_mj).abs() / expected_mj;
+        assert!(rel < 5e-4, "{kind}: marginal {marginal} vs {expected_mj}");
+    }
+}
+
+/// Adaptive ≥ best fixed strategy on periodic workloads (it should
+/// degenerate to the winner).
+#[test]
+fn adaptive_degenerates_to_winner_on_periodic() {
+    let cfg = paper_default();
+    let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
+    for t_ms in [40.0, 200.0] {
+        let t_req = Duration::from_millis(t_ms);
+        let adaptive = model.predict(StrategyKind::Adaptive, t_req).n_max.unwrap();
+        let onoff = model.predict(StrategyKind::OnOff, t_req).n_max.unwrap_or(0);
+        let iw = model.predict(StrategyKind::IdleWaiting, t_req).n_max.unwrap_or(0);
+        assert_eq!(adaptive, onoff.max(iw), "t={t_ms}");
+    }
+}

@@ -1,0 +1,73 @@
+//! Integration: the `repro` CLI surface (library-level invocation of the
+//! same entry the binary uses).
+
+use idlewait::cli;
+
+fn sv(v: &[&str]) -> Vec<String> {
+    v.iter().map(|s| s.to_string()).collect()
+}
+
+#[test]
+fn usage_without_args() {
+    cli::run(&[]).unwrap();
+}
+
+#[test]
+fn every_experiment_command_runs() {
+    cli::run(&sv(&["fig2"])).unwrap();
+    cli::run(&sv(&["exp1"])).unwrap();
+    cli::run(&sv(&["exp1", "--model", "XC7S25", "--full"])).unwrap();
+    cli::run(&sv(&["exp2", "--step", "2"])).unwrap();
+    cli::run(&sv(&["exp3", "--step", "2"])).unwrap();
+    cli::run(&sv(&["plan", "--period", "40"])).unwrap();
+    cli::run(&sv(&["plan", "--period", "300", "--budget", "1000"])).unwrap();
+}
+
+#[test]
+fn csv_export_via_cli() {
+    let dir = std::env::temp_dir().join("idlewait_cli_csv");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp1.csv");
+    cli::run(&sv(&["exp1", "--csv", path.to_str().unwrap()])).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text.lines().count(), 67); // header + 66 sweep points
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bad_inputs_error_cleanly() {
+    assert!(cli::run(&sv(&["no-such-command"])).is_err());
+    assert!(cli::run(&sv(&["exp1", "--model", "XC9999"])).is_err());
+    assert!(cli::run(&sv(&["exp2", "--bogus-flag"])).is_err());
+    assert!(cli::run(&sv(&["plan"])).is_err()); // missing --period
+    assert!(cli::run(&sv(&["serve", "--variant", "fp64"])).is_err());
+}
+
+#[test]
+fn custom_config_file_via_cli() {
+    let dir = std::env::temp_dir().join("idlewait_cli_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("fast_idle.yaml");
+    // an accelerator with half the idle power → crossover roughly doubles
+    let doc = idlewait::config::loader::PAPER_DEFAULT_YAML
+        .replace("idle_power_mw: 134.3", "idle_power_mw: 67.15");
+    std::fs::write(&path, doc).unwrap();
+    cli::run(&sv(&["exp2", "--step", "2", "--config", path.to_str().unwrap()])).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_requires_artifacts_or_fails_with_context() {
+    // when artifacts exist this serves; when absent it must error with
+    // the make-artifacts hint rather than panic
+    let result = cli::run(&sv(&["serve", "--requests", "3"]));
+    if idlewait::runtime::artifact::default_dir()
+        .join("manifest.json")
+        .exists()
+    {
+        result.unwrap();
+    } else {
+        let err = format!("{:#}", result.unwrap_err());
+        assert!(err.contains("artifacts"), "{err}");
+    }
+}

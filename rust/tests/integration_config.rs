@@ -1,0 +1,113 @@
+//! Integration: the config system end to end — YAML and JSON documents
+//! through parse → schema → validation → use by the analytical model.
+
+use idlewait::config::loader::{load_str, LoadError, PAPER_DEFAULT_YAML};
+use idlewait::config::paper_default;
+use idlewait::config::schema::{ArrivalSpec, StrategyKind};
+use idlewait::energy::analytical::Analytical;
+use idlewait::util::units::Duration;
+
+#[test]
+fn paper_default_round_trips_through_yaml() {
+    let cfg = load_str(PAPER_DEFAULT_YAML).unwrap();
+    assert_eq!(cfg, paper_default());
+}
+
+#[test]
+fn custom_accelerator_profile_flows_to_model() {
+    // §5.3: "Profiling other accelerators is also feasible, simply
+    // requiring an adjustment of the characteristics listed in Table 2."
+    let doc = PAPER_DEFAULT_YAML
+        .replace("power_mw: 327.9", "power_mw: 400.0")
+        .replace("idle_power_mw: 134.3", "idle_power_mw: 90.0");
+    let cfg = load_str(&doc).unwrap();
+    let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
+    // new config energy: 400 mW × 36.145 ms = 14.458 mJ
+    assert!((model.item.e_config.millijoules() - 14.458).abs() < 0.01);
+    // crossover moves with the new parameters
+    let t = idlewait::energy::crossover::asymptotic(&model, model.item.idle_power_baseline);
+    let expected = (14.458 + 0.1244) / 0.090 + 0.0401; // ms
+    assert!((t.millis() - expected).abs() < 0.05, "{}", t.millis());
+}
+
+#[test]
+fn json_and_yaml_yield_identical_configs() {
+    let json_doc = r#"{
+      "workload": {"energy_budget_j": 4147, "request_period_ms": 40.0,
+                   "strategy": "idle-waiting"},
+      "workload_item": {
+        "phases": [
+          {"name": "configuration", "power_mw": 327.9, "time_ms": 36.145},
+          {"name": "data_loading", "power_mw": 138.7, "time_ms": 0.01},
+          {"name": "inference", "power_mw": 171.4, "time_ms": 0.0281},
+          {"name": "data_offloading", "power_mw": 144.1, "time_ms": 0.002}
+        ],
+        "idle_power_mw": 134.3,
+        "power_on_transient_mj": 0.1244
+      },
+      "platform": {
+        "fpga": {"model": "XC7S15"},
+        "spi": {"buswidth": 4, "freq_mhz": 66, "compressed": true},
+        "battery_budget_j": 4147,
+        "flash_standby_mw": 15.2
+      }
+    }"#;
+    let from_json = load_str(json_doc).unwrap();
+    assert_eq!(from_json, paper_default());
+}
+
+#[test]
+fn arrival_kinds_parse_and_flow() {
+    let doc = PAPER_DEFAULT_YAML.replace(
+        "  request_period_ms: 40.0",
+        "  request_period_ms: 40.0\n  arrival_kind: jittered\n  jitter_std_ms: 5.0\n  min_period_ms: 1.0",
+    );
+    let cfg = load_str(&doc).unwrap();
+    match cfg.workload.arrival {
+        ArrivalSpec::Jittered {
+            period,
+            std_dev,
+            min_period,
+        } => {
+            assert_eq!(period, Duration::from_millis(40.0));
+            assert_eq!(std_dev, Duration::from_millis(5.0));
+            assert_eq!(min_period, Duration::from_millis(1.0));
+        }
+        other => panic!("expected jittered, got {other:?}"),
+    }
+}
+
+#[test]
+fn every_strategy_name_loads() {
+    for name in [
+        "on-off",
+        "idle-waiting",
+        "idle-waiting-m1",
+        "idle-waiting-m12",
+        "adaptive",
+    ] {
+        let doc = PAPER_DEFAULT_YAML.replace("strategy: idle-waiting\n", &format!("strategy: {name}\n"));
+        let cfg = load_str(&doc).unwrap();
+        assert_eq!(cfg.workload.strategy.name(), StrategyKind::parse(name).unwrap().name());
+    }
+}
+
+#[test]
+fn malformed_documents_produce_typed_errors() {
+    // yaml syntax
+    assert!(matches!(load_str("a:\n\tb: 1"), Err(LoadError::Yaml(_))));
+    // json syntax
+    assert!(matches!(load_str("{\"a\": }"), Err(LoadError::Json(_))));
+    // schema
+    let missing = PAPER_DEFAULT_YAML.replace("  energy_budget_j: 4147\n", "");
+    assert!(matches!(load_str(&missing), Err(LoadError::Config(_))));
+    // semantic
+    let bad = PAPER_DEFAULT_YAML.replace("buswidth: 4", "buswidth: 5");
+    assert!(matches!(load_str(&bad), Err(LoadError::Invalid(_))));
+}
+
+#[test]
+fn comments_and_formatting_are_tolerated() {
+    let doc = format!("# leading comment\n\n{PAPER_DEFAULT_YAML}\n# trailing\n");
+    assert_eq!(load_str(&doc).unwrap(), paper_default());
+}

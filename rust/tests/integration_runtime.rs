@@ -1,0 +1,142 @@
+//! Integration: the full AOT bridge — python-lowered Pallas/JAX HLO
+//! executed from rust via PJRT — plus the serving loop on top of it.
+//!
+//! All tests skip (with a notice) when `make artifacts` has not run;
+//! `make test` always builds artifacts first.
+
+use idlewait::config::paper_default;
+use idlewait::coordinator::requests::{Periodic, Poisson};
+use idlewait::coordinator::server::{serve, ServerConfig};
+use idlewait::runtime::artifact::default_dir;
+use idlewait::runtime::inference::{LstmRuntime, Variant};
+use idlewait::strategies::strategy::{IdleWaiting, OnOff};
+use idlewait::util::units::Duration;
+
+fn runtime() -> Option<std::rc::Rc<LstmRuntime>> {
+    if !default_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(idlewait::runtime::pool::runtime(default_dir()).unwrap())
+}
+
+#[test]
+fn self_check_proves_l1_l2_l3_numerics_agree() {
+    let Some(rt) = runtime() else { return };
+    let err = rt.self_check().unwrap();
+    assert!(err < 1e-4, "rust-vs-jax err {err}");
+}
+
+#[test]
+fn forecast_is_deterministic_across_calls() {
+    let Some(rt) = runtime() else { return };
+    let w = rt.manifest.selfcheck.window.clone();
+    let a = rt.forecast(&w, Variant::Forecast).unwrap().forecast;
+    let b = rt.forecast(&w, Variant::Forecast).unwrap().forecast;
+    assert_eq!(a, b);
+}
+
+#[test]
+fn forecast_responds_to_input_changes() {
+    let Some(rt) = runtime() else { return };
+    let w = rt.manifest.selfcheck.window.clone();
+    let base = rt.forecast(&w, Variant::Forecast).unwrap().forecast;
+    let mut perturbed = w.clone();
+    for v in perturbed.iter_mut().take(24) {
+        *v += 0.5;
+    }
+    let moved = rt.forecast(&perturbed, Variant::Forecast).unwrap().forecast;
+    assert_ne!(base, moved, "forecast must depend on the window");
+    assert!((base - moved).abs() < 5.0, "bounded response");
+}
+
+#[test]
+fn step_recurrence_is_contractive_on_zero_input() {
+    let Some(rt) = runtime() else { return };
+    // with zero inputs the hidden state stays bounded and converges
+    let zeros_x = vec![0f32; rt.manifest.input_size];
+    let mut h = vec![0f32; rt.manifest.hidden_size];
+    let mut c = vec![0f32; rt.manifest.hidden_size];
+    for _ in 0..50 {
+        let (h2, c2) = rt.step(&zeros_x, &h, &c).unwrap();
+        h = h2;
+        c = c2;
+        assert!(h.iter().all(|v| v.abs() <= 1.0));
+        assert!(c.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn serving_500_requests_with_both_variants() {
+    let Some(rt) = runtime() else { return };
+    let sim = paper_default();
+    for variant in [Variant::Forecast, Variant::ForecastInt8] {
+        let cfg = ServerConfig {
+            sim: &sim,
+            variant,
+            max_requests: 500,
+        };
+        let mut arr = Periodic {
+            period: Duration::from_millis(40.0),
+        };
+        let report = serve(&cfg, &rt, &IdleWaiting::method12(), &mut arr).unwrap();
+        assert_eq!(report.metrics.requests, 500, "{variant:?}");
+        assert_eq!(report.configurations, 1);
+        assert_eq!(report.metrics.deadline_misses, 0, "{variant:?}");
+        // host inference must comfortably fit the paper's 40 ms period
+        let s = report.metrics.latency_summary().unwrap();
+        assert!(s.p95 < 40.0, "{variant:?}: p95 {} ms", s.p95);
+    }
+}
+
+#[test]
+fn serving_energy_ledger_matches_strategy_choice() {
+    let Some(rt) = runtime() else { return };
+    let sim = paper_default();
+    let run = |strategy: &dyn idlewait::strategies::strategy::Strategy| {
+        let cfg = ServerConfig {
+            sim: &sim,
+            variant: Variant::Forecast,
+            max_requests: 50,
+        };
+        let mut arr = Periodic {
+            period: Duration::from_millis(40.0),
+        };
+        serve(&cfg, &rt, strategy, &mut arr).unwrap()
+    };
+    let onoff = run(&OnOff);
+    let iw = run(&IdleWaiting::baseline());
+    // On-Off pays ~11.98 mJ per request, IW ~5.37 + one-time init
+    assert!(onoff.metrics.sim_energy > iw.metrics.sim_energy);
+    assert_eq!(onoff.configurations, 50);
+    assert_eq!(iw.configurations, 1);
+    let ratio = onoff.metrics.sim_energy / iw.metrics.sim_energy;
+    assert!(ratio > 1.9 && ratio < 2.6, "ratio {ratio}");
+}
+
+#[test]
+fn serving_survives_bursty_poisson_arrivals() {
+    let Some(rt) = runtime() else { return };
+    let sim = paper_default();
+    let cfg = ServerConfig {
+        sim: &sim,
+        variant: Variant::Forecast,
+        max_requests: 200,
+    };
+    let mut arr = Poisson::new(Duration::from_millis(40.0), Duration::from_millis(0.05), 7);
+    let report = serve(&cfg, &rt, &IdleWaiting::baseline(), &mut arr).unwrap();
+    assert_eq!(report.metrics.requests, 200);
+    assert!(report.metrics.sim_energy.joules() > 0.0);
+}
+
+#[test]
+fn manifest_metadata_matches_model_geometry() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(rt.manifest.hidden_size, 20); // the paper's accelerator
+    assert_eq!(rt.manifest.input_size, 6);
+    assert_eq!(rt.manifest.window, 24);
+    assert_eq!(
+        rt.manifest.selfcheck.window.len(),
+        rt.manifest.window * rt.manifest.input_size
+    );
+}
