@@ -1,0 +1,69 @@
+//! Bench: the unified sweep engine's throughput on the Experiment 2
+//! full-fidelity grid (10–120 ms at 0.01 ms = 11,001 cells), at 1 and 4
+//! threads and at the machine's full parallelism, reported as cells/sec.
+//!
+//! This is the bench that backs the runner's headline claim: the
+//! multi-threaded sweep is byte-identical to the serial one (asserted
+//! here before timing) and measurably faster.
+//!
+//! Run: `cargo bench --bench sweep` (IDLEWAIT_BENCH_QUICK=1 for CI).
+
+use idlewait::bench::{black_box, quick_mode, Bench};
+use idlewait::config::paper_default;
+use idlewait::experiments::exp2;
+use idlewait::runner::SweepRunner;
+use idlewait::util::table::{fnum, Table};
+
+fn main() {
+    let cfg = paper_default();
+    let step = if quick_mode() { 0.1 } else { 0.01 };
+
+    // determinism gate: don't bother timing a runner that's wrong
+    let serial = exp2::run_threaded(&cfg, step, &SweepRunner::single());
+    let cells = serial.samples.len();
+    let reference = serial.to_csv().render();
+    let max = SweepRunner::max_threads();
+    let mut counts = vec![1usize];
+    if max > 1 {
+        counts.push(4.min(max));
+    }
+    if max > 4 {
+        counts.push(max);
+    }
+    for &threads in &counts {
+        let out = exp2::run_threaded(&cfg, step, &SweepRunner::new(threads))
+            .to_csv()
+            .render();
+        assert_eq!(out, reference, "threads={threads} diverged from serial");
+    }
+    println!(
+        "determinism check passed: {} cells byte-identical at threads {:?}\n",
+        cells, counts
+    );
+
+    let mut bench = Bench::new(format!(
+        "exp2 full-fidelity sweep ({cells} cells, step {step} ms)"
+    ));
+    let mut rows: Vec<(usize, f64)> = Vec::new();
+    for &threads in &counts {
+        let runner = SweepRunner::new(threads);
+        let r = bench.bench(format!("threads={threads}"), || {
+            black_box(exp2::run_threaded(&cfg, step, &runner).samples.len());
+        });
+        // ns per full sweep → cells per second
+        rows.push((threads, cells as f64 * 1e9 / r.ns_per_iter()));
+    }
+    bench.finish();
+
+    let mut t = Table::new(&["threads", "cells/sec", "speedup vs 1 thread"])
+        .with_title("sweep throughput");
+    let base = rows[0].1;
+    for (threads, cps) in &rows {
+        t.row(&[
+            threads.to_string(),
+            fnum(*cps, 0),
+            fnum(cps / base, 2),
+        ]);
+    }
+    print!("{}", t.render());
+}

@@ -1,16 +1,19 @@
 //! `repro` CLI subcommands.
 //!
 //! ```text
-//! repro fig2                          # Fig 2 energy breakdown
-//! repro exp1 [--model XC7S25] [--csv PATH]
-//! repro exp2 [--step 0.01] [--csv PATH] [--config FILE]
-//! repro exp3 [--step 0.01] [--csv PATH]
-//! repro validate [--period 40]
+//! repro fig2 [--series]               # Fig 2 energy breakdown
+//! repro exp1 [--model XC7S25] [--csv PATH] [--threads N]
+//! repro exp2 [--step 0.01] [--csv PATH] [--config FILE] [--threads N]
+//! repro exp3 [--step 0.01] [--csv PATH] [--threads N]
+//! repro validate [--period 40] [--threads N]
 //! repro serve [--strategy idle-waiting] [--period 40] [--requests 100]
 //!             [--variant int8] [--arrival poisson]
 //! repro plan --period 75              # strategy recommendation
-//! repro all                           # every experiment, paper order
+//! repro all [--threads N]             # every experiment, paper order
 //! ```
+//!
+//! Every sweep command accepts `--threads N` (0 or absent = all cores);
+//! results are byte-identical at any thread count.
 
 use anyhow::{bail, Context, Result};
 
@@ -22,6 +25,7 @@ use crate::coordinator::server::{serve, ServerConfig};
 use crate::energy::analytical::Analytical;
 use crate::energy::crossover;
 use crate::experiments::{exp1, exp2, exp3, fig2, validation};
+use crate::runner::SweepRunner;
 use crate::runtime::inference::Variant;
 use crate::strategies::strategy::build;
 use crate::util::units::Duration;
@@ -60,6 +64,27 @@ fn maybe_write_csv(args: &Args, csv: crate::util::csv::Csv) -> Result<()> {
     Ok(())
 }
 
+/// `--threads N` → a sweep runner; 0 or absent = all available cores.
+/// Sweep output is byte-identical at any thread count, so the default is
+/// always safe.
+fn sweep_runner(args: &Args) -> Result<SweepRunner> {
+    Ok(match args.u64_opt("threads")?.unwrap_or(0) {
+        0 => SweepRunner::auto(),
+        n => SweepRunner::new(n as usize),
+    })
+}
+
+/// `--step` must be a positive, finite millisecond value — reject it at
+/// the CLI boundary with a readable error instead of hitting the grid's
+/// programmer-error assert.
+fn step_arg(args: &Args, default: f64) -> Result<f64> {
+    let step = args.f64_opt("step")?.unwrap_or(default);
+    if !(step.is_finite() && step > 0.0) {
+        bail!("--step must be a positive number of milliseconds (got {step})");
+    }
+    Ok(step)
+}
+
 pub fn run(argv: &[String]) -> Result<()> {
     let Some(command) = argv.first() else {
         println!("{USAGE}");
@@ -95,18 +120,31 @@ fn help_and_done(args: &Args, name: &str) -> bool {
 }
 
 fn cmd_fig2(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &[("help", false)])?;
+    let args = Args::parse(argv, &[("series", false), ("threads", true), ("help", false)])?;
     if help_and_done(&args, "fig2") {
         return Ok(());
     }
     print!("{}", fig2::run().render());
+    if args.flag("series") {
+        let runner = sweep_runner(&args)?;
+        println!("\nreconstruction sensitivity (config share vs assumed single-SPI clock):");
+        for (freq, share) in fig2::share_series(&runner) {
+            println!("  {freq:>5.1} MHz → {:.2}%", share * 100.0);
+        }
+    }
     Ok(())
 }
 
 fn cmd_exp1(argv: &[String]) -> Result<()> {
     let args = Args::parse(
         argv,
-        &[("model", true), ("csv", true), ("full", false), ("help", false)],
+        &[
+            ("model", true),
+            ("csv", true),
+            ("full", false),
+            ("threads", true),
+            ("help", false),
+        ],
     )?;
     if help_and_done(&args, "exp1") {
         return Ok(());
@@ -116,7 +154,7 @@ fn cmd_exp1(argv: &[String]) -> Result<()> {
             .with_context(|| format!("unknown FPGA model '{name}'"))?,
         None => FpgaModel::Xc7s15,
     };
-    let result = exp1::run(model);
+    let result = exp1::run_threaded(model, &sweep_runner(&args)?);
     if args.flag("full") {
         print!("{}", result.render_fig7());
     }
@@ -127,14 +165,20 @@ fn cmd_exp1(argv: &[String]) -> Result<()> {
 fn cmd_exp2(argv: &[String]) -> Result<()> {
     let args = Args::parse(
         argv,
-        &[("step", true), ("csv", true), ("config", true), ("help", false)],
+        &[
+            ("step", true),
+            ("csv", true),
+            ("config", true),
+            ("threads", true),
+            ("help", false),
+        ],
     )?;
     if help_and_done(&args, "exp2") {
         return Ok(());
     }
     let config = load_config(&args)?;
-    let step = args.f64_opt("step")?.unwrap_or(0.01);
-    let result = exp2::run(&config, step);
+    let step = step_arg(&args, 0.01)?;
+    let result = exp2::run_threaded(&config, step, &sweep_runner(&args)?);
     print!("{}", result.render_figs());
     print!("{}", result.render_summary(&config));
     maybe_write_csv(&args, result.to_csv())
@@ -143,14 +187,20 @@ fn cmd_exp2(argv: &[String]) -> Result<()> {
 fn cmd_exp3(argv: &[String]) -> Result<()> {
     let args = Args::parse(
         argv,
-        &[("step", true), ("csv", true), ("config", true), ("help", false)],
+        &[
+            ("step", true),
+            ("csv", true),
+            ("config", true),
+            ("threads", true),
+            ("help", false),
+        ],
     )?;
     if help_and_done(&args, "exp3") {
         return Ok(());
     }
     let config = load_config(&args)?;
-    let step = args.f64_opt("step")?.unwrap_or(0.01);
-    let result = exp3::run(&config, step);
+    let step = step_arg(&args, 0.01)?;
+    let result = exp3::run_threaded(&config, step, &sweep_runner(&args)?);
     print!("{}", result.render_table3());
     print!("{}", result.render_figs());
     print!("{}", result.render_summary());
@@ -158,20 +208,34 @@ fn cmd_exp3(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_validate(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &[("period", true), ("config", true), ("help", false)])?;
+    let args = Args::parse(
+        argv,
+        &[("period", true), ("config", true), ("threads", true), ("help", false)],
+    )?;
     if help_and_done(&args, "validate") {
         return Ok(());
     }
     let config = load_config(&args)?;
     let period = args.f64_opt("period")?.unwrap_or(40.0);
-    print!("{}", validation::run(&config, period).render());
+    print!(
+        "{}",
+        validation::run_threaded(&config, period, &sweep_runner(&args)?).render()
+    );
     Ok(())
 }
 
 fn cmd_ablate(argv: &[String]) -> Result<()> {
+    use crate::experiments::ablation;
+
     let args = Args::parse(
         argv,
-        &[("requests", true), ("seed", true), ("config", true), ("help", false)],
+        &[
+            ("requests", true),
+            ("seed", true),
+            ("config", true),
+            ("threads", true),
+            ("help", false),
+        ],
     )?;
     if help_and_done(&args, "ablate") {
         return Ok(());
@@ -179,14 +243,15 @@ fn cmd_ablate(argv: &[String]) -> Result<()> {
     let config = load_config(&args)?;
     let requests = args.u64_opt("requests")?.unwrap_or(5_000);
     let seed = args.u64_opt("seed")?.unwrap_or(7);
-    print!("{}", crate::experiments::ablation::flash_floor(&config).render());
+    let runner = sweep_runner(&args)?;
+    print!("{}", ablation::flash_floor_threaded(&config, &runner).render());
     print!(
         "{}",
-        crate::experiments::ablation::transient_sensitivity(&config).render()
+        ablation::transient_sensitivity_threaded(&config, &runner).render()
     );
     print!(
         "{}",
-        crate::experiments::ablation::multi_accel(&config, requests, seed).render()
+        ablation::multi_accel_threaded(&config, requests, seed, &runner).render()
     );
     Ok(())
 }
@@ -195,6 +260,7 @@ fn cmd_multi(argv: &[String]) -> Result<()> {
     use crate::coordinator::multi_sim::{run as run_multi, MultiSimConfig};
     use crate::coordinator::scheduler::Policy;
     use crate::device::rails::PowerSaving;
+    use crate::runner::grid::cross;
     use crate::util::table::{fnum, Table};
 
     let args = Args::parse(
@@ -204,6 +270,7 @@ fn cmd_multi(argv: &[String]) -> Result<()> {
             ("burst", true),
             ("seed", true),
             ("config", true),
+            ("threads", true),
             ("help", false),
         ],
     )?;
@@ -214,6 +281,32 @@ fn cmd_multi(argv: &[String]) -> Result<()> {
     let requests = args.u64_opt("requests")?.unwrap_or(2_000);
     let burst = args.u64_opt("burst")?.unwrap_or(4);
     let seed = args.u64_opt("seed")?.unwrap_or(17);
+    let runner = sweep_runner(&args)?;
+
+    // mix × policy as one grid: the heavy event-driven runs parallelize,
+    // the table order stays row-major deterministic.
+    let grid = cross(
+        &[0.0, 0.1, 0.25, 0.5],
+        &[
+            ("fifo", Policy::Fifo),
+            ("batch-8", Policy::BatchBySlot { window: 8 }),
+        ],
+    );
+    let rows = runner.run(&grid, |cell| {
+        let (mix, (label, policy)) = *cell.params;
+        let report = run_multi(
+            &config,
+            &MultiSimConfig {
+                mix,
+                requests,
+                burst,
+                policy,
+                saving: PowerSaving::M12,
+                seed,
+            },
+        );
+        (mix, label, report)
+    });
 
     let mut t = Table::new(&[
         "mix",
@@ -227,32 +320,16 @@ fn cmd_multi(argv: &[String]) -> Result<()> {
     .with_title(format!(
         "event-driven multi-accelerator sim: {requests} requests, burst {burst}"
     ));
-    for mix in [0.0, 0.1, 0.25, 0.5] {
-        for (label, policy) in [
-            ("fifo", Policy::Fifo),
-            ("batch-8", Policy::BatchBySlot { window: 8 }),
-        ] {
-            let report = run_multi(
-                &config,
-                &MultiSimConfig {
-                    mix,
-                    requests,
-                    burst,
-                    policy,
-                    saving: PowerSaving::M12,
-                    seed,
-                },
-            );
-            t.row(&[
-                fnum(mix, 2),
-                label.into(),
-                report.reconfigurations.to_string(),
-                report.reordered.to_string(),
-                fnum(report.energy.joules(), 3),
-                fnum(report.mean_latency.millis(), 2),
-                fnum(report.p_late * 100.0, 1),
-            ]);
-        }
+    for (mix, label, report) in rows {
+        t.row(&[
+            fnum(mix, 2),
+            label.into(),
+            report.reconfigurations.to_string(),
+            report.reordered.to_string(),
+            fnum(report.energy.joules(), 3),
+            fnum(report.mean_latency.millis(), 2),
+            fnum(report.p_late * 100.0, 1),
+        ]);
     }
     print!("{}", t.render());
     Ok(())
@@ -393,30 +470,31 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_all(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &[("step", true), ("help", false)])?;
+    let args = Args::parse(argv, &[("step", true), ("threads", true), ("help", false)])?;
     if help_and_done(&args, "all") {
         return Ok(());
     }
-    let step = args.f64_opt("step")?.unwrap_or(0.01);
+    let step = step_arg(&args, 0.01)?;
+    let runner = sweep_runner(&args)?;
     let config = paper_default();
     println!("=== Fig 2 ===");
     print!("{}", fig2::run().render());
     println!("\n=== Experiment 1 (Fig 7) ===");
-    let e1 = exp1::run(FpgaModel::Xc7s15);
+    let e1 = exp1::run_threaded(FpgaModel::Xc7s15, &runner);
     print!("{}", e1.render_summary());
-    let e1b = exp1::run(FpgaModel::Xc7s25);
+    let e1b = exp1::run_threaded(FpgaModel::Xc7s25, &runner);
     print!("{}", e1b.render_summary());
     println!("\n=== Experiment 2 (Figs 8-9) ===");
-    let e2 = exp2::run(&config, step);
+    let e2 = exp2::run_threaded(&config, step, &runner);
     print!("{}", e2.render_figs());
     print!("{}", e2.render_summary(&config));
     println!("\n=== Experiment 3 (Table 3, Figs 10-11) ===");
-    let e3 = exp3::run(&config, step);
+    let e3 = exp3::run_threaded(&config, step, &runner);
     print!("{}", e3.render_table3());
     print!("{}", e3.render_figs());
     print!("{}", e3.render_summary());
     println!("\n=== Validation (\u{a7}5.3) ===");
-    print!("{}", validation::run(&config, 40.0).render());
+    print!("{}", validation::run_threaded(&config, 40.0, &runner).render());
     Ok(())
 }
 
@@ -454,8 +532,18 @@ mod tests {
     }
 
     #[test]
+    fn exp2_threaded_runs() {
+        run(&sv(&["exp2", "--step", "5", "--threads", "2"])).unwrap();
+    }
+
+    #[test]
     fn exp3_coarse_runs() {
         run(&sv(&["exp3", "--step", "5"])).unwrap();
+    }
+
+    #[test]
+    fn fig2_series_runs() {
+        run(&sv(&["fig2", "--series", "--threads", "2"])).unwrap();
     }
 
     #[test]

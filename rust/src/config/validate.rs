@@ -7,12 +7,35 @@
 
 use crate::config::loader::SimConfig;
 use crate::config::schema::{SpiConfig, StrategyKind};
+use crate::device::bitstream::Bitstream;
+use crate::device::config_fsm::ConfigProfile;
+use crate::device::flash::StoredImage;
 
 /// Validate a full configuration; returns a human-readable reason on error.
 pub fn validate(cfg: &SimConfig) -> Result<(), String> {
     validate_spi(&cfg.platform.spi)?;
     validate_item(cfg)?;
     validate_workload(cfg)?;
+    validate_profile(cfg)?;
+    Ok(())
+}
+
+/// The configuration FSM must produce every stage the experiment layer
+/// reads (setup / bitstream_loading / startup). Today `compute()` emits
+/// exactly these three, so this is a regression tripwire, not a
+/// user-input check: if a future FSM refactor renames or drops a stage,
+/// config loading fails with `ConfigProfile::stage`'s `UnknownStage`
+/// error here — at validation time — instead of panicking deep inside a
+/// sweep. Runs once per config load (not on any hot path).
+fn validate_profile(cfg: &SimConfig) -> Result<(), String> {
+    let image = StoredImage::new(
+        Bitstream::lstm_accelerator(cfg.platform.fpga),
+        cfg.platform.spi.compressed,
+    );
+    let profile = ConfigProfile::compute(cfg.platform.fpga, cfg.platform.spi, &image);
+    for name in ConfigProfile::STAGE_NAMES {
+        profile.stage(name).map_err(|e| e.to_string())?;
+    }
     Ok(())
 }
 

@@ -2,20 +2,22 @@
 //!
 //! Connects the [`Engine`](crate::sim::Engine) (discrete events), the
 //! [`MultiAccelScheduler`] (the §4.2-extension policy layer) and the
-//! [`Board`] (energy): requests for several accelerators arrive as
-//! timed events, the scheduler picks service order within its reordering
-//! window, and the board pays configuration/phase/idle energy for every
-//! decision. This is the full-system version of the closed-form
-//! multi-accel ablation — latency and energy emerge from the event flow.
+//! shared [`ReplayCore`] (energy): requests for several accelerators
+//! arrive as timed events, the scheduler picks service order within its
+//! reordering window, and the core pays configuration/phase/idle energy
+//! for every decision. This is the full-system version of the
+//! closed-form multi-accel ablation — latency and energy emerge from the
+//! event flow. The per-item energetics run through the same
+//! [`ReplayCore`] as the single-accelerator lifetime simulation, so the
+//! two runtimes cannot drift apart on accounting.
 
 use crate::config::loader::SimConfig;
 use crate::config::schema::FpgaModel;
 use crate::coordinator::scheduler::{Dispatch, MultiAccelScheduler, Policy, SlotRequest};
 use crate::device::bitstream::Bitstream;
-use crate::device::board::Board;
 use crate::device::rails::PowerSaving;
 use crate::sim::{Ctx, Engine, SimTime};
-use crate::strategies::simulate::item_phases;
+use crate::strategies::replay::ReplayCore;
 use crate::util::rng::Xoshiro256ss;
 use crate::util::stats::Welford;
 use crate::util::units::{Duration, Energy};
@@ -58,17 +60,15 @@ pub struct MultiSimReport {
 }
 
 struct State {
-    board: Board,
+    core: ReplayCore,
     scheduler: MultiAccelScheduler,
     busy_until: SimTime,
     served: u64,
     late: u64,
     latency: Welford,
     period: Duration,
-    phases: [(crate::util::units::Power, Duration); 3],
-    spi: crate::config::schema::SpiConfig,
     saving: PowerSaving,
-    /// Last time the board's ledger was advanced (for idle accounting).
+    /// Last time the core's ledger was advanced (for idle accounting).
     ledger_at: SimTime,
     dead: bool,
 }
@@ -79,11 +79,7 @@ impl State {
     fn idle_until(&mut self, now: SimTime) {
         if now > self.ledger_at {
             let dur = now.since(self.ledger_at);
-            if self.board.fpga.is_configured() {
-                if self.board.idle_for(self.saving, dur).is_err() {
-                    self.dead = true;
-                }
-            } else if self.board.off_for(dur, false).is_err() {
+            if self.core.elapse(self.saving, dur).is_err() {
                 self.dead = true;
             }
             self.ledger_at = now;
@@ -96,10 +92,7 @@ impl State {
         let mut finish = now;
         if dispatch.reconfigure {
             // a switch means loading a different image: power-cycle path
-            if self.board.fpga.is_configured() {
-                self.board.fpga.power_off();
-            }
-            match self.board.power_on_and_configure("lstm", self.spi) {
+            match self.core.power_cycle_configure("lstm") {
                 Ok(t) => finish += t,
                 Err(_) => {
                     self.dead = true;
@@ -107,7 +100,7 @@ impl State {
                 }
             }
         }
-        match self.board.run_item_phases(&self.phases) {
+        match self.core.run_phases() {
             Ok(t) => finish += t,
             Err(_) => {
                 self.dead = true;
@@ -128,9 +121,9 @@ impl State {
 /// Run the event-driven multi-accelerator simulation.
 pub fn run(config: &SimConfig, ms: &MultiSimConfig) -> MultiSimReport {
     let period = config.workload.arrival.mean_period();
-    let mut board = Board::paper_setup(config.platform.fpga, config.platform.spi.compressed);
+    let mut core = ReplayCore::from_config(config);
     // program a second accelerator image (same geometry, distinct slot)
-    board.flash.program(
+    core.board.flash.program(
         "lstm_b",
         Bitstream::synthesize(
             FpgaModel::Xc7s15,
@@ -141,19 +134,17 @@ pub fn run(config: &SimConfig, ms: &MultiSimConfig) -> MultiSimReport {
     );
 
     let mut state = State {
-        board,
         scheduler: MultiAccelScheduler::new(
             ms.policy,
             config.item.configuration.time,
             config.item.latency_without_config(),
         ),
+        core,
         busy_until: SimTime::ZERO,
         served: 0,
         late: 0,
         latency: Welford::new(),
         period,
-        phases: item_phases(&config.item),
-        spi: config.platform.spi,
         saving: ms.saving,
         ledger_at: SimTime::ZERO,
         dead: false,
@@ -206,9 +197,9 @@ pub fn run(config: &SimConfig, ms: &MultiSimConfig) -> MultiSimReport {
 
     MultiSimReport {
         served: state.served,
-        reconfigurations: state.board.fpga.configurations,
+        reconfigurations: state.core.board.fpga.configurations,
         reordered: state.scheduler.stats.reordered,
-        energy: state.board.fpga_energy,
+        energy: state.core.board.fpga_energy,
         mean_latency: Duration::from_millis(if state.latency.count() > 0 {
             state.latency.mean()
         } else {

@@ -20,11 +20,9 @@ use anyhow::Result;
 use crate::config::loader::SimConfig;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::requests::ArrivalProcess;
-use crate::device::board::Board;
-use crate::device::fpga::FpgaState;
 use crate::runtime::inference::{LstmRuntime, Variant};
-use crate::strategies::simulate::item_phases;
-use crate::strategies::strategy::{GapAction, Strategy};
+use crate::strategies::replay::ReplayCore;
+use crate::strategies::strategy::Strategy;
 use crate::util::units::Duration;
 
 /// One served request's outcome.
@@ -98,12 +96,12 @@ pub fn serve(
     arrivals: &mut dyn ArrivalProcess,
 ) -> Result<ServeReport> {
     let sim = cfg.sim;
-    let mut board = Board::paper_setup(sim.platform.fpga, sim.platform.spi.compressed);
+    // The same phase-replay core the simulations use: one accounting path.
+    let mut core = ReplayCore::from_config(sim);
     let mut metrics = Metrics::new();
     let mut served = Vec::new();
     let (rows, cols) = runtime.window_shape();
     let mut sensor = SensorSource::new(rows, cols, sim.workload.seed ^ 0x5EED);
-    let phases = item_phases(&sim.item);
     let mut budget_exhausted = false;
 
     log::info!(
@@ -116,17 +114,12 @@ pub fn serve(
 
     for request_id in 0..cfg.max_requests {
         // 1. configure if needed (energy)
-        if !matches!(board.fpga.state, FpgaState::Idle(_) | FpgaState::Busy) {
-            if board
-                .power_on_and_configure("lstm", sim.platform.spi)
-                .is_err()
-            {
-                budget_exhausted = true;
-                break;
-            }
+        if !core.is_ready() && core.configure("lstm").is_err() {
+            budget_exhausted = true;
+            break;
         }
         // 2. energy for the active phases (Table 2 timings)
-        if board.run_item_phases(&phases).is_err() {
+        if core.run_phases().is_err() {
             budget_exhausted = true;
             break;
         }
@@ -140,7 +133,7 @@ pub fn serve(
             host_latency: result.latency,
         });
 
-        // 4. gap handling per strategy
+        // 4. gap handling per strategy (shared gap-policy core)
         let gap = arrivals.next_gap();
         let busy = sim.item.latency_without_config();
         let idle_time = if gap.secs() > busy.secs() {
@@ -148,22 +141,18 @@ pub fn serve(
         } else {
             Duration::ZERO
         };
-        let ran_dry = match strategy.gap_action(gap) {
-            GapAction::PowerOff => board.off_for(idle_time, false).is_err(),
-            GapAction::Idle(saving) => board.idle_for(saving, idle_time).is_err(),
-        };
-        if ran_dry {
+        if core.apply_gap(strategy.gap_action(gap), idle_time).is_err() {
             budget_exhausted = true;
             break;
         }
     }
 
-    metrics.sim_energy = board.fpga_energy;
-    metrics.sim_elapsed = board.now.as_duration();
+    metrics.sim_energy = core.board.fpga_energy;
+    metrics.sim_elapsed = core.board.now.as_duration();
     Ok(ServeReport {
         metrics,
         served,
-        configurations: board.fpga.configurations,
+        configurations: core.board.fpga.configurations,
         budget_exhausted,
     })
 }

@@ -21,6 +21,12 @@ use crate::device::flash::StoredImage;
 use crate::device::spi::{loading_power, transfer_time};
 use crate::util::units::{Duration, Energy, Power};
 
+/// A stage was requested that the configuration FSM does not produce.
+/// Surfaced through config validation instead of panicking mid-run.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("no stage named '{0}' in the configuration profile (expected one of: setup, bitstream_loading, startup)")]
+pub struct UnknownStage(pub String);
+
 /// One stage of the configuration phase.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Stage {
@@ -44,22 +50,28 @@ pub struct ConfigProfile {
 }
 
 impl ConfigProfile {
+    /// The stage names `compute()` emits, in FSM order — the single
+    /// source of truth shared by the stage lookups, the validation
+    /// tripwire and the tests.
+    pub const STAGE_NAMES: [&'static str; 3] = ["setup", "bitstream_loading", "startup"];
+
     /// Compute the profile for loading `image` on `model` through `spi`.
     pub fn compute(model: FpgaModel, spi: SpiConfig, image: &StoredImage) -> ConfigProfile {
+        let [setup, loading, startup] = Self::STAGE_NAMES;
         let bits = image.stream_bits();
         let stages = vec![
             Stage {
-                name: "setup",
+                name: setup,
                 time: SETUP_TIME,
                 power: SETUP_POWER,
             },
             Stage {
-                name: "bitstream_loading",
+                name: loading,
                 time: transfer_time(&spi, bits),
                 power: loading_power(model, &spi),
             },
             Stage {
-                name: "startup",
+                name: startup,
                 time: STARTUP_TIME,
                 power: SETUP_POWER, // same rail state; zero-duration anyway
             },
@@ -67,19 +79,24 @@ impl ConfigProfile {
         ConfigProfile { model, spi, stages }
     }
 
-    pub fn stage(&self, name: &str) -> &Stage {
+    /// Look up a stage by name. Unknown names are a proper error (they
+    /// used to panic), so config-driven stage references can be rejected
+    /// at validation time rather than aborting a sweep mid-run.
+    pub fn stage(&self, name: &str) -> Result<&Stage, UnknownStage> {
         self.stages
             .iter()
             .find(|s| s.name == name)
-            .unwrap_or_else(|| panic!("no stage named '{name}'"))
+            .ok_or_else(|| UnknownStage(name.to_string()))
     }
 
     pub fn setup(&self) -> &Stage {
-        self.stage("setup")
+        self.stage(Self::STAGE_NAMES[0])
+            .expect("compute() always emits a setup stage")
     }
 
     pub fn loading(&self) -> &Stage {
-        self.stage("bitstream_loading")
+        self.stage(Self::STAGE_NAMES[1])
+            .expect("compute() always emits a bitstream_loading stage")
     }
 
     /// Total configuration-phase time (the paper's T_config).
@@ -200,8 +217,19 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "no stage named")]
-    fn unknown_stage_panics() {
-        profile(SpiConfig::optimal()).stage("warp");
+    fn unknown_stage_is_an_error_not_a_panic() {
+        let err = profile(SpiConfig::optimal()).stage("warp").unwrap_err();
+        assert_eq!(err, UnknownStage("warp".to_string()));
+        assert!(err.to_string().contains("no stage named 'warp'"));
+    }
+
+    #[test]
+    fn known_stages_resolve() {
+        let p = profile(SpiConfig::optimal());
+        for name in ConfigProfile::STAGE_NAMES {
+            assert!(p.stage(name).is_ok(), "{name}");
+        }
+        let emitted: Vec<&str> = p.stages.iter().map(|s| s.name).collect();
+        assert_eq!(emitted, ConfigProfile::STAGE_NAMES);
     }
 }

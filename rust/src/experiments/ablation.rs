@@ -19,6 +19,7 @@ use crate::coordinator::scheduler::{MultiAccelScheduler, Policy, SlotRequest};
 use crate::device::calib::FLASH_STANDBY_POWER;
 use crate::energy::analytical::Analytical;
 use crate::energy::crossover;
+use crate::runner::{Grid, SweepRunner};
 use crate::util::rng::Xoshiro256ss;
 use crate::util::table::{fnum, Table};
 use crate::util::units::{Duration, Energy, Power};
@@ -35,14 +36,19 @@ pub struct FlashFloorAblation {
 }
 
 pub fn flash_floor(config: &SimConfig) -> FlashFloorAblation {
+    flash_floor_threaded(config, &SweepRunner::single())
+}
+
+/// The idle-mode grid on the sweep engine.
+pub fn flash_floor_threaded(config: &SimConfig, runner: &SweepRunner) -> FlashFloorAblation {
     let model = Analytical::new(&config.item, config.workload.energy_budget);
-    let rows = [
+    let grid = Grid::new(vec![
         ("baseline", StrategyKind::IdleWaiting),
         ("method 1", StrategyKind::IdleWaitingM1),
         ("method 1+2", StrategyKind::IdleWaitingM12),
-    ]
-    .into_iter()
-    .map(|(label, kind)| {
+    ]);
+    let rows = runner.run(&grid, |cell| {
+        let (label, kind) = *cell.params;
         let with = model.item.idle_power(kind);
         let without = with - FLASH_STANDBY_POWER;
         (
@@ -52,8 +58,7 @@ pub fn flash_floor(config: &SimConfig) -> FlashFloorAblation {
             crossover::asymptotic(&model, with),
             crossover::asymptotic(&model, without),
         )
-    })
-    .collect();
+    });
     FlashFloorAblation { rows }
 }
 
@@ -100,19 +105,26 @@ pub struct TransientSensitivity {
 }
 
 pub fn transient_sensitivity(config: &SimConfig) -> TransientSensitivity {
-    let rows = [0.0, 0.05, 0.1244, 0.2, 0.4]
-        .into_iter()
-        .map(|mj| {
-            let mut item = config.item.clone();
-            item.power_on_transient = Energy::from_millijoules(mj);
-            let model = Analytical::new(&item, config.workload.energy_budget);
-            let items = model
-                .n_max_onoff(Duration::from_millis(40.0))
-                .expect("feasible");
-            let cross = crossover::asymptotic(&model, model.item.idle_power_baseline);
-            (mj, items, cross.millis())
-        })
-        .collect();
+    transient_sensitivity_threaded(config, &SweepRunner::single())
+}
+
+/// The transient-energy grid on the sweep engine.
+pub fn transient_sensitivity_threaded(
+    config: &SimConfig,
+    runner: &SweepRunner,
+) -> TransientSensitivity {
+    let grid = Grid::new(vec![0.0, 0.05, 0.1244, 0.2, 0.4]);
+    let rows = runner.run(&grid, |cell| {
+        let mj = *cell.params;
+        let mut item = config.item.clone();
+        item.power_on_transient = Energy::from_millijoules(mj);
+        let model = Analytical::new(&item, config.workload.energy_budget);
+        let items = model
+            .n_max_onoff(Duration::from_millis(40.0))
+            .expect("feasible");
+        let cross = crossover::asymptotic(&model, model.item.idle_power_baseline);
+        (mj, items, cross.millis())
+    });
     TransientSensitivity { rows }
 }
 
@@ -150,43 +162,53 @@ pub struct MultiAccelAblation {
 }
 
 pub fn multi_accel(config: &SimConfig, requests: u64, seed: u64) -> MultiAccelAblation {
+    multi_accel_threaded(config, requests, seed, &SweepRunner::single())
+}
+
+/// The accelerator-mix grid on the sweep engine. Each cell reuses the
+/// caller's `seed` (not the per-cell stream) so the request sequence per
+/// mix matches the historical serial output exactly.
+pub fn multi_accel_threaded(
+    config: &SimConfig,
+    requests: u64,
+    seed: u64,
+    runner: &SweepRunner,
+) -> MultiAccelAblation {
     let e_config = config.item.configuration.energy() + config.item.power_on_transient;
     let config_time = config.item.configuration.time;
     let item_latency = config.item.latency_without_config();
     let period = config.workload.arrival.mean_period();
 
-    let rows = [0.0, 0.1, 0.25, 0.5]
-        .into_iter()
-        .map(|mix| {
-            let run = |policy: Policy| {
-                let mut sched =
-                    MultiAccelScheduler::new(policy, config_time, item_latency);
-                let mut rng = Xoshiro256ss::new(seed);
-                for i in 0..requests {
-                    let slot = if rng.bernoulli(mix) { 1 } else { 0 };
-                    sched.submit(SlotRequest {
-                        id: i,
-                        slot,
-                        arrival: period * i as f64,
-                        // deadline: next-period completion (paper premise)
-                        deadline: period * (i + 1) as f64,
-                    });
-                }
-                while sched.next().is_some() {}
-                sched
-            };
-            let fifo = run(Policy::Fifo);
-            let batched = run(Policy::BatchBySlot { window: 8 });
-            (
-                mix,
-                fifo.stats.reconfigurations,
-                batched.stats.reconfigurations,
-                fifo.reconfiguration_energy(e_config).millijoules(),
-                batched.reconfiguration_energy(e_config).millijoules(),
-                batched.stats.deadline_violations,
-            )
-        })
-        .collect();
+    let grid = Grid::new(vec![0.0, 0.1, 0.25, 0.5]);
+    let rows = runner.run(&grid, |cell| {
+        let mix = *cell.params;
+        let run = |policy: Policy| {
+            let mut sched = MultiAccelScheduler::new(policy, config_time, item_latency);
+            let mut rng = Xoshiro256ss::new(seed);
+            for i in 0..requests {
+                let slot = if rng.bernoulli(mix) { 1 } else { 0 };
+                sched.submit(SlotRequest {
+                    id: i,
+                    slot,
+                    arrival: period * i as f64,
+                    // deadline: next-period completion (paper premise)
+                    deadline: period * (i + 1) as f64,
+                });
+            }
+            while sched.next().is_some() {}
+            sched
+        };
+        let fifo = run(Policy::Fifo);
+        let batched = run(Policy::BatchBySlot { window: 8 });
+        (
+            mix,
+            fifo.stats.reconfigurations,
+            batched.stats.reconfigurations,
+            fifo.reconfiguration_energy(e_config).millijoules(),
+            batched.reconfiguration_energy(e_config).millijoules(),
+            batched.stats.deadline_violations,
+        )
+    });
     MultiAccelAblation { rows, requests }
 }
 

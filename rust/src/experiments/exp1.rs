@@ -12,6 +12,7 @@ use crate::device::bitstream::Bitstream;
 use crate::device::config_fsm::ConfigProfile;
 use crate::device::flash::StoredImage;
 use crate::experiments::paper;
+use crate::runner::{Grid, SweepRunner};
 use crate::util::csv::Csv;
 use crate::util::table::{fnum, Table};
 
@@ -43,19 +44,25 @@ pub struct Exp1Result {
     pub points: Vec<SweepPoint>,
 }
 
-/// Run the 66-point sweep for `model`.
+/// Run the 66-point sweep for `model`. Single-threaded; see
+/// [`run_threaded`] for the parallel path.
 pub fn run(model: FpgaModel) -> Exp1Result {
+    run_threaded(model, &SweepRunner::single())
+}
+
+/// The Table 1 configuration-setting sweep as a grid declaration on the
+/// sweep engine.
+pub fn run_threaded(model: FpgaModel, runner: &SweepRunner) -> Exp1Result {
     let bitstream = Bitstream::lstm_accelerator(model);
-    let points = SpiConfig::sweep()
-        .into_iter()
-        .map(|spi| {
-            let image = StoredImage::new(bitstream.clone(), spi.compressed);
-            SweepPoint {
-                spi,
-                profile: ConfigProfile::compute(model, spi, &image),
-            }
-        })
-        .collect();
+    let grid = Grid::new(SpiConfig::sweep());
+    let points = runner.run(&grid, |cell| {
+        let spi = *cell.params;
+        let image = StoredImage::new(bitstream.clone(), spi.compressed);
+        SweepPoint {
+            spi,
+            profile: ConfigProfile::compute(model, spi, &image),
+        }
+    });
     Exp1Result { model, points }
 }
 

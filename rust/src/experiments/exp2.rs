@@ -9,6 +9,7 @@ use crate::config::loader::SimConfig;
 use crate::energy::analytical::Analytical;
 use crate::energy::crossover;
 use crate::experiments::paper;
+use crate::runner::{Grid, SweepRunner};
 use crate::util::csv::Csv;
 use crate::util::table::{fcount, fnum, Table};
 use crate::util::units::Duration;
@@ -33,26 +34,32 @@ pub struct Exp2Result {
 }
 
 /// Run the sweep with the paper's parameters (or a coarser step for quick
-/// runs — pass `step_ms = 0.01` for full fidelity).
+/// runs — pass `step_ms = 0.01` for full fidelity). Single-threaded; see
+/// [`run_threaded`] for the parallel path.
 pub fn run(config: &SimConfig, step_ms: f64) -> Exp2Result {
+    run_threaded(config, step_ms, &SweepRunner::single())
+}
+
+/// The T_req sweep as a grid declaration on the sweep engine. Output is
+/// byte-identical at any thread count (each cell is a pure function of
+/// its grid point).
+pub fn run_threaded(config: &SimConfig, step_ms: f64, runner: &SweepRunner) -> Exp2Result {
     let model = Analytical::new(&config.item, config.workload.energy_budget);
     let p_idle = model.item.idle_power_baseline;
-    let mut samples = Vec::new();
-    let mut t = paper::exp2::T_REQ_MIN_MS;
-    while t <= paper::exp2::T_REQ_MAX_MS + 1e-9 {
+    let grid = Grid::stepped(paper::exp2::T_REQ_MIN_MS, paper::exp2::T_REQ_MAX_MS, step_ms);
+    let samples = runner.run(&grid, |cell| {
+        let t = *cell.params;
         let t_req = Duration::from_millis(t);
         let onoff_items = model.n_max_onoff(t_req);
         let iw_items = model.n_max_idle_waiting(t_req, p_idle).unwrap_or(0);
-        samples.push(Sample {
+        Sample {
             t_req_ms: t,
             onoff_items,
             iw_items,
-            onoff_lifetime_h: onoff_items
-                .map(|n| (t_req * n as f64).hours()),
+            onoff_lifetime_h: onoff_items.map(|n| (t_req * n as f64).hours()),
             iw_lifetime_h: (t_req * iw_items as f64).hours(),
-        });
-        t += step_ms;
-    }
+        }
+    });
     Exp2Result {
         samples,
         crossover_ms: crossover::asymptotic(&model, p_idle).millis(),
@@ -256,4 +263,7 @@ mod tests {
         // 10..120 ms at 0.01 ms = 11,001 samples
         assert_eq!(r.samples.len(), 11_001);
     }
+
+    // Thread-count invariance (threads=1 vs N byte-identical CSV) is
+    // covered by tests/sweep_determinism.rs.
 }

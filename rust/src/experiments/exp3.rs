@@ -14,6 +14,7 @@ use crate::device::rails::PowerSaving;
 use crate::energy::analytical::Analytical;
 use crate::energy::crossover;
 use crate::experiments::paper;
+use crate::runner::{Grid, SweepRunner};
 use crate::util::csv::Csv;
 use crate::util::table::{fcount, fnum, Table};
 use crate::util::units::Duration;
@@ -39,25 +40,30 @@ pub struct Exp3Result {
 }
 
 /// Run the sweep (paper range 10–120 ms for the multipliers; the
-/// crossover analysis extends to 600 ms internally).
+/// crossover analysis extends to 600 ms internally). Single-threaded;
+/// see [`run_threaded`] for the parallel path.
 pub fn run(config: &SimConfig, step_ms: f64) -> Exp3Result {
+    run_threaded(config, step_ms, &SweepRunner::single())
+}
+
+/// The idle-mode sweep as a grid declaration on the sweep engine.
+pub fn run_threaded(config: &SimConfig, step_ms: f64, runner: &SweepRunner) -> Exp3Result {
     let model = Analytical::new(&config.item, config.workload.energy_budget);
     let p_base = model.item.idle_power(StrategyKind::IdleWaiting);
     let p_m1 = model.item.idle_power(StrategyKind::IdleWaitingM1);
     let p_m12 = model.item.idle_power(StrategyKind::IdleWaitingM12);
 
-    let mut samples = Vec::new();
-    let mut t = paper::exp2::T_REQ_MIN_MS;
-    while t <= paper::exp2::T_REQ_MAX_MS + 1e-9 {
+    let grid = Grid::stepped(paper::exp2::T_REQ_MIN_MS, paper::exp2::T_REQ_MAX_MS, step_ms);
+    let samples = runner.run(&grid, |cell| {
+        let t = *cell.params;
         let t_req = Duration::from_millis(t);
-        samples.push(Sample {
+        Sample {
             t_req_ms: t,
             baseline_items: model.n_max_idle_waiting(t_req, p_base).unwrap_or(0),
             m1_items: model.n_max_idle_waiting(t_req, p_m1).unwrap_or(0),
             m12_items: model.n_max_idle_waiting(t_req, p_m12).unwrap_or(0),
-        });
-        t += step_ms;
-    }
+        }
+    });
 
     let onoff_40 = model
         .n_max_onoff(Duration::from_millis(40.0))
@@ -287,4 +293,7 @@ mod tests {
         assert!(r.render_summary().contains("499.06"));
         assert!(r.to_csv().n_rows() > 100);
     }
+
+    // Thread-count invariance (threads=1 vs N byte-identical CSV) is
+    // covered by tests/sweep_determinism.rs.
 }

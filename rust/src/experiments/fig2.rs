@@ -12,6 +12,7 @@ use crate::device::bitstream::Bitstream;
 use crate::device::config_fsm::ConfigProfile;
 use crate::device::flash::StoredImage;
 use crate::experiments::paper;
+use crate::runner::{Grid, SweepRunner};
 use crate::util::table::{fnum, Table};
 use crate::util::units::{Duration, Energy, Power};
 
@@ -22,13 +23,22 @@ pub struct Fig2Profile {
     pub phases: Vec<(&'static str, Power, Duration)>,
 }
 
-/// Build the pre-optimization profile.
+/// The assumed prior-study SPI clock (the [5] platform used single SPI
+/// at a mid-range frequency; 26 MHz reproduces the published 87.15%).
+pub const PRIOR_STUDY_FREQ_MHZ: f64 = 26.0;
+
+/// Build the pre-optimization profile at the documented 26 MHz.
 pub fn run() -> Fig2Profile {
+    profile_at(PRIOR_STUDY_FREQ_MHZ)
+}
+
+/// Build the prior-study profile assuming a given single-SPI clock.
+pub fn profile_at(freq_mhz: f64) -> Fig2Profile {
     // Prior-study configuration path: single SPI (the [5] platform did
-    // not use multi-bit configuration), mid-range clock, no compression.
+    // not use multi-bit configuration), no compression.
     let spi = SpiConfig {
         buswidth: 1,
-        freq_mhz: 26.0,
+        freq_mhz,
         compressed: false,
     };
     let image = StoredImage::new(Bitstream::lstm_accelerator(FpgaModel::Xc7s15), false);
@@ -53,6 +63,18 @@ pub fn run() -> Fig2Profile {
         ),
     ];
     Fig2Profile { config, phases }
+}
+
+/// Reconstruction sensitivity on the sweep engine: the configuration
+/// share of a prior-study item as a function of the assumed single-SPI
+/// clock — how robust the 87.15% headline is to the one free parameter
+/// of the Fig 2 reconstruction. Returns (freq_mhz, config_fraction).
+pub fn share_series(runner: &SweepRunner) -> Vec<(f64, f64)> {
+    let grid = Grid::new(SpiConfig::FREQS_MHZ.to_vec());
+    runner.run(&grid, |cell| {
+        let freq = *cell.params;
+        (freq, profile_at(freq).config_fraction())
+    })
 }
 
 impl Fig2Profile {
@@ -150,5 +172,28 @@ mod tests {
         let s = run().render();
         assert!(s.contains("configuration"));
         assert!(s.contains("87."));
+    }
+
+    #[test]
+    fn share_series_decreases_with_frequency() {
+        let series = share_series(&SweepRunner::single());
+        assert_eq!(series.len(), SpiConfig::FREQS_MHZ.len());
+        // faster loading → cheaper configuration → smaller share
+        for pair in series.windows(2) {
+            assert!(pair[1].1 < pair[0].1, "{pair:?}");
+        }
+        // the documented 26 MHz point is the headline reconstruction
+        let at26 = series
+            .iter()
+            .find(|(f, _)| *f == PRIOR_STUDY_FREQ_MHZ)
+            .unwrap();
+        assert!((at26.1 - run().config_fraction()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn share_series_thread_invariant() {
+        let serial = share_series(&SweepRunner::single());
+        let parallel = share_series(&SweepRunner::new(4));
+        assert_eq!(serial, parallel);
     }
 }

@@ -17,6 +17,7 @@ use crate::config::schema::StrategyKind;
 use crate::coordinator::requests::Periodic;
 use crate::energy::analytical::Analytical;
 use crate::experiments::paper;
+use crate::runner::{Grid, SweepRunner};
 use crate::strategies::simulate::{simulate, SimReport};
 use crate::strategies::strategy::build;
 use crate::util::table::{fcount, fnum, Table};
@@ -42,34 +43,41 @@ pub struct ValidationResult {
     pub rows: Vec<Row>,
 }
 
-/// Run the validation at `t_req_ms` (paper uses 40 ms).
+/// Run the validation at `t_req_ms` (paper uses 40 ms). Single-threaded;
+/// see [`run_threaded`] for the parallel path.
 pub fn run(config: &SimConfig, t_req_ms: f64) -> ValidationResult {
+    run_threaded(config, t_req_ms, &SweepRunner::single())
+}
+
+/// The per-strategy validation as a grid on the sweep engine — each cell
+/// is a full DES lifetime run, so the two strategies validate in
+/// parallel when the runner has ≥ 2 threads.
+pub fn run_threaded(config: &SimConfig, t_req_ms: f64, runner: &SweepRunner) -> ValidationResult {
     let model = Analytical::new(&config.item, config.workload.energy_budget);
     let t_req = Duration::from_millis(t_req_ms);
-    let rows = [StrategyKind::OnOff, StrategyKind::IdleWaiting]
-        .into_iter()
-        .map(|kind| {
-            let prediction = model.predict(kind, t_req);
-            let analytical_items = prediction.n_max.expect("feasible period");
-            let strategy = build(kind, &model);
-            let mut arrivals = Periodic { period: t_req };
-            let report: SimReport = simulate(config, strategy.as_ref(), &mut arrivals);
-            let des_lifetime_h = report.lifetime.hours();
-            let analytical_lifetime_h = prediction.lifetime.hours();
-            Row {
-                strategy: kind,
-                analytical_items,
-                des_items: report.items,
-                items_gap: (report.items as f64 - analytical_items as f64).abs()
-                    / analytical_items as f64,
-                analytical_lifetime_h,
-                des_lifetime_h,
-                lifetime_gap: (des_lifetime_h - analytical_lifetime_h).abs()
-                    / analytical_lifetime_h,
-                monitor_rel_error: report.monitor_rel_error,
-            }
-        })
-        .collect();
+    let grid = Grid::new(vec![StrategyKind::OnOff, StrategyKind::IdleWaiting]);
+    let rows = runner.run(&grid, |cell| {
+        let kind = *cell.params;
+        let prediction = model.predict(kind, t_req);
+        let analytical_items = prediction.n_max.expect("feasible period");
+        let strategy = build(kind, &model);
+        let mut arrivals = Periodic { period: t_req };
+        let report: SimReport = simulate(config, strategy.as_ref(), &mut arrivals);
+        let des_lifetime_h = report.lifetime.hours();
+        let analytical_lifetime_h = prediction.lifetime.hours();
+        Row {
+            strategy: kind,
+            analytical_items,
+            des_items: report.items,
+            items_gap: (report.items as f64 - analytical_items as f64).abs()
+                / analytical_items as f64,
+            analytical_lifetime_h,
+            des_lifetime_h,
+            lifetime_gap: (des_lifetime_h - analytical_lifetime_h).abs()
+                / analytical_lifetime_h,
+            monitor_rel_error: report.monitor_rel_error,
+        }
+    });
     ValidationResult { t_req_ms, rows }
 }
 

@@ -22,6 +22,7 @@
 pub mod bench;
 pub mod cli;
 pub mod config;
+pub mod runner;
 pub mod runtime;
 pub mod sim;
 pub mod testing;

@@ -1,0 +1,169 @@
+//! Parameter grids and sweep cells.
+//!
+//! A [`Grid`] is an ordered list of parameter points; a [`Cell`] is one
+//! point paired with its index and a deterministically-derived PRNG seed.
+//! Grids replicate the experiments' original loop semantics exactly —
+//! [`Grid::stepped`] accumulates `t += step` with the same `+ 1e-9`
+//! inclusive tolerance the old `while` loops used, so migrated sweeps
+//! produce bit-identical floating-point sample positions.
+
+use crate::util::rng::{SplitMix64, Xoshiro256ss};
+
+/// An ordered set of parameter points to sweep over.
+#[derive(Debug, Clone)]
+pub struct Grid<P> {
+    points: Vec<P>,
+}
+
+impl<P> Grid<P> {
+    /// A grid over an explicit list of points.
+    pub fn new(points: Vec<P>) -> Grid<P> {
+        Grid { points }
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn points(&self) -> &[P] {
+        &self.points
+    }
+
+    pub fn into_points(self) -> Vec<P> {
+        self.points
+    }
+}
+
+impl Grid<f64> {
+    /// Inclusive stepped range `min, min+step, …` up to `max` (with the
+    /// experiments' historical `1e-9` end tolerance). Accumulates rather
+    /// than multiplying so sample positions match the pre-runner loops
+    /// bit-for-bit.
+    pub fn stepped(min: f64, max: f64, step: f64) -> Grid<f64> {
+        assert!(step > 0.0, "grid step must be positive");
+        let mut points = Vec::new();
+        let mut t = min;
+        while t <= max + 1e-9 {
+            points.push(t);
+            t += step;
+        }
+        Grid { points }
+    }
+}
+
+/// Cartesian product of two axes, row-major (`a` outer, `b` inner).
+pub fn cross<A: Clone, B: Clone>(a: &[A], b: &[B]) -> Grid<(A, B)> {
+    let mut points = Vec::with_capacity(a.len() * b.len());
+    for x in a {
+        for y in b {
+            points.push((x.clone(), y.clone()));
+        }
+    }
+    Grid::new(points)
+}
+
+/// One unit of sweep work: the parameter point, its position in the grid
+/// and a per-cell seed for any stochastic work inside the cell.
+#[derive(Debug)]
+pub struct Cell<'a, P> {
+    pub index: usize,
+    pub params: &'a P,
+    /// Seed derived from `(sweep base seed, index)` only — independent of
+    /// thread count and scheduling order.
+    pub seed: u64,
+}
+
+impl<P> Cell<'_, P> {
+    /// A fresh deterministic PRNG stream for this cell.
+    pub fn rng(&self) -> Xoshiro256ss {
+        Xoshiro256ss::new(self.seed)
+    }
+}
+
+/// Derive a cell seed from the sweep's base seed and the cell index.
+///
+/// SplitMix64 over the mixed pair gives well-separated streams even for
+/// adjacent indices (the xoshiro authors' recommended seeding path).
+pub fn derive_seed(base: u64, index: u64) -> u64 {
+    let mut sm = SplitMix64::new(base ^ index.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    sm.next()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stepped_matches_legacy_loop() {
+        // exp2's loop shape: 10..=120 at 0.01 → 11,001 points
+        let g = Grid::stepped(10.0, 120.0, 0.01);
+        assert_eq!(g.len(), 11_001);
+        assert_eq!(g.points()[0], 10.0);
+        // the last point must equal the accumulated value, not 120.0 exactly
+        let mut t = 10.0;
+        while t <= 120.0 + 1e-9 {
+            t += 0.01;
+        }
+        let expected_last = t - 0.01;
+        assert_eq!(*g.points().last().unwrap(), expected_last);
+    }
+
+    #[test]
+    fn stepped_accumulates_identically() {
+        let g = Grid::stepped(10.0, 120.0, 1.0);
+        let mut reference = Vec::new();
+        let mut t = 10.0;
+        while t <= 120.0 + 1e-9 {
+            reference.push(t);
+            t += 1.0;
+        }
+        assert_eq!(g.points(), reference.as_slice());
+    }
+
+    #[test]
+    fn cross_is_row_major() {
+        let g = cross(&[1, 2], &["a", "b", "c"]);
+        assert_eq!(g.len(), 6);
+        assert_eq!(g.points()[0], (1, "a"));
+        assert_eq!(g.points()[2], (1, "c"));
+        assert_eq!(g.points()[3], (2, "a"));
+    }
+
+    #[test]
+    fn derived_seeds_are_stable_and_distinct() {
+        let a = derive_seed(7, 0);
+        assert_eq!(a, derive_seed(7, 0), "seed derivation must be pure");
+        let seeds: Vec<u64> = (0..100).map(|i| derive_seed(7, i)).collect();
+        let mut unique = seeds.clone();
+        unique.sort_unstable();
+        unique.dedup();
+        assert_eq!(unique.len(), seeds.len(), "collision in cell seeds");
+        assert_ne!(derive_seed(7, 1), derive_seed(8, 1), "base seed must matter");
+    }
+
+    #[test]
+    fn cell_rng_streams_diverge() {
+        let points = [0.0, 1.0];
+        let a = Cell {
+            index: 0,
+            params: &points[0],
+            seed: derive_seed(0, 0),
+        };
+        let b = Cell {
+            index: 1,
+            params: &points[1],
+            seed: derive_seed(0, 1),
+        };
+        assert_ne!(a.rng().next_u64_raw(), b.rng().next_u64_raw());
+    }
+
+    #[test]
+    #[should_panic(expected = "step must be positive")]
+    fn zero_step_rejected() {
+        Grid::stepped(0.0, 1.0, 0.0);
+    }
+}

@@ -1,0 +1,25 @@
+//! The unified parameter-sweep engine.
+//!
+//! Every experiment in this repro is, at heart, a sweep: over request
+//! period (exp2/exp3), over SPI configuration settings (exp1), over
+//! transient energy or accelerator mix (ablations), over strategies
+//! (validation). Before this subsystem each module hand-rolled its own
+//! serial `while t <= max` loop; now a sweep is a [`Grid`] declaration
+//! plus a per-[`Cell`] closure handed to a [`SweepRunner`].
+//!
+//! Guarantees:
+//!
+//! * **Determinism at any thread count** — cells are indexed, each cell's
+//!   PRNG seed is derived from `(base_seed, index)` alone, and results are
+//!   collected in grid order. `threads = 1` and `threads = N` produce
+//!   byte-identical output (the sweep-determinism test suite asserts
+//!   this down to rendered CSV bytes).
+//! * **No work-stealing nondeterminism** — the grid is split into
+//!   contiguous chunks, one per worker, so no synchronization is needed
+//!   beyond `std::thread::scope`'s join.
+
+pub mod grid;
+pub mod sweep;
+
+pub use grid::{Cell, Grid};
+pub use sweep::SweepRunner;

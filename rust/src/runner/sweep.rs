@@ -1,0 +1,211 @@
+//! The multi-threaded sweep executor.
+//!
+//! [`SweepRunner::run`] maps a closure over every [`Cell`] of a [`Grid`]
+//! on `threads` scoped OS threads and returns the results in grid order.
+//! The grid is split into contiguous chunks (one per worker) so each
+//! worker writes only its own slice of the result vector — no locks, no
+//! work-stealing, and therefore no scheduling-dependent ordering. Output
+//! is byte-identical at any thread count provided the per-cell closure is
+//! a pure function of `(cell.params, cell.index, cell.seed)`.
+
+use crate::runner::grid::{derive_seed, Cell, Grid};
+
+/// Executes parameter sweeps across a fixed number of threads.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepRunner {
+    threads: usize,
+    seed: u64,
+}
+
+impl Default for SweepRunner {
+    fn default() -> Self {
+        SweepRunner::auto()
+    }
+}
+
+impl SweepRunner {
+    /// A runner with an explicit thread count, clamped to
+    /// `1..=MAX_RUNNER_THREADS`. Oversubscription beyond the core count
+    /// is allowed (useful for determinism testing) but bounded so an
+    /// absurd `--threads` value cannot exhaust OS thread limits — cells
+    /// beyond the cap simply queue on the capped workers.
+    pub fn new(threads: usize) -> SweepRunner {
+        SweepRunner {
+            threads: threads.clamp(1, Self::MAX_RUNNER_THREADS),
+            seed: 0,
+        }
+    }
+
+    /// Hard ceiling on worker threads per sweep (well above any core
+    /// count this runs on; far below OS thread limits).
+    pub const MAX_RUNNER_THREADS: usize = 512;
+
+    /// Single-threaded reference runner (the determinism baseline).
+    pub fn single() -> SweepRunner {
+        SweepRunner::new(1)
+    }
+
+    /// A runner using every available core.
+    pub fn auto() -> SweepRunner {
+        SweepRunner::new(Self::max_threads())
+    }
+
+    /// The machine's available parallelism (≥ 1).
+    pub fn max_threads() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+
+    /// Set the base seed from which every cell seed is derived.
+    pub fn with_seed(mut self, seed: u64) -> SweepRunner {
+        self.seed = seed;
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f` over every cell of `grid`, returning results in grid order.
+    ///
+    /// `f` must be a pure function of the cell (same cell → same result);
+    /// under that contract the output is independent of `threads`.
+    pub fn run<P, R, F>(&self, grid: &Grid<P>, f: F) -> Vec<R>
+    where
+        P: Sync,
+        R: Send,
+        F: Fn(&Cell<'_, P>) -> R + Sync,
+    {
+        let n = grid.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let threads = self.threads.min(n);
+        let points = grid.points();
+        let base_seed = self.seed;
+
+        if threads == 1 {
+            // Fast path: no thread spawn overhead for serial sweeps.
+            return points
+                .iter()
+                .enumerate()
+                .map(|(index, params)| {
+                    f(&Cell {
+                        index,
+                        params,
+                        seed: derive_seed(base_seed, index as u64),
+                    })
+                })
+                .collect();
+        }
+
+        let mut results: Vec<Option<R>> = Vec::with_capacity(n);
+        results.resize_with(n, || None);
+        let chunk = n.div_ceil(threads);
+
+        std::thread::scope(|scope| {
+            for (k, out_chunk) in results.chunks_mut(chunk).enumerate() {
+                let f = &f;
+                scope.spawn(move || {
+                    let start = k * chunk;
+                    for (j, slot) in out_chunk.iter_mut().enumerate() {
+                        let index = start + j;
+                        *slot = Some(f(&Cell {
+                            index,
+                            params: &points[index],
+                            seed: derive_seed(base_seed, index as u64),
+                        }));
+                    }
+                });
+            }
+        });
+
+        results
+            .into_iter()
+            .map(|r| r.expect("every cell is assigned to exactly one worker"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_arrive_in_grid_order() {
+        let grid = Grid::new((0..1000u64).collect());
+        for threads in [1, 2, 3, 8, 64] {
+            let out = SweepRunner::new(threads).run(&grid, |cell| *cell.params * 2);
+            let expected: Vec<u64> = (0..1000).map(|x| x * 2).collect();
+            assert_eq!(out, expected, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn cell_index_matches_point_position() {
+        let grid = Grid::new((0..137usize).collect());
+        let out = SweepRunner::new(4).run(&grid, |cell| (cell.index, *cell.params));
+        for (i, (index, param)) in out.into_iter().enumerate() {
+            assert_eq!(i, index);
+            assert_eq!(i, param);
+        }
+    }
+
+    #[test]
+    fn seeded_cells_identical_across_thread_counts() {
+        let grid = Grid::new(vec![(); 257]);
+        let baseline = SweepRunner::single()
+            .with_seed(42)
+            .run(&grid, |cell| cell.rng().next_u64_raw());
+        for threads in [2, 4, 16] {
+            let out = SweepRunner::new(threads)
+                .with_seed(42)
+                .run(&grid, |cell| cell.rng().next_u64_raw());
+            assert_eq!(out, baseline, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn base_seed_changes_every_stream() {
+        let grid = Grid::new(vec![(); 16]);
+        let a = SweepRunner::single()
+            .with_seed(1)
+            .run(&grid, |cell| cell.seed);
+        let b = SweepRunner::single()
+            .with_seed(2)
+            .run(&grid, |cell| cell.seed);
+        assert!(a.iter().zip(&b).all(|(x, y)| x != y));
+    }
+
+    #[test]
+    fn empty_grid_is_fine() {
+        let grid: Grid<u64> = Grid::new(Vec::new());
+        let out: Vec<u64> = SweepRunner::auto().run(&grid, |c| *c.params);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_cells_is_fine() {
+        let grid = Grid::new(vec![1u64, 2, 3]);
+        let out = SweepRunner::new(64).run(&grid, |c| *c.params + 10);
+        assert_eq!(out, vec![11, 12, 13]);
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        assert_eq!(SweepRunner::new(0).threads(), 1);
+    }
+
+    #[test]
+    fn absurd_thread_counts_are_capped() {
+        assert_eq!(
+            SweepRunner::new(usize::MAX).threads(),
+            SweepRunner::MAX_RUNNER_THREADS
+        );
+        // capped runner still produces ordered, correct results
+        let grid = Grid::new((0..100u64).collect());
+        let out = SweepRunner::new(usize::MAX).run(&grid, |c| *c.params);
+        assert_eq!(out, (0..100).collect::<Vec<_>>());
+    }
+}

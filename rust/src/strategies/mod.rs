@@ -1,8 +1,15 @@
 //! Power-management strategies (paper §4.2) and the strategy-level
 //! discrete-event simulation that evaluates them against the budget.
+//!
+//! `replay` holds the phase-replay / gap-policy core shared by this
+//! module's lifetime simulation and the multi-accelerator simulation in
+//! `coordinator::multi_sim` — one energy-accounting code path for every
+//! event-driven runtime.
 
+pub mod replay;
 pub mod simulate;
 pub mod strategy;
 
+pub use replay::{item_phases, ReplayCore};
 pub use simulate::{simulate, SimReport};
 pub use strategy::{build, Adaptive, GapAction, IdleWaiting, OnOff, Strategy};

@@ -1,0 +1,168 @@
+//! The shared phase-replay / gap-policy core.
+//!
+//! Both event-driven simulations — the single-accelerator lifetime run
+//! ([`crate::strategies::simulate`]) and the multi-accelerator scheduler
+//! run ([`crate::coordinator::multi_sim`]) — drive a [`Board`] through
+//! the same primitive moves: ensure the fabric is configured, replay the
+//! Table 2 active phases, and spend the inter-request gap per the
+//! strategy's [`GapAction`]. [`ReplayCore`] owns that sequence so the two
+//! runtimes cannot drift apart on energy accounting.
+
+use crate::config::loader::SimConfig;
+use crate::config::schema::SpiConfig;
+use crate::device::board::{Board, BoardError};
+use crate::device::fpga::FpgaState;
+use crate::device::rails::PowerSaving;
+use crate::strategies::strategy::GapAction;
+use crate::util::units::{Duration, Power};
+
+/// A board plus the workload-item phase profile, exposing the simulation
+/// primitives every event-driven runtime shares.
+#[derive(Debug, Clone)]
+pub struct ReplayCore {
+    pub board: Board,
+    /// Table 2 active phases as (power, duration) tuples.
+    pub phases: [(Power, Duration); 3],
+    pub spi: SpiConfig,
+}
+
+impl ReplayCore {
+    /// Build the paper platform for `config` with the LSTM image in flash.
+    pub fn from_config(config: &SimConfig) -> ReplayCore {
+        ReplayCore {
+            board: Board::paper_setup(config.platform.fpga, config.platform.spi.compressed),
+            phases: item_phases(&config.item),
+            spi: config.platform.spi,
+        }
+    }
+
+    /// True when the fabric holds a live configuration (no preamble due).
+    pub fn is_ready(&self) -> bool {
+        matches!(self.board.fpga.state, FpgaState::Idle(_) | FpgaState::Busy)
+    }
+
+    /// Power-on + configure `slot` from flash. Returns the configuration
+    /// duration (the mechanism-derived T_config).
+    pub fn configure(&mut self, slot: &str) -> Result<Duration, BoardError> {
+        self.board.power_on_and_configure(slot, self.spi)
+    }
+
+    /// Switch images: power-cycle (losing the SRAM configuration) and load
+    /// `slot` — the multi-accelerator reconfiguration path.
+    pub fn power_cycle_configure(&mut self, slot: &str) -> Result<Duration, BoardError> {
+        if self.board.fpga.is_configured() {
+            self.board.fpga.power_off();
+        }
+        self.board.power_on_and_configure(slot, self.spi)
+    }
+
+    /// Replay the three active phases; returns their total latency.
+    pub fn run_phases(&mut self) -> Result<Duration, BoardError> {
+        self.board.run_item_phases(&self.phases)
+    }
+
+    /// Spend an inter-request gap per the strategy's decision. A zero
+    /// idle window still switches the rails into the requested
+    /// power-saving mode (so the next gap starts from the right state).
+    pub fn apply_gap(&mut self, action: GapAction, idle: Duration) -> Result<(), BoardError> {
+        match action {
+            GapAction::PowerOff => self.board.off_for(idle, false),
+            GapAction::Idle(saving) => {
+                if idle.secs() > 0.0 {
+                    self.board.idle_for(saving, idle)
+                } else {
+                    self.board.fpga.enter_idle(saving).map_err(BoardError::from)
+                }
+            }
+        }
+    }
+
+    /// Advance the energy ledger across `dur` of inactivity: idle at
+    /// `saving` while configured, otherwise the (paper-model) off state.
+    pub fn elapse(&mut self, saving: PowerSaving, dur: Duration) -> Result<(), BoardError> {
+        if self.board.fpga.is_configured() {
+            self.board.idle_for(saving, dur)
+        } else {
+            self.board.off_for(dur, false)
+        }
+    }
+}
+
+/// Table 2 active phases as (power, duration) tuples.
+pub fn item_phases(item: &crate::config::schema::WorkloadItemSpec) -> [(Power, Duration); 3] {
+    [
+        (item.data_loading.power, item.data_loading.time),
+        (item.inference.power, item.inference.time),
+        (item.data_offloading.power, item.data_offloading.time),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_default;
+
+    #[test]
+    fn configure_then_phases_costs_the_calibrated_energy() {
+        let cfg = paper_default();
+        let mut core = ReplayCore::from_config(&cfg);
+        assert!(!core.is_ready());
+        let t = core.configure("lstm").unwrap();
+        assert!((t.millis() - 36.145).abs() < 0.01);
+        assert!(core.is_ready());
+        core.run_phases().unwrap();
+        // 11.85 (config) + 0.1244 (inrush) + 0.0065 (phases) ≈ 11.98 mJ
+        assert!((core.board.fpga_energy.millijoules() - 11.983).abs() < 0.01);
+    }
+
+    #[test]
+    fn apply_gap_zero_idle_still_switches_mode() {
+        let cfg = paper_default();
+        let mut core = ReplayCore::from_config(&cfg);
+        core.configure("lstm").unwrap();
+        core.run_phases().unwrap();
+        let before = core.board.fpga_energy;
+        core.apply_gap(GapAction::Idle(PowerSaving::M12), Duration::ZERO)
+            .unwrap();
+        assert_eq!(core.board.fpga_energy, before);
+        assert_eq!(core.board.fpga.state, FpgaState::Idle(PowerSaving::M12));
+    }
+
+    #[test]
+    fn power_off_gap_loses_configuration() {
+        let cfg = paper_default();
+        let mut core = ReplayCore::from_config(&cfg);
+        core.configure("lstm").unwrap();
+        core.run_phases().unwrap();
+        core.apply_gap(GapAction::PowerOff, Duration::from_millis(3.8))
+            .unwrap();
+        assert!(!core.is_ready());
+        // paper model: the off state draws nothing
+        let e = core.board.fpga_energy;
+        core.elapse(PowerSaving::BASELINE, Duration::from_secs(1.0)).unwrap();
+        assert_eq!(core.board.fpga_energy, e);
+    }
+
+    #[test]
+    fn elapse_while_configured_charges_idle_power() {
+        let cfg = paper_default();
+        let mut core = ReplayCore::from_config(&cfg);
+        core.configure("lstm").unwrap();
+        core.run_phases().unwrap();
+        let before = core.board.fpga_energy;
+        core.elapse(PowerSaving::M12, Duration::from_secs(1.0)).unwrap();
+        let drawn = core.board.fpga_energy - before;
+        assert!((drawn.millijoules() - 24.0).abs() < 0.1, "{}", drawn.millijoules());
+    }
+
+    #[test]
+    fn power_cycle_configure_counts_a_new_configuration() {
+        let cfg = paper_default();
+        let mut core = ReplayCore::from_config(&cfg);
+        core.configure("lstm").unwrap();
+        core.power_cycle_configure("lstm").unwrap();
+        assert_eq!(core.board.fpga.configurations, 2);
+        assert_eq!(core.board.fpga.power_ons, 2);
+        assert!(core.is_ready());
+    }
+}

@@ -1,20 +1,30 @@
 //! The strategy-level discrete-event simulation.
 //!
-//! Replays the duty-cycle workload (Fig 1) against the [`Board`] under a
-//! [`Strategy`]'s gap policy until the 4147 J battery budget is exhausted
-//! (or an optional item cap is hit), reproducing the quantity the paper's
-//! Python simulator computes: the maximum number of executable workload
-//! items and the system lifetime. The PAC1934 monitor rides along, so the
-//! run also yields the "hardware-measured" energy whose gap vs the exact
-//! integral mirrors the paper's §5.3 validation.
+//! Replays the duty-cycle workload (Fig 1) against the [`ReplayCore`]
+//! under a [`Strategy`]'s gap policy until the 4147 J battery budget is
+//! exhausted (or an optional item cap is hit), reproducing the quantity
+//! the paper's Python simulator computes: the maximum number of
+//! executable workload items and the system lifetime. The PAC1934
+//! monitor rides along, so the run also yields the "hardware-measured"
+//! energy whose gap vs the exact integral mirrors the paper's §5.3
+//! validation.
+//!
+//! Since the runner/runtime unification this module contains no request
+//! loop of its own: requests are [`LifetimeEvent`]s on the shared
+//! [`sim::Engine`](crate::sim::Engine) — the same event-enum pattern the
+//! multi-accelerator simulation uses — with the inter-arrival gaps drawn
+//! from a pluggable [`ArrivalProcess`]. The engine clock tracks request
+//! arrivals; the board's own ledger tracks busy/idle energy, exactly as
+//! the pre-unification serial loop did, so reports are bit-identical.
 
 use crate::config::loader::SimConfig;
-use crate::config::schema::WorkloadItemSpec;
 use crate::coordinator::requests::ArrivalProcess;
-use crate::device::board::Board;
-use crate::device::fpga::FpgaState;
+use crate::sim::{Ctx, Engine, SimTime};
+use crate::strategies::replay::ReplayCore;
 use crate::strategies::strategy::{GapAction, Strategy};
-use crate::util::units::{Duration, Energy, Power};
+use crate::util::units::{Duration, Energy};
+
+pub use crate::strategies::replay::item_phases;
 
 /// Outcome of one simulated lifetime.
 #[derive(Debug, Clone)]
@@ -39,104 +49,132 @@ pub struct SimReport {
     /// Requests that arrived before the previous item finished (only
     /// possible with irregular arrivals) and were served late.
     pub late_requests: u64,
+    /// Final engine clock: the arrival time of the last request
+    /// processed (n−1 inter-arrival gaps for n items).
+    pub sim_time: Duration,
 }
 
-/// Simulate `config`'s workload under `strategy` with `arrivals`.
-///
-/// Mechanics per request:
-/// 1. If the FPGA is unconfigured (first request, or the previous gap
-///    powered it off), pay power-on transient + full configuration.
-/// 2. Run the three active phases (Table 2).
-/// 3. Apply the strategy's gap action until the next arrival.
-///
-/// Stops (without counting the in-flight item) as soon as any energy draw
-/// would exceed the remaining budget — Eq 3's `≤ E_Budget` criterion.
+/// Events of the single-accelerator duty cycle: a request arrives. Each
+/// request schedules its successor one inter-arrival gap later, so the
+/// event chain is the workload.
+#[derive(Debug)]
+enum LifetimeEvent {
+    Request,
+}
+
+/// Mutable simulation state threaded through the event handler.
+struct LifetimeState<'a> {
+    core: ReplayCore,
+    strategy: &'a dyn Strategy,
+    arrivals: &'a mut dyn ArrivalProcess,
+    max_items: u64,
+    items: u64,
+    late_requests: u64,
+    /// Configuration duration from the FSM (equals Table 2's 36.145 ms at
+    /// the optimal SPI setting, but follows the mechanism when swept).
+    config_time: Duration,
+    item_latency: Duration,
+}
+
+impl LifetimeState<'_> {
+    /// Serve one request: mechanics per the paper's Fig 1 duty cycle.
+    ///
+    /// 1. If the FPGA is unconfigured (first request, or the previous gap
+    ///    powered it off), pay power-on transient + full configuration.
+    /// 2. Run the three active phases (Table 2).
+    /// 3. Apply the strategy's gap action until the next arrival, then
+    ///    schedule the next request one inter-arrival gap out.
+    ///
+    /// Stops (without counting the in-flight item) as soon as any energy
+    /// draw would exceed the remaining budget — Eq 3's `≤ E_Budget`
+    /// criterion.
+    fn on_request(&mut self, ctx: &mut Ctx<LifetimeEvent>) {
+        if self.items >= self.max_items {
+            ctx.stop();
+            return;
+        }
+        // 1. ensure configured
+        if !self.core.is_ready() {
+            match self.core.configure("lstm") {
+                Ok(t) => self.config_time = t,
+                Err(_) => {
+                    ctx.stop();
+                    return;
+                }
+            }
+        }
+        // 2. active phases
+        if self.core.run_phases().is_err() {
+            ctx.stop();
+            return;
+        }
+        self.items += 1;
+        if self.items >= self.max_items {
+            // Eq 2 counts n−1 idle gaps: no gap after the final item.
+            ctx.stop();
+            return;
+        }
+
+        // 3. gap until next arrival
+        let gap = self.arrivals.next_gap();
+        let action = self.strategy.gap_action(gap);
+        let busy = if action == GapAction::PowerOff {
+            self.config_time + self.item_latency
+        } else {
+            self.item_latency
+        };
+        let idle_time = if gap.secs() > busy.secs() {
+            gap - busy
+        } else {
+            self.late_requests += 1;
+            Duration::ZERO
+        };
+        if self.core.apply_gap(action, idle_time).is_err() {
+            ctx.stop();
+            return;
+        }
+        ctx.schedule_in(gap, LifetimeEvent::Request);
+    }
+}
+
+/// Simulate `config`'s workload under `strategy` with `arrivals` on the
+/// shared discrete-event engine.
 pub fn simulate(
     config: &SimConfig,
     strategy: &dyn Strategy,
     arrivals: &mut dyn ArrivalProcess,
 ) -> SimReport {
-    let mut board = Board::paper_setup(config.platform.fpga, config.platform.spi.compressed);
-    let item = &config.item;
-    let phases = item_phases(item);
-    let max_items = config.workload.max_items.unwrap_or(u64::MAX);
+    let mut state = LifetimeState {
+        core: ReplayCore::from_config(config),
+        strategy,
+        arrivals,
+        max_items: config.workload.max_items.unwrap_or(u64::MAX),
+        items: 0,
+        late_requests: 0,
+        config_time: config.item.configuration.time,
+        item_latency: config.item.latency_without_config(),
+    };
 
-    let mut items = 0u64;
-    let mut late_requests = 0u64;
-    // Configuration duration from the FSM (equals Table 2's 36.145 ms at
-    // the optimal SPI setting, but follows the mechanism when swept).
-    let mut config_time = item.configuration.time;
+    let mut engine: Engine<LifetimeEvent> = Engine::new();
+    engine.schedule_at(SimTime::ZERO, LifetimeEvent::Request);
+    let stats = engine.run(&mut state, u64::MAX, |ctx, st, event| match event {
+        LifetimeEvent::Request => st.on_request(ctx),
+    });
 
-    'run: while items < max_items {
-        // 1. ensure configured
-        if !matches!(board.fpga.state, FpgaState::Idle(_) | FpgaState::Busy) {
-            match board.power_on_and_configure("lstm", config.platform.spi) {
-                Ok(t) => config_time = t,
-                Err(_) => break 'run,
-            }
-        }
-        // 2. active phases
-        if board.run_item_phases(&phases).is_err() {
-            break 'run;
-        }
-        items += 1;
-        if items >= max_items {
-            // Eq 2 counts n−1 idle gaps: no gap after the final item.
-            break 'run;
-        }
-
-        // 3. gap until next arrival
-        let gap = arrivals.next_gap();
-        let busy = if strategy.gap_action(gap) == GapAction::PowerOff {
-            config_time + item.latency_without_config()
-        } else {
-            item.latency_without_config()
-        };
-        let idle_time = if gap.secs() > busy.secs() {
-            gap - busy
-        } else {
-            late_requests += 1;
-            Duration::ZERO
-        };
-        match strategy.gap_action(gap) {
-            GapAction::PowerOff => {
-                if board.off_for(idle_time, false).is_err() {
-                    break 'run;
-                }
-            }
-            GapAction::Idle(saving) => {
-                if idle_time.secs() > 0.0 {
-                    if board.idle_for(saving, idle_time).is_err() {
-                        break 'run;
-                    }
-                } else if board.fpga.enter_idle(saving).is_err() {
-                    break 'run;
-                }
-            }
-        }
-    }
-
+    let board = &state.core.board;
     SimReport {
-        strategy: strategy.label(),
-        arrival: arrivals.label(),
-        items,
-        lifetime: arrivals.mean() * items as f64, // Eq 4
+        strategy: state.strategy.label(),
+        arrival: state.arrivals.label(),
+        items: state.items,
+        lifetime: state.arrivals.mean() * state.items as f64, // Eq 4
         energy_exact: board.fpga_energy,
         energy_measured: board.monitor.measured(),
         monitor_rel_error: board.monitor.rel_error(),
         configurations: board.fpga.configurations,
         power_ons: board.fpga.power_ons,
-        late_requests,
+        late_requests: state.late_requests,
+        sim_time: stats.end_time.as_duration(),
     }
-}
-
-/// Table 2 active phases as (power, duration) tuples.
-pub fn item_phases(item: &WorkloadItemSpec) -> [(Power, Duration); 3] {
-    [
-        (item.data_loading.power, item.data_loading.time),
-        (item.inference.power, item.inference.time),
-        (item.data_offloading.power, item.data_offloading.time),
-    ]
 }
 
 #[cfg(test)]
@@ -145,9 +183,9 @@ mod tests {
     use crate::config::paper_default;
     use crate::config::schema::StrategyKind;
     use crate::coordinator::requests::{Periodic, Poisson};
+    use crate::device::rails::PowerSaving;
     use crate::energy::analytical::Analytical;
     use crate::strategies::strategy::{build, Adaptive, IdleWaiting, OnOff};
-    use crate::device::rails::PowerSaving;
 
     fn capped_config(t_req_ms: f64, max_items: u64) -> SimConfig {
         let mut cfg = paper_default();
@@ -185,6 +223,16 @@ mod tests {
         assert_eq!(r.items, 100);
         assert_eq!(r.configurations, 1);
         assert_eq!(r.power_ons, 1);
+    }
+
+    #[test]
+    fn zero_item_cap_executes_nothing() {
+        let cfg = capped_config(40.0, 0);
+        let mut arr = periodic(40.0);
+        let r = simulate(&cfg, &IdleWaiting::baseline(), &mut arr);
+        assert_eq!(r.items, 0);
+        assert_eq!(r.configurations, 0);
+        assert_eq!(r.energy_exact, Energy::ZERO);
     }
 
     #[test]
@@ -300,5 +348,35 @@ mod tests {
             let r = simulate(&cfg, s.as_ref(), &mut arr);
             assert_eq!(r.items, 10, "{kind}");
         }
+    }
+
+    #[test]
+    fn engine_clock_tracks_arrivals() {
+        // 10 items at 40 ms: the event chain IS the workload, so the
+        // engine's final clock must be the 10th request's arrival time,
+        // nine inter-arrival gaps in (9 × 40 ms = 360 ms).
+        let cfg = capped_config(40.0, 10);
+        let mut arr = periodic(40.0);
+        let r = simulate(&cfg, &IdleWaiting::baseline(), &mut arr);
+        assert_eq!(r.items, 10);
+        assert!((r.sim_time.millis() - 360.0).abs() < 1e-9, "{}", r.sim_time.millis());
+        // Eq 4 lifetime is derived from items, not the clock
+        assert!((r.lifetime.millis() - 400.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn engine_clock_follows_irregular_gaps() {
+        // With Poisson arrivals the engine clock must equal the sum of
+        // the n−1 drawn gaps — an engine-scheduling property a serial
+        // loop could not fake.
+        let cfg = capped_config(40.0, 50);
+        let poisson = || Poisson::new(Duration::from_millis(40.0), Duration::from_millis(0.05), 3);
+        let mut arr = poisson();
+        let r = simulate(&cfg, &IdleWaiting::baseline(), &mut arr);
+        let mut reference = poisson();
+        let expected: f64 = (0..49).map(|_| reference.next_gap().millis()).sum();
+        // engine time is nanosecond-quantized per gap
+        let got = r.sim_time.millis();
+        assert!((got - expected).abs() < 1e-3, "{got} vs {expected}");
     }
 }

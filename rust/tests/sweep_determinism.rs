@@ -1,0 +1,108 @@
+//! Sweep-engine determinism: `SweepRunner` output at `threads = N` must
+//! be identical — same order, same bytes in rendered CSV — to
+//! `threads = 1`, for the real experiment grids (exp2 and the ablation
+//! grids), via the in-tree property framework over random thread counts
+//! and step sizes.
+
+use idlewait::config::paper_default;
+use idlewait::experiments::{ablation, exp2, exp3};
+use idlewait::runner::{Grid, SweepRunner};
+use idlewait::testing::prop::{check, Below, InRange};
+
+/// exp2 at a coarse step: threads 1 vs N → byte-identical CSV.
+#[test]
+fn exp2_csv_identical_at_any_thread_count() {
+    let cfg = paper_default();
+    let reference = exp2::run_threaded(&cfg, 0.5, &SweepRunner::single())
+        .to_csv()
+        .render();
+    for threads in [2, 3, 4, 7, 16] {
+        let out = exp2::run_threaded(&cfg, 0.5, &SweepRunner::new(threads))
+            .to_csv()
+            .render();
+        assert_eq!(out, reference, "threads={threads}");
+    }
+}
+
+/// Property: random (threads, step) pairs agree with the serial runner
+/// on the full rendered CSV (order + formatting + values).
+#[test]
+fn prop_exp2_thread_count_is_unobservable() {
+    let cfg = paper_default();
+    check::<(Below<32>, InRange<1, 10>)>("exp2-thread-invariance", 12, |(threads, step)| {
+        let step_ms = step.0.max(1.0);
+        let serial = exp2::run_threaded(&cfg, step_ms, &SweepRunner::single())
+            .to_csv()
+            .render();
+        let parallel = exp2::run_threaded(
+            &cfg,
+            step_ms,
+            &SweepRunner::new(threads.0 as usize + 1),
+        )
+        .to_csv()
+        .render();
+        serial == parallel
+    });
+}
+
+#[test]
+fn exp3_csv_identical_at_any_thread_count() {
+    let cfg = paper_default();
+    let reference = exp3::run_threaded(&cfg, 0.5, &SweepRunner::single())
+        .to_csv()
+        .render();
+    for threads in [2, 5, 8] {
+        let out = exp3::run_threaded(&cfg, 0.5, &SweepRunner::new(threads))
+            .to_csv()
+            .render();
+        assert_eq!(out, reference, "threads={threads}");
+    }
+}
+
+/// The ablation grids (flash floor, transient sensitivity, multi-accel
+/// scheduling) render identically at any thread count — including the
+/// stochastic multi-accel one, whose per-cell request streams are a pure
+/// function of the caller seed.
+#[test]
+fn ablation_grids_identical_at_any_thread_count() {
+    let cfg = paper_default();
+    let floor_ref = ablation::flash_floor_threaded(&cfg, &SweepRunner::single()).render();
+    let trans_ref =
+        ablation::transient_sensitivity_threaded(&cfg, &SweepRunner::single()).render();
+    let multi_ref =
+        ablation::multi_accel_threaded(&cfg, 500, 7, &SweepRunner::single()).render();
+    for threads in [2, 4, 9] {
+        let runner = SweepRunner::new(threads);
+        assert_eq!(
+            ablation::flash_floor_threaded(&cfg, &runner).render(),
+            floor_ref,
+            "flash floor, threads={threads}"
+        );
+        assert_eq!(
+            ablation::transient_sensitivity_threaded(&cfg, &runner).render(),
+            trans_ref,
+            "transient, threads={threads}"
+        );
+        assert_eq!(
+            ablation::multi_accel_threaded(&cfg, 500, 7, &runner).render(),
+            multi_ref,
+            "multi-accel, threads={threads}"
+        );
+    }
+}
+
+/// Property over the raw runner: per-cell PRNG streams depend only on
+/// (base seed, index), never on the thread count.
+#[test]
+fn prop_cell_streams_thread_invariant() {
+    check::<(Below<64>, Below<1000>)>("cell-stream-invariance", 32, |(threads, seed)| {
+        let grid = Grid::new(vec![(); 97]);
+        let serial = SweepRunner::single()
+            .with_seed(seed.0)
+            .run(&grid, |cell| cell.rng().next_u64_raw());
+        let parallel = SweepRunner::new(threads.0 as usize + 1)
+            .with_seed(seed.0)
+            .run(&grid, |cell| cell.rng().next_u64_raw());
+        serial == parallel
+    });
+}
