@@ -15,7 +15,7 @@
 
 use anyhow::{Context, Result};
 use idlewait::config::paper_default;
-use idlewait::config::schema::StrategyKind;
+use idlewait::config::schema::PolicySpec;
 use idlewait::coordinator::requests::Periodic;
 use idlewait::coordinator::server::{serve, ServerConfig};
 use idlewait::energy::analytical::Analytical;
@@ -53,12 +53,12 @@ fn main() -> Result<()> {
     ));
 
     for kind in [
-        StrategyKind::OnOff,
-        StrategyKind::IdleWaiting,
-        StrategyKind::IdleWaitingM1,
-        StrategyKind::IdleWaitingM12,
+        PolicySpec::OnOff,
+        PolicySpec::IdleWaiting,
+        PolicySpec::IdleWaitingM1,
+        PolicySpec::IdleWaitingM12,
     ] {
-        let strategy = build(kind, &model);
+        let mut policy = build(kind, &model);
         let mut arrivals = Periodic {
             period: Duration::from_millis(PERIOD_MS),
         };
@@ -67,7 +67,7 @@ fn main() -> Result<()> {
             variant: Variant::Forecast,
             max_requests: REQUESTS,
         };
-        let report = serve(&server_cfg, &runtime, strategy.as_ref(), &mut arrivals)?;
+        let report = serve(&server_cfg, &runtime, policy.as_mut(), &mut arrivals)?;
         let summary = report.metrics.latency_summary().expect("latencies recorded");
         let e_mj = report.metrics.sim_energy.millijoules();
         let per_request = e_mj / report.metrics.requests as f64;

@@ -8,7 +8,7 @@
 
 use anyhow::{Context, Result};
 use idlewait::config::paper_default;
-use idlewait::config::schema::StrategyKind;
+use idlewait::config::schema::PolicySpec;
 use idlewait::energy::analytical::Analytical;
 use idlewait::energy::crossover;
 use idlewait::runtime::inference::Variant;
@@ -47,8 +47,8 @@ fn main() -> Result<()> {
 
     // 4. The paper's core decision rule.
     let t40 = Duration::from_millis(40.0);
-    let onoff = model.predict(StrategyKind::OnOff, t40);
-    let iw = model.predict(StrategyKind::IdleWaiting, t40);
+    let onoff = model.predict(PolicySpec::OnOff, t40);
+    let iw = model.predict(PolicySpec::IdleWaiting, t40);
     println!(
         "\nat T_req = 40 ms within {} J:\n  On-Off       : {} items\n  Idle-Waiting : {} items ({:.2}x)",
         cfg.workload.energy_budget.joules(),

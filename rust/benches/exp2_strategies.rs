@@ -5,7 +5,7 @@
 
 use idlewait::bench::{black_box, quick_mode, Bench};
 use idlewait::config::paper_default;
-use idlewait::config::schema::StrategyKind;
+use idlewait::config::schema::PolicySpec;
 use idlewait::energy::analytical::Analytical;
 use idlewait::energy::crossover;
 use idlewait::experiments::exp2;
@@ -26,14 +26,14 @@ fn main() {
     bench.bench("single n_max prediction (Idle-Waiting)", || {
         black_box(
             model
-                .predict(StrategyKind::IdleWaiting, Duration::from_millis(40.0))
+                .predict(PolicySpec::IdleWaiting, Duration::from_millis(40.0))
                 .n_max,
         );
     });
     bench.bench("single n_max prediction (On-Off)", || {
         black_box(
             model
-                .predict(StrategyKind::OnOff, Duration::from_millis(40.0))
+                .predict(PolicySpec::OnOff, Duration::from_millis(40.0))
                 .n_max,
         );
     });

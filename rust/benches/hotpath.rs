@@ -30,13 +30,13 @@ fn main() {
         let mut arrivals = Periodic {
             period: Duration::from_millis(40.0),
         };
-        black_box(simulate(&des_cfg, &IdleWaiting::baseline(), &mut arrivals).items);
+        black_box(simulate(&des_cfg, &mut IdleWaiting::baseline(), &mut arrivals).items);
     });
     bench.bench("DES: 10k on-off items (config FSM each)", || {
         let mut arrivals = Periodic {
             period: Duration::from_millis(40.0),
         };
-        black_box(simulate(&des_cfg, &OnOff, &mut arrivals).items);
+        black_box(simulate(&des_cfg, &mut OnOff, &mut arrivals).items);
     });
 
     // --- sim core ---
@@ -113,7 +113,7 @@ fn main() {
                     period: Duration::from_millis(40.0),
                 };
                 black_box(
-                    serve(&server_cfg, &runtime, &IdleWaiting::baseline(), &mut arrivals)
+                    serve(&server_cfg, &runtime, &mut IdleWaiting::baseline(), &mut arrivals)
                         .unwrap()
                         .metrics
                         .requests,

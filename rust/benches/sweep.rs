@@ -1,6 +1,8 @@
 //! Bench: the unified sweep engine's throughput on the Experiment 2
 //! full-fidelity grid (10–120 ms at 0.01 ms = 11,001 cells), at 1 and 4
-//! threads and at the machine's full parallelism, reported as cells/sec.
+//! threads and at the machine's full parallelism, reported as cells/sec
+//! — plus the exp4 policy × arrival grid (28 DES lifetimes per sweep),
+//! which keeps the new policy subsystem on the cells/sec trajectory.
 //!
 //! This is the bench that backs the runner's headline claim: the
 //! multi-threaded sweep is byte-identical to the serial one (asserted
@@ -11,6 +13,7 @@
 use idlewait::bench::{black_box, quick_mode, Bench};
 use idlewait::config::paper_default;
 use idlewait::experiments::exp2;
+use idlewait::experiments::exp4_policies::{self, Exp4Config};
 use idlewait::runner::SweepRunner;
 use idlewait::util::table::{fnum, Table};
 
@@ -64,6 +67,46 @@ fn main() {
             fnum(*cps, 0),
             fnum(cps / base, 2),
         ]);
+    }
+    print!("{}", t.render());
+
+    // --- exp4 policy grid: 7 policies × 4 arrivals, each cell a full
+    // DES lifetime run — the heavy-cell regime of the sweep engine ---
+    let e4 = Exp4Config {
+        items: if quick_mode() { 200 } else { 2_000 },
+        period_ms: 40.0,
+        seed: 7,
+    };
+    let e4_reference = exp4_policies::run_threaded(&cfg, &e4, &SweepRunner::single())
+        .expect("exp4 serial run")
+        .to_csv()
+        .render();
+    let e4_parallel =
+        exp4_policies::run_threaded(&cfg, &e4, &SweepRunner::auto()).expect("exp4 parallel run");
+    let e4_cells = e4_parallel.rows.len();
+    assert_eq!(
+        e4_parallel.to_csv().render(),
+        e4_reference,
+        "exp4 diverged from serial"
+    );
+    let mut bench = Bench::new(format!(
+        "exp4 policy grid ({e4_cells} cells x {} items)",
+        e4.items
+    ));
+    let mut rows: Vec<(usize, f64)> = Vec::new();
+    for &threads in &counts {
+        let runner = SweepRunner::new(threads);
+        let r = bench.bench(format!("threads={threads}"), || {
+            black_box(exp4_policies::run_threaded(&cfg, &e4, &runner).unwrap().rows.len());
+        });
+        rows.push((threads, e4_cells as f64 * 1e9 / r.ns_per_iter()));
+    }
+    bench.finish();
+    let mut t = Table::new(&["threads", "cells/sec", "speedup vs 1 thread"])
+        .with_title("exp4 policy-sweep throughput");
+    let base = rows[0].1;
+    for (threads, cps) in &rows {
+        t.row(&[threads.to_string(), fnum(*cps, 0), fnum(cps / base, 2)]);
     }
     print!("{}", t.render());
 }

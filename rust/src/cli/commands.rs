@@ -6,9 +6,10 @@
 //! repro exp2 [--step 0.01] [--csv PATH] [--config FILE] [--threads N]
 //! repro exp3 [--step 0.01] [--csv PATH] [--threads N]
 //! repro validate [--period 40] [--threads N]
-//! repro serve [--strategy idle-waiting] [--period 40] [--requests 100]
+//! repro exp4 [--items 2000] [--period 40] [--seed 4] [--csv PATH] [--threads N]
+//! repro serve [--policy idle-waiting] [--period 40] [--requests 100]
 //!             [--variant int8] [--arrival poisson]
-//! repro plan --period 75              # strategy recommendation
+//! repro plan --period 75              # policy recommendation
 //! repro all [--threads N]             # every experiment, paper order
 //! ```
 //!
@@ -19,7 +20,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::cli::args::Args;
 use crate::config::loader::{load_file, paper_default, SimConfig};
-use crate::config::schema::{FpgaModel, StrategyKind};
+use crate::config::schema::{FpgaModel, PolicySpec};
 use crate::coordinator::requests;
 use crate::coordinator::server::{serve, ServerConfig};
 use crate::energy::analytical::Analytical;
@@ -40,6 +41,7 @@ COMMANDS:
   exp1        Experiment 1 (Fig 7): configuration-parameter sweep
   exp2        Experiment 2 (Figs 8-9): Idle-Waiting vs On-Off
   exp3        Experiment 3 (Table 3, Figs 10-11): idle power-saving
+  exp4        Online gap policies \u{d7} arrival processes (\u{a7}7 future work)
   validate    \u{a7}5.3 validation: analytical model vs discrete-event sim
   ablate      ablations: flash floor, power-on transient, multi-accel
   multi       event-driven multi-accelerator simulation (\u{a7}4.2 extension)
@@ -96,6 +98,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "exp1" => cmd_exp1(rest),
         "exp2" => cmd_exp2(rest),
         "exp3" => cmd_exp3(rest),
+        "exp4" => cmd_exp4(rest),
         "validate" => cmd_validate(rest),
         "ablate" => cmd_ablate(rest),
         "multi" => cmd_multi(rest),
@@ -207,6 +210,39 @@ fn cmd_exp3(argv: &[String]) -> Result<()> {
     maybe_write_csv(&args, result.to_csv())
 }
 
+fn cmd_exp4(argv: &[String]) -> Result<()> {
+    use crate::experiments::exp4_policies::{self, Exp4Config};
+
+    let args = Args::parse(
+        argv,
+        &[
+            ("items", true),
+            ("period", true),
+            ("seed", true),
+            ("csv", true),
+            ("config", true),
+            ("threads", true),
+            ("help", false),
+        ],
+    )?;
+    if help_and_done(&args, "exp4") {
+        return Ok(());
+    }
+    let config = load_config(&args)?;
+    let defaults = Exp4Config::default();
+    let e4 = Exp4Config {
+        items: args.u64_opt("items")?.unwrap_or(defaults.items),
+        period_ms: args
+            .f64_opt("period")?
+            .unwrap_or_else(|| config.workload.arrival.mean_period().millis()),
+        seed: args.u64_opt("seed")?.unwrap_or(defaults.seed),
+    };
+    let result = exp4_policies::run_threaded(&config, &e4, &sweep_runner(&args)?)
+        .context("loading the configured arrival trace for exp4")?;
+    print!("{}", result.render());
+    maybe_write_csv(&args, result.to_csv())
+}
+
 fn cmd_validate(argv: &[String]) -> Result<()> {
     let args = Args::parse(
         argv,
@@ -259,7 +295,6 @@ fn cmd_ablate(argv: &[String]) -> Result<()> {
 fn cmd_multi(argv: &[String]) -> Result<()> {
     use crate::coordinator::multi_sim::{run as run_multi, MultiSimConfig};
     use crate::coordinator::scheduler::Policy;
-    use crate::device::rails::PowerSaving;
     use crate::runner::grid::cross;
     use crate::util::table::{fnum, Table};
 
@@ -269,6 +304,7 @@ fn cmd_multi(argv: &[String]) -> Result<()> {
             ("requests", true),
             ("burst", true),
             ("seed", true),
+            ("gap-policy", true),
             ("config", true),
             ("threads", true),
             ("help", false),
@@ -281,6 +317,11 @@ fn cmd_multi(argv: &[String]) -> Result<()> {
     let requests = args.u64_opt("requests")?.unwrap_or(2_000);
     let burst = args.u64_opt("burst")?.unwrap_or(4);
     let seed = args.u64_opt("seed")?.unwrap_or(17);
+    let gap_policy = match args.str_opt("gap-policy") {
+        Some(name) => PolicySpec::parse(name)
+            .with_context(|| format!("unknown gap policy '{name}'"))?,
+        None => PolicySpec::IdleWaitingM12,
+    };
     let runner = sweep_runner(&args)?;
 
     // mix × policy as one grid: the heavy event-driven runs parallelize,
@@ -301,7 +342,7 @@ fn cmd_multi(argv: &[String]) -> Result<()> {
                 requests,
                 burst,
                 policy,
-                saving: PowerSaving::M12,
+                gap_policy,
                 seed,
             },
         );
@@ -339,7 +380,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let args = Args::parse(
         argv,
         &[
-            ("strategy", true),
+            ("policy", true),
+            ("strategy", true), // legacy alias for --policy
             ("period", true),
             ("requests", true),
             ("variant", true),
@@ -354,10 +396,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         return Ok(());
     }
     let config = load_config(&args)?;
-    let kind = match args.str_opt("strategy") {
-        Some(name) => StrategyKind::parse(name)
-            .with_context(|| format!("unknown strategy '{name}'"))?,
-        None => StrategyKind::IdleWaiting,
+    let kind = match args.str_opt("policy").or_else(|| args.str_opt("strategy")) {
+        Some(name) => PolicySpec::parse(name)
+            .with_context(|| format!("unknown policy '{name}'"))?,
+        None => config.workload.policy,
     };
     let period = Duration::from_millis(args.f64_opt("period")?.unwrap_or(40.0));
     let max_requests = args.u64_opt("requests")?.unwrap_or(100);
@@ -378,10 +420,19 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         match args.str_opt("arrival") {
             Some("poisson") => Box::new(requests::Poisson::new(
                 period,
-                Duration::from_millis(0.05),
+                Duration::from_millis(
+                    crate::config::schema::ArrivalSpec::DEFAULT_POISSON_MIN_GAP_MS,
+                ),
                 seed,
             )),
-            Some("periodic") | None => Box::new(requests::Periodic { period }),
+            Some("periodic") => Box::new(requests::Periodic { period }),
+            // no override: honour the config's arrival spec (periodic,
+            // jittered, poisson or a trace file) via the shared builder
+            None if args.str_opt("period").is_none() => {
+                requests::build(&config.workload.arrival, seed)
+                    .context("building arrival process from config")?
+            }
+            None => Box::new(requests::Periodic { period }),
             Some(other) => bail!("unknown arrival process '{other}'"),
         }
     };
@@ -391,13 +442,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     runtime.self_check().context("runtime self-check")?;
 
     let model = Analytical::new(&config.item, config.workload.energy_budget);
-    let strategy = build(kind, &model);
+    let mut policy = build(kind, &model);
     let server_cfg = ServerConfig {
         sim: &config,
         variant,
         max_requests,
     };
-    let report = serve(&server_cfg, &runtime, strategy.as_ref(), arrivals.as_mut())?;
+    let report = serve(&server_cfg, &runtime, policy.as_mut(), arrivals.as_mut())?;
     print!("{}", report.metrics.render());
     println!(
         "configurations: {} | budget exhausted: {}",
@@ -431,13 +482,14 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
     );
     let model = Analytical::new(&config.item, config.workload.energy_budget);
 
-    println!("strategy plan for T_req = {:.2} ms, budget = {:.0} J:", period.millis(), config.workload.energy_budget.joules());
-    let mut best: Option<(StrategyKind, u64)> = None;
+    println!("policy plan for T_req = {:.2} ms, budget = {:.0} J:", period.millis(), config.workload.energy_budget.joules());
+    let mut best: Option<(PolicySpec, u64)> = None;
     for kind in [
-        StrategyKind::OnOff,
-        StrategyKind::IdleWaiting,
-        StrategyKind::IdleWaitingM1,
-        StrategyKind::IdleWaitingM12,
+        PolicySpec::OnOff,
+        PolicySpec::IdleWaiting,
+        PolicySpec::IdleWaitingM1,
+        PolicySpec::IdleWaitingM12,
+        PolicySpec::Timeout,
     ] {
         let p = model.predict(kind, period);
         match p.n_max {
@@ -459,9 +511,9 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
         println!("recommendation: {}", kind.name());
     }
     for (label, k) in [
-        ("baseline", StrategyKind::IdleWaiting),
-        ("method 1", StrategyKind::IdleWaitingM1),
-        ("method 1+2", StrategyKind::IdleWaitingM12),
+        ("baseline", PolicySpec::IdleWaiting),
+        ("method 1", PolicySpec::IdleWaitingM1),
+        ("method 1+2", PolicySpec::IdleWaitingM12),
     ] {
         let t = crossover::asymptotic(&model, model.item.idle_power(k));
         println!("crossover vs On-Off ({label}): {:.2} ms", t.millis());
@@ -495,6 +547,17 @@ fn cmd_all(argv: &[String]) -> Result<()> {
     print!("{}", e3.render_summary());
     println!("\n=== Validation (\u{a7}5.3) ===");
     print!("{}", validation::run_threaded(&config, 40.0, &runner).render());
+    println!("\n=== Experiment 4 (online policies \u{d7} irregular arrivals) ===");
+    print!(
+        "{}",
+        crate::experiments::exp4_policies::run_threaded(
+            &config,
+            &crate::experiments::exp4_policies::Exp4Config::default(),
+            &runner,
+        )
+        .context("exp4 arrival trace")?
+        .render()
+    );
     Ok(())
 }
 
@@ -542,6 +605,11 @@ mod tests {
     }
 
     #[test]
+    fn exp4_small_grid_runs() {
+        run(&sv(&["exp4", "--items", "50", "--threads", "2"])).unwrap();
+    }
+
+    #[test]
     fn fig2_series_runs() {
         run(&sv(&["fig2", "--series", "--threads", "2"])).unwrap();
     }
@@ -559,8 +627,8 @@ mod tests {
     #[test]
     fn helps_run() {
         for cmd in [
-            "fig2", "exp1", "exp2", "exp3", "validate", "ablate", "multi", "serve", "plan",
-            "all",
+            "fig2", "exp1", "exp2", "exp3", "exp4", "validate", "ablate", "multi", "serve",
+            "plan", "all",
         ] {
             run(&sv(&[cmd, "--help"])).unwrap();
         }

@@ -113,12 +113,12 @@ pub fn paper_default() -> SimConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::schema::StrategyKind;
+    use crate::config::schema::PolicySpec;
 
     #[test]
     fn paper_default_loads_and_matches_table2() {
         let cfg = paper_default();
-        assert_eq!(cfg.workload.strategy, StrategyKind::IdleWaiting);
+        assert_eq!(cfg.workload.policy, PolicySpec::IdleWaiting);
         assert!((cfg.workload.energy_budget.joules() - 4147.0).abs() < 1e-9);
         assert!((cfg.item.configuration.power.milliwatts() - 327.9).abs() < 1e-9);
         assert!((cfg.item.configuration.time.millis() - 36.145).abs() < 1e-9);
@@ -141,7 +141,7 @@ mod tests {
             }
         }"#;
         let cfg = load_str(doc).unwrap();
-        assert_eq!(cfg.workload.strategy, StrategyKind::OnOff);
+        assert_eq!(cfg.workload.policy, PolicySpec::OnOff);
         assert_eq!(cfg.item.power_on_transient.millijoules(), 0.0);
     }
 

@@ -61,13 +61,19 @@ fn opt_bool(v: &Json, path: &str, key: &str, default: bool) -> Result<bool, Conf
 }
 
 // ---------------------------------------------------------------------------
-// Strategy selection
+// Gap-policy selection
 // ---------------------------------------------------------------------------
 
-/// Power-management strategy (paper §4.2) plus the idle-power-saving
-/// methods of §5.4 and our adaptive extension (paper §7 future work).
+/// Config-level selector for the gap policy: the paper's strategies
+/// (§4.2) plus the idle-power-saving methods of §5.4 and the online
+/// policies addressing its §7 future work (irregular requests).
+///
+/// Static policies (`OnOff`, `IdleWaiting*`) need no gap knowledge;
+/// `Oracle` is the clairvoyant offline upper bound (sees the true
+/// upcoming gap); `Timeout` and `EmaPredictor` are deployable online
+/// policies that decide from observed history only.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum StrategyKind {
+pub enum PolicySpec {
     /// Power off between requests; reconfigure every request (Fig 5).
     OnOff,
     /// Configure once, idle between requests (Fig 6), at baseline idle power.
@@ -76,44 +82,58 @@ pub enum StrategyKind {
     IdleWaitingM1,
     /// Idle-Waiting + Methods 1+2 (also undervolt VCCINT/VCCAUX).
     IdleWaitingM12,
-    /// Pick On-Off or Idle-Waiting per the analytical crossover (extension).
-    Adaptive,
+    /// Clairvoyant per-gap choice at the analytical crossover (offline
+    /// upper bound; formerly named `Adaptive`).
+    Oracle,
+    /// Ski-rental: idle up to the break-even timeout, then power off
+    /// (classically 2-competitive vs the oracle).
+    Timeout,
+    /// EMA of observed gaps; idle iff the predicted gap is below the
+    /// crossover, power off otherwise.
+    EmaPredictor,
 }
 
-impl StrategyKind {
-    pub fn parse(s: &str) -> Option<StrategyKind> {
+impl PolicySpec {
+    pub fn parse(s: &str) -> Option<PolicySpec> {
         match s.to_ascii_lowercase().replace('_', "-").as_str() {
-            "on-off" | "onoff" => Some(StrategyKind::OnOff),
+            "on-off" | "onoff" => Some(PolicySpec::OnOff),
             "idle-waiting" | "idlewaiting" | "idle-waiting-baseline" => {
-                Some(StrategyKind::IdleWaiting)
+                Some(PolicySpec::IdleWaiting)
             }
-            "idle-waiting-m1" | "method1" => Some(StrategyKind::IdleWaitingM1),
-            "idle-waiting-m12" | "method1+2" | "method12" => Some(StrategyKind::IdleWaitingM12),
-            "adaptive" => Some(StrategyKind::Adaptive),
+            "idle-waiting-m1" | "method1" => Some(PolicySpec::IdleWaitingM1),
+            "idle-waiting-m12" | "method1+2" | "method12" => Some(PolicySpec::IdleWaitingM12),
+            // "adaptive" is the legacy name for the clairvoyant policy
+            "oracle" | "adaptive" => Some(PolicySpec::Oracle),
+            "timeout" | "ski-rental" | "idle-then-off" => Some(PolicySpec::Timeout),
+            "ema" | "ema-predictor" => Some(PolicySpec::EmaPredictor),
             _ => None,
         }
     }
 
     pub fn name(&self) -> &'static str {
         match self {
-            StrategyKind::OnOff => "on-off",
-            StrategyKind::IdleWaiting => "idle-waiting",
-            StrategyKind::IdleWaitingM1 => "idle-waiting-m1",
-            StrategyKind::IdleWaitingM12 => "idle-waiting-m12",
-            StrategyKind::Adaptive => "adaptive",
+            PolicySpec::OnOff => "on-off",
+            PolicySpec::IdleWaiting => "idle-waiting",
+            PolicySpec::IdleWaitingM1 => "idle-waiting-m1",
+            PolicySpec::IdleWaitingM12 => "idle-waiting-m12",
+            PolicySpec::Oracle => "oracle",
+            PolicySpec::Timeout => "timeout",
+            PolicySpec::EmaPredictor => "ema-predictor",
         }
     }
 
-    pub const ALL: [StrategyKind; 5] = [
-        StrategyKind::OnOff,
-        StrategyKind::IdleWaiting,
-        StrategyKind::IdleWaitingM1,
-        StrategyKind::IdleWaitingM12,
-        StrategyKind::Adaptive,
+    pub const ALL: [PolicySpec; 7] = [
+        PolicySpec::OnOff,
+        PolicySpec::IdleWaiting,
+        PolicySpec::IdleWaitingM1,
+        PolicySpec::IdleWaitingM12,
+        PolicySpec::Oracle,
+        PolicySpec::Timeout,
+        PolicySpec::EmaPredictor,
     ];
 }
 
-impl fmt::Display for StrategyKind {
+impl fmt::Display for PolicySpec {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         f.write_str(self.name())
     }
@@ -135,16 +155,31 @@ pub enum ArrivalSpec {
         std_dev: Duration,
         min_period: Duration,
     },
-    /// Poisson process with the given mean inter-arrival time.
-    Poisson { mean_period: Duration },
+    /// Poisson process with the given mean inter-arrival time, clamped
+    /// below at `min_gap` (symmetric with `Jittered`'s floor).
+    Poisson {
+        mean_period: Duration,
+        min_gap: Duration,
+    },
+    /// Replay an inter-arrival trace file (one gap in ms per line; see
+    /// `coordinator::requests::TraceReplay::from_file`). `nominal` is the
+    /// declared mean period (`request_period_ms`), used for feasibility
+    /// checks and reporting without reading the file at parse time.
+    Trace { path: String, nominal: Duration },
 }
 
 impl ArrivalSpec {
+    /// Default Poisson clamp (ms): an arrival cannot land inside the
+    /// previous item's data-offload tail. Mirrors `Jittered`'s explicit
+    /// `min_period_ms` floor so the two stochastic specs are symmetric.
+    pub const DEFAULT_POISSON_MIN_GAP_MS: f64 = 0.05;
+
     pub fn mean_period(&self) -> Duration {
         match self {
             ArrivalSpec::Periodic { period } => *period,
             ArrivalSpec::Jittered { period, .. } => *period,
-            ArrivalSpec::Poisson { mean_period } => *mean_period,
+            ArrivalSpec::Poisson { mean_period, .. } => *mean_period,
+            ArrivalSpec::Trace { nominal, .. } => *nominal,
         }
     }
 
@@ -168,6 +203,14 @@ impl ArrivalSpec {
             }),
             "poisson" => Ok(ArrivalSpec::Poisson {
                 mean_period: period,
+                min_gap: Duration::from_millis(
+                    opt_f64(v, path, "min_period_ms")?
+                        .unwrap_or(Self::DEFAULT_POISSON_MIN_GAP_MS),
+                ),
+            }),
+            "trace" => Ok(ArrivalSpec::Trace {
+                path: req_str(v, path, "trace_path")?.to_string(),
+                nominal: period,
             }),
             other => Err(cerr(
                 &format!("{path}.arrival_kind"),
@@ -185,7 +228,7 @@ impl ArrivalSpec {
 pub struct WorkloadSpec {
     pub energy_budget: Energy,
     pub arrival: ArrivalSpec,
-    pub strategy: StrategyKind,
+    pub policy: PolicySpec,
     /// Optional hard cap on simulated items (for bounded runs); None = run
     /// until the budget is exhausted, as in the paper.
     pub max_items: Option<u64>,
@@ -197,13 +240,17 @@ impl WorkloadSpec {
     pub fn from_json(root: &Json) -> Result<WorkloadSpec, ConfigError> {
         let v = root.get("workload").unwrap_or(root);
         let path = "workload";
-        let strategy_name = req_str(v, path, "strategy")?;
-        let strategy = StrategyKind::parse(strategy_name).ok_or_else(|| {
+        // "policy" is the current key; "strategy" the pre-rename legacy one.
+        let (policy_key, policy_name) = match v.get("policy") {
+            Some(_) => ("policy", req_str(v, path, "policy")?),
+            None => ("strategy", req_str(v, path, "strategy")?),
+        };
+        let policy = PolicySpec::parse(policy_name).ok_or_else(|| {
             cerr(
-                &format!("{path}.strategy"),
+                &format!("{path}.{policy_key}"),
                 format!(
-                    "unknown strategy '{strategy_name}' (expected one of: {})",
-                    StrategyKind::ALL.map(|s| s.name()).join(", ")
+                    "unknown strategy '{policy_name}' (expected one of: {})",
+                    PolicySpec::ALL.map(|s| s.name()).join(", ")
                 ),
             )
         })?;
@@ -216,7 +263,7 @@ impl WorkloadSpec {
         Ok(WorkloadSpec {
             energy_budget: Energy::from_joules(req_f64(v, path, "energy_budget_j")?),
             arrival: ArrivalSpec::from_json(v, path)?,
-            strategy,
+            policy,
             max_items,
             seed: opt_f64(v, path, "seed")?.unwrap_or(0.0) as u64,
         })
@@ -530,9 +577,18 @@ workload_item:
         .unwrap();
         let w = WorkloadSpec::from_json(&v).unwrap();
         assert_eq!(w.energy_budget, Energy::from_joules(4147.0));
-        assert_eq!(w.strategy, StrategyKind::IdleWaiting);
+        assert_eq!(w.policy, PolicySpec::IdleWaiting);
         assert_eq!(w.arrival.mean_period(), Duration::from_millis(40.0));
         assert_eq!(w.max_items, None);
+    }
+
+    #[test]
+    fn policy_key_preferred_over_legacy_strategy_key() {
+        let v = yaml::parse(
+            "energy_budget_j: 1\nrequest_period_ms: 40\npolicy: timeout\n",
+        )
+        .unwrap();
+        assert_eq!(WorkloadSpec::from_json(&v).unwrap().policy, PolicySpec::Timeout);
     }
 
     #[test]
@@ -542,8 +598,57 @@ workload_item:
         )
         .unwrap();
         let w = WorkloadSpec::from_json(&v).unwrap();
-        assert!(matches!(w.arrival, ArrivalSpec::Poisson { .. }));
+        match w.arrival {
+            ArrivalSpec::Poisson { mean_period, min_gap } => {
+                assert_eq!(mean_period, Duration::from_millis(40.0));
+                assert_eq!(
+                    min_gap,
+                    Duration::from_millis(ArrivalSpec::DEFAULT_POISSON_MIN_GAP_MS)
+                );
+            }
+            other => panic!("expected poisson, got {other:?}"),
+        }
         assert_eq!(w.seed, 7);
+    }
+
+    #[test]
+    fn poisson_min_gap_overridable() {
+        let v = yaml::parse(
+            "energy_budget_j: 100\nrequest_period_ms: 40\narrival_kind: poisson\nmin_period_ms: 1.5\nstrategy: on-off\n",
+        )
+        .unwrap();
+        let w = WorkloadSpec::from_json(&v).unwrap();
+        assert!(matches!(
+            w.arrival,
+            ArrivalSpec::Poisson { min_gap, .. } if min_gap == Duration::from_millis(1.5)
+        ));
+    }
+
+    #[test]
+    fn trace_arrival_parses() {
+        let v = yaml::parse(
+            "energy_budget_j: 100\nrequest_period_ms: 40\narrival_kind: trace\ntrace_path: /tmp/gaps.csv\nstrategy: on-off\n",
+        )
+        .unwrap();
+        let w = WorkloadSpec::from_json(&v).unwrap();
+        match &w.arrival {
+            ArrivalSpec::Trace { path, nominal } => {
+                assert_eq!(path, "/tmp/gaps.csv");
+                assert_eq!(*nominal, Duration::from_millis(40.0));
+            }
+            other => panic!("expected trace, got {other:?}"),
+        }
+        assert_eq!(w.arrival.mean_period(), Duration::from_millis(40.0));
+    }
+
+    #[test]
+    fn trace_arrival_requires_path() {
+        let v = yaml::parse(
+            "energy_budget_j: 100\nrequest_period_ms: 40\narrival_kind: trace\nstrategy: on-off\n",
+        )
+        .unwrap();
+        let e = WorkloadSpec::from_json(&v).unwrap_err();
+        assert!(e.path.contains("trace_path"));
     }
 
     #[test]
@@ -567,11 +672,14 @@ workload_item:
     }
 
     #[test]
-    fn strategy_names_round_trip() {
-        for kind in StrategyKind::ALL {
-            assert_eq!(StrategyKind::parse(kind.name()), Some(kind));
+    fn policy_names_round_trip() {
+        for spec in PolicySpec::ALL {
+            assert_eq!(PolicySpec::parse(spec.name()), Some(spec));
         }
-        assert_eq!(StrategyKind::parse("Method1+2"), Some(StrategyKind::IdleWaitingM12));
+        assert_eq!(PolicySpec::parse("Method1+2"), Some(PolicySpec::IdleWaitingM12));
+        // the pre-rename name keeps loading old configs
+        assert_eq!(PolicySpec::parse("adaptive"), Some(PolicySpec::Oracle));
+        assert_eq!(PolicySpec::parse("ema"), Some(PolicySpec::EmaPredictor));
     }
 
     #[test]

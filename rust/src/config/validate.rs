@@ -6,7 +6,7 @@
 //! time (Fig 8 omits On-Off below 36.15 ms).
 
 use crate::config::loader::SimConfig;
-use crate::config::schema::{SpiConfig, StrategyKind};
+use crate::config::schema::{PolicySpec, SpiConfig};
 use crate::device::bitstream::Bitstream;
 use crate::device::config_fsm::ConfigProfile;
 use crate::device::flash::StoredImage;
@@ -99,7 +99,7 @@ fn validate_workload(cfg: &SimConfig) -> Result<(), String> {
     // Feasibility (paper §5.3): under On-Off the FPGA must finish
     // configuration + the workload item within one period, otherwise it
     // "can not be prepared to process an incoming workload".
-    if w.strategy == StrategyKind::OnOff && period < cfg.item.latency_with_config() {
+    if w.policy == PolicySpec::OnOff && period < cfg.item.latency_with_config() {
         return Err(format!(
             "on-off infeasible: request period {:.3} < workload-item latency {:.3} \
              (the paper omits On-Off below 36.15 ms for this reason)",
@@ -107,9 +107,11 @@ fn validate_workload(cfg: &SimConfig) -> Result<(), String> {
         ));
     }
     // Idle-Waiting needs the non-config latency to fit in the period.
+    // (The online policies are allowed anywhere: on too-short periods
+    // they degrade to late serving, which the simulator reports.)
     if matches!(
-        w.strategy,
-        StrategyKind::IdleWaiting | StrategyKind::IdleWaitingM1 | StrategyKind::IdleWaitingM12
+        w.policy,
+        PolicySpec::IdleWaiting | PolicySpec::IdleWaitingM1 | PolicySpec::IdleWaitingM12
     ) && period < cfg.item.latency_without_config()
     {
         return Err(format!(

@@ -1,7 +1,7 @@
 //! Event-driven multi-accelerator workload simulation.
 //!
 //! Connects the [`Engine`](crate::sim::Engine) (discrete events), the
-//! [`MultiAccelScheduler`] (the §4.2-extension policy layer) and the
+//! [`MultiAccelScheduler`] (the §4.2-extension scheduling layer) and the
 //! shared [`ReplayCore`] (energy): requests for several accelerators
 //! arrive as timed events, the scheduler picks service order within its
 //! reordering window, and the core pays configuration/phase/idle energy
@@ -10,14 +10,23 @@
 //! event flow. The per-item energetics run through the same
 //! [`ReplayCore`] as the single-accelerator lifetime simulation, so the
 //! two runtimes cannot drift apart on accounting.
+//!
+//! The gap policy here is genuinely *online*: at each service completion
+//! the [`Policy`](crate::strategies::strategy::Policy) plans the coming
+//! inactivity without knowing when the fabric goes busy next (arrivals
+//! are future events), and `IdleThenOff` timers are honoured mid-gap by
+//! the ledger advance. Clairvoyant policies get no special treatment —
+//! their blind `plan_gap` fallback is used, by construction.
 
 use crate::config::loader::SimConfig;
-use crate::config::schema::FpgaModel;
-use crate::coordinator::scheduler::{Dispatch, MultiAccelScheduler, Policy, SlotRequest};
+use crate::config::schema::{FpgaModel, PolicySpec};
+use crate::coordinator::scheduler::{Dispatch, MultiAccelScheduler, Policy as SchedPolicy, SlotRequest};
 use crate::device::bitstream::Bitstream;
 use crate::device::rails::PowerSaving;
+use crate::energy::analytical::Analytical;
 use crate::sim::{Ctx, Engine, SimTime};
 use crate::strategies::replay::ReplayCore;
+use crate::strategies::strategy::{build, GapContext, GapPlan, Policy as GapPolicy};
 use crate::util::rng::Xoshiro256ss;
 use crate::util::stats::Welford;
 use crate::util::units::{Duration, Energy};
@@ -41,9 +50,10 @@ pub struct MultiSimConfig {
     /// out to several model evaluations). `1` = the paper's duty cycle;
     /// >1 creates queue pressure, which is where scheduling matters.
     pub burst: u64,
-    pub policy: Policy,
-    /// Idle mode between servicing (the gap strategy).
-    pub saving: PowerSaving,
+    pub policy: SchedPolicy,
+    /// Gap policy applied between servicings (built per run; decides
+    /// online, without seeing when the next dispatch comes).
+    pub gap_policy: PolicySpec,
     pub seed: u64,
 }
 
@@ -62,37 +72,81 @@ pub struct MultiSimReport {
 struct State {
     core: ReplayCore,
     scheduler: MultiAccelScheduler,
+    gap_policy: Box<dyn GapPolicy>,
+    /// Plan governing the current inactivity window.
+    current_plan: GapPlan,
+    /// When the current plan took effect (for `IdleThenOff` timers).
+    plan_started: SimTime,
+    last_completion: SimTime,
     busy_until: SimTime,
     served: u64,
     late: u64,
     latency: Welford,
     period: Duration,
-    saving: PowerSaving,
     /// Last time the core's ledger was advanced (for idle accounting).
     ledger_at: SimTime,
     dead: bool,
 }
 
 impl State {
-    /// Advance the energy ledger to `now`, charging idle power for the
-    /// uncovered interval.
+    /// Advance the energy ledger to `now`, spending the inactivity per
+    /// the current gap plan — including a mid-gap `IdleThenOff` cutoff.
     fn idle_until(&mut self, now: SimTime) {
-        if now > self.ledger_at {
-            let dur = now.since(self.ledger_at);
-            if self.core.elapse(self.saving, dur).is_err() {
-                self.dead = true;
-            }
-            self.ledger_at = now;
+        if now <= self.ledger_at {
+            return;
         }
+        let result = match self.current_plan {
+            GapPlan::Idle(saving) => self.core.elapse(saving, now.since(self.ledger_at)),
+            // the fabric was cut at plan time; elapse charges the
+            // (paper-model) free off state
+            GapPlan::PowerOff => self
+                .core
+                .elapse(PowerSaving::BASELINE, now.since(self.ledger_at)),
+            GapPlan::IdleThenOff { saving, timeout } => {
+                let cutoff = self.plan_started + timeout;
+                if self.core.is_ready() && now > cutoff {
+                    // idle up to the timer, cut power, then coast off
+                    let mut r = Ok(());
+                    if cutoff > self.ledger_at {
+                        r = self.core.elapse(saving, cutoff.since(self.ledger_at));
+                    }
+                    if r.is_ok() {
+                        self.core.power_off();
+                        let from = self.ledger_at.max(cutoff);
+                        r = self.core.elapse(saving, now.since(from));
+                    }
+                    r
+                } else {
+                    self.core.elapse(saving, now.since(self.ledger_at))
+                }
+            }
+        };
+        if result.is_err() {
+            self.dead = true;
+        }
+        self.ledger_at = now;
     }
 
     /// Serve one dispatch starting at `now`; returns the completion time.
     fn serve(&mut self, now: SimTime, dispatch: &Dispatch) -> SimTime {
         self.idle_until(now);
+        // feed the realized inactivity back to the online policy
+        if self.served > 0 && now > self.last_completion {
+            self.gap_policy.observe(now.since(self.last_completion));
+        }
         let mut finish = now;
         if dispatch.reconfigure {
             // a switch means loading a different image: power-cycle path
             match self.core.power_cycle_configure("lstm") {
+                Ok(t) => finish += t,
+                Err(_) => {
+                    self.dead = true;
+                    return now;
+                }
+            }
+        } else if !self.core.is_ready() {
+            // the gap policy cut power; pay the reconfiguration preamble
+            match self.core.configure("lstm") {
                 Ok(t) => finish += t,
                 Err(_) => {
                     self.dead = true;
@@ -114,6 +168,17 @@ impl State {
         if finish.since(arrival) > self.period {
             self.late += 1;
         }
+        // plan the coming inactivity at completion time, gap unseen
+        let ctx = GapContext {
+            items_done: self.served,
+            now: finish.as_duration(),
+        };
+        self.current_plan = self.gap_policy.plan_gap(&ctx);
+        if self.current_plan == GapPlan::PowerOff {
+            self.core.power_off();
+        }
+        self.plan_started = finish;
+        self.last_completion = finish;
         finish
     }
 }
@@ -132,6 +197,7 @@ pub fn run(config: &SimConfig, ms: &MultiSimConfig) -> MultiSimReport {
         ),
         config.platform.spi.compressed,
     );
+    let model = Analytical::new(&config.item, config.workload.energy_budget);
 
     let mut state = State {
         scheduler: MultiAccelScheduler::new(
@@ -140,12 +206,15 @@ pub fn run(config: &SimConfig, ms: &MultiSimConfig) -> MultiSimReport {
             config.item.latency_without_config(),
         ),
         core,
+        gap_policy: build(ms.gap_policy, &model),
+        current_plan: GapPlan::Idle(PowerSaving::BASELINE),
+        plan_started: SimTime::ZERO,
+        last_completion: SimTime::ZERO,
         busy_until: SimTime::ZERO,
         served: 0,
         late: 0,
         latency: Welford::new(),
         period,
-        saving: ms.saving,
         ledger_at: SimTime::ZERO,
         dead: false,
     };
@@ -219,18 +288,18 @@ mod tests {
     use super::*;
     use crate::config::paper_default;
 
-    fn base(mix: f64, policy: Policy) -> MultiSimConfig {
+    fn base(mix: f64, policy: SchedPolicy) -> MultiSimConfig {
         MultiSimConfig {
             mix,
             requests: 500,
             burst: 1,
             policy,
-            saving: PowerSaving::M12,
+            gap_policy: PolicySpec::IdleWaitingM12,
             seed: 17,
         }
     }
 
-    fn bursty(mix: f64, policy: Policy) -> MultiSimConfig {
+    fn bursty(mix: f64, policy: SchedPolicy) -> MultiSimConfig {
         MultiSimConfig {
             burst: 4,
             ..base(mix, policy)
@@ -240,7 +309,7 @@ mod tests {
     #[test]
     fn single_slot_configures_once_and_serves_all() {
         let cfg = paper_default();
-        let r = run(&cfg, &base(0.0, Policy::Fifo));
+        let r = run(&cfg, &base(0.0, SchedPolicy::Fifo));
         assert_eq!(r.served, 500);
         assert_eq!(r.reconfigurations, 1);
         assert_eq!(r.p_late, 0.0);
@@ -257,19 +326,19 @@ mod tests {
     #[test]
     fn mixed_slots_cost_switches_under_fifo() {
         let cfg = paper_default();
-        let r = run(&cfg, &base(0.5, Policy::Fifo));
+        let r = run(&cfg, &base(0.5, SchedPolicy::Fifo));
         assert_eq!(r.served, 500);
         assert!(r.reconfigurations > 100, "{}", r.reconfigurations);
         // with one request per period, a switch (36.19 ms) still fits the
         // 40 ms period — no lateness, but plenty of switch energy
         assert_eq!(r.p_late, 0.0);
-        assert!(r.energy > run(&cfg, &base(0.0, Policy::Fifo)).energy * 2.0);
+        assert!(r.energy > run(&cfg, &base(0.0, SchedPolicy::Fifo)).energy * 2.0);
     }
 
     #[test]
     fn bursts_make_fifo_thrash_and_miss_deadlines() {
         let cfg = paper_default();
-        let r = run(&cfg, &bursty(0.5, Policy::Fifo));
+        let r = run(&cfg, &bursty(0.5, SchedPolicy::Fifo));
         assert_eq!(r.served, 500);
         // 4 requests per 40 ms tick, each switch 36 ms → queue backs up
         assert!(r.p_late > 0.1, "p_late={}", r.p_late);
@@ -278,8 +347,8 @@ mod tests {
     #[test]
     fn batching_reduces_switches_energy_and_lateness() {
         let cfg = paper_default();
-        let fifo = run(&cfg, &bursty(0.3, Policy::Fifo));
-        let batched = run(&cfg, &bursty(0.3, Policy::BatchBySlot { window: 8 }));
+        let fifo = run(&cfg, &bursty(0.3, SchedPolicy::Fifo));
+        let batched = run(&cfg, &bursty(0.3, SchedPolicy::BatchBySlot { window: 8 }));
         assert_eq!(fifo.served, batched.served);
         assert!(
             batched.reconfigurations < fifo.reconfigurations,
@@ -295,17 +364,52 @@ mod tests {
     #[test]
     fn deterministic_per_seed() {
         let cfg = paper_default();
-        let a = run(&cfg, &base(0.25, Policy::Fifo));
-        let b = run(&cfg, &base(0.25, Policy::Fifo));
+        let a = run(&cfg, &base(0.25, SchedPolicy::Fifo));
+        let b = run(&cfg, &base(0.25, SchedPolicy::Fifo));
         assert_eq!(a.served, b.served);
         assert_eq!(a.reconfigurations, b.reconfigurations);
         assert_eq!(a.energy, b.energy);
     }
 
     #[test]
+    fn onoff_gap_policy_reconfigures_every_service() {
+        let cfg = paper_default();
+        let r = run(
+            &cfg,
+            &MultiSimConfig {
+                gap_policy: PolicySpec::OnOff,
+                ..base(0.0, SchedPolicy::Fifo)
+            },
+        );
+        assert_eq!(r.served, 500);
+        // power cut after every completion → a configuration per service
+        assert_eq!(r.reconfigurations, 500);
+        // off gaps are free: cheaper than idling at M12 over 40 ms periods
+        let iw = run(&cfg, &base(0.0, SchedPolicy::Fifo));
+        assert!(r.energy > iw.energy, "on-off pays per-item config energy");
+    }
+
+    #[test]
+    fn timeout_gap_policy_never_fires_within_the_period() {
+        // 40 ms gaps are far below the M12 τ (~499 ms): the timer never
+        // expires, so the run is identical to idle-waiting M12
+        let cfg = paper_default();
+        let timeout = run(
+            &cfg,
+            &MultiSimConfig {
+                gap_policy: PolicySpec::Timeout,
+                ..base(0.0, SchedPolicy::Fifo)
+            },
+        );
+        let iw = run(&cfg, &base(0.0, SchedPolicy::Fifo));
+        assert_eq!(timeout.reconfigurations, 1);
+        assert_eq!(timeout.energy, iw.energy);
+    }
+
+    #[test]
     fn event_count_and_time_are_sane() {
         let cfg = paper_default();
-        let r = run(&cfg, &base(0.1, Policy::Fifo));
+        let r = run(&cfg, &base(0.1, SchedPolicy::Fifo));
         // 500 arrivals at 40 ms: run spans ≥ 499 periods
         assert!(r.sim_time.secs() >= 499.0 * 0.040);
         assert!(r.mean_latency.millis() > 0.0);

@@ -127,6 +127,15 @@ impl TraceReplay {
         TraceReplay { gaps, pos: 0 }
     }
 
+    /// Number of gaps in one cycle of the trace.
+    pub fn len(&self) -> usize {
+        self.gaps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gaps.is_empty()
+    }
+
     /// Load a gap trace from a text/CSV file: one inter-arrival gap in
     /// milliseconds per line; `#` comments, blank lines and an optional
     /// `gap_ms` header are skipped.
@@ -180,21 +189,21 @@ impl ArrivalProcess for TraceReplay {
     }
 }
 
-/// Build an arrival process from its config spec.
-pub fn build(spec: &ArrivalSpec, seed: u64) -> Box<dyn ArrivalProcess> {
-    match spec {
+/// Build an arrival process from its config spec. Only `Trace` touches
+/// the filesystem (loading the gap file), hence the `io::Result`.
+pub fn build(spec: &ArrivalSpec, seed: u64) -> std::io::Result<Box<dyn ArrivalProcess>> {
+    Ok(match spec {
         ArrivalSpec::Periodic { period } => Box::new(Periodic { period: *period }),
         ArrivalSpec::Jittered {
             period,
             std_dev,
             min_period,
         } => Box::new(Jittered::new(*period, *std_dev, *min_period, seed)),
-        ArrivalSpec::Poisson { mean_period } => Box::new(Poisson::new(
-            *mean_period,
-            Duration::from_millis(0.05),
-            seed,
-        )),
-    }
+        ArrivalSpec::Poisson { mean_period, min_gap } => {
+            Box::new(Poisson::new(*mean_period, *min_gap, seed))
+        }
+        ArrivalSpec::Trace { path, .. } => Box::new(TraceReplay::from_file(path)?),
+    })
 }
 
 #[cfg(test)]
@@ -302,14 +311,64 @@ mod tests {
                 period: Duration::from_millis(40.0),
             },
             0,
-        );
+        )
+        .unwrap();
         assert!(p.label().starts_with("periodic"));
         let p = build(
             &ArrivalSpec::Poisson {
                 mean_period: Duration::from_millis(40.0),
+                min_gap: Duration::from_millis(ArrivalSpec::DEFAULT_POISSON_MIN_GAP_MS),
             },
             0,
-        );
+        )
+        .unwrap();
         assert!(p.label().starts_with("poisson"));
+    }
+
+    #[test]
+    fn build_poisson_honours_the_config_min_gap() {
+        let mut p = build(
+            &ArrivalSpec::Poisson {
+                mean_period: Duration::from_millis(5.0),
+                min_gap: Duration::from_millis(4.0),
+            },
+            11,
+        )
+        .unwrap();
+        for _ in 0..1_000 {
+            assert!(p.next_gap().millis() >= 4.0);
+        }
+    }
+
+    #[test]
+    fn build_trace_spec_loads_the_file() {
+        let dir = std::env::temp_dir().join("idlewait_trace_spec");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("gaps.csv");
+        std::fs::write(&path, "25.0\n75.0\n").unwrap();
+        let mut p = build(
+            &ArrivalSpec::Trace {
+                path: path.to_str().unwrap().to_string(),
+                nominal: Duration::from_millis(50.0),
+            },
+            0,
+        )
+        .unwrap();
+        assert_eq!(p.next_gap().millis(), 25.0);
+        assert_eq!(p.next_gap().millis(), 75.0);
+        assert_eq!(p.mean().millis(), 50.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn build_trace_spec_missing_file_is_io_error() {
+        assert!(build(
+            &ArrivalSpec::Trace {
+                path: "/nonexistent/gaps.csv".into(),
+                nominal: Duration::from_millis(40.0),
+            },
+            0,
+        )
+        .is_err());
     }
 }

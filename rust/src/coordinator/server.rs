@@ -22,7 +22,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::requests::ArrivalProcess;
 use crate::runtime::inference::{LstmRuntime, Variant};
 use crate::strategies::replay::ReplayCore;
-use crate::strategies::strategy::Strategy;
+use crate::strategies::strategy::{decide, GapContext, Policy};
 use crate::util::units::Duration;
 
 /// One served request's outcome.
@@ -92,7 +92,7 @@ impl SensorSource {
 pub fn serve(
     cfg: &ServerConfig<'_>,
     runtime: &LstmRuntime,
-    strategy: &dyn Strategy,
+    policy: &mut dyn Policy,
     arrivals: &mut dyn ArrivalProcess,
 ) -> Result<ServeReport> {
     let sim = cfg.sim;
@@ -103,10 +103,12 @@ pub fn serve(
     let (rows, cols) = runtime.window_shape();
     let mut sensor = SensorSource::new(rows, cols, sim.workload.seed ^ 0x5EED);
     let mut budget_exhausted = false;
+    let mut config_time = sim.item.configuration.time;
+    let item_latency = sim.item.latency_without_config();
 
     log::info!(
-        "serving: strategy={} arrivals={} variant={:?} max={}",
-        strategy.label(),
+        "serving: policy={} arrivals={} variant={:?} max={}",
+        policy.label(),
         arrivals.label(),
         cfg.variant,
         cfg.max_requests
@@ -114,9 +116,14 @@ pub fn serve(
 
     for request_id in 0..cfg.max_requests {
         // 1. configure if needed (energy)
-        if !core.is_ready() && core.configure("lstm").is_err() {
-            budget_exhausted = true;
-            break;
+        if !core.is_ready() {
+            match core.configure("lstm") {
+                Ok(t) => config_time = t,
+                Err(_) => {
+                    budget_exhausted = true;
+                    break;
+                }
+            }
         }
         // 2. energy for the active phases (Table 2 timings)
         if core.run_phases().is_err() {
@@ -133,18 +140,22 @@ pub fn serve(
             host_latency: result.latency,
         });
 
-        // 4. gap handling per strategy (shared gap-policy core)
+        // 4. gap handling per policy (shared gap-plan execution core).
+        // The serving loop is offline in the same sense as the lifetime
+        // DES (it draws the gap before spending it), so oracle policies
+        // get clairvoyance via `decide`; online policies plan blind and
+        // then observe the realized gap.
         let gap = arrivals.next_gap();
-        let busy = sim.item.latency_without_config();
-        let idle_time = if gap.secs() > busy.secs() {
-            gap - busy
-        } else {
-            Duration::ZERO
+        let gap_ctx = GapContext {
+            items_done: request_id + 1,
+            now: core.board.now.as_duration(),
         };
-        if core.apply_gap(strategy.gap_action(gap), idle_time).is_err() {
+        let plan = decide(policy, &gap_ctx, gap);
+        if core.execute_plan(plan, gap, config_time, item_latency).is_err() {
             budget_exhausted = true;
             break;
         }
+        policy.observe(gap);
     }
 
     metrics.sim_energy = core.board.fpga_energy;
@@ -185,7 +196,7 @@ mod tests {
         let mut arr = Periodic {
             period: Duration::from_millis(40.0),
         };
-        let report = serve(&cfg, &rt, &IdleWaiting::baseline(), &mut arr).unwrap();
+        let report = serve(&cfg, &rt, &mut IdleWaiting::baseline(), &mut arr).unwrap();
         assert_eq!(report.metrics.requests, 25);
         assert_eq!(report.configurations, 1);
         assert!(!report.budget_exhausted);
@@ -211,7 +222,7 @@ mod tests {
         let mut arr = Periodic {
             period: Duration::from_millis(40.0),
         };
-        let report = serve(&cfg, &rt, &OnOff, &mut arr).unwrap();
+        let report = serve(&cfg, &rt, &mut OnOff, &mut arr).unwrap();
         assert_eq!(report.configurations, 10);
         assert!(report.metrics.sim_energy.millijoules() > 10.0 * 11.9);
     }
@@ -228,7 +239,7 @@ mod tests {
         let mut arr = Periodic {
             period: Duration::from_millis(40.0),
         };
-        let report = serve(&cfg, &rt, &IdleWaiting::method12(), &mut arr).unwrap();
+        let report = serve(&cfg, &rt, &mut IdleWaiting::method12(), &mut arr).unwrap();
         assert_eq!(report.metrics.requests, 5);
     }
 

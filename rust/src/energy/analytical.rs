@@ -13,7 +13,7 @@
 //! * `E_Item^IdleWait = E_active` (configuration-related overheads zero)
 //! * `E_Idle         = P_idle · (T_req − T_latency_noconfig)`
 
-use crate::config::schema::{StrategyKind, WorkloadItemSpec};
+use crate::config::schema::{PolicySpec, WorkloadItemSpec};
 use crate::device::rails::{PowerSaving, RailSet};
 use crate::util::units::{Duration, Energy, Power};
 
@@ -56,22 +56,28 @@ impl ItemEnergetics {
         self.e_transient + self.e_config
     }
 
-    /// Idle power for a strategy: the baseline comes from the measured
+    /// Idle power for a policy: the baseline comes from the measured
     /// item description; the power-saving methods from the rail model.
-    pub fn idle_power(&self, kind: StrategyKind) -> Power {
+    /// The advanced policies idle at M1+2 — the same mode
+    /// `strategies::strategy::build` constructs them with, so the closed
+    /// form describes the policy that actually runs.
+    pub fn idle_power(&self, kind: PolicySpec) -> Power {
         match kind {
-            StrategyKind::IdleWaiting => self.idle_power_baseline,
-            StrategyKind::IdleWaitingM1 => RailSet::idle_power(PowerSaving::M1),
-            StrategyKind::IdleWaitingM12 => RailSet::idle_power(PowerSaving::M12),
-            StrategyKind::OnOff | StrategyKind::Adaptive => self.idle_power_baseline,
+            PolicySpec::IdleWaiting => self.idle_power_baseline,
+            PolicySpec::IdleWaitingM1 => RailSet::idle_power(PowerSaving::M1),
+            PolicySpec::IdleWaitingM12
+            | PolicySpec::Oracle
+            | PolicySpec::Timeout
+            | PolicySpec::EmaPredictor => RailSet::idle_power(PowerSaving::M12),
+            PolicySpec::OnOff => self.idle_power_baseline,
         }
     }
 }
 
-/// Result of an analytical evaluation for one (strategy, T_req) point.
+/// Result of an analytical evaluation for one (policy, T_req) point.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Prediction {
-    pub strategy: StrategyKind,
+    pub policy: PolicySpec,
     pub t_req: Duration,
     /// Eq 3: maximum executable workload items. `None` = infeasible
     /// (On-Off with T_req below the item latency — Fig 8's gap).
@@ -149,38 +155,59 @@ impl Analytical {
         Some((numerator / per_item).floor() as u64)
     }
 
-    /// Evaluate Eqs 3–4 for a strategy at `t_req`.
-    pub fn predict(&self, strategy: StrategyKind, t_req: Duration) -> Prediction {
-        let (n_max, e_per_item) = match strategy {
-            StrategyKind::OnOff => (self.n_max_onoff(t_req), self.item.e_item_onoff()),
-            StrategyKind::IdleWaiting
-            | StrategyKind::IdleWaitingM1
-            | StrategyKind::IdleWaitingM12 => {
-                let p_idle = self.item.idle_power(strategy);
+    /// Evaluate Eqs 3–4 for a policy at `t_req`. The online policies'
+    /// closed forms assume strictly periodic arrivals (the only case with
+    /// a closed form): the oracle picks the per-item winner; `Timeout`
+    /// additionally pays the ski-rental premium `P_idle·τ` per gap
+    /// whenever powering off wins; `EmaPredictor` locks onto the winner
+    /// after one observation, so asymptotically it equals the oracle.
+    pub fn predict(&self, policy: PolicySpec, t_req: Duration) -> Prediction {
+        let (n_max, e_per_item) = match policy {
+            PolicySpec::OnOff => (self.n_max_onoff(t_req), self.item.e_item_onoff()),
+            PolicySpec::IdleWaiting
+            | PolicySpec::IdleWaitingM1
+            | PolicySpec::IdleWaitingM12 => {
+                let p_idle = self.item.idle_power(policy);
                 (
                     self.n_max_idle_waiting(t_req, p_idle),
                     self.item.e_active + self.e_idle(t_req, p_idle),
                 )
             }
-            StrategyKind::Adaptive => {
-                // the adaptive strategy picks the better of the two
-                let onoff = self.predict(StrategyKind::OnOff, t_req);
-                let iw = self.predict(StrategyKind::IdleWaiting, t_req);
+            PolicySpec::Oracle | PolicySpec::EmaPredictor => {
+                // per-gap winner at the M1+2 idle mode these policies are
+                // built with; EMA degenerates to it after one gap
+                let onoff = self.predict(PolicySpec::OnOff, t_req);
+                let iw = self.predict(PolicySpec::IdleWaitingM12, t_req);
                 return if onoff.n_max.unwrap_or(0) >= iw.n_max.unwrap_or(0) {
+                    Prediction { policy, ..onoff }
+                } else {
+                    Prediction { policy, ..iw }
+                };
+            }
+            PolicySpec::Timeout => {
+                let p_idle = self.item.idle_power(policy);
+                let iw = self.predict(PolicySpec::IdleWaitingM12, t_req);
+                let onoff = self.predict(PolicySpec::OnOff, t_req);
+                return if onoff.n_max.unwrap_or(0) >= iw.n_max.unwrap_or(0) {
+                    // every gap: idle until τ expires, then power off
+                    let tau = crate::energy::crossover::ski_rental_timeout(self, p_idle);
+                    let per_item = self.item.e_item_onoff() + p_idle * tau;
+                    let n = Some((self.budget / per_item).floor() as u64);
                     Prediction {
-                        strategy: StrategyKind::Adaptive,
-                        ..onoff
+                        policy,
+                        t_req,
+                        n_max: n,
+                        lifetime: t_req * n.unwrap_or(0) as f64,
+                        e_per_item: per_item,
                     }
                 } else {
-                    Prediction {
-                        strategy: StrategyKind::Adaptive,
-                        ..iw
-                    }
+                    // the timer never fires before the next request
+                    Prediction { policy, ..iw }
                 };
             }
         };
         Prediction {
-            strategy,
+            policy,
             t_req,
             n_max,
             lifetime: t_req * n_max.unwrap_or(0) as f64, // Eq 4
@@ -248,8 +275,8 @@ mod tests {
     #[test]
     fn idle_waiting_beats_onoff_2_23x_at_40ms() {
         let m = model();
-        let iw = m.predict(StrategyKind::IdleWaiting, ms(40.0)).n_max.unwrap();
-        let onoff = m.predict(StrategyKind::OnOff, ms(40.0)).n_max.unwrap();
+        let iw = m.predict(PolicySpec::IdleWaiting, ms(40.0)).n_max.unwrap();
+        let onoff = m.predict(PolicySpec::OnOff, ms(40.0)).n_max.unwrap();
         let ratio = iw as f64 / onoff as f64;
         assert!((ratio - 2.23).abs() < 0.005, "ratio={ratio}");
     }
@@ -258,8 +285,8 @@ mod tests {
     fn method12_yields_12_39x_lifetime_at_40ms() {
         // paper conclusion: ≈12.39× the On-Off items/lifetime at 40 ms
         let m = model();
-        let m12 = m.predict(StrategyKind::IdleWaitingM12, ms(40.0)).n_max.unwrap();
-        let onoff = m.predict(StrategyKind::OnOff, ms(40.0)).n_max.unwrap();
+        let m12 = m.predict(PolicySpec::IdleWaitingM12, ms(40.0)).n_max.unwrap();
+        let onoff = m.predict(PolicySpec::OnOff, ms(40.0)).n_max.unwrap();
         let ratio = m12 as f64 / onoff as f64;
         assert!((ratio - 12.39).abs() < 0.05, "ratio={ratio}");
     }
@@ -268,7 +295,7 @@ mod tests {
     fn idle_waiting_lifetime_approx_8_58h() {
         let m = model();
         for t in [10.0, 40.0, 80.0, 120.0] {
-            let p = m.predict(StrategyKind::IdleWaiting, ms(t));
+            let p = m.predict(PolicySpec::IdleWaiting, ms(t));
             assert!(
                 (p.lifetime.hours() - 8.58).abs() < 0.03,
                 "t={t}: {}h",
@@ -280,8 +307,8 @@ mod tests {
     #[test]
     fn onoff_lifetime_linear_in_t_req() {
         let m = model();
-        let l40 = m.predict(StrategyKind::OnOff, ms(40.0)).lifetime;
-        let l80 = m.predict(StrategyKind::OnOff, ms(80.0)).lifetime;
+        let l40 = m.predict(PolicySpec::OnOff, ms(40.0)).lifetime;
+        let l80 = m.predict(PolicySpec::OnOff, ms(80.0)).lifetime;
         assert!((l80 / l40 - 2.0).abs() < 1e-9);
     }
 
@@ -311,16 +338,50 @@ mod tests {
     }
 
     #[test]
-    fn adaptive_picks_the_winner() {
+    fn oracle_picks_the_winner() {
         let m = model();
-        // short period → Idle-Waiting wins
-        let a = m.predict(StrategyKind::Adaptive, ms(40.0));
-        let iw = m.predict(StrategyKind::IdleWaiting, ms(40.0));
+        // short period → Idle-Waiting (at the oracle's M1+2 mode) wins
+        let a = m.predict(PolicySpec::Oracle, ms(40.0));
+        let iw = m.predict(PolicySpec::IdleWaitingM12, ms(40.0));
         assert_eq!(a.n_max, iw.n_max);
-        // long period → On-Off wins
-        let a = m.predict(StrategyKind::Adaptive, ms(200.0));
-        let onoff = m.predict(StrategyKind::OnOff, ms(200.0));
+        // beyond the 499.06 ms M1+2 crossover → On-Off wins
+        let a = m.predict(PolicySpec::Oracle, ms(600.0));
+        let onoff = m.predict(PolicySpec::OnOff, ms(600.0));
         assert_eq!(a.n_max, onoff.n_max);
+    }
+
+    #[test]
+    fn timeout_pays_the_ski_rental_premium_when_off_wins() {
+        let m = model();
+        let p_idle = m.item.idle_power(PolicySpec::Timeout);
+        // below the M1+2 crossover the timer never fires: identical to IW
+        let t = m.predict(PolicySpec::Timeout, ms(200.0));
+        let iw = m.predict(PolicySpec::IdleWaitingM12, ms(200.0));
+        assert_eq!(t.n_max, iw.n_max);
+        // above the crossover: On-Off plus P_idle·τ per item
+        let t = m.predict(PolicySpec::Timeout, ms(600.0));
+        let onoff = m.predict(PolicySpec::OnOff, ms(600.0));
+        let tau = crate::energy::crossover::ski_rental_timeout(&m, p_idle);
+        let premium = p_idle * tau;
+        assert!(t.n_max.unwrap() < onoff.n_max.unwrap());
+        assert!(
+            (t.e_per_item - (m.item.e_item_onoff() + premium)).abs().millijoules() < 1e-9
+        );
+        // never worse than 2× the oracle's per-item energy
+        let oracle = m.predict(PolicySpec::Oracle, ms(600.0));
+        assert!(t.e_per_item <= oracle.e_per_item * 2.0 + m.item.e_active);
+    }
+
+    #[test]
+    fn ema_prediction_equals_oracle_closed_form() {
+        let m = model();
+        for t_ms in [40.0, 200.0, 600.0] {
+            assert_eq!(
+                m.predict(PolicySpec::EmaPredictor, ms(t_ms)).n_max,
+                m.predict(PolicySpec::Oracle, ms(t_ms)).n_max,
+                "t={t_ms}"
+            );
+        }
     }
 
     #[test]
@@ -338,8 +399,8 @@ mod tests {
     #[test]
     fn method_idle_powers_from_rail_model() {
         let m = model();
-        assert!((m.item.idle_power(StrategyKind::IdleWaiting).milliwatts() - 134.3).abs() < 1e-9);
-        assert!((m.item.idle_power(StrategyKind::IdleWaitingM1).milliwatts() - 34.2).abs() < 1e-9);
-        assert!((m.item.idle_power(StrategyKind::IdleWaitingM12).milliwatts() - 24.0).abs() < 0.05);
+        assert!((m.item.idle_power(PolicySpec::IdleWaiting).milliwatts() - 134.3).abs() < 1e-9);
+        assert!((m.item.idle_power(PolicySpec::IdleWaitingM1).milliwatts() - 34.2).abs() < 1e-9);
+        assert!((m.item.idle_power(PolicySpec::IdleWaitingM12).milliwatts() - 24.0).abs() < 0.05);
     }
 }

@@ -21,6 +21,17 @@ pub fn asymptotic(model: &Analytical, p_idle: Power) -> Duration {
     surplus / p_idle + model.item.latency_without_config
 }
 
+/// The ski-rental break-even timeout τ for the `Timeout` gap policy: the
+/// idle duration whose energy equals one power cycle + reconfiguration
+/// (the "buy" cost `E_transient + E_config`). Idling up to τ and then
+/// cutting power is the classic deterministic 2-competitive rule against
+/// the clairvoyant oracle. Equals [`asymptotic`] minus the item latency,
+/// because the crossover is stated in whole-gap terms while τ is an idle
+/// window.
+pub fn ski_rental_timeout(model: &Analytical, p_idle: Power) -> Duration {
+    (model.item.e_item_onoff() - model.item.e_active) / p_idle
+}
+
 /// Exact finite-budget crossover by bisection: the largest `T_req` (within
 /// `[lo, hi]`, to `tol`) where Idle-Waiting still executes at least as many
 /// items as On-Off. Returns `None` if there is no sign change in the range.
@@ -55,7 +66,7 @@ pub fn exact(
 mod tests {
     use super::*;
     use crate::config::paper_default;
-    use crate::config::schema::StrategyKind;
+    use crate::config::schema::PolicySpec;
     use crate::util::units::Energy;
 
     fn model() -> Analytical {
@@ -66,14 +77,14 @@ mod tests {
     #[test]
     fn baseline_crossover_is_89_21ms() {
         let m = model();
-        let t = asymptotic(&m, m.item.idle_power(StrategyKind::IdleWaiting));
+        let t = asymptotic(&m, m.item.idle_power(PolicySpec::IdleWaiting));
         assert!((t.millis() - 89.21).abs() < 0.02, "t={}", t.millis());
     }
 
     #[test]
     fn method12_crossover_is_499_06ms() {
         let m = model();
-        let t = asymptotic(&m, m.item.idle_power(StrategyKind::IdleWaitingM12));
+        let t = asymptotic(&m, m.item.idle_power(PolicySpec::IdleWaitingM12));
         assert!((t.millis() - 499.06).abs() < 0.1, "t={}", t.millis());
     }
 
@@ -81,7 +92,7 @@ mod tests {
     fn method1_crossover_around_350ms() {
         // not quoted by the paper; implied by its model (34.2 mW)
         let m = model();
-        let t = asymptotic(&m, m.item.idle_power(StrategyKind::IdleWaitingM1));
+        let t = asymptotic(&m, m.item.idle_power(PolicySpec::IdleWaitingM1));
         assert!((t.millis() - 350.2).abs() < 0.5, "t={}", t.millis());
     }
 
@@ -89,9 +100,9 @@ mod tests {
     fn exact_agrees_with_asymptotic_at_paper_resolution() {
         let m = model();
         for kind in [
-            StrategyKind::IdleWaiting,
-            StrategyKind::IdleWaitingM1,
-            StrategyKind::IdleWaitingM12,
+            PolicySpec::IdleWaiting,
+            PolicySpec::IdleWaitingM1,
+            PolicySpec::IdleWaitingM12,
         ] {
             let p = m.item.idle_power(kind);
             let closed = asymptotic(&m, p);
@@ -115,7 +126,7 @@ mod tests {
     #[test]
     fn no_crossover_when_range_misses_it() {
         let m = model();
-        let p = m.item.idle_power(StrategyKind::IdleWaiting);
+        let p = m.item.idle_power(PolicySpec::IdleWaiting);
         assert!(exact(
             &m,
             p,
@@ -144,11 +155,32 @@ mod tests {
     }
 
     #[test]
+    fn ski_rental_timeout_is_crossover_minus_latency() {
+        let m = model();
+        for kind in [
+            PolicySpec::IdleWaiting,
+            PolicySpec::IdleWaitingM1,
+            PolicySpec::IdleWaitingM12,
+        ] {
+            let p = m.item.idle_power(kind);
+            let tau = ski_rental_timeout(&m, p);
+            let cross = asymptotic(&m, p);
+            assert!(
+                ((cross - tau).millis() - m.item.latency_without_config.millis()).abs() < 1e-12,
+                "{kind}"
+            );
+            // τ·P_idle must equal the power-cycle "buy" cost exactly
+            let buy = m.item.e_item_onoff() - m.item.e_active;
+            assert!((tau * p - buy).abs().millijoules() < 1e-12, "{kind}");
+        }
+    }
+
+    #[test]
     fn bigger_budget_does_not_move_asymptotic_crossover() {
         let cfg = paper_default();
         let small = Analytical::new(&cfg.item, Energy::from_joules(100.0));
         let large = Analytical::new(&cfg.item, Energy::from_joules(100_000.0));
-        let p = small.item.idle_power(StrategyKind::IdleWaiting);
+        let p = small.item.idle_power(PolicySpec::IdleWaiting);
         assert_eq!(
             asymptotic(&small, p).millis(),
             asymptotic(&large, p).millis()

@@ -14,7 +14,7 @@
 //!    energy.
 
 use crate::config::loader::SimConfig;
-use crate::config::schema::StrategyKind;
+use crate::config::schema::PolicySpec;
 use crate::coordinator::scheduler::{MultiAccelScheduler, Policy, SlotRequest};
 use crate::device::calib::FLASH_STANDBY_POWER;
 use crate::energy::analytical::Analytical;
@@ -43,9 +43,9 @@ pub fn flash_floor(config: &SimConfig) -> FlashFloorAblation {
 pub fn flash_floor_threaded(config: &SimConfig, runner: &SweepRunner) -> FlashFloorAblation {
     let model = Analytical::new(&config.item, config.workload.energy_budget);
     let grid = Grid::new(vec![
-        ("baseline", StrategyKind::IdleWaiting),
-        ("method 1", StrategyKind::IdleWaitingM1),
-        ("method 1+2", StrategyKind::IdleWaitingM12),
+        ("baseline", PolicySpec::IdleWaiting),
+        ("method 1", PolicySpec::IdleWaitingM1),
+        ("method 1+2", PolicySpec::IdleWaitingM12),
     ]);
     let rows = runner.run(&grid, |cell| {
         let (label, kind) = *cell.params;

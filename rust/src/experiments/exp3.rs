@@ -8,7 +8,7 @@
 //! combined 12.39× headline vs On-Off at 40 ms.
 
 use crate::config::loader::SimConfig;
-use crate::config::schema::StrategyKind;
+use crate::config::schema::PolicySpec;
 use crate::device::fpga::Fpga;
 use crate::device::rails::PowerSaving;
 use crate::energy::analytical::Analytical;
@@ -49,9 +49,9 @@ pub fn run(config: &SimConfig, step_ms: f64) -> Exp3Result {
 /// The idle-mode sweep as a grid declaration on the sweep engine.
 pub fn run_threaded(config: &SimConfig, step_ms: f64, runner: &SweepRunner) -> Exp3Result {
     let model = Analytical::new(&config.item, config.workload.energy_budget);
-    let p_base = model.item.idle_power(StrategyKind::IdleWaiting);
-    let p_m1 = model.item.idle_power(StrategyKind::IdleWaitingM1);
-    let p_m12 = model.item.idle_power(StrategyKind::IdleWaitingM12);
+    let p_base = model.item.idle_power(PolicySpec::IdleWaiting);
+    let p_m1 = model.item.idle_power(PolicySpec::IdleWaitingM1);
+    let p_m12 = model.item.idle_power(PolicySpec::IdleWaitingM12);
 
     let grid = Grid::stepped(paper::exp2::T_REQ_MIN_MS, paper::exp2::T_REQ_MAX_MS, step_ms);
     let samples = runner.run(&grid, |cell| {

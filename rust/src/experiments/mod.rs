@@ -8,12 +8,14 @@
 //! | Table 2, Figs 8–9, 89.21 ms crossover | [`exp2`] |
 //! | Table 3, Figs 10–11, 499.06 ms, 12.39× | [`exp3`] |
 //! | §5.3 validation (2.8%/2.7%) | [`validation`] |
+//! | §7 future work: online policies × irregular arrivals | [`exp4_policies`] |
 //! | Published values | [`paper`] |
 
 pub mod ablation;
 pub mod exp1;
 pub mod exp2;
 pub mod exp3;
+pub mod exp4_policies;
 pub mod fig2;
 pub mod paper;
 pub mod validation;

@@ -13,7 +13,7 @@
 //!   origin of the paper's few-percent hardware-vs-simulator discrepancy.
 
 use crate::config::loader::SimConfig;
-use crate::config::schema::StrategyKind;
+use crate::config::schema::PolicySpec;
 use crate::coordinator::requests::Periodic;
 use crate::energy::analytical::Analytical;
 use crate::experiments::paper;
@@ -23,10 +23,10 @@ use crate::strategies::strategy::build;
 use crate::util::table::{fcount, fnum, Table};
 use crate::util::units::Duration;
 
-/// One strategy's validation row.
+/// One policy's validation row.
 #[derive(Debug, Clone)]
 pub struct Row {
-    pub strategy: StrategyKind,
+    pub policy: PolicySpec,
     pub analytical_items: u64,
     pub des_items: u64,
     pub items_gap: f64,
@@ -49,24 +49,24 @@ pub fn run(config: &SimConfig, t_req_ms: f64) -> ValidationResult {
     run_threaded(config, t_req_ms, &SweepRunner::single())
 }
 
-/// The per-strategy validation as a grid on the sweep engine — each cell
-/// is a full DES lifetime run, so the two strategies validate in
+/// The per-policy validation as a grid on the sweep engine — each cell
+/// is a full DES lifetime run, so the two policies validate in
 /// parallel when the runner has ≥ 2 threads.
 pub fn run_threaded(config: &SimConfig, t_req_ms: f64, runner: &SweepRunner) -> ValidationResult {
     let model = Analytical::new(&config.item, config.workload.energy_budget);
     let t_req = Duration::from_millis(t_req_ms);
-    let grid = Grid::new(vec![StrategyKind::OnOff, StrategyKind::IdleWaiting]);
+    let grid = Grid::new(vec![PolicySpec::OnOff, PolicySpec::IdleWaiting]);
     let rows = runner.run(&grid, |cell| {
         let kind = *cell.params;
         let prediction = model.predict(kind, t_req);
         let analytical_items = prediction.n_max.expect("feasible period");
-        let strategy = build(kind, &model);
+        let mut policy = build(kind, &model);
         let mut arrivals = Periodic { period: t_req };
-        let report: SimReport = simulate(config, strategy.as_ref(), &mut arrivals);
+        let report: SimReport = simulate(config, policy.as_mut(), &mut arrivals);
         let des_lifetime_h = report.lifetime.hours();
         let analytical_lifetime_h = prediction.lifetime.hours();
         Row {
-            strategy: kind,
+            policy: kind,
             analytical_items,
             des_items: report.items,
             items_gap: (report.items as f64 - analytical_items as f64).abs()
@@ -82,16 +82,16 @@ pub fn run_threaded(config: &SimConfig, t_req_ms: f64, runner: &SweepRunner) -> 
 }
 
 impl ValidationResult {
-    pub fn row(&self, kind: StrategyKind) -> &Row {
+    pub fn row(&self, kind: PolicySpec) -> &Row {
         self.rows
             .iter()
-            .find(|r| r.strategy == kind)
-            .expect("strategy present")
+            .find(|r| r.policy == kind)
+            .expect("policy present")
     }
 
     pub fn render(&self) -> String {
         let mut t = Table::new(&[
-            "strategy",
+            "policy",
             "items (Eq 3)",
             "items (DES)",
             "gap (%)",
@@ -107,7 +107,7 @@ impl ValidationResult {
         ));
         for r in &self.rows {
             t.row(&[
-                r.strategy.name().into(),
+                r.policy.name().into(),
                 fcount(r.analytical_items),
                 fcount(r.des_items),
                 fnum(r.items_gap * 100.0, 4),
@@ -134,11 +134,11 @@ mod tests {
             assert!(
                 row.items_gap < 0.002,
                 "{}: items {} vs {}",
-                row.strategy,
+                row.policy,
                 row.des_items,
                 row.analytical_items
             );
-            assert!(row.lifetime_gap < 0.002, "{}", row.strategy);
+            assert!(row.lifetime_gap < 0.002, "{}", row.policy);
             // the instrument gap is nonzero but bounded (paper-level few %)
             assert!(row.monitor_rel_error < 0.03, "{}", row.monitor_rel_error);
         }
@@ -147,7 +147,7 @@ mod tests {
     #[test]
     fn onoff_des_item_count_matches_paper() {
         let result = run(&paper_default(), 40.0);
-        let onoff = result.row(StrategyKind::OnOff);
+        let onoff = result.row(PolicySpec::OnOff);
         assert!(onoff.des_items.abs_diff(paper::exp2::ONOFF_ITEMS) < 300, "{}", onoff.des_items);
     }
 

@@ -1,15 +1,23 @@
-//! Power-management strategies (paper §4.2) and the strategy-level
-//! discrete-event simulation that evaluates them against the budget.
+//! The gap-policy subsystem (paper §4.2 + §7 future work) and the
+//! policy-level discrete-event simulation that evaluates policies against
+//! the energy budget.
 //!
-//! `replay` holds the phase-replay / gap-policy core shared by this
-//! module's lifetime simulation and the multi-accelerator simulation in
-//! `coordinator::multi_sim` — one energy-accounting code path for every
+//! `strategy` defines [`Policy`]/[`GapPlan`] (stateful, observation-driven
+//! gap decisions — the clairvoyant upper bound lives behind the
+//! `OraclePolicy` escape hatch); `replay` holds [`ReplayCore`], the
+//! phase-replay / gap-plan execution core shared by this module's
+//! lifetime simulation, the multi-accelerator simulation in
+//! `coordinator::multi_sim` and the serving loop in
+//! `coordinator::server` — one energy-accounting code path for every
 //! event-driven runtime.
 
 pub mod replay;
 pub mod simulate;
 pub mod strategy;
 
-pub use replay::{item_phases, ReplayCore};
-pub use simulate::{simulate, SimReport};
-pub use strategy::{build, Adaptive, GapAction, IdleWaiting, OnOff, Strategy};
+pub use replay::{item_phases, GapExecution, ReplayCore};
+pub use simulate::{simulate, GapDecisions, SimReport};
+pub use strategy::{
+    build, decide, EmaPredictor, GapContext, GapPlan, IdleWaiting, OnOff, Oracle, OraclePolicy,
+    Policy, Timeout,
+};

@@ -1,20 +1,38 @@
-//! The shared phase-replay / gap-policy core.
+//! The shared phase-replay / gap-plan execution core.
 //!
-//! Both event-driven simulations — the single-accelerator lifetime run
-//! ([`crate::strategies::simulate`]) and the multi-accelerator scheduler
-//! run ([`crate::coordinator::multi_sim`]) — drive a [`Board`] through
-//! the same primitive moves: ensure the fabric is configured, replay the
-//! Table 2 active phases, and spend the inter-request gap per the
-//! strategy's [`GapAction`]. [`ReplayCore`] owns that sequence so the two
-//! runtimes cannot drift apart on energy accounting.
+//! Every event-driven runtime — the single-accelerator lifetime run
+//! ([`crate::strategies::simulate`]), the multi-accelerator scheduler run
+//! ([`crate::coordinator::multi_sim`]) and the PJRT serving loop
+//! ([`crate::coordinator::server`]) — drives a [`Board`] through the same
+//! primitive moves: ensure the fabric is configured, replay the Table 2
+//! active phases, and spend the inter-request gap per the policy's
+//! [`GapPlan`]. [`ReplayCore`] owns that sequence so the runtimes cannot
+//! drift apart on energy accounting; in particular [`execute_plan`] is
+//! the *only* place the three plan shapes (idle, power-off, idle-then-off)
+//! are translated into board time/energy.
+//!
+//! [`execute_plan`]: ReplayCore::execute_plan
 
 use crate::config::loader::SimConfig;
 use crate::config::schema::SpiConfig;
 use crate::device::board::{Board, BoardError};
 use crate::device::fpga::FpgaState;
 use crate::device::rails::PowerSaving;
-use crate::strategies::strategy::GapAction;
+use crate::strategies::strategy::GapPlan;
 use crate::util::units::{Duration, Power};
+
+/// What actually happened while executing a [`GapPlan`] across one gap —
+/// the feedback the runtimes use for decision counters and late-request
+/// accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct GapExecution {
+    /// The fabric ended the gap powered off (configuration lost).
+    pub powered_off: bool,
+    /// An `IdleThenOff` timer expired mid-gap.
+    pub timeout_expired: bool,
+    /// The next request lands inside the busy window (served late).
+    pub late: bool,
+}
 
 /// A board plus the workload-item phase profile, exposing the simulation
 /// primitives every event-driven runtime shares.
@@ -56,22 +74,90 @@ impl ReplayCore {
         self.board.power_on_and_configure(slot, self.spi)
     }
 
+    /// Cut the rails without advancing time (a policy's mid-gap decision;
+    /// the elapsed off-time is accounted by the caller's next `elapse`).
+    pub fn power_off(&mut self) {
+        self.board.fpga.power_off();
+    }
+
     /// Replay the three active phases; returns their total latency.
     pub fn run_phases(&mut self) -> Result<Duration, BoardError> {
         self.board.run_item_phases(&self.phases)
     }
 
-    /// Spend an inter-request gap per the strategy's decision. A zero
-    /// idle window still switches the rails into the requested
-    /// power-saving mode (so the next gap starts from the right state).
-    pub fn apply_gap(&mut self, action: GapAction, idle: Duration) -> Result<(), BoardError> {
-        match action {
-            GapAction::PowerOff => self.board.off_for(idle, false),
-            GapAction::Idle(saving) => {
-                if idle.secs() > 0.0 {
-                    self.board.idle_for(saving, idle)
+    /// Execute a policy's [`GapPlan`] across one *inter-arrival* gap
+    /// `gap` (request arrival → next request arrival; T_req on periodic
+    /// workloads). The serving busy windows are carved out of it here —
+    /// `item_latency` always, plus `config_time` when the plan cuts
+    /// power — exactly as the paper's equations do
+    /// (`E_Idle = P_idle · (T_req − T_latency)`). Callers must therefore
+    /// pass the raw arrival-to-arrival gap, NOT a remaining-idle window.
+    ///
+    /// A zero idle window still switches the rails into the requested
+    /// power-saving mode, so the next gap starts from the right state.
+    pub fn execute_plan(
+        &mut self,
+        plan: GapPlan,
+        gap: Duration,
+        config_time: Duration,
+        item_latency: Duration,
+    ) -> Result<GapExecution, BoardError> {
+        match plan {
+            GapPlan::Idle(saving) => {
+                if gap.secs() > item_latency.secs() {
+                    self.board.idle_for(saving, gap - item_latency)?;
+                    Ok(GapExecution::default())
                 } else {
-                    self.board.fpga.enter_idle(saving).map_err(BoardError::from)
+                    self.board.fpga.enter_idle(saving).map_err(BoardError::from)?;
+                    Ok(GapExecution {
+                        late: true,
+                        ..Default::default()
+                    })
+                }
+            }
+            GapPlan::PowerOff => {
+                let busy = config_time + item_latency;
+                let (off, late) = if gap.secs() > busy.secs() {
+                    (gap - busy, false)
+                } else {
+                    (Duration::ZERO, true)
+                };
+                self.board.off_for(off, false)?;
+                Ok(GapExecution {
+                    powered_off: true,
+                    timeout_expired: false,
+                    late,
+                })
+            }
+            GapPlan::IdleThenOff { saving, timeout } => {
+                let idle_window = gap - item_latency;
+                if idle_window.secs() <= timeout.secs() {
+                    // the next request (or its busy window) preempts the timer
+                    if idle_window.secs() > 0.0 {
+                        self.board.idle_for(saving, idle_window)?;
+                        Ok(GapExecution::default())
+                    } else {
+                        self.board.fpga.enter_idle(saving).map_err(BoardError::from)?;
+                        Ok(GapExecution {
+                            late: true,
+                            ..Default::default()
+                        })
+                    }
+                } else {
+                    // rent until τ, then buy: power off for the remainder
+                    self.board.idle_for(saving, timeout)?;
+                    let busy = timeout + config_time + item_latency;
+                    let (off, late) = if gap.secs() > busy.secs() {
+                        (gap - busy, false)
+                    } else {
+                        (Duration::ZERO, true)
+                    };
+                    self.board.off_for(off, false)?;
+                    Ok(GapExecution {
+                        powered_off: true,
+                        timeout_expired: true,
+                        late,
+                    })
                 }
             }
         }
@@ -102,6 +188,14 @@ mod tests {
     use super::*;
     use crate::config::paper_default;
 
+    fn ready_core() -> (ReplayCore, Duration, Duration) {
+        let cfg = paper_default();
+        let mut core = ReplayCore::from_config(&cfg);
+        let config_time = core.configure("lstm").unwrap();
+        core.run_phases().unwrap();
+        (core, config_time, cfg.item.latency_without_config())
+    }
+
     #[test]
     fn configure_then_phases_costs_the_calibrated_energy() {
         let cfg = paper_default();
@@ -116,43 +210,134 @@ mod tests {
     }
 
     #[test]
-    fn apply_gap_zero_idle_still_switches_mode() {
-        let cfg = paper_default();
-        let mut core = ReplayCore::from_config(&cfg);
-        core.configure("lstm").unwrap();
-        core.run_phases().unwrap();
+    fn zero_idle_window_still_switches_mode_and_reports_late() {
+        let (mut core, config_time, latency) = ready_core();
         let before = core.board.fpga_energy;
-        core.apply_gap(GapAction::Idle(PowerSaving::M12), Duration::ZERO)
+        // gap shorter than the item latency: nothing to idle through
+        let exec = core
+            .execute_plan(
+                GapPlan::Idle(PowerSaving::M12),
+                Duration::from_micros(1.0),
+                config_time,
+                latency,
+            )
             .unwrap();
+        assert!(exec.late && !exec.powered_off);
         assert_eq!(core.board.fpga_energy, before);
         assert_eq!(core.board.fpga.state, FpgaState::Idle(PowerSaving::M12));
     }
 
     #[test]
-    fn power_off_gap_loses_configuration() {
-        let cfg = paper_default();
-        let mut core = ReplayCore::from_config(&cfg);
-        core.configure("lstm").unwrap();
-        core.run_phases().unwrap();
-        core.apply_gap(GapAction::PowerOff, Duration::from_millis(3.8))
+    fn idle_plan_charges_table3_power_over_the_idle_window() {
+        let (mut core, config_time, latency) = ready_core();
+        let before = core.board.fpga_energy;
+        let exec = core
+            .execute_plan(
+                GapPlan::Idle(PowerSaving::BASELINE),
+                Duration::from_millis(40.0),
+                config_time,
+                latency,
+            )
             .unwrap();
+        assert_eq!(exec, GapExecution::default());
+        // 134.3 mW × (40 − 0.0401) ms
+        let drawn = (core.board.fpga_energy - before).millijoules();
+        assert!((drawn - 0.1343 * (40.0 - 0.0401)).abs() < 1e-6, "{drawn}");
+    }
+
+    #[test]
+    fn power_off_plan_loses_configuration_and_draws_nothing() {
+        let (mut core, config_time, latency) = ready_core();
+        let before = core.board.fpga_energy;
+        let exec = core
+            .execute_plan(
+                GapPlan::PowerOff,
+                Duration::from_millis(200.0),
+                config_time,
+                latency,
+            )
+            .unwrap();
+        assert!(exec.powered_off && !exec.timeout_expired && !exec.late);
         assert!(!core.is_ready());
         // paper model: the off state draws nothing
-        let e = core.board.fpga_energy;
-        core.elapse(PowerSaving::BASELINE, Duration::from_secs(1.0)).unwrap();
-        assert_eq!(core.board.fpga_energy, e);
+        assert_eq!(core.board.fpga_energy, before);
+    }
+
+    #[test]
+    fn power_off_plan_flags_late_when_gap_fits_no_reconfig() {
+        let (mut core, config_time, latency) = ready_core();
+        let exec = core
+            .execute_plan(
+                GapPlan::PowerOff,
+                Duration::from_millis(3.8),
+                config_time,
+                latency,
+            )
+            .unwrap();
+        assert!(exec.powered_off && exec.late);
+    }
+
+    #[test]
+    fn idle_then_off_expires_and_pays_exactly_tau_of_idle() {
+        let (mut core, config_time, latency) = ready_core();
+        let before = core.board.fpga_energy;
+        let timeout = Duration::from_millis(50.0);
+        let exec = core
+            .execute_plan(
+                GapPlan::IdleThenOff {
+                    saving: PowerSaving::BASELINE,
+                    timeout,
+                },
+                Duration::from_millis(400.0),
+                config_time,
+                latency,
+            )
+            .unwrap();
+        assert!(exec.powered_off && exec.timeout_expired && !exec.late);
+        assert!(!core.is_ready());
+        // the gap cost is exactly τ at the idle power; the off tail is free
+        let drawn = (core.board.fpga_energy - before).millijoules();
+        assert!((drawn - 0.1343 * 50.0).abs() < 1e-6, "{drawn}");
+    }
+
+    #[test]
+    fn idle_then_off_short_gap_is_pure_idle() {
+        let (mut core, config_time, latency) = ready_core();
+        let before = core.board.fpga_energy;
+        let exec = core
+            .execute_plan(
+                GapPlan::IdleThenOff {
+                    saving: PowerSaving::BASELINE,
+                    timeout: Duration::from_millis(50.0),
+                },
+                Duration::from_millis(40.0),
+                config_time,
+                latency,
+            )
+            .unwrap();
+        assert!(!exec.powered_off && !exec.timeout_expired && !exec.late);
+        assert!(core.is_ready());
+        // identical to the pure-idle plan on the same gap
+        let drawn = (core.board.fpga_energy - before).millijoules();
+        assert!((drawn - 0.1343 * (40.0 - 0.0401)).abs() < 1e-6, "{drawn}");
     }
 
     #[test]
     fn elapse_while_configured_charges_idle_power() {
-        let cfg = paper_default();
-        let mut core = ReplayCore::from_config(&cfg);
-        core.configure("lstm").unwrap();
-        core.run_phases().unwrap();
+        let (mut core, _, _) = ready_core();
         let before = core.board.fpga_energy;
         core.elapse(PowerSaving::M12, Duration::from_secs(1.0)).unwrap();
         let drawn = core.board.fpga_energy - before;
         assert!((drawn.millijoules() - 24.0).abs() < 0.1, "{}", drawn.millijoules());
+    }
+
+    #[test]
+    fn elapse_after_power_off_is_free() {
+        let (mut core, _, _) = ready_core();
+        core.power_off();
+        let e = core.board.fpga_energy;
+        core.elapse(PowerSaving::BASELINE, Duration::from_secs(1.0)).unwrap();
+        assert_eq!(core.board.fpga_energy, e);
     }
 
     #[test]

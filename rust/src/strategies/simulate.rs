@@ -1,13 +1,19 @@
-//! The strategy-level discrete-event simulation.
+//! The policy-level discrete-event simulation.
 //!
 //! Replays the duty-cycle workload (Fig 1) against the [`ReplayCore`]
-//! under a [`Strategy`]'s gap policy until the 4147 J battery budget is
+//! under a [`Policy`]'s gap plans until the 4147 J battery budget is
 //! exhausted (or an optional item cap is hit), reproducing the quantity
 //! the paper's Python simulator computes: the maximum number of
 //! executable workload items and the system lifetime. The PAC1934
 //! monitor rides along, so the run also yields the "hardware-measured"
 //! energy whose gap vs the exact integral mirrors the paper's §5.3
 //! validation.
+//!
+//! Policies are *online*: they plan each gap at item-completion time
+//! without seeing the upcoming inter-arrival gap, and receive the
+//! realized gap via [`Policy::observe`] afterwards. Only a policy
+//! exposing the `OraclePolicy` escape hatch (the offline upper bound) is
+//! handed the true gap, through [`decide`].
 //!
 //! Since the runner/runtime unification this module contains no request
 //! loop of its own: requests are [`LifetimeEvent`]s on the shared
@@ -21,15 +27,28 @@ use crate::config::loader::SimConfig;
 use crate::coordinator::requests::ArrivalProcess;
 use crate::sim::{Ctx, Engine, SimTime};
 use crate::strategies::replay::ReplayCore;
-use crate::strategies::strategy::{GapAction, Strategy};
+use crate::strategies::strategy::{decide, GapContext, Policy};
+use crate::util::stats::Welford;
 use crate::util::units::{Duration, Energy};
 
 pub use crate::strategies::replay::item_phases;
 
+/// Per-run gap-decision counters: *why* a policy's energy total looks
+/// the way it does, not just what it is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct GapDecisions {
+    /// Gaps spent fully configured (pure idle).
+    pub idled: u64,
+    /// Gaps that ended powered off (immediately or after a timeout).
+    pub powered_off: u64,
+    /// Subset of `powered_off` where an `IdleThenOff` timer expired.
+    pub timeouts_expired: u64,
+}
+
 /// Outcome of one simulated lifetime.
 #[derive(Debug, Clone)]
 pub struct SimReport {
-    pub strategy: String,
+    pub policy: String,
     pub arrival: String,
     /// Workload items fully executed within the budget (the paper's n_max).
     pub items: u64,
@@ -49,6 +68,11 @@ pub struct SimReport {
     /// Requests that arrived before the previous item finished (only
     /// possible with irregular arrivals) and were served late.
     pub late_requests: u64,
+    /// Mean served latency (arrival → completion, including queueing
+    /// behind a late-running predecessor and any reconfiguration).
+    pub mean_latency: Duration,
+    /// Per-gap decision counters (`items − 1` gaps in total).
+    pub decisions: GapDecisions,
     /// Final engine clock: the arrival time of the last request
     /// processed (n−1 inter-arrival gaps for n items).
     pub sim_time: Duration,
@@ -65,11 +89,16 @@ enum LifetimeEvent {
 /// Mutable simulation state threaded through the event handler.
 struct LifetimeState<'a> {
     core: ReplayCore,
-    strategy: &'a dyn Strategy,
+    policy: &'a mut dyn Policy,
     arrivals: &'a mut dyn ArrivalProcess,
     max_items: u64,
     items: u64,
     late_requests: u64,
+    decisions: GapDecisions,
+    /// Served-latency accounting: completion time of the previous item
+    /// (absolute sim time), so a late-running predecessor queues us.
+    prev_completion: Duration,
+    latency: Welford,
     /// Configuration duration from the FSM (equals Table 2's 36.145 ms at
     /// the optimal SPI setting, but follows the mechanism when swept).
     config_time: Duration,
@@ -82,7 +111,8 @@ impl LifetimeState<'_> {
     /// 1. If the FPGA is unconfigured (first request, or the previous gap
     ///    powered it off), pay power-on transient + full configuration.
     /// 2. Run the three active phases (Table 2).
-    /// 3. Apply the strategy's gap action until the next arrival, then
+    /// 3. Ask the policy for a gap plan (blind, unless it is the oracle),
+    ///    execute it on the shared core, feed the realized gap back, and
     ///    schedule the next request one inter-arrival gap out.
     ///
     /// Stops (without counting the in-flight item) as soon as any energy
@@ -93,10 +123,15 @@ impl LifetimeState<'_> {
             ctx.stop();
             return;
         }
+        let arrival = ctx.now().as_duration();
         // 1. ensure configured
+        let mut reconfigured = false;
         if !self.core.is_ready() {
             match self.core.configure("lstm") {
-                Ok(t) => self.config_time = t,
+                Ok(t) => {
+                    self.config_time = t;
+                    reconfigured = true;
+                }
                 Err(_) => {
                     ctx.stop();
                     return;
@@ -109,48 +144,74 @@ impl LifetimeState<'_> {
             return;
         }
         self.items += 1;
+        // served latency: queue behind a late predecessor, then pay any
+        // reconfiguration plus the active phases
+        let serve = if reconfigured {
+            self.config_time + self.item_latency
+        } else {
+            self.item_latency
+        };
+        let start = arrival.max(self.prev_completion);
+        let completion = start + serve;
+        self.latency.push((completion - arrival).millis());
+        self.prev_completion = completion;
         if self.items >= self.max_items {
             // Eq 2 counts n−1 idle gaps: no gap after the final item.
             ctx.stop();
             return;
         }
 
-        // 3. gap until next arrival
+        // 3. plan + execute the gap until the next arrival
         let gap = self.arrivals.next_gap();
-        let action = self.strategy.gap_action(gap);
-        let busy = if action == GapAction::PowerOff {
-            self.config_time + self.item_latency
-        } else {
-            self.item_latency
+        let gap_ctx = GapContext {
+            items_done: self.items,
+            now: arrival,
         };
-        let idle_time = if gap.secs() > busy.secs() {
-            gap - busy
-        } else {
-            self.late_requests += 1;
-            Duration::ZERO
-        };
-        if self.core.apply_gap(action, idle_time).is_err() {
-            ctx.stop();
-            return;
+        let plan = decide(self.policy, &gap_ctx, gap);
+        match self
+            .core
+            .execute_plan(plan, gap, self.config_time, self.item_latency)
+        {
+            Ok(exec) => {
+                if exec.powered_off {
+                    self.decisions.powered_off += 1;
+                } else {
+                    self.decisions.idled += 1;
+                }
+                if exec.timeout_expired {
+                    self.decisions.timeouts_expired += 1;
+                }
+                if exec.late {
+                    self.late_requests += 1;
+                }
+            }
+            Err(_) => {
+                ctx.stop();
+                return;
+            }
         }
+        self.policy.observe(gap);
         ctx.schedule_in(gap, LifetimeEvent::Request);
     }
 }
 
-/// Simulate `config`'s workload under `strategy` with `arrivals` on the
+/// Simulate `config`'s workload under `policy` with `arrivals` on the
 /// shared discrete-event engine.
 pub fn simulate(
     config: &SimConfig,
-    strategy: &dyn Strategy,
+    policy: &mut dyn Policy,
     arrivals: &mut dyn ArrivalProcess,
 ) -> SimReport {
     let mut state = LifetimeState {
         core: ReplayCore::from_config(config),
-        strategy,
+        policy,
         arrivals,
         max_items: config.workload.max_items.unwrap_or(u64::MAX),
         items: 0,
         late_requests: 0,
+        decisions: GapDecisions::default(),
+        prev_completion: Duration::ZERO,
+        latency: Welford::new(),
         config_time: config.item.configuration.time,
         item_latency: config.item.latency_without_config(),
     };
@@ -163,7 +224,7 @@ pub fn simulate(
 
     let board = &state.core.board;
     SimReport {
-        strategy: state.strategy.label(),
+        policy: state.policy.label(),
         arrival: state.arrivals.label(),
         items: state.items,
         lifetime: state.arrivals.mean() * state.items as f64, // Eq 4
@@ -173,6 +234,12 @@ pub fn simulate(
         configurations: board.fpga.configurations,
         power_ons: board.fpga.power_ons,
         late_requests: state.late_requests,
+        mean_latency: Duration::from_millis(if state.latency.count() > 0 {
+            state.latency.mean()
+        } else {
+            0.0
+        }),
+        decisions: state.decisions,
         sim_time: stats.end_time.as_duration(),
     }
 }
@@ -181,11 +248,11 @@ pub fn simulate(
 mod tests {
     use super::*;
     use crate::config::paper_default;
-    use crate::config::schema::StrategyKind;
+    use crate::config::schema::PolicySpec;
     use crate::coordinator::requests::{Periodic, Poisson};
     use crate::device::rails::PowerSaving;
     use crate::energy::analytical::Analytical;
-    use crate::strategies::strategy::{build, Adaptive, IdleWaiting, OnOff};
+    use crate::strategies::strategy::{build, IdleWaiting, OnOff, Oracle, Timeout};
 
     fn capped_config(t_req_ms: f64, max_items: u64) -> SimConfig {
         let mut cfg = paper_default();
@@ -206,33 +273,40 @@ mod tests {
     fn onoff_pays_configuration_per_item() {
         let cfg = capped_config(40.0, 100);
         let mut arr = periodic(40.0);
-        let r = simulate(&cfg, &OnOff, &mut arr);
+        let r = simulate(&cfg, &mut OnOff, &mut arr);
         assert_eq!(r.items, 100);
         assert_eq!(r.configurations, 100);
         assert_eq!(r.power_ons, 100);
         // per-item energy ≈ 11.983 mJ
         let per_item = r.energy_exact.millijoules() / 100.0;
         assert!((per_item - 11.983).abs() < 0.01, "{per_item}");
+        // every gap was a power-off decision
+        assert_eq!(r.decisions.powered_off, 99);
+        assert_eq!(r.decisions.idled, 0);
+        assert_eq!(r.decisions.timeouts_expired, 0);
     }
 
     #[test]
     fn idle_waiting_configures_once() {
         let cfg = capped_config(40.0, 100);
         let mut arr = periodic(40.0);
-        let r = simulate(&cfg, &IdleWaiting::baseline(), &mut arr);
+        let r = simulate(&cfg, &mut IdleWaiting::baseline(), &mut arr);
         assert_eq!(r.items, 100);
         assert_eq!(r.configurations, 1);
         assert_eq!(r.power_ons, 1);
+        assert_eq!(r.decisions.idled, 99);
+        assert_eq!(r.decisions.powered_off, 0);
     }
 
     #[test]
     fn zero_item_cap_executes_nothing() {
         let cfg = capped_config(40.0, 0);
         let mut arr = periodic(40.0);
-        let r = simulate(&cfg, &IdleWaiting::baseline(), &mut arr);
+        let r = simulate(&cfg, &mut IdleWaiting::baseline(), &mut arr);
         assert_eq!(r.items, 0);
         assert_eq!(r.configurations, 0);
         assert_eq!(r.energy_exact, Energy::ZERO);
+        assert_eq!(r.mean_latency, Duration::ZERO);
     }
 
     #[test]
@@ -253,7 +327,7 @@ mod tests {
         let mut capped = cfg.clone();
         capped.workload.max_items = Some(expect_iw);
         let mut arr = periodic(40.0);
-        let r = simulate(&capped, &IdleWaiting::baseline(), &mut arr);
+        let r = simulate(&capped, &mut IdleWaiting::baseline(), &mut arr);
         assert_eq!(r.items, expect_iw);
         let predicted = model.e_sum_idle_waiting(
             expect_iw,
@@ -271,7 +345,7 @@ mod tests {
         let cfg = capped_config(40.0, 500);
         let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
         let mut arr = periodic(40.0);
-        let r = simulate(&cfg, &OnOff, &mut arr);
+        let r = simulate(&cfg, &mut OnOff, &mut arr);
         let predicted = model.e_sum_onoff(500);
         // Same FSM-vs-Table-2 tolerance as the Idle-Waiting check.
         let rel = (r.energy_exact.joules() - predicted.joules()).abs() / predicted.joules();
@@ -282,51 +356,67 @@ mod tests {
     fn monitor_error_is_small_but_nonzero() {
         let cfg = capped_config(40.0, 2_000);
         let mut arr = periodic(40.0);
-        let r = simulate(&cfg, &IdleWaiting::baseline(), &mut arr);
+        let r = simulate(&cfg, &mut IdleWaiting::baseline(), &mut arr);
         assert!(r.monitor_rel_error < 0.03, "err={}", r.monitor_rel_error);
         assert!(r.monitor_rel_error > 0.0);
     }
 
     #[test]
-    fn adaptive_powers_off_on_long_gaps_only() {
+    fn oracle_powers_off_on_long_gaps_only() {
         let cfg = capped_config(40.0, 50);
         let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
-        let adaptive = Adaptive::from_model(&model, PowerSaving::BASELINE);
 
         // 40 ms gaps < 89.21 ms crossover → behaves like idle-waiting
+        let mut oracle = Oracle::from_model(&model, PowerSaving::BASELINE);
         let mut arr = periodic(40.0);
-        let r = simulate(&cfg, &adaptive, &mut arr);
+        let r = simulate(&cfg, &mut oracle, &mut arr);
         assert_eq!(r.configurations, 1);
+        assert_eq!(r.decisions.idled, 49);
 
         // 200 ms gaps > crossover → behaves like on-off
         let cfg = capped_config(200.0, 50);
+        let mut oracle = Oracle::from_model(&model, PowerSaving::BASELINE);
         let mut arr = periodic(200.0);
-        let r = simulate(&cfg, &adaptive, &mut arr);
+        let r = simulate(&cfg, &mut oracle, &mut arr);
         assert_eq!(r.configurations, 50);
+        assert_eq!(r.decisions.powered_off, 49);
     }
 
     #[test]
-    fn adaptive_beats_both_on_bimodal_poisson() {
-        // Irregular arrivals around the crossover: adaptive should do at
-        // least as well (≤ energy) as each fixed strategy per item.
+    fn oracle_beats_both_on_bimodal_poisson() {
+        // Irregular arrivals around the crossover: the oracle should do at
+        // least as well (≤ energy) as each fixed policy per item.
         let cfg = capped_config(89.0, 2_000);
         let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
-        let adaptive = Adaptive::from_model(&model, PowerSaving::BASELINE);
-        let run = |s: &dyn Strategy| {
+        let run = |policy: &mut dyn crate::strategies::strategy::Policy| {
             let mut arr = Poisson::new(
                 Duration::from_millis(89.0),
                 Duration::from_millis(0.05),
                 1234,
             );
-            simulate(&cfg, s, &mut arr).energy_exact.joules() / 2000.0
+            simulate(&cfg, policy, &mut arr).energy_exact.joules() / 2000.0
         };
-        let e_adaptive = run(&adaptive);
-        let e_onoff = run(&OnOff);
-        let e_iw = run(&IdleWaiting::baseline());
+        let e_oracle = run(&mut Oracle::from_model(&model, PowerSaving::BASELINE));
+        let e_onoff = run(&mut OnOff);
+        let e_iw = run(&mut IdleWaiting::baseline());
         assert!(
-            e_adaptive <= e_onoff * 1.001 && e_adaptive <= e_iw * 1.001,
-            "adaptive {e_adaptive} vs onoff {e_onoff} / iw {e_iw}"
+            e_oracle <= e_onoff * 1.001 && e_oracle <= e_iw * 1.001,
+            "oracle {e_oracle} vs onoff {e_onoff} / iw {e_iw}"
         );
+    }
+
+    #[test]
+    fn timeout_expiry_counted_on_long_periodic_gaps() {
+        let cfg = capped_config(300.0, 20);
+        let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
+        let mut policy = Timeout::from_model(&model, PowerSaving::BASELINE);
+        let mut arr = periodic(300.0);
+        let r = simulate(&cfg, &mut policy, &mut arr);
+        // 300 ms gaps: idle window 299.96 ms > τ ≈ 89.17 ms → every gap
+        // expires the timer and cuts power
+        assert_eq!(r.decisions.timeouts_expired, 19);
+        assert_eq!(r.decisions.powered_off, 19);
+        assert_eq!(r.configurations, 20);
     }
 
     #[test]
@@ -334,20 +424,36 @@ mod tests {
         let cfg = capped_config(40.0, 500);
         // mean 1 ms gaps against a 36 ms On-Off item latency → many lates
         let mut arr = Poisson::new(Duration::from_millis(1.0), Duration::from_millis(0.05), 9);
-        let r = simulate(&cfg, &OnOff, &mut arr);
+        let r = simulate(&cfg, &mut OnOff, &mut arr);
         assert!(r.late_requests > 0);
+        // queueing shows up in the served latency, not just the counter
+        assert!(r.mean_latency > cfg.item.latency_with_config());
     }
 
     #[test]
     fn build_and_simulate_all_kinds() {
         let cfg = capped_config(40.0, 10);
         let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
-        for kind in StrategyKind::ALL {
-            let s = build(kind, &model);
+        for spec in PolicySpec::ALL {
+            let mut policy = build(spec, &model);
             let mut arr = periodic(40.0);
-            let r = simulate(&cfg, s.as_ref(), &mut arr);
-            assert_eq!(r.items, 10, "{kind}");
+            let r = simulate(&cfg, policy.as_mut(), &mut arr);
+            assert_eq!(r.items, 10, "{spec}");
+            assert_eq!(r.decisions.idled + r.decisions.powered_off, 9, "{spec}");
         }
+    }
+
+    #[test]
+    fn mean_latency_is_the_item_latency_when_never_late() {
+        let cfg = capped_config(40.0, 100);
+        let mut arr = periodic(40.0);
+        let r = simulate(&cfg, &mut IdleWaiting::baseline(), &mut arr);
+        // every request is served immediately: latency = active phases
+        assert!((r.mean_latency.millis() - 0.0401).abs() < 1e-9, "{}", r.mean_latency.millis());
+        // on-off additionally pays the reconfiguration on every request
+        let mut arr = periodic(40.0);
+        let r = simulate(&cfg, &mut OnOff, &mut arr);
+        assert!((r.mean_latency.millis() - 36.1851).abs() < 0.01, "{}", r.mean_latency.millis());
     }
 
     #[test]
@@ -357,7 +463,7 @@ mod tests {
         // nine inter-arrival gaps in (9 × 40 ms = 360 ms).
         let cfg = capped_config(40.0, 10);
         let mut arr = periodic(40.0);
-        let r = simulate(&cfg, &IdleWaiting::baseline(), &mut arr);
+        let r = simulate(&cfg, &mut IdleWaiting::baseline(), &mut arr);
         assert_eq!(r.items, 10);
         assert!((r.sim_time.millis() - 360.0).abs() < 1e-9, "{}", r.sim_time.millis());
         // Eq 4 lifetime is derived from items, not the clock
@@ -372,7 +478,7 @@ mod tests {
         let cfg = capped_config(40.0, 50);
         let poisson = || Poisson::new(Duration::from_millis(40.0), Duration::from_millis(0.05), 3);
         let mut arr = poisson();
-        let r = simulate(&cfg, &IdleWaiting::baseline(), &mut arr);
+        let r = simulate(&cfg, &mut IdleWaiting::baseline(), &mut arr);
         let mut reference = poisson();
         let expected: f64 = (0..49).map(|_| reference.next_gap().millis()).sum();
         // engine time is nanosecond-quantized per gap

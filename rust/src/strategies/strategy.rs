@@ -1,58 +1,118 @@
-//! The strategy abstraction: what the platform does in the gap between
+//! The gap-policy subsystem: what the platform does in the gap between
 //! finishing a workload item and the next inference request.
 //!
-//! The paper's two strategies (§4.2) plus our adaptive extension are all
-//! expressible as a *gap policy*:
+//! A [`Policy`] decides **at item-completion time, without seeing the
+//! upcoming gap** — the deployable formulation of the paper's §7 future
+//! work ("irregularly occurring inference requests"). It emits a
+//! [`GapPlan`]:
 //!
-//! * **On-Off** — power off; pay power-on transient + full reconfiguration
-//!   at the next request.
-//! * **Idle-Waiting** — stay configured; draw the Table 3 idle power of
-//!   the selected power-saving mode.
-//! * **Adaptive** (paper §7 future work) — choose per gap: power off when
-//!   the gap is longer than the analytical crossover, idle otherwise.
-//!   For periodic workloads this degenerates to whichever single strategy
-//!   wins at T_req; its value shows with irregular arrivals.
+//! * **`Idle(saving)`** — stay configured at a Table 3 power-saving level
+//!   (the paper's Idle-Waiting, Fig 6).
+//! * **`PowerOff`** — cut the rails immediately; pay power-on transient +
+//!   full reconfiguration at the next request (On-Off, Fig 5).
+//! * **`IdleThenOff { saving, timeout }`** — the ski-rental shape: idle up
+//!   to `timeout`, then cut power if no request arrived.
+//!
+//! After the gap resolves, the runtime calls [`Policy::observe`] with the
+//! realized gap so policies can learn online. The clairvoyant per-gap
+//! chooser that used to be called `Adaptive` survives as [`Oracle`] — it
+//! is the offline upper bound, reachable only through the
+//! [`OraclePolicy`] escape hatch ([`decide`]), never through the blind
+//! [`Policy::plan_gap`] path.
+//!
+//! Built-in policies:
+//!
+//! | policy | information used | behaviour |
+//! |---|---|---|
+//! | [`OnOff`] | none | always `PowerOff` |
+//! | [`IdleWaiting`] | none | always `Idle(saving)` |
+//! | [`Oracle`] | the true upcoming gap | off iff gap > crossover |
+//! | [`Timeout`] | none (τ from the model) | always `IdleThenOff` at the break-even τ — classically 2-competitive vs the oracle |
+//! | [`EmaPredictor`] | observed gap history | idle iff EMA-predicted gap < crossover |
 
-use crate::config::schema::StrategyKind;
+use crate::config::schema::PolicySpec;
 use crate::device::rails::PowerSaving;
 use crate::energy::analytical::Analytical;
+use crate::energy::crossover;
 use crate::util::units::Duration;
 
-/// What to do during an inter-request gap.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum GapAction {
-    /// Cut FPGA rails; configuration is lost.
-    PowerOff,
+/// What to do during an inter-request gap, decided before the gap is
+/// known. Executed by `ReplayCore::execute_plan` so every runtime shares
+/// one energy-accounting path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GapPlan {
     /// Hold configuration at the given power-saving level.
     Idle(PowerSaving),
+    /// Cut FPGA rails immediately; configuration is lost.
+    PowerOff,
+    /// Idle at `saving` for up to `timeout`, then cut power (ski-rental).
+    IdleThenOff {
+        saving: PowerSaving,
+        timeout: Duration,
+    },
 }
 
-/// A gap policy. Object-safe so the simulator and the serving coordinator
-/// can hold `Box<dyn Strategy>`.
-pub trait Strategy: Send {
-    fn kind(&self) -> StrategyKind;
+/// What a policy may look at when planning a gap — everything known at
+/// item-completion time, and nothing about the future.
+#[derive(Debug, Clone, Copy)]
+pub struct GapContext {
+    /// Workload items completed so far in this run.
+    pub items_done: u64,
+    /// Simulated time at item completion.
+    pub now: Duration,
+}
 
-    /// Decide the action for a gap of length `gap` (time from item
-    /// completion to the next request arrival).
-    fn gap_action(&self, gap: Duration) -> GapAction;
+/// Escape hatch for clairvoyant policies: sees the true upcoming gap.
+/// Only the offline analyses (lifetime DES, serving loop) route through
+/// it via [`decide`]; online contexts fall back to [`Policy::plan_gap`].
+pub trait OraclePolicy {
+    fn plan_for(&self, gap: Duration) -> GapPlan;
+}
+
+/// A stateful gap policy. Object-safe so the simulator and the serving
+/// coordinator can hold `Box<dyn Policy>`.
+pub trait Policy: Send {
+    fn kind(&self) -> PolicySpec;
+
+    /// Plan the upcoming gap from observed state only — the gap length is
+    /// deliberately absent.
+    fn plan_gap(&mut self, ctx: &GapContext) -> GapPlan;
+
+    /// Feed back the realized gap once it has resolved (online learning).
+    fn observe(&mut self, _actual_gap: Duration) {}
 
     /// Human-readable label for reports.
     fn label(&self) -> String {
         self.kind().name().to_string()
     }
+
+    /// Clairvoyant view, if this policy is an offline upper bound.
+    fn as_oracle(&self) -> Option<&dyn OraclePolicy> {
+        None
+    }
+}
+
+/// Resolve a policy's plan for a gap the runtime already knows: oracle
+/// policies get the true gap (offline upper bound), online policies plan
+/// blind from `ctx` alone.
+pub fn decide(policy: &mut dyn Policy, ctx: &GapContext, actual_gap: Duration) -> GapPlan {
+    if let Some(oracle) = policy.as_oracle() {
+        return oracle.plan_for(actual_gap);
+    }
+    policy.plan_gap(ctx)
 }
 
 /// The paper's On-Off strategy (Fig 5).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct OnOff;
 
-impl Strategy for OnOff {
-    fn kind(&self) -> StrategyKind {
-        StrategyKind::OnOff
+impl Policy for OnOff {
+    fn kind(&self) -> PolicySpec {
+        PolicySpec::OnOff
     }
 
-    fn gap_action(&self, _gap: Duration) -> GapAction {
-        GapAction::PowerOff
+    fn plan_gap(&mut self, _ctx: &GapContext) -> GapPlan {
+        GapPlan::PowerOff
     }
 }
 
@@ -82,72 +142,209 @@ impl IdleWaiting {
     }
 }
 
-impl Strategy for IdleWaiting {
-    fn kind(&self) -> StrategyKind {
+impl Policy for IdleWaiting {
+    fn kind(&self) -> PolicySpec {
         match (self.saving.method1, self.saving.method2) {
-            (false, _) => StrategyKind::IdleWaiting,
-            (true, false) => StrategyKind::IdleWaitingM1,
-            (true, true) => StrategyKind::IdleWaitingM12,
+            (false, _) => PolicySpec::IdleWaiting,
+            (true, false) => PolicySpec::IdleWaitingM1,
+            (true, true) => PolicySpec::IdleWaitingM12,
         }
     }
 
-    fn gap_action(&self, _gap: Duration) -> GapAction {
-        GapAction::Idle(self.saving)
+    fn plan_gap(&mut self, _ctx: &GapContext) -> GapPlan {
+        GapPlan::Idle(self.saving)
     }
 }
 
-/// Per-gap adaptive strategy: powers off for gaps beyond the analytical
-/// crossover of its idle mode, idles otherwise.
+/// Clairvoyant per-gap policy (formerly `Adaptive`): powers off for gaps
+/// beyond the analytical crossover of its idle mode, idles otherwise.
+/// The offline upper bound every online policy is measured against.
 #[derive(Debug, Clone, Copy)]
-pub struct Adaptive {
+pub struct Oracle {
     pub saving: PowerSaving,
     /// Break-even gap duration (precomputed from the analytical model).
     pub crossover: Duration,
 }
 
-impl Adaptive {
+impl Oracle {
     /// Build from the analytical model: the crossover is where the energy
     /// of idling for the gap equals the energy of a power cycle +
     /// reconfiguration.
-    pub fn from_model(model: &Analytical, saving: PowerSaving) -> Adaptive {
+    pub fn from_model(model: &Analytical, saving: PowerSaving) -> Oracle {
         let p_idle = crate::device::rails::RailSet::idle_power(saving);
-        Adaptive {
+        Oracle {
             saving,
-            crossover: crate::energy::crossover::asymptotic(model, p_idle),
+            crossover: crossover::asymptotic(model, p_idle),
         }
     }
 }
 
-impl Strategy for Adaptive {
-    fn kind(&self) -> StrategyKind {
-        StrategyKind::Adaptive
+impl OraclePolicy for Oracle {
+    fn plan_for(&self, gap: Duration) -> GapPlan {
+        if gap > self.crossover {
+            GapPlan::PowerOff
+        } else {
+            GapPlan::Idle(self.saving)
+        }
+    }
+}
+
+impl Policy for Oracle {
+    fn kind(&self) -> PolicySpec {
+        PolicySpec::Oracle
     }
 
-    fn gap_action(&self, gap: Duration) -> GapAction {
-        if gap > self.crossover {
-            GapAction::PowerOff
-        } else {
-            GapAction::Idle(self.saving)
+    /// Blind fallback for online contexts that cannot grant clairvoyance
+    /// (e.g. the multi-accelerator DES): hold configuration.
+    fn plan_gap(&mut self, _ctx: &GapContext) -> GapPlan {
+        GapPlan::Idle(self.saving)
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "oracle({}, crossover {:.2} ms)",
+            self.saving.label(),
+            self.crossover.millis()
+        )
+    }
+
+    fn as_oracle(&self) -> Option<&dyn OraclePolicy> {
+        Some(self)
+    }
+}
+
+/// Ski-rental policy: idle up to the break-even timeout τ (idle energy
+/// for τ equals one power cycle + reconfiguration), then power off. On
+/// any gap sequence its gap energy is at most 2× the oracle's.
+#[derive(Debug, Clone, Copy)]
+pub struct Timeout {
+    pub saving: PowerSaving,
+    /// Idle window after which power is cut (the ski-rental "buy" point).
+    pub timeout: Duration,
+}
+
+impl Timeout {
+    /// τ from the analytical model: the idle duration whose energy equals
+    /// the reconfiguration cost (= crossover minus the item latency).
+    pub fn from_model(model: &Analytical, saving: PowerSaving) -> Timeout {
+        let p_idle = crate::device::rails::RailSet::idle_power(saving);
+        Timeout {
+            saving,
+            timeout: crossover::ski_rental_timeout(model, p_idle),
+        }
+    }
+}
+
+impl Policy for Timeout {
+    fn kind(&self) -> PolicySpec {
+        PolicySpec::Timeout
+    }
+
+    fn plan_gap(&mut self, _ctx: &GapContext) -> GapPlan {
+        GapPlan::IdleThenOff {
+            saving: self.saving,
+            timeout: self.timeout,
         }
     }
 
     fn label(&self) -> String {
         format!(
-            "adaptive({}, crossover {:.2} ms)",
+            "timeout({}, tau {:.2} ms)",
             self.saving.label(),
+            self.timeout.millis()
+        )
+    }
+}
+
+/// Online predictor: an exponential moving average of observed gaps.
+/// Idles iff the predicted gap is below the crossover, powers off
+/// otherwise; before the first observation it hedges with the ski-rental
+/// plan. On strictly periodic arrivals the prediction becomes exact after
+/// one gap, so the policy degenerates to the winning static strategy.
+#[derive(Debug, Clone, Copy)]
+pub struct EmaPredictor {
+    pub saving: PowerSaving,
+    /// Break-even gap duration of the idle mode.
+    pub crossover: Duration,
+    /// Ski-rental timeout used while no observation exists yet.
+    pub timeout: Duration,
+    /// EMA smoothing factor in (0, 1]: weight of the newest observation.
+    pub alpha: f64,
+    /// Predicted next gap in seconds (None until the first observation).
+    predicted_secs: Option<f64>,
+}
+
+impl EmaPredictor {
+    pub const DEFAULT_ALPHA: f64 = 0.2;
+
+    pub fn from_model(model: &Analytical, saving: PowerSaving, alpha: f64) -> EmaPredictor {
+        let p_idle = crate::device::rails::RailSet::idle_power(saving);
+        EmaPredictor {
+            saving,
+            crossover: crossover::asymptotic(model, p_idle),
+            timeout: crossover::ski_rental_timeout(model, p_idle),
+            alpha: alpha.clamp(f64::EPSILON, 1.0),
+            predicted_secs: None,
+        }
+    }
+
+    /// Current gap prediction, if any observation has arrived.
+    pub fn predicted(&self) -> Option<Duration> {
+        self.predicted_secs.map(Duration::from_secs)
+    }
+}
+
+impl Policy for EmaPredictor {
+    fn kind(&self) -> PolicySpec {
+        PolicySpec::EmaPredictor
+    }
+
+    fn plan_gap(&mut self, _ctx: &GapContext) -> GapPlan {
+        match self.predicted_secs {
+            // cold start: no history → hedge with the 2-competitive plan
+            None => GapPlan::IdleThenOff {
+                saving: self.saving,
+                timeout: self.timeout,
+            },
+            Some(p) if p < self.crossover.secs() => GapPlan::Idle(self.saving),
+            Some(_) => GapPlan::PowerOff,
+        }
+    }
+
+    fn observe(&mut self, actual_gap: Duration) {
+        let g = actual_gap.secs();
+        self.predicted_secs = Some(match self.predicted_secs {
+            None => g,
+            Some(p) => self.alpha * g + (1.0 - self.alpha) * p,
+        });
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "ema({}, alpha {:.2}, crossover {:.2} ms)",
+            self.saving.label(),
+            self.alpha,
             self.crossover.millis()
         )
     }
 }
 
-/// Construct the strategy for a config-level [`StrategyKind`].
-pub fn build(kind: StrategyKind, model: &Analytical) -> Box<dyn Strategy> {
-    match kind {
-        StrategyKind::OnOff => Box::new(OnOff),
-        StrategyKind::IdleWaiting => Box::new(IdleWaiting::baseline()),
-        StrategyKind::IdleWaitingM1 => Box::new(IdleWaiting::method1()),
-        StrategyKind::IdleWaitingM12 => Box::new(IdleWaiting::method12()),
-        StrategyKind::Adaptive => Box::new(Adaptive::from_model(model, PowerSaving::M12)),
+/// Construct the policy for a config-level [`PolicySpec`]. The advanced
+/// policies default to the M1+2 idle mode (the paper's best), matching
+/// the pre-rename `Adaptive` default.
+pub fn build(spec: PolicySpec, model: &Analytical) -> Box<dyn Policy> {
+    match spec {
+        PolicySpec::OnOff => Box::new(OnOff),
+        PolicySpec::IdleWaiting => Box::new(IdleWaiting::baseline()),
+        PolicySpec::IdleWaitingM1 => Box::new(IdleWaiting::method1()),
+        PolicySpec::IdleWaitingM12 => Box::new(IdleWaiting::method12()),
+        PolicySpec::Oracle => Box::new(Oracle::from_model(model, PowerSaving::M12)),
+        PolicySpec::Timeout => Box::new(Timeout::from_model(model, PowerSaving::M12)),
+        PolicySpec::EmaPredictor => Box::new(EmaPredictor::from_model(
+            model,
+            PowerSaving::M12,
+            EmaPredictor::DEFAULT_ALPHA,
+        )),
     }
 }
 
@@ -161,54 +358,128 @@ mod tests {
         Analytical::new(&cfg.item, cfg.workload.energy_budget)
     }
 
+    fn ctx() -> GapContext {
+        GapContext {
+            items_done: 0,
+            now: Duration::ZERO,
+        }
+    }
+
     #[test]
     fn onoff_always_powers_off() {
-        assert_eq!(OnOff.gap_action(Duration::from_millis(1.0)), GapAction::PowerOff);
-        assert_eq!(OnOff.gap_action(Duration::from_secs(100.0)), GapAction::PowerOff);
-        assert_eq!(OnOff.kind(), StrategyKind::OnOff);
+        assert_eq!(OnOff.plan_gap(&ctx()), GapPlan::PowerOff);
+        assert_eq!(OnOff.kind(), PolicySpec::OnOff);
     }
 
     #[test]
     fn idle_waiting_always_idles_at_its_level() {
-        let s = IdleWaiting::method12();
-        assert_eq!(
-            s.gap_action(Duration::from_secs(10.0)),
-            GapAction::Idle(PowerSaving::M12)
-        );
-        assert_eq!(s.kind(), StrategyKind::IdleWaitingM12);
-        assert_eq!(IdleWaiting::baseline().kind(), StrategyKind::IdleWaiting);
-        assert_eq!(IdleWaiting::method1().kind(), StrategyKind::IdleWaitingM1);
+        let mut p = IdleWaiting::method12();
+        assert_eq!(p.plan_gap(&ctx()), GapPlan::Idle(PowerSaving::M12));
+        assert_eq!(p.kind(), PolicySpec::IdleWaitingM12);
+        assert_eq!(IdleWaiting::baseline().kind(), PolicySpec::IdleWaiting);
+        assert_eq!(IdleWaiting::method1().kind(), PolicySpec::IdleWaitingM1);
     }
 
     #[test]
-    fn adaptive_switches_at_crossover() {
+    fn oracle_switches_at_crossover() {
         let m = model();
-        let a = Adaptive::from_model(&m, PowerSaving::BASELINE);
-        assert!((a.crossover.millis() - 89.21).abs() < 0.05);
+        let o = Oracle::from_model(&m, PowerSaving::BASELINE);
+        assert!((o.crossover.millis() - 89.21).abs() < 0.05);
         assert_eq!(
-            a.gap_action(Duration::from_millis(50.0)),
-            GapAction::Idle(PowerSaving::BASELINE)
+            o.plan_for(Duration::from_millis(50.0)),
+            GapPlan::Idle(PowerSaving::BASELINE)
         );
+        assert_eq!(o.plan_for(Duration::from_millis(200.0)), GapPlan::PowerOff);
+    }
+
+    #[test]
+    fn oracle_m12_crossover_is_499ms() {
+        let m = model();
+        let o = Oracle::from_model(&m, PowerSaving::M12);
+        assert!((o.crossover.millis() - 499.06).abs() < 0.15, "{}", o.crossover.millis());
+    }
+
+    #[test]
+    fn decide_grants_the_oracle_clairvoyance_only() {
+        let m = model();
+        let mut oracle = Oracle::from_model(&m, PowerSaving::BASELINE);
+        // blind path: the oracle cannot see the gap and holds configuration
         assert_eq!(
-            a.gap_action(Duration::from_millis(200.0)),
-            GapAction::PowerOff
+            oracle.plan_gap(&ctx()),
+            GapPlan::Idle(PowerSaving::BASELINE)
+        );
+        // decide() routes through the escape hatch with the true gap
+        assert_eq!(
+            decide(&mut oracle, &ctx(), Duration::from_millis(200.0)),
+            GapPlan::PowerOff
+        );
+        // an online policy never sees the gap, however long
+        let mut onoff = OnOff;
+        assert_eq!(
+            decide(&mut onoff, &ctx(), Duration::from_secs(100.0)),
+            GapPlan::PowerOff
+        );
+        let mut iw = IdleWaiting::baseline();
+        assert_eq!(
+            decide(&mut iw, &ctx(), Duration::from_secs(100.0)),
+            GapPlan::Idle(PowerSaving::BASELINE)
         );
     }
 
     #[test]
-    fn adaptive_m12_crossover_is_499ms() {
+    fn timeout_tau_is_crossover_minus_latency() {
         let m = model();
-        let a = Adaptive::from_model(&m, PowerSaving::M12);
-        assert!((a.crossover.millis() - 499.06).abs() < 0.15, "{}", a.crossover.millis());
+        let t = Timeout::from_model(&m, PowerSaving::BASELINE);
+        let o = Oracle::from_model(&m, PowerSaving::BASELINE);
+        let latency = m.item.latency_without_config;
+        assert!(
+            (t.timeout.millis() - (o.crossover - latency).millis()).abs() < 1e-9,
+            "tau {} vs crossover {} - latency {}",
+            t.timeout.millis(),
+            o.crossover.millis(),
+            latency.millis()
+        );
+        let mut planning = t;
+        assert_eq!(
+            planning.plan_gap(&ctx()),
+            GapPlan::IdleThenOff {
+                saving: PowerSaving::BASELINE,
+                timeout: t.timeout
+            }
+        );
+    }
+
+    #[test]
+    fn ema_learns_and_switches() {
+        let m = model();
+        let mut e = EmaPredictor::from_model(&m, PowerSaving::BASELINE, 1.0);
+        // cold start hedges with the ski-rental plan
+        assert!(matches!(e.plan_gap(&ctx()), GapPlan::IdleThenOff { .. }));
+        // short observed gaps → idle
+        e.observe(Duration::from_millis(40.0));
+        assert_eq!(e.predicted().unwrap().millis(), 40.0);
+        assert_eq!(e.plan_gap(&ctx()), GapPlan::Idle(PowerSaving::BASELINE));
+        // long observed gaps → power off (alpha=1 tracks instantly)
+        e.observe(Duration::from_millis(500.0));
+        assert_eq!(e.plan_gap(&ctx()), GapPlan::PowerOff);
+    }
+
+    #[test]
+    fn ema_smoothing_blends_history() {
+        let m = model();
+        let mut e = EmaPredictor::from_model(&m, PowerSaving::BASELINE, 0.5);
+        e.observe(Duration::from_millis(100.0));
+        e.observe(Duration::from_millis(200.0));
+        assert!((e.predicted().unwrap().millis() - 150.0).abs() < 1e-9);
     }
 
     #[test]
     fn build_covers_all_kinds() {
         let m = model();
-        for kind in StrategyKind::ALL {
-            let s = build(kind, &m);
-            assert_eq!(s.kind(), kind);
-            assert!(!s.label().is_empty());
+        for spec in PolicySpec::ALL {
+            let p = build(spec, &m);
+            assert_eq!(p.kind(), spec);
+            assert!(!p.label().is_empty());
         }
     }
 }

@@ -103,7 +103,7 @@ fn simulate_stops_at_exhaustion_without_counting_partial_item() {
     let mut arrivals = Periodic {
         period: Duration::from_millis(40.0),
     };
-    let report = simulate(&cfg, &OnOff, &mut arrivals);
+    let report = simulate(&cfg, &mut OnOff, &mut arrivals);
     assert_eq!(report.items, 2);
     assert!(report.energy_exact <= cfg.workload.energy_budget);
 }

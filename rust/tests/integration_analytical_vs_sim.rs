@@ -3,7 +3,7 @@
 //! of the paper's §5.3 validation logic, across strategies and periods.
 
 use idlewait::config::paper_default;
-use idlewait::config::schema::{ArrivalSpec, StrategyKind};
+use idlewait::config::schema::{ArrivalSpec, PolicySpec};
 use idlewait::coordinator::requests::Periodic;
 use idlewait::energy::analytical::Analytical;
 use idlewait::strategies::simulate::simulate;
@@ -20,10 +20,10 @@ fn des_matches_eq3_across_grid() {
     let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
 
     for kind in [
-        StrategyKind::OnOff,
-        StrategyKind::IdleWaiting,
-        StrategyKind::IdleWaitingM1,
-        StrategyKind::IdleWaitingM12,
+        PolicySpec::OnOff,
+        PolicySpec::IdleWaiting,
+        PolicySpec::IdleWaitingM1,
+        PolicySpec::IdleWaitingM12,
     ] {
         for t_ms in [37.0, 40.0, 60.0, 89.0, 90.0, 120.0] {
             let t_req = Duration::from_millis(t_ms);
@@ -33,9 +33,9 @@ fn des_matches_eq3_across_grid() {
             let mut capped = cfg.clone();
             capped.workload.arrival = ArrivalSpec::Periodic { period: t_req };
             capped.workload.max_items = Some(expected);
-            let strategy = build(kind, &model);
+            let mut policy = build(kind, &model);
             let mut arrivals = Periodic { period: t_req };
-            let report = simulate(&capped, strategy.as_ref(), &mut arrivals);
+            let report = simulate(&capped, policy.as_mut(), &mut arrivals);
             assert_eq!(report.items, expected, "{kind} at {t_ms} ms");
             assert!(
                 report.energy_exact <= cfg.workload.energy_budget * 1.0005,
@@ -61,9 +61,9 @@ fn eq3_is_tight_against_des() {
     let mut capped = cfg.clone();
     capped.workload.max_items = Some(n + 1);
     capped.workload.arrival = ArrivalSpec::Periodic { period: t_req };
-    let strategy = build(StrategyKind::IdleWaiting, &model);
+    let mut policy = build(PolicySpec::IdleWaiting, &model);
     let mut arrivals = Periodic { period: t_req };
-    let report = simulate(&capped, strategy.as_ref(), &mut arrivals);
+    let report = simulate(&capped, policy.as_mut(), &mut arrivals);
     assert!(
         report.energy_exact > cfg.workload.energy_budget,
         "n_max+1 items must exceed the budget ({} J <= {} J)",
@@ -79,14 +79,14 @@ fn full_budget_validation_at_40ms() {
     let cfg = paper_default();
     let result = idlewait::experiments::validation::run(&cfg, 40.0);
     for row in &result.rows {
-        assert!(row.items_gap < 0.002, "{}: {}", row.strategy, row.items_gap);
-        assert!(row.lifetime_gap < 0.002, "{}", row.strategy);
+        assert!(row.items_gap < 0.002, "{}: {}", row.policy, row.items_gap);
+        assert!(row.lifetime_gap < 0.002, "{}", row.policy);
         assert!(row.monitor_rel_error < 0.03);
     }
     // absolute item counts near the paper's Fig 8 values
-    let onoff = result.row(StrategyKind::OnOff);
+    let onoff = result.row(PolicySpec::OnOff);
     assert!(onoff.des_items.abs_diff(346_073) < 300, "{}", onoff.des_items);
-    let iw = result.row(StrategyKind::IdleWaiting);
+    let iw = result.row(PolicySpec::IdleWaiting);
     assert!(iw.des_items.abs_diff(771_807) < 800, "{}", iw.des_items);
 }
 
@@ -99,9 +99,9 @@ fn marginal_item_energy_matches() {
     let t_req = Duration::from_millis(40.0);
 
     for (kind, expected_mj) in [
-        (StrategyKind::OnOff, model.item.e_item_onoff().millijoules()),
+        (PolicySpec::OnOff, model.item.e_item_onoff().millijoules()),
         (
-            StrategyKind::IdleWaiting,
+            PolicySpec::IdleWaiting,
             (model.item.e_active + model.e_idle(t_req, model.item.idle_power_baseline))
                 .millijoules(),
         ),
@@ -109,9 +109,9 @@ fn marginal_item_energy_matches() {
         let run = |n: u64| {
             let mut capped = cfg.clone();
             capped.workload.max_items = Some(n);
-            let strategy = build(kind, &model);
+            let mut policy = build(kind, &model);
             let mut arrivals = Periodic { period: t_req };
-            simulate(&capped, strategy.as_ref(), &mut arrivals)
+            simulate(&capped, policy.as_mut(), &mut arrivals)
                 .energy_exact
                 .millijoules()
         };
@@ -123,17 +123,18 @@ fn marginal_item_energy_matches() {
     }
 }
 
-/// Adaptive ≥ best fixed strategy on periodic workloads (it should
-/// degenerate to the winner).
+/// The oracle ≥ best fixed policy on periodic workloads (it should
+/// degenerate to the winner, at the M1+2 idle mode it is built with).
 #[test]
-fn adaptive_degenerates_to_winner_on_periodic() {
+fn oracle_degenerates_to_winner_on_periodic() {
     let cfg = paper_default();
     let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
-    for t_ms in [40.0, 200.0] {
+    // 40 ms is below, 600 ms above the 499.06 ms M1+2 crossover
+    for t_ms in [40.0, 600.0] {
         let t_req = Duration::from_millis(t_ms);
-        let adaptive = model.predict(StrategyKind::Adaptive, t_req).n_max.unwrap();
-        let onoff = model.predict(StrategyKind::OnOff, t_req).n_max.unwrap_or(0);
-        let iw = model.predict(StrategyKind::IdleWaiting, t_req).n_max.unwrap_or(0);
-        assert_eq!(adaptive, onoff.max(iw), "t={t_ms}");
+        let oracle = model.predict(PolicySpec::Oracle, t_req).n_max.unwrap();
+        let onoff = model.predict(PolicySpec::OnOff, t_req).n_max.unwrap_or(0);
+        let iw = model.predict(PolicySpec::IdleWaitingM12, t_req).n_max.unwrap_or(0);
+        assert_eq!(oracle, onoff.max(iw), "t={t_ms}");
     }
 }

@@ -3,7 +3,7 @@
 
 use idlewait::config::loader::{load_str, LoadError, PAPER_DEFAULT_YAML};
 use idlewait::config::paper_default;
-use idlewait::config::schema::{ArrivalSpec, StrategyKind};
+use idlewait::config::schema::{ArrivalSpec, PolicySpec};
 use idlewait::energy::analytical::Analytical;
 use idlewait::util::units::Duration;
 
@@ -78,17 +78,20 @@ fn arrival_kinds_parse_and_flow() {
 }
 
 #[test]
-fn every_strategy_name_loads() {
+fn every_policy_name_loads() {
     for name in [
         "on-off",
         "idle-waiting",
         "idle-waiting-m1",
         "idle-waiting-m12",
-        "adaptive",
+        "adaptive", // legacy alias for oracle
+        "oracle",
+        "timeout",
+        "ema-predictor",
     ] {
         let doc = PAPER_DEFAULT_YAML.replace("strategy: idle-waiting\n", &format!("strategy: {name}\n"));
         let cfg = load_str(&doc).unwrap();
-        assert_eq!(cfg.workload.strategy.name(), StrategyKind::parse(name).unwrap().name());
+        assert_eq!(cfg.workload.policy.name(), PolicySpec::parse(name).unwrap().name());
     }
 }
 

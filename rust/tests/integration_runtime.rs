@@ -79,7 +79,7 @@ fn serving_500_requests_with_both_variants() {
         let mut arr = Periodic {
             period: Duration::from_millis(40.0),
         };
-        let report = serve(&cfg, &rt, &IdleWaiting::method12(), &mut arr).unwrap();
+        let report = serve(&cfg, &rt, &mut IdleWaiting::method12(), &mut arr).unwrap();
         assert_eq!(report.metrics.requests, 500, "{variant:?}");
         assert_eq!(report.configurations, 1);
         assert_eq!(report.metrics.deadline_misses, 0, "{variant:?}");
@@ -93,7 +93,7 @@ fn serving_500_requests_with_both_variants() {
 fn serving_energy_ledger_matches_strategy_choice() {
     let Some(rt) = runtime() else { return };
     let sim = paper_default();
-    let run = |strategy: &dyn idlewait::strategies::strategy::Strategy| {
+    let run = |policy: &mut dyn idlewait::strategies::strategy::Policy| {
         let cfg = ServerConfig {
             sim: &sim,
             variant: Variant::Forecast,
@@ -102,10 +102,10 @@ fn serving_energy_ledger_matches_strategy_choice() {
         let mut arr = Periodic {
             period: Duration::from_millis(40.0),
         };
-        serve(&cfg, &rt, strategy, &mut arr).unwrap()
+        serve(&cfg, &rt, policy, &mut arr).unwrap()
     };
-    let onoff = run(&OnOff);
-    let iw = run(&IdleWaiting::baseline());
+    let onoff = run(&mut OnOff);
+    let iw = run(&mut IdleWaiting::baseline());
     // On-Off pays ~11.98 mJ per request, IW ~5.37 + one-time init
     assert!(onoff.metrics.sim_energy > iw.metrics.sim_energy);
     assert_eq!(onoff.configurations, 50);
@@ -124,7 +124,7 @@ fn serving_survives_bursty_poisson_arrivals() {
         max_requests: 200,
     };
     let mut arr = Poisson::new(Duration::from_millis(40.0), Duration::from_millis(0.05), 7);
-    let report = serve(&cfg, &rt, &IdleWaiting::baseline(), &mut arr).unwrap();
+    let report = serve(&cfg, &rt, &mut IdleWaiting::baseline(), &mut arr).unwrap();
     assert_eq!(report.metrics.requests, 200);
     assert!(report.metrics.sim_energy.joules() > 0.0);
 }

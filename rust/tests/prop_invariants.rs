@@ -2,7 +2,7 @@
 //! simulation core (via the in-tree mini-prop framework, DESIGN.md §3).
 
 use idlewait::config::paper_default;
-use idlewait::config::schema::{FpgaModel, SpiConfig, StrategyKind};
+use idlewait::config::schema::{FpgaModel, SpiConfig, PolicySpec};
 use idlewait::coordinator::requests::Periodic;
 use idlewait::device::battery::Battery;
 use idlewait::device::bitstream::Bitstream;
@@ -51,7 +51,7 @@ fn prop_items_monotone_in_budget() {
             let t = Duration::from_millis(t_ms.0);
             let small = Analytical::new(&cfg.item, Energy::from_joules(budget_j.0));
             let large = Analytical::new(&cfg.item, Energy::from_joules(budget_j.0 * 2.0));
-            StrategyKind::ALL.iter().all(|&k| {
+            PolicySpec::ALL.iter().all(|&k| {
                 let a = small.predict(k, t).n_max.unwrap_or(0);
                 let b = large.predict(k, t).n_max.unwrap_or(0);
                 b >= a
@@ -66,9 +66,9 @@ fn prop_power_saving_never_hurts() {
     let m = model();
     check::<InRange<1, 1000>>("saving-ordering", default_cases(), |t_ms| {
         let t = Duration::from_millis(t_ms.0.max(0.05));
-        let base = m.n_max_idle_waiting(t, m.item.idle_power(StrategyKind::IdleWaiting));
-        let m1 = m.n_max_idle_waiting(t, m.item.idle_power(StrategyKind::IdleWaitingM1));
-        let m12 = m.n_max_idle_waiting(t, m.item.idle_power(StrategyKind::IdleWaitingM12));
+        let base = m.n_max_idle_waiting(t, m.item.idle_power(PolicySpec::IdleWaiting));
+        let m1 = m.n_max_idle_waiting(t, m.item.idle_power(PolicySpec::IdleWaitingM1));
+        let m12 = m.n_max_idle_waiting(t, m.item.idle_power(PolicySpec::IdleWaitingM12));
         m12 >= m1 && m1 >= base
     });
 }
@@ -189,10 +189,10 @@ fn prop_des_equals_analytical_randomized() {
         24, // each case simulates a few hundred items
         |(budget_j, t_ms, kind_idx)| {
             let kind = [
-                StrategyKind::OnOff,
-                StrategyKind::IdleWaiting,
-                StrategyKind::IdleWaitingM1,
-                StrategyKind::IdleWaitingM12,
+                PolicySpec::OnOff,
+                PolicySpec::IdleWaiting,
+                PolicySpec::IdleWaitingM1,
+                PolicySpec::IdleWaitingM12,
             ][kind_idx.0 as usize];
             let t_req = Duration::from_millis(t_ms.0);
             let model = Analytical::new(&base_cfg.item, Energy::from_joules(budget_j.0));
@@ -201,9 +201,9 @@ fn prop_des_equals_analytical_randomized() {
             };
             let mut capped = base_cfg.clone();
             capped.workload.max_items = Some(expected + 5);
-            let strategy = build(kind, &model);
+            let mut policy = build(kind, &model);
             let mut arrivals = Periodic { period: t_req };
-            let report = simulate(&capped, strategy.as_ref(), &mut arrivals);
+            let report = simulate(&capped, policy.as_mut(), &mut arrivals);
             // the DES (full 4147 J board) must afford ≥ expected items, and
             // its energy after `expected` items must fit the random budget:
             // check via marginal accounting
@@ -214,7 +214,7 @@ fn prop_des_equals_analytical_randomized() {
             // Table-2 config-energy difference (~1e-4 relative)
             let per = report.energy_exact.joules() / report.items as f64;
             let eq_total = match kind {
-                StrategyKind::OnOff => model.e_sum_onoff(expected),
+                PolicySpec::OnOff => model.e_sum_onoff(expected),
                 _ => model.e_sum_idle_waiting(
                     expected,
                     t_req,

@@ -1,0 +1,170 @@
+//! Properties of the online gap policies (via the in-tree mini-prop
+//! framework): the ski-rental competitive bound and the EMA predictor's
+//! degeneracy on periodic arrivals.
+
+use idlewait::config::paper_default;
+use idlewait::config::schema::ArrivalSpec;
+use idlewait::coordinator::requests::{Periodic, TraceReplay};
+use idlewait::device::rails::PowerSaving;
+use idlewait::energy::analytical::Analytical;
+use idlewait::strategies::simulate::{simulate, SimReport};
+use idlewait::strategies::strategy::{EmaPredictor, IdleWaiting, OnOff, Oracle, Policy, Timeout};
+use idlewait::testing::prop::{check, Below};
+use idlewait::util::rng::Xoshiro256ss;
+use idlewait::util::units::Duration;
+
+fn model() -> Analytical {
+    let cfg = paper_default();
+    Analytical::new(&cfg.item, cfg.workload.energy_budget)
+}
+
+/// Run a policy over an explicit gap trace (each gap used exactly once:
+/// n gaps → n+1 items).
+fn run_trace(policy: &mut dyn Policy, gaps: &[Duration]) -> SimReport {
+    let mut cfg = paper_default();
+    cfg.workload.max_items = Some(gaps.len() as u64 + 1);
+    let mut arrivals = TraceReplay::new(gaps.to_vec());
+    simulate(&cfg, policy, &mut arrivals)
+}
+
+/// The DES cost of one power-on + configuration (FSM mechanism), in mJ —
+/// measured, so the gap-energy extraction is self-consistent with the
+/// simulator rather than with Table 2.
+fn config_cycle_mj() -> f64 {
+    let mut cfg = paper_default();
+    cfg.workload.max_items = Some(1);
+    let mut arrivals = Periodic {
+        period: Duration::from_millis(40.0),
+    };
+    let report = simulate(&cfg, &mut OnOff, &mut arrivals);
+    let m = model();
+    report.energy_exact.millijoules() - m.item.e_active.millijoules()
+}
+
+/// Energy attributable to the gaps alone: total minus the active phases
+/// and minus the initial configuration. Reconfigurations after power-off
+/// gaps stay included — they are the price of the off decision.
+fn gap_energy_mj(report: &SimReport, config_cycle_mj: f64) -> f64 {
+    let m = model();
+    report.energy_exact.millijoules()
+        - report.items as f64 * m.item.e_active.millijoules()
+        - config_cycle_mj
+}
+
+/// Ski-rental bound: on ANY positive gap trace, the Timeout policy at
+/// τ = crossover spends at most 2× the clairvoyant oracle's gap energy
+/// (plus the ~1e-4 relative FSM-vs-Table-2 config-energy difference).
+#[test]
+fn prop_timeout_is_2_competitive_vs_oracle() {
+    let m = model();
+    let c = config_cycle_mj();
+    check::<Below<1_000>>("timeout-2-competitive", 12, |seed| {
+        let mut rng = Xoshiro256ss::new(seed.0 ^ 0x5C11);
+        // gaps straddling the 89.21 ms crossover, heavy on both sides
+        let gaps: Vec<Duration> = (0..24)
+            .map(|_| {
+                if rng.bernoulli(0.5) {
+                    Duration::from_millis(rng.uniform(0.5, 89.0))
+                } else {
+                    Duration::from_millis(rng.uniform(89.5, 1500.0))
+                }
+            })
+            .collect();
+        let timeout = gap_energy_mj(
+            &run_trace(&mut Timeout::from_model(&m, PowerSaving::BASELINE), &gaps),
+            c,
+        );
+        let oracle = gap_energy_mj(
+            &run_trace(&mut Oracle::from_model(&m, PowerSaving::BASELINE), &gaps),
+            c,
+        );
+        timeout <= 2.0 * oracle * 1.01 + 1e-6
+    });
+}
+
+/// The oracle is a genuine lower bound for the policies it is the
+/// benchmark of: never more gap energy than either static policy.
+#[test]
+fn prop_oracle_lower_bounds_the_statics() {
+    let m = model();
+    let c = config_cycle_mj();
+    check::<Below<1_000>>("oracle-lower-bound", 8, |seed| {
+        let mut rng = Xoshiro256ss::new(seed.0 ^ 0x0AC1E);
+        let gaps: Vec<Duration> = (0..24)
+            .map(|_| Duration::from_millis(rng.uniform(0.5, 1000.0)))
+            .collect();
+        let oracle = gap_energy_mj(
+            &run_trace(&mut Oracle::from_model(&m, PowerSaving::BASELINE), &gaps),
+            c,
+        );
+        let onoff = gap_energy_mj(&run_trace(&mut OnOff, &gaps), c);
+        let iw = gap_energy_mj(&run_trace(&mut IdleWaiting::baseline(), &gaps), c);
+        let slack = 1.001; // FSM vs Table-2 config-energy tolerance
+        oracle <= onoff * slack + 1e-6 && oracle <= iw * slack + 1e-6
+    });
+}
+
+/// On strictly periodic arrivals below the crossover, the EMA predictor
+/// degenerates to Idle-Waiting exactly: its hedged first gap already
+/// pure-idles (idle window < τ), and every later prediction equals the
+/// period.
+#[test]
+fn ema_degenerates_to_idle_waiting_below_crossover() {
+    let mut cfg = paper_default();
+    cfg.workload.max_items = Some(400);
+    let m = model();
+    let run = |policy: &mut dyn Policy| {
+        let mut arrivals = Periodic {
+            period: Duration::from_millis(40.0),
+        };
+        simulate(&cfg, policy, &mut arrivals)
+    };
+    let ema = run(&mut EmaPredictor::from_model(
+        &m,
+        PowerSaving::BASELINE,
+        EmaPredictor::DEFAULT_ALPHA,
+    ));
+    let iw = run(&mut IdleWaiting::baseline());
+    assert_eq!(ema.items, iw.items);
+    assert_eq!(ema.configurations, 1);
+    assert_eq!(ema.decisions.idled, 399);
+    assert_eq!(ema.decisions.powered_off, 0);
+    assert_eq!(ema.energy_exact, iw.energy_exact, "exact degeneracy");
+}
+
+/// Above the crossover the EMA predictor converges to On-Off after the
+/// single hedged first gap, paying at most one ski-rental premium
+/// (τ · P_idle) over the pure On-Off run.
+#[test]
+fn ema_degenerates_to_onoff_above_crossover() {
+    let mut cfg = paper_default();
+    cfg.workload.arrival = ArrivalSpec::Periodic {
+        period: Duration::from_millis(200.0),
+    };
+    cfg.workload.max_items = Some(400);
+    let m = model();
+    let run = |policy: &mut dyn Policy| {
+        let mut arrivals = Periodic {
+            period: Duration::from_millis(200.0),
+        };
+        simulate(&cfg, policy, &mut arrivals)
+    };
+    let ema = run(&mut EmaPredictor::from_model(
+        &m,
+        PowerSaving::BASELINE,
+        EmaPredictor::DEFAULT_ALPHA,
+    ));
+    let onoff = run(&mut OnOff);
+    assert_eq!(ema.items, onoff.items);
+    // first gap: hedge (timer expires), then pure power-off decisions
+    assert_eq!(ema.decisions.timeouts_expired, 1);
+    assert_eq!(ema.decisions.powered_off, 399);
+    assert_eq!(ema.configurations, onoff.configurations);
+    let tau = idlewait::energy::crossover::ski_rental_timeout(&m, m.item.idle_power_baseline);
+    let premium_mj = (m.item.idle_power_baseline * tau).millijoules();
+    let extra = ema.energy_exact.millijoules() - onoff.energy_exact.millijoules();
+    assert!(
+        extra >= 0.0 && extra <= premium_mj * 1.01,
+        "extra {extra} vs premium {premium_mj}"
+    );
+}

@@ -5,6 +5,7 @@
 //! and step sizes.
 
 use idlewait::config::paper_default;
+use idlewait::experiments::exp4_policies::{self, Exp4Config};
 use idlewait::experiments::{ablation, exp2, exp3};
 use idlewait::runner::{Grid, SweepRunner};
 use idlewait::testing::prop::{check, Below, InRange};
@@ -53,6 +54,31 @@ fn exp3_csv_identical_at_any_thread_count() {
         .render();
     for threads in [2, 5, 8] {
         let out = exp3::run_threaded(&cfg, 0.5, &SweepRunner::new(threads))
+            .to_csv()
+            .render();
+        assert_eq!(out, reference, "threads={threads}");
+    }
+}
+
+/// The exp4 policy × arrival grid contains stochastic arrival processes
+/// and stateful online policies — its CSV must still be byte-identical
+/// at any thread count (streams derive from the experiment seed and the
+/// arrival column, never from scheduling).
+#[test]
+fn exp4_csv_identical_at_any_thread_count() {
+    let cfg = paper_default();
+    let e4 = Exp4Config {
+        items: 200,
+        period_ms: 40.0,
+        seed: 9,
+    };
+    let reference = exp4_policies::run_threaded(&cfg, &e4, &SweepRunner::single())
+        .unwrap()
+        .to_csv()
+        .render();
+    for threads in [2, 5, 8] {
+        let out = exp4_policies::run_threaded(&cfg, &e4, &SweepRunner::new(threads))
+            .unwrap()
             .to_csv()
             .render();
         assert_eq!(out, reference, "threads={threads}");
