@@ -7,8 +7,12 @@
 //! repro exp3 [--step 0.01] [--csv PATH] [--threads N]
 //! repro validate [--period 40] [--threads N]
 //! repro exp4 [--items 2000] [--period 40] [--seed 4] [--csv PATH] [--threads N]
+//! repro gen-trace [--kind bursty-iot] [--gaps 256] [--period 40] [--seed 1]
+//!                 [--out PATH]        # synthesize a workloads/ gap trace
 //! repro serve [--policy idle-waiting] [--period 40] [--requests 100]
 //!             [--variant int8] [--arrival poisson]
+//!             [--timeout-ms T] [--ema-alpha A] [--window W] [--quantile Q]
+//!             [--saving m12]          # per-policy tunables
 //! repro plan --period 75              # policy recommendation
 //! repro all [--threads N]             # every experiment, paper order
 //! ```
@@ -20,15 +24,16 @@ use anyhow::{bail, Context, Result};
 
 use crate::cli::args::Args;
 use crate::config::loader::{load_file, paper_default, SimConfig};
-use crate::config::schema::{FpgaModel, PolicySpec};
+use crate::config::schema::{parse_saving, FpgaModel, PolicyParams, PolicySpec};
 use crate::coordinator::requests;
 use crate::coordinator::server::{serve, ServerConfig};
+use crate::coordinator::tracegen::{self, TraceKind};
 use crate::energy::analytical::Analytical;
 use crate::energy::crossover;
 use crate::experiments::{exp1, exp2, exp3, fig2, validation};
 use crate::runner::SweepRunner;
 use crate::runtime::inference::Variant;
-use crate::strategies::strategy::build;
+use crate::strategies::strategy::build_with;
 use crate::util::units::Duration;
 
 pub const USAGE: &str = "\
@@ -41,7 +46,8 @@ COMMANDS:
   exp1        Experiment 1 (Fig 7): configuration-parameter sweep
   exp2        Experiment 2 (Figs 8-9): Idle-Waiting vs On-Off
   exp3        Experiment 3 (Table 3, Figs 10-11): idle power-saving
-  exp4        Online gap policies \u{d7} arrival processes (\u{a7}7 future work)
+  exp4        Online gap policies \u{d7} tunables \u{d7} arrival processes (\u{a7}7 future work)
+  gen-trace   Synthesize a gap-trace workload file (bursty-iot, diurnal-poisson, onoff-mmpp)
   validate    \u{a7}5.3 validation: analytical model vs discrete-event sim
   ablate      ablations: flash floor, power-on transient, multi-accel
   multi       event-driven multi-accelerator simulation (\u{a7}4.2 extension)
@@ -76,6 +82,33 @@ fn sweep_runner(args: &Args) -> Result<SweepRunner> {
     })
 }
 
+/// Overlay the per-policy tunable flags (`--timeout-ms`, `--ema-alpha`,
+/// `--window`, `--quantile`, `--saving`) onto the config's
+/// `policy_params`, then range-check the result — the same validation
+/// the config loader applies, so a bad flag fails with the same
+/// actionable message instead of reaching a sweep.
+fn policy_params_from_args(args: &Args, base: PolicyParams) -> Result<PolicyParams> {
+    let mut params = base;
+    if let Some(ms) = args.f64_opt("timeout-ms")? {
+        params.timeout = Some(Duration::from_millis(ms));
+    }
+    if let Some(a) = args.f64_opt("ema-alpha")? {
+        params.ema_alpha = a;
+    }
+    if let Some(w) = args.u64_opt("window")? {
+        params.window = w as usize;
+    }
+    if let Some(q) = args.f64_opt("quantile")? {
+        params.quantile = q;
+    }
+    if let Some(name) = args.str_opt("saving") {
+        params.saving = parse_saving(name)
+            .with_context(|| format!("unknown saving level '{name}' (expected baseline, m1 or m12)"))?;
+    }
+    params.validate().map_err(anyhow::Error::msg)?;
+    Ok(params)
+}
+
 /// `--step` must be a positive, finite millisecond value — reject it at
 /// the CLI boundary with a readable error instead of hitting the grid's
 /// programmer-error assert.
@@ -99,6 +132,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "exp2" => cmd_exp2(rest),
         "exp3" => cmd_exp3(rest),
         "exp4" => cmd_exp4(rest),
+        "gen-trace" => cmd_gen_trace(rest),
         "validate" => cmd_validate(rest),
         "ablate" => cmd_ablate(rest),
         "multi" => cmd_multi(rest),
@@ -241,6 +275,59 @@ fn cmd_exp4(argv: &[String]) -> Result<()> {
         .context("loading the configured arrival trace for exp4")?;
     print!("{}", result.render());
     maybe_write_csv(&args, result.to_csv())
+}
+
+fn cmd_gen_trace(argv: &[String]) -> Result<()> {
+    let args = Args::parse(
+        argv,
+        &[
+            ("kind", true),
+            ("gaps", true),
+            ("period", true),
+            ("seed", true),
+            ("out", true),
+            ("help", false),
+        ],
+    )?;
+    if help_and_done(&args, "gen-trace") {
+        return Ok(());
+    }
+    let kind = match args.str_opt("kind") {
+        Some(name) => TraceKind::parse(name).with_context(|| {
+            format!(
+                "unknown trace kind '{name}' (expected one of: {})",
+                TraceKind::ALL.map(|k| k.name()).join(", ")
+            )
+        })?,
+        None => TraceKind::BurstyIot,
+    };
+    let gaps = args.u64_opt("gaps")?.unwrap_or(256) as usize;
+    if gaps == 0 {
+        bail!("--gaps must be at least 1");
+    }
+    let period_ms = args.f64_opt("period")?.unwrap_or(40.0);
+    if !(period_ms.is_finite() && period_ms > 0.0) {
+        bail!("--period must be a positive number of milliseconds (got {period_ms})");
+    }
+    let seed = args.u64_opt("seed")?.unwrap_or(1);
+    match args.str_opt("out") {
+        Some(path) => {
+            let values = tracegen::write_file(path, kind, gaps, period_ms, seed)
+                .with_context(|| format!("writing trace {path}"))?;
+            let mean = values.iter().sum::<f64>() / values.len() as f64;
+            println!(
+                "wrote {path}: {} {} gaps, nominal {period_ms} ms, seed {seed} (mean {:.2} ms)",
+                values.len(),
+                kind.name(),
+                mean
+            );
+        }
+        None => {
+            let values = tracegen::generate(kind, gaps, period_ms, seed);
+            print!("{}", tracegen::render(kind, &values, period_ms, seed));
+        }
+    }
+    Ok(())
 }
 
 fn cmd_validate(argv: &[String]) -> Result<()> {
@@ -388,6 +475,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             ("arrival", true),
             ("trace", true),
             ("seed", true),
+            ("timeout-ms", true),
+            ("ema-alpha", true),
+            ("window", true),
+            ("quantile", true),
+            ("saving", true),
             ("config", true),
             ("help", false),
         ],
@@ -401,6 +493,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             .with_context(|| format!("unknown policy '{name}'"))?,
         None => config.workload.policy,
     };
+    let params = policy_params_from_args(&args, config.workload.params)?;
     let period = Duration::from_millis(args.f64_opt("period")?.unwrap_or(40.0));
     let max_requests = args.u64_opt("requests")?.unwrap_or(100);
     let seed = args.u64_opt("seed")?.unwrap_or(0);
@@ -442,7 +535,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     runtime.self_check().context("runtime self-check")?;
 
     let model = Analytical::new(&config.item, config.workload.energy_budget);
-    let mut policy = build(kind, &model);
+    let mut policy = build_with(kind, &model, &params);
     let server_cfg = ServerConfig {
         sim: &config,
         variant,
@@ -483,6 +576,16 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
     let model = Analytical::new(&config.item, config.workload.energy_budget);
 
     println!("policy plan for T_req = {:.2} ms, budget = {:.0} J:", period.millis(), config.workload.energy_budget.joules());
+    // The closed forms behind `predict` evaluate the advanced policies at
+    // their default tunables (M1+2 idle mode, break-even τ) — warn rather
+    // than silently describe a different deployment than the config's.
+    if config.workload.params != PolicyParams::default() {
+        println!(
+            "note: this config sets policy_params, which the closed-form plan ignores \
+             (predictions assume the default M1+2 idle mode and break-even timeout); \
+             simulation commands (exp4, serve, multi) do honour them"
+        );
+    }
     let mut best: Option<(PolicySpec, u64)> = None;
     for kind in [
         PolicySpec::OnOff,
@@ -490,6 +593,8 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
         PolicySpec::IdleWaitingM1,
         PolicySpec::IdleWaitingM12,
         PolicySpec::Timeout,
+        PolicySpec::RandomizedSkiRental,
+        PolicySpec::WindowedQuantile,
     ] {
         let p = model.predict(kind, period);
         match p.n_max {
@@ -610,6 +715,33 @@ mod tests {
     }
 
     #[test]
+    fn gen_trace_prints_to_stdout() {
+        run(&sv(&["gen-trace", "--kind", "mmpp", "--gaps", "16"])).unwrap();
+    }
+
+    #[test]
+    fn gen_trace_rejects_bad_inputs() {
+        assert!(run(&sv(&["gen-trace", "--kind", "warp"])).is_err());
+        assert!(run(&sv(&["gen-trace", "--gaps", "0"])).is_err());
+        assert!(run(&sv(&["gen-trace", "--period", "-4"])).is_err());
+    }
+
+    #[test]
+    fn serve_rejects_out_of_range_tunables() {
+        // tunable validation fires before the artifact lookup, so these
+        // fail with the params message whether or not artifacts exist
+        for argv in [
+            vec!["serve", "--policy", "quantile", "--quantile", "1.5"],
+            vec!["serve", "--policy", "quantile", "--window", "0"],
+            vec!["serve", "--policy", "timeout", "--timeout-ms", "-1"],
+            vec!["serve", "--policy", "ema", "--ema-alpha", "7"],
+            vec!["serve", "--saving", "turbo"],
+        ] {
+            assert!(run(&sv(&argv)).is_err(), "{argv:?}");
+        }
+    }
+
+    #[test]
     fn fig2_series_runs() {
         run(&sv(&["fig2", "--series", "--threads", "2"])).unwrap();
     }
@@ -627,8 +759,8 @@ mod tests {
     #[test]
     fn helps_run() {
         for cmd in [
-            "fig2", "exp1", "exp2", "exp3", "exp4", "validate", "ablate", "multi", "serve",
-            "plan", "all",
+            "fig2", "exp1", "exp2", "exp3", "exp4", "gen-trace", "validate", "ablate", "multi",
+            "serve", "plan", "all",
         ] {
             run(&sv(&[cmd, "--help"])).unwrap();
         }

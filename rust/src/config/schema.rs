@@ -7,6 +7,7 @@
 
 use std::fmt;
 
+use crate::device::rails::PowerSaving;
 use crate::util::json::Json;
 use crate::util::units::{Duration, Energy, Power};
 
@@ -60,6 +61,15 @@ fn opt_bool(v: &Json, path: &str, key: &str, default: bool) -> Result<bool, Conf
     }
 }
 
+fn opt_u64(v: &Json, path: &str, key: &str) -> Result<Option<u64>, ConfigError> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(x) => x.as_u64().map(Some).ok_or_else(|| {
+            cerr(&format!("{path}.{key}"), "expected a non-negative integer")
+        }),
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Gap-policy selection
 // ---------------------------------------------------------------------------
@@ -91,6 +101,12 @@ pub enum PolicySpec {
     /// EMA of observed gaps; idle iff the predicted gap is below the
     /// crossover, power off otherwise.
     EmaPredictor,
+    /// Quantile of a sliding window of observed gaps vs the crossover —
+    /// robust on heavy-tailed gap distributions where the EMA washes out.
+    WindowedQuantile,
+    /// Ski-rental with the timeout drawn per gap from the
+    /// e/(e−1)-competitive density over [0, τ].
+    RandomizedSkiRental,
 }
 
 impl PolicySpec {
@@ -106,6 +122,10 @@ impl PolicySpec {
             "oracle" | "adaptive" => Some(PolicySpec::Oracle),
             "timeout" | "ski-rental" | "idle-then-off" => Some(PolicySpec::Timeout),
             "ema" | "ema-predictor" => Some(PolicySpec::EmaPredictor),
+            "windowed-quantile" | "quantile" => Some(PolicySpec::WindowedQuantile),
+            "randomized-ski-rental" | "randomized-timeout" | "rand-ski-rental" => {
+                Some(PolicySpec::RandomizedSkiRental)
+            }
             _ => None,
         }
     }
@@ -119,10 +139,12 @@ impl PolicySpec {
             PolicySpec::Oracle => "oracle",
             PolicySpec::Timeout => "timeout",
             PolicySpec::EmaPredictor => "ema-predictor",
+            PolicySpec::WindowedQuantile => "windowed-quantile",
+            PolicySpec::RandomizedSkiRental => "randomized-ski-rental",
         }
     }
 
-    pub const ALL: [PolicySpec; 7] = [
+    pub const ALL: [PolicySpec; 9] = [
         PolicySpec::OnOff,
         PolicySpec::IdleWaiting,
         PolicySpec::IdleWaitingM1,
@@ -130,12 +152,150 @@ impl PolicySpec {
         PolicySpec::Oracle,
         PolicySpec::Timeout,
         PolicySpec::EmaPredictor,
+        PolicySpec::WindowedQuantile,
+        PolicySpec::RandomizedSkiRental,
     ];
 }
 
 impl fmt::Display for PolicySpec {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         f.write_str(self.name())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-policy tunables
+// ---------------------------------------------------------------------------
+
+/// The per-policy tunable table (config key `policy_params`). Every field
+/// has a paper-faithful default, so the block is entirely optional; each
+/// policy reads only the tunables it understands:
+///
+/// | tunable | used by | meaning |
+/// |---|---|---|
+/// | `saving` | all advanced policies | idle power-saving level (`baseline`/`m1`/`m12`) |
+/// | `timeout_ms` | `timeout`, `randomized-ski-rental`, cold-start hedges | idle window before cutting power (default: the analytical break-even τ) |
+/// | `ema_alpha` | `ema-predictor` | EMA smoothing factor in (0, 1] |
+/// | `window` | `windowed-quantile` | ring-buffer length W ≥ 1 of observed gaps |
+/// | `quantile` | `windowed-quantile` | planning quantile in (0, 1) |
+/// | `seed` | `randomized-ski-rental` | RNG stream for the per-gap timeout draw |
+///
+/// Range checks live in [`PolicyParams::validate`], called from
+/// `config::validate` on load and from the CLI when flags override the
+/// file, so out-of-range tunables fail with an actionable message before
+/// any sweep starts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PolicyParams {
+    /// Idle power-saving level the advanced policies idle at.
+    pub saving: PowerSaving,
+    /// Explicit ski-rental timeout; `None` = the analytical break-even τ.
+    pub timeout: Option<Duration>,
+    /// EMA smoothing factor in (0, 1].
+    pub ema_alpha: f64,
+    /// Sliding-window length for the windowed-quantile predictor.
+    pub window: usize,
+    /// Planning quantile in (0, 1) for the windowed-quantile predictor.
+    pub quantile: f64,
+    /// Seed for randomized policies (the per-gap timeout draw).
+    pub seed: u64,
+}
+
+impl PolicyParams {
+    pub const DEFAULT_EMA_ALPHA: f64 = 0.2;
+    pub const DEFAULT_WINDOW: usize = 64;
+    pub const DEFAULT_QUANTILE: f64 = 0.9;
+
+    fn from_json(v: &Json, path: &str) -> Result<PolicyParams, ConfigError> {
+        let mut p = PolicyParams::default();
+        if let Some(name) = v.get("saving") {
+            let name = name
+                .as_str()
+                .ok_or_else(|| cerr(&format!("{path}.saving"), "expected a string"))?;
+            p.saving = parse_saving(name).ok_or_else(|| {
+                cerr(
+                    &format!("{path}.saving"),
+                    format!("unknown saving level '{name}' (expected baseline, m1 or m12)"),
+                )
+            })?;
+        }
+        if let Some(ms) = opt_f64(v, path, "timeout_ms")? {
+            p.timeout = Some(Duration::from_millis(ms));
+        }
+        if let Some(a) = opt_f64(v, path, "ema_alpha")? {
+            p.ema_alpha = a;
+        }
+        if let Some(w) = opt_u64(v, path, "window")? {
+            p.window = w as usize;
+        }
+        if let Some(q) = opt_f64(v, path, "quantile")? {
+            p.quantile = q;
+        }
+        if let Some(s) = opt_u64(v, path, "seed")? {
+            p.seed = s;
+        }
+        Ok(p)
+    }
+
+    /// Range-check every tunable; returns an actionable message on error.
+    /// NaN, infinities and empty windows are rejected here so they cannot
+    /// propagate into a sweep as silent NaN energy totals or panics.
+    pub fn validate(&self) -> Result<(), String> {
+        if let Some(t) = self.timeout {
+            if !(t.secs().is_finite() && t.secs() > 0.0) {
+                return Err(format!(
+                    "policy_params.timeout_ms must be a positive, finite number of \
+                     milliseconds (got {}); omit it to use the analytical break-even τ",
+                    t.millis()
+                ));
+            }
+        }
+        if !(self.ema_alpha.is_finite() && self.ema_alpha > 0.0 && self.ema_alpha <= 1.0) {
+            return Err(format!(
+                "policy_params.ema_alpha must be in (0, 1] (got {}); \
+                 1.0 tracks the newest gap only, small values smooth harder",
+                self.ema_alpha
+            ));
+        }
+        if self.window == 0 {
+            return Err(
+                "policy_params.window must be at least 1 gap (got 0); the windowed-quantile \
+                 predictor needs history to plan from"
+                    .into(),
+            );
+        }
+        if !(self.quantile.is_finite() && self.quantile > 0.0 && self.quantile < 1.0) {
+            return Err(format!(
+                "policy_params.quantile must be strictly inside (0, 1) (got {}); \
+                 e.g. 0.9 plans against the 90th-percentile gap",
+                self.quantile
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Default for PolicyParams {
+    fn default() -> Self {
+        PolicyParams {
+            // M1+2 is the paper's best idle mode and what the advanced
+            // policies have always been built with.
+            saving: PowerSaving::M12,
+            timeout: None,
+            ema_alpha: Self::DEFAULT_EMA_ALPHA,
+            window: Self::DEFAULT_WINDOW,
+            quantile: Self::DEFAULT_QUANTILE,
+            seed: 0,
+        }
+    }
+}
+
+/// Parse a power-saving level name (config + CLI surface).
+pub fn parse_saving(s: &str) -> Option<PowerSaving> {
+    match s.to_ascii_lowercase().replace('_', "-").as_str() {
+        "baseline" | "none" => Some(PowerSaving::BASELINE),
+        "m1" | "method1" => Some(PowerSaving::M1),
+        "m12" | "m1+2" | "method1+2" | "method12" => Some(PowerSaving::M12),
+        _ => None,
     }
 }
 
@@ -229,6 +389,8 @@ pub struct WorkloadSpec {
     pub energy_budget: Energy,
     pub arrival: ArrivalSpec,
     pub policy: PolicySpec,
+    /// Per-policy tunables (`policy_params` block; all optional).
+    pub params: PolicyParams,
     /// Optional hard cap on simulated items (for bounded runs); None = run
     /// until the budget is exhausted, as in the paper.
     pub max_items: Option<u64>,
@@ -260,10 +422,15 @@ impl WorkloadSpec {
                 cerr(&format!("{path}.max_items"), "expected a non-negative integer")
             })?),
         };
+        let params = match v.get("policy_params") {
+            None | Some(Json::Null) => PolicyParams::default(),
+            Some(p) => PolicyParams::from_json(p, &format!("{path}.policy_params"))?,
+        };
         Ok(WorkloadSpec {
             energy_budget: Energy::from_joules(req_f64(v, path, "energy_budget_j")?),
             arrival: ArrivalSpec::from_json(v, path)?,
             policy,
+            params,
             max_items,
             seed: opt_f64(v, path, "seed")?.unwrap_or(0.0) as u64,
         })
@@ -680,6 +847,106 @@ workload_item:
         // the pre-rename name keeps loading old configs
         assert_eq!(PolicySpec::parse("adaptive"), Some(PolicySpec::Oracle));
         assert_eq!(PolicySpec::parse("ema"), Some(PolicySpec::EmaPredictor));
+        assert_eq!(
+            PolicySpec::parse("quantile"),
+            Some(PolicySpec::WindowedQuantile)
+        );
+        assert_eq!(
+            PolicySpec::parse("rand-ski-rental"),
+            Some(PolicySpec::RandomizedSkiRental)
+        );
+    }
+
+    #[test]
+    fn policy_params_default_when_absent() {
+        let v = yaml::parse(
+            "energy_budget_j: 1\nrequest_period_ms: 40\npolicy: windowed-quantile\n",
+        )
+        .unwrap();
+        let w = WorkloadSpec::from_json(&v).unwrap();
+        assert_eq!(w.params, PolicyParams::default());
+        assert_eq!(w.params.window, PolicyParams::DEFAULT_WINDOW);
+        assert_eq!(w.params.saving, PowerSaving::M12);
+        assert_eq!(w.params.timeout, None);
+    }
+
+    #[test]
+    fn policy_params_block_parses() {
+        let v = yaml::parse(
+            "energy_budget_j: 1\nrequest_period_ms: 40\npolicy: windowed-quantile\n\
+             policy_params:\n  saving: m1\n  timeout_ms: 120.5\n  ema_alpha: 0.35\n\
+             \x20 window: 16\n  quantile: 0.75\n  seed: 9\n",
+        )
+        .unwrap();
+        let p = WorkloadSpec::from_json(&v).unwrap().params;
+        assert_eq!(p.saving, PowerSaving::M1);
+        assert_eq!(p.timeout, Some(Duration::from_millis(120.5)));
+        assert!((p.ema_alpha - 0.35).abs() < 1e-12);
+        assert_eq!(p.window, 16);
+        assert!((p.quantile - 0.75).abs() < 1e-12);
+        assert_eq!(p.seed, 9);
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn policy_params_bad_saving_is_error() {
+        let v = yaml::parse(
+            "energy_budget_j: 1\nrequest_period_ms: 40\npolicy: timeout\n\
+             policy_params:\n  saving: turbo\n",
+        )
+        .unwrap();
+        let e = WorkloadSpec::from_json(&v).unwrap_err();
+        assert!(e.msg.contains("unknown saving level"), "{e}");
+    }
+
+    #[test]
+    fn policy_params_validate_rejects_out_of_range() {
+        let bad = [
+            PolicyParams {
+                quantile: 1.5,
+                ..PolicyParams::default()
+            },
+            PolicyParams {
+                quantile: 0.0,
+                ..PolicyParams::default()
+            },
+            PolicyParams {
+                quantile: f64::NAN,
+                ..PolicyParams::default()
+            },
+            PolicyParams {
+                window: 0,
+                ..PolicyParams::default()
+            },
+            PolicyParams {
+                timeout: Some(Duration::from_millis(-5.0)),
+                ..PolicyParams::default()
+            },
+            PolicyParams {
+                timeout: Some(Duration::from_millis(f64::INFINITY)),
+                ..PolicyParams::default()
+            },
+            PolicyParams {
+                ema_alpha: 0.0,
+                ..PolicyParams::default()
+            },
+            PolicyParams {
+                ema_alpha: 1.5,
+                ..PolicyParams::default()
+            },
+        ];
+        for p in bad {
+            assert!(p.validate().is_err(), "{p:?} should be rejected");
+        }
+        assert!(PolicyParams::default().validate().is_ok());
+    }
+
+    #[test]
+    fn saving_levels_parse() {
+        assert_eq!(parse_saving("baseline"), Some(PowerSaving::BASELINE));
+        assert_eq!(parse_saving("M1"), Some(PowerSaving::M1));
+        assert_eq!(parse_saving("method1+2"), Some(PowerSaving::M12));
+        assert_eq!(parse_saving("turbo"), None);
     }
 
     #[test]

@@ -92,6 +92,10 @@ fn validate_workload(cfg: &SimConfig) -> Result<(), String> {
     if w.energy_budget.joules() <= 0.0 || !w.energy_budget.joules().is_finite() {
         return Err("energy_budget_j must be positive and finite".into());
     }
+    // Per-policy tunables: reject out-of-range values (quantile ∉ (0,1),
+    // window = 0, negative timeout, …) at load time with an actionable
+    // message instead of propagating NaN or a panic into the sweep.
+    w.params.validate()?;
     let period = w.arrival.mean_period();
     if period.secs() <= 0.0 || !period.secs().is_finite() {
         return Err("request_period_ms must be positive and finite".into());
@@ -195,5 +199,35 @@ mod tests {
     fn zero_phase_time_rejected() {
         let e = mutate("time_ms: 0.0281", "time_ms: 0").unwrap_err();
         assert!(e.contains("inference"));
+    }
+
+    /// Out-of-range per-policy tunables must be rejected at load time
+    /// with an actionable message, not propagated as NaN/panic into a
+    /// sweep.
+    #[test]
+    fn out_of_range_policy_params_rejected() {
+        let with_params = |params_yaml: &str| -> Result<SimConfig, String> {
+            let doc = PAPER_DEFAULT_YAML.replace(
+                "  strategy: idle-waiting",
+                &format!("  strategy: windowed-quantile\n  policy_params:\n{params_yaml}"),
+            );
+            match load_str(&doc) {
+                Ok(cfg) => Ok(cfg),
+                Err(crate::config::loader::LoadError::Invalid(msg)) => Err(msg),
+                Err(other) => panic!("unexpected load error: {other}"),
+            }
+        };
+        let e = with_params("    quantile: 1.5\n").unwrap_err();
+        assert!(e.contains("quantile") && e.contains("(0, 1)"), "{e}");
+        let e = with_params("    quantile: 0\n").unwrap_err();
+        assert!(e.contains("quantile"), "{e}");
+        let e = with_params("    window: 0\n").unwrap_err();
+        assert!(e.contains("window") && e.contains("at least 1"), "{e}");
+        let e = with_params("    timeout_ms: -3\n").unwrap_err();
+        assert!(e.contains("timeout_ms") && e.contains("positive"), "{e}");
+        let e = with_params("    ema_alpha: 2\n").unwrap_err();
+        assert!(e.contains("ema_alpha"), "{e}");
+        // in-range tunables load fine
+        assert!(with_params("    quantile: 0.75\n    window: 8\n").is_ok());
     }
 }

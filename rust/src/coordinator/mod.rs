@@ -7,7 +7,9 @@ pub mod requests;
 pub mod multi_sim;
 pub mod scheduler;
 pub mod server;
+pub mod tracegen;
 
 pub use metrics::Metrics;
 pub use requests::{ArrivalProcess, Periodic, Poisson, TraceReplay};
+pub use tracegen::TraceKind;
 pub use server::{serve, SensorSource, ServeReport, ServerConfig, Served};

@@ -26,7 +26,7 @@ use crate::device::rails::PowerSaving;
 use crate::energy::analytical::Analytical;
 use crate::sim::{Ctx, Engine, SimTime};
 use crate::strategies::replay::ReplayCore;
-use crate::strategies::strategy::{build, GapContext, GapPlan, Policy as GapPolicy};
+use crate::strategies::strategy::{build_with, GapContext, GapPlan, Policy as GapPolicy};
 use crate::util::rng::Xoshiro256ss;
 use crate::util::stats::Welford;
 use crate::util::units::{Duration, Energy};
@@ -206,7 +206,8 @@ pub fn run(config: &SimConfig, ms: &MultiSimConfig) -> MultiSimReport {
             config.item.latency_without_config(),
         ),
         core,
-        gap_policy: build(ms.gap_policy, &model),
+        // the gap policy honours the config's `policy_params` tunables
+        gap_policy: build_with(ms.gap_policy, &model, &config.workload.params),
         current_plan: GapPlan::Idle(PowerSaving::BASELINE),
         plan_started: SimTime::ZERO,
         last_completion: SimTime::ZERO,

@@ -1,0 +1,270 @@
+//! Synthetic gap-trace generators — the `workloads/` corpus and the
+//! `repro gen-trace` command.
+//!
+//! Three workload shapes motivated by the pervasive-computing
+//! deployments the paper targets (and by the bursty edge workloads of
+//! the ElasticAI line of work):
+//!
+//! * **bursty-iot** — short intra-burst gaps followed by long silences;
+//!   the shape where online policies separate (bursts reward idling,
+//!   silences reward powering off).
+//! * **diurnal-poisson** — a Poisson process whose mean is modulated by
+//!   a sinusoidal "day/night" cycle, so the winning decision drifts
+//!   slowly through the trace.
+//! * **onoff-mmpp** — a two-state Markov-modulated Poisson process
+//!   (active ↔ quiet), the standard bursty-traffic model: dense gaps in
+//!   the ON state, sparse gaps in the OFF state.
+//!
+//! Generators are pure functions of `(kind, gaps, period_ms, seed)` via
+//! [`Xoshiro256ss`], so traces regenerate bit-for-bit anywhere. Gaps are
+//! produced directly in milliseconds (the trace-file unit) and written
+//! with Rust's shortest round-trip float formatting, so
+//! generate → write → [`TraceReplay`](super::requests::TraceReplay) →
+//! replay yields the *identical* gap sequence.
+
+use std::io::Write;
+
+use crate::util::rng::Xoshiro256ss;
+use crate::util::units::Duration;
+
+/// Smallest gap any generator emits (ms) — arrivals cannot land inside
+/// the previous item's data-offload tail (mirrors
+/// `ArrivalSpec::DEFAULT_POISSON_MIN_GAP_MS`).
+pub const MIN_GAP_MS: f64 = 0.05;
+
+/// The bundled workload shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TraceKind {
+    BurstyIot,
+    DiurnalPoisson,
+    OnOffMmpp,
+}
+
+impl TraceKind {
+    pub const ALL: [TraceKind; 3] = [
+        TraceKind::BurstyIot,
+        TraceKind::DiurnalPoisson,
+        TraceKind::OnOffMmpp,
+    ];
+
+    pub fn parse(s: &str) -> Option<TraceKind> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "bursty-iot" | "bursty" | "iot" => Some(TraceKind::BurstyIot),
+            "diurnal-poisson" | "diurnal" => Some(TraceKind::DiurnalPoisson),
+            "onoff-mmpp" | "mmpp" | "on-off-mmpp" => Some(TraceKind::OnOffMmpp),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceKind::BurstyIot => "bursty-iot",
+            TraceKind::DiurnalPoisson => "diurnal-poisson",
+            TraceKind::OnOffMmpp => "onoff-mmpp",
+        }
+    }
+
+    pub fn description(&self) -> &'static str {
+        match self {
+            TraceKind::BurstyIot => "request bursts separated by long silences",
+            TraceKind::DiurnalPoisson => "Poisson arrivals with a sinusoidal day/night rate",
+            TraceKind::OnOffMmpp => "two-state Markov-modulated Poisson (active/quiet)",
+        }
+    }
+}
+
+impl std::fmt::Display for TraceKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Generate `gaps` inter-arrival gaps (in ms) around the nominal
+/// `period_ms`, deterministically from `seed`.
+pub fn generate(kind: TraceKind, gaps: usize, period_ms: f64, seed: u64) -> Vec<f64> {
+    assert!(
+        period_ms.is_finite() && period_ms > 0.0,
+        "nominal period must be positive"
+    );
+    let mut rng = Xoshiro256ss::new(seed);
+    let mut out = Vec::with_capacity(gaps);
+    match kind {
+        TraceKind::BurstyIot => {
+            // bursts of 2–6 sub-period gaps, then a silence that sits
+            // beyond every idle mode's crossover at the 40 ms nominal
+            while out.len() < gaps {
+                for _ in 0..rng.range_inclusive(2, 6) {
+                    if out.len() < gaps {
+                        out.push(period_ms * rng.uniform(0.2, 0.6));
+                    }
+                }
+                if out.len() < gaps {
+                    out.push(period_ms * rng.uniform(13.0, 20.0));
+                }
+            }
+        }
+        TraceKind::DiurnalPoisson => {
+            // one "day" per 96 gaps; amplitude 0.8 swings the mean gap
+            // between 0.2× and 1.8× the nominal
+            const CYCLE: f64 = 96.0;
+            const AMPLITUDE: f64 = 0.8;
+            for i in 0..gaps {
+                let phase = 2.0 * std::f64::consts::PI * (i as f64) / CYCLE;
+                let mean = period_ms * (1.0 + AMPLITUDE * phase.sin());
+                out.push(rng.exponential(mean.max(MIN_GAP_MS)).max(MIN_GAP_MS));
+            }
+        }
+        TraceKind::OnOffMmpp => {
+            // ON: dense arrivals at 0.4× the nominal; OFF: sparse at 8×.
+            // Per-gap state persistence 0.9 (ON) / 0.7 (OFF).
+            let mut on = true;
+            for _ in 0..gaps {
+                let mean = if on { 0.4 * period_ms } else { 8.0 * period_ms };
+                out.push(rng.exponential(mean).max(MIN_GAP_MS));
+                let stay = if on { 0.9 } else { 0.7 };
+                if !rng.bernoulli(stay) {
+                    on = !on;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Convenience: the generated gaps as [`Duration`]s, quantized exactly
+/// like a written-then-replayed trace file (`Duration::from_millis` on
+/// the emitted ms values), so in-memory replay matches file replay.
+pub fn generate_durations(
+    kind: TraceKind,
+    gaps: usize,
+    period_ms: f64,
+    seed: u64,
+) -> Vec<Duration> {
+    generate(kind, gaps, period_ms, seed)
+        .into_iter()
+        .map(Duration::from_millis)
+        .collect()
+}
+
+/// Render a trace as the `workloads/` file format: a provenance comment
+/// (including the exact regeneration command), the `gap_ms` header, one
+/// gap per line in shortest round-trip float formatting.
+pub fn render(kind: TraceKind, gaps: &[f64], period_ms: f64, seed: u64) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "# idlewait gap trace: kind={} gaps={} period_ms={} seed={}\n",
+        kind.name(),
+        gaps.len(),
+        period_ms,
+        seed
+    ));
+    out.push_str(&format!("# {}\n", kind.description()));
+    out.push_str(&format!(
+        "# regenerate: repro gen-trace --kind {} --gaps {} --period {} --seed {}\n",
+        kind.name(),
+        gaps.len(),
+        period_ms,
+        seed
+    ));
+    out.push_str("gap_ms\n");
+    for g in gaps {
+        out.push_str(&format!("{g}\n"));
+    }
+    out
+}
+
+/// Generate and write a trace file; returns the gaps written.
+pub fn write_file(
+    path: impl AsRef<std::path::Path>,
+    kind: TraceKind,
+    gaps: usize,
+    period_ms: f64,
+    seed: u64,
+) -> std::io::Result<Vec<f64>> {
+    let values = generate(kind, gaps, period_ms, seed);
+    let mut file = std::fs::File::create(path)?;
+    file.write_all(render(kind, &values, period_ms, seed).as_bytes())?;
+    Ok(values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::requests::TraceReplay;
+
+    #[test]
+    fn generators_are_deterministic_and_positive() {
+        for kind in TraceKind::ALL {
+            let a = generate(kind, 128, 40.0, 7);
+            let b = generate(kind, 128, 40.0, 7);
+            assert_eq!(a, b, "{kind}: same seed must reproduce bit-for-bit");
+            assert_eq!(a.len(), 128, "{kind}");
+            assert!(a.iter().all(|&g| g.is_finite() && g >= MIN_GAP_MS), "{kind}");
+            let c = generate(kind, 128, 40.0, 8);
+            assert_ne!(a, c, "{kind}: different seeds must differ");
+        }
+    }
+
+    #[test]
+    fn bursty_iot_mixes_short_and_long_gaps() {
+        let gaps = generate(TraceKind::BurstyIot, 256, 40.0, 1);
+        // intra-burst gaps sit at 0.2–0.6× the period, silences at 13–20×
+        assert!(gaps.iter().any(|&g| g < 40.0 * 0.6 + 1e-9));
+        assert!(gaps.iter().any(|&g| g > 40.0 * 13.0 - 1e-9));
+        assert!(gaps.iter().all(|&g| g <= 40.0 * 20.0));
+    }
+
+    #[test]
+    fn diurnal_mean_tracks_the_nominal() {
+        let gaps = generate(TraceKind::DiurnalPoisson, 9_600, 40.0, 2);
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        // the sinusoid integrates out over whole cycles
+        assert!((mean - 40.0).abs() < 2.0, "mean={mean}");
+    }
+
+    #[test]
+    fn mmpp_has_two_visible_modes() {
+        let gaps = generate(TraceKind::OnOffMmpp, 512, 40.0, 3);
+        let dense = gaps.iter().filter(|&&g| g < 40.0).count();
+        let sparse = gaps.iter().filter(|&&g| g > 160.0).count();
+        assert!(dense > 100, "dense={dense}");
+        assert!(sparse > 30, "sparse={sparse}");
+    }
+
+    #[test]
+    fn kind_names_round_trip() {
+        for kind in TraceKind::ALL {
+            assert_eq!(TraceKind::parse(kind.name()), Some(kind));
+            assert!(!kind.description().is_empty());
+        }
+        assert_eq!(TraceKind::parse("MMPP"), Some(TraceKind::OnOffMmpp));
+        assert_eq!(TraceKind::parse("warp"), None);
+    }
+
+    /// The golden round-trip: generate → render to a file → replay the
+    /// file → the identical gap sequence (same f64 bits), because the
+    /// shortest round-trip float formatting is lossless.
+    #[test]
+    fn file_round_trip_is_exact() {
+        let dir = std::env::temp_dir().join("idlewait_tracegen_roundtrip");
+        std::fs::create_dir_all(&dir).unwrap();
+        for kind in TraceKind::ALL {
+            let path = dir.join(format!("{}.csv", kind.name()));
+            let written = write_file(&path, kind, 64, 40.0, 11).unwrap();
+            let mut replay = TraceReplay::from_file(&path).unwrap();
+            assert_eq!(replay.len(), 64);
+            let expect = generate_durations(kind, 64, 40.0, 11);
+            for (i, want) in expect.iter().enumerate() {
+                assert_eq!(replay.next_gap(), *want, "{kind} gap {i}");
+            }
+            assert_eq!(written, generate(kind, 64, 40.0, 11));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    #[should_panic(expected = "nominal period must be positive")]
+    fn zero_period_rejected() {
+        generate(TraceKind::BurstyIot, 8, 0.0, 0);
+    }
+}

@@ -68,7 +68,9 @@ impl ItemEnergetics {
             PolicySpec::IdleWaitingM12
             | PolicySpec::Oracle
             | PolicySpec::Timeout
-            | PolicySpec::EmaPredictor => RailSet::idle_power(PowerSaving::M12),
+            | PolicySpec::EmaPredictor
+            | PolicySpec::WindowedQuantile
+            | PolicySpec::RandomizedSkiRental => RailSet::idle_power(PowerSaving::M12),
             PolicySpec::OnOff => self.idle_power_baseline,
         }
     }
@@ -157,10 +159,17 @@ impl Analytical {
 
     /// Evaluate Eqs 3–4 for a policy at `t_req`. The online policies'
     /// closed forms assume strictly periodic arrivals (the only case with
-    /// a closed form): the oracle picks the per-item winner; `Timeout`
+    /// a closed form) **at their default tunables** — the M1+2 idle mode
+    /// and the analytical break-even τ that `strategy::build` constructs
+    /// them with; configured `PolicyParams` overrides apply to the
+    /// simulation paths, not to these predictions. The oracle picks the
+    /// per-item winner; `Timeout`
     /// additionally pays the ski-rental premium `P_idle·τ` per gap
-    /// whenever powering off wins; `EmaPredictor` locks onto the winner
-    /// after one observation, so asymptotically it equals the oracle.
+    /// whenever powering off wins; `EmaPredictor` and `WindowedQuantile`
+    /// lock onto the winner after one observation (every windowed
+    /// quantile of a constant gap is that gap), so asymptotically they
+    /// equal the oracle; `RandomizedSkiRental` pays the expected cost of
+    /// its per-gap timeout draw (see the branch below for the integral).
     pub fn predict(&self, policy: PolicySpec, t_req: Duration) -> Prediction {
         let (n_max, e_per_item) = match policy {
             PolicySpec::OnOff => (self.n_max_onoff(t_req), self.item.e_item_onoff()),
@@ -173,15 +182,53 @@ impl Analytical {
                     self.item.e_active + self.e_idle(t_req, p_idle),
                 )
             }
-            PolicySpec::Oracle | PolicySpec::EmaPredictor => {
+            PolicySpec::Oracle | PolicySpec::EmaPredictor | PolicySpec::WindowedQuantile => {
                 // per-gap winner at the M1+2 idle mode these policies are
-                // built with; EMA degenerates to it after one gap
+                // built with; the predictors degenerate to it after one gap
                 let onoff = self.predict(PolicySpec::OnOff, t_req);
                 let iw = self.predict(PolicySpec::IdleWaitingM12, t_req);
                 return if onoff.n_max.unwrap_or(0) >= iw.n_max.unwrap_or(0) {
                     Prediction { policy, ..onoff }
                 } else {
                     Prediction { policy, ..iw }
+                };
+            }
+            PolicySpec::RandomizedSkiRental => {
+                // Expected per-gap cost of drawing the timeout T from the
+                // e/(e−1)-competitive density p(t) = e^(t/τ)/(τ(e−1)) on
+                // [0, τ], against the fixed idle window w = T_req − T_lat:
+                //
+                //   E[gap] = P_idle·E[min(T, w)] + F(w)·E_buy
+                //
+                // with E_buy the power-cycle + reconfiguration cost and
+                //   F(w)         = (e^(w/τ) − 1)/(e − 1)          (w ≤ τ)
+                //   E[min(T,w)]  = ∫₀ʷ t·p(t) dt + w·(1 − F(w))
+                //                = (w·e^(w/τ) − τ·e^(w/τ) + τ)/(e − 1)
+                //                  + w·(e − e^(w/τ))/(e − 1).
+                // At w ≥ τ this collapses to E[T] = τ/(e − 1) and F = 1,
+                // i.e. exactly e/(e−1) × the oracle's cost — the classic
+                // competitive guarantee, here in joules.
+                let p_idle = self.item.idle_power(policy);
+                let tau = crate::energy::crossover::ski_rental_timeout(self, p_idle);
+                let w = (t_req - self.item.latency_without_config)
+                    .secs()
+                    .clamp(0.0, tau.secs());
+                let e = std::f64::consts::E;
+                let ew = (w / tau.secs()).exp();
+                let fire_prob = (ew - 1.0) / (e - 1.0);
+                let expected_idle_secs = (w * ew - tau.secs() * ew + tau.secs()) / (e - 1.0)
+                    + w * (e - ew) / (e - 1.0);
+                let e_buy = self.item.e_transient + self.item.e_config;
+                let per_item = self.item.e_active
+                    + p_idle * Duration::from_secs(expected_idle_secs)
+                    + e_buy * fire_prob;
+                let n = Some((self.budget / per_item).floor() as u64);
+                return Prediction {
+                    policy,
+                    t_req,
+                    n_max: n,
+                    lifetime: t_req * n.unwrap_or(0) as f64,
+                    e_per_item: per_item,
                 };
             }
             PolicySpec::Timeout => {
@@ -382,6 +429,60 @@ mod tests {
                 "t={t_ms}"
             );
         }
+    }
+
+    #[test]
+    fn windowed_quantile_prediction_equals_oracle_closed_form() {
+        // every windowed quantile of a constant gap is that gap, so on
+        // periodic arrivals the predictor locks onto the per-gap winner
+        let m = model();
+        for t_ms in [40.0, 200.0, 600.0] {
+            assert_eq!(
+                m.predict(PolicySpec::WindowedQuantile, ms(t_ms)).n_max,
+                m.predict(PolicySpec::Oracle, ms(t_ms)).n_max,
+                "t={t_ms}"
+            );
+        }
+    }
+
+    #[test]
+    fn randomized_ski_rental_expected_cost_far_beyond_tau() {
+        // w ≥ τ: the timer always fires; the expected per-item energy is
+        // On-Off plus the expected rent P_idle·τ/(e−1) — exactly e/(e−1)
+        // of the oracle's per-gap (buy) cost.
+        let m = model();
+        let p_idle = m.item.idle_power(PolicySpec::RandomizedSkiRental);
+        let tau = crate::energy::crossover::ski_rental_timeout(&m, p_idle);
+        let r = m.predict(PolicySpec::RandomizedSkiRental, ms(600.0));
+        let e = std::f64::consts::E;
+        let expect = m.item.e_item_onoff() + p_idle * tau * (1.0 / (e - 1.0));
+        assert!(
+            (r.e_per_item - expect).abs().millijoules() < 1e-9,
+            "{} vs {}",
+            r.e_per_item.millijoules(),
+            expect.millijoules()
+        );
+        // in expectation it beats the deterministic 2-competitive rule
+        let det = m.predict(PolicySpec::Timeout, ms(600.0));
+        assert!(r.e_per_item < det.e_per_item);
+        assert!(r.n_max.unwrap() > det.n_max.unwrap());
+    }
+
+    #[test]
+    fn randomized_ski_rental_short_period_cost_between_idle_and_onoff() {
+        // w ≪ τ: the timer rarely fires, so the expected cost sits just
+        // above pure M1+2 idling but far below paying a reconfiguration
+        // per item.
+        let m = model();
+        let r = m.predict(PolicySpec::RandomizedSkiRental, ms(40.0));
+        let iw = m.predict(PolicySpec::IdleWaitingM12, ms(40.0));
+        let onoff = m.predict(PolicySpec::OnOff, ms(40.0));
+        assert!(r.e_per_item > iw.e_per_item);
+        assert!(r.e_per_item < onoff.e_per_item);
+        // and never worse than e/(e−1) × the oracle in expectation
+        let oracle = m.predict(PolicySpec::Oracle, ms(40.0));
+        let ratio = r.e_per_item.millijoules() / oracle.e_per_item.millijoules();
+        assert!(ratio < std::f64::consts::E / (std::f64::consts::E - 1.0) + 1e-9, "{ratio}");
     }
 
     #[test]

@@ -1,38 +1,119 @@
 //! Experiment 4 (beyond the paper; its §7 future work made concrete):
-//! online gap policies × arrival processes.
+//! online gap policies × per-policy tunables × arrival processes.
 //!
 //! The paper's evaluation is strictly periodic, where the best policy is
 //! a compile-time choice. This grid measures what happens when arrivals
-//! are *not* periodic and the policy must decide online: every
-//! [`PolicySpec`] runs against four arrival processes — periodic,
-//! jittered, Poisson and a bursty trace replay — on the shared
-//! [`SweepRunner`], and each cell reports energy, lifetime, mean served
-//! latency and the gap-decision counters that explain *why* a policy
-//! wins (gaps idled / powered off / timers expired), per the
-//! [`SimReport`] ledger.
+//! are *not* periodic and the policy must decide online: every policy
+//! **variant** — a [`PolicySpec`] plus a [`PolicyParams`] tunable point
+//! (extra quantiles, windows, EMA alphas, timeouts beyond the defaults)
+//! — runs against six arrival processes: periodic, jittered, Poisson and
+//! the three `workloads/` corpus shapes (bursty IoT, diurnal Poisson,
+//! on/off MMPP, synthesized deterministically by
+//! [`tracegen`](crate::coordinator::tracegen)). Cells run on the shared
+//! [`SweepRunner`]; each reports energy, lifetime, mean served latency
+//! and the gap-decision counters that explain *why* a variant wins, per
+//! the [`SimReport`](crate::strategies::simulate::SimReport) ledger.
 //!
-//! Determinism: every policy row sees the *same* arrival stream per
-//! arrival column (seeds derive from the experiment seed and the arrival
-//! column only), and cells are pure functions of their grid point, so
-//! the CSV is byte-identical at any `--threads N`.
+//! Determinism: every variant row sees the *same* arrival stream per
+//! arrival column (stream seeds derive from the experiment seed and the
+//! arrival column only), randomized policies draw from a per-cell stream
+//! derived from the experiment seed and the cell index, and cells are
+//! pure functions of their grid point — so the CSV is byte-identical at
+//! any `--threads N`.
 
 use crate::config::loader::SimConfig;
-use crate::config::schema::{ArrivalSpec, PolicySpec};
+use crate::config::schema::{ArrivalSpec, PolicyParams, PolicySpec};
 use crate::coordinator::requests::{
     ArrivalProcess, Jittered, Periodic, Poisson, TraceReplay,
 };
+use crate::coordinator::tracegen::{self, TraceKind};
 use crate::energy::analytical::Analytical;
 use crate::runner::grid::{cross, derive_seed};
 use crate::runner::SweepRunner;
 use crate::strategies::simulate::{simulate, GapDecisions};
-use crate::strategies::strategy::build;
+use crate::strategies::strategy::build_with;
 use crate::util::csv::Csv;
-use crate::util::rng::Xoshiro256ss;
 use crate::util::table::{fcount, fnum, Table};
 use crate::util::units::Duration;
 
-/// The four arrival-process columns of the grid, in output order.
-pub const ARRIVALS: [&str; 4] = ["periodic", "jittered", "poisson", "trace"];
+/// The fixed arrival-process columns of the grid, in output order. A
+/// seventh column, `trace`, is appended when the loaded config itself
+/// specifies `ArrivalSpec::Trace` (replaying the configured file).
+pub const ARRIVALS: [&str; 6] = [
+    "periodic",
+    "jittered",
+    "poisson",
+    "bursty-iot",
+    "diurnal",
+    "mmpp",
+];
+
+/// Gaps synthesized per corpus column (cycled by the replayer).
+const CORPUS_GAPS: usize = 256;
+
+/// One policy variant: a spec plus a tunable point. `tunable` labels the
+/// point in tables/CSV (`default` = the paper-faithful [`PolicyParams`]).
+#[derive(Debug, Clone)]
+pub struct PolicyVariant {
+    pub spec: PolicySpec,
+    pub tunable: &'static str,
+    pub params: PolicyParams,
+}
+
+/// The grid's policy axis: every [`PolicySpec`] at its default tunables,
+/// plus the tunable points where the knob plausibly changes the winner —
+/// a sharper quantile window, a sluggish EMA, a short explicit timeout.
+pub fn variants() -> Vec<PolicyVariant> {
+    let d = PolicyParams::default();
+    let mut out: Vec<PolicyVariant> = PolicySpec::ALL
+        .iter()
+        .map(|&spec| PolicyVariant {
+            spec,
+            tunable: "default",
+            params: d,
+        })
+        .collect();
+    out.push(PolicyVariant {
+        spec: PolicySpec::EmaPredictor,
+        tunable: "alpha=0.05",
+        params: PolicyParams { ema_alpha: 0.05, ..d },
+    });
+    out.push(PolicyVariant {
+        spec: PolicySpec::WindowedQuantile,
+        tunable: "w=16 q=0.5",
+        params: PolicyParams {
+            window: 16,
+            quantile: 0.5,
+            ..d
+        },
+    });
+    out.push(PolicyVariant {
+        spec: PolicySpec::WindowedQuantile,
+        tunable: "w=128 q=0.99",
+        params: PolicyParams {
+            window: 128,
+            quantile: 0.99,
+            ..d
+        },
+    });
+    out.push(PolicyVariant {
+        spec: PolicySpec::Timeout,
+        tunable: "tau=100ms",
+        params: PolicyParams {
+            timeout: Some(Duration::from_millis(100.0)),
+            ..d
+        },
+    });
+    out.push(PolicyVariant {
+        spec: PolicySpec::RandomizedSkiRental,
+        tunable: "tau=100ms",
+        params: PolicyParams {
+            timeout: Some(Duration::from_millis(100.0)),
+            ..d
+        },
+    });
+    out
+}
 
 /// Per-run parameters.
 #[derive(Debug, Clone)]
@@ -41,7 +122,8 @@ pub struct Exp4Config {
     pub items: u64,
     /// Nominal mean inter-arrival time for every process (ms).
     pub period_ms: f64,
-    /// Experiment seed; arrival streams derive from it per column.
+    /// Experiment seed; arrival streams derive from it per column,
+    /// randomized-policy streams per cell.
     pub seed: u64,
 }
 
@@ -59,6 +141,7 @@ impl Default for Exp4Config {
 #[derive(Debug, Clone)]
 pub struct Exp4Row {
     pub policy: PolicySpec,
+    pub tunable: &'static str,
     pub arrival: &'static str,
     pub items: u64,
     pub energy_mj: f64,
@@ -68,7 +151,7 @@ pub struct Exp4Row {
     pub late_requests: u64,
 }
 
-/// Full Experiment 4 results (row-major: policy outer, arrival inner).
+/// Full Experiment 4 results (row-major: variant outer, arrival inner).
 #[derive(Debug, Clone)]
 pub struct Exp4Result {
     pub rows: Vec<Exp4Row>,
@@ -82,13 +165,14 @@ pub fn run(config: &SimConfig, e4: &Exp4Config) -> std::io::Result<Exp4Result> {
     run_threaded(config, e4, &SweepRunner::single())
 }
 
-/// The policy × arrival grid on the sweep engine.
+/// The policy-variant × arrival grid on the sweep engine.
 ///
-/// The "trace" column replays the config's own `ArrivalSpec::Trace` file
-/// when one is configured (trace-driven arrivals from config, not just
-/// code); otherwise it synthesizes a deterministic bursty trace from the
-/// experiment seed. A configured trace that fails to load is an error —
-/// never silently swapped for the synthetic one.
+/// The three corpus columns synthesize their gap sequences from the
+/// experiment seed via [`tracegen`], so they need no files on disk; when
+/// the config's own arrival is `ArrivalSpec::Trace`, an extra `trace`
+/// column replays that file for every variant (trace-driven arrivals
+/// from config, not just code). A configured trace that fails to load is
+/// an error — never silently swapped for a synthetic one.
 pub fn run_threaded(
     config: &SimConfig,
     e4: &Exp4Config,
@@ -96,23 +180,50 @@ pub fn run_threaded(
 ) -> std::io::Result<Exp4Result> {
     let model = Analytical::new(&config.item, config.workload.energy_budget);
     let period = Duration::from_millis(e4.period_ms);
-    let trace_gaps: Vec<Duration> = match &config.workload.arrival {
+
+    // one gap sequence per corpus column, shared by every variant row
+    let corpus: Vec<(&'static str, Vec<Duration>)> = [
+        ("bursty-iot", TraceKind::BurstyIot),
+        ("diurnal", TraceKind::DiurnalPoisson),
+        ("mmpp", TraceKind::OnOffMmpp),
+    ]
+    .into_iter()
+    .enumerate()
+    .map(|(i, (name, kind))| {
+        (
+            name,
+            tracegen::generate_durations(
+                kind,
+                CORPUS_GAPS,
+                e4.period_ms,
+                derive_seed(e4.seed, 0x100 + i as u64),
+            ),
+        )
+    })
+    .collect();
+
+    // the config's own trace file, if any, becomes a seventh column
+    let config_trace: Option<Vec<Duration>> = match &config.workload.arrival {
         ArrivalSpec::Trace { path, .. } => {
             let mut t = TraceReplay::from_file(path)?;
             // materialize one cycle so every cell replays the same gaps
-            (0..t.len()).map(|_| t.next_gap()).collect()
+            Some((0..t.len()).map(|_| t.next_gap()).collect())
         }
-        _ => bursty_trace(period, derive_seed(e4.seed, 3)),
+        _ => None,
     };
 
-    let arrival_axis: Vec<(usize, &'static str)> =
+    let mut arrival_axis: Vec<(usize, &'static str)> =
         ARRIVALS.iter().copied().enumerate().collect();
-    let grid = cross(&PolicySpec::ALL, &arrival_axis);
+    if config_trace.is_some() {
+        arrival_axis.push((ARRIVALS.len(), "trace"));
+    }
+
+    let grid = cross(&variants(), &arrival_axis);
     let rows = runner.run(&grid, |cell| {
-        let (spec, (arrival_idx, arrival_name)) = *cell.params;
-        // one stream per arrival column, shared by every policy row
-        let stream_seed = derive_seed(e4.seed, arrival_idx as u64);
-        let mut arrivals: Box<dyn ArrivalProcess> = match arrival_name {
+        let (variant, (arrival_idx, arrival_name)) = cell.params;
+        // one stream per arrival column, shared by every variant row
+        let stream_seed = derive_seed(e4.seed, *arrival_idx as u64);
+        let mut arrivals: Box<dyn ArrivalProcess> = match *arrival_name {
             "periodic" => Box::new(Periodic { period }),
             "jittered" => Box::new(Jittered::new(
                 period,
@@ -125,15 +236,32 @@ pub fn run_threaded(
                 Duration::from_millis(ArrivalSpec::DEFAULT_POISSON_MIN_GAP_MS),
                 stream_seed,
             )),
-            _ => Box::new(TraceReplay::new(trace_gaps.clone())),
+            "trace" => Box::new(TraceReplay::new(
+                config_trace.clone().expect("trace column requires a config trace"),
+            )),
+            corpus_name => Box::new(TraceReplay::new(
+                corpus
+                    .iter()
+                    .find(|(name, _)| *name == corpus_name)
+                    .expect("corpus column present")
+                    .1
+                    .clone(),
+            )),
         };
-        let mut policy = build(spec, &model);
+        // randomized policies draw from a per-cell stream that depends on
+        // the experiment seed and the cell index only — thread-invariant
+        let params = PolicyParams {
+            seed: derive_seed(e4.seed, 0x9000 + cell.index as u64),
+            ..variant.params
+        };
+        let mut policy = build_with(variant.spec, &model, &params);
         let mut capped = config.clone();
         capped.workload.max_items = Some(e4.items);
         let report = simulate(&capped, policy.as_mut(), arrivals.as_mut());
         Exp4Row {
-            policy: spec,
-            arrival: arrival_name,
+            policy: variant.spec,
+            tunable: variant.tunable,
+            arrival: *arrival_name,
             items: report.items,
             energy_mj: report.energy_exact.millijoules(),
             lifetime_h: report.lifetime.hours(),
@@ -149,32 +277,25 @@ pub fn run_threaded(
     })
 }
 
-/// Deterministic bursty inter-arrival trace: short intra-burst gaps
-/// followed by long silences — the workload shape where online policies
-/// separate (bursts reward idling, silences reward powering off).
-fn bursty_trace(period: Duration, seed: u64) -> Vec<Duration> {
-    let mut rng = Xoshiro256ss::new(seed);
-    let mut gaps = Vec::new();
-    for _ in 0..32 {
-        for _ in 0..rng.range_inclusive(2, 6) {
-            gaps.push(period * rng.uniform(0.2, 0.6));
-        }
-        // silences sit beyond every idle mode's crossover (≤ 499 ms at
-        // the 40 ms nominal), so power-off decisions genuinely pay off
-        gaps.push(period * rng.uniform(13.0, 20.0));
-    }
-    gaps
-}
-
 impl Exp4Result {
+    /// The default-tunable row for a (policy, arrival) cell.
     pub fn row(&self, policy: PolicySpec, arrival: &str) -> &Exp4Row {
+        self.row_variant(policy, "default", arrival)
+    }
+
+    pub fn row_variant(
+        &self,
+        policy: PolicySpec,
+        tunable: &str,
+        arrival: &str,
+    ) -> &Exp4Row {
         self.rows
             .iter()
-            .find(|r| r.policy == policy && r.arrival == arrival)
+            .find(|r| r.policy == policy && r.tunable == tunable && r.arrival == arrival)
             .expect("cell present")
     }
 
-    /// Mean per-item gap+item energy for a cell, in mJ.
+    /// Mean per-item gap+item energy for a default-tunable cell, in mJ.
     pub fn energy_per_item_mj(&self, policy: PolicySpec, arrival: &str) -> f64 {
         let r = self.row(policy, arrival);
         r.energy_mj / r.items.max(1) as f64
@@ -183,6 +304,7 @@ impl Exp4Result {
     pub fn render(&self) -> String {
         let mut t = Table::new(&[
             "policy",
+            "params",
             "arrival",
             "items",
             "mJ/item",
@@ -194,12 +316,13 @@ impl Exp4Result {
             "late",
         ])
         .with_title(format!(
-            "Experiment 4: gap policies x arrival processes ({} items, mean {} ms)",
+            "Experiment 4: gap policies x tunables x arrivals ({} items, mean {} ms)",
             self.items, self.period_ms
         ));
         for r in &self.rows {
             t.row(&[
                 r.policy.name().into(),
+                r.tunable.into(),
                 r.arrival.into(),
                 fcount(r.items),
                 fnum(r.energy_mj / r.items.max(1) as f64, 4),
@@ -217,6 +340,7 @@ impl Exp4Result {
     pub fn to_csv(&self) -> Csv {
         let mut csv = Csv::new(&[
             "policy",
+            "params",
             "arrival",
             "items",
             "energy_mj",
@@ -230,6 +354,7 @@ impl Exp4Result {
         for r in &self.rows {
             csv.row(&[
                 r.policy.name().to_string(),
+                r.tunable.to_string(),
                 r.arrival.to_string(),
                 r.items.to_string(),
                 format!("{}", r.energy_mj),
@@ -259,13 +384,24 @@ mod tests {
     }
 
     #[test]
-    fn grid_covers_every_policy_and_arrival() {
+    fn grid_covers_every_variant_and_arrival() {
         let r = run(&paper_default(), &small()).unwrap();
-        assert_eq!(r.rows.len(), PolicySpec::ALL.len() * ARRIVALS.len());
-        for spec in PolicySpec::ALL {
+        let vs = variants();
+        assert_eq!(r.rows.len(), vs.len() * ARRIVALS.len());
+        for v in &vs {
             for arrival in ARRIVALS {
-                assert_eq!(r.row(spec, arrival).items, 300, "{spec}/{arrival}");
+                assert_eq!(
+                    r.row_variant(v.spec, v.tunable, arrival).items,
+                    300,
+                    "{}/{}/{arrival}",
+                    v.spec,
+                    v.tunable
+                );
             }
+        }
+        // every spec appears at its default tunables
+        for spec in PolicySpec::ALL {
+            assert_eq!(r.row(spec, "periodic").tunable, "default");
         }
     }
 
@@ -282,13 +418,16 @@ mod tests {
         let m12_row = r.row(PolicySpec::IdleWaitingM12, "periodic");
         assert_eq!(oracle.decisions, m12_row.decisions);
         assert!((oracle.energy_mj - m12_row.energy_mj).abs() < 1e-9);
+        // the windowed-quantile predictor degenerates to the same winner
+        let wq = r.row(PolicySpec::WindowedQuantile, "periodic");
+        assert_eq!(wq.decisions.powered_off, 0);
+        assert_eq!(wq.decisions.idled, 299);
     }
 
     #[test]
     fn policies_see_identical_streams_per_arrival_column() {
         // the static policies never react to the stream, so their item
-        // counts must match across rows; and the jittered/poisson columns
-        // must differ from periodic for at least one late/decision field
+        // counts must match across rows
         let r = run(&paper_default(), &small()).unwrap();
         for arrival in ARRIVALS {
             assert_eq!(
@@ -300,20 +439,61 @@ mod tests {
 
     #[test]
     fn bursty_trace_separates_online_policies_from_statics() {
-        // on the bursty trace the timeout policy must expire some timers
+        // on the bursty corpus the timeout policy must expire some timers
         // (long silences) and still idle through bursts
         let r = run(&paper_default(), &small()).unwrap();
-        let t = r.row(PolicySpec::Timeout, "trace");
+        let t = r.row(PolicySpec::Timeout, "bursty-iot");
         assert!(t.decisions.timeouts_expired > 0, "{:?}", t.decisions);
         assert!(t.decisions.idled > 0, "{:?}", t.decisions);
         // and it must beat at least one static policy on energy
-        let onoff = r.energy_per_item_mj(PolicySpec::OnOff, "trace");
-        let iw = r.energy_per_item_mj(PolicySpec::IdleWaiting, "trace");
-        let timeout = r.energy_per_item_mj(PolicySpec::Timeout, "trace");
+        let onoff = r.energy_per_item_mj(PolicySpec::OnOff, "bursty-iot");
+        let iw = r.energy_per_item_mj(PolicySpec::IdleWaiting, "bursty-iot");
+        let timeout = r.energy_per_item_mj(PolicySpec::Timeout, "bursty-iot");
         assert!(
             timeout <= onoff.max(iw),
             "timeout {timeout} vs onoff {onoff} / iw {iw}"
         );
+    }
+
+    #[test]
+    fn tunables_change_behaviour_on_heavy_tails() {
+        // on the bursty corpus the sharp w=16 q=0.5 quantile point and
+        // the default q=0.9 point must make genuinely different per-gap
+        // decisions — the tunable axis is not decorative
+        let r = run(&paper_default(), &small()).unwrap();
+        let dflt = r.row_variant(PolicySpec::WindowedQuantile, "default", "bursty-iot");
+        let sharp = r.row_variant(PolicySpec::WindowedQuantile, "w=16 q=0.5", "bursty-iot");
+        assert_ne!(dflt.decisions, sharp.decisions, "{:?}", dflt.decisions);
+    }
+
+    #[test]
+    fn config_trace_adds_a_seventh_column() {
+        let dir = std::env::temp_dir().join("idlewait_exp4_cfg_trace");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("gaps.csv");
+        std::fs::write(&path, "30\n50\n700\n").unwrap();
+        let mut cfg = paper_default();
+        cfg.workload.arrival = ArrivalSpec::Trace {
+            path: path.to_str().unwrap().to_string(),
+            nominal: Duration::from_millis(40.0),
+        };
+        let r = run(&cfg, &small()).unwrap();
+        assert_eq!(r.rows.len(), variants().len() * (ARRIVALS.len() + 1));
+        let row = r.row(PolicySpec::Oracle, "trace");
+        assert_eq!(row.items, 300);
+        // the 700 ms silences (beyond every crossover) force power-offs
+        assert!(row.decisions.powered_off > 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_config_trace_is_an_error() {
+        let mut cfg = paper_default();
+        cfg.workload.arrival = ArrivalSpec::Trace {
+            path: "/nonexistent/exp4.csv".into(),
+            nominal: Duration::from_millis(40.0),
+        };
+        assert!(run(&cfg, &small()).is_err());
     }
 
     #[test]
@@ -322,7 +502,7 @@ mod tests {
         assert!(r.render().contains("Experiment 4"));
         let csv = r.to_csv();
         assert_eq!(csv.n_rows(), r.rows.len());
-        assert!(csv.render().starts_with("policy,arrival,items"));
+        assert!(csv.render().starts_with("policy,params,arrival,items"));
     }
 
     // Thread-count invariance (threads=1 vs N byte-identical CSV) is

@@ -152,6 +152,14 @@ impl LifetimeState<'_> {
             self.item_latency
         };
         let start = arrival.max(self.prev_completion);
+        // late = arrived before the previous item finished. Counted here,
+        // at arrival, from the same queue state the latency ledger uses —
+        // so cascaded lateness (a request delayed by a predecessor that
+        // was itself late) is counted, which the plan-local
+        // `GapExecution::late` flag cannot see.
+        if start > arrival {
+            self.late_requests += 1;
+        }
         let completion = start + serve;
         self.latency.push((completion - arrival).millis());
         self.prev_completion = completion;
@@ -181,9 +189,10 @@ impl LifetimeState<'_> {
                 if exec.timeout_expired {
                     self.decisions.timeouts_expired += 1;
                 }
-                if exec.late {
-                    self.late_requests += 1;
-                }
+                // exec.late (the plan's busy window vs the local gap) is
+                // deliberately NOT counted here: lateness is accounted at
+                // the next arrival from the queue state, which also
+                // catches cascades behind a late predecessor.
             }
             Err(_) => {
                 ctx.stop();

@@ -29,11 +29,19 @@
 //! | [`Oracle`] | the true upcoming gap | off iff gap > crossover |
 //! | [`Timeout`] | none (τ from the model) | always `IdleThenOff` at the break-even τ — classically 2-competitive vs the oracle |
 //! | [`EmaPredictor`] | observed gap history | idle iff EMA-predicted gap < crossover |
+//! | [`WindowedQuantile`] | last W observed gaps | idle iff the q-quantile of the window < crossover — robust on heavy tails |
+//! | [`RandomizedSkiRental`] | none (τ + its own RNG) | `IdleThenOff` at a timeout drawn per gap from the e/(e−1)-competitive density over [0, τ] |
+//!
+//! Every policy's tunables (`saving`, `timeout_ms`, `ema_alpha`,
+//! `window`, `quantile`, `seed`) come from the config-level
+//! [`PolicyParams`] table via [`build_with`]; [`build`] uses the
+//! defaults, which reproduce the paper's setup.
 
-use crate::config::schema::PolicySpec;
+use crate::config::schema::{PolicyParams, PolicySpec};
 use crate::device::rails::PowerSaving;
 use crate::energy::analytical::Analytical;
 use crate::energy::crossover;
+use crate::util::rng::Xoshiro256ss;
 use crate::util::units::Duration;
 
 /// What to do during an inter-request gap, decided before the gap is
@@ -275,7 +283,7 @@ pub struct EmaPredictor {
 }
 
 impl EmaPredictor {
-    pub const DEFAULT_ALPHA: f64 = 0.2;
+    pub const DEFAULT_ALPHA: f64 = PolicyParams::DEFAULT_EMA_ALPHA;
 
     pub fn from_model(model: &Analytical, saving: PowerSaving, alpha: f64) -> EmaPredictor {
         let p_idle = crate::device::rails::RailSet::idle_power(saving);
@@ -329,23 +337,234 @@ impl Policy for EmaPredictor {
     }
 }
 
-/// Construct the policy for a config-level [`PolicySpec`]. The advanced
-/// policies default to the M1+2 idle mode (the paper's best), matching
-/// the pre-rename `Adaptive` default.
-pub fn build(spec: PolicySpec, model: &Analytical) -> Box<dyn Policy> {
+/// Online predictor over a sliding window: keeps the last `window`
+/// observed gaps in a ring buffer and plans against their `quantile`-th
+/// quantile. Where the EMA's single mean washes out under heavy-tailed
+/// gap distributions (a few huge silences dragging the mean above the
+/// crossover although most gaps are short — or vice versa), the quantile
+/// asks the right question directly: "what fraction of recent gaps was
+/// long enough that powering off would have won?" On strictly periodic
+/// arrivals every windowed quantile equals the period exactly, so the
+/// policy degenerates to the crossover decision after one observation.
+#[derive(Debug, Clone)]
+pub struct WindowedQuantile {
+    pub saving: PowerSaving,
+    /// Break-even gap duration of the idle mode.
+    pub crossover: Duration,
+    /// Ski-rental timeout used while no observation exists yet.
+    pub timeout: Duration,
+    /// Planning quantile in (0, 1).
+    pub quantile: f64,
+    /// Ring-buffer capacity W ≥ 1.
+    window: usize,
+    /// Observed gaps in seconds, insertion order (up to `window` of them).
+    buf: Vec<f64>,
+    /// The same gaps kept sorted (binary-search insert/evict per
+    /// observation), so `plan_gap` reads the quantile without re-sorting
+    /// the window on the DES hot path.
+    sorted: Vec<f64>,
+    /// Next ring slot to overwrite once the buffer is full.
+    next: usize,
+}
+
+impl WindowedQuantile {
+    pub fn from_model(
+        model: &Analytical,
+        saving: PowerSaving,
+        window: usize,
+        quantile: f64,
+    ) -> WindowedQuantile {
+        let p_idle = crate::device::rails::RailSet::idle_power(saving);
+        WindowedQuantile {
+            saving,
+            crossover: crossover::asymptotic(model, p_idle),
+            timeout: crossover::ski_rental_timeout(model, p_idle),
+            quantile: quantile.clamp(f64::EPSILON, 1.0 - f64::EPSILON),
+            window: window.max(1),
+            buf: Vec::new(),
+            sorted: Vec::new(),
+            next: 0,
+        }
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// The current q-quantile of the windowed gaps (linear interpolation
+    /// between order statistics); `None` until the first observation.
+    pub fn predicted(&self) -> Option<Duration> {
+        if self.sorted.is_empty() {
+            return None;
+        }
+        let h = self.quantile * (self.sorted.len() - 1) as f64;
+        let lo = h.floor() as usize;
+        let hi = h.ceil() as usize;
+        let frac = h - lo as f64;
+        Some(Duration::from_secs(
+            self.sorted[lo] + (self.sorted[hi] - self.sorted[lo]) * frac,
+        ))
+    }
+}
+
+impl Policy for WindowedQuantile {
+    fn kind(&self) -> PolicySpec {
+        PolicySpec::WindowedQuantile
+    }
+
+    fn plan_gap(&mut self, _ctx: &GapContext) -> GapPlan {
+        match self.predicted() {
+            // cold start: no history → hedge with the 2-competitive plan
+            None => GapPlan::IdleThenOff {
+                saving: self.saving,
+                timeout: self.timeout,
+            },
+            Some(p) if p < self.crossover => GapPlan::Idle(self.saving),
+            Some(_) => GapPlan::PowerOff,
+        }
+    }
+
+    fn observe(&mut self, actual_gap: Duration) {
+        let g = actual_gap.secs();
+        if self.buf.len() < self.window {
+            self.buf.push(g);
+        } else {
+            // evict the oldest gap from the sorted view (an exact copy of
+            // it is present, so partition_point lands on an equal element)
+            let evicted = std::mem::replace(&mut self.buf[self.next], g);
+            self.next = (self.next + 1) % self.window;
+            let at = self.sorted.partition_point(|x| *x < evicted);
+            debug_assert!(self.sorted[at] == evicted);
+            self.sorted.remove(at);
+        }
+        let at = self.sorted.partition_point(|x| *x < g);
+        self.sorted.insert(at, g);
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "windowed-quantile({}, w {}, q {:.2}, crossover {:.2} ms)",
+            self.saving.label(),
+            self.window,
+            self.quantile,
+            self.crossover.millis()
+        )
+    }
+}
+
+/// Randomized ski-rental: like [`Timeout`], but the idle window is drawn
+/// fresh for every gap from the classic exponential density
+/// `p(t) = e^(t/τ) / (τ·(e−1))` on `[0, τ]`, which is
+/// e/(e−1) ≈ 1.582-competitive in expectation against an oblivious
+/// adversary — strictly better than the deterministic rule's 2. The draw
+/// comes from the policy's own seeded [`Xoshiro256ss`] stream (in sweeps,
+/// seeded per cell), so runs are byte-identical at any thread count.
+#[derive(Debug, Clone)]
+pub struct RandomizedSkiRental {
+    pub saving: PowerSaving,
+    /// The break-even scale τ (the deterministic rule's timeout).
+    pub tau: Duration,
+    rng: Xoshiro256ss,
+}
+
+impl RandomizedSkiRental {
+    /// τ defaults to the analytical break-even; `timeout` overrides it.
+    pub fn from_model(
+        model: &Analytical,
+        saving: PowerSaving,
+        timeout: Option<Duration>,
+        seed: u64,
+    ) -> RandomizedSkiRental {
+        let p_idle = crate::device::rails::RailSet::idle_power(saving);
+        RandomizedSkiRental {
+            saving,
+            tau: timeout.unwrap_or_else(|| crossover::ski_rental_timeout(model, p_idle)),
+            rng: Xoshiro256ss::new(seed),
+        }
+    }
+
+    /// Inverse-CDF sample of the e/(e−1)-competitive density:
+    /// `F(t) = (e^(t/τ) − 1)/(e − 1)` ⟹ `t = τ·ln(1 + (e−1)·u)`,
+    /// mapping u ∈ [0, 1) onto [0, τ).
+    pub fn draw_timeout(&mut self) -> Duration {
+        let u = self.rng.next_f64();
+        let t = self.tau.secs() * (1.0 + (std::f64::consts::E - 1.0) * u).ln();
+        Duration::from_secs(t)
+    }
+}
+
+impl Policy for RandomizedSkiRental {
+    fn kind(&self) -> PolicySpec {
+        PolicySpec::RandomizedSkiRental
+    }
+
+    fn plan_gap(&mut self, _ctx: &GapContext) -> GapPlan {
+        GapPlan::IdleThenOff {
+            saving: self.saving,
+            timeout: self.draw_timeout(),
+        }
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "randomized-ski-rental({}, tau {:.2} ms)",
+            self.saving.label(),
+            self.tau.millis()
+        )
+    }
+}
+
+/// Construct the policy for a config-level [`PolicySpec`] with explicit
+/// tunables. The named Idle-Waiting variants keep their fixed levels;
+/// every advanced policy takes its idle mode (and any tunable it reads)
+/// from `params`.
+pub fn build_with(
+    spec: PolicySpec,
+    model: &Analytical,
+    params: &PolicyParams,
+) -> Box<dyn Policy> {
+    let saving = params.saving;
     match spec {
         PolicySpec::OnOff => Box::new(OnOff),
         PolicySpec::IdleWaiting => Box::new(IdleWaiting::baseline()),
         PolicySpec::IdleWaitingM1 => Box::new(IdleWaiting::method1()),
         PolicySpec::IdleWaitingM12 => Box::new(IdleWaiting::method12()),
-        PolicySpec::Oracle => Box::new(Oracle::from_model(model, PowerSaving::M12)),
-        PolicySpec::Timeout => Box::new(Timeout::from_model(model, PowerSaving::M12)),
-        PolicySpec::EmaPredictor => Box::new(EmaPredictor::from_model(
+        PolicySpec::Oracle => Box::new(Oracle::from_model(model, saving)),
+        PolicySpec::Timeout => {
+            let mut t = Timeout::from_model(model, saving);
+            if let Some(timeout) = params.timeout {
+                t.timeout = timeout;
+            }
+            Box::new(t)
+        }
+        PolicySpec::EmaPredictor => {
+            let mut e = EmaPredictor::from_model(model, saving, params.ema_alpha);
+            if let Some(timeout) = params.timeout {
+                e.timeout = timeout; // cold-start hedge
+            }
+            Box::new(e)
+        }
+        PolicySpec::WindowedQuantile => {
+            let mut w = WindowedQuantile::from_model(model, saving, params.window, params.quantile);
+            if let Some(timeout) = params.timeout {
+                w.timeout = timeout; // cold-start hedge
+            }
+            Box::new(w)
+        }
+        PolicySpec::RandomizedSkiRental => Box::new(RandomizedSkiRental::from_model(
             model,
-            PowerSaving::M12,
-            EmaPredictor::DEFAULT_ALPHA,
+            saving,
+            params.timeout,
+            params.seed,
         )),
     }
+}
+
+/// Construct the policy for a config-level [`PolicySpec`] with the
+/// default tunables: the advanced policies idle at M1+2 (the paper's
+/// best), matching the pre-rename `Adaptive` default.
+pub fn build(spec: PolicySpec, model: &Analytical) -> Box<dyn Policy> {
+    build_with(spec, model, &PolicyParams::default())
 }
 
 #[cfg(test)]
@@ -481,5 +700,129 @@ mod tests {
             assert_eq!(p.kind(), spec);
             assert!(!p.label().is_empty());
         }
+    }
+
+    #[test]
+    fn windowed_quantile_learns_and_switches() {
+        let m = model();
+        let mut w = WindowedQuantile::from_model(&m, PowerSaving::BASELINE, 4, 0.5);
+        // cold start hedges with the ski-rental plan
+        assert!(matches!(w.plan_gap(&ctx()), GapPlan::IdleThenOff { .. }));
+        // short gaps dominate the window → idle
+        for _ in 0..4 {
+            w.observe(Duration::from_millis(40.0));
+        }
+        assert_eq!(w.predicted().unwrap().millis(), 40.0);
+        assert_eq!(w.plan_gap(&ctx()), GapPlan::Idle(PowerSaving::BASELINE));
+        // the ring evicts the old gaps; long gaps take over → power off
+        for _ in 0..4 {
+            w.observe(Duration::from_millis(500.0));
+        }
+        assert_eq!(w.predicted().unwrap().millis(), 500.0);
+        assert_eq!(w.plan_gap(&ctx()), GapPlan::PowerOff);
+    }
+
+    #[test]
+    fn windowed_quantile_interpolates_between_order_statistics() {
+        let m = model();
+        let mut w = WindowedQuantile::from_model(&m, PowerSaving::BASELINE, 8, 0.5);
+        w.observe(Duration::from_millis(10.0));
+        w.observe(Duration::from_millis(30.0));
+        // median of {10, 30} interpolates to 20
+        assert!((w.predicted().unwrap().millis() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn windowed_quantile_is_robust_where_the_mean_is_not() {
+        // Heavy tail: 7 short gaps + 1 huge one per window. The mean (and
+        // the EMA it feeds) is dragged far above the crossover; the median
+        // still sees the typical 40 ms gap and keeps idling.
+        let m = model();
+        let mut wq = WindowedQuantile::from_model(&m, PowerSaving::BASELINE, 8, 0.5);
+        let mut ema = EmaPredictor::from_model(&m, PowerSaving::BASELINE, 0.2);
+        for i in 0..32 {
+            let gap = if i % 8 == 7 {
+                Duration::from_secs(10.0)
+            } else {
+                Duration::from_millis(40.0)
+            };
+            wq.observe(gap);
+            ema.observe(gap);
+        }
+        assert_eq!(wq.plan_gap(&ctx()), GapPlan::Idle(PowerSaving::BASELINE));
+        assert_eq!(ema.plan_gap(&ctx()), GapPlan::PowerOff);
+    }
+
+    #[test]
+    fn windowed_quantile_high_q_reacts_to_the_tail() {
+        // The q=0.95 planner asks whether the tail gaps are long — on the
+        // same heavy-tailed stream it chooses to power off.
+        let m = model();
+        let mut wq = WindowedQuantile::from_model(&m, PowerSaving::BASELINE, 8, 0.95);
+        for i in 0..16 {
+            let gap = if i % 8 == 7 {
+                Duration::from_secs(10.0)
+            } else {
+                Duration::from_millis(40.0)
+            };
+            wq.observe(gap);
+        }
+        assert_eq!(wq.plan_gap(&ctx()), GapPlan::PowerOff);
+    }
+
+    #[test]
+    fn randomized_ski_rental_draws_within_tau_and_is_seed_deterministic() {
+        let m = model();
+        let mut a = RandomizedSkiRental::from_model(&m, PowerSaving::BASELINE, None, 7);
+        let mut b = RandomizedSkiRental::from_model(&m, PowerSaving::BASELINE, None, 7);
+        let tau = a.tau;
+        let mut sum = 0.0;
+        for _ in 0..2_000 {
+            let ta = a.draw_timeout();
+            assert_eq!(ta, b.draw_timeout(), "same seed, same stream");
+            assert!(ta >= Duration::ZERO && ta < tau, "{ta:?} vs tau {tau:?}");
+            sum += ta.secs();
+        }
+        // E[T] = τ/(e−1) ≈ 0.582τ for the e/(e−1)-competitive density
+        let mean = sum / 2_000.0;
+        let expect = tau.secs() / (std::f64::consts::E - 1.0);
+        assert!((mean - expect).abs() < 0.02 * tau.secs(), "mean {mean} vs {expect}");
+        // and every plan is the ski-rental shape
+        assert!(matches!(a.plan_gap(&ctx()), GapPlan::IdleThenOff { .. }));
+    }
+
+    #[test]
+    fn randomized_ski_rental_honours_timeout_override() {
+        let m = model();
+        let tau = Duration::from_millis(25.0);
+        let mut p = RandomizedSkiRental::from_model(&m, PowerSaving::M12, Some(tau), 1);
+        assert_eq!(p.tau, tau);
+        for _ in 0..100 {
+            assert!(p.draw_timeout() < tau);
+        }
+    }
+
+    #[test]
+    fn build_with_applies_tunables() {
+        let m = model();
+        let params = PolicyParams {
+            saving: PowerSaving::BASELINE,
+            timeout: Some(Duration::from_millis(12.5)),
+            ema_alpha: 0.7,
+            window: 5,
+            quantile: 0.25,
+            seed: 3,
+        };
+        let t = build_with(PolicySpec::Timeout, &m, &params);
+        assert_eq!(
+            t.label(),
+            format!("timeout({}, tau 12.50 ms)", PowerSaving::BASELINE.label())
+        );
+        let w = build_with(PolicySpec::WindowedQuantile, &m, &params);
+        assert!(w.label().contains("w 5, q 0.25"), "{}", w.label());
+        let e = build_with(PolicySpec::EmaPredictor, &m, &params);
+        assert!(e.label().contains("alpha 0.70"), "{}", e.label());
+        let r = build_with(PolicySpec::RandomizedSkiRental, &m, &params);
+        assert!(r.label().contains("tau 12.50 ms"), "{}", r.label());
     }
 }

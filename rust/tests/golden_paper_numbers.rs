@@ -1,0 +1,227 @@
+//! Golden-number regression harness: the paper's headline constants,
+//! pinned against BOTH the analytical model (Eqs 1–4 closed forms) and
+//! the lifetime discrete-event simulation, with explicit tolerances.
+//!
+//! The point of this suite is that no future refactor can silently
+//! drift the reproduction away from the paper:
+//!
+//! * **40.13×** configuration-energy reduction (worst → optimal SPI
+//!   setting, Experiment 1 / Fig 7), with the 41.4× time companion.
+//! * **89.21 ms** Idle-Waiting↔On-Off crossover at baseline idle power
+//!   and **499.06 ms** with power-saving methods 1+2 (§5.4).
+//! * **≈12.39×** lifetime extension of Idle-Waiting M1+2 over On-Off at
+//!   the paper's 40 ms request period and 4147 J battery budget.
+//!
+//! Each constant is checked through two independent code paths where the
+//! architecture provides them, so a regression in either the closed
+//! forms or the event-driven runtime trips the harness.
+
+use idlewait::config::schema::{ArrivalSpec, PolicySpec};
+use idlewait::config::{paper_default, SimConfig};
+use idlewait::coordinator::requests::Periodic;
+use idlewait::device::rails::PowerSaving;
+use idlewait::energy::analytical::Analytical;
+use idlewait::energy::crossover;
+use idlewait::experiments::exp1;
+use idlewait::runner::SweepRunner;
+use idlewait::strategies::simulate::{simulate, SimReport};
+use idlewait::strategies::strategy::{IdleWaiting, OnOff, Policy};
+use idlewait::util::units::Duration;
+
+fn model() -> Analytical {
+    let cfg = paper_default();
+    Analytical::new(&cfg.item, cfg.workload.energy_budget)
+}
+
+/// Run a policy on strictly periodic arrivals for `items` items.
+fn run_periodic(policy: &mut dyn Policy, period_ms: f64, items: u64) -> SimReport {
+    let mut cfg = paper_default();
+    cfg.workload.arrival = ArrivalSpec::Periodic {
+        period: Duration::from_millis(period_ms),
+    };
+    cfg.workload.max_items = Some(items);
+    let mut arrivals = Periodic {
+        period: Duration::from_millis(period_ms),
+    };
+    simulate(&cfg, policy, &mut arrivals)
+}
+
+/// DES per-item energy (mJ, including the gap after each item) for a
+/// policy at a period, measured over `items` items. The one-time init
+/// cost is amortized across the run, matching the asymptotic closed
+/// forms to O(1/items).
+fn des_energy_per_item_mj(policy: &mut dyn Policy, period_ms: f64, items: u64) -> f64 {
+    let r = run_periodic(policy, period_ms, items);
+    assert_eq!(r.items, items, "budget must not exhaust during measurement");
+    r.energy_exact.millijoules() / items as f64
+}
+
+// ---------------------------------------------------------------------------
+// 40.13× configuration-energy reduction (Experiment 1)
+// ---------------------------------------------------------------------------
+
+/// Paper §5.2: the optimal configuration setting (Quad SPI, 66 MHz,
+/// compressed) reduces configuration energy 40.13× and configuration
+/// time 41.4× vs the worst setting (Single SPI, 3 MHz, uncompressed).
+#[test]
+fn golden_config_energy_reduction_40_13x() {
+    let r = exp1::run_threaded(
+        idlewait::config::schema::FpgaModel::Xc7s15,
+        &SweepRunner::single(),
+    );
+    let energy = r.energy_improvement();
+    assert!((energy - 40.13).abs() < 0.15, "energy reduction {energy} vs paper 40.13");
+    let time = r.time_improvement();
+    assert!((time - 41.4).abs() < 0.1, "time reduction {time} vs paper 41.4");
+    // the optimal point itself is Table 2's configuration phase
+    assert!((r.optimal().config_time_ms() - 36.145).abs() < 0.01);
+    assert!((r.optimal().config_energy_mj() - 11.85).abs() < 0.02);
+}
+
+// ---------------------------------------------------------------------------
+// 89.21 ms / 499.06 ms crossovers
+// ---------------------------------------------------------------------------
+
+/// Analytical path: the closed-form asymptotic crossover and the
+/// finite-budget bisection both land on the paper's numbers.
+#[test]
+fn golden_crossovers_analytical() {
+    let m = model();
+    let baseline = crossover::asymptotic(&m, m.item.idle_power(PolicySpec::IdleWaiting));
+    assert!(
+        (baseline.millis() - 89.21).abs() < 0.05,
+        "baseline crossover {} vs paper 89.21 ms",
+        baseline.millis()
+    );
+    let m12 = crossover::asymptotic(&m, m.item.idle_power(PolicySpec::IdleWaitingM12));
+    assert!(
+        (m12.millis() - 499.06).abs() < 0.15,
+        "M1+2 crossover {} vs paper 499.06 ms",
+        m12.millis()
+    );
+    // the exact finite-budget solver agrees at the paper's 0.01 ms sweep
+    // resolution
+    for (p_idle, expect_ms, tol) in [
+        (m.item.idle_power(PolicySpec::IdleWaiting), 89.21, 0.06),
+        (m.item.idle_power(PolicySpec::IdleWaitingM12), 499.06, 0.16),
+    ] {
+        let exact = crossover::exact(
+            &m,
+            p_idle,
+            Duration::from_millis(37.0),
+            Duration::from_millis(600.0),
+            Duration::from_millis(0.01),
+        )
+        .expect("crossover bracketed");
+        assert!(
+            (exact.millis() - expect_ms).abs() < tol,
+            "exact crossover {} vs paper {expect_ms} ms",
+            exact.millis()
+        );
+    }
+}
+
+/// DES path: per-item energies measured by the event-driven simulator
+/// flip winners across each crossover. Brackets at ±1.5% of the
+/// crossover pin the DES to the same break-even points.
+#[test]
+fn golden_crossovers_des() {
+    let items = 2_000;
+    // baseline idle mode vs On-Off around 89.21 ms
+    for (period_ms, iw_wins) in [(88.0, true), (90.5, false)] {
+        let iw = des_energy_per_item_mj(&mut IdleWaiting::baseline(), period_ms, items);
+        let onoff = des_energy_per_item_mj(&mut OnOff, period_ms, items);
+        assert_eq!(
+            iw < onoff,
+            iw_wins,
+            "at {period_ms} ms: iw {iw} mJ vs onoff {onoff} mJ (paper crossover 89.21 ms)"
+        );
+    }
+    // M1+2 idle mode vs On-Off around 499.06 ms
+    for (period_ms, iw_wins) in [(492.0, true), (507.0, false)] {
+        let iw = des_energy_per_item_mj(&mut IdleWaiting::method12(), period_ms, items);
+        let onoff = des_energy_per_item_mj(&mut OnOff, period_ms, items);
+        assert_eq!(
+            iw < onoff,
+            iw_wins,
+            "at {period_ms} ms: m12 {iw} mJ vs onoff {onoff} mJ (paper crossover 499.06 ms)"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ≈12.39× lifetime at 40 ms / 4147 J
+// ---------------------------------------------------------------------------
+
+/// Analytical path: Eqs 3–4 at the paper's setup (40 ms, 4147 J).
+#[test]
+fn golden_lifetime_extension_12_39x_analytical() {
+    let cfg = paper_default();
+    assert!((cfg.workload.energy_budget.joules() - 4147.0).abs() < 1e-9);
+    assert!((cfg.platform.battery_budget.joules() - 4147.0).abs() < 1e-9);
+    let m = model();
+    let t = Duration::from_millis(40.0);
+    let onoff = m.predict(PolicySpec::OnOff, t);
+    let m12 = m.predict(PolicySpec::IdleWaitingM12, t);
+    // the paper's Fig 8 anchor: ≈346,073 On-Off items regardless of T_req
+    let n_onoff = onoff.n_max.unwrap();
+    assert!(n_onoff.abs_diff(346_073) <= 150, "onoff n_max {n_onoff}");
+    let ratio = m12.n_max.unwrap() as f64 / n_onoff as f64;
+    assert!((ratio - 12.39).abs() < 0.05, "lifetime ratio {ratio} vs paper 12.39");
+    // and in wall-clock terms: ≈3.85 h → ≈47.6 h
+    assert!((onoff.lifetime.hours() - 3.845).abs() < 0.01, "{}", onoff.lifetime.hours());
+    assert!((m12.lifetime.hours() - 47.65).abs() < 0.2, "{}", m12.lifetime.hours());
+}
+
+/// DES path, part 1: running On-Off to genuine budget exhaustion on the
+/// event-driven simulator reproduces the ≈346,073-item endpoint.
+#[test]
+fn golden_onoff_exhaustion_des() {
+    let mut cfg: SimConfig = paper_default();
+    cfg.workload.arrival = ArrivalSpec::Periodic {
+        period: Duration::from_millis(40.0),
+    };
+    cfg.workload.max_items = None; // run until the 4147 J battery is empty
+    let mut arrivals = Periodic {
+        period: Duration::from_millis(40.0),
+    };
+    let r = simulate(&cfg, &mut OnOff, &mut arrivals);
+    // DES configuration energy comes from the FSM mechanism, Eq 1 from
+    // Table 2; they agree to ~1e-4 relative, hence the ±500 item window.
+    assert!(
+        r.items.abs_diff(346_073) <= 500,
+        "DES On-Off exhaustion: {} items vs paper 346,073",
+        r.items
+    );
+    assert!((r.lifetime.hours() - 3.845).abs() < 0.02, "{}", r.lifetime.hours());
+    // On-Off reconfigures every item; the final, budget-exhausted
+    // configure attempt may or may not have been counted before the stop
+    assert!(
+        r.configurations == r.items || r.configurations == r.items + 1,
+        "items {} vs configurations {}",
+        r.items,
+        r.configurations
+    );
+}
+
+/// DES path, part 2: the 12.39× ratio from measured per-item energies.
+/// n_max per policy is budget / per-item energy (the init term is
+/// amortized to O(1/items)), so the DES-implied ratio must match the
+/// paper without simulating the 4.3M-item M1+2 run to exhaustion.
+#[test]
+fn golden_lifetime_extension_12_39x_des() {
+    let items = 20_000;
+    let onoff = des_energy_per_item_mj(&mut OnOff, 40.0, items);
+    let m12 = des_energy_per_item_mj(
+        &mut IdleWaiting {
+            saving: PowerSaving::M12,
+        },
+        40.0,
+        items,
+    );
+    let ratio = onoff / m12;
+    assert!(
+        (ratio - 12.39).abs() < 0.08,
+        "DES per-item ratio {ratio} vs paper 12.39 (onoff {onoff} mJ, m12 {m12} mJ)"
+    );
+}

@@ -1,11 +1,21 @@
 //! Integration: the `repro` CLI surface (library-level invocation of the
-//! same entry the binary uses).
+//! same entry the binary uses), including the exp4 CSV schema contract,
+//! the gen-trace round trip and thread-count byte-identity of the
+//! policy × tunable × trace grid.
 
 use idlewait::cli;
+use idlewait::coordinator::requests::TraceReplay;
+use idlewait::coordinator::tracegen::{self, TraceKind};
 
 fn sv(v: &[&str]) -> Vec<String> {
     v.iter().map(|s| s.to_string()).collect()
 }
+
+/// The exp4 CSV header is a published schema — downstream notebooks key
+/// on these column names, so changes must be deliberate.
+const EXP4_CSV_HEADER: &str = "policy,params,arrival,items,energy_mj,lifetime_h,\
+                               mean_latency_ms,gaps_idled,gaps_powered_off,\
+                               timeouts_expired,late_requests";
 
 #[test]
 fn usage_without_args() {
@@ -53,6 +63,176 @@ fn custom_config_file_via_cli() {
         .replace("idle_power_mw: 134.3", "idle_power_mw: 67.15");
     std::fs::write(&path, doc).unwrap();
     cli::run(&sv(&["exp2", "--step", "2", "--config", path.to_str().unwrap()])).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn exp4_csv_schema_is_stable() {
+    let dir = std::env::temp_dir().join("idlewait_cli_exp4_schema");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp4.csv");
+    cli::run(&sv(&[
+        "exp4",
+        "--items",
+        "50",
+        "--csv",
+        path.to_str().unwrap(),
+    ]))
+    .unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text.lines().next().unwrap(), EXP4_CSV_HEADER);
+    // header + variants × the six built-in arrival columns
+    let expected_rows = idlewait::experiments::exp4_policies::variants().len()
+        * idlewait::experiments::exp4_policies::ARRIVALS.len();
+    assert_eq!(text.lines().count(), expected_rows + 1);
+    // every policy name appears in the body
+    for spec in idlewait::config::schema::PolicySpec::ALL {
+        assert!(
+            text.lines().any(|l| l.starts_with(spec.name())),
+            "{} missing from CSV",
+            spec.name()
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn exp4_csv_byte_identical_at_thread_extremes() {
+    let dir = std::env::temp_dir().join("idlewait_cli_exp4_threads");
+    std::fs::create_dir_all(&dir).unwrap();
+    let serial = dir.join("serial.csv");
+    let parallel = dir.join("parallel.csv");
+    cli::run(&sv(&[
+        "exp4",
+        "--items",
+        "50",
+        "--threads",
+        "1",
+        "--csv",
+        serial.to_str().unwrap(),
+    ]))
+    .unwrap();
+    // --threads 0 = all available cores (the other extreme)
+    cli::run(&sv(&[
+        "exp4",
+        "--items",
+        "50",
+        "--threads",
+        "0",
+        "--csv",
+        parallel.to_str().unwrap(),
+    ]))
+    .unwrap();
+    let a = std::fs::read(&serial).unwrap();
+    let b = std::fs::read(&parallel).unwrap();
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "exp4 CSV must be byte-identical at any --threads");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gen_trace_round_trips_through_the_replayer() {
+    let dir = std::env::temp_dir().join("idlewait_cli_gentrace");
+    std::fs::create_dir_all(&dir).unwrap();
+    for (kind_flag, kind) in [
+        ("bursty-iot", TraceKind::BurstyIot),
+        ("diurnal-poisson", TraceKind::DiurnalPoisson),
+        ("onoff-mmpp", TraceKind::OnOffMmpp),
+    ] {
+        let path = dir.join(format!("{kind_flag}.csv"));
+        cli::run(&sv(&[
+            "gen-trace",
+            "--kind",
+            kind_flag,
+            "--gaps",
+            "48",
+            "--period",
+            "40",
+            "--seed",
+            "9",
+            "--out",
+            path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        // replaying the written file yields the identical gap sequence
+        let mut replay = TraceReplay::from_file(&path).unwrap();
+        assert_eq!(replay.len(), 48, "{kind_flag}");
+        for (i, want) in tracegen::generate_durations(kind, 48, 40.0, 9)
+            .into_iter()
+            .enumerate()
+        {
+            assert_eq!(replay.next_gap(), want, "{kind_flag} gap {i}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bundled_workload_corpus_loads_and_matches_its_manifest() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../workloads");
+    // (file, kind, gaps, seed) — period 40 ms throughout, per each file's
+    // `# regenerate:` header. The content check keeps the bundled files
+    // honest: retuning a generator in tracegen.rs without regenerating
+    // the corpus must fail here, not silently diverge.
+    for (file, kind, gaps, seed) in [
+        ("bursty_iot.csv", TraceKind::BurstyIot, 256usize, 1u64),
+        ("diurnal_poisson.csv", TraceKind::DiurnalPoisson, 384, 2),
+        ("onoff_mmpp.csv", TraceKind::OnOffMmpp, 320, 3),
+    ] {
+        let path = root.join(file);
+        let mut replay = TraceReplay::from_file(&path)
+            .unwrap_or_else(|e| panic!("loading {}: {e}", path.display()));
+        assert_eq!(replay.len(), gaps, "{file}");
+        let expect = tracegen::generate_durations(kind, gaps, 40.0, seed);
+        for (i, want) in expect.into_iter().enumerate() {
+            let got = replay.next_gap();
+            if kind == TraceKind::BurstyIot {
+                // uniform-arithmetic generator: bit-exact everywhere
+                assert_eq!(got, want, "{file} gap {i}");
+            } else {
+                // exponential/sinusoidal generators go through libm
+                // (ln/sin), which may differ by an ulp across platforms —
+                // a tight relative tolerance still catches any retune
+                let rel = (got.secs() - want.secs()).abs() / want.secs();
+                assert!(rel < 1e-9, "{file} gap {i}: {got:?} vs {want:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn exp4_replays_a_config_trace_column() {
+    let dir = std::env::temp_dir().join("idlewait_cli_exp4_trace");
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../workloads/bursty_iot.csv");
+    let cfg_path = dir.join("trace_cfg.yaml");
+    let doc = idlewait::config::loader::PAPER_DEFAULT_YAML.replace(
+        "  request_period_ms: 40.0\n",
+        &format!(
+            "  request_period_ms: 40.0\n  arrival_kind: trace\n  trace_path: {}\n",
+            trace.display()
+        ),
+    );
+    std::fs::write(&cfg_path, doc).unwrap();
+    let csv_path = dir.join("exp4.csv");
+    cli::run(&sv(&[
+        "exp4",
+        "--items",
+        "50",
+        "--config",
+        cfg_path.to_str().unwrap(),
+        "--csv",
+        csv_path.to_str().unwrap(),
+    ]))
+    .unwrap();
+    let text = std::fs::read_to_string(&csv_path).unwrap();
+    let trace_rows = text.lines().filter(|l| l.contains(",trace,")).count();
+    assert_eq!(
+        trace_rows,
+        idlewait::experiments::exp4_policies::variants().len(),
+        "every variant gets a trace column"
+    );
     let _ = std::fs::remove_dir_all(&dir);
 }
 

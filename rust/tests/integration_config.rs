@@ -88,11 +88,28 @@ fn every_policy_name_loads() {
         "oracle",
         "timeout",
         "ema-predictor",
+        "windowed-quantile",
+        "randomized-ski-rental",
     ] {
         let doc = PAPER_DEFAULT_YAML.replace("strategy: idle-waiting\n", &format!("strategy: {name}\n"));
         let cfg = load_str(&doc).unwrap();
         assert_eq!(cfg.workload.policy.name(), PolicySpec::parse(name).unwrap().name());
     }
+}
+
+#[test]
+fn policy_params_load_end_to_end() {
+    let doc = PAPER_DEFAULT_YAML.replace(
+        "  strategy: idle-waiting\n",
+        "  strategy: windowed-quantile\n  policy_params:\n    window: 24\n    quantile: 0.8\n    saving: m1\n",
+    );
+    let cfg = load_str(&doc).unwrap();
+    assert_eq!(cfg.workload.params.window, 24);
+    assert!((cfg.workload.params.quantile - 0.8).abs() < 1e-12);
+    assert_eq!(
+        cfg.workload.params.saving,
+        idlewait::device::rails::PowerSaving::M1
+    );
 }
 
 #[test]
