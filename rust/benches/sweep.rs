@@ -1,7 +1,7 @@
 //! Bench: the unified sweep engine's throughput on the Experiment 2
 //! full-fidelity grid (10–120 ms at 0.01 ms = 11,001 cells), at 1 and 4
 //! threads and at the machine's full parallelism, reported as cells/sec
-//! — plus the exp4 policy × tunable × arrival grid (84 DES lifetimes per sweep),
+//! — plus the exp4 policy × tunable × arrival grid (90 DES lifetimes per sweep),
 //! which keeps the new policy subsystem on the cells/sec trajectory.
 //!
 //! This is the bench that backs the runner's headline claim: the
@@ -70,8 +70,9 @@ fn main() {
     }
     print!("{}", t.render());
 
-    // --- exp4 policy grid: 14 policy variants × 6 arrivals, each cell a full
-    // DES lifetime run — the heavy-cell regime of the sweep engine ---
+    // --- exp4 policy grid: 15 policy variants (incl. the tuned row) × 6
+    // arrivals, each cell a full DES lifetime run — the heavy-cell regime
+    // of the sweep engine ---
     let e4 = Exp4Config {
         items: if quick_mode() { 200 } else { 2_000 },
         period_ms: 40.0,

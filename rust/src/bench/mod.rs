@@ -16,16 +16,21 @@ use crate::util::table::{fnum, Table};
 /// One benchmark's collected results.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name.
     pub name: String,
+    /// Total timed iterations.
     pub iterations: u64,
+    /// Distribution of per-iteration times (ns).
     pub summary: Summary,
 }
 
 impl BenchResult {
+    /// Median nanoseconds per iteration.
     pub fn ns_per_iter(&self) -> f64 {
         self.summary.p50
     }
 
+    /// Iterations per second at the median.
     pub fn iters_per_sec(&self) -> f64 {
         1e9 / self.summary.p50
     }
@@ -40,6 +45,7 @@ pub struct Bench {
 }
 
 impl Bench {
+    /// A harness with default warmup/measure windows.
     pub fn new(title: impl Into<String>) -> Bench {
         Bench {
             title: title.into(),
@@ -122,6 +128,7 @@ impl Bench {
         print!("{}", self.render());
     }
 
+    /// All collected results.
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }

@@ -6,18 +6,23 @@
 
 use std::collections::BTreeMap;
 
+/// Why argument parsing (or typed extraction) failed.
 #[derive(Debug, Clone, PartialEq, thiserror::Error)]
 pub enum ArgError {
+    /// An option not in the command's accepted set.
     #[error("unknown option '--{0}'")]
     Unknown(String),
+    /// A value-taking option at the end of argv.
     #[error("option '--{0}' requires a value")]
     MissingValue(String),
+    /// A value that failed typed parsing.
     #[error("option '--{name}': cannot parse '{value}' as {ty}")]
     BadValue {
         name: String,
         value: String,
         ty: &'static str,
     },
+    /// A bare positional argument (the CLI is option-only).
     #[error("unexpected positional argument '{0}'")]
     UnexpectedPositional(String),
 }
@@ -74,18 +79,22 @@ impl Args {
         Ok(args)
     }
 
+    /// True when the boolean flag was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// A string option's value, if present.
     pub fn str_opt(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
     }
 
+    /// A float option's value, if present (typed error on junk).
     pub fn f64_opt(&self, name: &str) -> Result<Option<f64>, ArgError> {
         self.typed_opt(name, "number", |v| v.parse::<f64>().ok())
     }
 
+    /// An integer option's value, if present (typed error on junk).
     pub fn u64_opt(&self, name: &str) -> Result<Option<u64>, ArgError> {
         self.typed_opt(name, "integer", |v| v.parse::<u64>().ok())
     }

@@ -9,6 +9,11 @@
 //! repro exp4 [--items 2000] [--period 40] [--seed 4] [--csv PATH] [--threads N]
 //! repro gen-trace [--kind bursty-iot] [--gaps 256] [--period 40] [--seed 1]
 //!                 [--out PATH]        # synthesize a workloads/ gap trace
+//! repro tune --policy windowed-quantile --trace workloads/bursty_iot.csv
+//!            [--search grid|random|halving] [--objective energy|lifetime]
+//!            [--budget 64] [--split 0.7] [--max-late-rate R] [--seed 0]
+//!            [--csv PATH] [--emit PATH] [--threads N]
+//!                                     # auto-search PolicyParams on a trace
 //! repro serve [--policy idle-waiting] [--period 40] [--requests 100]
 //!             [--variant int8] [--arrival poisson]
 //!             [--timeout-ms T] [--ema-alpha A] [--window W] [--quantile Q]
@@ -36,6 +41,7 @@ use crate::runtime::inference::Variant;
 use crate::strategies::strategy::build_with;
 use crate::util::units::Duration;
 
+/// Top-level usage text (printed for `repro`, `repro help`, errors).
 pub const USAGE: &str = "\
 repro — reproduction of 'Idle is the New Sleep' (CS.AR 2024)
 
@@ -48,6 +54,7 @@ COMMANDS:
   exp3        Experiment 3 (Table 3, Figs 10-11): idle power-saving
   exp4        Online gap policies \u{d7} tunables \u{d7} arrival processes (\u{a7}7 future work)
   gen-trace   Synthesize a gap-trace workload file (bursty-iot, diurnal-poisson, onoff-mmpp)
+  tune        Auto-search PolicyParams for a policy on a gap trace (grid/random/halving)
   validate    \u{a7}5.3 validation: analytical model vs discrete-event sim
   ablate      ablations: flash floor, power-on transient, multi-accel
   multi       event-driven multi-accelerator simulation (\u{a7}4.2 extension)
@@ -120,6 +127,7 @@ fn step_arg(args: &Args, default: f64) -> Result<f64> {
     Ok(step)
 }
 
+/// Dispatch one CLI invocation (argv without the binary name).
 pub fn run(argv: &[String]) -> Result<()> {
     let Some(command) = argv.first() else {
         println!("{USAGE}");
@@ -133,6 +141,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "exp3" => cmd_exp3(rest),
         "exp4" => cmd_exp4(rest),
         "gen-trace" => cmd_gen_trace(rest),
+        "tune" => cmd_tune(rest),
         "validate" => cmd_validate(rest),
         "ablate" => cmd_ablate(rest),
         "multi" => cmd_multi(rest),
@@ -330,6 +339,103 @@ fn cmd_gen_trace(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_tune(argv: &[String]) -> Result<()> {
+    use crate::tuner::{self, Objective, ObjectiveKind, SearchStrategy, TuneConfig};
+
+    let args = Args::parse(
+        argv,
+        &[
+            ("policy", true),
+            ("trace", true),
+            ("search", true),
+            ("objective", true),
+            ("budget", true),
+            ("split", true),
+            ("seed", true),
+            ("max-late-rate", true),
+            ("csv", true),
+            ("emit", true),
+            ("config", true),
+            ("threads", true),
+            ("help", false),
+        ],
+    )?;
+    if help_and_done(&args, "tune") {
+        return Ok(());
+    }
+    let config = load_config(&args)?;
+    let spec = match args.str_opt("policy") {
+        Some(name) => PolicySpec::parse(name)
+            .with_context(|| format!("unknown policy '{name}'"))?,
+        None => config.workload.policy,
+    };
+    let search = match args.str_opt("search") {
+        Some(name) => SearchStrategy::parse(name).with_context(|| {
+            format!(
+                "unknown search '{name}' (expected one of: {})",
+                SearchStrategy::ALL.map(|s| s.name()).join(", ")
+            )
+        })?,
+        None => SearchStrategy::Halving,
+    };
+    let kind = match args.str_opt("objective") {
+        Some(name) => ObjectiveKind::parse(name)
+            .with_context(|| format!("unknown objective '{name}' (expected energy or lifetime)"))?,
+        None => ObjectiveKind::Energy,
+    };
+    let max_late_rate = args.f64_opt("max-late-rate")?;
+    if let Some(r) = max_late_rate {
+        if !(r.is_finite() && (0.0..=1.0).contains(&r)) {
+            bail!("--max-late-rate must be a fraction in [0, 1] (got {r})");
+        }
+    }
+    // the trace: an explicit --trace file, or the config's own trace arrival
+    let trace_path = match args.str_opt("trace") {
+        Some(path) => path.to_string(),
+        None => match &config.workload.arrival {
+            crate::config::schema::ArrivalSpec::Trace { path, .. } => path.clone(),
+            _ => bail!(
+                "no trace to tune on: pass --trace <file> or use a config whose \
+                 arrival_kind is 'trace'"
+            ),
+        },
+    };
+    let replay = requests::TraceReplay::from_file(&trace_path)
+        .with_context(|| format!("loading gap trace {trace_path}"))?;
+    let gaps = replay.gaps().to_vec();
+
+    let tc = TuneConfig {
+        spec,
+        search,
+        objective: Objective {
+            kind,
+            max_late_rate,
+        },
+        budget: args.u64_opt("budget")?.unwrap_or(TuneConfig::DEFAULT_BUDGET as u64) as usize,
+        split: args.f64_opt("split")?.unwrap_or(TuneConfig::DEFAULT_SPLIT),
+        seed: args.u64_opt("seed")?.unwrap_or(0),
+    };
+    let runner = sweep_runner(&args)?;
+    println!(
+        "tuning {} on {trace_path} ({} gaps): search {}, objective {}, budget {}",
+        spec.name(),
+        gaps.len(),
+        tc.search,
+        tc.objective.label(),
+        tc.budget
+    );
+    let outcome = tuner::tune(&config, &tc, &gaps, &runner)
+        .with_context(|| format!("tuning {} on {trace_path}", spec.name()))?;
+    print!("{}", outcome.render());
+    println!("apply: {}", tuner::flags_line(spec, &outcome.best));
+    if let Some(path) = args.str_opt("emit") {
+        std::fs::write(path, tuner::yaml_fragment(spec, &outcome.best))
+            .with_context(|| format!("writing tuned params {path}"))?;
+        println!("wrote {path}");
+    }
+    maybe_write_csv(&args, outcome.to_csv())
+}
+
 fn cmd_validate(argv: &[String]) -> Result<()> {
     let args = Args::parse(
         argv,
@@ -380,7 +486,7 @@ fn cmd_ablate(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_multi(argv: &[String]) -> Result<()> {
-    use crate::coordinator::multi_sim::{run as run_multi, MultiSimConfig};
+    use crate::coordinator::multi_sim::{run as run_multi, MultiSimConfig, SlotPolicy};
     use crate::coordinator::scheduler::Policy;
     use crate::runner::grid::cross;
     use crate::util::table::{fnum, Table};
@@ -392,6 +498,8 @@ fn cmd_multi(argv: &[String]) -> Result<()> {
             ("burst", true),
             ("seed", true),
             ("gap-policy", true),
+            ("slot-a-params", true),
+            ("slot-b-params", true),
             ("config", true),
             ("threads", true),
             ("help", false),
@@ -409,6 +517,33 @@ fn cmd_multi(argv: &[String]) -> Result<()> {
             .with_context(|| format!("unknown gap policy '{name}'"))?,
         None => PolicySpec::IdleWaitingM12,
     };
+    // per-accelerator tuned params (`repro tune --emit` fragments): a
+    // tuned heterogeneous fleet end-to-end
+    let slot_fragment = |flag: &str| -> Result<Option<SlotPolicy>> {
+        match args.str_opt(flag) {
+            None => Ok(None),
+            Some(path) => {
+                let (spec, params) = crate::tuner::load_fragment(path)?;
+                Ok(Some(SlotPolicy { spec, params }))
+            }
+        }
+    };
+    let slot_a = slot_fragment("slot-a-params")?;
+    let slot_b = slot_fragment("slot-b-params")?;
+    let slot_policies: Vec<Option<SlotPolicy>> = if slot_a.is_some() || slot_b.is_some() {
+        vec![slot_a, slot_b]
+    } else {
+        Vec::new()
+    };
+    for (label, sp) in [("A", slot_policies.first()), ("B", slot_policies.get(1))] {
+        if let Some(Some(sp)) = sp {
+            println!(
+                "slot {label}: {} ({})",
+                sp.spec.name(),
+                crate::tuner::params_label(sp.spec, &sp.params)
+            );
+        }
+    }
     let runner = sweep_runner(&args)?;
 
     // mix × policy as one grid: the heavy event-driven runs parallelize,
@@ -430,6 +565,7 @@ fn cmd_multi(argv: &[String]) -> Result<()> {
                 burst,
                 policy,
                 gap_policy,
+                slot_policies: slot_policies.clone(),
                 seed,
             },
         );
@@ -759,10 +895,16 @@ mod tests {
     #[test]
     fn helps_run() {
         for cmd in [
-            "fig2", "exp1", "exp2", "exp3", "exp4", "gen-trace", "validate", "ablate", "multi",
-            "serve", "plan", "all",
+            "fig2", "exp1", "exp2", "exp3", "exp4", "gen-trace", "tune", "validate", "ablate",
+            "multi", "serve", "plan", "all",
         ] {
             run(&sv(&[cmd, "--help"])).unwrap();
         }
+    }
+
+    #[test]
+    fn tune_help_and_bad_policy() {
+        run(&sv(&["tune", "--help"])).unwrap();
+        assert!(run(&sv(&["tune", "--policy", "warp-drive", "--trace", "x.csv"])).is_err());
     }
 }

@@ -13,25 +13,34 @@ use crate::util::json::Json;
 /// A fully-loaded simulation configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimConfig {
+    /// The workload description (budget, arrivals, policy).
     pub workload: WorkloadSpec,
+    /// The workload-item description (Table 2).
     pub item: WorkloadItemSpec,
+    /// The platform description (FPGA, SPI, battery).
     pub platform: PlatformSpec,
 }
 
+/// Why a config failed to load.
 #[derive(Debug, thiserror::Error)]
 pub enum LoadError {
+    /// The file could not be read.
     #[error("io error reading {path}: {source}")]
     Io {
         path: String,
         #[source]
         source: std::io::Error,
     },
+    /// YAML syntax error.
     #[error(transparent)]
     Yaml(#[from] yaml::YamlError),
+    /// JSON syntax error.
     #[error("json: {0}")]
     Json(#[from] crate::util::json::JsonError),
+    /// The document decoded but a field is missing/mistyped.
     #[error(transparent)]
     Config(#[from] ConfigError),
+    /// The config decoded but fails semantic validation.
     #[error("validation: {0}")]
     Invalid(String),
 }

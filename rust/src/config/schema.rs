@@ -11,10 +11,13 @@ use crate::device::rails::PowerSaving;
 use crate::util::json::Json;
 use crate::util::units::{Duration, Energy, Power};
 
+/// A config decoding error, locating the offending key.
 #[derive(Debug, Clone, PartialEq, thiserror::Error)]
 #[error("config error at {path}: {msg}")]
 pub struct ConfigError {
+    /// Dotted path of the offending key (e.g. `workload.policy_params.quantile`).
     pub path: String,
+    /// What is wrong and what was expected.
     pub msg: String,
 }
 
@@ -110,6 +113,8 @@ pub enum PolicySpec {
 }
 
 impl PolicySpec {
+    /// Parse a config/CLI policy name (case-insensitive, `_`/`-`
+    /// agnostic, legacy aliases like `adaptive` included).
     pub fn parse(s: &str) -> Option<PolicySpec> {
         match s.to_ascii_lowercase().replace('_', "-").as_str() {
             "on-off" | "onoff" => Some(PolicySpec::OnOff),
@@ -130,6 +135,7 @@ impl PolicySpec {
         }
     }
 
+    /// Canonical name (the one `parse` round-trips and reports use).
     pub fn name(&self) -> &'static str {
         match self {
             PolicySpec::OnOff => "on-off",
@@ -144,6 +150,7 @@ impl PolicySpec {
         }
     }
 
+    /// Every policy, in the order tables and sweeps enumerate them.
     pub const ALL: [PolicySpec; 9] = [
         PolicySpec::OnOff,
         PolicySpec::IdleWaiting,
@@ -201,11 +208,22 @@ pub struct PolicyParams {
 }
 
 impl PolicyParams {
+    /// Default EMA smoothing factor: 0.2 weights ≈5 recent gaps, the
+    /// setup the paper-era experiments were run with.
     pub const DEFAULT_EMA_ALPHA: f64 = 0.2;
+    /// Default window length: 64 gaps ≈ a dozen bursts of the bundled
+    /// bursty-IoT corpus shape.
     pub const DEFAULT_WINDOW: usize = 64;
+    /// Default planning quantile: 0.9 plans conservatively against the
+    /// long tail of recent gaps.
     pub const DEFAULT_QUANTILE: f64 = 0.9;
 
-    fn from_json(v: &Json, path: &str) -> Result<PolicyParams, ConfigError> {
+    /// Decode a `policy_params` mapping (all keys optional; absent keys
+    /// keep their paper-faithful defaults). `path` locates errors.
+    /// Public because tuned-params fragments (`repro tune --emit`,
+    /// loaded back by `repro multi --slot-*-params`) reuse the exact
+    /// config decoding.
+    pub fn from_json(v: &Json, path: &str) -> Result<PolicyParams, ConfigError> {
         let mut p = PolicyParams::default();
         if let Some(name) = v.get("saving") {
             let name = name
@@ -334,6 +352,8 @@ impl ArrivalSpec {
     /// `min_period_ms` floor so the two stochastic specs are symmetric.
     pub const DEFAULT_POISSON_MIN_GAP_MS: f64 = 0.05;
 
+    /// The nominal mean inter-arrival time (the paper's T_req), used for
+    /// feasibility checks and Eq 4 lifetimes.
     pub fn mean_period(&self) -> Duration {
         match self {
             ArrivalSpec::Periodic { period } => *period,
@@ -384,10 +404,15 @@ impl ArrivalSpec {
 // Workload description (paper §5.1: budget + request period)
 // ---------------------------------------------------------------------------
 
+/// The paper's §5.1 workload description: an energy budget, an arrival
+/// process and the gap policy (plus its tunables) that serves it.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkloadSpec {
+    /// Battery budget the run draws down (paper: 4147 J).
     pub energy_budget: Energy,
+    /// How inference requests arrive.
     pub arrival: ArrivalSpec,
+    /// The gap policy serving the workload.
     pub policy: PolicySpec,
     /// Per-policy tunables (`policy_params` block; all optional).
     pub params: PolicyParams,
@@ -399,6 +424,8 @@ pub struct WorkloadSpec {
 }
 
 impl WorkloadSpec {
+    /// Decode the `workload` mapping (or the document root, for flat
+    /// configs). `policy` is the current key; `strategy` the legacy one.
     pub fn from_json(root: &Json) -> Result<WorkloadSpec, ConfigError> {
         let v = root.get("workload").unwrap_or(root);
         let path = "workload";
@@ -444,12 +471,16 @@ impl WorkloadSpec {
 /// One named phase of a workload item with its average power and duration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PhaseSpec {
+    /// Phase name (`configuration`, `data_loading`, …).
     pub name: String,
+    /// Average power over the phase (Table 2 column).
     pub power: Power,
+    /// Phase duration (Table 2 column).
     pub time: Duration,
 }
 
 impl PhaseSpec {
+    /// Phase energy: `power × time`.
     pub fn energy(&self) -> Energy {
         self.power * self.time
     }
@@ -460,9 +491,13 @@ impl PhaseSpec {
 /// Idle-Waiting. Mirrors Table 2 exactly.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkloadItemSpec {
+    /// FPGA configuration phase (the dominant cost at 36.145 ms).
     pub configuration: PhaseSpec,
+    /// Input-transfer phase.
     pub data_loading: PhaseSpec,
+    /// The accelerated inference itself.
     pub inference: PhaseSpec,
+    /// Output-transfer phase.
     pub data_offloading: PhaseSpec,
     /// Idle power for the Idle-Waiting strategy (duration varies with T_req).
     pub idle_power: Power,
@@ -472,6 +507,8 @@ pub struct WorkloadItemSpec {
 }
 
 impl WorkloadItemSpec {
+    /// Decode the `workload_item` mapping (or the document root): the
+    /// four named phases plus idle power and power-on transient.
     pub fn from_json(root: &Json) -> Result<WorkloadItemSpec, ConfigError> {
         let v = root.get("workload_item").unwrap_or(root);
         let path = "workload_item";
@@ -532,11 +569,14 @@ impl WorkloadItemSpec {
 /// Supported FPGA models (paper evaluates XC7S15 and XC7S25).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum FpgaModel {
+    /// Spartan-7 XC7S15 (the paper's main device).
     Xc7s15,
+    /// Spartan-7 XC7S25 (the paper's larger comparison device).
     Xc7s25,
 }
 
 impl FpgaModel {
+    /// Parse a model name (case-insensitive).
     pub fn parse(s: &str) -> Option<FpgaModel> {
         match s.to_ascii_uppercase().as_str() {
             "XC7S15" => Some(FpgaModel::Xc7s15),
@@ -545,6 +585,7 @@ impl FpgaModel {
         }
     }
 
+    /// Canonical (datasheet) model name.
     pub fn name(&self) -> &'static str {
         match self {
             FpgaModel::Xc7s15 => "XC7S15",
@@ -579,7 +620,9 @@ pub struct SpiConfig {
 }
 
 impl SpiConfig {
+    /// Valid SPI bus widths (single/dual/quad).
     pub const BUSWIDTHS: [u8; 3] = [1, 2, 4];
+    /// The clock frequencies Experiment 1 sweeps (Table 1).
     pub const FREQS_MHZ: [f64; 11] = [
         3.0, 6.0, 9.0, 12.0, 16.0, 22.0, 26.0, 33.0, 40.0, 50.0, 66.0,
     ];
@@ -619,6 +662,7 @@ impl SpiConfig {
         out
     }
 
+    /// Human-readable setting label (`Quad SPI @ 66 MHz, compressed`).
     pub fn label(&self) -> String {
         let bus = match self.buswidth {
             1 => "Single",
@@ -637,7 +681,9 @@ impl SpiConfig {
 /// Platform description: everything the device substrate needs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlatformSpec {
+    /// The FPGA on the board.
     pub fpga: FpgaModel,
+    /// Configuration-port parameters (Experiment 1's sweep axes).
     pub spi: SpiConfig,
     /// Battery energy budget (defaults to the paper's 4147 J).
     pub battery_budget: Energy,
@@ -663,6 +709,8 @@ impl Default for PlatformSpec {
 }
 
 impl PlatformSpec {
+    /// Decode the optional `platform` mapping; absent keys keep the
+    /// paper defaults.
     pub fn from_json(root: &Json) -> Result<PlatformSpec, ConfigError> {
         let v = match root.get("platform") {
             Some(p) => p,

@@ -23,10 +23,13 @@ use std::collections::BTreeMap;
 
 use crate::util::json::Json;
 
+/// A YAML-subset parse error with its source line.
 #[derive(Debug, Clone, PartialEq, thiserror::Error)]
 #[error("yaml parse error at line {line}: {msg}")]
 pub struct YamlError {
+    /// 1-based line of the offending input.
     pub line: usize,
+    /// Parser diagnostics.
     pub msg: String,
 }
 
@@ -38,6 +41,7 @@ struct Line<'a> {
     number: usize,
 }
 
+/// Parse the YAML subset this project uses into a `Json` value.
 pub fn parse(input: &str) -> Result<Json, YamlError> {
     let lines = preprocess(input)?;
     if lines.is_empty() {

@@ -14,8 +14,11 @@ use crate::util::units::{Duration, Energy};
 pub struct Metrics {
     latencies_ms: Vec<f64>,
     welford: Welford,
+    /// Requests served.
     pub requests: u64,
+    /// Requests whose serve latency exceeded the deadline.
     pub deadline_misses: u64,
+    /// Forecast outputs produced by the LSTM runtime.
     pub forecasts_emitted: u64,
     /// Simulated FPGA-side energy attributed to served requests.
     pub sim_energy: Energy,
@@ -24,6 +27,7 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// An empty metrics ledger.
     pub fn new() -> Metrics {
         Metrics {
             welford: Welford::new(),
@@ -31,6 +35,7 @@ impl Metrics {
         }
     }
 
+    /// Record one served request: its host latency vs the deadline.
     pub fn record_request(&mut self, host_latency: Duration, deadline: Duration) {
         self.requests += 1;
         self.forecasts_emitted += 1;
@@ -42,10 +47,13 @@ impl Metrics {
         }
     }
 
+    /// Percentile summary of recorded latencies (None before any request).
     pub fn latency_summary(&self) -> Option<Summary> {
         Summary::of(&self.latencies_ms)
     }
 
+    /// Mean recorded host latency in ms (`NaN` before any request —
+    /// mirrors [`Welford::mean`](crate::util::stats::Welford::mean)).
     pub fn mean_latency_ms(&self) -> f64 {
         self.welford.mean()
     }

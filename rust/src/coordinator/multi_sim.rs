@@ -19,7 +19,7 @@
 //! their blind `plan_gap` fallback is used, by construction.
 
 use crate::config::loader::SimConfig;
-use crate::config::schema::{FpgaModel, PolicySpec};
+use crate::config::schema::{FpgaModel, PolicyParams, PolicySpec};
 use crate::coordinator::scheduler::{Dispatch, MultiAccelScheduler, Policy as SchedPolicy, SlotRequest};
 use crate::device::bitstream::Bitstream;
 use crate::device::rails::PowerSaving;
@@ -40,39 +40,77 @@ enum Event {
     FabricFree,
 }
 
+/// One accelerator's gap policy plus its tunables — the per-slot unit a
+/// tuned heterogeneous fleet is described in. `repro tune --emit`
+/// fragments load into exactly this shape
+/// (via [`load_fragment`](crate::tuner::emit::load_fragment)).
+#[derive(Debug, Clone, Copy)]
+pub struct SlotPolicy {
+    /// The gap policy for this accelerator.
+    pub spec: PolicySpec,
+    /// Its tunables (tuned per accelerator, or defaults).
+    pub params: PolicyParams,
+}
+
 /// Per-run configuration.
 #[derive(Debug, Clone)]
 pub struct MultiSimConfig {
     /// Probability that a request targets accelerator B (slot 1).
     pub mix: f64,
+    /// Total requests to generate.
     pub requests: u64,
     /// Requests arriving together per period tick (a sensor event fanning
     /// out to several model evaluations). `1` = the paper's duty cycle;
     /// >1 creates queue pressure, which is where scheduling matters.
     pub burst: u64,
+    /// The scheduling policy ordering the queue.
     pub policy: SchedPolicy,
     /// Gap policy applied between servicings (built per run; decides
-    /// online, without seeing when the next dispatch comes).
+    /// online, without seeing when the next dispatch comes). The default
+    /// for every slot without an override below.
     pub gap_policy: PolicySpec,
+    /// Per-accelerator overrides: `slot_policies[i]` (when present and
+    /// `Some`) replaces `gap_policy` + the config's `policy_params` for
+    /// gaps planned after serving slot `i` — so a fleet can run, say, a
+    /// tuned windowed-quantile on the bursty accelerator and a tuned
+    /// timeout on the steady one. Empty (or all-`None`) = homogeneous
+    /// fleet: one shared policy instance plans and observes every gap,
+    /// bit-for-bit the pre-tuner behaviour even for stateful policies.
+    pub slot_policies: Vec<Option<SlotPolicy>>,
+    /// Arrival-mix RNG seed.
     pub seed: u64,
 }
 
 /// Outcome of a multi-accelerator run.
 #[derive(Debug, Clone)]
 pub struct MultiSimReport {
+    /// Requests served to completion.
     pub served: u64,
+    /// FPGA configurations performed (image switches + post-off reloads).
     pub reconfigurations: u64,
+    /// Requests the scheduler served out of arrival order.
     pub reordered: u64,
+    /// Exact FPGA-side energy drawn.
     pub energy: Energy,
+    /// Mean arrival-to-completion latency.
     pub mean_latency: Duration,
+    /// Fraction of requests served later than one period after arrival.
     pub p_late: f64,
+    /// Final engine clock.
     pub sim_time: Duration,
 }
 
 struct State {
     core: ReplayCore,
     scheduler: MultiAccelScheduler,
-    gap_policy: Box<dyn GapPolicy>,
+    /// The fleet's gap policies: a single shared instance (homogeneous
+    /// fleet — every gap, one history) or one per accelerator slot
+    /// (heterogeneous — the gap after serving slot `s` is planned by
+    /// `gap_policies[s]`, so each accelerator's policy learns from, and
+    /// is tuned for, its own traffic). Slot indices clamp to the vector.
+    gap_policies: Vec<Box<dyn GapPolicy>>,
+    /// Which slot's policy planned the current gap (receives `observe`).
+    gap_planned_by: usize,
     /// Plan governing the current inactivity window.
     current_plan: GapPlan,
     /// When the current plan took effect (for `IdleThenOff` timers).
@@ -130,9 +168,10 @@ impl State {
     /// Serve one dispatch starting at `now`; returns the completion time.
     fn serve(&mut self, now: SimTime, dispatch: &Dispatch) -> SimTime {
         self.idle_until(now);
-        // feed the realized inactivity back to the online policy
+        // feed the realized inactivity back to the policy that planned it
         if self.served > 0 && now > self.last_completion {
-            self.gap_policy.observe(now.since(self.last_completion));
+            let gap = now.since(self.last_completion);
+            self.gap_policies[self.gap_planned_by].observe(gap);
         }
         let mut finish = now;
         if dispatch.reconfigure {
@@ -168,12 +207,15 @@ impl State {
         if finish.since(arrival) > self.period {
             self.late += 1;
         }
-        // plan the coming inactivity at completion time, gap unseen
+        // plan the coming inactivity at completion time, gap unseen; the
+        // just-served slot's policy (and tunables) make the call
         let ctx = GapContext {
             items_done: self.served,
             now: finish.as_duration(),
         };
-        self.current_plan = self.gap_policy.plan_gap(&ctx);
+        let slot = dispatch.request.slot.min(self.gap_policies.len() - 1);
+        self.current_plan = self.gap_policies[slot].plan_gap(&ctx);
+        self.gap_planned_by = slot;
         if self.current_plan == GapPlan::PowerOff {
             self.core.power_off();
         }
@@ -199,6 +241,27 @@ pub fn run(config: &SimConfig, ms: &MultiSimConfig) -> MultiSimReport {
     );
     let model = Analytical::new(&config.item, config.workload.energy_budget);
 
+    // With no overrides, ONE shared policy instance plans (and observes)
+    // every gap — bit-for-bit the pre-tuner behaviour, which matters for
+    // stateful policies (EMA, windowed-quantile) whose history would
+    // otherwise be split across per-slot instances. With any override,
+    // the fleet is heterogeneous: one instance per slot, each learning
+    // from its own traffic.
+    const SLOTS: usize = 2;
+    let homogeneous = ms.slot_policies.iter().all(|s| s.is_none());
+    let gap_policies: Vec<Box<dyn GapPolicy>> = if homogeneous {
+        vec![build_with(ms.gap_policy, &model, &config.workload.params)]
+    } else {
+        (0..SLOTS)
+            .map(|slot| {
+                match ms.slot_policies.get(slot).copied().flatten() {
+                    Some(sp) => build_with(sp.spec, &model, &sp.params),
+                    None => build_with(ms.gap_policy, &model, &config.workload.params),
+                }
+            })
+            .collect()
+    };
+
     let mut state = State {
         scheduler: MultiAccelScheduler::new(
             ms.policy,
@@ -206,8 +269,8 @@ pub fn run(config: &SimConfig, ms: &MultiSimConfig) -> MultiSimReport {
             config.item.latency_without_config(),
         ),
         core,
-        // the gap policy honours the config's `policy_params` tunables
-        gap_policy: build_with(ms.gap_policy, &model, &config.workload.params),
+        gap_policies,
+        gap_planned_by: 0,
         current_plan: GapPlan::Idle(PowerSaving::BASELINE),
         plan_started: SimTime::ZERO,
         last_completion: SimTime::ZERO,
@@ -296,6 +359,7 @@ mod tests {
             burst: 1,
             policy,
             gap_policy: PolicySpec::IdleWaitingM12,
+            slot_policies: Vec::new(),
             seed: 17,
         }
     }
@@ -405,6 +469,88 @@ mod tests {
         let iw = run(&cfg, &base(0.0, SchedPolicy::Fifo));
         assert_eq!(timeout.reconfigurations, 1);
         assert_eq!(timeout.energy, iw.energy);
+    }
+
+    #[test]
+    fn per_slot_policies_change_only_the_overridden_slot() {
+        // Slot 0 keeps idle-waiting M1+2; slot 1 is overridden to On-Off.
+        // With mix 0 (all traffic on slot 0) the override must be inert:
+        // the run is identical to the homogeneous fleet.
+        let cfg = paper_default();
+        let onoff_b = |mix| MultiSimConfig {
+            slot_policies: vec![
+                None,
+                Some(SlotPolicy {
+                    spec: PolicySpec::OnOff,
+                    params: PolicyParams::default(),
+                }),
+            ],
+            ..base(mix, SchedPolicy::Fifo)
+        };
+        let homogeneous = run(&cfg, &base(0.0, SchedPolicy::Fifo));
+        let inert = run(&cfg, &onoff_b(0.0));
+        assert_eq!(inert.energy, homogeneous.energy);
+        assert_eq!(inert.reconfigurations, homogeneous.reconfigurations);
+        // with traffic on slot 1 the override bites: every B-gap cuts
+        // power, so reconfigurations rise well above the mixed baseline
+        let mixed = run(&cfg, &onoff_b(0.5));
+        let mixed_homogeneous = run(&cfg, &base(0.5, SchedPolicy::Fifo));
+        assert!(
+            mixed.reconfigurations > mixed_homogeneous.reconfigurations,
+            "override {} vs homogeneous {}",
+            mixed.reconfigurations,
+            mixed_homogeneous.reconfigurations
+        );
+    }
+
+    #[test]
+    fn all_none_slot_overrides_are_the_homogeneous_fleet() {
+        // `vec![]` and `vec![None, None]` must take the same shared-
+        // instance path: one policy observes every gap, as before the
+        // per-slot split existed. Use a stateful policy (EMA) on mixed
+        // traffic, where a per-slot history split would change plans.
+        let cfg = paper_default();
+        let ema = |slot_policies| MultiSimConfig {
+            gap_policy: PolicySpec::EmaPredictor,
+            slot_policies,
+            ..bursty(0.5, SchedPolicy::Fifo)
+        };
+        let empty = run(&cfg, &ema(Vec::new()));
+        let all_none = run(&cfg, &ema(vec![None, None]));
+        assert_eq!(empty.energy, all_none.energy);
+        assert_eq!(empty.reconfigurations, all_none.reconfigurations);
+        assert_eq!(empty.mean_latency, all_none.mean_latency);
+    }
+
+    #[test]
+    fn per_slot_tuned_params_are_honoured() {
+        // Slot 1 runs a Timeout policy tuned to idle at the *baseline*
+        // level: its 40 ms gaps never reach the τ timer, so B-gaps idle
+        // at 134.3 mW instead of M1+2's 24 mW — per-slot `PolicyParams`
+        // must show up as measurably higher fleet energy.
+        let cfg = paper_default();
+        let tuned_b = MultiSimConfig {
+            slot_policies: vec![
+                None,
+                Some(SlotPolicy {
+                    spec: PolicySpec::Timeout,
+                    params: PolicyParams {
+                        saving: PowerSaving::BASELINE,
+                        ..PolicyParams::default()
+                    },
+                }),
+            ],
+            ..base(0.5, SchedPolicy::Fifo)
+        };
+        let heterogeneous = run(&cfg, &tuned_b);
+        let homogeneous = run(&cfg, &base(0.5, SchedPolicy::Fifo));
+        assert_eq!(heterogeneous.served, homogeneous.served);
+        assert!(
+            heterogeneous.energy > homogeneous.energy,
+            "baseline-idle slot B must cost energy: {} vs {}",
+            heterogeneous.energy.millijoules(),
+            homogeneous.energy.millijoules()
+        );
     }
 
     #[test]

@@ -18,12 +18,14 @@ pub trait ArrivalProcess: Send {
     /// Mean inter-arrival time (for reporting / analytical comparison).
     fn mean(&self) -> Duration;
 
+    /// Human-readable process label for reports.
     fn label(&self) -> String;
 }
 
 /// Strictly periodic arrivals — the paper's T_req.
 #[derive(Debug, Clone)]
 pub struct Periodic {
+    /// The constant inter-arrival period.
     pub period: Duration,
 }
 
@@ -44,13 +46,17 @@ impl ArrivalProcess for Periodic {
 /// Periodic with additive Gaussian jitter, clamped below at `min_gap`.
 #[derive(Debug, Clone)]
 pub struct Jittered {
+    /// Nominal period before jitter.
     pub period: Duration,
+    /// Standard deviation of the additive Gaussian jitter.
     pub std_dev: Duration,
+    /// Lower clamp on the jittered gap.
     pub min_gap: Duration,
     rng: Xoshiro256ss,
 }
 
 impl Jittered {
+    /// A jittered process drawing from its own seeded stream.
     pub fn new(period: Duration, std_dev: Duration, min_gap: Duration, seed: u64) -> Jittered {
         Jittered {
             period,
@@ -84,12 +90,15 @@ impl ArrivalProcess for Jittered {
 /// arrival cannot land inside the previous item's latency.
 #[derive(Debug, Clone)]
 pub struct Poisson {
+    /// Mean of the exponential inter-arrival gaps.
     pub mean_gap: Duration,
+    /// Lower clamp on drawn gaps.
     pub min_gap: Duration,
     rng: Xoshiro256ss,
 }
 
 impl Poisson {
+    /// A Poisson process drawing from its own seeded stream.
     pub fn new(mean_gap: Duration, min_gap: Duration, seed: u64) -> Poisson {
         Poisson {
             mean_gap,
@@ -122,6 +131,7 @@ pub struct TraceReplay {
 }
 
 impl TraceReplay {
+    /// Replay an in-memory gap sequence (panics if empty).
     pub fn new(gaps: Vec<Duration>) -> TraceReplay {
         assert!(!gaps.is_empty(), "empty arrival trace");
         TraceReplay { gaps, pos: 0 }
@@ -132,15 +142,30 @@ impl TraceReplay {
         self.gaps.len()
     }
 
+    /// Whether the trace holds no gaps (never true: construction rejects
+    /// empty traces).
     pub fn is_empty(&self) -> bool {
         self.gaps.is_empty()
     }
 
+    /// The full gap sequence of one cycle (the tuner reads it to split
+    /// train/validation without replaying).
+    pub fn gaps(&self) -> &[Duration] {
+        &self.gaps
+    }
+
     /// Load a gap trace from a text/CSV file: one inter-arrival gap in
     /// milliseconds per line; `#` comments, blank lines and an optional
-    /// `gap_ms` header are skipped.
+    /// `gap_ms` header are skipped. Errors name the offending path and
+    /// line so a bad trace in a sweep config is locatable directly.
     pub fn from_file(path: impl AsRef<std::path::Path>) -> std::io::Result<TraceReplay> {
-        let text = std::fs::read_to_string(path.as_ref())?;
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            std::io::Error::new(
+                e.kind(),
+                format!("reading gap trace {}: {e}", path.display()),
+            )
+        })?;
         let mut gaps = Vec::new();
         for (i, line) in text.lines().enumerate() {
             let line = line.trim();
@@ -151,13 +176,21 @@ impl TraceReplay {
             let ms: f64 = line.parse().map_err(|_| {
                 std::io::Error::new(
                     std::io::ErrorKind::InvalidData,
-                    format!("line {}: cannot parse '{line}' as a gap in ms", i + 1),
+                    format!(
+                        "{}:{}: cannot parse '{line}' as a gap in ms",
+                        path.display(),
+                        i + 1
+                    ),
                 )
             })?;
             if !(ms.is_finite() && ms > 0.0) {
                 return Err(std::io::Error::new(
                     std::io::ErrorKind::InvalidData,
-                    format!("line {}: gap must be positive ({ms})", i + 1),
+                    format!(
+                        "{}:{}: gap must be positive ({ms})",
+                        path.display(),
+                        i + 1
+                    ),
                 ));
             }
             gaps.push(Duration::from_millis(ms));
@@ -165,7 +198,10 @@ impl TraceReplay {
         if gaps.is_empty() {
             return Err(std::io::Error::new(
                 std::io::ErrorKind::InvalidData,
-                "trace file contains no gaps",
+                format!(
+                    "gap trace {} contains no gaps (only comments/headers)",
+                    path.display()
+                ),
             ));
         }
         Ok(TraceReplay { gaps, pos: 0 })
@@ -289,19 +325,42 @@ mod tests {
     }
 
     #[test]
-    fn trace_file_rejects_garbage() {
+    fn trace_file_rejects_garbage_naming_path_and_line() {
         let dir = std::env::temp_dir().join("idlewait_trace_bad");
         std::fs::create_dir_all(&dir).unwrap();
-        for (name, content) in [
-            ("nonnum.csv", "40\nnot-a-number\n"),
-            ("negative.csv", "40\n-1\n"),
-            ("empty.csv", "# nothing here\n"),
+        // (file, content, expected line marker in the error)
+        for (name, content, line) in [
+            ("nonnum.csv", "40\nnot-a-number\n", Some(":2:")),
+            ("negative.csv", "gap_ms\n40\n-1\n", Some(":3:")),
+            ("empty.csv", "# nothing here\n", None),
         ] {
             let path = dir.join(name);
             std::fs::write(&path, content).unwrap();
-            assert!(TraceReplay::from_file(&path).is_err(), "{name}");
+            let err = TraceReplay::from_file(&path).unwrap_err().to_string();
+            assert!(err.contains(name), "{name}: error must name the file: {err}");
+            if let Some(line) = line {
+                assert!(err.contains(line), "{name}: error must name the line: {err}");
+            }
         }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_trace_file_error_names_the_path() {
+        let err = TraceReplay::from_file("/nonexistent/gaps.csv")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("/nonexistent/gaps.csv"), "{err}");
+    }
+
+    #[test]
+    fn gaps_accessor_exposes_one_cycle() {
+        let t = TraceReplay::new(vec![
+            Duration::from_millis(10.0),
+            Duration::from_millis(20.0),
+        ]);
+        assert_eq!(t.gaps().len(), 2);
+        assert_eq!(t.gaps()[1], Duration::from_millis(20.0));
     }
 
     #[test]

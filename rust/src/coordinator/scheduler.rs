@@ -24,6 +24,7 @@ use crate::util::units::{Duration, Energy};
 /// A pending inference request for a named accelerator slot.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SlotRequest {
+    /// Monotonic request id (arrival order).
     pub id: u64,
     /// Flash slot / accelerator identity.
     pub slot: usize,
@@ -36,7 +37,10 @@ pub struct SlotRequest {
 /// Scheduling policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
+    /// Strict arrival order, whatever the slot cost.
     Fifo,
+    /// Group same-slot requests within a lookahead window to amortize
+    /// reconfigurations; bounded so no request starves.
     BatchBySlot {
         /// Maximum requests inspected for reordering.
         window: usize,
@@ -46,6 +50,7 @@ pub enum Policy {
 /// One scheduling decision.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Dispatch {
+    /// The request being dispatched.
     pub request: SlotRequest,
     /// True if serving this request requires loading its accelerator.
     pub reconfigure: bool,
@@ -54,9 +59,13 @@ pub struct Dispatch {
 /// Outcome statistics for a scheduling run.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct SchedStats {
+    /// Requests dispatched.
     pub dispatched: u64,
+    /// Dispatches that required loading a different accelerator image.
     pub reconfigurations: u64,
+    /// Dispatches served out of arrival order.
     pub reordered: u64,
+    /// Dispatches whose queueing delay already exceeded the deadline.
     pub deadline_violations: u64,
 }
 
@@ -71,12 +80,14 @@ pub struct MultiAccelScheduler {
     config_time: Duration,
     /// Per-item active latency (excluding configuration).
     item_latency: Duration,
+    /// Aggregate scheduling counters.
     pub stats: SchedStats,
     /// Virtual clock for deadline accounting.
     now: Duration,
 }
 
 impl MultiAccelScheduler {
+    /// A scheduler for the given policy and per-item timings.
     pub fn new(policy: Policy, config_time: Duration, item_latency: Duration) -> Self {
         MultiAccelScheduler {
             policy,
@@ -89,10 +100,12 @@ impl MultiAccelScheduler {
         }
     }
 
+    /// The accelerator image currently configured, if any.
     pub fn loaded_slot(&self) -> Option<usize> {
         self.loaded
     }
 
+    /// Requests waiting in the queue.
     pub fn pending(&self) -> usize {
         self.queue.len()
     }

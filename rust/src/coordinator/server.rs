@@ -28,14 +28,19 @@ use crate::util::units::Duration;
 /// One served request's outcome.
 #[derive(Debug, Clone, Copy)]
 pub struct Served {
+    /// Id of the request this output answers.
     pub request_id: u64,
+    /// The LSTM forecast value.
     pub forecast: f32,
+    /// Host-side inference latency.
     pub host_latency: Duration,
 }
 
 /// Configuration for a serving run.
 pub struct ServerConfig<'a> {
+    /// Platform/workload description the energy ledger runs on.
     pub sim: &'a SimConfig,
+    /// LSTM variant to execute (f32 or int8).
     pub variant: Variant,
     /// Stop after this many requests (the budget still applies).
     pub max_requests: u64,
@@ -43,8 +48,11 @@ pub struct ServerConfig<'a> {
 
 /// Outcome of a serving run.
 pub struct ServeReport {
+    /// Latency/deadline counters for the run.
     pub metrics: Metrics,
+    /// Every forecast served, in order.
     pub served: Vec<Served>,
+    /// FPGA configurations performed.
     pub configurations: u64,
     /// True if the run ended because the battery budget was exhausted.
     pub budget_exhausted: bool,
@@ -60,6 +68,7 @@ pub struct SensorSource {
 }
 
 impl SensorSource {
+    /// A deterministic synthetic sensor stream (window x channels).
     pub fn new(window: usize, channels: usize, seed: u64) -> SensorSource {
         SensorSource {
             window,

@@ -35,18 +35,23 @@ pub const MIN_GAP_MS: f64 = 0.05;
 /// The bundled workload shapes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TraceKind {
+    /// Request bursts separated by long silences.
     BurstyIot,
+    /// Poisson arrivals with a sinusoidal day/night rate.
     DiurnalPoisson,
+    /// Two-state Markov-modulated Poisson process (active/quiet).
     OnOffMmpp,
 }
 
 impl TraceKind {
+    /// Every bundled shape, in corpus order.
     pub const ALL: [TraceKind; 3] = [
         TraceKind::BurstyIot,
         TraceKind::DiurnalPoisson,
         TraceKind::OnOffMmpp,
     ];
 
+    /// Parse a CLI/config trace-kind name.
     pub fn parse(s: &str) -> Option<TraceKind> {
         match s.to_ascii_lowercase().replace('_', "-").as_str() {
             "bursty-iot" | "bursty" | "iot" => Some(TraceKind::BurstyIot),
@@ -56,6 +61,7 @@ impl TraceKind {
         }
     }
 
+    /// Canonical name (file headers, CLI).
     pub fn name(&self) -> &'static str {
         match self {
             TraceKind::BurstyIot => "bursty-iot",
@@ -64,6 +70,7 @@ impl TraceKind {
         }
     }
 
+    /// One-line description for help text and file headers.
     pub fn description(&self) -> &'static str {
         match self {
             TraceKind::BurstyIot => "request bursts separated by long silences",
@@ -173,7 +180,9 @@ pub fn render(kind: TraceKind, gaps: &[f64], period_ms: f64, seed: u64) -> Strin
     out
 }
 
-/// Generate and write a trace file; returns the gaps written.
+/// Generate and write a trace file; returns the gaps written. IO errors
+/// name the offending path (e.g. an unwritable `--out` directory) so
+/// `repro gen-trace` failures are locatable without strace archaeology.
 pub fn write_file(
     path: impl AsRef<std::path::Path>,
     kind: TraceKind,
@@ -181,9 +190,17 @@ pub fn write_file(
     period_ms: f64,
     seed: u64,
 ) -> std::io::Result<Vec<f64>> {
+    let path = path.as_ref();
+    let with_path = |e: std::io::Error| {
+        std::io::Error::new(
+            e.kind(),
+            format!("writing trace file {}: {e}", path.display()),
+        )
+    };
     let values = generate(kind, gaps, period_ms, seed);
-    let mut file = std::fs::File::create(path)?;
-    file.write_all(render(kind, &values, period_ms, seed).as_bytes())?;
+    let mut file = std::fs::File::create(path).map_err(with_path)?;
+    file.write_all(render(kind, &values, period_ms, seed).as_bytes())
+        .map_err(with_path)?;
     Ok(values)
 }
 
@@ -266,5 +283,13 @@ mod tests {
     #[should_panic(expected = "nominal period must be positive")]
     fn zero_period_rejected() {
         generate(TraceKind::BurstyIot, 8, 0.0, 0);
+    }
+
+    #[test]
+    fn write_file_errors_name_the_path() {
+        let err = write_file("/nonexistent/dir/trace.csv", TraceKind::BurstyIot, 8, 40.0, 1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("/nonexistent/dir/trace.csv"), "{err}");
     }
 }

@@ -7,10 +7,13 @@
 
 use crate::util::units::{Duration, Energy, Power};
 
+/// A draw request exceeded the remaining budget.
 #[derive(Debug, Clone, PartialEq, thiserror::Error)]
 #[error("energy budget exhausted: requested {requested:.6} J with {remaining:.6} J remaining")]
 pub struct Exhausted {
+    /// Joules requested by the draw.
     pub requested: f64,
+    /// Joules that were still available.
     pub remaining: f64,
 }
 
@@ -22,6 +25,7 @@ pub struct Battery {
 }
 
 impl Battery {
+    /// A full battery with the given capacity.
     pub fn new(capacity: Energy) -> Battery {
         assert!(capacity.joules() > 0.0);
         Battery {
@@ -35,18 +39,22 @@ impl Battery {
         Battery::new(Energy::from_joules(crate::device::calib::BATTERY_BUDGET_J))
     }
 
+    /// Total capacity.
     pub fn capacity(&self) -> Energy {
         self.capacity
     }
 
+    /// Energy drawn so far.
     pub fn drawn(&self) -> Energy {
         self.drawn
     }
 
+    /// Energy still available.
     pub fn remaining(&self) -> Energy {
         self.capacity - self.drawn
     }
 
+    /// True once a draw has been refused.
     pub fn is_exhausted(&self) -> bool {
         self.drawn >= self.capacity
     }

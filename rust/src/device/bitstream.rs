@@ -23,15 +23,19 @@ use crate::util::rng::Xoshiro256ss;
 /// (for dedup) and size (for transfer timing).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Frame {
+    /// A frame containing no design content (compressible).
     Empty,
+    /// A frame with design content, identified by digest.
     Occupied { digest: u64 },
 }
 
 impl Frame {
+    /// Frame payload size in bits.
     pub fn bits(&self) -> u64 {
         FRAME_BITS
     }
 
+    /// True for an empty (dedupable) frame.
     pub fn is_empty(&self) -> bool {
         matches!(self, Frame::Empty)
     }
@@ -40,8 +44,11 @@ impl Frame {
 /// A synthetic bitstream: header + frames.
 #[derive(Debug, Clone)]
 pub struct Bitstream {
+    /// Device this bitstream targets.
     pub model: FpgaModel,
+    /// Header/command overhead bits before frame data.
     pub header_bits: u64,
+    /// The configuration frames, in address order.
     pub frames: Vec<Frame>,
 }
 
@@ -97,10 +104,12 @@ impl Bitstream {
         self.header_bits + self.frames.len() as u64 * FRAME_BITS
     }
 
+    /// Total frame count.
     pub fn n_frames(&self) -> usize {
         self.frames.len()
     }
 
+    /// Frames carrying design content.
     pub fn occupied_frames(&self) -> usize {
         self.frames.iter().filter(|f| !f.is_empty()).count()
     }

@@ -17,10 +17,13 @@ use crate::device::rails::PowerSaving;
 use crate::sim::time::SimTime;
 use crate::util::units::{Duration, Energy, Power};
 
+/// Why a board operation failed.
 #[derive(Debug, thiserror::Error)]
 pub enum BoardError {
+    /// The FPGA refused the operation in its current state.
     #[error(transparent)]
     Fpga(#[from] FpgaError),
+    /// The battery budget is exhausted.
     #[error(transparent)]
     Exhausted(#[from] Exhausted),
 }
@@ -28,9 +31,13 @@ pub enum BoardError {
 /// The assembled platform.
 #[derive(Debug, Clone)]
 pub struct Board {
+    /// The Spartan-7 device.
     pub fpga: Fpga,
+    /// The configuration flash.
     pub flash: Flash,
+    /// The RP2040 coordinator.
     pub mcu: Mcu,
+    /// The energy budget.
     pub battery: Battery,
     /// Aggregate FPGA-side monitor (the "hardware measurement" channel).
     pub monitor: Pac1934,

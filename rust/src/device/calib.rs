@@ -75,6 +75,7 @@ pub const SPI_DYN_MW_PER_MHZ_LANE: f64 = 0.42385;
 /// compressed (paper §5.2: "compression led to higher power ... likely due
 /// to more switching activities").
 pub const COMPRESSED_ACTIVITY: f64 = 1.15;
+/// Baseline SPI switching activity (uncompressed bitstreams).
 pub const UNCOMPRESSED_ACTIVITY: f64 = 1.0;
 
 // ---------------------------------------------------------------------------
@@ -126,8 +127,11 @@ pub const LEAKAGE_EXP: f64 = 3.0;
 
 /// Nominal and retention (Method 2) rail voltages.
 pub const VCCINT_NOM: Voltage = Voltage(1.0);
+/// VCCINT retention (Method 2) voltage.
 pub const VCCINT_RETENTION: Voltage = Voltage(0.75);
+/// VCCAUX nominal voltage.
 pub const VCCAUX_NOM: Voltage = Voltage(1.8);
+/// VCCAUX retention (Method 2) voltage.
 pub const VCCAUX_RETENTION: Voltage = Voltage(1.5);
 
 // ---------------------------------------------------------------------------
@@ -146,6 +150,7 @@ pub const POWER_ON_TRANSIENT_MJ: f64 = 0.1244;
 
 /// RP2040 sleep current (paper §2: 180 µA) at the 3.3 V MCU rail.
 pub const MCU_SLEEP_CURRENT_UA: f64 = 180.0;
+/// MCU rail voltage.
 pub const MCU_RAIL: Voltage = Voltage(3.3);
 
 /// RP2040 active draw while coordinating a request (datasheet-typical
@@ -154,6 +159,7 @@ pub const MCU_ACTIVE_POWER: Power = Power(66.0e-3);
 
 /// Battery budget (paper §2: 320 mAh LiPo ≈ 4147 J).
 pub const BATTERY_BUDGET_J: f64 = 4147.0;
+/// Battery capacity in mAh (paper §2: 320 mAh LiPo).
 pub const BATTERY_CAPACITY_MAH: f64 = 320.0;
 
 /// PAC1934 sampling rate (paper §2: 1024 samples/s per rail).

@@ -30,12 +30,16 @@ pub struct UnknownStage(pub String);
 /// One stage of the configuration phase.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Stage {
+    /// Stage name (`setup`, `bitstream_loading`, `startup`).
     pub name: &'static str,
+    /// Stage duration at the profiled SPI setting.
     pub time: Duration,
+    /// Average power over the stage.
     pub power: Power,
 }
 
 impl Stage {
+    /// Stage energy: `power × time`.
     pub fn energy(&self) -> Energy {
         self.power * self.time
     }
@@ -44,8 +48,11 @@ impl Stage {
 /// Complete per-stage profile of one configuration phase.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ConfigProfile {
+    /// Device the profile was computed for.
     pub model: FpgaModel,
+    /// SPI setting the profile was computed at.
     pub spi: SpiConfig,
+    /// The FSM stages, in execution order.
     pub stages: Vec<Stage>,
 }
 
@@ -89,11 +96,13 @@ impl ConfigProfile {
             .ok_or_else(|| UnknownStage(name.to_string()))
     }
 
+    /// The setup stage (device init; constant across SPI settings).
     pub fn setup(&self) -> &Stage {
         self.stage(Self::STAGE_NAMES[0])
             .expect("compute() always emits a setup stage")
     }
 
+    /// The bitstream-loading stage (the part the SPI setting scales).
     pub fn loading(&self) -> &Stage {
         self.stage(Self::STAGE_NAMES[1])
             .expect("compute() always emits a bitstream_loading stage")

@@ -15,10 +15,13 @@ use crate::device::calib::FLASH_STANDBY_POWER;
 use crate::device::compression::{compress, stream_bits};
 use crate::util::units::Power;
 
+/// Why a flash read failed.
 #[derive(Debug, Clone, PartialEq, thiserror::Error)]
 pub enum FlashError {
+    /// No image programmed at the requested slot.
     #[error("no bitstream stored in slot '{0}'")]
     EmptySlot(String),
+    /// The requested link parameters exceed the part's limits.
     #[error("spi setting unsupported by flash: {0}")]
     Unsupported(String),
 }
@@ -31,12 +34,15 @@ pub enum FlashError {
 /// ~500× slower than Idle-Waiting ones (§Perf log in EXPERIMENTS.md).
 #[derive(Debug, Clone)]
 pub struct StoredImage {
+    /// The stored bitstream.
     pub bitstream: Bitstream,
+    /// Whether it is stored MFWR-compressed.
     pub compressed: bool,
     cached_stream_bits: u64,
 }
 
 impl StoredImage {
+    /// Wrap a bitstream for storage.
     pub fn new(bitstream: Bitstream, compressed: bool) -> StoredImage {
         let cached_stream_bits = stream_bits(&bitstream, compressed);
         StoredImage {
@@ -57,8 +63,11 @@ impl StoredImage {
 #[derive(Debug, Clone)]
 pub struct Flash {
     slots: BTreeMap<String, StoredImage>,
+    /// Standby draw while the board is powered (the §5.4 floor).
     pub standby_power: Power,
+    /// Maximum supported SPI clock.
     pub max_freq_mhz: f64,
+    /// Supported bus widths.
     pub supported_widths: [u8; 3],
 }
 
@@ -69,6 +78,7 @@ impl Default for Flash {
 }
 
 impl Flash {
+    /// An empty flash with datasheet link limits.
     pub fn new() -> Flash {
         Flash {
             slots: BTreeMap::new(),
@@ -109,6 +119,7 @@ impl Flash {
             .ok_or_else(|| FlashError::EmptySlot(slot.to_string()))
     }
 
+    /// Names of the programmed image slots.
     pub fn slots(&self) -> impl Iterator<Item = &str> {
         self.slots.keys().map(|s| s.as_str())
     }

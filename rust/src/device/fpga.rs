@@ -13,14 +13,19 @@ use crate::device::flash::{Flash, FlashError};
 use crate::device::rails::{PowerSaving, RailSet};
 use crate::util::units::{Energy, Power};
 
+/// Why an FPGA operation was refused.
 #[derive(Debug, Clone, PartialEq, thiserror::Error)]
 pub enum FpgaError {
+    /// Operation requires power; the rails are down.
     #[error("operation requires the FPGA powered on (state: {0})")]
     PoweredOff(&'static str),
+    /// Operation requires a loaded configuration.
     #[error("operation requires a configured FPGA")]
     NotConfigured,
+    /// Operation invalid in the current state.
     #[error("operation requires operational rails (currently in {0} power-saving)")]
     NotOperational(&'static str),
+    /// The configuration source failed.
     #[error(transparent)]
     Flash(#[from] FlashError),
 }
@@ -39,6 +44,7 @@ pub enum FpgaState {
 }
 
 impl FpgaState {
+    /// State name for reports.
     pub fn name(&self) -> &'static str {
         match self {
             FpgaState::Off => "off",
@@ -52,7 +58,9 @@ impl FpgaState {
 /// The FPGA device model.
 #[derive(Debug, Clone)]
 pub struct Fpga {
+    /// Device model.
     pub model: FpgaModel,
+    /// Current power/configuration state.
     pub state: FpgaState,
     rails: RailSet,
     /// Name of the accelerator currently configured, if any.
@@ -64,6 +72,7 @@ pub struct Fpga {
 }
 
 impl Fpga {
+    /// A powered-off FPGA of the given model.
     pub fn new(model: FpgaModel) -> Fpga {
         Fpga {
             model,
@@ -75,10 +84,12 @@ impl Fpga {
         }
     }
 
+    /// True when a configuration is loaded (idle or busy).
     pub fn is_configured(&self) -> bool {
         self.configured_with.is_some()
     }
 
+    /// Name of the loaded image, if configured.
     pub fn configured_with(&self) -> Option<&str> {
         self.configured_with.as_deref()
     }

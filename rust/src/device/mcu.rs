@@ -14,6 +14,7 @@ use crate::util::units::{Current, Duration, Energy, Power};
 /// MCU operating state.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum McuState {
+    /// Low-power sleep between requests (180 µA).
     Sleep,
     /// Awake handling a request (SPI transfers, bookkeeping).
     Active,
@@ -22,6 +23,7 @@ pub enum McuState {
 /// The RP2040 coordinator MCU.
 #[derive(Debug, Clone)]
 pub struct Mcu {
+    /// Current operating state.
     pub state: McuState,
     /// Cumulative energy on the MCU rail.
     pub energy: Energy,
@@ -38,6 +40,7 @@ impl Default for Mcu {
 }
 
 impl Mcu {
+    /// A sleeping MCU.
     pub fn new() -> Mcu {
         Mcu {
             state: McuState::Sleep,
@@ -47,10 +50,12 @@ impl Mcu {
         }
     }
 
+    /// Sleep-state draw (paper §2: 180 µA at 3.3 V).
     pub fn sleep_power() -> Power {
         MCU_RAIL * Current::from_microamps(MCU_SLEEP_CURRENT_UA)
     }
 
+    /// Active draw while coordinating a request.
     pub fn active_power() -> Power {
         MCU_ACTIVE_POWER
     }

@@ -16,8 +16,11 @@ use crate::util::units::{Energy, Power};
 /// One monitored power segment: constant `power` over `[start, end)`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Segment {
+    /// Sample-window start.
     pub start: SimTime,
+    /// Sample-window end.
     pub end: SimTime,
+    /// Power the monitor attributed to the window.
     pub power: Power,
 }
 
@@ -42,6 +45,7 @@ impl Default for Pac1934 {
 }
 
 impl Pac1934 {
+    /// A monitor sampling at the given rate.
     pub fn new(sample_rate_hz: f64) -> Pac1934 {
         assert!(sample_rate_hz > 0.0);
         Pac1934 {
@@ -102,6 +106,7 @@ impl Pac1934 {
         }
     }
 
+    /// Samples accumulated so far.
     pub fn samples(&self) -> u64 {
         self.samples
     }

@@ -16,16 +16,24 @@ use crate::util::units::{Current, Power};
 /// Identifiers for the seven monitored rails (Fig 3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Rail {
+    /// MCU supply.
     McuVdd,
+    /// FPGA IO-bank supply.
     Fpga3v3Vcco,
+    /// FPGA core supply.
     FpgaVccint,
+    /// FPGA auxiliary supply.
     FpgaVccaux,
+    /// Configuration-flash supply.
     Flash3v3,
+    /// Clock-reference oscillator supply.
     ClkRef3v3,
+    /// Power-monitor supply.
     Monitor3v3,
 }
 
 impl Rail {
+    /// All seven rails, in Fig 3 order.
     pub const ALL: [Rail; 7] = [
         Rail::McuVdd,
         Rail::Fpga3v3Vcco,
@@ -36,6 +44,7 @@ impl Rail {
         Rail::Monitor3v3,
     ];
 
+    /// Schematic net name.
     pub fn name(&self) -> &'static str {
         match self {
             Rail::McuVdd => "MCU_VDD",
@@ -59,19 +68,23 @@ pub struct PowerSaving {
 }
 
 impl PowerSaving {
+    /// No power saving: everything stays up while idle.
     pub const BASELINE: PowerSaving = PowerSaving {
         method1: false,
         method2: false,
     };
+    /// Method 1: gate IOs + clock reference while idle.
     pub const M1: PowerSaving = PowerSaving {
         method1: true,
         method2: false,
     };
+    /// Methods 1+2: also undervolt VCCINT/VCCAUX to retention.
     pub const M12: PowerSaving = PowerSaving {
         method1: true,
         method2: true,
     };
 
+    /// Human-readable level name.
     pub fn label(&self) -> &'static str {
         match (self.method1, self.method2) {
             (false, false) => "baseline",
@@ -85,7 +98,9 @@ impl PowerSaving {
 /// The FPGA-side rail tree.
 #[derive(Debug, Clone)]
 pub struct RailSet {
+    /// FPGA core regulator.
     pub vccint: Regulator,
+    /// FPGA auxiliary regulator.
     pub vccaux: Regulator,
     /// Clock-reference oscillator currently powered?
     pub clkref_on: bool,

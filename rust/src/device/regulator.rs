@@ -24,15 +24,20 @@ pub enum RegMode {
 /// One adjustable regulator feeding an FPGA supply rail.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Regulator {
+    /// Rail name (VCCINT/VCCAUX).
     pub name: &'static str,
+    /// Nominal operating voltage.
     pub nominal: Voltage,
+    /// Method 2 retention voltage.
     pub retention: Voltage,
     /// Static power drawn by the load at nominal voltage.
     pub static_load_nom: Power,
+    /// Current regulator mode.
     pub mode: RegMode,
 }
 
 impl Regulator {
+    /// A regulator with the given voltages and static draw, starting off.
     pub fn new(
         name: &'static str,
         nominal: Voltage,
@@ -49,6 +54,7 @@ impl Regulator {
         }
     }
 
+    /// Output voltage in the current mode.
     pub fn voltage(&self) -> Voltage {
         match self.mode {
             RegMode::Off => Voltage::from_volts(0.0),

@@ -35,6 +35,7 @@ pub struct ItemEnergetics {
 }
 
 impl ItemEnergetics {
+    /// Derive the per-item energy quantities from a Table 2 description.
     pub fn from_spec(item: &WorkloadItemSpec) -> ItemEnergetics {
         ItemEnergetics {
             e_config: item.configuration.energy(),
@@ -79,7 +80,9 @@ impl ItemEnergetics {
 /// Result of an analytical evaluation for one (policy, T_req) point.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Prediction {
+    /// Policy evaluated.
     pub policy: PolicySpec,
+    /// Request period evaluated at.
     pub t_req: Duration,
     /// Eq 3: maximum executable workload items. `None` = infeasible
     /// (On-Off with T_req below the item latency — Fig 8's gap).
@@ -93,11 +96,14 @@ pub struct Prediction {
 /// The analytical model bound to an item description and a budget.
 #[derive(Debug, Clone)]
 pub struct Analytical {
+    /// Per-item energy quantities.
     pub item: ItemEnergetics,
+    /// The energy budget (Eq 3's E_Budget).
     pub budget: Energy,
 }
 
 impl Analytical {
+    /// Bind the model to an item description and budget.
     pub fn new(item: &WorkloadItemSpec, budget: Energy) -> Analytical {
         Analytical {
             item: ItemEnergetics::from_spec(item),

@@ -12,14 +12,20 @@ use crate::util::units::{Duration, Energy, Power};
 /// Phase identity within a workload item.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Phase {
+    /// FPGA configuration.
     Configuration,
+    /// Input transfer.
     DataLoading,
+    /// The accelerated inference.
     Inference,
+    /// Output transfer.
     DataOffloading,
+    /// Between-request idling.
     Idle,
 }
 
 impl Phase {
+    /// The four active (non-idle) phases, in execution order.
     pub const ACTIVE: [Phase; 4] = [
         Phase::Configuration,
         Phase::DataLoading,
@@ -27,6 +33,7 @@ impl Phase {
         Phase::DataOffloading,
     ];
 
+    /// Phase name for reports.
     pub fn name(&self) -> &'static str {
         match self {
             Phase::Configuration => "configuration",
@@ -41,12 +48,16 @@ impl Phase {
 /// Power and duration of a phase instance.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PhaseProfile {
+    /// Which phase this profile describes.
     pub phase: Phase,
+    /// Average power over the phase.
     pub power: Power,
+    /// Phase duration.
     pub time: Duration,
 }
 
 impl PhaseProfile {
+    /// Phase energy: `power × time`.
     pub fn energy(&self) -> Energy {
         self.power * self.time
     }
@@ -81,11 +92,14 @@ pub fn active_profiles(item: &WorkloadItemSpec) -> [PhaseProfile; 4] {
 /// Per-phase energy breakdown with fractions (the Fig 2 pie).
 #[derive(Debug, Clone)]
 pub struct Breakdown {
+    /// Per-phase energies, in execution order.
     pub entries: Vec<(Phase, Energy)>,
+    /// Sum over all entries.
     pub total: Energy,
 }
 
 impl Breakdown {
+    /// The Fig 2 energy breakdown of one workload item.
     pub fn of_item(item: &WorkloadItemSpec) -> Breakdown {
         let entries: Vec<(Phase, Energy)> = active_profiles(item)
             .iter()

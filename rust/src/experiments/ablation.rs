@@ -28,6 +28,7 @@ use crate::util::units::{Duration, Energy, Power};
 // 1. flash-floor ablation
 // ---------------------------------------------------------------------------
 
+/// Lifetime sensitivity to the flash-standby floor (§5.4).
 #[derive(Debug, Clone)]
 pub struct FlashFloorAblation {
     /// (label, idle power with floor, idle power without, crossover with,
@@ -35,6 +36,7 @@ pub struct FlashFloorAblation {
     pub rows: Vec<(&'static str, Power, Power, Duration, Duration)>,
 }
 
+/// Run the flash-floor ablation serially.
 pub fn flash_floor(config: &SimConfig) -> FlashFloorAblation {
     flash_floor_threaded(config, &SweepRunner::single())
 }
@@ -70,6 +72,7 @@ impl FlashFloorAblation {
         *without / *with
     }
 
+    /// Render the ablation table.
     pub fn render(&self) -> String {
         let mut t = Table::new(&[
             "idle mode",
@@ -98,12 +101,14 @@ impl FlashFloorAblation {
 // 2. power-on-transient sensitivity
 // ---------------------------------------------------------------------------
 
+/// Lifetime sensitivity to the power-on transient constant.
 #[derive(Debug, Clone)]
 pub struct TransientSensitivity {
     /// (transient mJ, on-off items, baseline crossover ms)
     pub rows: Vec<(f64, u64, f64)>,
 }
 
+/// Run the transient ablation serially.
 pub fn transient_sensitivity(config: &SimConfig) -> TransientSensitivity {
     transient_sensitivity_threaded(config, &SweepRunner::single())
 }
@@ -129,6 +134,7 @@ pub fn transient_sensitivity_threaded(
 }
 
 impl TransientSensitivity {
+    /// Render the ablation table.
     pub fn render(&self) -> String {
         let mut t = Table::new(&[
             "transient (mJ)",
@@ -153,14 +159,17 @@ impl TransientSensitivity {
 // 3. multi-accelerator switching
 // ---------------------------------------------------------------------------
 
+/// Closed-form multi-accelerator reconfiguration ablation.
 #[derive(Debug, Clone)]
 pub struct MultiAccelAblation {
     /// (mix fraction, fifo reconfigs, batched reconfigs, fifo energy mJ,
     /// batched energy mJ, batched deadline violations)
     pub rows: Vec<(f64, u64, u64, f64, f64, u64)>,
+    /// Requests simulated per mix point.
     pub requests: u64,
 }
 
+/// Run the multi-accel ablation serially.
 pub fn multi_accel(config: &SimConfig, requests: u64, seed: u64) -> MultiAccelAblation {
     multi_accel_threaded(config, requests, seed, &SweepRunner::single())
 }
@@ -213,6 +222,7 @@ pub fn multi_accel_threaded(
 }
 
 impl MultiAccelAblation {
+    /// Render the ablation table.
     pub fn render(&self) -> String {
         let mut t = Table::new(&[
             "mix (frac to accel B)",

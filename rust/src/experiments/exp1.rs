@@ -19,19 +19,24 @@ use crate::util::table::{fnum, Table};
 /// One sweep point of Fig 7.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
+    /// The SPI setting of this sweep point.
     pub spi: SpiConfig,
+    /// The configuration profile the FSM produced for it.
     pub profile: ConfigProfile,
 }
 
 impl SweepPoint {
+    /// Configuration time in ms.
     pub fn config_time_ms(&self) -> f64 {
         self.profile.total_time().millis()
     }
 
+    /// Configuration energy in mJ.
     pub fn config_energy_mj(&self) -> f64 {
         self.profile.total_energy().millijoules()
     }
 
+    /// Average configuration power in mW.
     pub fn config_power_mw(&self) -> f64 {
         self.profile.avg_power().milliwatts()
     }
@@ -40,7 +45,9 @@ impl SweepPoint {
 /// Full Experiment 1 results.
 #[derive(Debug, Clone)]
 pub struct Exp1Result {
+    /// FPGA model swept.
     pub model: FpgaModel,
+    /// All 66 sweep points (Table 1 grid).
     pub points: Vec<SweepPoint>,
 }
 
@@ -67,6 +74,7 @@ pub fn run_threaded(model: FpgaModel, runner: &SweepRunner) -> Exp1Result {
 }
 
 impl Exp1Result {
+    /// The sweep point for an exact SPI setting.
     pub fn point(&self, spi: SpiConfig) -> &SweepPoint {
         self.points
             .iter()
@@ -74,10 +82,12 @@ impl Exp1Result {
             .expect("sweep covers all settings")
     }
 
+    /// The paper's optimal setting's point.
     pub fn optimal(&self) -> &SweepPoint {
         self.point(SpiConfig::optimal())
     }
 
+    /// The paper's worst setting's point.
     pub fn worst(&self) -> &SweepPoint {
         self.point(SpiConfig::worst())
     }

@@ -17,19 +17,26 @@ use crate::util::units::Duration;
 /// One sweep sample.
 #[derive(Debug, Clone, Copy)]
 pub struct Sample {
+    /// Request period of the sample (ms).
     pub t_req_ms: f64,
     /// None = infeasible (On-Off below the configuration time).
     pub onoff_items: Option<u64>,
+    /// Idle-Waiting items (Eq 3).
     pub iw_items: u64,
+    /// On-Off lifetime in hours (None where infeasible).
     pub onoff_lifetime_h: Option<f64>,
+    /// Idle-Waiting lifetime in hours.
     pub iw_lifetime_h: f64,
 }
 
 /// Full Experiment 2 results.
 #[derive(Debug, Clone)]
 pub struct Exp2Result {
+    /// The swept samples, in period order.
     pub samples: Vec<Sample>,
+    /// Measured efficiency crossover (ms).
     pub crossover_ms: f64,
+    /// Sweep step used (ms).
     pub step_ms: f64,
 }
 
@@ -68,6 +75,7 @@ pub fn run_threaded(config: &SimConfig, step_ms: f64, runner: &SweepRunner) -> E
 }
 
 impl Exp2Result {
+    /// The sample at an exact period (ms).
     pub fn at(&self, t_req_ms: f64) -> &Sample {
         self.samples
             .iter()
@@ -176,6 +184,7 @@ impl Exp2Result {
         out
     }
 
+    /// The sweep series as CSV (the published `--csv` schema).
     pub fn to_csv(&self) -> Csv {
         let mut csv = Csv::new(&[
             "t_req_ms",

@@ -22,20 +22,30 @@ use crate::util::units::Duration;
 /// One sweep sample across the three idle modes.
 #[derive(Debug, Clone, Copy)]
 pub struct Sample {
+    /// Request period of the sample (ms).
     pub t_req_ms: f64,
+    /// Items at baseline idle power.
     pub baseline_items: u64,
+    /// Items with Method 1.
     pub m1_items: u64,
+    /// Items with Methods 1+2.
     pub m12_items: u64,
 }
 
 /// Full Experiment 3 results.
 #[derive(Debug, Clone)]
 pub struct Exp3Result {
+    /// The swept samples, in period order.
     pub samples: Vec<Sample>,
+    /// Baseline idle power (mW).
     pub idle_baseline_mw: f64,
+    /// Method 1 idle power (mW).
     pub idle_m1_mw: f64,
+    /// Methods 1+2 idle power (mW).
     pub idle_m12_mw: f64,
+    /// Measured M1+2-vs-On-Off crossover (ms).
     pub m12_crossover_ms: f64,
+    /// M1+2 items over On-Off items at the 40 ms case study.
     pub m12_vs_onoff_at_40ms: f64,
 }
 
@@ -202,6 +212,7 @@ impl Exp3Result {
         t.render()
     }
 
+    /// The sweep series as CSV (the published `--csv` schema).
     pub fn to_csv(&self) -> Csv {
         let mut csv = Csv::new(&["t_req_ms", "baseline_items", "m1_items", "m12_items"]);
         for s in &self.samples {

@@ -5,10 +5,11 @@
 //! a compile-time choice. This grid measures what happens when arrivals
 //! are *not* periodic and the policy must decide online: every policy
 //! **variant** — a [`PolicySpec`] plus a [`PolicyParams`] tunable point
-//! (extra quantiles, windows, EMA alphas, timeouts beyond the defaults)
-//! — runs against six arrival processes: periodic, jittered, Poisson and
-//! the three `workloads/` corpus shapes (bursty IoT, diurnal Poisson,
-//! on/off MMPP, synthesized deterministically by
+//! (extra quantiles, windows, EMA alphas, timeouts beyond the defaults,
+//! plus one `tuned` row whose point the [`tuner`] auto-searched on the
+//! bursty-IoT corpus) — runs against six arrival processes: periodic,
+//! jittered, Poisson and the three `workloads/` corpus shapes (bursty
+//! IoT, diurnal Poisson, on/off MMPP, synthesized deterministically by
 //! [`tracegen`](crate::coordinator::tracegen)). Cells run on the shared
 //! [`SweepRunner`]; each reports energy, lifetime, mean served latency
 //! and the gap-decision counters that explain *why* a variant wins, per
@@ -32,6 +33,7 @@ use crate::runner::grid::{cross, derive_seed};
 use crate::runner::SweepRunner;
 use crate::strategies::simulate::{simulate, GapDecisions};
 use crate::strategies::strategy::build_with;
+use crate::tuner::{self, SearchStrategy, TuneConfig};
 use crate::util::csv::Csv;
 use crate::util::table::{fcount, fnum, Table};
 use crate::util::units::Duration;
@@ -51,12 +53,19 @@ pub const ARRIVALS: [&str; 6] = [
 /// Gaps synthesized per corpus column (cycled by the replayer).
 const CORPUS_GAPS: usize = 256;
 
+/// Candidate budget of the embedded tuner behind the `tuned` row.
+const TUNED_BUDGET: usize = 16;
+
 /// One policy variant: a spec plus a tunable point. `tunable` labels the
-/// point in tables/CSV (`default` = the paper-faithful [`PolicyParams`]).
+/// point in tables/CSV (`default` = the paper-faithful [`PolicyParams`],
+/// `tuned` = the point the embedded auto-search found).
 #[derive(Debug, Clone)]
 pub struct PolicyVariant {
+    /// The policy.
     pub spec: PolicySpec,
+    /// Label of the tunable point (`default`, `w=16 q=0.5`, `tuned`, …).
     pub tunable: &'static str,
+    /// The tunable point itself.
     pub params: PolicyParams,
 }
 
@@ -140,22 +149,34 @@ impl Default for Exp4Config {
 /// One grid cell's outcome.
 #[derive(Debug, Clone)]
 pub struct Exp4Row {
+    /// The policy of the cell's variant.
     pub policy: PolicySpec,
+    /// Tunable-point label of the cell's variant.
     pub tunable: &'static str,
+    /// Arrival column name.
     pub arrival: &'static str,
+    /// Items served.
     pub items: u64,
+    /// Exact FPGA-side energy drawn (mJ).
     pub energy_mj: f64,
+    /// Eq 4 lifetime (hours).
     pub lifetime_h: f64,
+    /// Mean served latency (ms), queueing included.
     pub mean_latency_ms: f64,
+    /// Per-gap decision counters.
     pub decisions: GapDecisions,
+    /// Requests that arrived before their predecessor finished.
     pub late_requests: u64,
 }
 
 /// Full Experiment 4 results (row-major: variant outer, arrival inner).
 #[derive(Debug, Clone)]
 pub struct Exp4Result {
+    /// All grid cells in row-major order.
     pub rows: Vec<Exp4Row>,
+    /// Item cap per cell.
     pub items: u64,
+    /// Nominal mean inter-arrival time (ms).
     pub period_ms: f64,
 }
 
@@ -163,6 +184,33 @@ pub struct Exp4Result {
 /// path.
 pub fn run(config: &SimConfig, e4: &Exp4Config) -> std::io::Result<Exp4Result> {
     run_threaded(config, e4, &SweepRunner::single())
+}
+
+/// The `tuned` grid row: run the [`tuner`] (successive halving, small
+/// budget) for the windowed-quantile policy on the bursty-IoT corpus
+/// trace — the shape where hand-picked tunables hurt most — and enter
+/// the winning point as one more variant. Deterministic: the tuner
+/// derives its candidate stream from the experiment seed and evaluates
+/// on the shared runner, so the row (and the whole CSV) stays
+/// byte-identical at any `--threads N`.
+pub fn tuned_variant(
+    config: &SimConfig,
+    e4: &Exp4Config,
+    bursty_gaps: &[Duration],
+    runner: &SweepRunner,
+) -> Result<PolicyVariant, tuner::TuneError> {
+    let tc = TuneConfig {
+        search: SearchStrategy::Halving,
+        budget: TUNED_BUDGET,
+        seed: derive_seed(e4.seed, 0x7EED),
+        ..TuneConfig::for_spec(PolicySpec::WindowedQuantile)
+    };
+    let outcome = tuner::tune(config, &tc, bursty_gaps, runner)?;
+    Ok(PolicyVariant {
+        spec: PolicySpec::WindowedQuantile,
+        tunable: "tuned",
+        params: outcome.best,
+    })
 }
 
 /// The policy-variant × arrival grid on the sweep engine.
@@ -218,7 +266,19 @@ pub fn run_threaded(
         arrival_axis.push((ARRIVALS.len(), "trace"));
     }
 
-    let grid = cross(&variants(), &arrival_axis);
+    // the hand-picked variants plus the auto-searched `tuned` row
+    let bursty = &corpus
+        .iter()
+        .find(|(name, _)| *name == "bursty-iot")
+        .expect("bursty-iot corpus column present")
+        .1;
+    let mut vs = variants();
+    vs.push(
+        tuned_variant(config, e4, bursty, runner)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?,
+    );
+
+    let grid = cross(&vs, &arrival_axis);
     let rows = runner.run(&grid, |cell| {
         let (variant, (arrival_idx, arrival_name)) = cell.params;
         // one stream per arrival column, shared by every variant row
@@ -283,6 +343,7 @@ impl Exp4Result {
         self.row_variant(policy, "default", arrival)
     }
 
+    /// The row for an exact (policy, tunable label, arrival) cell.
     pub fn row_variant(
         &self,
         policy: PolicySpec,
@@ -301,6 +362,7 @@ impl Exp4Result {
         r.energy_mj / r.items.max(1) as f64
     }
 
+    /// Render the ASCII results table.
     pub fn render(&self) -> String {
         let mut t = Table::new(&[
             "policy",
@@ -337,6 +399,7 @@ impl Exp4Result {
         t.render()
     }
 
+    /// The grid as CSV (the published `repro exp4 --csv` schema).
     pub fn to_csv(&self) -> Csv {
         let mut csv = Csv::new(&[
             "policy",
@@ -387,7 +450,8 @@ mod tests {
     fn grid_covers_every_variant_and_arrival() {
         let r = run(&paper_default(), &small()).unwrap();
         let vs = variants();
-        assert_eq!(r.rows.len(), vs.len() * ARRIVALS.len());
+        // the hand-picked variants plus the auto-searched `tuned` row
+        assert_eq!(r.rows.len(), (vs.len() + 1) * ARRIVALS.len());
         for v in &vs {
             for arrival in ARRIVALS {
                 assert_eq!(
@@ -403,6 +467,29 @@ mod tests {
         for spec in PolicySpec::ALL {
             assert_eq!(r.row(spec, "periodic").tunable, "default");
         }
+        // the tuned row covers every arrival column too
+        for arrival in ARRIVALS {
+            assert_eq!(
+                r.row_variant(PolicySpec::WindowedQuantile, "tuned", arrival).items,
+                300
+            );
+        }
+    }
+
+    #[test]
+    fn tuned_row_beats_the_default_point_on_the_trace_it_tuned_for() {
+        // the embedded tuner searched windowed-quantile on the bursty-IoT
+        // corpus; its row must not lose to the hand-default point there
+        let r = run(&paper_default(), &small()).unwrap();
+        let tuned = r.row_variant(PolicySpec::WindowedQuantile, "tuned", "bursty-iot");
+        let dflt = r.row_variant(PolicySpec::WindowedQuantile, "default", "bursty-iot");
+        let per_item = |row: &Exp4Row| row.energy_mj / row.items.max(1) as f64;
+        assert!(
+            per_item(tuned) <= per_item(dflt) * 1.001,
+            "tuned {} vs default {}",
+            per_item(tuned),
+            per_item(dflt)
+        );
     }
 
     #[test]
@@ -478,7 +565,7 @@ mod tests {
             nominal: Duration::from_millis(40.0),
         };
         let r = run(&cfg, &small()).unwrap();
-        assert_eq!(r.rows.len(), variants().len() * (ARRIVALS.len() + 1));
+        assert_eq!(r.rows.len(), (variants().len() + 1) * (ARRIVALS.len() + 1));
         let row = r.row(PolicySpec::Oracle, "trace");
         assert_eq!(row.items, 300);
         // the 700 ms silences (beyond every crossover) force power-offs

@@ -19,7 +19,9 @@ use crate::util::units::{Duration, Energy, Power};
 /// The reconstructed prior-study ([5]) workload item.
 #[derive(Debug, Clone)]
 pub struct Fig2Profile {
+    /// The configuration profile at optimal settings.
     pub config: ConfigProfile,
+    /// The non-configuration phases as (name, power, time).
     pub phases: Vec<(&'static str, Power, Duration)>,
 }
 
@@ -78,14 +80,17 @@ pub fn share_series(runner: &SweepRunner) -> Vec<(f64, f64)> {
 }
 
 impl Fig2Profile {
+    /// Configuration-phase energy.
     pub fn config_energy(&self) -> Energy {
         self.config.total_energy()
     }
 
+    /// Energy of everything except configuration.
     pub fn other_energy(&self) -> Energy {
         self.phases.iter().map(|(_, p, t)| *p * *t).sum()
     }
 
+    /// Total item energy.
     pub fn total_energy(&self) -> Energy {
         self.config_energy() + self.other_energy()
     }
@@ -101,6 +106,7 @@ impl Fig2Profile {
         self.total_energy() / self.other_energy()
     }
 
+    /// Render the Fig 2 breakdown table.
     pub fn render(&self) -> String {
         let mut t = Table::new(&["phase", "energy (mJ)", "share (%)"])
             .with_title("Fig 2: energy breakdown of a workload item (prior-study regime)");

@@ -9,45 +9,63 @@
 pub mod exp1 {
     /// Optimal setting: Quad SPI, 66 MHz, compressed.
     pub const OPT_TIME_MS: f64 = 36.145;
+    /// Optimal-setting configuration energy (mJ).
     pub const OPT_ENERGY_MJ: f64 = 11.85;
+    /// Optimal-setting configuration power (mW).
     pub const OPT_POWER_MW: f64 = 327.9;
     /// Worst setting: Single SPI, 3 MHz, uncompressed.
     pub const WORST_ENERGY_MJ: f64 = 475.56;
     /// Headline ratios.
     pub const TIME_IMPROVEMENT: f64 = 41.4;
+    /// Headline energy ratio (worst / optimal).
     pub const ENERGY_IMPROVEMENT: f64 = 40.13;
     /// Setup stage (§5.2): constant across settings.
     pub const SETUP_POWER_MW: f64 = 288.0;
+    /// Setup stage duration (ms).
     pub const SETUP_TIME_MS: f64 = 27.0;
     /// XC7S25 at optimal settings (§5.2).
     pub const XC7S25_TIME_MS: f64 = 38.09;
+    /// XC7S25 configuration energy at optimal settings (mJ).
     pub const XC7S25_ENERGY_MJ: f64 = 13.75;
 }
 
 /// Table 2 — workload-item characterization on hardware.
 pub mod table2 {
+    /// Configuration power (mW).
     pub const CONFIG_POWER_MW: f64 = 327.9;
+    /// Configuration time (ms).
     pub const CONFIG_TIME_MS: f64 = 36.145;
+    /// Data-loading power (mW).
     pub const LOAD_POWER_MW: f64 = 138.7;
+    /// Data-loading time (ms).
     pub const LOAD_TIME_MS: f64 = 0.0100;
+    /// Inference power (mW).
     pub const INFER_POWER_MW: f64 = 171.4;
+    /// Inference time (ms).
     pub const INFER_TIME_MS: f64 = 0.0281;
+    /// Data-offloading power (mW).
     pub const OFFLOAD_POWER_MW: f64 = 144.1;
+    /// Data-offloading time (ms).
     pub const OFFLOAD_TIME_MS: f64 = 0.0020;
+    /// Idle power (mW).
     pub const IDLE_POWER_MW: f64 = 134.3;
 }
 
 /// §5.3 / Figs 8–9 — Experiment 2 (Idle-Waiting vs On-Off).
 pub mod exp2 {
+    /// Battery energy budget (J).
     pub const BUDGET_J: f64 = 4147.0;
     /// Sweep range and step used by the paper.
     pub const T_REQ_MIN_MS: f64 = 10.0;
+    /// Sweep upper bound (ms).
     pub const T_REQ_MAX_MS: f64 = 120.0;
+    /// Sweep step (ms).
     pub const T_REQ_STEP_MS: f64 = 0.01;
     /// On-Off items (constant over feasible periods).
     pub const ONOFF_ITEMS: u64 = 346_073;
     /// Idle-Waiting items at the sweep extremes.
     pub const IW_ITEMS_MAX: u64 = 3_085_319; // at 10 ms
+    /// Idle-Waiting items at the slowest swept period.
     pub const IW_ITEMS_MIN: u64 = 257_305; // at 120 ms
     /// Ratio at the paper's 40 ms case study.
     pub const RATIO_AT_40MS: f64 = 2.23;
@@ -59,23 +77,30 @@ pub mod exp2 {
     pub const IW_AVG_LIFETIME_H: f64 = 8.58;
     /// Hardware-vs-simulator validation gaps at 40 ms (§5.3).
     pub const HW_ITEMS_GAP: f64 = 0.028;
+    /// Hardware-vs-simulator lifetime gap (§5.3).
     pub const HW_LIFETIME_GAP: f64 = 0.027;
 }
 
 /// Table 3 + §5.4 / Figs 10–11 — Experiment 3 (idle power-saving).
 pub mod exp3 {
+    /// Baseline idle power (mW).
     pub const BASELINE_IDLE_MW: f64 = 134.3;
+    /// Method 1 idle power (mW).
     pub const M1_IDLE_MW: f64 = 34.2;
+    /// Methods 1+2 idle power (mW).
     pub const M12_IDLE_MW: f64 = 24.0;
     /// Paper's quoted savings (computed from unrounded measurements; the
     /// rounded Table 3 powers give 74.53% / 82.13%).
     pub const M1_SAVED_PCT: f64 = 74.38;
+    /// Idle-power saving of M1+2 vs baseline (%).
     pub const M12_SAVED_PCT: f64 = 81.98;
     /// Item-count multipliers vs baseline Idle-Waiting (sweep averages).
     pub const M1_ITEMS_X: f64 = 3.92;
+    /// M1+2 items over On-Off items at 40 ms.
     pub const M12_ITEMS_X: f64 = 5.57;
     /// Average lifetimes.
     pub const M1_AVG_LIFETIME_H: f64 = 33.64;
+    /// M1+2 average lifetime (hours).
     pub const M12_AVG_LIFETIME_H: f64 = 47.80;
     /// Extended advantageous request period.
     pub const M12_CROSSOVER_MS: f64 = 499.06;

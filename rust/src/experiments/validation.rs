@@ -26,20 +26,30 @@ use crate::util::units::Duration;
 /// One policy's validation row.
 #[derive(Debug, Clone)]
 pub struct Row {
+    /// Policy validated.
     pub policy: PolicySpec,
+    /// Eq 3 items from the analytical model.
     pub analytical_items: u64,
+    /// Items from the discrete-event simulation.
     pub des_items: u64,
+    /// Relative items gap (DES vs analytical).
     pub items_gap: f64,
+    /// Analytical lifetime (hours).
     pub analytical_lifetime_h: f64,
+    /// DES lifetime (hours).
     pub des_lifetime_h: f64,
+    /// Relative lifetime gap.
     pub lifetime_gap: f64,
+    /// PAC1934 instrument error in the DES run.
     pub monitor_rel_error: f64,
 }
 
 /// Full validation results at one request period.
 #[derive(Debug, Clone)]
 pub struct ValidationResult {
+    /// Request period validated at (ms).
     pub t_req_ms: f64,
+    /// One row per validated policy.
     pub rows: Vec<Row>,
 }
 
@@ -82,6 +92,7 @@ pub fn run_threaded(config: &SimConfig, t_req_ms: f64, runner: &SweepRunner) -> 
 }
 
 impl ValidationResult {
+    /// The row for a policy.
     pub fn row(&self, kind: PolicySpec) -> &Row {
         self.rows
             .iter()
@@ -89,6 +100,7 @@ impl ValidationResult {
             .expect("policy present")
     }
 
+    /// Render the validation table.
     pub fn render(&self) -> String {
         let mut t = Table::new(&[
             "policy",

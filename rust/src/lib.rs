@@ -19,6 +19,8 @@
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 
+#![warn(missing_docs)]
+
 pub mod bench;
 pub mod cli;
 pub mod config;
@@ -26,6 +28,7 @@ pub mod runner;
 pub mod runtime;
 pub mod sim;
 pub mod testing;
+pub mod tuner;
 pub mod util;
 pub mod device;
 pub mod energy;

@@ -21,18 +21,22 @@ impl<P> Grid<P> {
         Grid { points }
     }
 
+    /// Number of points.
     pub fn len(&self) -> usize {
         self.points.len()
     }
 
+    /// True when the grid has no points.
     pub fn is_empty(&self) -> bool {
         self.points.is_empty()
     }
 
+    /// The points, in sweep order.
     pub fn points(&self) -> &[P] {
         &self.points
     }
 
+    /// Consume the grid, yielding its points.
     pub fn into_points(self) -> Vec<P> {
         self.points
     }
@@ -70,7 +74,9 @@ pub fn cross<A: Clone, B: Clone>(a: &[A], b: &[B]) -> Grid<(A, B)> {
 /// and a per-cell seed for any stochastic work inside the cell.
 #[derive(Debug)]
 pub struct Cell<'a, P> {
+    /// Position of this point in the grid (stable across thread counts).
     pub index: usize,
+    /// The parameter point.
     pub params: &'a P,
     /// Seed derived from `(sweep base seed, index)` only — independent of
     /// thread count and scheduling order.

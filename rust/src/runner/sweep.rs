@@ -63,6 +63,7 @@ impl SweepRunner {
         self
     }
 
+    /// The worker-thread count this runner uses.
     pub fn threads(&self) -> usize {
         self.threads
     }

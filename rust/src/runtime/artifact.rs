@@ -9,16 +9,20 @@ use std::path::{Path, PathBuf};
 
 use crate::util::json::Json;
 
+/// Why the artifact manifest failed to load.
 #[derive(Debug, thiserror::Error)]
 pub enum ManifestError {
+    /// The manifest file could not be read.
     #[error("io error reading {path}: {source}")]
     Io {
         path: String,
         #[source]
         source: std::io::Error,
     },
+    /// The manifest is not valid JSON.
     #[error("manifest parse error: {0}")]
     Parse(#[from] crate::util::json::JsonError),
+    /// The manifest JSON is missing required fields.
     #[error("manifest malformed: {0}")]
     Malformed(String),
 }
@@ -26,6 +30,7 @@ pub enum ManifestError {
 /// One AOT artifact entry.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactEntry {
+    /// Artifact name (e.g. `forecast`).
     pub name: String,
     /// HLO text file, relative to the manifest's directory.
     pub file: PathBuf,
@@ -49,11 +54,17 @@ pub struct SelfCheck {
 /// The parsed manifest.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Manifest {
+    /// Directory the artifacts live in.
     pub dir: PathBuf,
+    /// LSTM hidden size the artifacts were lowered with.
     pub hidden_size: usize,
+    /// Model input size.
     pub input_size: usize,
+    /// Input window length.
     pub window: usize,
+    /// The lowered artifacts.
     pub artifacts: Vec<ArtifactEntry>,
+    /// Golden input/output pair for the runtime self-check.
     pub selfcheck: SelfCheck,
 }
 
@@ -92,6 +103,7 @@ impl Manifest {
         Self::parse(&text, dir)
     }
 
+    /// Parse a manifest document rooted at `dir`.
     pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest, ManifestError> {
         let root = Json::parse(text)?;
         let get_usize = |key: &str| -> Result<usize, ManifestError> {
@@ -183,6 +195,7 @@ impl Manifest {
         Ok(())
     }
 
+    /// Look up an artifact by name.
     pub fn entry(&self, name: &str) -> Option<&ArtifactEntry> {
         self.artifacts.iter().find(|a| a.name == name)
     }

@@ -14,6 +14,7 @@ use anyhow::{Context, Result};
 /// A compiled, executable HLO module.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
+    /// Executable name (for reports).
     pub name: String,
 }
 
@@ -35,6 +36,7 @@ impl Client {
         Ok(Client { client })
     }
 
+    /// The PJRT platform this client runs on.
     pub fn platform_name(&self) -> String {
         self.client.platform_name()
     }

@@ -23,6 +23,7 @@ pub enum Variant {
 }
 
 impl Variant {
+    /// The manifest artifact name this variant loads.
     pub fn artifact_name(&self) -> &'static str {
         match self {
             Variant::Forecast => "lstm_forecast",
@@ -34,12 +35,15 @@ impl Variant {
 /// Result of one inference with its host-side latency.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct InferenceResult {
+    /// The forecast value.
     pub forecast: f32,
+    /// Host-side execution latency.
     pub latency: Duration,
 }
 
 /// Compiled runtime for the LSTM accelerator artifacts.
 pub struct LstmRuntime {
+    /// The loaded artifact manifest.
     pub manifest: Manifest,
     forecast: Executable,
     forecast_int8: Option<Executable>,

@@ -72,6 +72,7 @@ impl<E> Default for Engine<E> {
 }
 
 impl<E> Engine<E> {
+    /// An engine with an empty event queue at time zero.
     pub fn new() -> Self {
         Engine {
             ctx: Ctx {
@@ -88,6 +89,7 @@ impl<E> Engine<E> {
         self.ctx.queue.schedule(at, event);
     }
 
+    /// Schedule `event` at `delay` after the current clock.
     pub fn schedule_in(&mut self, delay: Duration, event: E) {
         let at = self.ctx.now + delay;
         self.ctx.queue.schedule(at, event);
@@ -121,6 +123,7 @@ impl<E> Engine<E> {
         }
     }
 
+    /// The current simulation clock.
     pub fn now(&self) -> SimTime {
         self.ctx.now
     }

@@ -50,6 +50,7 @@ impl<E> Default for EventQueue<E> {
 }
 
 impl<E> EventQueue<E> {
+    /// An empty queue.
     pub fn new() -> Self {
         EventQueue {
             heap: BinaryHeap::new(),
@@ -57,6 +58,7 @@ impl<E> EventQueue<E> {
         }
     }
 
+    /// An empty queue with pre-allocated capacity.
     pub fn with_capacity(cap: usize) -> Self {
         EventQueue {
             heap: BinaryHeap::with_capacity(cap),
@@ -81,14 +83,17 @@ impl<E> EventQueue<E> {
         self.heap.peek().map(|e| e.at)
     }
 
+    /// Events currently queued.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// True when no events are queued.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
 
+    /// Drop all queued events.
     pub fn clear(&mut self) {
         self.heap.clear();
     }

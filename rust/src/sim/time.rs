@@ -16,19 +16,24 @@ use crate::util::units::Duration;
 pub struct SimTime(u64);
 
 impl SimTime {
+    /// Time zero (simulation start).
     pub const ZERO: SimTime = SimTime(0);
+    /// The maximum representable instant.
     pub const MAX: SimTime = SimTime(u64::MAX);
 
+    /// An instant from integer nanoseconds since start.
     #[inline]
     pub fn from_nanos(ns: u64) -> SimTime {
         SimTime(ns)
     }
 
+    /// Nanoseconds since simulation start.
     #[inline]
     pub fn nanos(self) -> u64 {
         self.0
     }
 
+    /// This instant as a duration since time zero.
     #[inline]
     pub fn as_duration(self) -> Duration {
         Duration::from_nanos(self.0 as f64)
@@ -41,6 +46,7 @@ impl SimTime {
         Duration::from_nanos((self.0 - earlier.0) as f64)
     }
 
+    /// `self - other`, clamped at zero instead of underflowing.
     #[inline]
     pub fn saturating_sub(self, other: SimTime) -> SimTime {
         SimTime(self.0.saturating_sub(other.0))

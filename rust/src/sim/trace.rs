@@ -13,12 +13,16 @@ use crate::util::units::Duration;
 /// A labelled time span in the simulation.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Span {
+    /// Span start time.
     pub start: SimTime,
+    /// Span end time.
     pub end: SimTime,
+    /// What the span covers (phase name).
     pub label: &'static str,
 }
 
 impl Span {
+    /// The span's length.
     pub fn duration(&self) -> Duration {
         self.end.since(self.start)
     }
@@ -34,6 +38,7 @@ pub struct Trace {
 }
 
 impl Trace {
+    /// A recorder keeping at most `capacity` individual spans.
     pub fn new(capacity: usize) -> Trace {
         Trace {
             spans: Vec::new(),
@@ -48,6 +53,7 @@ impl Trace {
         Trace::new(0)
     }
 
+    /// Record one span (aggregates always; stores while under capacity).
     pub fn record(&mut self, start: SimTime, end: SimTime, label: &'static str) {
         debug_assert!(end >= start, "span ends before it starts");
         let entry = self.totals.entry(label).or_insert((0, Duration::ZERO));
@@ -60,10 +66,12 @@ impl Trace {
         }
     }
 
+    /// The recorded spans (up to capacity).
     pub fn spans(&self) -> &[Span] {
         &self.spans
     }
 
+    /// Spans dropped after capacity was reached.
     pub fn dropped(&self) -> u64 {
         self.dropped
     }

@@ -38,9 +38,11 @@ pub struct GapExecution {
 /// primitives every event-driven runtime shares.
 #[derive(Debug, Clone)]
 pub struct ReplayCore {
+    /// The simulated platform (FPGA, flash, battery, monitor).
     pub board: Board,
     /// Table 2 active phases as (power, duration) tuples.
     pub phases: [(Power, Duration); 3],
+    /// Configuration-port parameters used for reconfigurations.
     pub spi: SpiConfig,
 }
 

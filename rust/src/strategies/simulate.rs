@@ -48,7 +48,9 @@ pub struct GapDecisions {
 /// Outcome of one simulated lifetime.
 #[derive(Debug, Clone)]
 pub struct SimReport {
+    /// Label of the policy that ran.
     pub policy: String,
+    /// Label of the arrival process that drove it.
     pub arrival: String,
     /// Workload items fully executed within the budget (the paper's n_max).
     pub items: u64,

@@ -74,12 +74,14 @@ pub struct GapContext {
 /// Only the offline analyses (lifetime DES, serving loop) route through
 /// it via [`decide`]; online contexts fall back to [`Policy::plan_gap`].
 pub trait OraclePolicy {
+    /// The plan for a gap whose true length is known.
     fn plan_for(&self, gap: Duration) -> GapPlan;
 }
 
 /// A stateful gap policy. Object-safe so the simulator and the serving
 /// coordinator can hold `Box<dyn Policy>`.
 pub trait Policy: Send {
+    /// Which config-level spec this policy implements.
     fn kind(&self) -> PolicySpec;
 
     /// Plan the upcoming gap from observed state only — the gap length is
@@ -127,22 +129,26 @@ impl Policy for OnOff {
 /// The paper's Idle-Waiting strategy (Fig 6) at a power-saving level.
 #[derive(Debug, Clone, Copy)]
 pub struct IdleWaiting {
+    /// The power-saving level this strategy idles at.
     pub saving: PowerSaving,
 }
 
 impl IdleWaiting {
+    /// Idle-Waiting at the baseline (no power-saving) level.
     pub fn baseline() -> IdleWaiting {
         IdleWaiting {
             saving: PowerSaving::BASELINE,
         }
     }
 
+    /// Idle-Waiting + Method 1.
     pub fn method1() -> IdleWaiting {
         IdleWaiting {
             saving: PowerSaving::M1,
         }
     }
 
+    /// Idle-Waiting + Methods 1+2.
     pub fn method12() -> IdleWaiting {
         IdleWaiting {
             saving: PowerSaving::M12,
@@ -169,6 +175,7 @@ impl Policy for IdleWaiting {
 /// The offline upper bound every online policy is measured against.
 #[derive(Debug, Clone, Copy)]
 pub struct Oracle {
+    /// Idle mode used when idling wins.
     pub saving: PowerSaving,
     /// Break-even gap duration (precomputed from the analytical model).
     pub crossover: Duration,
@@ -226,6 +233,7 @@ impl Policy for Oracle {
 /// any gap sequence its gap energy is at most 2× the oracle's.
 #[derive(Debug, Clone, Copy)]
 pub struct Timeout {
+    /// Idle mode used while renting.
     pub saving: PowerSaving,
     /// Idle window after which power is cut (the ski-rental "buy" point).
     pub timeout: Duration,
@@ -271,6 +279,7 @@ impl Policy for Timeout {
 /// one gap, so the policy degenerates to the winning static strategy.
 #[derive(Debug, Clone, Copy)]
 pub struct EmaPredictor {
+    /// Idle mode used when the prediction says idle.
     pub saving: PowerSaving,
     /// Break-even gap duration of the idle mode.
     pub crossover: Duration,
@@ -283,8 +292,10 @@ pub struct EmaPredictor {
 }
 
 impl EmaPredictor {
+    /// Default smoothing factor (mirrors `PolicyParams`).
     pub const DEFAULT_ALPHA: f64 = PolicyParams::DEFAULT_EMA_ALPHA;
 
+    /// Build from the analytical model: crossover + tau for `saving`.
     pub fn from_model(model: &Analytical, saving: PowerSaving, alpha: f64) -> EmaPredictor {
         let p_idle = crate::device::rails::RailSet::idle_power(saving);
         EmaPredictor {
@@ -348,6 +359,7 @@ impl Policy for EmaPredictor {
 /// policy degenerates to the crossover decision after one observation.
 #[derive(Debug, Clone)]
 pub struct WindowedQuantile {
+    /// Idle mode used when the quantile says idle.
     pub saving: PowerSaving,
     /// Break-even gap duration of the idle mode.
     pub crossover: Duration,
@@ -368,6 +380,8 @@ pub struct WindowedQuantile {
 }
 
 impl WindowedQuantile {
+    /// Build from the analytical model: crossover + tau for `saving`,
+    /// with the given window length and planning quantile.
     pub fn from_model(
         model: &Analytical,
         saving: PowerSaving,
@@ -387,6 +401,7 @@ impl WindowedQuantile {
         }
     }
 
+    /// The ring-buffer capacity W.
     pub fn window(&self) -> usize {
         self.window
     }
@@ -461,6 +476,7 @@ impl Policy for WindowedQuantile {
 /// seeded per cell), so runs are byte-identical at any thread count.
 #[derive(Debug, Clone)]
 pub struct RandomizedSkiRental {
+    /// Idle mode used while renting.
     pub saving: PowerSaving,
     /// The break-even scale τ (the deterministic rule's timeout).
     pub tau: Duration,

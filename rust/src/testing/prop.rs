@@ -19,11 +19,13 @@ pub fn default_cases() -> u32 {
 
 /// Generate a random value of `Self` from the PRNG.
 pub trait Gen: Sized + std::fmt::Debug + Clone {
+    /// Generate one random value.
     fn gen(rng: &mut Xoshiro256ss) -> Self;
 }
 
 /// Produce candidate "smaller" values for shrinking.
 pub trait Shrink: Sized + Clone {
+    /// Smaller candidate values for shrinking a failure.
     fn shrink(&self) -> Vec<Self>;
 }
 

@@ -1,0 +1,264 @@
+//! Emitting tuned parameters in consumable forms — and loading them back.
+//!
+//! Three surfaces, all round-trippable:
+//!
+//! * [`flags_line`] — a CLI fragment `repro serve` (and `repro exp4`
+//!   via config overlay) accepts verbatim, e.g.
+//!   `--policy windowed-quantile --saving m12 --window 24 --quantile 0.35`.
+//! * [`yaml_fragment`] — a `policy`/`policy_params` YAML block that can
+//!   be pasted into (or included as) a config file.
+//! * [`load_fragment`] — parses a written fragment back into
+//!   `(PolicySpec, PolicyParams)`; `repro multi --slot-a-params /
+//!   --slot-b-params` uses it to run a tuned heterogeneous fleet.
+//!
+//! Only the knobs that the policy actually reads are emitted (per
+//! [`ParamSpace::for_spec`]), so a fragment documents the deployment
+//! rather than echoing the whole tunable table.
+
+use crate::config::schema::{PolicyParams, PolicySpec};
+use crate::device::rails::PowerSaving;
+use crate::tuner::space::{Knob, ParamSpace};
+
+/// The config/CLI name of a power-saving level (the inverse of
+/// [`parse_saving`](crate::config::schema::parse_saving)). The
+/// never-constructed method-2-only combination maps to `baseline`
+/// defensively.
+pub fn saving_name(s: PowerSaving) -> &'static str {
+    match (s.method1, s.method2) {
+        (true, true) => "m12",
+        (true, false) => "m1",
+        (false, _) => "baseline",
+    }
+}
+
+/// The `(flag, value)` pairs for the knobs `spec` actually reads.
+fn knob_pairs(spec: PolicySpec, params: &PolicyParams) -> Vec<(&'static str, String)> {
+    let space = ParamSpace::for_spec(spec);
+    let mut out = Vec::new();
+    if !space.savings.is_empty() {
+        out.push(("saving", saving_name(params.saving).to_string()));
+    }
+    for knob in &space.knobs {
+        match knob.name {
+            Knob::TIMEOUT_MS => {
+                if let Some(t) = params.timeout {
+                    out.push(("timeout-ms", format!("{}", t.millis())));
+                }
+            }
+            Knob::EMA_ALPHA => out.push(("ema-alpha", format!("{}", params.ema_alpha))),
+            Knob::WINDOW => out.push(("window", params.window.to_string())),
+            Knob::QUANTILE => out.push(("quantile", format!("{}", params.quantile))),
+            _ => {}
+        }
+    }
+    out
+}
+
+/// A flags line `repro serve` accepts verbatim:
+/// `--policy <spec> [--saving <level>] [--<knob> <value>]…`.
+pub fn flags_line(spec: PolicySpec, params: &PolicyParams) -> String {
+    let mut out = format!("--policy {}", spec.name());
+    for (flag, value) in knob_pairs(spec, params) {
+        out.push_str(&format!(" --{flag} {value}"));
+    }
+    out
+}
+
+/// A compact human label (`saving=m12 window=24 quantile=0.35`) for
+/// tables and reports.
+pub fn params_label(spec: PolicySpec, params: &PolicyParams) -> String {
+    let pairs = knob_pairs(spec, params);
+    if pairs.is_empty() {
+        return "(no tunables)".to_string();
+    }
+    pairs
+        .iter()
+        .map(|(flag, value)| format!("{}={value}", flag.replace('-', "_")))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// A `policy:` + `policy_params:` YAML block that config files (and
+/// [`load_fragment`]) consume directly.
+pub fn yaml_fragment(spec: PolicySpec, params: &PolicyParams) -> String {
+    let mut out = format!("policy: {}\n", spec.name());
+    let pairs = knob_pairs(spec, params);
+    if !pairs.is_empty() {
+        out.push_str("policy_params:\n");
+        for (flag, value) in pairs {
+            out.push_str(&format!("  {}: {value}\n", flag.replace('-', "_")));
+        }
+    }
+    out
+}
+
+/// Why a tuned-params fragment failed to load.
+#[derive(Debug, thiserror::Error)]
+pub enum FragmentError {
+    /// The file could not be read.
+    #[error("reading tuned params {path}: {source}")]
+    Io {
+        /// The offending path.
+        path: String,
+        /// The underlying IO error.
+        #[source]
+        source: std::io::Error,
+    },
+    /// The file is not parseable YAML/JSON.
+    #[error("parsing tuned params {path}: {msg}")]
+    Parse {
+        /// The offending path.
+        path: String,
+        /// Parser diagnostics.
+        msg: String,
+    },
+    /// The document is parseable but not a valid fragment.
+    #[error("tuned params {path}: {msg}")]
+    Invalid {
+        /// The offending path.
+        path: String,
+        /// What is wrong and how to fix it.
+        msg: String,
+    },
+}
+
+/// Load a `policy` + `policy_params` fragment (as written by
+/// [`yaml_fragment`] / `repro tune --emit`), range-checking the params
+/// exactly like the config loader does.
+pub fn load_fragment(
+    path: impl AsRef<std::path::Path>,
+) -> Result<(PolicySpec, PolicyParams), FragmentError> {
+    let path = path.as_ref();
+    let display = path.display().to_string();
+    let text = std::fs::read_to_string(path).map_err(|source| FragmentError::Io {
+        path: display.clone(),
+        source,
+    })?;
+    let root = crate::config::loader::parse_str(&text).map_err(|e| FragmentError::Parse {
+        path: display.clone(),
+        msg: e.to_string(),
+    })?;
+    let name = root
+        .get("policy")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| FragmentError::Invalid {
+            path: display.clone(),
+            msg: "missing 'policy: <name>' key".to_string(),
+        })?;
+    let spec = PolicySpec::parse(name).ok_or_else(|| FragmentError::Invalid {
+        path: display.clone(),
+        msg: format!(
+            "unknown policy '{name}' (expected one of: {})",
+            PolicySpec::ALL.map(|s| s.name()).join(", ")
+        ),
+    })?;
+    let params = match root.get("policy_params") {
+        None => PolicyParams::default(),
+        Some(p) => PolicyParams::from_json(p, "policy_params").map_err(|e| {
+            FragmentError::Invalid {
+                path: display.clone(),
+                msg: e.to_string(),
+            }
+        })?,
+    };
+    params.validate().map_err(|msg| FragmentError::Invalid {
+        path: display,
+        msg,
+    })?;
+    Ok((spec, params))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::parse_saving;
+    use crate::util::units::Duration;
+
+    fn tuned() -> PolicyParams {
+        PolicyParams {
+            saving: PowerSaving::M12,
+            window: 24,
+            quantile: 0.35,
+            ..PolicyParams::default()
+        }
+    }
+
+    #[test]
+    fn saving_names_invert_parse_saving() {
+        for s in [PowerSaving::BASELINE, PowerSaving::M1, PowerSaving::M12] {
+            assert_eq!(parse_saving(saving_name(s)), Some(s));
+        }
+    }
+
+    #[test]
+    fn flags_line_emits_only_relevant_knobs() {
+        let line = flags_line(PolicySpec::WindowedQuantile, &tuned());
+        assert_eq!(
+            line,
+            "--policy windowed-quantile --saving m12 --window 24 --quantile 0.35"
+        );
+        // a timeout policy emits no quantile/window noise
+        let p = PolicyParams {
+            timeout: Some(Duration::from_millis(87.5)),
+            ..PolicyParams::default()
+        };
+        let line = flags_line(PolicySpec::Timeout, &p);
+        assert_eq!(line, "--policy timeout --saving m12 --timeout-ms 87.5");
+        // static policies carry no tunables at all
+        assert_eq!(flags_line(PolicySpec::OnOff, &tuned()), "--policy on-off");
+        assert_eq!(params_label(PolicySpec::OnOff, &tuned()), "(no tunables)");
+    }
+
+    #[test]
+    fn yaml_fragment_round_trips_through_load_fragment() {
+        let dir = std::env::temp_dir().join("idlewait_tuner_emit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("best.yaml");
+        let doc = yaml_fragment(PolicySpec::WindowedQuantile, &tuned());
+        std::fs::write(&path, &doc).unwrap();
+        let (spec, params) = load_fragment(&path).unwrap();
+        assert_eq!(spec, PolicySpec::WindowedQuantile);
+        assert_eq!(params.saving, PowerSaving::M12);
+        assert_eq!(params.window, 24);
+        assert!((params.quantile - 0.35).abs() < 1e-12);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_fragment_errors_name_the_path() {
+        let err = load_fragment("/nonexistent/best.yaml").unwrap_err();
+        assert!(err.to_string().contains("/nonexistent/best.yaml"), "{err}");
+
+        let dir = std::env::temp_dir().join("idlewait_tuner_emit_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (name, content, want) in [
+            ("no_policy.yaml", "policy_params:\n  window: 8\n", "missing 'policy"),
+            ("bad_policy.yaml", "policy: warp-drive\n", "unknown policy"),
+            (
+                "bad_params.yaml",
+                "policy: windowed-quantile\npolicy_params:\n  quantile: 7\n",
+                "quantile",
+            ),
+        ] {
+            let path = dir.join(name);
+            std::fs::write(&path, content).unwrap();
+            let err = load_fragment(&path).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains(want), "{name}: {msg}");
+            assert!(msg.contains(name), "{name}: error must name the file: {msg}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fragment_without_params_block_uses_defaults() {
+        let dir = std::env::temp_dir().join("idlewait_tuner_emit_min");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("min.yaml");
+        std::fs::write(&path, "policy: on-off\n").unwrap();
+        let (spec, params) = load_fragment(&path).unwrap();
+        assert_eq!(spec, PolicySpec::OnOff);
+        assert_eq!(params, PolicyParams::default());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,45 @@
+//! Trace-driven auto-search over [`PolicyParams`] — the `repro tune`
+//! subsystem.
+//!
+//! The paper's headline wins (40.13× configuration energy, the
+//! 89.21/499.06 ms crossovers, 12.39× lifetime) all come from choosing
+//! configuration parameters *correctly*; the PR-3 tunable suite made the
+//! gap-policy knobs configurable but left picking them to the user. This
+//! module closes that loop, DPUConfig-style: given a policy and a gap
+//! trace, it searches the policy's tunable space automatically and emits
+//! parameters ready for deployment.
+//!
+//! The pipeline:
+//!
+//! 1. [`space::ParamSpace`] — which knobs apply to the policy, their
+//!    ranges and scales.
+//! 2. [`search::SearchStrategy`] — grid, random, or successive halving;
+//!    candidate pools come from a seeded stream, so results are
+//!    byte-identical at any `--threads N`.
+//! 3. [`objective::analytical_replay`] — the closed-form pre-filter
+//!    (per-gap energy + an analytical late-rate proxy) that prunes
+//!    obviously-dominated candidates before DES time is spent.
+//! 4. [`objective::Objective`] — energy per item, projected lifetime, or
+//!    either under a late-request-rate feasibility cap.
+//! 5. [`tune::tune`] — scores survivors with the real DES
+//!    ([`simulate`](crate::strategies::simulate::simulate)) on the
+//!    shared [`SweepRunner`](crate::runner::SweepRunner), on a
+//!    chronological train split, then reports the overfit gap against
+//!    the held-out remainder.
+//! 6. [`emit`] — the winning point as a `repro serve` flags line, a
+//!    config YAML fragment, and (via [`emit::load_fragment`]) the input
+//!    format for per-accelerator tuning in `repro multi`.
+//!
+//! [`PolicyParams`]: crate::config::schema::PolicyParams
+
+pub mod emit;
+pub mod objective;
+pub mod search;
+pub mod space;
+pub mod tune;
+
+pub use emit::{flags_line, load_fragment, params_label, yaml_fragment};
+pub use objective::{Objective, ObjectiveKind};
+pub use search::SearchStrategy;
+pub use space::{Knob, ParamSpace, Scale};
+pub use tune::{tune, TuneConfig, TuneError, TuneOutcome};

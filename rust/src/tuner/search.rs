@@ -1,0 +1,78 @@
+//! Search strategies over a [`ParamSpace`](super::space::ParamSpace):
+//! exhaustive grid, seeded random sampling, and successive halving.
+//!
+//! Strategies only decide *which candidates to evaluate on how many
+//! gaps*; evaluation itself runs on the shared
+//! [`SweepRunner`](crate::runner::SweepRunner) in
+//! [`tune`](super::tune::tune), so the whole search inherits the sweep
+//! engine's any-thread-count determinism.
+
+/// Which search the tuner runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchStrategy {
+    /// Full-factorial enumeration of the space's grid levels, every
+    /// candidate scored on the full training split. Exhaustive but
+    /// bounded by `budget` via the analytical pre-filter.
+    Grid,
+    /// `budget` scale-uniform random points (oversampled 4×, pre-filtered
+    /// analytically down to `budget`), every survivor scored on the full
+    /// training split. The DPUConfig-style default for spaces where grid
+    /// resolution wastes evaluations.
+    Random,
+    /// Successive halving: start from the random pool, score every
+    /// survivor on a short prefix of the training split, keep the best
+    /// half, double the prefix, repeat until the full split. Spends most
+    /// DES time on promising candidates.
+    Halving,
+}
+
+impl SearchStrategy {
+    /// Parse a CLI search name.
+    pub fn parse(s: &str) -> Option<SearchStrategy> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "grid" => Some(SearchStrategy::Grid),
+            "random" | "rand" => Some(SearchStrategy::Random),
+            "halving" | "successive-halving" | "sha" => Some(SearchStrategy::Halving),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (CSV/report surface).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SearchStrategy::Grid => "grid",
+            SearchStrategy::Random => "random",
+            SearchStrategy::Halving => "halving",
+        }
+    }
+
+    /// All strategies, for error messages and docs.
+    pub const ALL: [SearchStrategy; 3] = [
+        SearchStrategy::Grid,
+        SearchStrategy::Random,
+        SearchStrategy::Halving,
+    ];
+}
+
+impl std::fmt::Display for SearchStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for s in SearchStrategy::ALL {
+            assert_eq!(SearchStrategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(
+            SearchStrategy::parse("successive-halving"),
+            Some(SearchStrategy::Halving)
+        );
+        assert_eq!(SearchStrategy::parse("simulated-annealing"), None);
+    }
+}

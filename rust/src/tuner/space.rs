@@ -1,0 +1,334 @@
+//! The tunable search space: which [`PolicyParams`] knobs apply to each
+//! [`PolicySpec`] variant, their ranges and scales, and deterministic
+//! candidate generation (grid enumeration and seeded random sampling).
+//!
+//! A [`ParamSpace`] is a declarative description, not a sampler with
+//! hidden state: grid enumeration is a pure function of the space, and
+//! random sampling draws from a caller-supplied [`Xoshiro256ss`] stream,
+//! so every search strategy built on top is byte-identical at any
+//! `--threads N`.
+
+use crate::config::schema::{PolicyParams, PolicySpec};
+use crate::device::rails::PowerSaving;
+use crate::util::rng::Xoshiro256ss;
+use crate::util::units::Duration;
+
+/// How a knob's `[lo, hi]` range is traversed: linearly, or
+/// multiplicatively (equal ratios between grid levels). Timeouts and
+/// window lengths span orders of magnitude, so they use [`Scale::Log`];
+/// quantiles live on a bounded interval and use [`Scale::Linear`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// Equal absolute steps between levels.
+    Linear,
+    /// Equal ratios between levels (`lo` must be positive).
+    Log,
+}
+
+/// One tunable dimension of a [`ParamSpace`]: a named [`PolicyParams`]
+/// field with its range, scale and grid resolution.
+#[derive(Debug, Clone)]
+pub struct Knob {
+    /// The `PolicyParams` field this knob drives; one of
+    /// [`Knob::TIMEOUT_MS`], [`Knob::EMA_ALPHA`], [`Knob::WINDOW`],
+    /// [`Knob::QUANTILE`].
+    pub name: &'static str,
+    /// Range traversal (see [`Scale`]).
+    pub scale: Scale,
+    /// Inclusive lower bound.
+    pub lo: f64,
+    /// Inclusive upper bound.
+    pub hi: f64,
+    /// Round sampled/grid values to the nearest integer (window lengths).
+    pub integer: bool,
+    /// Number of grid levels [`Knob::grid`] enumerates.
+    pub grid_levels: usize,
+}
+
+impl Knob {
+    /// Knob name for the explicit ski-rental timeout (ms).
+    pub const TIMEOUT_MS: &'static str = "timeout_ms";
+    /// Knob name for the EMA smoothing factor.
+    pub const EMA_ALPHA: &'static str = "ema_alpha";
+    /// Knob name for the windowed-quantile ring-buffer length.
+    pub const WINDOW: &'static str = "window";
+    /// Knob name for the windowed-quantile planning quantile.
+    pub const QUANTILE: &'static str = "quantile";
+
+    /// The knob value at normalized position `t ∈ [0, 1]`.
+    fn value_at(&self, t: f64) -> f64 {
+        let v = match self.scale {
+            Scale::Linear => self.lo + (self.hi - self.lo) * t,
+            Scale::Log => self.lo * (self.hi / self.lo).powf(t),
+        };
+        if self.integer {
+            v.round()
+        } else {
+            v
+        }
+    }
+
+    /// The grid levels of this knob, low to high. Integer knobs dedupe
+    /// adjacent levels that round to the same value.
+    pub fn grid(&self) -> Vec<f64> {
+        let n = self.grid_levels.max(2);
+        let mut out: Vec<f64> = (0..n)
+            .map(|i| self.value_at(i as f64 / (n - 1) as f64))
+            .collect();
+        out.dedup();
+        out
+    }
+
+    /// One scale-uniform draw from the knob's range.
+    pub fn sample(&self, rng: &mut Xoshiro256ss) -> f64 {
+        self.value_at(rng.next_f64())
+    }
+
+    /// Write a knob value into a parameter point.
+    pub fn apply(&self, params: &mut PolicyParams, value: f64) {
+        match self.name {
+            Self::TIMEOUT_MS => params.timeout = Some(Duration::from_millis(value)),
+            Self::EMA_ALPHA => params.ema_alpha = value,
+            Self::WINDOW => params.window = value.round().max(1.0) as usize,
+            Self::QUANTILE => params.quantile = value,
+            other => unreachable!("unknown knob '{other}'"),
+        }
+    }
+}
+
+/// The searchable space for one policy: a categorical idle-mode axis
+/// (`savings`; empty when the policy has a fixed level, like the named
+/// Idle-Waiting variants) and zero or more continuous [`Knob`]s.
+#[derive(Debug, Clone)]
+pub struct ParamSpace {
+    /// The policy this space describes.
+    pub spec: PolicySpec,
+    /// Idle power-saving levels to try (`saving` tunable); empty = the
+    /// policy's level is fixed and not searched.
+    pub savings: Vec<PowerSaving>,
+    /// Continuous/integer knobs to search.
+    pub knobs: Vec<Knob>,
+}
+
+/// All three idle power-saving levels (the `saving` axis).
+fn all_savings() -> Vec<PowerSaving> {
+    vec![PowerSaving::BASELINE, PowerSaving::M1, PowerSaving::M12]
+}
+
+impl ParamSpace {
+    /// The search space for a policy. Ranges bracket the paper's
+    /// operating points: timeouts span 0.5 ms – 5 s around the 89.21 /
+    /// 499.06 ms crossovers, EMA alphas cover sluggish (0.02) to
+    /// track-newest (1.0), windows 2–256 gaps around the default 64, and
+    /// quantiles 0.05–0.95 around the default 0.9.
+    pub fn for_spec(spec: PolicySpec) -> ParamSpace {
+        let knobs: Vec<Knob> = match spec {
+            PolicySpec::OnOff
+            | PolicySpec::IdleWaiting
+            | PolicySpec::IdleWaitingM1
+            | PolicySpec::IdleWaitingM12
+            | PolicySpec::Oracle => Vec::new(),
+            PolicySpec::Timeout | PolicySpec::RandomizedSkiRental => vec![Knob {
+                name: Knob::TIMEOUT_MS,
+                scale: Scale::Log,
+                lo: 0.5,
+                hi: 5_000.0,
+                integer: false,
+                grid_levels: 8,
+            }],
+            PolicySpec::EmaPredictor => vec![Knob {
+                name: Knob::EMA_ALPHA,
+                scale: Scale::Log,
+                lo: 0.02,
+                hi: 1.0,
+                integer: false,
+                grid_levels: 6,
+            }],
+            PolicySpec::WindowedQuantile => vec![
+                Knob {
+                    name: Knob::WINDOW,
+                    scale: Scale::Log,
+                    lo: 2.0,
+                    hi: 256.0,
+                    integer: true,
+                    grid_levels: 6,
+                },
+                Knob {
+                    name: Knob::QUANTILE,
+                    scale: Scale::Linear,
+                    lo: 0.05,
+                    hi: 0.95,
+                    integer: false,
+                    grid_levels: 7,
+                },
+            ],
+        };
+        let savings = match spec {
+            // the named strategies carry their level in the spec itself
+            PolicySpec::OnOff
+            | PolicySpec::IdleWaiting
+            | PolicySpec::IdleWaitingM1
+            | PolicySpec::IdleWaitingM12 => Vec::new(),
+            _ => all_savings(),
+        };
+        ParamSpace {
+            spec,
+            savings,
+            knobs,
+        }
+    }
+
+    /// Whether there is anything to search at all (the static policies
+    /// have neither a saving axis nor knobs).
+    pub fn is_tunable(&self) -> bool {
+        !self.savings.is_empty() || !self.knobs.is_empty()
+    }
+
+    /// Full-factorial enumeration: every saving level × every grid level
+    /// of every knob, overlaid on `base` (knobs outside this space keep
+    /// their `base` values). Order is deterministic: savings outer,
+    /// knobs in declaration order, levels low to high.
+    pub fn grid_candidates(&self, base: &PolicyParams) -> Vec<PolicyParams> {
+        let mut out: Vec<PolicyParams> = if self.savings.is_empty() {
+            vec![*base]
+        } else {
+            self.savings
+                .iter()
+                .map(|&s| PolicyParams { saving: s, ..*base })
+                .collect()
+        };
+        for knob in &self.knobs {
+            let levels = knob.grid();
+            let mut next = Vec::with_capacity(out.len() * levels.len());
+            for p in &out {
+                for &v in &levels {
+                    let mut q = *p;
+                    knob.apply(&mut q, v);
+                    next.push(q);
+                }
+            }
+            out = next;
+        }
+        out
+    }
+
+    /// One random point: a uniformly chosen saving level plus a
+    /// scale-uniform draw per knob, overlaid on `base`.
+    pub fn sample(&self, base: &PolicyParams, rng: &mut Xoshiro256ss) -> PolicyParams {
+        let mut p = *base;
+        if !self.savings.is_empty() {
+            p.saving = *rng.choose(&self.savings);
+        }
+        for knob in &self.knobs {
+            let v = knob.sample(rng);
+            knob.apply(&mut p, v);
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_policies_have_nothing_to_tune() {
+        for spec in [
+            PolicySpec::OnOff,
+            PolicySpec::IdleWaiting,
+            PolicySpec::IdleWaitingM1,
+            PolicySpec::IdleWaitingM12,
+        ] {
+            let space = ParamSpace::for_spec(spec);
+            assert!(!space.is_tunable(), "{spec}");
+            let grid = space.grid_candidates(&PolicyParams::default());
+            assert_eq!(grid.len(), 1);
+            assert_eq!(grid[0], PolicyParams::default());
+        }
+    }
+
+    #[test]
+    fn oracle_searches_the_saving_axis_only() {
+        let space = ParamSpace::for_spec(PolicySpec::Oracle);
+        assert!(space.is_tunable());
+        let grid = space.grid_candidates(&PolicyParams::default());
+        assert_eq!(grid.len(), 3);
+        let savings: Vec<PowerSaving> = grid.iter().map(|p| p.saving).collect();
+        assert!(savings.contains(&PowerSaving::BASELINE));
+        assert!(savings.contains(&PowerSaving::M12));
+    }
+
+    #[test]
+    fn windowed_quantile_grid_is_the_cartesian_product() {
+        let space = ParamSpace::for_spec(PolicySpec::WindowedQuantile);
+        let grid = space.grid_candidates(&PolicyParams::default());
+        let windows = space.knobs[0].grid().len();
+        let quantiles = space.knobs[1].grid().len();
+        assert_eq!(grid.len(), 3 * windows * quantiles);
+        // every candidate stays in the valid range
+        for p in &grid {
+            assert!(p.validate().is_ok(), "{p:?}");
+        }
+        // extreme corners are present
+        assert!(grid.iter().any(|p| p.window == 2 && (p.quantile - 0.05).abs() < 1e-12));
+        assert!(grid.iter().any(|p| p.window == 256 && (p.quantile - 0.95).abs() < 1e-12));
+    }
+
+    #[test]
+    fn log_grid_has_equal_ratios() {
+        let knob = Knob {
+            name: Knob::TIMEOUT_MS,
+            scale: Scale::Log,
+            lo: 1.0,
+            hi: 1000.0,
+            integer: false,
+            grid_levels: 4,
+        };
+        let g = knob.grid();
+        assert_eq!(g.len(), 4);
+        assert!((g[0] - 1.0).abs() < 1e-12);
+        assert!((g[3] - 1000.0).abs() < 1e-9);
+        assert!((g[1] / g[0] - g[2] / g[1]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn integer_knob_rounds_and_dedupes() {
+        let knob = Knob {
+            name: Knob::WINDOW,
+            scale: Scale::Log,
+            lo: 2.0,
+            hi: 4.0,
+            integer: true,
+            grid_levels: 8,
+        };
+        let g = knob.grid();
+        assert!(g.windows(2).all(|w| w[0] < w[1]), "{g:?}");
+        assert!(g.iter().all(|v| v.fract() == 0.0));
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_in_range() {
+        let space = ParamSpace::for_spec(PolicySpec::Timeout);
+        let base = PolicyParams::default();
+        let mut a = Xoshiro256ss::new(9);
+        let mut b = Xoshiro256ss::new(9);
+        for _ in 0..200 {
+            let pa = space.sample(&base, &mut a);
+            let pb = space.sample(&base, &mut b);
+            assert_eq!(pa, pb);
+            let t = pa.timeout.expect("timeout knob always set").millis();
+            assert!((0.5..=5_000.0).contains(&t), "{t}");
+            assert!(pa.validate().is_ok());
+        }
+    }
+
+    #[test]
+    fn grid_preserves_base_values_for_foreign_knobs() {
+        let base = PolicyParams {
+            ema_alpha: 0.42,
+            ..PolicyParams::default()
+        };
+        let grid = ParamSpace::for_spec(PolicySpec::Timeout).grid_candidates(&base);
+        assert!(grid.iter().all(|p| (p.ema_alpha - 0.42).abs() < 1e-12));
+    }
+}

@@ -15,6 +15,7 @@ pub struct Csv {
 }
 
 impl Csv {
+    /// An empty document with the given header.
     pub fn new(header: &[&str]) -> Csv {
         Csv {
             header: header.iter().map(|s| s.to_string()).collect(),
@@ -22,17 +23,20 @@ impl Csv {
         }
     }
 
+    /// Append a row (must match the header width).
     pub fn row(&mut self, cells: &[String]) -> &mut Csv {
         assert_eq!(cells.len(), self.header.len(), "csv row width mismatch");
         self.rows.push(cells.to_vec());
         self
     }
 
+    /// Append a numeric row, formatted with shortest round-trip.
     pub fn row_f64(&mut self, cells: &[f64]) -> &mut Csv {
         let cells: Vec<String> = cells.iter().map(|c| format!("{c}")).collect();
         self.row(&cells)
     }
 
+    /// Rows appended so far.
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }
@@ -46,6 +50,7 @@ impl Csv {
         }
     }
 
+    /// Render the document as RFC-4180 CSV text.
     pub fn render(&self) -> String {
         let mut out = String::new();
         let write_row = |out: &mut String, cells: &[String]| {

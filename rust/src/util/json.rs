@@ -10,26 +10,37 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed JSON/YAML value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null` / absent.
     Null,
+    /// Boolean.
     Bool(bool),
+    /// Number (f64, as in JSON).
     Num(f64),
+    /// String.
     Str(String),
+    /// Sequence.
     Arr(Vec<Json>),
+    /// Mapping (sorted keys for deterministic rendering).
     Obj(BTreeMap<String, Json>),
 }
 
+/// A JSON parse error with its byte offset.
 #[derive(Debug, Clone, PartialEq, thiserror::Error)]
 #[error("json parse error at byte {pos}: {msg}")]
 pub struct JsonError {
+    /// Byte offset of the offending input.
     pub pos: usize,
+    /// Parser diagnostics.
     pub msg: String,
 }
 
 impl Json {
     // ---- accessors ----
 
+    /// The boolean value, if this is a Bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -37,6 +48,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a Num.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -44,6 +56,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer, if exactly representable.
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= u64::MAX as f64 => {
@@ -53,6 +66,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a Str.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -60,6 +74,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an Arr.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -67,6 +82,7 @@ impl Json {
         }
     }
 
+    /// The mapping, if this is an Obj.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -81,24 +97,29 @@ impl Json {
 
     // ---- construction helpers ----
 
+    /// Build an object from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a number.
     pub fn num(n: f64) -> Json {
         Json::Num(n)
     }
 
+    /// Build a string.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// Build an array.
     pub fn arr(items: Vec<Json>) -> Json {
         Json::Arr(items)
     }
 
     // ---- parsing ----
 
+    /// Parse JSON text.
     pub fn parse(input: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             bytes: input.as_bytes(),

@@ -20,10 +20,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// A generator starting from `seed`.
     pub fn new(seed: u64) -> Self {
         SplitMix64 { state: seed }
     }
 
+    /// The next 64-bit output.
     #[inline]
     pub fn next(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
@@ -49,6 +51,7 @@ impl Xoshiro256ss {
         }
     }
 
+    /// The next raw 64-bit output.
     #[inline]
     pub fn next_u64_raw(&mut self) -> u64 {
         let result = self.s[1]

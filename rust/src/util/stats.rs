@@ -12,6 +12,7 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// An empty accumulator.
     pub fn new() -> Self {
         Welford {
             n: 0,
@@ -22,6 +23,7 @@ impl Welford {
         }
     }
 
+    /// Add one observation.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let delta = x - self.mean;
@@ -31,10 +33,12 @@ impl Welford {
         self.max = self.max.max(x);
     }
 
+    /// Observations so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean (`NaN` before any observation).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             f64::NAN
@@ -61,14 +65,17 @@ impl Welford {
         }
     }
 
+    /// Sample standard deviation.
     pub fn std_dev(&self) -> f64 {
         self.variance().sqrt()
     }
 
+    /// Smallest observation.
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest observation.
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -98,14 +105,23 @@ impl Welford {
 /// Batch summary with exact percentiles (sorts a copy).
 #[derive(Debug, Clone)]
 pub struct Summary {
+    /// Number of samples summarized.
     pub count: usize,
+    /// Mean.
     pub mean: f64,
+    /// Sample standard deviation.
     pub std_dev: f64,
+    /// Minimum.
     pub min: f64,
+    /// Median.
     pub p50: f64,
+    /// 90th percentile.
     pub p90: f64,
+    /// 95th percentile.
     pub p95: f64,
+    /// 99th percentile.
     pub p99: f64,
+    /// Maximum.
     pub max: f64,
 }
 

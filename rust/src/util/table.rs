@@ -9,7 +9,9 @@ use std::fmt::Write as _;
 /// Column alignment.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Align {
+    /// Left-aligned column (text).
     Left,
+    /// Right-aligned column (numbers).
     Right,
 }
 
@@ -23,6 +25,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers.
     pub fn new(headers: &[&str]) -> Table {
         Table {
             title: None,
@@ -32,6 +35,7 @@ impl Table {
         }
     }
 
+    /// Set a title line rendered above the table.
     pub fn with_title(mut self, title: impl Into<String>) -> Table {
         self.title = Some(title.into());
         self
@@ -44,6 +48,7 @@ impl Table {
         self
     }
 
+    /// Append a row (must match the header width).
     pub fn row(&mut self, cells: &[String]) -> &mut Table {
         assert_eq!(
             cells.len(),
@@ -62,10 +67,12 @@ impl Table {
         self.row(&cells)
     }
 
+    /// True when no rows have been added.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }
 
+    /// Rows appended so far.
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }

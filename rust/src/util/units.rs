@@ -25,6 +25,7 @@ macro_rules! unit_newtype {
         pub struct $name(pub(crate) f64);
 
         impl $name {
+            /// The zero value.
             pub const ZERO: $name = $name(0.0);
 
             /// Raw SI-base value (W, J, s, V, A respectively).
@@ -191,26 +192,32 @@ unit_newtype!(
 );
 
 impl Power {
+    /// Construct from watts.
     #[inline]
     pub fn from_watts(w: f64) -> Power {
         Power(w)
     }
+    /// Construct from milliwatts.
     #[inline]
     pub fn from_milliwatts(mw: f64) -> Power {
         Power(mw * 1e-3)
     }
+    /// Construct from microwatts.
     #[inline]
     pub fn from_microwatts(uw: f64) -> Power {
         Power(uw * 1e-6)
     }
+    /// Value in watts.
     #[inline]
     pub fn watts(self) -> f64 {
         self.0
     }
+    /// Value in milliwatts.
     #[inline]
     pub fn milliwatts(self) -> f64 {
         self.0 * 1e3
     }
+    /// Value in microwatts.
     #[inline]
     pub fn microwatts(self) -> f64 {
         self.0 * 1e6
@@ -218,26 +225,32 @@ impl Power {
 }
 
 impl Energy {
+    /// Construct from joules.
     #[inline]
     pub fn from_joules(j: f64) -> Energy {
         Energy(j)
     }
+    /// Construct from millijoules.
     #[inline]
     pub fn from_millijoules(mj: f64) -> Energy {
         Energy(mj * 1e-3)
     }
+    /// Construct from microjoules.
     #[inline]
     pub fn from_microjoules(uj: f64) -> Energy {
         Energy(uj * 1e-6)
     }
+    /// Value in joules.
     #[inline]
     pub fn joules(self) -> f64 {
         self.0
     }
+    /// Value in millijoules.
     #[inline]
     pub fn millijoules(self) -> f64 {
         self.0 * 1e3
     }
+    /// Value in microjoules.
     #[inline]
     pub fn microjoules(self) -> f64 {
         self.0 * 1e6
@@ -245,38 +258,47 @@ impl Energy {
 }
 
 impl Duration {
+    /// Construct from seconds.
     #[inline]
     pub fn from_secs(s: f64) -> Duration {
         Duration(s)
     }
+    /// Construct from milliseconds.
     #[inline]
     pub fn from_millis(ms: f64) -> Duration {
         Duration(ms * 1e-3)
     }
+    /// Construct from microseconds.
     #[inline]
     pub fn from_micros(us: f64) -> Duration {
         Duration(us * 1e-6)
     }
+    /// Construct from nanoseconds.
     #[inline]
     pub fn from_nanos(ns: f64) -> Duration {
         Duration(ns * 1e-9)
     }
+    /// Construct from hours.
     #[inline]
     pub fn from_hours(h: f64) -> Duration {
         Duration(h * 3600.0)
     }
+    /// Value in seconds.
     #[inline]
     pub fn secs(self) -> f64 {
         self.0
     }
+    /// Value in milliseconds.
     #[inline]
     pub fn millis(self) -> f64 {
         self.0 * 1e3
     }
+    /// Value in microseconds.
     #[inline]
     pub fn micros(self) -> f64 {
         self.0 * 1e6
     }
+    /// Value in hours.
     #[inline]
     pub fn hours(self) -> f64 {
         self.0 / 3600.0
@@ -284,14 +306,17 @@ impl Duration {
 }
 
 impl Voltage {
+    /// Construct from volts.
     #[inline]
     pub fn from_volts(v: f64) -> Voltage {
         Voltage(v)
     }
+    /// Value in volts.
     #[inline]
     pub fn volts(self) -> f64 {
         self.0
     }
+    /// Value in millivolts.
     #[inline]
     pub fn millivolts(self) -> f64 {
         self.0 * 1e3
@@ -299,22 +324,27 @@ impl Voltage {
 }
 
 impl Current {
+    /// Construct from amperes.
     #[inline]
     pub fn from_amps(a: f64) -> Current {
         Current(a)
     }
+    /// Construct from milliamperes.
     #[inline]
     pub fn from_milliamps(ma: f64) -> Current {
         Current(ma * 1e-3)
     }
+    /// Construct from microamperes.
     #[inline]
     pub fn from_microamps(ua: f64) -> Current {
         Current(ua * 1e-6)
     }
+    /// Value in amperes.
     #[inline]
     pub fn amps(self) -> f64 {
         self.0
     }
+    /// Value in milliamperes.
     #[inline]
     pub fn milliamps(self) -> f64 {
         self.0 * 1e3

@@ -81,8 +81,8 @@ fn exp4_csv_schema_is_stable() {
     .unwrap();
     let text = std::fs::read_to_string(&path).unwrap();
     assert_eq!(text.lines().next().unwrap(), EXP4_CSV_HEADER);
-    // header + variants × the six built-in arrival columns
-    let expected_rows = idlewait::experiments::exp4_policies::variants().len()
+    // header + (variants + the tuned row) × the six built-in arrivals
+    let expected_rows = (idlewait::experiments::exp4_policies::variants().len() + 1)
         * idlewait::experiments::exp4_policies::ARRIVALS.len();
     assert_eq!(text.lines().count(), expected_rows + 1);
     // every policy name appears in the body
@@ -230,8 +230,8 @@ fn exp4_replays_a_config_trace_column() {
     let trace_rows = text.lines().filter(|l| l.contains(",trace,")).count();
     assert_eq!(
         trace_rows,
-        idlewait::experiments::exp4_policies::variants().len(),
-        "every variant gets a trace column"
+        idlewait::experiments::exp4_policies::variants().len() + 1,
+        "every variant (incl. the tuned row) gets a trace column"
     );
     let _ = std::fs::remove_dir_all(&dir);
 }
