@@ -8,15 +8,13 @@
 //!
 //! Run: `cargo bench --bench hotpath`
 
-use idlewait::bench::{black_box, Bench};
+use idlewait::bench::{black_box, targets, Bench};
 use idlewait::config::paper_default;
 use idlewait::coordinator::requests::Periodic;
 use idlewait::coordinator::server::{serve, SensorSource, ServerConfig};
 use idlewait::energy::analytical::Analytical;
 use idlewait::runtime::inference::Variant;
-use idlewait::sim::{EventQueue, SimTime};
-use idlewait::strategies::simulate::simulate;
-use idlewait::strategies::strategy::{IdleWaiting, OnOff};
+use idlewait::strategies::strategy::IdleWaiting;
 use idlewait::util::units::Duration;
 
 fn main() {
@@ -24,33 +22,17 @@ fn main() {
     let mut bench = Bench::new("whole-stack hot paths");
 
     // --- L3 DES ---
-    let mut des_cfg = cfg.clone();
-    des_cfg.workload.max_items = Some(10_000);
-    bench.bench("DES: 10k idle-waiting items", || {
-        let mut arrivals = Periodic {
-            period: Duration::from_millis(40.0),
-        };
-        black_box(simulate(&des_cfg, &mut IdleWaiting::baseline(), &mut arrivals).items);
-    });
-    bench.bench("DES: 10k on-off items (config FSM each)", || {
-        let mut arrivals = Periodic {
-            period: Duration::from_millis(40.0),
-        };
-        black_box(simulate(&des_cfg, &mut OnOff, &mut arrivals).items);
-    });
+    // Shared bodies with `repro bench --json` (bench::targets), so the
+    // two harnesses measure the identical workload; per-worker SimWorker
+    // reuse inside is the production sweep shape since the gap-cost
+    // kernel.
+    targets::des_idle_waiting(&mut bench, "DES: 10k idle-waiting items", &cfg, 10_000);
+    targets::des_onoff(&mut bench, "DES: 10k on-off items (config FSM each)", &cfg, 10_000);
+    // the pre-kernel reference path, for an in-run speedup readout
+    targets::des_onoff_golden(&mut bench, "DES golden reference: 10k on-off items", &cfg, 10_000);
 
     // --- sim core ---
-    bench.bench("event queue: 1k schedule+pop", || {
-        let mut q = EventQueue::with_capacity(1024);
-        for i in 0..1000u64 {
-            q.schedule(SimTime::from_nanos(i * 7919 % 4096), i);
-        }
-        let mut acc = 0u64;
-        while let Some((_, id)) = q.pop() {
-            acc = acc.wrapping_add(id);
-        }
-        black_box(acc);
-    });
+    targets::event_queue(&mut bench, "event queue: 1k schedule+pop");
 
     // --- analytical (used inside every sweep point) ---
     let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);

@@ -6,7 +6,12 @@
 //!
 //! This is the bench that backs the runner's headline claim: the
 //! multi-threaded sweep is byte-identical to the serial one (asserted
-//! here before timing) and measurably faster.
+//! here before timing) and measurably faster. Since the hot-path kernel
+//! PR the runner steals work in batches (uneven cells no longer
+//! serialize on the slowest chunk) and cells reuse per-worker DES
+//! state, so the exp4 grid — whose trace columns and embedded tuner are
+//! far heavier than its periodic cells — is the interesting row here.
+//! (`repro bench --json` runs the same targets machine-readably.)
 //!
 //! Run: `cargo bench --bench sweep` (IDLEWAIT_BENCH_QUICK=1 for CI).
 

@@ -6,10 +6,13 @@
 //! `std::time::Instant`; a `black_box` re-export prevents the optimizer
 //! from deleting measured work.
 
+pub mod targets;
+
 pub use std::hint::black_box;
 
 use std::time::{Duration as StdDuration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 use crate::util::table::{fnum, Table};
 
@@ -22,6 +25,9 @@ pub struct BenchResult {
     pub iterations: u64,
     /// Distribution of per-iteration times (ns).
     pub summary: Summary,
+    /// Work units one iteration performs (items, cells, events …);
+    /// `throughput` = units × iterations/sec. Defaults to 1.
+    pub units_per_iter: f64,
 }
 
 impl BenchResult {
@@ -33,6 +39,22 @@ impl BenchResult {
     /// Iterations per second at the median.
     pub fn iters_per_sec(&self) -> f64 {
         1e9 / self.summary.p50
+    }
+
+    /// Work units per second at the median (items/sec, cells/sec, …).
+    pub fn throughput(&self) -> f64 {
+        self.units_per_iter * self.iters_per_sec()
+    }
+
+    /// This result as one row of the published `repro bench --json`
+    /// schema: `{name, iters, ns_per_iter, throughput}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iterations as f64)),
+            ("ns_per_iter", Json::num(self.ns_per_iter())),
+            ("throughput", Json::num(self.throughput())),
+        ])
     }
 }
 
@@ -65,7 +87,19 @@ impl Bench {
     /// Time `f` (called repeatedly): warmup, then sample batches until the
     /// measurement window elapses. Batch size auto-scales so that cheap
     /// closures aren't dominated by timer overhead.
-    pub fn bench(&mut self, name: impl Into<String>, mut f: impl FnMut()) -> &BenchResult {
+    pub fn bench(&mut self, name: impl Into<String>, f: impl FnMut()) -> &BenchResult {
+        self.bench_units(name, 1.0, f)
+    }
+
+    /// [`bench`](Bench::bench) with an explicit work-unit count per
+    /// iteration (simulated items, sweep cells, queue events …), so the
+    /// JSON report can carry a meaningful `throughput`.
+    pub fn bench_units(
+        &mut self,
+        name: impl Into<String>,
+        units_per_iter: f64,
+        mut f: impl FnMut(),
+    ) -> &BenchResult {
         let name = name.into();
         // warmup + batch-size calibration
         let warm_start = Instant::now();
@@ -95,8 +129,15 @@ impl Bench {
             name,
             iterations,
             summary,
+            units_per_iter,
         });
         self.results.last().unwrap()
+    }
+
+    /// Every collected result in the `repro bench --json` schema (a JSON
+    /// array of `{name, iters, ns_per_iter, throughput}` objects).
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.results.iter().map(BenchResult::to_json).collect())
     }
 
     /// Render the results table.
@@ -154,6 +195,27 @@ mod tests {
         assert!(r.iterations > 1000);
         assert!(r.summary.p50 > 0.0);
         assert!(r.iters_per_sec() > 1000.0);
+    }
+
+    #[test]
+    fn json_schema_carries_name_iters_ns_and_throughput() {
+        let mut b = Bench::new("json-test").quick();
+        b.bench_units("ten-units", 10.0, || {
+            black_box(3u64.wrapping_mul(7));
+        });
+        let json = b.to_json();
+        let rows = json.as_arr().expect("array of results");
+        assert_eq!(rows.len(), 1);
+        let row = &rows[0];
+        assert_eq!(row.get("name").and_then(Json::as_str), Some("ten-units"));
+        assert!(row.get("iters").and_then(Json::as_f64).unwrap() >= 1.0);
+        let ns = row.get("ns_per_iter").and_then(Json::as_f64).unwrap();
+        let tput = row.get("throughput").and_then(Json::as_f64).unwrap();
+        assert!(ns > 0.0);
+        assert!((tput - 10.0 * 1e9 / ns).abs() / tput < 1e-9);
+        // the schema round-trips through the in-tree parser
+        let parsed = Json::parse(&json.render()).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 1);
     }
 
     #[test]

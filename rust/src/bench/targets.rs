@@ -1,0 +1,121 @@
+//! Shared hot-path benchmark bodies.
+//!
+//! The perf acceptance gates compare `cargo bench --bench hotpath`
+//! numbers against `repro bench --json` recordings of the same targets;
+//! both harnesses call these functions, so the measured workloads
+//! cannot drift apart while the comparison silently keeps "passing".
+//! Each function times one canonical body under the caller's name and
+//! returns the collected result.
+
+use crate::bench::{black_box, Bench, BenchResult};
+use crate::config::loader::SimConfig;
+use crate::coordinator::requests::Periodic;
+use crate::sim::{EventQueue, SimTime};
+use crate::strategies::simulate::{simulate_golden, SimWorker};
+use crate::strategies::strategy::{IdleWaiting, OnOff};
+use crate::util::units::Duration;
+
+/// The canonical DES request period (the paper's 40 ms duty cycle).
+fn arrivals() -> Periodic {
+    Periodic {
+        period: Duration::from_millis(40.0),
+    }
+}
+
+/// `config` capped at `items` workload items per run.
+fn capped(config: &SimConfig, items: u64) -> SimConfig {
+    let mut cfg = config.clone();
+    cfg.workload.max_items = Some(items);
+    cfg
+}
+
+/// Lifetime DES, Idle-Waiting (configure once, idle every gap): `items`
+/// items per iteration on a reused [`SimWorker`] — the production sweep
+/// shape. Throughput unit: simulated items.
+pub fn des_idle_waiting<'a>(
+    bench: &'a mut Bench,
+    name: &str,
+    config: &SimConfig,
+    items: u64,
+) -> &'a BenchResult {
+    let cfg = capped(config, items);
+    let mut worker = SimWorker::new(&cfg);
+    bench.bench_units(name, items as f64, move || {
+        let mut arrivals = arrivals();
+        black_box(
+            worker
+                .run(&cfg, &mut IdleWaiting::baseline(), &mut arrivals)
+                .items,
+        );
+    })
+}
+
+/// Lifetime DES, On-Off (power-cycle + full configuration every item):
+/// the configuration-preamble hot loop. Throughput unit: simulated
+/// items.
+pub fn des_onoff<'a>(
+    bench: &'a mut Bench,
+    name: &str,
+    config: &SimConfig,
+    items: u64,
+) -> &'a BenchResult {
+    let cfg = capped(config, items);
+    let mut worker = SimWorker::new(&cfg);
+    bench.bench_units(name, items as f64, move || {
+        let mut arrivals = arrivals();
+        black_box(worker.run(&cfg, &mut OnOff, &mut arrivals).items);
+    })
+}
+
+/// The On-Off DES on the golden `Board`-FSM reference path — the
+/// pre-kernel cost, kept measurable for an in-run speedup readout.
+pub fn des_onoff_golden<'a>(
+    bench: &'a mut Bench,
+    name: &str,
+    config: &SimConfig,
+    items: u64,
+) -> &'a BenchResult {
+    let cfg = capped(config, items);
+    bench.bench_units(name, items as f64, move || {
+        let mut arrivals = arrivals();
+        black_box(simulate_golden(&cfg, &mut OnOff, &mut arrivals).items);
+    })
+}
+
+/// Event queue: 1000 interleaved schedules then a full drain, on a
+/// reused (reset) queue. Throughput unit: queue events.
+pub fn event_queue<'a>(bench: &'a mut Bench, name: &str) -> &'a BenchResult {
+    let mut queue: EventQueue<u64> = EventQueue::with_capacity(1024);
+    bench.bench_units(name, 1000.0, move || {
+        queue.reset();
+        for i in 0..1000u64 {
+            queue.schedule(SimTime::from_nanos(i * 7919 % 4096), i);
+        }
+        let mut acc = 0u64;
+        while let Some((_, id)) = queue.pop() {
+            acc = acc.wrapping_add(id);
+        }
+        black_box(acc);
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_default;
+
+    #[test]
+    fn shared_targets_run_and_report_units() {
+        let cfg = paper_default();
+        let mut bench = Bench::new("targets-test").quick();
+        let r = des_idle_waiting(&mut bench, "iw", &cfg, 5);
+        assert_eq!(r.units_per_iter, 5.0);
+        let r = des_onoff(&mut bench, "onoff", &cfg, 5);
+        assert!(r.throughput() > 0.0);
+        let r = des_onoff_golden(&mut bench, "golden", &cfg, 5);
+        assert!(r.ns_per_iter() > 0.0);
+        let r = event_queue(&mut bench, "queue");
+        assert_eq!(r.units_per_iter, 1000.0);
+        assert_eq!(bench.results().len(), 4);
+    }
+}

@@ -19,6 +19,8 @@
 //!             [--timeout-ms T] [--ema-alpha A] [--window W] [--quantile Q]
 //!             [--saving m12]          # per-policy tunables
 //! repro plan --period 75              # policy recommendation
+//! repro bench [--json PATH] [--quick] [--filter NAME] [--items N] [--threads N]
+//!                                     # in-process perf benchmarks, optionally as JSON
 //! repro all [--threads N]             # every experiment, paper order
 //! ```
 //!
@@ -60,6 +62,7 @@ COMMANDS:
   multi       event-driven multi-accelerator simulation (\u{a7}4.2 extension)
   serve       Duty-cycle serving with REAL LSTM inference via PJRT
   plan        Recommend a strategy for a given request period
+  bench       Time the hot paths (DES, sweeps, tuner); --json emits {name, iters, ns_per_iter, throughput}
   all         Run every experiment in paper order
 
 Run 'repro <command> --help' for options.";
@@ -147,6 +150,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "multi" => cmd_multi(rest),
         "serve" => cmd_serve(rest),
         "plan" => cmd_plan(rest),
+        "bench" => cmd_bench(rest),
         "all" => cmd_all(rest),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -400,9 +404,11 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
             ),
         },
     };
+    // the trace is parsed once and shared: every DES evaluation slices
+    // this Arc rather than copying the gap sequence
     let replay = requests::TraceReplay::from_file(&trace_path)
         .with_context(|| format!("loading gap trace {trace_path}"))?;
-    let gaps = replay.gaps().to_vec();
+    let gaps = replay.shared_gaps();
 
     let tc = TuneConfig {
         spec,
@@ -762,6 +768,131 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `repro bench`: time the hot paths in-process and (optionally) write
+/// the results as machine-readable JSON, schema
+/// `[{name, iters, ns_per_iter, throughput}]` — so the perf trajectory
+/// lands in version-controllable `BENCH_*.json` files instead of
+/// terminal scrollback. `throughput` is work units per second with the
+/// unit named by the benchmark (simulated items, queue events, sweep
+/// cells, tuner DES evaluations).
+fn cmd_bench(argv: &[String]) -> Result<()> {
+    use crate::bench::{black_box, targets, Bench};
+    use crate::coordinator::tracegen::{self, TraceKind};
+    use crate::experiments::{exp2, exp4_policies};
+    use crate::tuner::{self, SearchStrategy, TuneConfig};
+
+    let args = Args::parse(
+        argv,
+        &[
+            ("json", true),
+            ("quick", false),
+            ("filter", true),
+            ("items", true),
+            ("threads", true),
+            ("help", false),
+        ],
+    )?;
+    if help_and_done(&args, "bench") {
+        return Ok(());
+    }
+    let config = paper_default();
+    let quick = args.flag("quick") || crate::bench::quick_mode();
+    let items = args.u64_opt("items")?.unwrap_or(if quick { 500 } else { 10_000 });
+    if items == 0 {
+        bail!("--items must be at least 1");
+    }
+    let runner = sweep_runner(&args)?;
+    let filter = args.str_opt("filter");
+    let want = |name: &str| filter.map(|f| name.contains(f)).unwrap_or(true);
+    let mut bench = Bench::new(format!("repro bench ({} items/DES run)", items));
+    if quick {
+        bench = bench.quick();
+    }
+
+    // --- the DES hot loop (shared bodies with benches/hotpath.rs, so
+    // the two harnesses stay comparable by construction) ---
+    if want("des_idle_waiting_items") {
+        targets::des_idle_waiting(&mut bench, "des_idle_waiting_items", &config, items);
+    }
+    if want("des_onoff_items") {
+        targets::des_onoff(&mut bench, "des_onoff_items", &config, items);
+    }
+    if want("des_onoff_golden_items") {
+        targets::des_onoff_golden(&mut bench, "des_onoff_golden_items", &config, items);
+    }
+    if want("event_queue_events") {
+        targets::event_queue(&mut bench, "event_queue_events");
+    }
+
+    // --- the sweep engine (the benches/sweep.rs gate targets) ---
+    if want("sweep_exp2_cells") {
+        let step = if quick { 0.5 } else { 0.05 };
+        let cells = exp2::run_threaded(&config, step, &runner).samples.len();
+        bench.bench_units("sweep_exp2_cells", cells as f64, || {
+            black_box(exp2::run_threaded(&config, step, &runner).samples.len());
+        });
+    }
+    if want("sweep_exp4_cells") {
+        let e4 = exp4_policies::Exp4Config {
+            items: if quick { 100 } else { 300 },
+            period_ms: 40.0,
+            seed: 7,
+        };
+        let cells = exp4_policies::run_threaded(&config, &e4, &runner)
+            .context("exp4 bench cell")?
+            .rows
+            .len();
+        bench.bench_units("sweep_exp4_cells", cells as f64, || {
+            black_box(
+                exp4_policies::run_threaded(&config, &e4, &runner)
+                    .expect("exp4 bench sweep")
+                    .rows
+                    .len(),
+            );
+        });
+    }
+
+    // --- the tuner (halving rungs resume prefixes; dedupe; Arc trace) ---
+    if want("tune_halving_evals") {
+        let gaps: std::sync::Arc<[Duration]> =
+            tracegen::generate_durations(TraceKind::BurstyIot, 128, 40.0, 1).into();
+        let tc = TuneConfig {
+            search: SearchStrategy::Halving,
+            budget: 16,
+            seed: 5,
+            ..TuneConfig::for_spec(PolicySpec::WindowedQuantile)
+        };
+        let evals = tuner::tune(&config, &tc, &gaps, &runner)
+            .context("tuner bench run")?
+            .trajectory
+            .iter()
+            .filter(|p| p.metrics.is_some())
+            .count();
+        bench.bench_units("tune_halving_evals", evals as f64, || {
+            black_box(
+                tuner::tune(&config, &tc, &gaps, &runner)
+                    .expect("tuner bench run")
+                    .best,
+            );
+        });
+    }
+
+    if bench.results().is_empty() {
+        bail!(
+            "--filter '{}' matched no benchmark",
+            filter.unwrap_or_default()
+        );
+    }
+    print!("{}", bench.render());
+    if let Some(path) = args.str_opt("json") {
+        let mut body = bench.to_json().render_pretty();
+        body.push('\n');
+        std::fs::write(path, body).with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn cmd_all(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv, &[("step", true), ("threads", true), ("help", false)])?;
     if help_and_done(&args, "all") {
@@ -896,10 +1027,45 @@ mod tests {
     fn helps_run() {
         for cmd in [
             "fig2", "exp1", "exp2", "exp3", "exp4", "gen-trace", "tune", "validate", "ablate",
-            "multi", "serve", "plan", "all",
+            "multi", "serve", "plan", "bench", "all",
         ] {
             run(&sv(&[cmd, "--help"])).unwrap();
         }
+    }
+
+    #[test]
+    fn bench_quick_writes_the_json_schema() {
+        let dir = std::env::temp_dir().join("idlewait_bench_json");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let path_str = path.to_str().unwrap();
+        run(&sv(&[
+            "bench",
+            "--quick",
+            "--filter",
+            "event_queue",
+            "--json",
+            path_str,
+        ]))
+        .unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let json = crate::util::json::Json::parse(&body).unwrap();
+        let rows = json.as_arr().expect("array of results");
+        assert_eq!(rows.len(), 1);
+        for key in ["name", "iters", "ns_per_iter", "throughput"] {
+            assert!(rows[0].get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(
+            rows[0].get("name").and_then(crate::util::json::Json::as_str),
+            Some("event_queue_events")
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bench_rejects_an_unmatched_filter_and_zero_items() {
+        assert!(run(&sv(&["bench", "--quick", "--filter", "no-such-bench"])).is_err());
+        assert!(run(&sv(&["bench", "--items", "0"])).is_err());
     }
 
     #[test]

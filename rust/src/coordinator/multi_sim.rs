@@ -239,6 +239,8 @@ pub fn run(config: &SimConfig, ms: &MultiSimConfig) -> MultiSimReport {
         ),
         config.platform.spi.compressed,
     );
+    // keep the precomputed gap-cost table in sync with the second slot
+    core.rebuild_table();
     let model = Analytical::new(&config.item, config.workload.energy_budget);
 
     // With no overrides, ONE shared policy instance plans (and observes)

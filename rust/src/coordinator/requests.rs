@@ -6,9 +6,21 @@
 //! of an explicit inter-arrival trace. Generators are deterministic given
 //! their seed.
 
+use std::sync::Arc;
+
 use crate::config::schema::ArrivalSpec;
 use crate::util::rng::Xoshiro256ss;
 use crate::util::units::Duration;
+
+/// Mean of a gap slice — *the* trace-mean formula (`f64` seconds summed
+/// in trace order, divided by the count). One shared implementation for
+/// [`TraceReplay`], the prefix simulation and its reports, so the
+/// bit-for-bit resume-equals-scratch contract cannot be broken by one
+/// copy of the fold drifting.
+pub fn trace_mean(gaps: &[Duration]) -> Duration {
+    let total: f64 = gaps.iter().map(|g| g.secs()).sum();
+    Duration::from_secs(total / gaps.len() as f64)
+}
 
 /// A source of inter-arrival gaps (time from one request to the next).
 pub trait ArrivalProcess: Send {
@@ -124,17 +136,32 @@ impl ArrivalProcess for Poisson {
 }
 
 /// Replay an explicit gap trace, cycling when exhausted.
+///
+/// The gap sequence is `Arc`-shared: cloning a replayer (one per sweep
+/// cell in the trace-driven experiment columns) shares the parsed trace
+/// instead of copying it.
 #[derive(Debug, Clone)]
 pub struct TraceReplay {
-    gaps: Vec<Duration>,
+    gaps: Arc<[Duration]>,
     pos: usize,
 }
 
 impl TraceReplay {
     /// Replay an in-memory gap sequence (panics if empty).
     pub fn new(gaps: Vec<Duration>) -> TraceReplay {
+        TraceReplay::shared(gaps.into())
+    }
+
+    /// Replay a shared gap sequence without copying it (panics if empty).
+    pub fn shared(gaps: Arc<[Duration]>) -> TraceReplay {
         assert!(!gaps.is_empty(), "empty arrival trace");
         TraceReplay { gaps, pos: 0 }
+    }
+
+    /// The shared gap sequence (a refcount bump, not a copy) — what the
+    /// tuner and the experiment grids hand to every evaluation.
+    pub fn shared_gaps(&self) -> Arc<[Duration]> {
+        self.gaps.clone()
     }
 
     /// Number of gaps in one cycle of the trace.
@@ -204,7 +231,7 @@ impl TraceReplay {
                 ),
             ));
         }
-        Ok(TraceReplay { gaps, pos: 0 })
+        Ok(TraceReplay::new(gaps))
     }
 }
 
@@ -216,8 +243,7 @@ impl ArrivalProcess for TraceReplay {
     }
 
     fn mean(&self) -> Duration {
-        let total: f64 = self.gaps.iter().map(|g| g.secs()).sum();
-        Duration::from_secs(total / self.gaps.len() as f64)
+        trace_mean(&self.gaps)
     }
 
     fn label(&self) -> String {

@@ -6,16 +6,43 @@
 //! charged with *FPGA-side* energy (FPGA + clock ref + flash — what the
 //! paper measures), while MCU energy is tracked separately for reporting.
 
+use std::sync::{Arc, Mutex};
+
+use once_cell::sync::Lazy;
+
 use crate::config::schema::{FpgaModel, SpiConfig};
 use crate::device::battery::{Battery, Exhausted};
 use crate::device::bitstream::Bitstream;
-use crate::device::flash::Flash;
+use crate::device::flash::{Flash, StoredImage};
 use crate::device::fpga::{Fpga, FpgaError};
 use crate::device::mcu::Mcu;
 use crate::device::monitor::{Pac1934, Segment};
 use crate::device::rails::PowerSaving;
 use crate::sim::time::SimTime;
 use crate::util::units::{Duration, Energy, Power};
+
+/// The paper's LSTM image, stored once per `(model, compressed)` combo.
+///
+/// Synthesizing the bitstream and walking its ~1333 frames for the
+/// compression ratio is by far the most expensive part of building a
+/// board; sweeps build one board per cell, so without this cache the
+/// sweep engine spent more time re-deriving an identical image than
+/// simulating. The cache is tiny (≤ 4 entries) and the images are
+/// immutable, so sharing is safe.
+fn lstm_image(model: FpgaModel, compressed: bool) -> Arc<StoredImage> {
+    type Key = (FpgaModel, bool);
+    static CACHE: Lazy<Mutex<Vec<(Key, Arc<StoredImage>)>>> = Lazy::new(|| Mutex::new(Vec::new()));
+    let mut cache = CACHE.lock().expect("image cache poisoned");
+    if let Some((_, image)) = cache.iter().find(|(k, _)| *k == (model, compressed)) {
+        return image.clone();
+    }
+    let image = Arc::new(StoredImage::new(
+        Bitstream::lstm_accelerator(model),
+        compressed,
+    ));
+    cache.push(((model, compressed), image.clone()));
+    image
+}
 
 /// Why a board operation failed.
 #[derive(Debug, thiserror::Error)]
@@ -51,7 +78,7 @@ impl Board {
     /// A board with the paper's LSTM accelerator programmed into flash.
     pub fn paper_setup(model: FpgaModel, compressed: bool) -> Board {
         let mut flash = Flash::new();
-        flash.program("lstm", Bitstream::lstm_accelerator(model), compressed);
+        flash.program_shared("lstm", lstm_image(model, compressed));
         Board {
             fpga: Fpga::new(model),
             flash,
@@ -61,6 +88,20 @@ impl Board {
             now: SimTime::ZERO,
             fpga_energy: Energy::ZERO,
         }
+    }
+
+    /// Return the board to its pristine `paper_setup` state — full
+    /// battery, cold FPGA, zeroed ledgers and monitor — while keeping the
+    /// programmed flash (and its shared bitstream images) intact. Sweep
+    /// cells reuse one board through this instead of rebuilding; a reset
+    /// board is state-for-state identical to a fresh `paper_setup`.
+    pub fn reset(&mut self) {
+        self.fpga = Fpga::new(self.fpga.model);
+        self.mcu = Mcu::new();
+        self.battery = Battery::paper_budget();
+        self.monitor = Pac1934::default();
+        self.now = SimTime::ZERO;
+        self.fpga_energy = Energy::ZERO;
     }
 
     /// Advance time by `dur` with the FPGA-side rails drawing `power`,

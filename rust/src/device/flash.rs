@@ -8,6 +8,7 @@
 //! loading-stage power in `device::spi`, not double-counted here.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::config::schema::SpiConfig;
 use crate::device::bitstream::Bitstream;
@@ -60,9 +61,13 @@ impl StoredImage {
 }
 
 /// The flash chip: bitstream slots + electrical limits.
+///
+/// Slots hold [`Arc`]-shared images: sweeps build (and clone) thousands
+/// of boards per run, and sharing the stored bitstream makes a board
+/// clone a refcount bump instead of a multi-megabit frame copy.
 #[derive(Debug, Clone)]
 pub struct Flash {
-    slots: BTreeMap<String, StoredImage>,
+    slots: BTreeMap<String, Arc<StoredImage>>,
     /// Standby draw while the board is powered (the §5.4 floor).
     pub standby_power: Power,
     /// Maximum supported SPI clock.
@@ -91,8 +96,14 @@ impl Flash {
     /// Program a bitstream into a named slot (build-time operation; not on
     /// the energy-accounted request path).
     pub fn program(&mut self, slot: impl Into<String>, bitstream: Bitstream, compressed: bool) {
-        self.slots
-            .insert(slot.into(), StoredImage::new(bitstream, compressed));
+        self.program_shared(slot, Arc::new(StoredImage::new(bitstream, compressed)));
+    }
+
+    /// Program an already-stored (and possibly shared) image into a named
+    /// slot. The fast path for sweeps: the image — including its
+    /// compression walk — is built once and shared by every board clone.
+    pub fn program_shared(&mut self, slot: impl Into<String>, image: Arc<StoredImage>) {
+        self.slots.insert(slot.into(), image);
     }
 
     /// Validate an SPI setting against the chip's limits.
@@ -116,6 +127,7 @@ impl Flash {
     pub fn image(&self, slot: &str) -> Result<&StoredImage, FlashError> {
         self.slots
             .get(slot)
+            .map(|a| a.as_ref())
             .ok_or_else(|| FlashError::EmptySlot(slot.to_string()))
     }
 

@@ -7,6 +7,8 @@
 //! transfer in retention mode) are hard errors — they would be silent
 //! wrong-energy bugs otherwise.
 
+use std::sync::Arc;
+
 use crate::config::schema::{FpgaModel, SpiConfig};
 use crate::device::config_fsm::ConfigProfile;
 use crate::device::flash::{Flash, FlashError};
@@ -63,8 +65,9 @@ pub struct Fpga {
     /// Current power/configuration state.
     pub state: FpgaState,
     rails: RailSet,
-    /// Name of the accelerator currently configured, if any.
-    configured_with: Option<String>,
+    /// Name of the accelerator currently configured, if any (shared so
+    /// the per-configuration hot path never allocates).
+    configured_with: Option<Arc<str>>,
     /// Total configurations performed (the quantity the paper minimizes).
     pub configurations: u64,
     /// Total power-on events (each costs the inrush transient).
@@ -126,10 +129,25 @@ impl Fpga {
         flash.check_spi(&spi)?;
         let image = flash.image(slot)?;
         let profile = ConfigProfile::compute(self.model, spi, image);
-        self.configured_with = Some(slot.to_string());
+        self.mark_configured(Arc::from(slot));
+        Ok(profile)
+    }
+
+    /// Record a completed configuration: the bookkeeping tail of
+    /// [`Fpga::configure`] (slot name, counter, idle state), split out so
+    /// the precomputed-cost fast path
+    /// ([`GapCostTable`](crate::strategies::replay::GapCostTable)) can
+    /// skip the profile recomputation while keeping counters and state
+    /// bit-identical to the golden path. The caller must have powered the
+    /// rails on first.
+    pub fn mark_configured(&mut self, slot: Arc<str>) {
+        debug_assert!(
+            self.state != FpgaState::Off,
+            "configuration requires powered rails"
+        );
+        self.configured_with = Some(slot);
         self.configurations += 1;
         self.state = FpgaState::Idle(PowerSaving::BASELINE);
-        Ok(profile)
     }
 
     /// Enter idle under a power-saving configuration (paper §4.2).

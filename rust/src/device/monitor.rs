@@ -69,15 +69,25 @@ impl Pac1934 {
         let end = seg.end.nanos();
         self.exact += seg.power * seg.end.since(seg.start);
         let period = self.sample_period_ns;
+        // Hot-path exit without a division: the pending tick lies at or
+        // beyond this segment's end, so no sample falls inside it. This
+        // covers the µs-scale phase segments between ~1 ms ticks — the
+        // bulk of a DES run. Deferring the gap-skip below is sound
+        // because the tick grid is absolute (multiples of the period):
+        // advancing past a gap now or at the next covered segment lands
+        // the pending tick on the same grid point.
+        if self.next_sample_ns >= end {
+            return;
+        }
         // Advance past any gap before this segment without accumulating
         // (ticks in uncovered gaps measure whatever rail state the caller
         // chose not to report — physically, a segment is always fed).
         if self.next_sample_ns < start {
             let skipped = (start - self.next_sample_ns).div_ceil(period);
             self.next_sample_ns += skipped * period;
-        }
-        if self.next_sample_ns >= end {
-            return;
+            if self.next_sample_ns >= end {
+                return;
+            }
         }
         // Ticks at next, next+T, ... strictly below end.
         let count = (end - self.next_sample_ns).div_ceil(period);

@@ -22,6 +22,8 @@
 //! pure functions of their grid point — so the CSV is byte-identical at
 //! any `--threads N`.
 
+use std::sync::Arc;
+
 use crate::config::loader::SimConfig;
 use crate::config::schema::{ArrivalSpec, PolicyParams, PolicySpec};
 use crate::coordinator::requests::{
@@ -31,7 +33,7 @@ use crate::coordinator::tracegen::{self, TraceKind};
 use crate::energy::analytical::Analytical;
 use crate::runner::grid::{cross, derive_seed};
 use crate::runner::SweepRunner;
-use crate::strategies::simulate::{simulate, GapDecisions};
+use crate::strategies::simulate::{GapDecisions, SimWorker};
 use crate::strategies::strategy::build_with;
 use crate::tuner::{self, SearchStrategy, TuneConfig};
 use crate::util::csv::Csv;
@@ -196,7 +198,7 @@ pub fn run(config: &SimConfig, e4: &Exp4Config) -> std::io::Result<Exp4Result> {
 pub fn tuned_variant(
     config: &SimConfig,
     e4: &Exp4Config,
-    bursty_gaps: &[Duration],
+    bursty_gaps: &Arc<[Duration]>,
     runner: &SweepRunner,
 ) -> Result<PolicyVariant, tuner::TuneError> {
     let tc = TuneConfig {
@@ -229,8 +231,9 @@ pub fn run_threaded(
     let model = Analytical::new(&config.item, config.workload.energy_budget);
     let period = Duration::from_millis(e4.period_ms);
 
-    // one gap sequence per corpus column, shared by every variant row
-    let corpus: Vec<(&'static str, Vec<Duration>)> = [
+    // one gap sequence per corpus column, Arc-shared by every variant row
+    // (cells clone a refcount, not the trace)
+    let corpus: Vec<(&'static str, Arc<[Duration]>)> = [
         ("bursty-iot", TraceKind::BurstyIot),
         ("diurnal", TraceKind::DiurnalPoisson),
         ("mmpp", TraceKind::OnOffMmpp),
@@ -245,18 +248,15 @@ pub fn run_threaded(
                 CORPUS_GAPS,
                 e4.period_ms,
                 derive_seed(e4.seed, 0x100 + i as u64),
-            ),
+            )
+            .into(),
         )
     })
     .collect();
 
     // the config's own trace file, if any, becomes a seventh column
-    let config_trace: Option<Vec<Duration>> = match &config.workload.arrival {
-        ArrivalSpec::Trace { path, .. } => {
-            let mut t = TraceReplay::from_file(path)?;
-            // materialize one cycle so every cell replays the same gaps
-            Some((0..t.len()).map(|_| t.next_gap()).collect())
-        }
+    let config_trace: Option<Arc<[Duration]>> = match &config.workload.arrival {
+        ArrivalSpec::Trace { path, .. } => Some(TraceReplay::from_file(path)?.shared_gaps()),
         _ => None,
     };
 
@@ -279,57 +279,65 @@ pub fn run_threaded(
     );
 
     let grid = cross(&vs, &arrival_axis);
-    let rows = runner.run(&grid, |cell| {
-        let (variant, (arrival_idx, arrival_name)) = cell.params;
-        // one stream per arrival column, shared by every variant row
-        let stream_seed = derive_seed(e4.seed, *arrival_idx as u64);
-        let mut arrivals: Box<dyn ArrivalProcess> = match *arrival_name {
-            "periodic" => Box::new(Periodic { period }),
-            "jittered" => Box::new(Jittered::new(
-                period,
-                period * 0.25,
-                Duration::from_millis(0.1),
-                stream_seed,
-            )),
-            "poisson" => Box::new(Poisson::new(
-                period,
-                Duration::from_millis(ArrivalSpec::DEFAULT_POISSON_MIN_GAP_MS),
-                stream_seed,
-            )),
-            "trace" => Box::new(TraceReplay::new(
-                config_trace.clone().expect("trace column requires a config trace"),
-            )),
-            corpus_name => Box::new(TraceReplay::new(
-                corpus
-                    .iter()
-                    .find(|(name, _)| *name == corpus_name)
-                    .expect("corpus column present")
-                    .1
-                    .clone(),
-            )),
-        };
-        // randomized policies draw from a per-cell stream that depends on
-        // the experiment seed and the cell index only — thread-invariant
-        let params = PolicyParams {
-            seed: derive_seed(e4.seed, 0x9000 + cell.index as u64),
-            ..variant.params
-        };
-        let mut policy = build_with(variant.spec, &model, &params);
-        let mut capped = config.clone();
-        capped.workload.max_items = Some(e4.items);
-        let report = simulate(&capped, policy.as_mut(), arrivals.as_mut());
-        Exp4Row {
-            policy: variant.spec,
-            tunable: variant.tunable,
-            arrival: *arrival_name,
-            items: report.items,
-            energy_mj: report.energy_exact.millijoules(),
-            lifetime_h: report.lifetime.hours(),
-            mean_latency_ms: report.mean_latency.millis(),
-            decisions: report.decisions,
-            late_requests: report.late_requests,
-        }
-    });
+    // one capped config for every cell (hoisted: cells used to clone it),
+    // and one reusable DES worker per thread (platform + event queue
+    // built once per worker instead of once per cell)
+    let mut capped = config.clone();
+    capped.workload.max_items = Some(e4.items);
+    let capped = &capped;
+    let rows = runner.run_with_state(
+        &grid,
+        || SimWorker::new(capped),
+        |worker, cell| {
+            let (variant, (arrival_idx, arrival_name)) = cell.params;
+            // one stream per arrival column, shared by every variant row
+            let stream_seed = derive_seed(e4.seed, *arrival_idx as u64);
+            let mut arrivals: Box<dyn ArrivalProcess> = match *arrival_name {
+                "periodic" => Box::new(Periodic { period }),
+                "jittered" => Box::new(Jittered::new(
+                    period,
+                    period * 0.25,
+                    Duration::from_millis(0.1),
+                    stream_seed,
+                )),
+                "poisson" => Box::new(Poisson::new(
+                    period,
+                    Duration::from_millis(ArrivalSpec::DEFAULT_POISSON_MIN_GAP_MS),
+                    stream_seed,
+                )),
+                "trace" => Box::new(TraceReplay::shared(
+                    config_trace.clone().expect("trace column requires a config trace"),
+                )),
+                corpus_name => Box::new(TraceReplay::shared(
+                    corpus
+                        .iter()
+                        .find(|(name, _)| *name == corpus_name)
+                        .expect("corpus column present")
+                        .1
+                        .clone(),
+                )),
+            };
+            // randomized policies draw from a per-cell stream that depends on
+            // the experiment seed and the cell index only — thread-invariant
+            let params = PolicyParams {
+                seed: derive_seed(e4.seed, 0x9000 + cell.index as u64),
+                ..variant.params
+            };
+            let mut policy = build_with(variant.spec, &model, &params);
+            let report = worker.run(capped, policy.as_mut(), arrivals.as_mut());
+            Exp4Row {
+                policy: variant.spec,
+                tunable: variant.tunable,
+                arrival: *arrival_name,
+                items: report.items,
+                energy_mj: report.energy_exact.millijoules(),
+                lifetime_h: report.lifetime.hours(),
+                mean_latency_ms: report.mean_latency.millis(),
+                decisions: report.decisions,
+                late_requests: report.late_requests,
+            }
+        },
+    );
     Ok(Exp4Result {
         rows,
         items: e4.items,

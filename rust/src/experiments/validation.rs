@@ -18,7 +18,7 @@ use crate::coordinator::requests::Periodic;
 use crate::energy::analytical::Analytical;
 use crate::experiments::paper;
 use crate::runner::{Grid, SweepRunner};
-use crate::strategies::simulate::{simulate, SimReport};
+use crate::strategies::simulate::{SimReport, SimWorker};
 use crate::strategies::strategy::build;
 use crate::util::table::{fcount, fnum, Table};
 use crate::util::units::Duration;
@@ -66,28 +66,32 @@ pub fn run_threaded(config: &SimConfig, t_req_ms: f64, runner: &SweepRunner) -> 
     let model = Analytical::new(&config.item, config.workload.energy_budget);
     let t_req = Duration::from_millis(t_req_ms);
     let grid = Grid::new(vec![PolicySpec::OnOff, PolicySpec::IdleWaiting]);
-    let rows = runner.run(&grid, |cell| {
-        let kind = *cell.params;
-        let prediction = model.predict(kind, t_req);
-        let analytical_items = prediction.n_max.expect("feasible period");
-        let mut policy = build(kind, &model);
-        let mut arrivals = Periodic { period: t_req };
-        let report: SimReport = simulate(config, policy.as_mut(), &mut arrivals);
-        let des_lifetime_h = report.lifetime.hours();
-        let analytical_lifetime_h = prediction.lifetime.hours();
-        Row {
-            policy: kind,
-            analytical_items,
-            des_items: report.items,
-            items_gap: (report.items as f64 - analytical_items as f64).abs()
-                / analytical_items as f64,
-            analytical_lifetime_h,
-            des_lifetime_h,
-            lifetime_gap: (des_lifetime_h - analytical_lifetime_h).abs()
-                / analytical_lifetime_h,
-            monitor_rel_error: report.monitor_rel_error,
-        }
-    });
+    let rows = runner.run_with_state(
+        &grid,
+        || SimWorker::new(config),
+        |worker, cell| {
+            let kind = *cell.params;
+            let prediction = model.predict(kind, t_req);
+            let analytical_items = prediction.n_max.expect("feasible period");
+            let mut policy = build(kind, &model);
+            let mut arrivals = Periodic { period: t_req };
+            let report: SimReport = worker.run(config, policy.as_mut(), &mut arrivals);
+            let des_lifetime_h = report.lifetime.hours();
+            let analytical_lifetime_h = prediction.lifetime.hours();
+            Row {
+                policy: kind,
+                analytical_items,
+                des_items: report.items,
+                items_gap: (report.items as f64 - analytical_items as f64).abs()
+                    / analytical_items as f64,
+                analytical_lifetime_h,
+                des_lifetime_h,
+                lifetime_gap: (des_lifetime_h - analytical_lifetime_h).abs()
+                    / analytical_lifetime_h,
+                monitor_rel_error: report.monitor_rel_error,
+            }
+        },
+    );
     ValidationResult { t_req_ms, rows }
 }
 

@@ -10,13 +10,18 @@
 //! Guarantees:
 //!
 //! * **Determinism at any thread count** — cells are indexed, each cell's
-//!   PRNG seed is derived from `(base_seed, index)` alone, and results are
-//!   collected in grid order. `threads = 1` and `threads = N` produce
-//!   byte-identical output (the sweep-determinism test suite asserts
-//!   this down to rendered CSV bytes).
-//! * **No work-stealing nondeterminism** — the grid is split into
-//!   contiguous chunks, one per worker, so no synchronization is needed
-//!   beyond `std::thread::scope`'s join.
+//!   PRNG seed is derived from `(base_seed, index)` alone, and results
+//!   land in preassigned grid-index slots. `threads = 1` and
+//!   `threads = N` produce byte-identical output (the sweep-determinism
+//!   test suite asserts this down to rendered CSV bytes).
+//! * **Deterministic work stealing** — workers claim cell batches from a
+//!   shared atomic cursor, so uneven cell costs don't serialize on the
+//!   slowest static chunk; the cursor redistributes only *which thread*
+//!   runs a cell, never its seed or its result slot, so scheduling stays
+//!   unobservable in the output.
+//! * **Per-worker scratch state** — `run_with_state` hoists per-cell
+//!   setup (platform builds, event-queue allocations) into a state each
+//!   worker initializes once and reuses across its cells.
 
 pub mod grid;
 pub mod sweep;

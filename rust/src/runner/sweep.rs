@@ -2,11 +2,31 @@
 //!
 //! [`SweepRunner::run`] maps a closure over every [`Cell`] of a [`Grid`]
 //! on `threads` scoped OS threads and returns the results in grid order.
-//! The grid is split into contiguous chunks (one per worker) so each
-//! worker writes only its own slice of the result vector — no locks, no
-//! work-stealing, and therefore no scheduling-dependent ordering. Output
-//! is byte-identical at any thread count provided the per-cell closure is
-//! a pure function of `(cell.params, cell.index, cell.seed)`.
+//! Workers claim small contiguous batches of cells from a shared atomic
+//! cursor (deterministic work stealing), so uneven per-cell costs — a
+//! tuner rung whose candidates die at different item counts, a trace
+//! column 100× heavier than a periodic one — no longer serialize on the
+//! slowest static chunk.
+//!
+//! Determinism argument: every result has a *preassigned slot* (its grid
+//! index), every cell's seed derives from `(base seed, index)` alone,
+//! and the per-cell closure must be a pure function of
+//! `(cell.params, cell.index, cell.seed)` — so which worker computes a
+//! cell, and in which order, is unobservable in the output. The cursor
+//! only redistributes *which thread* runs a cell; it never reorders or
+//! reseeds them, which is why output stays byte-identical at any
+//! `--threads N` (asserted down to rendered CSV bytes by
+//! `tests/sweep_determinism.rs`, including an adversarially uneven
+//! grid).
+//!
+//! [`SweepRunner::run_with_state`] additionally gives every worker a
+//! lazily-created mutable scratch state (e.g. a reusable
+//! [`SimWorker`](crate::strategies::simulate::SimWorker)), for cells
+//! whose setup cost (platform build, event-queue allocation) would
+//! otherwise repeat per cell. The same purity contract applies: the
+//! state may cache *construction*, never leak results between cells.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::runner::grid::{derive_seed, Cell, Grid};
 
@@ -78,6 +98,25 @@ impl SweepRunner {
         R: Send,
         F: Fn(&Cell<'_, P>) -> R + Sync,
     {
+        self.run_with_state(grid, || (), |(), cell| f(cell))
+    }
+
+    /// [`run`](SweepRunner::run) with a per-worker scratch state: every
+    /// worker thread calls `init` once (lazily, on its first claimed
+    /// batch) and threads the resulting state mutably through its cells.
+    ///
+    /// Use this to hoist per-cell setup cost (platform construction,
+    /// queue allocation) out of the hot loop. The determinism contract
+    /// extends to the state: `f(&mut w, cell)` must produce the same
+    /// result as with a freshly-initialized `w` — cache construction in
+    /// the state, never results.
+    pub fn run_with_state<P, W, R, I, F>(&self, grid: &Grid<P>, init: I, f: F) -> Vec<R>
+    where
+        P: Sync,
+        R: Send,
+        I: Fn() -> W + Sync,
+        F: Fn(&mut W, &Cell<'_, P>) -> R + Sync,
+    {
         let n = grid.len();
         if n == 0 {
             return Vec::new();
@@ -85,46 +124,59 @@ impl SweepRunner {
         let threads = self.threads.min(n);
         let points = grid.points();
         let base_seed = self.seed;
+        let cell_at = |index: usize| Cell {
+            index,
+            params: &points[index],
+            seed: derive_seed(base_seed, index as u64),
+        };
 
         if threads == 1 {
             // Fast path: no thread spawn overhead for serial sweeps.
-            return points
-                .iter()
-                .enumerate()
-                .map(|(index, params)| {
-                    f(&Cell {
-                        index,
-                        params,
-                        seed: derive_seed(base_seed, index as u64),
+            let mut state = init();
+            return (0..n).map(|index| f(&mut state, &cell_at(index))).collect();
+        }
+
+        // Deterministic work stealing: workers claim batches of cells
+        // from a shared cursor and buffer (index, result) pairs; the
+        // results then land in their preassigned grid-index slots. Small
+        // batches keep uneven cell costs balanced while amortizing the
+        // cursor traffic on huge cheap grids.
+        let batch = (n / (threads * 16)).clamp(1, 64);
+        let cursor = AtomicUsize::new(0);
+        let mut results: Vec<Option<R>> = Vec::with_capacity(n);
+        results.resize_with(n, || None);
+
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..threads)
+                .map(|_| {
+                    let (f, init, cursor, cell_at) = (&f, &init, &cursor, &cell_at);
+                    scope.spawn(move || {
+                        let mut out: Vec<(usize, R)> = Vec::new();
+                        let mut state: Option<W> = None;
+                        loop {
+                            let start = cursor.fetch_add(batch, Ordering::Relaxed);
+                            if start >= n {
+                                break;
+                            }
+                            let state = state.get_or_insert_with(init);
+                            for index in start..(start + batch).min(n) {
+                                out.push((index, f(state, &cell_at(index))));
+                            }
+                        }
+                        out
                     })
                 })
                 .collect();
-        }
-
-        let mut results: Vec<Option<R>> = Vec::with_capacity(n);
-        results.resize_with(n, || None);
-        let chunk = n.div_ceil(threads);
-
-        std::thread::scope(|scope| {
-            for (k, out_chunk) in results.chunks_mut(chunk).enumerate() {
-                let f = &f;
-                scope.spawn(move || {
-                    let start = k * chunk;
-                    for (j, slot) in out_chunk.iter_mut().enumerate() {
-                        let index = start + j;
-                        *slot = Some(f(&Cell {
-                            index,
-                            params: &points[index],
-                            seed: derive_seed(base_seed, index as u64),
-                        }));
-                    }
-                });
+            for handle in handles {
+                for (index, result) in handle.join().expect("sweep worker panicked") {
+                    results[index] = Some(result);
+                }
             }
         });
 
         results
             .into_iter()
-            .map(|r| r.expect("every cell is assigned to exactly one worker"))
+            .map(|r| r.expect("every cell is claimed by exactly one worker"))
             .collect()
     }
 }
@@ -196,6 +248,63 @@ mod tests {
     #[test]
     fn zero_threads_clamps_to_one() {
         assert_eq!(SweepRunner::new(0).threads(), 1);
+    }
+
+    #[test]
+    fn work_stealing_keeps_grid_order_under_uneven_costs() {
+        // cells spin for wildly different times: with static chunking the
+        // expensive tail serializes; with work stealing the output must
+        // still land in grid order, identical at every thread count
+        let grid = Grid::new((0..200u64).collect());
+        let work = |cell: &Cell<'_, u64>| {
+            let spins = if cell.index % 50 == 0 { 20_000 } else { 10 };
+            let mut acc = *cell.params;
+            for i in 0..spins {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+            }
+            (cell.index, acc)
+        };
+        let reference = SweepRunner::single().run(&grid, work);
+        for threads in [2, 3, 8, 32] {
+            let out = SweepRunner::new(threads).run(&grid, work);
+            assert_eq!(out, reference, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn per_worker_state_is_initialized_lazily_and_reused() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let grid = Grid::new((0..500u64).collect());
+        let inits = AtomicUsize::new(0);
+        let runner = SweepRunner::new(4);
+        let out = runner.run_with_state(
+            &grid,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                0u64 // per-worker scratch: counts this worker's cells
+            },
+            |scratch, cell| {
+                *scratch += 1;
+                *cell.params * 2
+            },
+        );
+        assert_eq!(out, (0..500).map(|x| x * 2).collect::<Vec<_>>());
+        let inits = inits.load(Ordering::Relaxed);
+        assert!(inits >= 1 && inits <= 4, "workers init once each: {inits}");
+    }
+
+    #[test]
+    fn state_results_match_stateless_at_any_thread_count() {
+        let grid = Grid::new((0..97u64).collect());
+        let reference = SweepRunner::single().run(&grid, |cell| cell.seed ^ *cell.params);
+        for threads in [1, 4, 16] {
+            let out = SweepRunner::new(threads).run_with_state(
+                &grid,
+                Vec::<u8>::new,
+                |_scratch, cell| cell.seed ^ *cell.params,
+            );
+            assert_eq!(out, reference, "threads={threads}");
+        }
     }
 
     #[test]

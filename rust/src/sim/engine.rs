@@ -127,6 +127,32 @@ impl<E> Engine<E> {
     pub fn now(&self) -> SimTime {
         self.ctx.now
     }
+
+    /// Return the engine to its just-constructed state (clock zero, empty
+    /// queue, counters cleared) while keeping the queue's backing
+    /// allocation — the sweep-cell reuse path. A reset engine runs
+    /// exactly like a fresh [`Engine::new`].
+    pub fn reset(&mut self) {
+        self.ctx.now = SimTime::ZERO;
+        self.ctx.stopped = false;
+        self.ctx.fired = 0;
+        self.ctx.queue.reset();
+    }
+
+    /// Clear a handler's `stop()` request so a subsequent [`Engine::run`]
+    /// continues from the current clock and queue — the resumable-
+    /// simulation path (the tuner carries train-prefix state across
+    /// successive-halving rungs through this). Unlike [`Engine::reset`],
+    /// the clock, the queue and the fired-event counter are all kept.
+    pub fn resume(&mut self) {
+        self.ctx.stopped = false;
+    }
+
+    /// True once a handler has requested a stop (and no `resume`/`reset`
+    /// has cleared it).
+    pub fn is_stopped(&self) -> bool {
+        self.ctx.stopped
+    }
 }
 
 #[cfg(test)]
@@ -196,6 +222,50 @@ mod tests {
         });
         assert_eq!(stats.events, 1000);
         assert_eq!(count, 1000);
+    }
+
+    #[test]
+    fn reset_engine_replays_like_a_fresh_one() {
+        let mut engine = Engine::new();
+        let run = |engine: &mut Engine<Ev>| {
+            engine.schedule_at(SimTime::ZERO, Ev::Tick(0));
+            let mut seen = Vec::new();
+            let stats = engine.run(&mut seen, u64::MAX, |ctx, seen, ev| {
+                if let Ev::Tick(n) = ev {
+                    seen.push((ctx.now().nanos(), n));
+                    if n < 3 {
+                        ctx.schedule_in(Duration::from_millis(10.0), Ev::Tick(n + 1));
+                    }
+                }
+            });
+            (seen, stats.events, stats.end_time)
+        };
+        let first = run(&mut engine);
+        engine.reset();
+        assert_eq!(engine.now(), SimTime::ZERO);
+        let second = run(&mut engine);
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn resume_continues_after_a_stop() {
+        let mut engine = Engine::new();
+        engine.schedule_at(SimTime::from_nanos(1), Ev::Stop);
+        engine.schedule_at(SimTime::from_nanos(2), Ev::Tick(7));
+        let mut seen: Vec<(u64, u32)> = Vec::new();
+        let mut handler = |ctx: &mut Ctx<Ev>, seen: &mut Vec<(u64, u32)>, ev: Ev| match ev {
+            Ev::Tick(n) => seen.push((ctx.now().nanos(), n)),
+            Ev::Stop => ctx.stop(),
+        };
+        let stats = engine.run(&mut seen, u64::MAX, &mut handler);
+        assert!(stats.stopped_early && engine.is_stopped());
+        assert!(seen.is_empty());
+        // resume keeps the clock, the queue and the event counter
+        engine.resume();
+        assert!(!engine.is_stopped());
+        let stats = engine.run(&mut seen, u64::MAX, &mut handler);
+        assert_eq!(seen, vec![(2, 7)]);
+        assert_eq!(stats.events, 2);
     }
 
     #[test]

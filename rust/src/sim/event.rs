@@ -97,6 +97,16 @@ impl<E> EventQueue<E> {
     pub fn clear(&mut self) {
         self.heap.clear();
     }
+
+    /// Return the queue to its just-constructed state — empty, sequence
+    /// counter at zero — while keeping the heap's backing allocation.
+    /// This is the sweep-cell reuse path: rebuilding a queue per DES run
+    /// re-allocated the heap every cell; a reset queue produces the
+    /// identical `(time, seq)` order a fresh one would.
+    pub fn reset(&mut self) {
+        self.heap.clear();
+        self.next_seq = 0;
+    }
 }
 
 #[cfg(test)]
@@ -153,5 +163,22 @@ mod tests {
         q.schedule(SimTime::ZERO, ());
         q.clear();
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn reset_restarts_the_sequence_counter() {
+        let mut q = EventQueue::new();
+        let t = SimTime::from_nanos(5);
+        for i in 0..10 {
+            q.schedule(t, i);
+        }
+        q.pop();
+        q.reset();
+        assert!(q.is_empty());
+        // a reset queue breaks same-time ties exactly like a fresh one
+        q.schedule(t, 100);
+        q.schedule(t, 200);
+        assert_eq!(q.pop().unwrap().1, 100);
+        assert_eq!(q.pop().unwrap().1, 200);
     }
 }

@@ -15,8 +15,8 @@ pub mod replay;
 pub mod simulate;
 pub mod strategy;
 
-pub use replay::{item_phases, GapExecution, ReplayCore};
-pub use simulate::{simulate, GapDecisions, SimReport};
+pub use replay::{item_phases, GapCostTable, GapExecution, ReplayCore, SlotId};
+pub use simulate::{simulate, simulate_golden, GapDecisions, PrefixSim, SimReport, SimWorker};
 pub use strategy::{
     build, decide, EmaPredictor, GapContext, GapPlan, IdleWaiting, OnOff, Oracle, OraclePolicy,
     Policy, Timeout,

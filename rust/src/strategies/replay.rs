@@ -11,15 +11,140 @@
 //! the *only* place the three plan shapes (idle, power-off, idle-then-off)
 //! are translated into board time/energy.
 //!
+//! Since the hot-path kernel work, [`ReplayCore`] carries a
+//! [`GapCostTable`]: the idle power of every power-saving level and the
+//! inrush/stage costs of every flash slot, precomputed once per core so
+//! the per-gap path is pure arithmetic on cached constants. The original
+//! `Board`-FSM accounting survives verbatim behind
+//! [`ReplayCore::golden_reference`] as the golden path; the fast path is
+//! proven bit-identical to it (every `SimReport` field, every energy
+//! ledger) by `tests/fastpath_equivalence.rs`.
+//!
 //! [`execute_plan`]: ReplayCore::execute_plan
+
+use std::sync::Arc;
 
 use crate::config::loader::SimConfig;
 use crate::config::schema::SpiConfig;
 use crate::device::board::{Board, BoardError};
+use crate::device::config_fsm::ConfigProfile;
 use crate::device::fpga::FpgaState;
-use crate::device::rails::PowerSaving;
+use crate::device::rails::{PowerSaving, RailSet};
 use crate::strategies::strategy::GapPlan;
 use crate::util::units::{Duration, Power};
+
+/// Interned handle for a flash slot: index into the core's
+/// [`GapCostTable`], resolved once via [`ReplayCore::slot_id`] so the
+/// per-item hot path never repeats the `&str` flash lookup.
+///
+/// The id carries the table *generation* it was interned from:
+/// [`ReplayCore::rebuild_table`] renumbers slots (flash order can
+/// change when slots are added), so using an id across a rebuild would
+/// silently charge another slot's costs — the exact wrong-energy bug
+/// class the device layer turns into hard errors. A stale id therefore
+/// panics at [`configure_slot`](ReplayCore::configure_slot); re-intern
+/// after rebuilding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotId {
+    index: usize,
+    generation: u64,
+}
+
+/// Precomputed per-slot configuration costs.
+#[derive(Debug, Clone)]
+struct SlotCosts {
+    /// Slot name (shared with `Fpga::mark_configured`, so configuring
+    /// through the table never allocates).
+    name: Arc<str>,
+    /// The configuration FSM stages as `(power, duration)`, in execution
+    /// order — exactly the values `ConfigProfile::compute` emits.
+    stages: [(Power, Duration); 3],
+    /// The paper's T_config: the sum of the stage durations.
+    total_time: Duration,
+}
+
+/// The precomputed gap-cost table: everything `execute_plan` and the
+/// configuration preamble need, derived once per core from the same
+/// device models the golden path queries per gap. Cached values are the
+/// *outputs of the identical computations* (`RailSet::idle_power`,
+/// `ConfigProfile::compute`), so arithmetic on them is bit-identical to
+/// re-deriving them.
+#[derive(Debug, Clone)]
+pub struct GapCostTable {
+    /// Table 3 idle power per power-saving combination, indexed by
+    /// [`saving_index`].
+    idle_power: [Power; 4],
+    /// Per-slot configuration costs, in flash slot order.
+    slots: Vec<SlotCosts>,
+    /// Whether the board's SPI setting passed the flash limit check; when
+    /// false the fast configure path defers to the golden path so the
+    /// caller sees the identical error.
+    spi_ok: bool,
+    /// Rebuild counter: every [`SlotId`] is stamped with the generation
+    /// it was interned from, and a mismatch at configure time is a
+    /// programmer error (slots may have been renumbered).
+    generation: u64,
+}
+
+/// Index of a [`PowerSaving`] combination in the idle-power table.
+#[inline]
+fn saving_index(saving: PowerSaving) -> usize {
+    (saving.method1 as usize) | ((saving.method2 as usize) << 1)
+}
+
+impl GapCostTable {
+    /// Build the table for `board`'s flash contents at `spi`.
+    pub fn build(board: &Board, spi: SpiConfig) -> GapCostTable {
+        let mut idle_power = [Power::ZERO; 4];
+        for (i, slot) in idle_power.iter_mut().enumerate() {
+            *slot = RailSet::idle_power(PowerSaving {
+                method1: i & 1 != 0,
+                method2: i & 2 != 0,
+            });
+        }
+        let spi_ok = board.flash.check_spi(&spi).is_ok();
+        let slots = board
+            .flash
+            .slots()
+            .map(|name| {
+                let image = board.flash.image(name).expect("listed slot has an image");
+                let profile = ConfigProfile::compute(board.fpga.model, spi, image);
+                let stage = |i: usize| (profile.stages[i].power, profile.stages[i].time);
+                SlotCosts {
+                    name: Arc::from(name),
+                    stages: [stage(0), stage(1), stage(2)],
+                    total_time: profile.total_time(),
+                }
+            })
+            .collect();
+        GapCostTable {
+            idle_power,
+            slots,
+            spi_ok,
+            generation: 0,
+        }
+    }
+
+    /// Cached Table 3 idle power for a power-saving level (the value
+    /// `RailSet::idle_power` computes, without rebuilding a rail tree per
+    /// gap).
+    #[inline]
+    pub fn idle_power(&self, saving: PowerSaving) -> Power {
+        self.idle_power[saving_index(saving)]
+    }
+
+    /// Find a slot's interned id by name, stamped with the current table
+    /// generation.
+    pub fn slot_id(&self, name: &str) -> Option<SlotId> {
+        self.slots
+            .iter()
+            .position(|s| &*s.name == name)
+            .map(|index| SlotId {
+                index,
+                generation: self.generation,
+            })
+    }
+}
 
 /// What actually happened while executing a [`GapPlan`] across one gap —
 /// the feedback the runtimes use for decision counters and late-request
@@ -42,18 +167,111 @@ pub struct ReplayCore {
     pub board: Board,
     /// Table 2 active phases as (power, duration) tuples.
     pub phases: [(Power, Duration); 3],
-    /// Configuration-port parameters used for reconfigurations.
-    pub spi: SpiConfig,
+    /// Configuration-port parameters used for reconfigurations. Private
+    /// so it cannot drift from the cached table: change it via
+    /// [`set_spi`](ReplayCore::set_spi), which rebuilds the table.
+    spi: SpiConfig,
+    /// Precomputed gap costs (idle powers, per-slot configuration
+    /// stages) — the fast path's constants.
+    table: GapCostTable,
+    /// When true, every operation routes through the original `Board`
+    /// FSM accounting (the golden reference path).
+    golden: bool,
 }
 
 impl ReplayCore {
     /// Build the paper platform for `config` with the LSTM image in flash.
     pub fn from_config(config: &SimConfig) -> ReplayCore {
+        let board = Board::paper_setup(config.platform.fpga, config.platform.spi.compressed);
+        let spi = config.platform.spi;
+        let table = GapCostTable::build(&board, spi);
         ReplayCore {
-            board: Board::paper_setup(config.platform.fpga, config.platform.spi.compressed),
+            board,
             phases: item_phases(&config.item),
-            spi: config.platform.spi,
+            spi,
+            table,
+            golden: false,
         }
+    }
+
+    /// Build the platform with the fast path disabled: every gap walks
+    /// the full `Board` device FSM exactly as before the gap-cost
+    /// kernel. This is the golden reference the fast path is proven
+    /// bit-identical against.
+    pub fn golden_reference(config: &SimConfig) -> ReplayCore {
+        ReplayCore {
+            golden: true,
+            ..ReplayCore::from_config(config)
+        }
+    }
+
+    /// True when this core routes through the golden `Board` FSM path.
+    pub fn is_golden(&self) -> bool {
+        self.golden
+    }
+
+    /// The precomputed gap-cost table.
+    pub fn table(&self) -> &GapCostTable {
+        &self.table
+    }
+
+    /// Intern a flash slot name for the allocation-free configure path.
+    pub fn slot_id(&self, name: &str) -> Option<SlotId> {
+        self.table.slot_id(name)
+    }
+
+    /// The SPI setting reconfigurations run at.
+    pub fn spi(&self) -> SpiConfig {
+        self.spi
+    }
+
+    /// Change the SPI setting. Rebuilds the cached gap-cost table in the
+    /// same step, so the fast path can never charge costs computed at a
+    /// previous setting; previously interned [`SlotId`]s become stale
+    /// (the rebuild bumps the table generation).
+    pub fn set_spi(&mut self, spi: SpiConfig) {
+        if self.spi != spi {
+            self.spi = spi;
+            self.rebuild_table();
+        }
+    }
+
+    /// Recompute the gap-cost table from the current flash contents and
+    /// SPI setting. Call after programming additional slots (e.g. the
+    /// multi-accelerator setup) or changing `spi`. Rebuilding bumps the
+    /// table generation: previously interned [`SlotId`]s become stale
+    /// (slots may be renumbered) and must be re-interned — a stale id
+    /// panics at [`configure_slot`](ReplayCore::configure_slot) instead
+    /// of silently charging another slot's costs.
+    pub fn rebuild_table(&mut self) {
+        let generation = self.table.generation + 1;
+        self.table = GapCostTable::build(&self.board, self.spi);
+        self.table.generation = generation;
+    }
+
+    /// Return the platform to its pristine state (full battery, cold
+    /// FPGA, zeroed ledgers) and point it at `config`'s workload item and
+    /// SPI setting — the sweep-cell reuse path. The flash (and its
+    /// shared bitstream images) is kept; a reset core behaves
+    /// state-for-state like a fresh [`ReplayCore::from_config`] of the
+    /// same platform.
+    pub fn reset_for(&mut self, config: &SimConfig) {
+        self.phases = item_phases(&config.item);
+        let spi = config.platform.spi;
+        if config.platform.fpga != self.board.fpga.model || spi.compressed != self.spi.compressed {
+            // different device or on-flash encoding: the stored image
+            // itself changes, so rebuild the platform (still cheap — the
+            // image comes from the shared cache)
+            self.board = Board::paper_setup(config.platform.fpga, spi.compressed);
+            self.spi = spi;
+            self.rebuild_table();
+            return;
+        }
+        if self.spi != spi {
+            self.spi = spi;
+            self.rebuild_table();
+        }
+        self.board.reset();
     }
 
     /// True when the fabric holds a live configuration (no preamble due).
@@ -65,6 +283,35 @@ impl ReplayCore {
     /// duration (the mechanism-derived T_config).
     pub fn configure(&mut self, slot: &str) -> Result<Duration, BoardError> {
         self.board.power_on_and_configure(slot, self.spi)
+    }
+
+    /// Power-on + configure an interned slot on precomputed stage costs:
+    /// the same inrush transient and the same three stage spends, in the
+    /// same order, as [`configure`](ReplayCore::configure) — but without
+    /// re-running the flash lookup, the profile computation or the slot
+    /// name allocation. Bit-identical to the golden path on every ledger
+    /// (counters included), error cases too.
+    pub fn configure_slot(&mut self, slot: SlotId) -> Result<Duration, BoardError> {
+        assert_eq!(
+            slot.generation, self.table.generation,
+            "stale SlotId: the gap-cost table was rebuilt since this slot \
+             was interned — re-intern via slot_id() after rebuild_table()"
+        );
+        if self.golden || !self.table.spi_ok {
+            // golden mode, or an SPI setting the flash rejects: walk the
+            // full path so the caller sees the identical behaviour/error
+            let name = self.table.slots[slot.index].name.clone();
+            return self.configure(&name);
+        }
+        let inrush = self.board.fpga.power_on();
+        self.board.spend_transient(inrush)?;
+        let costs = &self.table.slots[slot.index];
+        self.board.fpga.mark_configured(costs.name.clone());
+        let (stages, total_time) = (costs.stages, costs.total_time);
+        for (power, time) in stages {
+            self.board.spend(power, time)?;
+        }
+        Ok(total_time)
     }
 
     /// Switch images: power-cycle (losing the SRAM configuration) and load
@@ -97,7 +344,108 @@ impl ReplayCore {
     ///
     /// A zero idle window still switches the rails into the requested
     /// power-saving mode, so the next gap starts from the right state.
+    ///
+    /// On a fast-path core this is pure arithmetic on the cached
+    /// [`GapCostTable`] constants; a [`golden_reference`] core walks the
+    /// original `Board` FSM accounting instead. The two are bit-identical
+    /// on every reported quantity (`tests/fastpath_equivalence.rs`).
+    ///
+    /// [`golden_reference`]: ReplayCore::golden_reference
     pub fn execute_plan(
+        &mut self,
+        plan: GapPlan,
+        gap: Duration,
+        config_time: Duration,
+        item_latency: Duration,
+    ) -> Result<GapExecution, BoardError> {
+        if self.golden {
+            return self.execute_plan_via_board(plan, gap, config_time, item_latency);
+        }
+        match plan {
+            GapPlan::Idle(saving) => {
+                self.board.fpga.enter_idle(saving).map_err(BoardError::from)?;
+                if gap.secs() > item_latency.secs() {
+                    self.board
+                        .spend(self.table.idle_power(saving), gap - item_latency)?;
+                    Ok(GapExecution::default())
+                } else {
+                    Ok(GapExecution {
+                        late: true,
+                        ..Default::default()
+                    })
+                }
+            }
+            GapPlan::PowerOff => {
+                let busy = config_time + item_latency;
+                let (off, late) = if gap.secs() > busy.secs() {
+                    (gap - busy, false)
+                } else {
+                    (Duration::ZERO, true)
+                };
+                self.pass_off_time(off);
+                Ok(GapExecution {
+                    powered_off: true,
+                    timeout_expired: false,
+                    late,
+                })
+            }
+            GapPlan::IdleThenOff { saving, timeout } => {
+                let idle_window = gap - item_latency;
+                self.board.fpga.enter_idle(saving).map_err(BoardError::from)?;
+                if idle_window.secs() <= timeout.secs() {
+                    // the next request (or its busy window) preempts the timer
+                    if idle_window.secs() > 0.0 {
+                        self.board
+                            .spend(self.table.idle_power(saving), idle_window)?;
+                        Ok(GapExecution::default())
+                    } else {
+                        Ok(GapExecution {
+                            late: true,
+                            ..Default::default()
+                        })
+                    }
+                } else {
+                    // rent until τ, then buy: power off for the remainder
+                    self.board.spend(self.table.idle_power(saving), timeout)?;
+                    let busy = timeout + config_time + item_latency;
+                    let (off, late) = if gap.secs() > busy.secs() {
+                        (gap - busy, false)
+                    } else {
+                        (Duration::ZERO, true)
+                    };
+                    self.pass_off_time(off);
+                    Ok(GapExecution {
+                        powered_off: true,
+                        timeout_expired: true,
+                        late,
+                    })
+                }
+            }
+        }
+    }
+
+    /// Cut the rails and let `off` pass. The paper's off state draws
+    /// nothing, so where the golden path feeds a zero-power segment
+    /// through the ledger (a no-op draw, a zero-energy monitor segment),
+    /// the fast path just advances the board clock: bit-identical on
+    /// every `SimReport` quantity — the monitor's tick grid is absolute,
+    /// so its deferred gap-skip lands on the same sample tick either
+    /// way, leaving `measured()`/`exact()`/`rel_error()` untouched. The
+    /// one observable that legitimately differs is `Pac1934::samples()`:
+    /// the golden path counts zero-power ticks inside off windows, the
+    /// fast path never takes them (they contribute no energy). No report
+    /// reads the sample count; anything that starts to must use the
+    /// golden path.
+    fn pass_off_time(&mut self, off: Duration) {
+        self.board.fpga.power_off();
+        self.board.now = self.board.now + off;
+    }
+
+    /// The original `Board`-FSM implementation of
+    /// [`execute_plan`](ReplayCore::execute_plan) — the golden reference
+    /// the fast path is validated against, and the path every
+    /// [`golden_reference`](ReplayCore::golden_reference) core takes.
+    pub fn execute_plan_via_board(
         &mut self,
         plan: GapPlan,
         gap: Duration,
@@ -168,10 +516,19 @@ impl ReplayCore {
     /// Advance the energy ledger across `dur` of inactivity: idle at
     /// `saving` while configured, otherwise the (paper-model) off state.
     pub fn elapse(&mut self, saving: PowerSaving, dur: Duration) -> Result<(), BoardError> {
+        if self.golden {
+            return if self.board.fpga.is_configured() {
+                self.board.idle_for(saving, dur)
+            } else {
+                self.board.off_for(dur, false)
+            };
+        }
         if self.board.fpga.is_configured() {
-            self.board.idle_for(saving, dur)
+            self.board.fpga.enter_idle(saving).map_err(BoardError::from)?;
+            self.board.spend(self.table.idle_power(saving), dur)
         } else {
-            self.board.off_for(dur, false)
+            self.pass_off_time(dur);
+            Ok(())
         }
     }
 }
@@ -340,6 +697,151 @@ mod tests {
         let e = core.board.fpga_energy;
         core.elapse(PowerSaving::BASELINE, Duration::from_secs(1.0)).unwrap();
         assert_eq!(core.board.fpga_energy, e);
+    }
+
+    /// Every ledger a `SimReport` is built from, as one comparable tuple.
+    fn ledger(core: &ReplayCore) -> (f64, f64, f64, f64, u64, u64, u64, FpgaState) {
+        (
+            core.board.fpga_energy.joules(),
+            core.board.battery.drawn().joules(),
+            core.board.monitor.measured().joules(),
+            core.board.monitor.exact().joules(),
+            core.board.now.nanos(),
+            core.board.fpga.configurations,
+            core.board.fpga.power_ons,
+            core.board.fpga.state,
+        )
+    }
+
+    #[test]
+    fn interned_configure_matches_golden_bit_for_bit() {
+        let cfg = paper_default();
+        let mut fast = ReplayCore::from_config(&cfg);
+        let mut golden = ReplayCore::golden_reference(&cfg);
+        assert!(!fast.is_golden() && golden.is_golden());
+        let slot = fast.slot_id("lstm").expect("lstm slot interned");
+        let t_fast = fast.configure_slot(slot).unwrap();
+        let t_golden = golden.configure("lstm").unwrap();
+        assert_eq!(t_fast.secs().to_bits(), t_golden.secs().to_bits());
+        assert_eq!(ledger(&fast), ledger(&golden));
+        assert_eq!(fast.board.fpga.configured_with(), Some("lstm"));
+    }
+
+    #[test]
+    fn fast_plans_match_golden_on_every_ledger() {
+        let cfg = paper_default();
+        let plans = [
+            GapPlan::Idle(PowerSaving::BASELINE),
+            GapPlan::Idle(PowerSaving::M12),
+            GapPlan::PowerOff,
+            GapPlan::IdleThenOff {
+                saving: PowerSaving::M1,
+                timeout: Duration::from_millis(50.0),
+            },
+        ];
+        let gaps = [0.01, 3.8, 40.0, 120.0, 700.0];
+        for plan in plans {
+            for gap_ms in gaps {
+                let run = |mut core: ReplayCore| {
+                    let slot = core.slot_id("lstm").unwrap();
+                    let config_time = core.configure_slot(slot).unwrap();
+                    core.run_phases().unwrap();
+                    let latency = cfg.item.latency_without_config();
+                    let exec = core
+                        .execute_plan(plan, Duration::from_millis(gap_ms), config_time, latency)
+                        .unwrap();
+                    // a second serving after the gap exercises the
+                    // post-gap reconfigure path too
+                    if !core.is_ready() {
+                        core.configure_slot(slot).unwrap();
+                    }
+                    core.run_phases().unwrap();
+                    (exec, ledger(&core))
+                };
+                let fast = run(ReplayCore::from_config(&cfg));
+                let golden = run(ReplayCore::golden_reference(&cfg));
+                assert_eq!(fast, golden, "{plan:?} at {gap_ms} ms");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_elapse_matches_golden() {
+        let cfg = paper_default();
+        let run = |mut core: ReplayCore| {
+            core.configure("lstm").unwrap();
+            core.run_phases().unwrap();
+            core.elapse(PowerSaving::M12, Duration::from_millis(300.0)).unwrap();
+            core.power_off();
+            core.elapse(PowerSaving::BASELINE, Duration::from_secs(2.0)).unwrap();
+            ledger(&core)
+        };
+        assert_eq!(
+            run(ReplayCore::from_config(&cfg)),
+            run(ReplayCore::golden_reference(&cfg))
+        );
+    }
+
+    #[test]
+    fn table_caches_the_exact_idle_powers() {
+        let cfg = paper_default();
+        let core = ReplayCore::from_config(&cfg);
+        for saving in [PowerSaving::BASELINE, PowerSaving::M1, PowerSaving::M12] {
+            assert_eq!(
+                core.table().idle_power(saving).milliwatts().to_bits(),
+                crate::device::rails::RailSet::idle_power(saving)
+                    .milliwatts()
+                    .to_bits(),
+                "{saving:?}"
+            );
+        }
+        assert!(core.slot_id("nonexistent").is_none());
+    }
+
+    #[test]
+    fn set_spi_rebuilds_the_cached_costs_in_the_same_step() {
+        let cfg = paper_default();
+        let mut core = ReplayCore::from_config(&cfg);
+        core.set_spi(crate::config::schema::SpiConfig::worst());
+        assert_eq!(core.spi(), crate::config::schema::SpiConfig::worst());
+        let slot = core.slot_id("lstm").unwrap();
+        let t_fast = core.configure_slot(slot).unwrap();
+        // ~1496.6 ms at the worst setting — nothing like the old 36 ms
+        assert!((t_fast.millis() - 1496.6).abs() < 1.5, "{}", t_fast.millis());
+        // and bit-equal to the golden path at the same setting
+        let mut reference = ReplayCore::golden_reference(&cfg);
+        reference.set_spi(crate::config::schema::SpiConfig::worst());
+        let t_golden = reference.configure("lstm").unwrap();
+        assert_eq!(t_fast.secs().to_bits(), t_golden.secs().to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "stale SlotId")]
+    fn slot_id_from_before_a_rebuild_is_rejected() {
+        let cfg = paper_default();
+        let mut core = ReplayCore::from_config(&cfg);
+        let slot = core.slot_id("lstm").unwrap();
+        // rebuilding may renumber slots (flash order can change), so the
+        // old id must be a loud error, never another slot's costs
+        core.rebuild_table();
+        let _ = core.configure_slot(slot);
+    }
+
+    #[test]
+    fn reset_for_restores_a_pristine_core() {
+        let cfg = paper_default();
+        let mut core = ReplayCore::from_config(&cfg);
+        let slot = core.slot_id("lstm").unwrap();
+        core.configure_slot(slot).unwrap();
+        core.run_phases().unwrap();
+        core.reset_for(&cfg);
+        let fresh = ReplayCore::from_config(&cfg);
+        assert_eq!(ledger(&core), ledger(&fresh));
+        // interning survives the reset, and the reset core still runs
+        assert_eq!(core.slot_id("lstm"), Some(slot));
+        core.configure_slot(slot).unwrap();
+        core.run_phases().unwrap();
+        assert_eq!(core.board.fpga.configurations, 1);
     }
 
     #[test]

@@ -23,10 +23,12 @@
 //! arrivals; the board's own ledger tracks busy/idle energy, exactly as
 //! the pre-unification serial loop did, so reports are bit-identical.
 
+use std::sync::Arc;
+
 use crate::config::loader::SimConfig;
 use crate::coordinator::requests::ArrivalProcess;
 use crate::sim::{Ctx, Engine, SimTime};
-use crate::strategies::replay::ReplayCore;
+use crate::strategies::replay::{ReplayCore, SlotId};
 use crate::strategies::strategy::{decide, GapContext, Policy};
 use crate::util::stats::Welford;
 use crate::util::units::{Duration, Energy};
@@ -88,11 +90,13 @@ enum LifetimeEvent {
     Request,
 }
 
-/// Mutable simulation state threaded through the event handler.
-struct LifetimeState<'a> {
-    core: ReplayCore,
-    policy: &'a mut dyn Policy,
-    arrivals: &'a mut dyn ArrivalProcess,
+/// The run-long counters and constants of one lifetime simulation — the
+/// owned part of the simulation state, so a run can be paused at an item
+/// boundary and resumed later ([`PrefixSim`]).
+#[derive(Debug, Clone)]
+struct RunLedger {
+    /// Interned flash slot of the accelerator image.
+    slot: SlotId,
     max_items: u64,
     items: u64,
     late_requests: u64,
@@ -105,6 +109,35 @@ struct LifetimeState<'a> {
     /// the optimal SPI setting, but follows the mechanism when swept).
     config_time: Duration,
     item_latency: Duration,
+    /// A board operation failed (budget exhausted): the run is over and
+    /// cannot be resumed.
+    exhausted: bool,
+}
+
+impl RunLedger {
+    fn new(config: &SimConfig, slot: SlotId) -> RunLedger {
+        RunLedger {
+            slot,
+            max_items: config.workload.max_items.unwrap_or(u64::MAX),
+            items: 0,
+            late_requests: 0,
+            decisions: GapDecisions::default(),
+            prev_completion: Duration::ZERO,
+            latency: Welford::new(),
+            config_time: config.item.configuration.time,
+            item_latency: config.item.latency_without_config(),
+            exhausted: false,
+        }
+    }
+}
+
+/// Mutable simulation state threaded through the event handler: the
+/// owned ledger plus the borrowed core/policy/arrival process.
+struct LifetimeState<'a> {
+    core: &'a mut ReplayCore,
+    policy: &'a mut dyn Policy,
+    arrivals: &'a mut dyn ArrivalProcess,
+    ledger: &'a mut RunLedger,
 }
 
 impl LifetimeState<'_> {
@@ -121,20 +154,22 @@ impl LifetimeState<'_> {
     /// draw would exceed the remaining budget — Eq 3's `≤ E_Budget`
     /// criterion.
     fn on_request(&mut self, ctx: &mut Ctx<LifetimeEvent>) {
-        if self.items >= self.max_items {
+        let ledger = &mut *self.ledger;
+        if ledger.items >= ledger.max_items {
             ctx.stop();
             return;
         }
         let arrival = ctx.now().as_duration();
-        // 1. ensure configured
+        // 1. ensure configured (interned slot: no per-item flash lookup)
         let mut reconfigured = false;
         if !self.core.is_ready() {
-            match self.core.configure("lstm") {
+            match self.core.configure_slot(ledger.slot) {
                 Ok(t) => {
-                    self.config_time = t;
+                    ledger.config_time = t;
                     reconfigured = true;
                 }
                 Err(_) => {
+                    ledger.exhausted = true;
                     ctx.stop();
                     return;
                 }
@@ -142,30 +177,31 @@ impl LifetimeState<'_> {
         }
         // 2. active phases
         if self.core.run_phases().is_err() {
+            ledger.exhausted = true;
             ctx.stop();
             return;
         }
-        self.items += 1;
+        ledger.items += 1;
         // served latency: queue behind a late predecessor, then pay any
         // reconfiguration plus the active phases
         let serve = if reconfigured {
-            self.config_time + self.item_latency
+            ledger.config_time + ledger.item_latency
         } else {
-            self.item_latency
+            ledger.item_latency
         };
-        let start = arrival.max(self.prev_completion);
+        let start = arrival.max(ledger.prev_completion);
         // late = arrived before the previous item finished. Counted here,
         // at arrival, from the same queue state the latency ledger uses —
         // so cascaded lateness (a request delayed by a predecessor that
         // was itself late) is counted, which the plan-local
         // `GapExecution::late` flag cannot see.
         if start > arrival {
-            self.late_requests += 1;
+            ledger.late_requests += 1;
         }
         let completion = start + serve;
-        self.latency.push((completion - arrival).millis());
-        self.prev_completion = completion;
-        if self.items >= self.max_items {
+        ledger.latency.push((completion - arrival).millis());
+        ledger.prev_completion = completion;
+        if ledger.items >= ledger.max_items {
             // Eq 2 counts n−1 idle gaps: no gap after the final item.
             ctx.stop();
             return;
@@ -173,85 +209,338 @@ impl LifetimeState<'_> {
 
         // 3. plan + execute the gap until the next arrival
         let gap = self.arrivals.next_gap();
-        let gap_ctx = GapContext {
-            items_done: self.items,
-            now: arrival,
-        };
-        let plan = decide(self.policy, &gap_ctx, gap);
-        match self
-            .core
-            .execute_plan(plan, gap, self.config_time, self.item_latency)
-        {
-            Ok(exec) => {
-                if exec.powered_off {
-                    self.decisions.powered_off += 1;
-                } else {
-                    self.decisions.idled += 1;
-                }
-                if exec.timeout_expired {
-                    self.decisions.timeouts_expired += 1;
-                }
-                // exec.late (the plan's busy window vs the local gap) is
-                // deliberately NOT counted here: lateness is accounted at
-                // the next arrival from the queue state, which also
-                // catches cascades behind a late predecessor.
-            }
-            Err(_) => {
-                ctx.stop();
-                return;
-            }
+        match plan_gap(self.core, self.policy, ledger, arrival, gap) {
+            Ok(()) => ctx.schedule_in(gap, LifetimeEvent::Request),
+            Err(()) => ctx.stop(),
         }
-        self.policy.observe(gap);
-        ctx.schedule_in(gap, LifetimeEvent::Request);
     }
 }
 
-/// Simulate `config`'s workload under `policy` with `arrivals` on the
-/// shared discrete-event engine.
-pub fn simulate(
-    config: &SimConfig,
+/// The gap-planning tail of one served item: ask the policy, execute the
+/// plan on the core, account the decision, feed the realized gap back.
+/// Shared by the event handler and [`PrefixSim`]'s resume step (which
+/// re-enters exactly here after a cap-stop). `Err(())` = the board
+/// refused (budget exhausted); the caller must stop the run.
+fn plan_gap(
+    core: &mut ReplayCore,
     policy: &mut dyn Policy,
-    arrivals: &mut dyn ArrivalProcess,
-) -> SimReport {
-    let mut state = LifetimeState {
-        core: ReplayCore::from_config(config),
-        policy,
-        arrivals,
-        max_items: config.workload.max_items.unwrap_or(u64::MAX),
-        items: 0,
-        late_requests: 0,
-        decisions: GapDecisions::default(),
-        prev_completion: Duration::ZERO,
-        latency: Welford::new(),
-        config_time: config.item.configuration.time,
-        item_latency: config.item.latency_without_config(),
+    ledger: &mut RunLedger,
+    arrival: Duration,
+    gap: Duration,
+) -> Result<(), ()> {
+    let gap_ctx = GapContext {
+        items_done: ledger.items,
+        now: arrival,
     };
+    let plan = decide(policy, &gap_ctx, gap);
+    match core.execute_plan(plan, gap, ledger.config_time, ledger.item_latency) {
+        Ok(exec) => {
+            if exec.powered_off {
+                ledger.decisions.powered_off += 1;
+            } else {
+                ledger.decisions.idled += 1;
+            }
+            if exec.timeout_expired {
+                ledger.decisions.timeouts_expired += 1;
+            }
+            // exec.late (the plan's busy window vs the local gap) is
+            // deliberately NOT counted here: lateness is accounted at
+            // the next arrival from the queue state, which also
+            // catches cascades behind a late predecessor.
+            policy.observe(gap);
+            Ok(())
+        }
+        Err(_) => {
+            ledger.exhausted = true;
+            Err(())
+        }
+    }
+}
 
-    let mut engine: Engine<LifetimeEvent> = Engine::new();
-    engine.schedule_at(SimTime::ZERO, LifetimeEvent::Request);
-    let stats = engine.run(&mut state, u64::MAX, |ctx, st, event| match event {
-        LifetimeEvent::Request => st.on_request(ctx),
-    });
-
-    let board = &state.core.board;
+/// Assemble the [`SimReport`] from a finished (or paused) run.
+fn build_report(
+    policy_label: String,
+    arrival_label: String,
+    arrival_mean: Duration,
+    ledger: &RunLedger,
+    core: &ReplayCore,
+    end_time: SimTime,
+) -> SimReport {
+    let board = &core.board;
     SimReport {
-        policy: state.policy.label(),
-        arrival: state.arrivals.label(),
-        items: state.items,
-        lifetime: state.arrivals.mean() * state.items as f64, // Eq 4
+        policy: policy_label,
+        arrival: arrival_label,
+        items: ledger.items,
+        lifetime: arrival_mean * ledger.items as f64, // Eq 4
         energy_exact: board.fpga_energy,
         energy_measured: board.monitor.measured(),
         monitor_rel_error: board.monitor.rel_error(),
         configurations: board.fpga.configurations,
         power_ons: board.fpga.power_ons,
-        late_requests: state.late_requests,
-        mean_latency: Duration::from_millis(if state.latency.count() > 0 {
-            state.latency.mean()
+        late_requests: ledger.late_requests,
+        mean_latency: Duration::from_millis(if ledger.latency.count() > 0 {
+            ledger.latency.mean()
         } else {
             0.0
         }),
-        decisions: state.decisions,
-        sim_time: stats.end_time.as_duration(),
+        decisions: ledger.decisions,
+        sim_time: end_time.as_duration(),
+    }
+}
+
+/// A reusable lifetime-DES cell: one [`ReplayCore`] + one engine, reset
+/// (not rebuilt) between runs.
+///
+/// `simulate()` used to construct the full platform — flash, bitstream,
+/// monitor, event queue — per call; in a sweep that meant one platform
+/// build per cell. A `SimWorker` is built once per worker thread
+/// ([`SweepRunner::run_with_state`](crate::runner::SweepRunner::run_with_state))
+/// and reused across cells through [`ReplayCore::reset_for`] and
+/// [`Engine::reset`], which restore pristine state without reallocating.
+/// Reports are bit-identical to fresh construction.
+pub struct SimWorker {
+    core: ReplayCore,
+    engine: Engine<LifetimeEvent>,
+}
+
+impl SimWorker {
+    /// A worker on the fast gap-cost path (the default).
+    pub fn new(config: &SimConfig) -> SimWorker {
+        SimWorker {
+            core: ReplayCore::from_config(config),
+            engine: Engine::new(),
+        }
+    }
+
+    /// A worker on the golden `Board`-FSM reference path.
+    pub fn golden(config: &SimConfig) -> SimWorker {
+        SimWorker {
+            core: ReplayCore::golden_reference(config),
+            engine: Engine::new(),
+        }
+    }
+
+    /// Run one lifetime simulation of `config`'s workload under `policy`
+    /// with `arrivals`. The worker's platform is reset to pristine state
+    /// first, so consecutive runs are independent.
+    pub fn run(
+        &mut self,
+        config: &SimConfig,
+        policy: &mut dyn Policy,
+        arrivals: &mut dyn ArrivalProcess,
+    ) -> SimReport {
+        self.core.reset_for(config);
+        self.engine.reset();
+        let slot = self
+            .core
+            .slot_id("lstm")
+            .expect("the paper platform programs the lstm image");
+        let mut ledger = RunLedger::new(config, slot);
+        let mut state = LifetimeState {
+            core: &mut self.core,
+            policy,
+            arrivals,
+            ledger: &mut ledger,
+        };
+        self.engine.schedule_at(SimTime::ZERO, LifetimeEvent::Request);
+        let stats = self.engine.run(&mut state, u64::MAX, |ctx, st, event| match event {
+            LifetimeEvent::Request => st.on_request(ctx),
+        });
+        let policy_label = state.policy.label();
+        let arrival_label = state.arrivals.label();
+        let arrival_mean = state.arrivals.mean();
+        build_report(
+            policy_label,
+            arrival_label,
+            arrival_mean,
+            &ledger,
+            &self.core,
+            stats.end_time,
+        )
+    }
+}
+
+/// Simulate `config`'s workload under `policy` with `arrivals` on the
+/// shared discrete-event engine (fast gap-cost path).
+pub fn simulate(
+    config: &SimConfig,
+    policy: &mut dyn Policy,
+    arrivals: &mut dyn ArrivalProcess,
+) -> SimReport {
+    SimWorker::new(config).run(config, policy, arrivals)
+}
+
+/// [`simulate`] on the golden `Board`-FSM reference path — every gap
+/// walks the full device state machine as before the gap-cost kernel.
+/// The equivalence suite pins `simulate` == `simulate_golden` on every
+/// report field across the whole workload corpus.
+pub fn simulate_golden(
+    config: &SimConfig,
+    policy: &mut dyn Policy,
+    arrivals: &mut dyn ArrivalProcess,
+) -> SimReport {
+    SimWorker::golden(config).run(config, policy, arrivals)
+}
+
+/// Arrival process over a borrowed prefix of a shared gap trace; the
+/// cursor lives in the owning [`PrefixSim`] so consumption survives the
+/// borrow.
+struct SliceArrivals<'a> {
+    gaps: &'a [Duration],
+    pos: &'a mut usize,
+}
+
+impl ArrivalProcess for SliceArrivals<'_> {
+    fn next_gap(&mut self) -> Duration {
+        let gap = self.gaps[*self.pos];
+        *self.pos += 1;
+        gap
+    }
+
+    fn mean(&self) -> Duration {
+        crate::coordinator::requests::trace_mean(self.gaps)
+    }
+
+    fn label(&self) -> String {
+        format!("trace({} gaps)", self.gaps.len())
+    }
+}
+
+/// A pausable lifetime simulation over a shared gap trace: run the first
+/// `p1` gaps, read the report, later *continue* to `p2 > p1` without
+/// re-simulating the prefix.
+///
+/// This is the successive-halving hot path: each rung doubles the train
+/// prefix for the surviving candidates, and re-simulating the shared
+/// prefix made rung `k` cost the sum of all earlier rungs again. A
+/// `PrefixSim` pauses at an item boundary (the DES stops exactly where a
+/// `max_items` cap stops it) and resumes by re-entering the gap-planning
+/// step the cap skipped, so the state — board ledgers, policy history,
+/// queue, clock — continues bit-for-bit as if the longer run had been
+/// simulated from scratch. [`PrefixSim::advance_to`] returns the same
+/// `SimReport`, bit-for-bit, as a fresh capped run over the prefix
+/// (pinned by the tuner's equivalence tests).
+pub struct PrefixSim {
+    core: ReplayCore,
+    engine: Engine<LifetimeEvent>,
+    policy: Box<dyn Policy>,
+    gaps: Arc<[Duration]>,
+    /// Gaps consumed so far.
+    consumed: usize,
+    /// The initial request has been scheduled.
+    started: bool,
+    /// The budget ran out (or another board refusal): no further progress
+    /// is possible, reports stay frozen — exactly like a longer
+    /// from-scratch run, which dies at the same event.
+    dead: bool,
+    ledger: RunLedger,
+}
+
+impl PrefixSim {
+    /// A paused simulation of `config`'s workload under `policy` over
+    /// `gaps`, positioned before the first request.
+    pub fn new(config: &SimConfig, policy: Box<dyn Policy>, gaps: Arc<[Duration]>) -> PrefixSim {
+        assert!(!gaps.is_empty(), "empty gap trace");
+        let core = ReplayCore::from_config(config);
+        let slot = core
+            .slot_id("lstm")
+            .expect("the paper platform programs the lstm image");
+        let ledger = RunLedger::new(config, slot);
+        PrefixSim {
+            core,
+            engine: Engine::new(),
+            policy,
+            gaps,
+            consumed: 0,
+            started: false,
+            dead: false,
+            ledger,
+        }
+    }
+
+    /// Gaps consumed so far.
+    pub fn consumed(&self) -> usize {
+        self.consumed
+    }
+
+    /// Run (or continue) the simulation through the first `prefix` gaps
+    /// (`prefix + 1` items) and report. `prefix` must not shrink and must
+    /// fit the trace; a repeated prefix just re-reports.
+    pub fn advance_to(&mut self, prefix: usize) -> SimReport {
+        assert!(
+            prefix >= 1 && prefix <= self.gaps.len(),
+            "prefix {prefix} outside 1..={}",
+            self.gaps.len()
+        );
+        assert!(
+            prefix >= self.consumed,
+            "prefix {prefix} would rewind past {} consumed gaps",
+            self.consumed
+        );
+        if (!self.dead && prefix > self.consumed) || !self.started {
+            self.ledger.max_items = prefix as u64 + 1;
+            if !self.started {
+                self.started = true;
+                self.engine.schedule_at(SimTime::ZERO, LifetimeEvent::Request);
+            } else {
+                // the previous cap stopped after serving its final item,
+                // skipping that item's gap plan; re-enter exactly there
+                self.engine.resume();
+                self.plan_pending_gap();
+            }
+            if !self.dead {
+                let gaps = &self.gaps[..prefix];
+                let mut arrivals = SliceArrivals {
+                    gaps,
+                    pos: &mut self.consumed,
+                };
+                let mut state = LifetimeState {
+                    core: &mut self.core,
+                    policy: self.policy.as_mut(),
+                    arrivals: &mut arrivals,
+                    ledger: &mut self.ledger,
+                };
+                self.engine.run(&mut state, u64::MAX, |ctx, st, event| match event {
+                    LifetimeEvent::Request => st.on_request(ctx),
+                });
+                self.dead = self.ledger.exhausted;
+            }
+        }
+        self.report(prefix)
+    }
+
+    /// The gap-planning step for the last served item — what a longer
+    /// from-scratch run would have done inside the handler before the
+    /// old cap stopped it.
+    fn plan_pending_gap(&mut self) {
+        let gap = self.gaps[self.consumed];
+        self.consumed += 1;
+        let arrival = self.engine.now().as_duration();
+        if plan_gap(
+            &mut self.core,
+            self.policy.as_mut(),
+            &mut self.ledger,
+            arrival,
+            gap,
+        )
+        .is_ok()
+        {
+            self.engine.schedule_in(gap, LifetimeEvent::Request);
+        } else {
+            self.dead = true;
+        }
+    }
+
+    /// The report a fresh capped run over `gaps[..prefix]` would produce.
+    fn report(&self, prefix: usize) -> SimReport {
+        build_report(
+            self.policy.label(),
+            format!("trace({prefix} gaps)"),
+            crate::coordinator::requests::trace_mean(&self.gaps[..prefix]),
+            &self.ledger,
+            &self.core,
+            self.engine.now(),
+        )
     }
 }
 
@@ -264,6 +553,7 @@ mod tests {
     use crate::device::rails::PowerSaving;
     use crate::energy::analytical::Analytical;
     use crate::strategies::strategy::{build, IdleWaiting, OnOff, Oracle, Timeout};
+    use crate::testing::assert_sim_reports_bit_identical as assert_reports_identical;
 
     fn capped_config(t_req_ms: f64, max_items: u64) -> SimConfig {
         let mut cfg = paper_default();
@@ -479,6 +769,76 @@ mod tests {
         assert!((r.sim_time.millis() - 360.0).abs() < 1e-9, "{}", r.sim_time.millis());
         // Eq 4 lifetime is derived from items, not the clock
         assert!((r.lifetime.millis() - 400.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reused_worker_reports_are_bit_identical_to_fresh_runs() {
+        let cfg = capped_config(40.0, 200);
+        let mut worker = SimWorker::new(&cfg);
+        // run an unrelated policy first to dirty every ledger
+        let mut arr = Poisson::new(Duration::from_millis(5.0), Duration::from_millis(0.05), 3);
+        let _ = worker.run(&cfg, &mut OnOff, &mut arr);
+        for seed in [1u64, 9, 42] {
+            let poisson =
+                || Poisson::new(Duration::from_millis(90.0), Duration::from_millis(0.05), seed);
+            let mut arr = poisson();
+            let reused = worker.run(&cfg, &mut IdleWaiting::baseline(), &mut arr);
+            let mut arr = poisson();
+            let fresh = simulate(&cfg, &mut IdleWaiting::baseline(), &mut arr);
+            assert_reports_identical(&reused, &fresh, &format!("seed {seed}"));
+        }
+    }
+
+    #[test]
+    fn fast_path_matches_golden_reference() {
+        let cfg = capped_config(40.0, 300);
+        let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
+        for spec in PolicySpec::ALL {
+            let poisson =
+                || Poisson::new(Duration::from_millis(80.0), Duration::from_millis(0.05), 7);
+            let mut policy = build(spec, &model);
+            let mut arr = poisson();
+            let fast = simulate(&cfg, policy.as_mut(), &mut arr);
+            let mut policy = build(spec, &model);
+            let mut arr = poisson();
+            let golden = simulate_golden(&cfg, policy.as_mut(), &mut arr);
+            assert_reports_identical(&fast, &golden, spec.name());
+        }
+    }
+
+    #[test]
+    fn prefix_sim_resume_equals_from_scratch() {
+        // heavy-tailed gaps so policies actually switch behaviour
+        let gaps: Arc<[Duration]> = (0..96)
+            .map(|i| Duration::from_millis(if i % 7 == 6 { 650.0 } else { 25.0 }))
+            .collect::<Vec<_>>()
+            .into();
+        let cfg = paper_default();
+        let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
+        for spec in [
+            PolicySpec::OnOff,
+            PolicySpec::Timeout,
+            PolicySpec::WindowedQuantile,
+            PolicySpec::EmaPredictor,
+        ] {
+            let mut prefix_sim = PrefixSim::new(&cfg, build(spec, &model), gaps.clone());
+            for prefix in [12usize, 24, 48, 96] {
+                let resumed = prefix_sim.advance_to(prefix);
+                assert_eq!(prefix_sim.consumed(), prefix);
+                // from scratch: a fresh capped run over the same prefix
+                let mut capped = cfg.clone();
+                capped.workload.max_items = Some(prefix as u64 + 1);
+                let mut arr = crate::coordinator::requests::TraceReplay::new(
+                    gaps[..prefix].to_vec(),
+                );
+                let mut policy = build(spec, &model);
+                let scratch = simulate(&capped, policy.as_mut(), &mut arr);
+                assert_reports_identical(&resumed, &scratch, &format!("{spec} prefix {prefix}"));
+            }
+            // repeated prefix re-reports without advancing
+            let again = prefix_sim.advance_to(96);
+            assert_eq!(again.items, 97);
+        }
     }
 
     #[test]

@@ -2,5 +2,7 @@
 //! integration tests (offline substitute for proptest — see DESIGN.md §3).
 
 pub mod prop;
+pub mod report;
 
 pub use prop::{check, Below, Gen, InRange, Shrink};
+pub use report::assert_sim_reports_bit_identical;

@@ -1,0 +1,90 @@
+//! Bit-exact [`SimReport`] comparison.
+//!
+//! The fast-path kernel's contract is that two simulation paths (fast
+//! vs golden `Board`-FSM, resumed prefix vs from-scratch) agree on
+//! every reported quantity down to the last bit. This comparator is the
+//! single maintained field list — the simulate unit tests and the
+//! `tests/fastpath_equivalence.rs` integration suite both call it, so a
+//! new `SimReport` field cannot silently drop out of one suite's
+//! coverage.
+
+use crate::strategies::simulate::SimReport;
+
+/// Assert `a` and `b` agree on every `SimReport` field the experiments
+/// read — floats compared by bit pattern, labels by string equality.
+/// Panics with `what` as context on the first mismatch.
+pub fn assert_sim_reports_bit_identical(a: &SimReport, b: &SimReport, what: &str) {
+    assert_eq!(a.policy, b.policy, "{what}: policy label");
+    assert_eq!(a.arrival, b.arrival, "{what}: arrival label");
+    assert_eq!(a.items, b.items, "{what}: items");
+    assert_eq!(
+        a.energy_exact.joules().to_bits(),
+        b.energy_exact.joules().to_bits(),
+        "{what}: exact energy {} vs {}",
+        a.energy_exact.joules(),
+        b.energy_exact.joules()
+    );
+    assert_eq!(
+        a.energy_measured.joules().to_bits(),
+        b.energy_measured.joules().to_bits(),
+        "{what}: measured energy"
+    );
+    assert_eq!(
+        a.monitor_rel_error.to_bits(),
+        b.monitor_rel_error.to_bits(),
+        "{what}: monitor error"
+    );
+    assert_eq!(
+        a.lifetime.secs().to_bits(),
+        b.lifetime.secs().to_bits(),
+        "{what}: lifetime"
+    );
+    assert_eq!(a.configurations, b.configurations, "{what}: configurations");
+    assert_eq!(a.power_ons, b.power_ons, "{what}: power-ons");
+    assert_eq!(a.late_requests, b.late_requests, "{what}: late requests");
+    assert_eq!(a.decisions, b.decisions, "{what}: decisions");
+    assert_eq!(
+        a.mean_latency.secs().to_bits(),
+        b.mean_latency.secs().to_bits(),
+        "{what}: mean latency"
+    );
+    assert_eq!(
+        a.sim_time.secs().to_bits(),
+        b.sim_time.secs().to_bits(),
+        "{what}: clock"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_default;
+    use crate::coordinator::requests::Periodic;
+    use crate::strategies::simulate::simulate;
+    use crate::strategies::strategy::IdleWaiting;
+    use crate::util::units::Duration;
+
+    fn report(items: u64) -> SimReport {
+        let mut cfg = paper_default();
+        cfg.workload.max_items = Some(items);
+        let mut arrivals = Periodic {
+            period: Duration::from_millis(40.0),
+        };
+        simulate(&cfg, &mut IdleWaiting::baseline(), &mut arrivals)
+    }
+
+    #[test]
+    fn identical_reports_pass() {
+        let a = report(10);
+        let b = report(10);
+        assert_sim_reports_bit_identical(&a, &b, "identical runs");
+    }
+
+    #[test]
+    #[should_panic(expected = "differs: items")]
+    fn differing_reports_panic_with_context() {
+        let a = report(10);
+        let b = report(11);
+        assert_sim_reports_bit_identical(&a, &b, "differs");
+    }
+}

@@ -12,6 +12,21 @@
 //! The trace is split **chronologically** (first `split` fraction trains,
 //! the rest validates): shuffling gaps would leak the heavy-tail
 //! structure the predictors are supposed to discover online.
+//!
+//! Three hot-path properties keep a tuning run cheap without touching
+//! its output:
+//!
+//! * the parsed trace is loaded once and shared (`Arc<[Duration]>`) —
+//!   evaluations slice it, they never copy it;
+//! * candidates with identical parameter points are **deduplicated** at
+//!   DES time (random pools collide often): one simulation per distinct
+//!   point, every duplicate logs the shared score;
+//! * successive halving **carries train-prefix state across rungs** via
+//!   [`PrefixSim`]: rung `k+1` resumes each survivor's simulation where
+//!   rung `k` paused it instead of re-simulating the shared prefix —
+//!   bit-identical to from-scratch scoring, roughly half the DES work.
+
+use std::sync::{Arc, Mutex};
 
 use crate::config::loader::SimConfig;
 use crate::config::schema::{PolicyParams, PolicySpec};
@@ -19,7 +34,7 @@ use crate::coordinator::requests::TraceReplay;
 use crate::energy::analytical::Analytical;
 use crate::runner::grid::{derive_seed, Grid};
 use crate::runner::SweepRunner;
-use crate::strategies::simulate::simulate;
+use crate::strategies::simulate::{simulate, PrefixSim, SimReport};
 use crate::strategies::strategy::build_with;
 use crate::tuner::emit;
 use crate::tuner::objective::{analytical_replay, EvalMetrics, Objective};
@@ -262,23 +277,8 @@ impl TuneOutcome {
     }
 }
 
-/// Score one parameter point on a gap slice with the full DES: replay the
-/// gaps once (no cycling: the item cap is `gaps + 1`, so exactly one
-/// pass), then collapse the report per the objective.
-pub fn evaluate(
-    config: &SimConfig,
-    model: &Analytical,
-    spec: PolicySpec,
-    params: &PolicyParams,
-    objective: &Objective,
-    gaps: &[Duration],
-) -> ScoreCard {
-    assert!(!gaps.is_empty(), "evaluation needs at least one gap");
-    let mut capped = config.clone();
-    capped.workload.max_items = Some(gaps.len() as u64 + 1);
-    let mut policy = build_with(spec, model, params);
-    let mut arrivals = TraceReplay::new(gaps.to_vec());
-    let report = simulate(&capped, policy.as_mut(), &mut arrivals);
+/// Collapse a DES report into the objective's [`ScoreCard`].
+fn score_report(config: &SimConfig, objective: &Objective, report: &SimReport) -> ScoreCard {
     let items = report.items.max(1);
     let energy_mj_per_item = report.energy_exact.millijoules() / items as f64;
     // Eq 4 extrapolated: the observed span scales by budget/energy.
@@ -301,14 +301,54 @@ pub fn evaluate(
     }
 }
 
+/// Exact-identity key of a parameter point (f64 fields compared by
+/// bits), used to deduplicate candidates before DES time is spent.
+type ParamsKey = (u8, bool, u64, u64, usize, u64, u64);
+
+fn params_key(p: &PolicyParams) -> ParamsKey {
+    (
+        (p.saving.method1 as u8) | ((p.saving.method2 as u8) << 1),
+        p.timeout.is_some(),
+        p.timeout.map(|t| t.secs().to_bits()).unwrap_or(0),
+        p.ema_alpha.to_bits(),
+        p.window,
+        p.quantile.to_bits(),
+        p.seed,
+    )
+}
+
+/// Score one parameter point on a gap slice with the full DES: replay the
+/// gaps once (no cycling: the item cap is `gaps + 1`, so exactly one
+/// pass), then collapse the report per the objective.
+pub fn evaluate(
+    config: &SimConfig,
+    model: &Analytical,
+    spec: PolicySpec,
+    params: &PolicyParams,
+    objective: &Objective,
+    gaps: &[Duration],
+) -> ScoreCard {
+    assert!(!gaps.is_empty(), "evaluation needs at least one gap");
+    let mut capped = config.clone();
+    capped.workload.max_items = Some(gaps.len() as u64 + 1);
+    let mut policy = build_with(spec, model, params);
+    let mut arrivals = TraceReplay::new(gaps.to_vec());
+    let report = simulate(&capped, policy.as_mut(), &mut arrivals);
+    score_report(config, objective, &report)
+}
+
 /// Search the `tc.spec` tunable space on `gaps`, scoring via the DES on
 /// `runner`. The config's own `policy_params` are the base point:
 /// candidate 0, the pre-filter's protected survivor, and the fallback
 /// winner if nothing beats it on the train split.
+///
+/// The trace arrives `Arc`-shared: every evaluation slices it in place
+/// (and the halving rungs resume [`PrefixSim`]s over it), so a tuning
+/// run copies the parsed trace zero times.
 pub fn tune(
     config: &SimConfig,
     tc: &TuneConfig,
-    gaps: &[Duration],
+    gaps: &Arc<[Duration]>,
     runner: &SweepRunner,
 ) -> Result<TuneOutcome, TuneError> {
     if gaps.len() < 4 {
@@ -394,11 +434,13 @@ pub fn tune(
         tc,
         model: &model,
         runner,
+        gaps: gaps.clone(),
         train,
         val,
         trajectory,
         eval_counter,
         full: std::collections::BTreeMap::new(),
+        sims: std::collections::BTreeMap::new(),
     };
 
     let best_id: usize = match tc.search {
@@ -476,30 +518,38 @@ pub fn tune(
 }
 
 /// The mutable scoring state of one tuning run: the shared inputs, the
-/// trajectory log, and the cache of full-train scores by candidate id
-/// (so successive halving never re-simulates a candidate it already
-/// scored on the full split).
+/// trajectory log, the cache of full-train scores by candidate id, and
+/// the pausable per-candidate simulations that carry train-prefix state
+/// across successive-halving rungs.
 struct Search<'a> {
     config: &'a SimConfig,
     tc: &'a TuneConfig,
     model: &'a Analytical,
     runner: &'a SweepRunner,
+    /// The whole shared trace (train prefix + validation tail).
+    gaps: Arc<[Duration]>,
     train: &'a [Duration],
     val: &'a [Duration],
     trajectory: Vec<TrajectoryPoint>,
     eval_counter: usize,
     full: std::collections::BTreeMap<usize, ScoreCard>,
+    /// One pausable DES per candidate id that has reached DES scoring;
+    /// rung `k+1` resumes where rung `k` paused instead of re-simulating
+    /// the shared prefix. `Mutex` because sweep workers advance disjoint
+    /// sims in parallel (each cell locks only its own).
+    sims: std::collections::BTreeMap<usize, Mutex<PrefixSim>>,
 }
 
 impl Search<'_> {
     /// Score `cands` on the first `prefix` train gaps via the DES on the
     /// sweep runner, returning cards in candidate order. Full-train
-    /// evaluations are cached by candidate id: cached candidates are not
-    /// re-simulated and produce no duplicate trajectory rows.
+    /// evaluations are cached by candidate id (no re-simulation, no
+    /// duplicate trajectory rows); identical parameter points are
+    /// deduplicated (one simulation per distinct point, every duplicate
+    /// logs the shared score); and each candidate's simulation resumes
+    /// from the previous rung's prefix.
     fn eval_batch(&mut self, cands: &[Candidate], prefix: usize, stage: &str) -> Vec<ScoreCard> {
-        let train = self.train;
-        let slice = &train[..prefix];
-        let is_full = prefix == train.len();
+        let is_full = prefix == self.train.len();
         let todo: Vec<Candidate> = if is_full {
             cands
                 .iter()
@@ -509,18 +559,60 @@ impl Search<'_> {
         } else {
             cands.to_vec()
         };
-        let grid = Grid::new(todo.clone());
-        let (config, model, tc) = (self.config, self.model, self.tc);
-        let cards = self.runner.run(&grid, |cell| {
-            evaluate(config, model, tc.spec, &cell.params.params, &tc.objective, slice)
+        // dedupe: one representative (the first occurrence) per distinct
+        // parameter point; duplicates share its card
+        let mut reps: Vec<Candidate> = Vec::new();
+        let mut rep_of: std::collections::BTreeMap<ParamsKey, usize> =
+            std::collections::BTreeMap::new();
+        for cand in &todo {
+            rep_of.entry(params_key(&cand.params)).or_insert_with(|| {
+                reps.push(*cand);
+                reps.len() - 1
+            });
+        }
+        // every representative needs a live pausable simulation
+        for rep in &reps {
+            self.sims.entry(rep.id).or_insert_with(|| {
+                Mutex::new(PrefixSim::new(
+                    self.config,
+                    build_with(self.tc.spec, self.model, &rep.params),
+                    self.gaps.clone(),
+                ))
+            });
+        }
+        // advance the representatives' sims to this rung's prefix in
+        // parallel — every cell locks only its own sim, so results are
+        // a pure function of (candidate, prefix) and stay byte-identical
+        // at any thread count
+        let grid = Grid::new(reps);
+        let (config, tc, sims) = (self.config, self.tc, &self.sims);
+        let rep_cards: Vec<ScoreCard> = self.runner.run(&grid, |cell| {
+            let mut sim = sims
+                .get(&cell.params.id)
+                .expect("representative sim created above")
+                .lock()
+                .expect("sim lock poisoned");
+            let report = sim.advance_to(prefix);
+            score_report(config, &tc.objective, &report)
         });
+        let rep_card = |cand: &Candidate| rep_cards[rep_of[&params_key(&cand.params)]];
         let mut fresh: std::collections::BTreeMap<usize, ScoreCard> =
             std::collections::BTreeMap::new();
-        for (cand, card) in todo.iter().zip(&cards) {
-            self.log(stage, *cand, prefix, *card);
-            fresh.insert(cand.id, *card);
+        for cand in &todo {
+            let card = rep_card(cand);
+            self.log(stage, *cand, prefix, card);
+            fresh.insert(cand.id, card);
             if is_full {
-                self.full.insert(cand.id, *card);
+                self.full.insert(cand.id, card);
+            }
+        }
+        if is_full {
+            // the full-train card is cached; there is nothing left to
+            // resume, so drop the pausable sims — memory then scales with
+            // the halving survivor count, not the whole candidate pool
+            // (grid/random searches score everything at full in one batch)
+            for cand in &todo {
+                self.sims.remove(&cand.id);
             }
         }
         cands
@@ -595,8 +687,8 @@ mod tests {
     use crate::device::rails::PowerSaving;
     use crate::energy::crossover;
 
-    fn periodic(ms: f64, n: usize) -> Vec<Duration> {
-        vec![Duration::from_millis(ms); n]
+    fn periodic(ms: f64, n: usize) -> Arc<[Duration]> {
+        vec![Duration::from_millis(ms); n].into()
     }
 
     fn tc(spec: PolicySpec, search: SearchStrategy) -> TuneConfig {
@@ -650,10 +742,10 @@ mod tests {
     fn results_are_identical_at_any_thread_count() {
         let cfg = paper_default();
         // a trace that actually separates candidates
-        let mut gaps = Vec::new();
-        for i in 0..48 {
-            gaps.push(Duration::from_millis(if i % 6 == 5 { 700.0 } else { 15.0 }));
-        }
+        let gaps: Arc<[Duration]> = (0..48)
+            .map(|i| Duration::from_millis(if i % 6 == 5 { 700.0 } else { 15.0 }))
+            .collect::<Vec<_>>()
+            .into();
         for search in SearchStrategy::ALL {
             let conf = tc(PolicySpec::WindowedQuantile, search);
             let serial = tune(&cfg, &conf, &gaps, &SweepRunner::single()).unwrap();
@@ -717,12 +809,13 @@ mod tests {
         // idles through bursts instead, and it must hold up out-of-sample.
         let cfg = paper_default();
         let runner = SweepRunner::single();
-        let gaps = crate::coordinator::tracegen::generate_durations(
+        let gaps: Arc<[Duration]> = crate::coordinator::tracegen::generate_durations(
             crate::coordinator::tracegen::TraceKind::BurstyIot,
             128,
             40.0,
             1,
-        );
+        )
+        .into();
         let out = tune(
             &cfg,
             &tc(PolicySpec::WindowedQuantile, SearchStrategy::Halving),
@@ -737,6 +830,62 @@ mod tests {
             out.base_val.score
         );
         assert!(out.val_gaps >= 1 && out.train_gaps + out.val_gaps == 128);
+    }
+
+    /// The halving path resumes each candidate's DES across rungs; its
+    /// final train score must be bit-identical to a from-scratch
+    /// `evaluate` of the same point on the full train split.
+    #[test]
+    fn resumed_halving_scores_equal_from_scratch_evaluation() {
+        let cfg = paper_default();
+        let runner = SweepRunner::new(4);
+        let gaps: Arc<[Duration]> = (0..64)
+            .map(|i| Duration::from_millis(if i % 5 == 4 { 900.0 } else { 20.0 }))
+            .collect::<Vec<_>>()
+            .into();
+        let conf = tc(PolicySpec::WindowedQuantile, SearchStrategy::Halving);
+        let out = tune(&cfg, &conf, &gaps, &runner).unwrap();
+        let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
+        let train = &gaps[..out.train_gaps];
+        let scratch = evaluate(&cfg, &model, conf.spec, &out.best, &conf.objective, train);
+        assert_eq!(
+            out.best_train.score.to_bits(),
+            scratch.score.to_bits(),
+            "resumed {} vs scratch {}",
+            out.best_train.score,
+            scratch.score
+        );
+        assert_eq!(out.best_train.metrics.items, scratch.metrics.items);
+        assert_eq!(
+            out.best_train.metrics.energy_mj_per_item.to_bits(),
+            scratch.metrics.energy_mj_per_item.to_bits()
+        );
+    }
+
+    /// Identical parameter points are simulated once: every duplicate
+    /// candidate's trajectory rows carry the exact shared score.
+    #[test]
+    fn duplicate_candidates_share_their_representative_score() {
+        let cfg = paper_default();
+        let runner = SweepRunner::single();
+        let gaps = periodic(40.0, 16);
+        // rows with equal (params, gaps) must carry bit-equal scores —
+        // with dedupe they literally come from one simulation
+        let mut conf = tc(PolicySpec::Timeout, SearchStrategy::Random);
+        conf.budget = 12;
+        let out = tune(&cfg, &conf, &gaps, &runner).unwrap();
+        let des_rows: Vec<_> = out.trajectory.iter().filter(|p| p.metrics.is_some()).collect();
+        for a in &des_rows {
+            for b in &des_rows {
+                if a.gaps == b.gaps && a.params == b.params {
+                    assert_eq!(
+                        a.score.to_bits(),
+                        b.score.to_bits(),
+                        "equal points must share one simulation's score"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -112,7 +112,7 @@ fn cli_guide_covers_every_subcommand() {
     let guide = std::fs::read_to_string(repo_root().join("docs/CLI.md")).unwrap();
     for cmd in [
         "fig2", "exp1", "exp2", "exp3", "exp4", "gen-trace", "tune", "validate", "ablate",
-        "multi", "serve", "plan", "all",
+        "multi", "serve", "plan", "bench", "all",
     ] {
         assert!(
             guide.contains(&format!("`repro {cmd}`")),

@@ -5,10 +5,15 @@
 //! and step sizes.
 
 use idlewait::config::paper_default;
+use idlewait::coordinator::requests::Periodic;
 use idlewait::experiments::exp4_policies::{self, Exp4Config};
 use idlewait::experiments::{ablation, exp2, exp3};
 use idlewait::runner::{Grid, SweepRunner};
+use idlewait::strategies::simulate::SimWorker;
+use idlewait::strategies::strategy::OnOff;
 use idlewait::testing::prop::{check, Below, InRange};
+use idlewait::util::csv::Csv;
+use idlewait::util::units::Duration;
 
 /// exp2 at a coarse step: threads 1 vs N → byte-identical CSV.
 #[test]
@@ -115,6 +120,57 @@ fn ablation_grids_identical_at_any_thread_count() {
             "multi-accel, threads={threads}"
         );
     }
+}
+
+/// Adversarially uneven cell costs for the work-stealing runner: a grid
+/// whose DES cells span three orders of magnitude of work (2 → 2000
+/// simulated items), laid out so a static contiguous chunking would pack
+/// all heavy cells into one worker. The rendered CSV must stay
+/// byte-identical at `--threads` 1, 4 and 0 (= auto), per the CLI's
+/// thread-count semantics.
+#[test]
+fn uneven_cost_grid_csv_identical_at_threads_1_4_auto() {
+    let cfg = paper_default();
+    // heavy cells first, then a long cheap tail — the worst case for
+    // static chunking, irrelevant for index-keyed result slots
+    let mut items_per_cell: Vec<u64> = vec![2_000, 1_500, 1_000];
+    items_per_cell.extend((0..57u64).map(|i| 2 + (i % 7) * 30));
+    let grid = Grid::new(items_per_cell);
+
+    let sweep = |runner: &SweepRunner| -> String {
+        let rows = runner.run_with_state(
+            &grid,
+            || SimWorker::new(&cfg),
+            |worker, cell| {
+                let mut capped = cfg.clone();
+                capped.workload.max_items = Some(*cell.params);
+                let mut arrivals = Periodic {
+                    period: Duration::from_millis(40.0),
+                };
+                let report = worker.run(&capped, &mut OnOff, &mut arrivals);
+                (
+                    cell.index,
+                    *cell.params,
+                    report.energy_exact.millijoules(),
+                    report.configurations,
+                )
+            },
+        );
+        let mut csv = Csv::new(&["cell", "items", "energy_mj", "configurations"]);
+        for (index, items, energy, configs) in rows {
+            csv.row(&[
+                index.to_string(),
+                items.to_string(),
+                format!("{energy}"),
+                configs.to_string(),
+            ]);
+        }
+        csv.render()
+    };
+
+    let reference = sweep(&SweepRunner::single());
+    assert_eq!(sweep(&SweepRunner::new(4)), reference, "--threads 4");
+    assert_eq!(sweep(&SweepRunner::auto()), reference, "--threads 0 (auto)");
 }
 
 /// Property over the raw runner: per-cell PRNG streams depend only on

@@ -115,7 +115,7 @@ fn tune_rejects_bad_inputs() {
 #[test]
 fn tuned_flags_line_is_accepted_by_serve_verbatim() {
     let cfg = paper_default();
-    let gaps = TraceReplay::from_file(bursty_trace()).unwrap().gaps().to_vec();
+    let gaps = TraceReplay::from_file(bursty_trace()).unwrap().shared_gaps();
     let tc = TuneConfig {
         search: SearchStrategy::Halving,
         budget: 16,
