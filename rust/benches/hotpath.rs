@@ -23,11 +23,20 @@ fn main() {
 
     // --- L3 DES ---
     // Shared bodies with `repro bench --json` (bench::targets), so the
-    // two harnesses measure the identical workload; per-worker SimWorker
-    // reuse inside is the production sweep shape since the gap-cost
-    // kernel.
-    targets::des_idle_waiting(&mut bench, "DES: 10k idle-waiting items", &cfg, 10_000);
-    targets::des_onoff(&mut bench, "DES: 10k on-off items (config FSM each)", &cfg, 10_000);
+    // two harnesses measure the identical workload. The unsuffixed DES
+    // targets run the batched structure-of-arrays kernel (the production
+    // sweep/tuner shape); the `scalar` pair runs the per-gap event-driven
+    // fast path and the `golden` target the pre-kernel Board FSM, for an
+    // in-run three-tier speedup readout.
+    targets::des_idle_waiting(&mut bench, "DES: 10k idle-waiting items (batched)", &cfg, 10_000);
+    targets::des_onoff(&mut bench, "DES: 10k on-off items (batched)", &cfg, 10_000);
+    targets::des_idle_waiting_scalar(
+        &mut bench,
+        "DES scalar fast path: 10k idle-waiting items",
+        &cfg,
+        10_000,
+    );
+    targets::des_onoff_scalar(&mut bench, "DES scalar fast path: 10k on-off items", &cfg, 10_000);
     // the pre-kernel reference path, for an in-run speedup readout
     targets::des_onoff_golden(&mut bench, "DES golden reference: 10k on-off items", &cfg, 10_000);
 

@@ -29,10 +29,67 @@ fn capped(config: &SimConfig, items: u64) -> SimConfig {
     cfg
 }
 
+/// A materialized 40 ms gap trace for `items` items (`items − 1` gaps),
+/// plus the label/mean [`SimWorker::run_batch`] expects.
+fn trace_for(items: u64) -> (Vec<Duration>, String) {
+    let gaps = vec![Duration::from_millis(40.0); items.saturating_sub(1) as usize];
+    let label = format!("trace({} gaps)", gaps.len());
+    (gaps, label)
+}
+
 /// Lifetime DES, Idle-Waiting (configure once, idle every gap): `items`
-/// items per iteration on a reused [`SimWorker`] — the production sweep
-/// shape. Throughput unit: simulated items.
+/// items per iteration on a reused [`SimWorker`] over a materialized
+/// trace — the **batched** structure-of-arrays kernel, the production
+/// sweep/tuner shape. Throughput unit: simulated items.
 pub fn des_idle_waiting<'a>(
+    bench: &'a mut Bench,
+    name: &str,
+    config: &SimConfig,
+    items: u64,
+) -> &'a BenchResult {
+    let cfg = capped(config, items);
+    let mut worker = SimWorker::new(&cfg);
+    let (gaps, label) = trace_for(items);
+    bench.bench_units(name, items as f64, move || {
+        black_box(
+            worker
+                .run_batch(
+                    &cfg,
+                    &mut IdleWaiting::baseline(),
+                    &gaps,
+                    &label,
+                    Duration::from_millis(40.0),
+                )
+                .items,
+        );
+    })
+}
+
+/// Lifetime DES, On-Off (power-cycle + full configuration every item) on
+/// the batched kernel: the configuration-preamble hot loop. Throughput
+/// unit: simulated items.
+pub fn des_onoff<'a>(
+    bench: &'a mut Bench,
+    name: &str,
+    config: &SimConfig,
+    items: u64,
+) -> &'a BenchResult {
+    let cfg = capped(config, items);
+    let mut worker = SimWorker::new(&cfg);
+    let (gaps, label) = trace_for(items);
+    bench.bench_units(name, items as f64, move || {
+        black_box(
+            worker
+                .run_batch(&cfg, &mut OnOff, &gaps, &label, Duration::from_millis(40.0))
+                .items,
+        );
+    })
+}
+
+/// [`des_idle_waiting`]'s workload on the scalar event-driven fast path
+/// (per-gap `execute_plan` through the event queue) — the baseline the
+/// batched kernel's ≥2× gate is measured against.
+pub fn des_idle_waiting_scalar<'a>(
     bench: &'a mut Bench,
     name: &str,
     config: &SimConfig,
@@ -50,10 +107,8 @@ pub fn des_idle_waiting<'a>(
     })
 }
 
-/// Lifetime DES, On-Off (power-cycle + full configuration every item):
-/// the configuration-preamble hot loop. Throughput unit: simulated
-/// items.
-pub fn des_onoff<'a>(
+/// [`des_onoff`]'s workload on the scalar event-driven fast path.
+pub fn des_onoff_scalar<'a>(
     bench: &'a mut Bench,
     name: &str,
     config: &SimConfig,
@@ -112,10 +167,14 @@ mod tests {
         assert_eq!(r.units_per_iter, 5.0);
         let r = des_onoff(&mut bench, "onoff", &cfg, 5);
         assert!(r.throughput() > 0.0);
+        let r = des_idle_waiting_scalar(&mut bench, "iw-scalar", &cfg, 5);
+        assert_eq!(r.units_per_iter, 5.0);
+        let r = des_onoff_scalar(&mut bench, "onoff-scalar", &cfg, 5);
+        assert!(r.throughput() > 0.0);
         let r = des_onoff_golden(&mut bench, "golden", &cfg, 5);
         assert!(r.ns_per_iter() > 0.0);
         let r = event_queue(&mut bench, "queue");
         assert_eq!(r.units_per_iter, 1000.0);
-        assert_eq!(bench.results().len(), 4);
+        assert_eq!(bench.results().len(), 6);
     }
 }

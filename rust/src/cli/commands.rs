@@ -21,6 +21,8 @@
 //! repro plan --period 75              # policy recommendation
 //! repro bench [--json PATH] [--quick] [--filter NAME] [--items N] [--threads N]
 //!                                     # in-process perf benchmarks, optionally as JSON
+//! repro bench-compare <before.json> <after.json> [--out PATH] [--max-regress 0.25]
+//!                                     # before/after markdown table + regression gate
 //! repro all [--threads N]             # every experiment, paper order
 //! ```
 //!
@@ -63,6 +65,7 @@ COMMANDS:
   serve       Duty-cycle serving with REAL LSTM inference via PJRT
   plan        Recommend a strategy for a given request period
   bench       Time the hot paths (DES, sweeps, tuner); --json emits {name, iters, ns_per_iter, throughput}
+  bench-compare  Diff two bench --json recordings: speedup table + regression verdict
   all         Run every experiment in paper order
 
 Run 'repro <command> --help' for options.";
@@ -151,6 +154,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "serve" => cmd_serve(rest),
         "plan" => cmd_plan(rest),
         "bench" => cmd_bench(rest),
+        "bench-compare" => cmd_bench_compare(rest),
         "all" => cmd_all(rest),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -768,6 +772,21 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Every target `repro bench` can register, in registration order — the
+/// vocabulary `--filter` matches against, listed verbatim when a filter
+/// matches nothing.
+const BENCH_TARGETS: [&str; 9] = [
+    "des_idle_waiting_items",
+    "des_onoff_items",
+    "des_idle_waiting_scalar_items",
+    "des_onoff_scalar_items",
+    "des_onoff_golden_items",
+    "event_queue_events",
+    "sweep_exp2_cells",
+    "sweep_exp4_cells",
+    "tune_halving_evals",
+];
+
 /// `repro bench`: time the hot paths in-process and (optionally) write
 /// the results as machine-readable JSON, schema
 /// `[{name, iters, ns_per_iter, throughput}]` — so the perf trajectory
@@ -816,6 +835,17 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
     }
     if want("des_onoff_items") {
         targets::des_onoff(&mut bench, "des_onoff_items", &config, items);
+    }
+    if want("des_idle_waiting_scalar_items") {
+        targets::des_idle_waiting_scalar(
+            &mut bench,
+            "des_idle_waiting_scalar_items",
+            &config,
+            items,
+        );
+    }
+    if want("des_onoff_scalar_items") {
+        targets::des_onoff_scalar(&mut bench, "des_onoff_scalar_items", &config, items);
     }
     if want("des_onoff_golden_items") {
         targets::des_onoff_golden(&mut bench, "des_onoff_golden_items", &config, items);
@@ -879,8 +909,9 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
 
     if bench.results().is_empty() {
         bail!(
-            "--filter '{}' matched no benchmark",
-            filter.unwrap_or_default()
+            "--filter '{}' matched no benchmark; valid targets:\n  {}",
+            filter.unwrap_or_default(),
+            BENCH_TARGETS.join("\n  ")
         );
     }
     print!("{}", bench.render());
@@ -889,6 +920,169 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
         body.push('\n');
         std::fs::write(path, body).with_context(|| format!("writing {path}"))?;
         println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// One recorded `repro bench --json` row: the comparison key plus the
+/// per-iteration cost the regression gate is applied to.
+struct RecordedBench {
+    name: String,
+    ns_per_iter: f64,
+}
+
+/// Parse a `repro bench --json` recording
+/// (`[{name, iters, ns_per_iter, throughput}]`) into comparison rows.
+fn load_bench_rows(path: &str) -> Result<Vec<RecordedBench>> {
+    use crate::util::json::Json;
+    let body = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let json = Json::parse(&body).with_context(|| format!("parsing {path}"))?;
+    let rows = json
+        .as_arr()
+        .with_context(|| format!("{path}: expected a JSON array of bench results"))?;
+    rows.iter()
+        .map(|row| {
+            let name = row
+                .get("name")
+                .and_then(Json::as_str)
+                .with_context(|| format!("{path}: result row without a string 'name'"))?;
+            let ns_per_iter = row
+                .get("ns_per_iter")
+                .and_then(Json::as_f64)
+                .with_context(|| format!("{path}: '{name}' lacks a numeric 'ns_per_iter'"))?;
+            Ok(RecordedBench {
+                name: name.to_string(),
+                ns_per_iter,
+            })
+        })
+        .collect()
+}
+
+/// `repro bench-compare <before.json> <after.json>`: diff two recorded
+/// bench runs into a markdown before/after table with per-target speedup
+/// ratios, and exit non-zero when any target shared by both recordings
+/// slowed down by more than `--max-regress` (default 25%). Targets
+/// present in only one file are listed but never gate. The `--out`
+/// report is written before the gate fires, so CI can upload it for a
+/// failing run too.
+fn cmd_bench_compare(argv: &[String]) -> Result<()> {
+    // two leading positionals, then ordinary --key value options
+    let mut positionals: Vec<String> = Vec::new();
+    let mut options: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let token = &argv[i];
+        if let Some(name) = token.strip_prefix("--") {
+            options.push(token.clone());
+            let takes_value = ["out", "max-regress"].contains(&name) && !name.contains('=');
+            if takes_value {
+                i += 1;
+                if let Some(value) = argv.get(i) {
+                    options.push(value.clone());
+                }
+            }
+        } else {
+            positionals.push(token.clone());
+        }
+        i += 1;
+    }
+    let args = Args::parse(&options, &[("out", true), ("max-regress", true), ("help", false)])?;
+    if help_and_done(&args, "bench-compare") {
+        return Ok(());
+    }
+    let [before_path, after_path] = positionals.as_slice() else {
+        bail!(
+            "bench-compare takes exactly two positional arguments: \
+             <before.json> <after.json> (got {})",
+            positionals.len()
+        );
+    };
+    let max_regress = args.f64_opt("max-regress")?.unwrap_or(0.25);
+    if !(max_regress.is_finite() && max_regress >= 0.0) {
+        bail!("--max-regress must be a non-negative fraction (got {max_regress})");
+    }
+    let before = load_bench_rows(before_path)?;
+    let after = load_bench_rows(after_path)?;
+    let lookup_after = |name: &str| {
+        after
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.ns_per_iter)
+    };
+
+    let mut lines = vec![
+        format!("# bench-compare: {before_path} \u{2192} {after_path}"),
+        String::new(),
+        "| target | before ns/iter | after ns/iter | speedup | verdict |".to_string(),
+        "|---|---:|---:|---:|---|".to_string(),
+    ];
+    let mut shared = 0usize;
+    let mut regressed: Vec<&str> = Vec::new();
+    for row in &before {
+        let Some(after_ns) = lookup_after(&row.name) else {
+            lines.push(format!(
+                "| {} | {:.1} | \u{2014} | \u{2014} | removed (ungated) |",
+                row.name, row.ns_per_iter
+            ));
+            continue;
+        };
+        shared += 1;
+        let speedup = row.ns_per_iter / after_ns;
+        let verdict = if after_ns / row.ns_per_iter - 1.0 > max_regress {
+            regressed.push(&row.name);
+            "**REGRESS**"
+        } else if speedup >= 1.0 {
+            "ok"
+        } else {
+            "ok (within gate)"
+        };
+        lines.push(format!(
+            "| {} | {:.1} | {:.1} | {:.2}\u{d7} | {verdict} |",
+            row.name, row.ns_per_iter, after_ns, speedup
+        ));
+    }
+    for row in &after {
+        if !before.iter().any(|b| b.name == row.name) {
+            lines.push(format!(
+                "| {} | \u{2014} | {:.1} | \u{2014} | new (ungated) |",
+                row.name, row.ns_per_iter
+            ));
+        }
+    }
+    lines.push(String::new());
+    lines.push(if regressed.is_empty() {
+        format!(
+            "verdict: PASS \u{2014} {shared} shared target(s), none slower than \
+             {:.0}% over baseline",
+            max_regress * 100.0
+        )
+    } else {
+        format!(
+            "verdict: FAIL \u{2014} {} of {shared} shared target(s) regressed beyond \
+             {:.0}%: {}",
+            regressed.len(),
+            max_regress * 100.0,
+            regressed.join(", ")
+        )
+    });
+    lines.push(String::new());
+    let report = lines.join("\n");
+
+    print!("{report}");
+    if let Some(path) = args.str_opt("out") {
+        std::fs::write(path, &report).with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    if shared == 0 {
+        bail!("{before_path} and {after_path} share no benchmark names \u{2014} nothing to gate");
+    }
+    if !regressed.is_empty() {
+        bail!(
+            "{} benchmark target(s) regressed beyond {:.0}%: {}",
+            regressed.len(),
+            max_regress * 100.0,
+            regressed.join(", ")
+        );
     }
     Ok(())
 }
@@ -1026,8 +1220,21 @@ mod tests {
     #[test]
     fn helps_run() {
         for cmd in [
-            "fig2", "exp1", "exp2", "exp3", "exp4", "gen-trace", "tune", "validate", "ablate",
-            "multi", "serve", "plan", "bench", "all",
+            "fig2",
+            "exp1",
+            "exp2",
+            "exp3",
+            "exp4",
+            "gen-trace",
+            "tune",
+            "validate",
+            "ablate",
+            "multi",
+            "serve",
+            "plan",
+            "bench",
+            "bench-compare",
+            "all",
         ] {
             run(&sv(&[cmd, "--help"])).unwrap();
         }
@@ -1064,8 +1271,83 @@ mod tests {
 
     #[test]
     fn bench_rejects_an_unmatched_filter_and_zero_items() {
-        assert!(run(&sv(&["bench", "--quick", "--filter", "no-such-bench"])).is_err());
+        let err = run(&sv(&["bench", "--quick", "--filter", "no-such-bench"])).unwrap_err();
+        // the zero-match error enumerates the valid target vocabulary
+        for name in BENCH_TARGETS {
+            assert!(err.to_string().contains(name), "missing {name}: {err}");
+        }
         assert!(run(&sv(&["bench", "--items", "0"])).is_err());
+    }
+
+    #[test]
+    fn bench_compare_gates_regressions_and_reports_speedups() {
+        let dir = std::env::temp_dir().join("idlewait_bench_compare");
+        std::fs::create_dir_all(&dir).unwrap();
+        let write = |name: &str, body: &str| {
+            let path = dir.join(name);
+            std::fs::write(&path, body).unwrap();
+            path.to_str().unwrap().to_string()
+        };
+        let before = write(
+            "before.json",
+            r#"[{"name":"a","iters":3,"ns_per_iter":1000.0,"throughput":1.0},
+                {"name":"b","iters":3,"ns_per_iter":500.0,"throughput":2.0},
+                {"name":"gone","iters":3,"ns_per_iter":9.0,"throughput":1.0}]"#,
+        );
+        // a 2.5x faster, b 4% slower (inside the default 25% gate),
+        // "gone" removed and "fresh" added (both ungated)
+        let faster = write(
+            "faster.json",
+            r#"[{"name":"a","iters":3,"ns_per_iter":400.0,"throughput":2.5},
+                {"name":"b","iters":3,"ns_per_iter":520.0,"throughput":1.9},
+                {"name":"fresh","iters":3,"ns_per_iter":7.0,"throughput":1.0}]"#,
+        );
+        run(&sv(&["bench-compare", &before, &faster])).unwrap();
+        // ...but a tighter gate catches b's 4% drift
+        assert!(run(&sv(&["bench-compare", &before, &faster, "--max-regress", "0.01"])).is_err());
+
+        // a 40% slower: fails the default gate, naming the target
+        let slower = write(
+            "slower.json",
+            r#"[{"name":"a","iters":3,"ns_per_iter":1400.0,"throughput":0.7},
+                {"name":"b","iters":3,"ns_per_iter":500.0,"throughput":2.0}]"#,
+        );
+        let err = run(&sv(&["bench-compare", &before, &slower])).unwrap_err();
+        assert!(err.to_string().contains('a'), "{err}");
+        // --out lands the markdown report even when the gate fires
+        let out = dir.join("report.md");
+        let out_str = out.to_str().unwrap();
+        let _ = run(&sv(&["bench-compare", &before, &slower, "--out", out_str]));
+        let report = std::fs::read_to_string(&out).unwrap();
+        assert!(report.contains("| target | before ns/iter | after ns/iter | speedup | verdict |"));
+        assert!(report.contains("REGRESS"), "{report}");
+        assert!(report.contains("removed (ungated)"), "{report}");
+        assert!(report.contains("verdict: FAIL"), "{report}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bench_compare_rejects_bad_invocations() {
+        // wrong arity, missing files, and disjoint recordings all error
+        assert!(run(&sv(&["bench-compare"])).is_err());
+        assert!(run(&sv(&["bench-compare", "/no/such/a.json"])).is_err());
+        assert!(run(&sv(&["bench-compare", "/no/such/a.json", "/no/such/b.json"])).is_err());
+        let dir = std::env::temp_dir().join("idlewait_bench_compare_disjoint");
+        std::fs::create_dir_all(&dir).unwrap();
+        let a = dir.join("a.json");
+        let b = dir.join("b.json");
+        std::fs::write(&a, r#"[{"name":"x","iters":1,"ns_per_iter":1.0,"throughput":1.0}]"#)
+            .unwrap();
+        std::fs::write(&b, r#"[{"name":"y","iters":1,"ns_per_iter":1.0,"throughput":1.0}]"#)
+            .unwrap();
+        let err = run(&sv(&[
+            "bench-compare",
+            a.to_str().unwrap(),
+            b.to_str().unwrap(),
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("share no benchmark"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -61,13 +61,18 @@ pub fn run(model: FpgaModel) -> Exp1Result {
 /// sweep engine.
 pub fn run_threaded(model: FpgaModel, runner: &SweepRunner) -> Exp1Result {
     let bitstream = Bitstream::lstm_accelerator(model);
+    // the stored image depends on compression only, not on the SPI grid
+    // point: synthesize (and compress) it once per variant instead of
+    // once per cell — 66 cells share two images
+    let plain = StoredImage::new(bitstream.clone(), false);
+    let compressed = StoredImage::new(bitstream, true);
     let grid = Grid::new(SpiConfig::sweep());
     let points = runner.run(&grid, |cell| {
         let spi = *cell.params;
-        let image = StoredImage::new(bitstream.clone(), spi.compressed);
+        let image = if spi.compressed { &compressed } else { &plain };
         SweepPoint {
             spi,
-            profile: ConfigProfile::compute(model, spi, &image),
+            profile: ConfigProfile::compute(model, spi, image),
         }
     });
     Exp1Result { model, points }

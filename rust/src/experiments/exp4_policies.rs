@@ -16,11 +16,13 @@
 //! the [`SimReport`](crate::strategies::simulate::SimReport) ledger.
 //!
 //! Determinism: every variant row sees the *same* arrival stream per
-//! arrival column (stream seeds derive from the experiment seed and the
-//! arrival column only), randomized policies draw from a per-cell stream
-//! derived from the experiment seed and the cell index, and cells are
-//! pure functions of their grid point — so the CSV is byte-identical at
-//! any `--threads N`.
+//! arrival column — materialized once per (arrival, seed) pair and
+//! Arc-shared across rows, then replayed on the batched
+//! [`SimWorker::run_batch`] kernel (stream seeds derive from the
+//! experiment seed and the arrival column only) — randomized policies
+//! draw from a per-cell stream derived from the experiment seed and the
+//! cell index, and cells are pure functions of their grid point — so the
+//! CSV is byte-identical at any `--threads N`.
 
 use std::sync::Arc;
 
@@ -124,6 +126,15 @@ pub fn variants() -> Vec<PolicyVariant> {
         },
     });
     out
+}
+
+/// One materialized arrival column: the gap stream every variant row of
+/// the column replays (drawn once, Arc-shared), plus the generating
+/// process's label and nominal mean captured before the draw.
+struct ArrivalColumn {
+    label: String,
+    mean: Duration,
+    gaps: Arc<[Duration]>,
 }
 
 /// Per-run parameters.
@@ -266,33 +277,18 @@ pub fn run_threaded(
         arrival_axis.push((ARRIVALS.len(), "trace"));
     }
 
-    // the hand-picked variants plus the auto-searched `tuned` row
-    let bursty = &corpus
+    // One *materialized* stream per (arrival, seed) column, Arc-shared by
+    // every variant row: the generator runs once per column instead of
+    // once per cell, and cells replay the shared gaps on the batched
+    // kernel. Label and nominal mean are captured from the process
+    // *before* drawing, so reports (and the Eq 4 lifetime) match the
+    // generator-driven path field for field.
+    let n_gaps = e4.items.saturating_sub(1) as usize;
+    let columns: Vec<ArrivalColumn> = arrival_axis
         .iter()
-        .find(|(name, _)| *name == "bursty-iot")
-        .expect("bursty-iot corpus column present")
-        .1;
-    let mut vs = variants();
-    vs.push(
-        tuned_variant(config, e4, bursty, runner)
-            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?,
-    );
-
-    let grid = cross(&vs, &arrival_axis);
-    // one capped config for every cell (hoisted: cells used to clone it),
-    // and one reusable DES worker per thread (platform + event queue
-    // built once per worker instead of once per cell)
-    let mut capped = config.clone();
-    capped.workload.max_items = Some(e4.items);
-    let capped = &capped;
-    let rows = runner.run_with_state(
-        &grid,
-        || SimWorker::new(capped),
-        |worker, cell| {
-            let (variant, (arrival_idx, arrival_name)) = cell.params;
-            // one stream per arrival column, shared by every variant row
+        .map(|(arrival_idx, arrival_name)| {
             let stream_seed = derive_seed(e4.seed, *arrival_idx as u64);
-            let mut arrivals: Box<dyn ArrivalProcess> = match *arrival_name {
+            let mut process: Box<dyn ArrivalProcess> = match *arrival_name {
                 "periodic" => Box::new(Periodic { period }),
                 "jittered" => Box::new(Jittered::new(
                     period,
@@ -317,6 +313,42 @@ pub fn run_threaded(
                         .clone(),
                 )),
             };
+            let label = process.label();
+            let mean = process.mean();
+            let gaps: Arc<[Duration]> = (0..n_gaps)
+                .map(|_| process.next_gap())
+                .collect::<Vec<_>>()
+                .into();
+            ArrivalColumn { label, mean, gaps }
+        })
+        .collect();
+
+    // the hand-picked variants plus the auto-searched `tuned` row
+    let bursty = &corpus
+        .iter()
+        .find(|(name, _)| *name == "bursty-iot")
+        .expect("bursty-iot corpus column present")
+        .1;
+    let mut vs = variants();
+    vs.push(
+        tuned_variant(config, e4, bursty, runner)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?,
+    );
+
+    let grid = cross(&vs, &arrival_axis);
+    // one capped config for every cell (hoisted: cells used to clone it),
+    // and one reusable DES worker per thread (platform + event queue
+    // built once per worker instead of once per cell)
+    let mut capped = config.clone();
+    capped.workload.max_items = Some(e4.items);
+    let capped = &capped;
+    let rows = runner.run_with_state(
+        &grid,
+        || SimWorker::new(capped),
+        |worker, cell| {
+            let (variant, (arrival_idx, arrival_name)) = cell.params;
+            // the materialized column stream, shared by every variant row
+            let column = &columns[*arrival_idx];
             // randomized policies draw from a per-cell stream that depends on
             // the experiment seed and the cell index only — thread-invariant
             let params = PolicyParams {
@@ -324,7 +356,13 @@ pub fn run_threaded(
                 ..variant.params
             };
             let mut policy = build_with(variant.spec, &model, &params);
-            let report = worker.run(capped, policy.as_mut(), arrivals.as_mut());
+            let report = worker.run_batch(
+                capped,
+                policy.as_mut(),
+                &column.gaps,
+                &column.label,
+                column.mean,
+            );
             Exp4Row {
                 policy: variant.spec,
                 tunable: variant.tunable,

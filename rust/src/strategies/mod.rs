@@ -15,9 +15,12 @@ pub mod replay;
 pub mod simulate;
 pub mod strategy;
 
-pub use replay::{item_phases, GapCostTable, GapExecution, ReplayCore, SlotId};
-pub use simulate::{simulate, simulate_golden, GapDecisions, PrefixSim, SimReport, SimWorker};
+pub use replay::{item_phases, BatchRun, GapBatch, GapCostTable, GapExecution, ReplayCore, SlotId};
+pub use simulate::{
+    simulate, simulate_batch, simulate_golden, GapDecisions, PrefixSim, SimReport, SimWorker,
+    GAP_BATCH,
+};
 pub use strategy::{
-    build, decide, EmaPredictor, GapContext, GapPlan, IdleWaiting, OnOff, Oracle, OraclePolicy,
-    Policy, Timeout,
+    build, decide, decide_batch, EmaPredictor, GapContext, GapPlan, IdleWaiting, OnOff, Oracle,
+    OraclePolicy, Policy, Timeout,
 };

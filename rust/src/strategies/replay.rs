@@ -159,6 +159,166 @@ pub struct GapExecution {
     pub late: bool,
 }
 
+/// Plan-kind tag of one [`GapBatch`] element: idle through the gap.
+pub const KIND_IDLE: u8 = 0;
+/// Plan-kind tag of one [`GapBatch`] element: cut power immediately.
+pub const KIND_OFF: u8 = 1;
+/// Plan-kind tag of one [`GapBatch`] element: idle until τ, then cut.
+pub const KIND_IDLE_THEN_OFF: u8 = 2;
+
+/// A batch of planned gaps in structure-of-arrays layout: gap lengths,
+/// plan kinds, power-saving combo indices and timeout cutoffs as
+/// parallel flat arrays. This is the input format of
+/// [`ReplayCore::execute_batch`] — planning fills it once per chunk
+/// (`Policy::plan_gaps` / `decide_batch`), and the kernel then streams
+/// the Table-3 arithmetic over the arrays instead of re-matching a
+/// `GapPlan` enum per gap.
+///
+/// Uniform-plan policies (On-Off, Idle-Waiting, Timeout) fill it with
+/// [`push_uniform`](GapBatch::push_uniform): three `resize` fills plus
+/// one slice copy, which the compiler can vectorize.
+#[derive(Debug, Clone, Default)]
+pub struct GapBatch {
+    /// Gap lengths, arrival to arrival.
+    gaps: Vec<Duration>,
+    /// Plan kind per gap (`KIND_IDLE` / `KIND_OFF` / `KIND_IDLE_THEN_OFF`).
+    kinds: Vec<u8>,
+    /// Power-saving combo index per gap ([`saving_index`] encoding).
+    savings: Vec<u8>,
+    /// `IdleThenOff` cutoff per gap (`Duration::ZERO` for other kinds).
+    timeouts: Vec<Duration>,
+}
+
+impl GapBatch {
+    /// Number of planned gaps in the batch.
+    pub fn len(&self) -> usize {
+        self.gaps.len()
+    }
+
+    /// True when the batch holds no gaps.
+    pub fn is_empty(&self) -> bool {
+        self.gaps.is_empty()
+    }
+
+    /// Drop every element, keeping the backing allocations.
+    pub fn clear(&mut self) {
+        self.gaps.clear();
+        self.kinds.clear();
+        self.savings.clear();
+        self.timeouts.clear();
+    }
+
+    /// Append one planned gap.
+    pub fn push(&mut self, gap: Duration, plan: GapPlan) {
+        let (kind, saving, timeout) = match plan {
+            GapPlan::Idle(saving) => (KIND_IDLE, saving_index(saving) as u8, Duration::ZERO),
+            GapPlan::PowerOff => (KIND_OFF, 0, Duration::ZERO),
+            GapPlan::IdleThenOff { saving, timeout } => {
+                (KIND_IDLE_THEN_OFF, saving_index(saving) as u8, timeout)
+            }
+        };
+        self.gaps.push(gap);
+        self.kinds.push(kind);
+        self.savings.push(saving);
+        self.timeouts.push(timeout);
+    }
+
+    /// Append every gap of `gaps` under the same `plan` — the batched
+    /// fill for plan-constant policies. One memcpy plus three constant
+    /// fills; no per-gap branching.
+    pub fn push_uniform(&mut self, gaps: &[Duration], plan: GapPlan) {
+        let (kind, saving, timeout) = match plan {
+            GapPlan::Idle(saving) => (KIND_IDLE, saving_index(saving) as u8, Duration::ZERO),
+            GapPlan::PowerOff => (KIND_OFF, 0, Duration::ZERO),
+            GapPlan::IdleThenOff { saving, timeout } => {
+                (KIND_IDLE_THEN_OFF, saving_index(saving) as u8, timeout)
+            }
+        };
+        self.gaps.extend_from_slice(gaps);
+        let n = self.gaps.len();
+        self.kinds.resize(n, kind);
+        self.savings.resize(n, saving);
+        self.timeouts.resize(n, timeout);
+    }
+
+    /// Decode element `i` back into its [`GapPlan`] (the golden path
+    /// replays batches through `execute_plan_via_board`, which wants the
+    /// enum form).
+    pub fn plan(&self, i: usize) -> GapPlan {
+        let saving = PowerSaving {
+            method1: self.savings[i] & 1 != 0,
+            method2: self.savings[i] & 2 != 0,
+        };
+        match self.kinds[i] {
+            KIND_IDLE => GapPlan::Idle(saving),
+            KIND_OFF => GapPlan::PowerOff,
+            _ => GapPlan::IdleThenOff {
+                saving,
+                timeout: self.timeouts[i],
+            },
+        }
+    }
+
+    /// The gap-length array.
+    pub fn gaps(&self) -> &[Duration] {
+        &self.gaps
+    }
+
+    /// The plan-kind array (0 = idle, 1 = power off, 2 = idle-then-off).
+    pub fn kinds(&self) -> &[u8] {
+        &self.kinds
+    }
+
+    /// The power-saving combo index array ([`GapCostTable`] row per gap).
+    pub fn savings(&self) -> &[u8] {
+        &self.savings
+    }
+
+    /// The timeout-cutoff array (`ZERO` except for idle-then-off gaps).
+    pub fn timeouts(&self) -> &[Duration] {
+        &self.timeouts
+    }
+}
+
+/// What one [`ReplayCore::execute_batch`] call did: per-gap executions,
+/// per-item reconfiguration flags, and whether the battery died mid-run.
+///
+/// Invariants after a call over `n` planned gaps:
+/// * `execs.len() == reconfigured.len()` and both `== n` when the batch
+///   completed (`!exhausted`);
+/// * on exhaustion, `execs.len() == reconfigured.len()` means the budget
+///   died executing gap `execs.len()` (its follow-up item never served),
+///   while `execs.len() == reconfigured.len() + 1` means it died serving
+///   the item after gap `execs.len() - 1`.
+#[derive(Debug, Clone, Default)]
+pub struct BatchRun {
+    /// Execution feedback for each gap that completed.
+    pub execs: Vec<GapExecution>,
+    /// For each item served after its gap: did serving it reconfigure?
+    pub reconfigured: Vec<bool>,
+    /// The energy budget ran out mid-batch.
+    pub exhausted: bool,
+}
+
+impl BatchRun {
+    /// Drop the per-gap records, keeping the backing allocations.
+    pub fn clear(&mut self) {
+        self.execs.clear();
+        self.reconfigured.clear();
+        self.exhausted = false;
+    }
+
+    /// Gaps whose plan fully executed.
+    pub fn gaps_executed(&self) -> usize {
+        self.execs.len()
+    }
+
+    /// Items served after their gap (≤ [`gaps_executed`](BatchRun::gaps_executed)).
+    pub fn items_served(&self) -> usize {
+        self.reconfigured.len()
+    }
+}
+
 /// A board plus the workload-item phase profile, exposing the simulation
 /// primitives every event-driven runtime shares.
 #[derive(Debug, Clone)]
@@ -407,6 +567,162 @@ impl ReplayCore {
                 } else {
                     // rent until τ, then buy: power off for the remainder
                     self.board.spend(self.table.idle_power(saving), timeout)?;
+                    let busy = timeout + config_time + item_latency;
+                    let (off, late) = if gap.secs() > busy.secs() {
+                        (gap - busy, false)
+                    } else {
+                        (Duration::ZERO, true)
+                    };
+                    self.pass_off_time(off);
+                    Ok(GapExecution {
+                        powered_off: true,
+                        timeout_expired: true,
+                        late,
+                    })
+                }
+            }
+        }
+    }
+
+    /// Execute a whole planned batch — gap, then the follow-up item's
+    /// configure-if-needed + phases, per element — appending the outcome
+    /// to `out` (cleared first). This is the trace-driven kernel: the
+    /// per-gap arithmetic reads the [`GapBatch`] flat arrays and the
+    /// [`GapCostTable`] constants directly ([`execute_soa_fast`]) instead
+    /// of matching a `GapPlan` per gap, and the board-op order per
+    /// element is exactly the scalar DES's
+    /// (`execute_plan` → `configure_slot`? → `run_phases`), so every
+    /// ledger and the monitor's absolute tick grid land on identical
+    /// bits. The caller accounts served items from `out.reconfigured`
+    /// and stops on `out.exhausted`.
+    ///
+    /// `config_time` is read for power-off busy windows and updated when
+    /// an element reconfigures, mirroring the scalar driver's ledger.
+    /// On a [`golden_reference`](ReplayCore::golden_reference) core every
+    /// element routes through the `Board`-FSM path instead.
+    ///
+    /// [`execute_soa_fast`]: GapBatch
+    pub fn execute_batch(
+        &mut self,
+        batch: &GapBatch,
+        slot: SlotId,
+        config_time: &mut Duration,
+        item_latency: Duration,
+        out: &mut BatchRun,
+    ) {
+        out.clear();
+        for i in 0..batch.len() {
+            let exec = if self.golden {
+                self.execute_plan_via_board(batch.plan(i), batch.gaps[i], *config_time, item_latency)
+            } else {
+                self.execute_soa_fast(
+                    batch.kinds[i],
+                    batch.gaps[i],
+                    batch.savings[i],
+                    batch.timeouts[i],
+                    *config_time,
+                    item_latency,
+                )
+            };
+            match exec {
+                Ok(exec) => out.execs.push(exec),
+                Err(_) => {
+                    out.exhausted = true;
+                    return;
+                }
+            }
+            // the request ending this gap: reconfigure if the plan cut
+            // power, then replay the active phases — same order, same
+            // spends as the scalar event handler
+            let mut reconfigured = false;
+            if !self.is_ready() {
+                match self.configure_slot(slot) {
+                    Ok(t) => {
+                        *config_time = t;
+                        reconfigured = true;
+                    }
+                    Err(_) => {
+                        out.exhausted = true;
+                        return;
+                    }
+                }
+            }
+            if self.run_phases().is_err() {
+                out.exhausted = true;
+                return;
+            }
+            out.reconfigured.push(reconfigured);
+        }
+    }
+
+    /// One gap of the SoA kernel: the [`execute_plan`] fast arms,
+    /// dispatched on the batch's kind byte with the idle power read
+    /// straight from the cached table row. Identical spends in identical
+    /// order — the enum decode exists only for `enter_idle`'s mode
+    /// switch.
+    ///
+    /// [`execute_plan`]: ReplayCore::execute_plan
+    #[inline]
+    fn execute_soa_fast(
+        &mut self,
+        kind: u8,
+        gap: Duration,
+        saving_bits: u8,
+        timeout: Duration,
+        config_time: Duration,
+        item_latency: Duration,
+    ) -> Result<GapExecution, BoardError> {
+        let saving = PowerSaving {
+            method1: saving_bits & 1 != 0,
+            method2: saving_bits & 2 != 0,
+        };
+        match kind {
+            KIND_IDLE => {
+                self.board.fpga.enter_idle(saving).map_err(BoardError::from)?;
+                if gap.secs() > item_latency.secs() {
+                    self.board
+                        .spend(self.table.idle_power[saving_bits as usize], gap - item_latency)?;
+                    Ok(GapExecution::default())
+                } else {
+                    Ok(GapExecution {
+                        late: true,
+                        ..Default::default()
+                    })
+                }
+            }
+            KIND_OFF => {
+                let busy = config_time + item_latency;
+                let (off, late) = if gap.secs() > busy.secs() {
+                    (gap - busy, false)
+                } else {
+                    (Duration::ZERO, true)
+                };
+                self.pass_off_time(off);
+                Ok(GapExecution {
+                    powered_off: true,
+                    timeout_expired: false,
+                    late,
+                })
+            }
+            _ => {
+                let idle_window = gap - item_latency;
+                self.board.fpga.enter_idle(saving).map_err(BoardError::from)?;
+                if idle_window.secs() <= timeout.secs() {
+                    // the next request (or its busy window) preempts the timer
+                    if idle_window.secs() > 0.0 {
+                        self.board
+                            .spend(self.table.idle_power[saving_bits as usize], idle_window)?;
+                        Ok(GapExecution::default())
+                    } else {
+                        Ok(GapExecution {
+                            late: true,
+                            ..Default::default()
+                        })
+                    }
+                } else {
+                    // rent until τ, then buy: power off for the remainder
+                    self.board
+                        .spend(self.table.idle_power[saving_bits as usize], timeout)?;
                     let busy = timeout + config_time + item_latency;
                     let (off, late) = if gap.secs() > busy.secs() {
                         (gap - busy, false)
@@ -842,6 +1158,111 @@ mod tests {
         core.configure_slot(slot).unwrap();
         core.run_phases().unwrap();
         assert_eq!(core.board.fpga.configurations, 1);
+    }
+
+    #[test]
+    fn gap_batch_round_trips_every_plan_shape() {
+        let plans = [
+            GapPlan::Idle(PowerSaving::BASELINE),
+            GapPlan::Idle(PowerSaving::M1),
+            GapPlan::Idle(PowerSaving::M12),
+            GapPlan::PowerOff,
+            GapPlan::IdleThenOff {
+                saving: PowerSaving::M12,
+                timeout: Duration::from_millis(50.0),
+            },
+        ];
+        let mut batch = GapBatch::default();
+        assert!(batch.is_empty());
+        for (i, plan) in plans.iter().enumerate() {
+            batch.push(Duration::from_millis(10.0 * (i + 1) as f64), *plan);
+        }
+        assert_eq!(batch.len(), plans.len());
+        for (i, plan) in plans.iter().enumerate() {
+            assert_eq!(batch.plan(i), *plan, "element {i}");
+        }
+        // uniform fill appends and agrees with element-wise pushes
+        let gaps = vec![Duration::from_millis(40.0); 7];
+        batch.push_uniform(
+            &gaps,
+            GapPlan::IdleThenOff {
+                saving: PowerSaving::M1,
+                timeout: Duration::from_millis(9.0),
+            },
+        );
+        assert_eq!(batch.len(), plans.len() + 7);
+        assert_eq!(
+            batch.plan(plans.len() + 3),
+            GapPlan::IdleThenOff {
+                saving: PowerSaving::M1,
+                timeout: Duration::from_millis(9.0),
+            }
+        );
+        batch.clear();
+        assert!(batch.is_empty() && batch.gaps().is_empty());
+    }
+
+    #[test]
+    fn execute_batch_matches_the_scalar_loop_bit_for_bit() {
+        let cfg = paper_default();
+        let latency = cfg.item.latency_without_config();
+        let mut batch = GapBatch::default();
+        for (i, gap_ms) in [40.0, 700.0, 3.8, 120.0, 0.01, 55.0].iter().enumerate() {
+            let plan = match i % 3 {
+                0 => GapPlan::Idle(PowerSaving::M12),
+                1 => GapPlan::PowerOff,
+                _ => GapPlan::IdleThenOff {
+                    saving: PowerSaving::M1,
+                    timeout: Duration::from_millis(50.0),
+                },
+            };
+            batch.push(Duration::from_millis(*gap_ms), plan);
+        }
+        for golden in [false, true] {
+            let make = |cfg: &SimConfig| {
+                if golden {
+                    ReplayCore::golden_reference(cfg)
+                } else {
+                    ReplayCore::from_config(cfg)
+                }
+            };
+            // batched execution
+            let mut core = make(&cfg);
+            let slot = core.slot_id("lstm").unwrap();
+            let mut config_time = core.configure_slot(slot).unwrap();
+            core.run_phases().unwrap();
+            let mut run = BatchRun::default();
+            core.execute_batch(&batch, slot, &mut config_time, latency, &mut run);
+            assert!(!run.exhausted);
+            assert_eq!(run.gaps_executed(), batch.len());
+            assert_eq!(run.items_served(), batch.len());
+
+            // the scalar gap-by-gap loop over the same plans
+            let mut scalar = make(&cfg);
+            let slot_s = scalar.slot_id("lstm").unwrap();
+            let mut ct = scalar.configure_slot(slot_s).unwrap();
+            scalar.run_phases().unwrap();
+            let mut execs = Vec::new();
+            let mut reconf = Vec::new();
+            for i in 0..batch.len() {
+                execs.push(
+                    scalar
+                        .execute_plan(batch.plan(i), batch.gaps()[i], ct, latency)
+                        .unwrap(),
+                );
+                let mut r = false;
+                if !scalar.is_ready() {
+                    ct = scalar.configure_slot(slot_s).unwrap();
+                    r = true;
+                }
+                scalar.run_phases().unwrap();
+                reconf.push(r);
+            }
+            assert_eq!(run.execs, execs, "golden={golden}");
+            assert_eq!(run.reconfigured, reconf, "golden={golden}");
+            assert_eq!(config_time.secs().to_bits(), ct.secs().to_bits());
+            assert_eq!(ledger(&core), ledger(&scalar), "golden={golden}");
+        }
     }
 
     #[test]

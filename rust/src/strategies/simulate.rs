@@ -22,14 +22,26 @@
 //! from a pluggable [`ArrivalProcess`]. The engine clock tracks request
 //! arrivals; the board's own ledger tracks busy/idle energy, exactly as
 //! the pre-unification serial loop did, so reports are bit-identical.
+//!
+//! Consumers that materialize their gap stream up front (trace replays,
+//! sweep cells, tuner evaluations) skip the event queue entirely and run
+//! the **batched** kernel instead: gaps are planned [`GAP_BATCH`] at a
+//! time into a structure-of-arrays [`GapBatch`] ([`decide_batch`]) and
+//! executed by [`ReplayCore::execute_batch`] as tight loops over the
+//! gap-cost table ([`SimWorker::run_batch`], [`simulate_batch`],
+//! [`PrefixSim`]). The batched path is bit-identical to the scalar
+//! event-driven path — same board-operation order, same f64 operation
+//! order, same policy-visible plan/observe interleaving — pinned by
+//! `tests/batch_equivalence.rs` against both the scalar fast path and the
+//! golden `Board`-FSM reference.
 
 use std::sync::Arc;
 
 use crate::config::loader::SimConfig;
 use crate::coordinator::requests::ArrivalProcess;
 use crate::sim::{Ctx, Engine, SimTime};
-use crate::strategies::replay::{ReplayCore, SlotId};
-use crate::strategies::strategy::{decide, GapContext, Policy};
+use crate::strategies::replay::{BatchRun, GapBatch, ReplayCore, SlotId};
+use crate::strategies::strategy::{decide, decide_batch, GapContext, Policy};
 use crate::util::stats::Welford;
 use crate::util::units::{Duration, Energy};
 
@@ -257,6 +269,150 @@ fn plan_gap(
     }
 }
 
+/// Gaps planned and executed per batched chunk. Large enough to amortize
+/// virtual dispatch and let the structure-of-arrays cost loops
+/// auto-vectorize; small enough that the scratch arrays stay cache-hot.
+pub const GAP_BATCH: usize = 256;
+
+/// Reusable scratch for the batched driver — one allocation set per
+/// worker, reused across chunks and runs.
+#[derive(Default)]
+struct BatchScratch {
+    batch: GapBatch,
+    run: BatchRun,
+    ctxs: Vec<GapContext>,
+    /// Absolute arrival times: `arrivals[0]` is the arrival of the last
+    /// served item, `arrivals[k + 1]` the arrival after chunk gap `k`.
+    /// Accumulated in [`SimTime`] so the clock quantizes per gap exactly
+    /// as `Ctx::schedule_in` does on the event-driven path.
+    arrivals: Vec<SimTime>,
+}
+
+/// The serve-side accounting of one request: item count, queueing,
+/// served latency. Extracted verbatim from the event handler so the
+/// batched driver shares the exact arithmetic (and f64 op order).
+fn account_served_item(ledger: &mut RunLedger, arrival: Duration, reconfigured: bool) {
+    ledger.items += 1;
+    let serve = if reconfigured {
+        ledger.config_time + ledger.item_latency
+    } else {
+        ledger.item_latency
+    };
+    let start = arrival.max(ledger.prev_completion);
+    if start > arrival {
+        ledger.late_requests += 1;
+    }
+    let completion = start + serve;
+    ledger.latency.push((completion - arrival).millis());
+    ledger.prev_completion = completion;
+}
+
+/// Serve the first request (arrival t = 0) outside the batch loop: pay
+/// power-on + configuration + the active phases, account the item. After
+/// this every chunk element is one (gap, following item) pair.
+fn serve_first_item(core: &mut ReplayCore, ledger: &mut RunLedger) {
+    if ledger.max_items == 0 {
+        return;
+    }
+    let mut reconfigured = false;
+    if !core.is_ready() {
+        match core.configure_slot(ledger.slot) {
+            Ok(t) => {
+                ledger.config_time = t;
+                reconfigured = true;
+            }
+            Err(_) => {
+                ledger.exhausted = true;
+                return;
+            }
+        }
+    }
+    if core.run_phases().is_err() {
+        ledger.exhausted = true;
+        return;
+    }
+    account_served_item(ledger, Duration::ZERO, reconfigured);
+}
+
+/// The batched inner loop: drive the run through `gaps[..limit]` in
+/// [`GAP_BATCH`]-sized chunks, stopping at the item cap, the end of the
+/// trace, or budget exhaustion — whichever comes first.
+///
+/// Per chunk: build contexts and quantized arrival times, plan every gap
+/// ([`decide_batch`] — flat fills for stateless policies, the faithful
+/// plan/observe interleaving for learners), execute the whole chunk on
+/// the core ([`ReplayCore::execute_batch`]), then fold the results into
+/// the ledger. On exhaustion the clock and consumed-gap count land
+/// exactly where the scalar event loop would have died: `execs.len() ==
+/// reconfigured.len()` means gap `execs.len()` was drawn and refused
+/// (clock stays at its planning arrival); one extra exec means the
+/// following item's configure/phases refused (clock at that arrival, the
+/// item not counted).
+fn drive_trace(
+    core: &mut ReplayCore,
+    policy: &mut dyn Policy,
+    ledger: &mut RunLedger,
+    gaps: &[Duration],
+    limit: usize,
+    clock: &mut SimTime,
+    consumed: &mut usize,
+    scratch: &mut BatchScratch,
+) {
+    while !ledger.exhausted && ledger.items < ledger.max_items && *consumed < limit {
+        let span = GAP_BATCH
+            .min(limit - *consumed)
+            .min((ledger.max_items - ledger.items).min(GAP_BATCH as u64) as usize);
+        let chunk = &gaps[*consumed..*consumed + span];
+        scratch.ctxs.clear();
+        scratch.arrivals.clear();
+        scratch.arrivals.push(*clock);
+        for (k, &gap) in chunk.iter().enumerate() {
+            let at = scratch.arrivals[k];
+            scratch.ctxs.push(GapContext {
+                items_done: ledger.items + k as u64,
+                now: at.as_duration(),
+            });
+            scratch.arrivals.push(at + gap);
+        }
+        decide_batch(policy, &scratch.ctxs, chunk, &mut scratch.batch);
+        core.execute_batch(
+            &scratch.batch,
+            ledger.slot,
+            &mut ledger.config_time,
+            ledger.item_latency,
+            &mut scratch.run,
+        );
+        let run = &scratch.run;
+        for (k, exec) in run.execs.iter().enumerate() {
+            if exec.powered_off {
+                ledger.decisions.powered_off += 1;
+            } else {
+                ledger.decisions.idled += 1;
+            }
+            if exec.timeout_expired {
+                ledger.decisions.timeouts_expired += 1;
+            }
+            if k < run.reconfigured.len() {
+                account_served_item(
+                    ledger,
+                    scratch.arrivals[k + 1].as_duration(),
+                    run.reconfigured[k],
+                );
+            }
+        }
+        *clock = scratch.arrivals[run.execs.len()];
+        *consumed += if run.exhausted {
+            // the failed gap was drawn (consumed) before it was refused
+            run.execs.len() + (run.execs.len() == run.reconfigured.len()) as usize
+        } else {
+            span
+        };
+        if run.exhausted {
+            ledger.exhausted = true;
+        }
+    }
+}
+
 /// Assemble the [`SimReport`] from a finished (or paused) run.
 fn build_report(
     policy_label: String,
@@ -301,6 +457,7 @@ fn build_report(
 pub struct SimWorker {
     core: ReplayCore,
     engine: Engine<LifetimeEvent>,
+    scratch: BatchScratch,
 }
 
 impl SimWorker {
@@ -309,6 +466,7 @@ impl SimWorker {
         SimWorker {
             core: ReplayCore::from_config(config),
             engine: Engine::new(),
+            scratch: BatchScratch::default(),
         }
     }
 
@@ -317,6 +475,7 @@ impl SimWorker {
         SimWorker {
             core: ReplayCore::golden_reference(config),
             engine: Engine::new(),
+            scratch: BatchScratch::default(),
         }
     }
 
@@ -358,6 +517,50 @@ impl SimWorker {
             stats.end_time,
         )
     }
+
+    /// Run one lifetime simulation over a fully materialized gap trace on
+    /// the batched kernel: no event queue, gaps planned and executed
+    /// [`GAP_BATCH`] at a time. Bit-identical to [`SimWorker::run`] with a
+    /// `TraceReplay` over the same gaps (and to the golden path when the
+    /// worker is [`SimWorker::golden`]). `arrival_label`/`arrival_mean`
+    /// name the process the trace was drawn from so reports match the
+    /// generator-driven path field for field.
+    pub fn run_batch(
+        &mut self,
+        config: &SimConfig,
+        policy: &mut dyn Policy,
+        gaps: &[Duration],
+        arrival_label: &str,
+        arrival_mean: Duration,
+    ) -> SimReport {
+        self.core.reset_for(config);
+        let slot = self
+            .core
+            .slot_id("lstm")
+            .expect("the paper platform programs the lstm image");
+        let mut ledger = RunLedger::new(config, slot);
+        let mut clock = SimTime::ZERO;
+        serve_first_item(&mut self.core, &mut ledger);
+        let mut consumed = 0usize;
+        drive_trace(
+            &mut self.core,
+            policy,
+            &mut ledger,
+            gaps,
+            gaps.len(),
+            &mut clock,
+            &mut consumed,
+            &mut self.scratch,
+        );
+        build_report(
+            policy.label(),
+            arrival_label.to_string(),
+            arrival_mean,
+            &ledger,
+            &self.core,
+            clock,
+        )
+    }
 }
 
 /// Simulate `config`'s workload under `policy` with `arrivals` on the
@@ -382,28 +585,22 @@ pub fn simulate_golden(
     SimWorker::golden(config).run(config, policy, arrivals)
 }
 
-/// Arrival process over a borrowed prefix of a shared gap trace; the
-/// cursor lives in the owning [`PrefixSim`] so consumption survives the
-/// borrow.
-struct SliceArrivals<'a> {
-    gaps: &'a [Duration],
-    pos: &'a mut usize,
-}
-
-impl ArrivalProcess for SliceArrivals<'_> {
-    fn next_gap(&mut self) -> Duration {
-        let gap = self.gaps[*self.pos];
-        *self.pos += 1;
-        gap
-    }
-
-    fn mean(&self) -> Duration {
-        crate::coordinator::requests::trace_mean(self.gaps)
-    }
-
-    fn label(&self) -> String {
-        format!("trace({} gaps)", self.gaps.len())
-    }
+/// Simulate `config`'s workload under `policy` over a materialized gap
+/// trace on the batched structure-of-arrays kernel. Labeled exactly like
+/// a [`TraceReplay`](crate::coordinator::requests::TraceReplay) run, so
+/// reports compare field for field against the scalar path.
+pub fn simulate_batch(
+    config: &SimConfig,
+    policy: &mut dyn Policy,
+    gaps: &[Duration],
+) -> SimReport {
+    SimWorker::new(config).run_batch(
+        config,
+        policy,
+        gaps,
+        &format!("trace({} gaps)", gaps.len()),
+        crate::coordinator::requests::trace_mean(gaps),
+    )
 }
 
 /// A pausable lifetime simulation over a shared gap trace: run the first
@@ -413,27 +610,33 @@ impl ArrivalProcess for SliceArrivals<'_> {
 /// This is the successive-halving hot path: each rung doubles the train
 /// prefix for the surviving candidates, and re-simulating the shared
 /// prefix made rung `k` cost the sum of all earlier rungs again. A
-/// `PrefixSim` pauses at an item boundary (the DES stops exactly where a
-/// `max_items` cap stops it) and resumes by re-entering the gap-planning
-/// step the cap skipped, so the state — board ledgers, policy history,
-/// queue, clock — continues bit-for-bit as if the longer run had been
-/// simulated from scratch. [`PrefixSim::advance_to`] returns the same
-/// `SimReport`, bit-for-bit, as a fresh capped run over the prefix
-/// (pinned by the tuner's equivalence tests).
+/// `PrefixSim` pauses at an item boundary (exactly where a `max_items`
+/// cap stops the run) and resumes the batched driver from the next
+/// unconsumed gap, so the state — board ledgers, policy history, queue,
+/// clock — continues bit-for-bit as if the longer run had been simulated
+/// from scratch. [`PrefixSim::advance_to`] returns the same `SimReport`,
+/// bit-for-bit, as a fresh capped run over the prefix (pinned by the
+/// tuner's equivalence tests). Since the batched kernel landed this runs
+/// on [`ReplayCore::execute_batch`]; chunk boundaries (which differ
+/// between resumed and from-scratch runs) affect only the grouping of
+/// work, never a computed value.
 pub struct PrefixSim {
     core: ReplayCore,
-    engine: Engine<LifetimeEvent>,
     policy: Box<dyn Policy>,
     gaps: Arc<[Duration]>,
     /// Gaps consumed so far.
     consumed: usize,
-    /// The initial request has been scheduled.
+    /// The first request has been served.
     started: bool,
     /// The budget ran out (or another board refusal): no further progress
     /// is possible, reports stay frozen — exactly like a longer
     /// from-scratch run, which dies at the same event.
     dead: bool,
+    /// Arrival time of the last request processed (the scalar engine
+    /// clock), quantized per gap exactly as `Ctx::schedule_in` would.
+    clock: SimTime,
     ledger: RunLedger,
+    scratch: BatchScratch,
 }
 
 impl PrefixSim {
@@ -448,13 +651,14 @@ impl PrefixSim {
         let ledger = RunLedger::new(config, slot);
         PrefixSim {
             core,
-            engine: Engine::new(),
             policy,
             gaps,
             consumed: 0,
             started: false,
             dead: false,
+            clock: SimTime::ZERO,
             ledger,
+            scratch: BatchScratch::default(),
         }
     }
 
@@ -481,54 +685,23 @@ impl PrefixSim {
             self.ledger.max_items = prefix as u64 + 1;
             if !self.started {
                 self.started = true;
-                self.engine.schedule_at(SimTime::ZERO, LifetimeEvent::Request);
-            } else {
-                // the previous cap stopped after serving its final item,
-                // skipping that item's gap plan; re-enter exactly there
-                self.engine.resume();
-                self.plan_pending_gap();
+                serve_first_item(&mut self.core, &mut self.ledger);
             }
-            if !self.dead {
-                let gaps = &self.gaps[..prefix];
-                let mut arrivals = SliceArrivals {
-                    gaps,
-                    pos: &mut self.consumed,
-                };
-                let mut state = LifetimeState {
-                    core: &mut self.core,
-                    policy: self.policy.as_mut(),
-                    arrivals: &mut arrivals,
-                    ledger: &mut self.ledger,
-                };
-                self.engine.run(&mut state, u64::MAX, |ctx, st, event| match event {
-                    LifetimeEvent::Request => st.on_request(ctx),
-                });
-                self.dead = self.ledger.exhausted;
+            if !self.ledger.exhausted {
+                drive_trace(
+                    &mut self.core,
+                    self.policy.as_mut(),
+                    &mut self.ledger,
+                    &self.gaps[..],
+                    prefix,
+                    &mut self.clock,
+                    &mut self.consumed,
+                    &mut self.scratch,
+                );
             }
+            self.dead = self.ledger.exhausted;
         }
         self.report(prefix)
-    }
-
-    /// The gap-planning step for the last served item — what a longer
-    /// from-scratch run would have done inside the handler before the
-    /// old cap stopped it.
-    fn plan_pending_gap(&mut self) {
-        let gap = self.gaps[self.consumed];
-        self.consumed += 1;
-        let arrival = self.engine.now().as_duration();
-        if plan_gap(
-            &mut self.core,
-            self.policy.as_mut(),
-            &mut self.ledger,
-            arrival,
-            gap,
-        )
-        .is_ok()
-        {
-            self.engine.schedule_in(gap, LifetimeEvent::Request);
-        } else {
-            self.dead = true;
-        }
     }
 
     /// The report a fresh capped run over `gaps[..prefix]` would produce.
@@ -539,7 +712,7 @@ impl PrefixSim {
             crate::coordinator::requests::trace_mean(&self.gaps[..prefix]),
             &self.ledger,
             &self.core,
-            self.engine.now(),
+            self.clock,
         )
     }
 }
@@ -839,6 +1012,82 @@ mod tests {
             let again = prefix_sim.advance_to(96);
             assert_eq!(again.items, 97);
         }
+    }
+
+    #[test]
+    fn batched_trace_run_matches_the_scalar_path_across_chunks() {
+        // more gaps than one GAP_BATCH chunk, heavy-tailed so policies
+        // switch behaviour mid-chunk and across the chunk boundary
+        let gaps: Vec<Duration> = (0..(GAP_BATCH + 40))
+            .map(|i| Duration::from_millis(if i % 9 == 8 { 700.0 } else { 30.0 }))
+            .collect();
+        let cfg = paper_default();
+        let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
+        let mut capped = cfg.clone();
+        capped.workload.max_items = Some(gaps.len() as u64 + 1);
+        for spec in PolicySpec::ALL {
+            let mut policy = build(spec, &model);
+            let batched = simulate_batch(&capped, policy.as_mut(), &gaps);
+            let mut policy = build(spec, &model);
+            let mut arr = crate::coordinator::requests::TraceReplay::new(gaps.clone());
+            let scalar = simulate(&capped, policy.as_mut(), &mut arr);
+            assert_reports_identical(&batched, &scalar, &format!("{spec} batched vs scalar"));
+        }
+    }
+
+    #[test]
+    fn batched_golden_worker_matches_the_scalar_golden_path() {
+        let gaps: Vec<Duration> = (0..60)
+            .map(|i| Duration::from_millis(if i % 5 == 4 { 400.0 } else { 45.0 }))
+            .collect();
+        let cfg = paper_default();
+        let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
+        let mut capped = cfg.clone();
+        capped.workload.max_items = Some(gaps.len() as u64 + 1);
+        let label = format!("trace({} gaps)", gaps.len());
+        let mean = crate::coordinator::requests::trace_mean(&gaps);
+        for spec in [PolicySpec::OnOff, PolicySpec::Timeout, PolicySpec::Oracle] {
+            let mut policy = build(spec, &model);
+            let batched = SimWorker::golden(&capped).run_batch(
+                &capped,
+                policy.as_mut(),
+                &gaps,
+                &label,
+                mean,
+            );
+            let mut policy = build(spec, &model);
+            let mut arr = crate::coordinator::requests::TraceReplay::new(gaps.clone());
+            let golden = simulate_golden(&capped, policy.as_mut(), &mut arr);
+            assert_reports_identical(&batched, &golden, &format!("{spec} batched-golden"));
+        }
+    }
+
+    #[test]
+    fn batched_budget_death_matches_the_scalar_path() {
+        // enormous idle gaps burn the 4147 J budget within a few gaps, so
+        // the run dies mid-batch; death point, clock and ledgers must land
+        // exactly where the event loop dies
+        let gaps = vec![Duration::from_secs(5_000.0); 6];
+        let cfg = paper_default();
+        let mut capped = cfg.clone();
+        capped.workload.max_items = Some(gaps.len() as u64 + 1);
+        let mut iw = IdleWaiting::baseline();
+        let batched = simulate_batch(&capped, &mut iw, &gaps);
+        let mut iw = IdleWaiting::baseline();
+        let mut arr = crate::coordinator::requests::TraceReplay::new(gaps.clone());
+        let scalar = simulate(&capped, &mut iw, &mut arr);
+        assert!(batched.items < gaps.len() as u64 + 1, "run must die early");
+        assert_reports_identical(&batched, &scalar, "budget death");
+    }
+
+    #[test]
+    fn batched_zero_item_cap_executes_nothing() {
+        let cfg = capped_config(40.0, 0);
+        let r = simulate_batch(&cfg, &mut IdleWaiting::baseline(), &[Duration::from_millis(40.0)]);
+        assert_eq!(r.items, 0);
+        assert_eq!(r.configurations, 0);
+        assert_eq!(r.energy_exact, Energy::ZERO);
+        assert_eq!(r.sim_time, Duration::ZERO);
     }
 
     #[test]

@@ -41,6 +41,7 @@ use crate::config::schema::{PolicyParams, PolicySpec};
 use crate::device::rails::PowerSaving;
 use crate::energy::analytical::Analytical;
 use crate::energy::crossover;
+use crate::strategies::replay::GapBatch;
 use crate::util::rng::Xoshiro256ss;
 use crate::util::units::Duration;
 
@@ -91,6 +92,20 @@ pub trait Policy: Send {
     /// Feed back the realized gap once it has resolved (online learning).
     fn observe(&mut self, _actual_gap: Duration) {}
 
+    /// Plan a whole batch of gaps into `out` (appending), interleaving
+    /// plan/observe per gap exactly as the scalar loop would, so stateful
+    /// policies see the identical observation order. Stateless policies
+    /// override this with a single flat fill ([`GapBatch::push_uniform`]);
+    /// the default is the faithful scalar loop.
+    fn plan_gaps(&mut self, ctxs: &[GapContext], gaps: &[Duration], out: &mut GapBatch) {
+        debug_assert_eq!(ctxs.len(), gaps.len());
+        for (ctx, &gap) in ctxs.iter().zip(gaps) {
+            let plan = self.plan_gap(ctx);
+            out.push(gap, plan);
+            self.observe(gap);
+        }
+    }
+
     /// Human-readable label for reports.
     fn label(&self) -> String {
         self.kind().name().to_string()
@@ -112,6 +127,33 @@ pub fn decide(policy: &mut dyn Policy, ctx: &GapContext, actual_gap: Duration) -
     policy.plan_gap(ctx)
 }
 
+/// Batched [`decide`]: resolve plans for a slice of gaps the runtime
+/// already knows, clearing and refilling `out`. Oracle policies get the
+/// true gap per element (offline upper bound); online policies route
+/// through [`Policy::plan_gaps`], which stateless policies implement as a
+/// single structure-of-arrays fill.
+pub fn decide_batch(
+    policy: &mut dyn Policy,
+    ctxs: &[GapContext],
+    gaps: &[Duration],
+    out: &mut GapBatch,
+) {
+    debug_assert_eq!(ctxs.len(), gaps.len());
+    out.clear();
+    if policy.as_oracle().is_some() {
+        for &gap in gaps {
+            let plan = policy
+                .as_oracle()
+                .expect("oracle checked above")
+                .plan_for(gap);
+            out.push(gap, plan);
+            policy.observe(gap);
+        }
+        return;
+    }
+    policy.plan_gaps(ctxs, gaps, out);
+}
+
 /// The paper's On-Off strategy (Fig 5).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct OnOff;
@@ -123,6 +165,12 @@ impl Policy for OnOff {
 
     fn plan_gap(&mut self, _ctx: &GapContext) -> GapPlan {
         GapPlan::PowerOff
+    }
+
+    /// Stateless: one flat fill, no per-gap virtual dispatch.
+    fn plan_gaps(&mut self, ctxs: &[GapContext], gaps: &[Duration], out: &mut GapBatch) {
+        debug_assert_eq!(ctxs.len(), gaps.len());
+        out.push_uniform(gaps, GapPlan::PowerOff);
     }
 }
 
@@ -167,6 +215,12 @@ impl Policy for IdleWaiting {
 
     fn plan_gap(&mut self, _ctx: &GapContext) -> GapPlan {
         GapPlan::Idle(self.saving)
+    }
+
+    /// Stateless: one flat fill, no per-gap virtual dispatch.
+    fn plan_gaps(&mut self, ctxs: &[GapContext], gaps: &[Duration], out: &mut GapBatch) {
+        debug_assert_eq!(ctxs.len(), gaps.len());
+        out.push_uniform(gaps, GapPlan::Idle(self.saving));
     }
 }
 
@@ -261,6 +315,18 @@ impl Policy for Timeout {
             saving: self.saving,
             timeout: self.timeout,
         }
+    }
+
+    /// Stateless (τ is fixed at build time): one flat fill.
+    fn plan_gaps(&mut self, ctxs: &[GapContext], gaps: &[Duration], out: &mut GapBatch) {
+        debug_assert_eq!(ctxs.len(), gaps.len());
+        out.push_uniform(
+            gaps,
+            GapPlan::IdleThenOff {
+                saving: self.saving,
+                timeout: self.timeout,
+            },
+        );
     }
 
     fn label(&self) -> String {
@@ -436,6 +502,18 @@ impl Policy for WindowedQuantile {
             },
             Some(p) if p < self.crossover => GapPlan::Idle(self.saving),
             Some(_) => GapPlan::PowerOff,
+        }
+    }
+
+    /// Table-driven: same plan/observe interleaving as the default, but
+    /// with `plan_gap`/`observe` statically dispatched so the ring-buffer
+    /// maintenance inlines into one tight loop over the batch.
+    fn plan_gaps(&mut self, ctxs: &[GapContext], gaps: &[Duration], out: &mut GapBatch) {
+        debug_assert_eq!(ctxs.len(), gaps.len());
+        for (ctx, &gap) in ctxs.iter().zip(gaps) {
+            let plan = self.plan_gap(ctx);
+            out.push(gap, plan);
+            self.observe(gap);
         }
     }
 
@@ -815,6 +893,103 @@ mod tests {
         assert_eq!(p.tau, tau);
         for _ in 0..100 {
             assert!(p.draw_timeout() < tau);
+        }
+    }
+
+    fn batch_ctxs(n: usize) -> Vec<GapContext> {
+        (0..n)
+            .map(|i| GapContext {
+                items_done: i as u64 + 1,
+                now: Duration::ZERO,
+            })
+            .collect()
+    }
+
+    /// The batched planner must emit exactly the plans of the scalar
+    /// plan/observe loop, for every policy kind, including the stateful
+    /// learners (identical observation order) and the seeded randomized
+    /// policy (identical RNG draw order).
+    #[test]
+    fn plan_gaps_matches_the_scalar_sequence_for_every_policy() {
+        let m = model();
+        let gaps: Vec<Duration> = (0..48)
+            .map(|i| {
+                if i % 7 == 3 {
+                    Duration::from_secs(2.0)
+                } else {
+                    Duration::from_millis(35.0 + i as f64)
+                }
+            })
+            .collect();
+        let ctxs = batch_ctxs(gaps.len());
+        for spec in PolicySpec::ALL {
+            let mut batched = build(spec, &m);
+            let mut batch = GapBatch::default();
+            decide_batch(batched.as_mut(), &ctxs, &gaps, &mut batch);
+            assert_eq!(batch.len(), gaps.len(), "{spec}");
+            let mut scalar = build(spec, &m);
+            for (i, (&gap, ctx)) in gaps.iter().zip(&ctxs).enumerate() {
+                let want = decide(scalar.as_mut(), ctx, gap);
+                assert_eq!(batch.plan(i), want, "{spec} gap {i}");
+                scalar.observe(gap);
+            }
+            // and the learned state agrees afterwards: the next scalar
+            // plan is the same from both policies
+            let next = GapContext {
+                items_done: gaps.len() as u64 + 1,
+                now: Duration::ZERO,
+            };
+            if spec != PolicySpec::RandomizedSkiRental {
+                assert_eq!(
+                    batched.plan_gap(&next),
+                    scalar.plan_gap(&next),
+                    "{spec} post-batch state"
+                );
+            }
+        }
+    }
+
+    /// `decide_batch` grants the oracle clairvoyance per element, just as
+    /// scalar `decide` does — the blind `plan_gaps` path must not be used.
+    #[test]
+    fn decide_batch_grants_the_oracle_clairvoyance() {
+        let m = model();
+        let mut oracle = Oracle::from_model(&m, PowerSaving::BASELINE);
+        let gaps = [Duration::from_millis(50.0), Duration::from_millis(200.0)];
+        let ctxs = batch_ctxs(gaps.len());
+        let mut batch = GapBatch::default();
+        decide_batch(&mut oracle, &ctxs, &gaps, &mut batch);
+        assert_eq!(batch.plan(0), GapPlan::Idle(PowerSaving::BASELINE));
+        assert_eq!(batch.plan(1), GapPlan::PowerOff);
+    }
+
+    /// The flat-fill overrides must agree with the default loop impl.
+    #[test]
+    fn push_uniform_overrides_match_the_default_loop() {
+        let m = model();
+        let gaps: Vec<Duration> = (0..9).map(|i| Duration::from_millis(10.0 * (i + 1) as f64)).collect();
+        let ctxs = batch_ctxs(gaps.len());
+        for spec in [
+            PolicySpec::OnOff,
+            PolicySpec::IdleWaiting,
+            PolicySpec::IdleWaitingM1,
+            PolicySpec::IdleWaitingM12,
+            PolicySpec::Timeout,
+        ] {
+            let mut policy = build(spec, &m);
+            let mut fast = GapBatch::default();
+            policy.plan_gaps(&ctxs, &gaps, &mut fast);
+            let mut policy = build(spec, &m);
+            let mut slow = GapBatch::default();
+            for (ctx, &gap) in ctxs.iter().zip(&gaps) {
+                let plan = policy.plan_gap(ctx);
+                slow.push(gap, plan);
+                policy.observe(gap);
+            }
+            assert_eq!(fast.gaps(), slow.gaps(), "{spec}");
+            assert_eq!(fast.kinds(), slow.kinds(), "{spec}");
+            assert_eq!(fast.savings(), slow.savings(), "{spec}");
+            assert_eq!(fast.timeouts(), slow.timeouts(), "{spec}");
         }
     }
 

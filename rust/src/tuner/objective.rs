@@ -8,9 +8,10 @@
 //! configured cap) scores `+∞` and can never win.
 
 use crate::config::schema::{PolicyParams, PolicySpec};
-use crate::device::rails::RailSet;
+use crate::device::rails::{PowerSaving, RailSet};
 use crate::energy::analytical::Analytical;
-use crate::strategies::strategy::{build_with, GapContext, GapPlan};
+use crate::strategies::replay::{GapBatch, KIND_IDLE, KIND_OFF};
+use crate::strategies::strategy::{build_with, GapContext};
 use crate::util::units::Duration;
 
 /// What a tuning run optimizes.
@@ -161,27 +162,50 @@ pub fn analytical_replay(
         };
     }
     let mut policy = build_with(spec, model, params);
+    // Plan the whole trace through the batched entry point. Deliberately
+    // `plan_gaps`, not `decide_batch`: the pre-filter replays *blind*
+    // decisions, so the oracle must not see the gaps here either. The
+    // plan/observe interleaving inside `plan_gaps` matches the old scalar
+    // loop exactly, so learned policies emit the identical plan sequence.
+    let ctxs: Vec<GapContext> = (0..gaps.len())
+        .map(|i| GapContext {
+            items_done: i as u64 + 1,
+            now: Duration::ZERO,
+        })
+        .collect();
+    let mut batch = GapBatch::default();
+    policy.plan_gaps(&ctxs, gaps, &mut batch);
+
     let e_buy_mj = (model.item.e_item_onoff() - model.item.e_active).millijoules();
     let latency = model.item.latency_without_config.secs();
     let busy_with_config = model.item.latency_with_config.secs();
+    // Table 3 idle power per saving-combo index, hoisted out of the loop
+    // (the combo index IS the bit pattern, so this lookup is exact).
+    let mut idle_mw = [0.0f64; 4];
+    for (bits, slot) in idle_mw.iter_mut().enumerate() {
+        *slot = RailSet::idle_power(PowerSaving {
+            method1: bits & 1 != 0,
+            method2: bits & 2 != 0,
+        })
+        .milliwatts();
+    }
+    let kinds = batch.kinds();
+    let savings = batch.savings();
+    let timeouts = batch.timeouts();
     let mut total_mj = 0.0;
     let mut late = 0usize;
     for (i, gap) in gaps.iter().enumerate() {
-        let ctx = GapContext {
-            items_done: i as u64 + 1,
-            now: Duration::ZERO,
-        };
-        let plan = policy.plan_gap(&ctx);
         let g = gap.secs();
-        let (cost_mj, busy) = match plan {
-            GapPlan::Idle(saving) => (RailSet::idle_power(saving).milliwatts() * g, latency),
-            GapPlan::PowerOff => (e_buy_mj, busy_with_config),
-            GapPlan::IdleThenOff { saving, timeout } => {
-                let p = RailSet::idle_power(saving).milliwatts();
-                if g <= timeout.secs() {
+        let (cost_mj, busy) = match kinds[i] {
+            KIND_IDLE => (idle_mw[savings[i] as usize] * g, latency),
+            KIND_OFF => (e_buy_mj, busy_with_config),
+            _ => {
+                let p = idle_mw[savings[i] as usize];
+                let t = timeouts[i].secs();
+                if g <= t {
                     (p * g, latency)
                 } else {
-                    (p * timeout.secs() + e_buy_mj, timeout.secs() + busy_with_config)
+                    (p * t + e_buy_mj, t + busy_with_config)
                 }
             }
         };
@@ -189,7 +213,6 @@ pub fn analytical_replay(
         if busy > g {
             late += 1;
         }
-        policy.observe(*gap);
     }
     AnalyticalEstimate {
         mean_gap_energy_mj: total_mj / gaps.len() as f64,

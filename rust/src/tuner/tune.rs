@@ -30,11 +30,10 @@ use std::sync::{Arc, Mutex};
 
 use crate::config::loader::SimConfig;
 use crate::config::schema::{PolicyParams, PolicySpec};
-use crate::coordinator::requests::TraceReplay;
 use crate::energy::analytical::Analytical;
 use crate::runner::grid::{derive_seed, Grid};
 use crate::runner::SweepRunner;
-use crate::strategies::simulate::{simulate, PrefixSim, SimReport};
+use crate::strategies::simulate::{simulate_batch, PrefixSim, SimReport};
 use crate::strategies::strategy::build_with;
 use crate::tuner::emit;
 use crate::tuner::objective::{analytical_replay, EvalMetrics, Objective};
@@ -319,7 +318,9 @@ fn params_key(p: &PolicyParams) -> ParamsKey {
 
 /// Score one parameter point on a gap slice with the full DES: replay the
 /// gaps once (no cycling: the item cap is `gaps + 1`, so exactly one
-/// pass), then collapse the report per the objective.
+/// pass) on the batched structure-of-arrays kernel — bit-identical to
+/// the scalar `TraceReplay` run — then collapse the report per the
+/// objective.
 pub fn evaluate(
     config: &SimConfig,
     model: &Analytical,
@@ -332,8 +333,7 @@ pub fn evaluate(
     let mut capped = config.clone();
     capped.workload.max_items = Some(gaps.len() as u64 + 1);
     let mut policy = build_with(spec, model, params);
-    let mut arrivals = TraceReplay::new(gaps.to_vec());
-    let report = simulate(&capped, policy.as_mut(), &mut arrivals);
+    let report = simulate_batch(&capped, policy.as_mut(), gaps);
     score_report(config, objective, &report)
 }
 

@@ -1,0 +1,128 @@
+//! Batched-kernel equivalence: the structure-of-arrays gap kernel
+//! (`GapBatch` + `ReplayCore::execute_batch` + the chunked trace driver)
+//! must be **bit-identical** to the scalar event-driven fast path AND to
+//! the golden `Board`-FSM reference on every `SimReport` field, for
+//! every policy on every bundled corpus trace, at trace sizes straddling
+//! every chunk boundary (1, `GAP_BATCH` − 1, `GAP_BATCH`,
+//! `GAP_BATCH` + 1, full trace). This suite is the proof obligation the
+//! batched perf win carries: a kernel that drifts by one ULP — or plans
+//! one gap too many near a chunk edge — fails here.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use idlewait::config::paper_default;
+use idlewait::config::schema::PolicySpec;
+use idlewait::coordinator::requests::{trace_mean, TraceReplay};
+use idlewait::energy::analytical::Analytical;
+use idlewait::strategies::simulate::{
+    simulate, simulate_batch, simulate_golden, PrefixSim, SimWorker, GAP_BATCH,
+};
+use idlewait::strategies::strategy::build;
+use idlewait::testing::assert_sim_reports_bit_identical as assert_identical;
+use idlewait::util::units::Duration;
+
+fn corpus_traces() -> Vec<(String, Vec<Duration>)> {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../workloads");
+    ["bursty_iot.csv", "diurnal_poisson.csv", "onoff_mmpp.csv"]
+        .iter()
+        .map(|name| {
+            let replay = TraceReplay::from_file(root.join(name)).expect("bundled corpus trace");
+            (name.to_string(), replay.gaps().to_vec())
+        })
+        .collect()
+}
+
+/// The chunk-boundary-straddling prefix sizes for a trace of `len` gaps,
+/// clamped and deduplicated (the 256-gap corpus trace collapses the
+/// `GAP_BATCH`/`GAP_BATCH + 1`/full cases into two).
+fn boundary_sizes(len: usize) -> Vec<usize> {
+    let mut sizes: Vec<usize> = [1, GAP_BATCH - 1, GAP_BATCH, GAP_BATCH + 1, len]
+        .iter()
+        .map(|&n| n.min(len))
+        .collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    sizes
+}
+
+/// Every `PolicySpec` × every corpus trace × every chunk-boundary size:
+/// batched == scalar fast == scalar golden, bit for bit on every field.
+#[test]
+fn every_policy_every_trace_every_boundary_is_bit_identical() {
+    let cfg = paper_default();
+    let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
+    for (trace_name, gaps) in corpus_traces() {
+        for n in boundary_sizes(gaps.len()) {
+            let slice = &gaps[..n];
+            let mut capped = cfg.clone();
+            capped.workload.max_items = Some(n as u64 + 1);
+            for spec in PolicySpec::ALL {
+                let tag = format!("{spec} on {trace_name}[..{n}]");
+                let mut policy = build(spec, &model);
+                let batched = simulate_batch(&capped, policy.as_mut(), slice);
+                let mut policy = build(spec, &model);
+                let mut arrivals = TraceReplay::new(slice.to_vec());
+                let scalar = simulate(&capped, policy.as_mut(), &mut arrivals);
+                assert_identical(&batched, &scalar, &format!("batched vs scalar: {tag}"));
+                let mut policy = build(spec, &model);
+                let mut arrivals = TraceReplay::new(slice.to_vec());
+                let golden = simulate_golden(&capped, policy.as_mut(), &mut arrivals);
+                assert_identical(&batched, &golden, &format!("batched vs golden: {tag}"));
+            }
+        }
+    }
+}
+
+/// The batched driver on a golden-reference worker (`SimWorker::golden`
+/// + `run_batch`) equals the scalar golden path: chunking composes with
+/// the `Board` FSM, not just with the gap-cost kernel.
+#[test]
+fn batched_golden_worker_matches_scalar_golden_on_the_corpus() {
+    let cfg = paper_default();
+    let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
+    for (trace_name, gaps) in corpus_traces() {
+        let mut capped = cfg.clone();
+        capped.workload.max_items = Some(gaps.len() as u64 + 1);
+        for spec in [PolicySpec::OnOff, PolicySpec::Timeout, PolicySpec::WindowedQuantile] {
+            let mut policy = build(spec, &model);
+            let batched = SimWorker::golden(&capped).run_batch(
+                &capped,
+                policy.as_mut(),
+                &gaps,
+                &format!("trace({} gaps)", gaps.len()),
+                trace_mean(&gaps),
+            );
+            let mut policy = build(spec, &model);
+            let mut arrivals = TraceReplay::new(gaps.clone());
+            let golden = simulate_golden(&capped, policy.as_mut(), &mut arrivals);
+            assert_identical(&batched, &golden, &format!("{spec} on {trace_name} (golden)"));
+        }
+    }
+}
+
+/// Resuming a `PrefixSim` across chunk boundaries (`GAP_BATCH` − 1 →
+/// `GAP_BATCH` + 1 → full trace) equals from-scratch capped runs: a
+/// resumed run chunks the tail differently than a fresh run chunks the
+/// whole, which must never change a value — only the grouping of work.
+#[test]
+fn prefix_resume_across_chunk_boundaries_matches_from_scratch() {
+    let cfg = paper_default();
+    let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
+    // diurnal_poisson: 384 gaps > GAP_BATCH + 1, so every rung is real
+    let (name, gaps) = corpus_traces().swap_remove(1);
+    assert!(gaps.len() > GAP_BATCH + 1, "corpus trace shorter than a chunk");
+    let shared: Arc<[Duration]> = gaps.clone().into();
+    for spec in [PolicySpec::IdleWaitingM12, PolicySpec::WindowedQuantile] {
+        let mut sim = PrefixSim::new(&cfg, build(spec, &model), shared.clone());
+        for prefix in [GAP_BATCH - 1, GAP_BATCH + 1, gaps.len()] {
+            let resumed = sim.advance_to(prefix);
+            let mut capped = cfg.clone();
+            capped.workload.max_items = Some(prefix as u64 + 1);
+            let mut policy = build(spec, &model);
+            let mut arrivals = TraceReplay::new(gaps[..prefix].to_vec());
+            let scratch = simulate(&capped, policy.as_mut(), &mut arrivals);
+            assert_identical(&resumed, &scratch, &format!("{spec} on {name} prefix {prefix}"));
+        }
+    }
+}
