@@ -43,6 +43,11 @@ fn main() {
     // --- sim core ---
     targets::event_queue(&mut bench, "event queue: 1k schedule+pop");
 
+    // --- fleet DES (quick shapes under IDLEWAIT_BENCH_QUICK, else full) ---
+    let quick = idlewait::bench::quick_mode();
+    targets::fleet_step_devices(&mut bench, "fleet survey: device-gap steps", &cfg, quick);
+    targets::fleet_route_requests(&mut bench, "fleet routing: least-loaded requests", &cfg, quick);
+
     // --- analytical (used inside every sweep point) ---
     let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
     bench.bench("analytical n_max (idle-waiting)", || {

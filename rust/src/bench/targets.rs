@@ -9,7 +9,9 @@
 
 use crate::bench::{black_box, Bench, BenchResult};
 use crate::config::loader::SimConfig;
+use crate::coordinator::fleet::{run_fleet, FleetOptions, Placement};
 use crate::coordinator::requests::Periodic;
+use crate::runner::SweepRunner;
 use crate::sim::{EventQueue, SimTime};
 use crate::strategies::simulate::{simulate_golden, SimWorker};
 use crate::strategies::strategy::{IdleWaiting, OnOff};
@@ -154,6 +156,69 @@ pub fn event_queue<'a>(bench: &'a mut Bench, name: &str) -> &'a BenchResult {
     })
 }
 
+/// Fleet survey throughput: every device replays a shared gap trace
+/// through the batched kernel, folded into streaming aggregates — the
+/// whole survey phase of [`run_fleet`] (routing disabled) on a
+/// single-thread runner, so the number is a per-core figure independent
+/// of the host's core count. Throughput unit: device-gap steps
+/// (devices × steps per iteration).
+pub fn fleet_step_devices<'a>(
+    bench: &'a mut Bench,
+    name: &str,
+    config: &SimConfig,
+    quick: bool,
+) -> &'a BenchResult {
+    let (devices, steps) = if quick { (64, 100) } else { (256, 400) };
+    let mut cfg = config.clone();
+    cfg.fleet.devices = devices;
+    cfg.fleet.seed = 7;
+    let options = FleetOptions {
+        steps,
+        requests: 0,
+        placement: Placement::RoundRobin,
+    };
+    let runner = SweepRunner::single();
+    bench.bench_units(name, (devices * steps) as f64, move || {
+        black_box(
+            run_fleet(&cfg, &options, &runner)
+                .expect("fleet survey bench")
+                .step
+                .items,
+        );
+    })
+}
+
+/// Fleet routing throughput: the shared arrival stream routed across the
+/// compact device states by the least-loaded placement (the O(devices)
+/// argmin scan, the most expensive picker). Survey disabled; includes
+/// building the per-device policies each iteration. Throughput unit:
+/// routed requests.
+pub fn fleet_route_requests<'a>(
+    bench: &'a mut Bench,
+    name: &str,
+    config: &SimConfig,
+    quick: bool,
+) -> &'a BenchResult {
+    let (devices, requests) = if quick { (64, 1000) } else { (256, 4000) };
+    let mut cfg = config.clone();
+    cfg.fleet.devices = devices;
+    cfg.fleet.seed = 7;
+    let options = FleetOptions {
+        steps: 0,
+        requests,
+        placement: Placement::LeastLoaded,
+    };
+    let runner = SweepRunner::single();
+    bench.bench_units(name, requests as f64, move || {
+        black_box(
+            run_fleet(&cfg, &options, &runner)
+                .expect("fleet routing bench")
+                .route
+                .served,
+        );
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,6 +240,10 @@ mod tests {
         assert!(r.ns_per_iter() > 0.0);
         let r = event_queue(&mut bench, "queue");
         assert_eq!(r.units_per_iter, 1000.0);
-        assert_eq!(bench.results().len(), 6);
+        let r = fleet_step_devices(&mut bench, "fleet-step", &cfg, true);
+        assert_eq!(r.units_per_iter, 6400.0);
+        let r = fleet_route_requests(&mut bench, "fleet-route", &cfg, true);
+        assert_eq!(r.units_per_iter, 1000.0);
+        assert_eq!(bench.results().len(), 8);
     }
 }

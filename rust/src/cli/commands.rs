@@ -19,6 +19,11 @@
 //!             [--timeout-ms T] [--ema-alpha A] [--window W] [--quantile Q]
 //!             [--saving m12]          # per-policy tunables
 //! repro plan --period 75              # policy recommendation
+//! repro fleet [--devices 1000] [--steps 256] [--requests 2000]
+//!             [--placement round-robin] [--trace FILE] [--period MS]
+//!             [--seed S] [--deadline-ms T] [--quick] [--csv PATH]
+//!             [--config FILE] [--threads N]
+//!                                     # fleet-scale DES + wake-placement routing
 //! repro bench [--json PATH] [--quick] [--filter NAME] [--items N] [--threads N]
 //!                                     # in-process perf benchmarks, optionally as JSON
 //! repro bench-compare <before.json> <after.json> [--out PATH] [--max-regress 0.25]
@@ -64,6 +69,7 @@ COMMANDS:
   multi       event-driven multi-accelerator simulation (\u{a7}4.2 extension)
   serve       Duty-cycle serving with REAL LSTM inference via PJRT
   plan        Recommend a strategy for a given request period
+  fleet       Fleet-scale DES: 100k+ devices, streaming aggregates, wake-placement routing
   bench       Time the hot paths (DES, sweeps, tuner); --json emits {name, iters, ns_per_iter, throughput}
   bench-compare  Diff two bench --json recordings: speedup table + regression verdict
   all         Run every experiment in paper order
@@ -153,6 +159,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "multi" => cmd_multi(rest),
         "serve" => cmd_serve(rest),
         "plan" => cmd_plan(rest),
+        "fleet" => cmd_fleet(rest),
         "bench" => cmd_bench(rest),
         "bench-compare" => cmd_bench_compare(rest),
         "all" => cmd_all(rest),
@@ -772,16 +779,116 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `repro fleet`: the fleet-scale DES — a per-device survey over a shared
+/// gap trace (sharded across the sweep runner, streaming aggregates only)
+/// plus wake-placement routing of a shared arrival stream. `--trace` or
+/// `--period` override the config's arrival spec; `--quick` shrinks the
+/// run for smoke tests. Output is byte-identical at any `--threads N`.
+fn cmd_fleet(argv: &[String]) -> Result<()> {
+    use crate::coordinator::fleet::{run_fleet, FleetOptions, Placement};
+
+    let args = Args::parse(
+        argv,
+        &[
+            ("devices", true),
+            ("steps", true),
+            ("requests", true),
+            ("placement", true),
+            ("trace", true),
+            ("period", true),
+            ("seed", true),
+            ("deadline-ms", true),
+            ("quick", false),
+            ("csv", true),
+            ("config", true),
+            ("threads", true),
+            ("help", false),
+        ],
+    )?;
+    if help_and_done(&args, "fleet") {
+        return Ok(());
+    }
+    let mut config = load_config(&args)?;
+    if let Some(n) = args.u64_opt("devices")? {
+        if n == 0 {
+            bail!("--devices must be at least 1");
+        }
+        config.fleet.devices = n as usize;
+    }
+    if let Some(seed) = args.u64_opt("seed")? {
+        config.fleet.seed = seed;
+    }
+    if let Some(ms) = args.f64_opt("deadline-ms")? {
+        if !(ms.is_finite() && ms > 0.0) {
+            bail!("--deadline-ms must be a positive number of milliseconds (got {ms})");
+        }
+        config.fleet.deadline = Some(Duration::from_millis(ms));
+    }
+    // arrival overrides: a gap-trace file beats --period beats the config
+    if let Some(path) = args.str_opt("trace") {
+        let replay = requests::TraceReplay::from_file(path)
+            .with_context(|| format!("loading gap trace {path}"))?;
+        let nominal = requests::trace_mean(&replay.shared_gaps());
+        config.workload.arrival = crate::config::schema::ArrivalSpec::Trace {
+            path: path.to_string(),
+            nominal,
+        };
+    } else if let Some(ms) = args.f64_opt("period")? {
+        if !(ms.is_finite() && ms > 0.0) {
+            bail!("--period must be a positive number of milliseconds (got {ms})");
+        }
+        config.workload.arrival = crate::config::schema::ArrivalSpec::Periodic {
+            period: Duration::from_millis(ms),
+        };
+    }
+    let quick = args.flag("quick") || crate::bench::quick_mode();
+    let defaults = if quick {
+        FleetOptions {
+            steps: 64,
+            requests: 500,
+            ..FleetOptions::default()
+        }
+    } else {
+        FleetOptions::default()
+    };
+    let placement = match args.str_opt("placement") {
+        Some(name) => Placement::parse(name).with_context(|| {
+            format!(
+                "unknown placement '{name}' (expected one of: {})",
+                Placement::ALL.map(|p| p.name()).join(", ")
+            )
+        })?,
+        None => defaults.placement,
+    };
+    let options = FleetOptions {
+        steps: args
+            .u64_opt("steps")?
+            .map(|v| v as usize)
+            .unwrap_or(defaults.steps),
+        requests: args
+            .u64_opt("requests")?
+            .map(|v| v as usize)
+            .unwrap_or(defaults.requests),
+        placement,
+    };
+    let runner = sweep_runner(&args)?;
+    let report = run_fleet(&config, &options, &runner).context("running the fleet simulation")?;
+    print!("{}", report.render());
+    maybe_write_csv(&args, report.to_csv())
+}
+
 /// Every target `repro bench` can register, in registration order — the
 /// vocabulary `--filter` matches against, listed verbatim when a filter
 /// matches nothing.
-const BENCH_TARGETS: [&str; 9] = [
+const BENCH_TARGETS: [&str; 11] = [
     "des_idle_waiting_items",
     "des_onoff_items",
     "des_idle_waiting_scalar_items",
     "des_onoff_scalar_items",
     "des_onoff_golden_items",
     "event_queue_events",
+    "fleet_step_devices",
+    "fleet_route_requests",
     "sweep_exp2_cells",
     "sweep_exp4_cells",
     "tune_halving_evals",
@@ -852,6 +959,14 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
     }
     if want("event_queue_events") {
         targets::event_queue(&mut bench, "event_queue_events");
+    }
+
+    // --- the fleet DES (survey sharding + placement routing) ---
+    if want("fleet_step_devices") {
+        targets::fleet_step_devices(&mut bench, "fleet_step_devices", &config, quick);
+    }
+    if want("fleet_route_requests") {
+        targets::fleet_route_requests(&mut bench, "fleet_route_requests", &config, quick);
     }
 
     // --- the sweep engine (the benches/sweep.rs gate targets) ---
@@ -1232,12 +1347,40 @@ mod tests {
             "multi",
             "serve",
             "plan",
+            "fleet",
             "bench",
             "bench-compare",
             "all",
         ] {
             run(&sv(&[cmd, "--help"])).unwrap();
         }
+    }
+
+    #[test]
+    fn fleet_small_runs() {
+        run(&sv(&[
+            "fleet",
+            "--devices",
+            "8",
+            "--steps",
+            "16",
+            "--requests",
+            "32",
+            "--placement",
+            "prefer-configured",
+            "--threads",
+            "2",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn fleet_rejects_bad_inputs() {
+        assert!(run(&sv(&["fleet", "--devices", "0"])).is_err());
+        assert!(run(&sv(&["fleet", "--placement", "warp"])).is_err());
+        assert!(run(&sv(&["fleet", "--period", "-4"])).is_err());
+        assert!(run(&sv(&["fleet", "--deadline-ms", "0"])).is_err());
+        assert!(run(&sv(&["fleet", "--trace", "/no/such/trace.csv"])).is_err());
     }
 
     #[test]

@@ -5,7 +5,7 @@
 use std::path::Path;
 
 use crate::config::schema::{
-    ConfigError, PlatformSpec, WorkloadItemSpec, WorkloadSpec,
+    ConfigError, FleetSpec, PlatformSpec, WorkloadItemSpec, WorkloadSpec,
 };
 use crate::config::{validate, yaml};
 use crate::util::json::Json;
@@ -19,6 +19,8 @@ pub struct SimConfig {
     pub item: WorkloadItemSpec,
     /// The platform description (FPGA, SPI, battery).
     pub platform: PlatformSpec,
+    /// The fleet description (`repro fleet`; defaults when absent).
+    pub fleet: FleetSpec,
 }
 
 /// Why a config failed to load.
@@ -72,6 +74,7 @@ pub fn load_str(text: &str) -> Result<SimConfig, LoadError> {
         workload: WorkloadSpec::from_json(&root)?,
         item: WorkloadItemSpec::from_json(&root)?,
         platform: PlatformSpec::from_json(&root)?,
+        fleet: FleetSpec::from_json(&root)?,
     };
     validate::validate(&config).map_err(LoadError::Invalid)?;
     Ok(config)

@@ -748,6 +748,137 @@ impl PlatformSpec {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Fleet description (heterogeneous device mixture)
+// ---------------------------------------------------------------------------
+
+/// One device class of a heterogeneous fleet: a mixture weight plus the
+/// gap policy, tunables and battery budget every device of the class
+/// runs. Per-device RNG streams are derived on top of the class params
+/// (SplitMix64 from the fleet seed), so two devices of one class still
+/// make independent randomized decisions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetClassSpec {
+    /// Relative mixture weight (> 0; weights need not sum to 1).
+    pub weight: f64,
+    /// Gap policy devices of this class run.
+    pub policy: PolicySpec,
+    /// Per-policy tunables (`policy_params` block; all optional).
+    pub params: PolicyParams,
+    /// Battery budget per device; `None` = the workload's energy budget.
+    pub battery: Option<Energy>,
+}
+
+/// The optional `fleet` block consumed by `repro fleet`: how many
+/// devices, the heterogeneity mixture over device classes, and the
+/// routing deadline. Absent block = a 1000-device fleet running the
+/// workload's own policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    /// Number of simulated devices.
+    pub devices: usize,
+    /// Fleet base seed; per-device streams are derived from it.
+    pub seed: u64,
+    /// Device-class mixture; empty = one class from the workload policy.
+    pub classes: Vec<FleetClassSpec>,
+    /// Routing deadline; `None` = the arrival's mean period.
+    pub deadline: Option<Duration>,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        FleetSpec {
+            devices: 1000,
+            seed: 0,
+            classes: Vec::new(),
+            deadline: None,
+        }
+    }
+}
+
+impl FleetSpec {
+    /// Decode the optional `fleet` mapping; absent keys keep defaults.
+    pub fn from_json(root: &Json) -> Result<FleetSpec, ConfigError> {
+        let v = match root.get("fleet") {
+            Some(f) => f,
+            None => return Ok(FleetSpec::default()),
+        };
+        let path = "fleet";
+        let mut spec = FleetSpec::default();
+        if let Some(d) = opt_u64(v, path, "devices")? {
+            spec.devices = d as usize;
+        }
+        if let Some(s) = opt_u64(v, path, "seed")? {
+            spec.seed = s;
+        }
+        if let Some(ms) = opt_f64(v, path, "deadline_ms")? {
+            spec.deadline = Some(Duration::from_millis(ms));
+        }
+        if let Some(classes) = v.get("classes") {
+            let arr = classes
+                .as_arr()
+                .ok_or_else(|| cerr(&format!("{path}.classes"), "expected a sequence"))?;
+            for (i, c) in arr.iter().enumerate() {
+                let cpath = format!("{path}.classes[{i}]");
+                let policy_name = req_str(c, &cpath, "policy")?;
+                let policy = PolicySpec::parse(policy_name).ok_or_else(|| {
+                    cerr(
+                        &format!("{cpath}.policy"),
+                        format!(
+                            "unknown policy '{policy_name}' (expected one of: {})",
+                            PolicySpec::ALL.map(|s| s.name()).join(", ")
+                        ),
+                    )
+                })?;
+                let params = match c.get("policy_params") {
+                    None | Some(Json::Null) => PolicyParams::default(),
+                    Some(p) => PolicyParams::from_json(p, &format!("{cpath}.policy_params"))?,
+                };
+                spec.classes.push(FleetClassSpec {
+                    weight: opt_f64(c, &cpath, "weight")?.unwrap_or(1.0),
+                    policy,
+                    params,
+                    battery: opt_f64(c, &cpath, "battery_j")?.map(Energy::from_joules),
+                });
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Range-check the fleet block; returns an actionable message.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.devices == 0 {
+            return Err("fleet.devices must be at least 1".into());
+        }
+        if let Some(d) = self.deadline {
+            if !(d.secs().is_finite() && d.secs() > 0.0) {
+                return Err(format!(
+                    "fleet.deadline_ms must be positive and finite (got {})",
+                    d.millis()
+                ));
+            }
+        }
+        for (i, c) in self.classes.iter().enumerate() {
+            if !(c.weight.is_finite() && c.weight > 0.0) {
+                return Err(format!(
+                    "fleet.classes[{i}].weight must be positive and finite (got {})",
+                    c.weight
+                ));
+            }
+            c.params.validate().map_err(|e| format!("fleet.classes[{i}]: {e}"))?;
+            if let Some(b) = c.battery {
+                if !(b.joules().is_finite() && b.joules() > 0.0) {
+                    return Err(format!(
+                        "fleet.classes[{i}].battery_j must be positive and finite (got {})",
+                        b.joules()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -995,6 +1126,66 @@ workload_item:
         assert_eq!(parse_saving("M1"), Some(PowerSaving::M1));
         assert_eq!(parse_saving("method1+2"), Some(PowerSaving::M12));
         assert_eq!(parse_saving("turbo"), None);
+    }
+
+    #[test]
+    fn fleet_defaults_when_absent() {
+        let spec = FleetSpec::from_json(&Json::Null).unwrap();
+        assert_eq!(spec, FleetSpec::default());
+        assert_eq!(spec.devices, 1000);
+        assert!(spec.classes.is_empty());
+        assert_eq!(spec.deadline, None);
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn fleet_block_parses() {
+        let v = yaml::parse(
+            "fleet:\n  devices: 5000\n  seed: 11\n  deadline_ms: 45.5\n  classes:\n\
+             \x20   - weight: 3\n      policy: timeout\n      battery_j: 2000\n\
+             \x20   - weight: 1\n      policy: windowed-quantile\n      policy_params:\n\
+             \x20       window: 16\n",
+        )
+        .unwrap();
+        let spec = FleetSpec::from_json(&v).unwrap();
+        assert_eq!(spec.devices, 5000);
+        assert_eq!(spec.seed, 11);
+        assert_eq!(spec.deadline, Some(Duration::from_millis(45.5)));
+        assert_eq!(spec.classes.len(), 2);
+        assert_eq!(spec.classes[0].policy, PolicySpec::Timeout);
+        assert_eq!(spec.classes[0].battery, Some(Energy::from_joules(2000.0)));
+        assert!((spec.classes[0].weight - 3.0).abs() < 1e-12);
+        assert_eq!(spec.classes[1].params.window, 16);
+        assert_eq!(spec.classes[1].battery, None);
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn fleet_validate_rejects_bad_values() {
+        let mut spec = FleetSpec {
+            devices: 0,
+            ..FleetSpec::default()
+        };
+        assert!(spec.validate().unwrap_err().contains("devices"));
+        spec.devices = 10;
+        spec.classes.push(FleetClassSpec {
+            weight: -1.0,
+            policy: PolicySpec::Timeout,
+            params: PolicyParams::default(),
+            battery: None,
+        });
+        assert!(spec.validate().unwrap_err().contains("weight"));
+        spec.classes[0].weight = 1.0;
+        spec.classes[0].battery = Some(Energy::from_joules(0.0));
+        assert!(spec.validate().unwrap_err().contains("battery_j"));
+    }
+
+    #[test]
+    fn fleet_unknown_policy_is_error() {
+        let v = yaml::parse("fleet:\n  classes:\n    - policy: warp-drive\n").unwrap();
+        let e = FleetSpec::from_json(&v).unwrap_err();
+        assert!(e.msg.contains("unknown policy"), "{e}");
+        assert!(e.path.contains("classes[0]"), "{e}");
     }
 
     #[test]

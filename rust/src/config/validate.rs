@@ -16,6 +16,7 @@ pub fn validate(cfg: &SimConfig) -> Result<(), String> {
     validate_spi(&cfg.platform.spi)?;
     validate_item(cfg)?;
     validate_workload(cfg)?;
+    cfg.fleet.validate()?;
     validate_profile(cfg)?;
     Ok(())
 }

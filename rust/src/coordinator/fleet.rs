@@ -1,0 +1,1118 @@
+//! Fleet-scale discrete-event simulation: 100k+ heterogeneous devices in
+//! one process, with streaming aggregation and wake-placement routing.
+//!
+//! The per-device simulators (`strategies::simulate`) answer "how long
+//! does *one* board live under policy X?". This module answers the fleet
+//! operator's questions: what does the *distribution* of lifetime,
+//! energy and lateness look like across a heterogeneous population, and
+//! how should a shared request stream be routed across devices whose
+//! wake state (configured / idle / powered off) the gap policies control?
+//!
+//! Two phases, both driven by the same config (`fleet` block + CLI):
+//!
+//! **Survey** — every device independently replays one shared
+//! materialized gap trace through its class policy on the batched
+//! structure-of-arrays kernel ([`SimWorker::run_batch`]). Devices are
+//! grouped into fixed-size shards (a pure function of the fleet size,
+//! never the thread count) and the shards are mapped over the
+//! work-stealing [`SweepRunner`], one reusable [`SimWorker`] per worker
+//! thread. Results are folded through *streaming* aggregates only —
+//! exact Welford moments plus bounded reservoir quantile sketches
+//! ([`ReservoirQuantiles`]) — so peak memory is O(shards + reservoir
+//! capacity), never O(devices) result vectors.
+//!
+//! **Routing** — a shared arrival stream (the workload's
+//! [`ArrivalSpec`](crate::config::ArrivalSpec), so the bundled
+//! `workloads/` traces plug straight in) is routed request-by-request
+//! across compact per-device states (policy + committed plan + battery +
+//! completion time, a few hundred bytes each) by a pluggable
+//! [`Placement`] policy. Device energetics
+//! ride the calibrated [`DeviceCosts`] constants (measured off the real
+//! [`ReplayCore`](crate::strategies::ReplayCore) ledgers), so fleet
+//! totals agree with the per-device simulators by construction.
+//!
+//! # Determinism
+//!
+//! Output is byte-identical at any `--threads N`:
+//! * every per-device stream is seeded `derive_seed(fleet_seed,
+//!   device_index)` — a pure function of the fleet seed and the device's
+//!   index, independent of which worker simulates it;
+//! * class assignment draws from its own derived stream per device;
+//! * shard boundaries depend only on the device count, and shard
+//!   aggregates (including the reservoir sketches, whose eviction
+//!   randomness is seeded per shard) are folded in shard order on the
+//!   caller thread;
+//! * the routing phase is sequential by construction.
+//!
+//! `tests/fleet_determinism.rs` pins the rendered report and CSV bytes
+//! across thread counts, and pins a size-1 homogeneous fleet bit-equal
+//! to [`simulate_batch`](crate::strategies::simulate_batch) on every
+//! [`SimReport`] field.
+
+use std::fmt;
+use std::fmt::Write as _;
+
+use crate::config::schema::{PolicyParams, PolicySpec};
+use crate::config::SimConfig;
+use crate::coordinator::requests;
+use crate::coordinator::requests::ArrivalProcess as _;
+use crate::energy::analytical::Analytical;
+use crate::runner::grid::derive_seed;
+use crate::runner::{Grid, SweepRunner};
+use crate::strategies::replay::DeviceCosts;
+use crate::strategies::simulate::{SimReport, SimWorker};
+use crate::strategies::strategy::{build_with, GapContext, GapPlan, Policy};
+use crate::util::csv::Csv;
+use crate::util::rng::Xoshiro256ss;
+use crate::util::stats::{ReservoirQuantiles, Summary};
+use crate::util::units::{Duration, Energy};
+
+/// Devices per survey shard. A pure function of the fleet size (never
+/// the thread count) so shard boundaries — and therefore the shard
+/// reservoirs' push order and fold order — are identical at any
+/// `--threads N`. Small enough to keep work stealing balanced on
+/// heterogeneous class mixtures, large enough to amortize the per-shard
+/// aggregate state.
+const SHARD_DEVICES: usize = 256;
+
+/// Capacity of the fleet-level reservoir sketches (exact below this many
+/// devices, bounded-memory estimates above).
+const FLEET_RESERVOIR_CAP: usize = 4096;
+
+// Salts folded into the fleet seed so each derived stream family
+// (class assignment, arrival materialization, reservoir eviction) is
+// statistically independent of the per-device policy streams.
+const CLASS_SALT: u64 = 0x666C_6565_7463_6C73;
+const SURVEY_SALT: u64 = 0x666C_6565_7473_7276;
+const ROUTE_SALT: u64 = 0x666C_6565_7472_7465;
+const ENERGY_SALT: u64 = 0x666C_6565_7400_0001;
+const LIFETIME_SALT: u64 = 0x666C_6565_7400_0002;
+const LATE_SALT: u64 = 0x666C_6565_7400_0003;
+const LATENCY_SALT: u64 = 0x666C_6565_7400_0004;
+const DEV_ENERGY_SALT: u64 = 0x666C_6565_7400_0005;
+const DEV_ITEMS_SALT: u64 = 0x666C_6565_7400_0006;
+
+/// Index the global (fold-target) reservoirs are seeded with — far above
+/// any real shard index, so the fold target's eviction stream never
+/// collides with a shard's.
+const GLOBAL_AGG: u64 = u64::MAX;
+
+/// Wake-placement policy: which device serves the next request of the
+/// shared arrival stream. All policies are deterministic (ties break to
+/// the lowest device index) and scan the compact device array in O(N).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Rotate through the alive devices in index order.
+    RoundRobin,
+    /// The device with the earliest completion time (shortest queue).
+    LeastLoaded,
+    /// Prefer a device that is awake and configured (no reconfiguration
+    /// energy); fall back to least-loaded.
+    PreferConfigured,
+    /// Prefer a device that is awake, configured *and* already free at
+    /// the arrival time (zero queueing); then any awake device; then
+    /// least-loaded.
+    PreferIdleAwake,
+    /// The device with the most battery remaining (wear levelling).
+    BatteryAware,
+}
+
+impl Placement {
+    /// Every placement policy, in documentation order.
+    pub const ALL: [Placement; 5] = [
+        Placement::RoundRobin,
+        Placement::LeastLoaded,
+        Placement::PreferConfigured,
+        Placement::PreferIdleAwake,
+        Placement::BatteryAware,
+    ];
+
+    /// The CLI name of this placement policy.
+    pub fn name(self) -> &'static str {
+        match self {
+            Placement::RoundRobin => "round-robin",
+            Placement::LeastLoaded => "least-loaded",
+            Placement::PreferConfigured => "prefer-configured",
+            Placement::PreferIdleAwake => "prefer-idle-awake",
+            Placement::BatteryAware => "battery-aware",
+        }
+    }
+
+    /// Parse a CLI name back into a placement policy.
+    pub fn parse(s: &str) -> Option<Placement> {
+        Placement::ALL.into_iter().find(|p| p.name() == s)
+    }
+}
+
+impl fmt::Display for Placement {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Run-shape knobs of one fleet simulation (the config's `fleet` block
+/// supplies the fleet itself: device count, seed, class mixture,
+/// deadline).
+#[derive(Debug, Clone, Copy)]
+pub struct FleetOptions {
+    /// Survey gaps replayed per device (`0` skips the survey phase).
+    pub steps: usize,
+    /// Requests in the shared routed arrival stream (`0` skips routing).
+    pub requests: usize,
+    /// Wake-placement policy routing the shared stream.
+    pub placement: Placement,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        FleetOptions {
+            steps: 256,
+            requests: 2000,
+            placement: Placement::RoundRobin,
+        }
+    }
+}
+
+/// Aggregate outcome of the survey phase: per-device distributions over
+/// the whole fleet, computed without ever materializing a per-device
+/// result vector.
+#[derive(Debug, Clone)]
+pub struct FleetStepReport {
+    /// Gaps replayed per device (total device-gap steps = devices × steps).
+    pub steps: usize,
+    /// Workload items completed across the fleet.
+    pub items: u64,
+    /// Devices whose budget died before finishing the trace.
+    pub exhausted: u64,
+    /// Distribution of per-device FPGA energy (mJ).
+    pub energy_mj: Option<Summary>,
+    /// Distribution of per-device Eq-4 lifetime (hours).
+    pub lifetime_h: Option<Summary>,
+    /// Distribution of per-device late-request rates.
+    pub late_rate: Option<Summary>,
+}
+
+impl FleetStepReport {
+    fn empty() -> FleetStepReport {
+        FleetStepReport {
+            steps: 0,
+            items: 0,
+            exhausted: 0,
+            energy_mj: None,
+            lifetime_h: None,
+            late_rate: None,
+        }
+    }
+}
+
+/// Outcome of the routing phase: fleet-level service quality and energy
+/// under one placement policy.
+#[derive(Debug, Clone)]
+pub struct FleetRouteReport {
+    /// Placement policy that routed the stream.
+    pub placement: Placement,
+    /// Requests in the shared arrival stream.
+    pub requests: usize,
+    /// Requests actually served (`served + dropped == requests`).
+    pub served: u64,
+    /// Served requests that queued behind a busy device.
+    pub late: u64,
+    /// Deadline misses: dropped requests plus requests served past the
+    /// fleet deadline.
+    pub misses: u64,
+    /// Requests dropped outright (the picked device's battery died, or
+    /// no device was left alive).
+    pub dropped: u64,
+    /// Devices whose battery died while serving.
+    pub deaths: u64,
+    /// FPGA configurations paid across the fleet.
+    pub configurations: u64,
+    /// Total energy drawn across the fleet.
+    pub total_energy: Energy,
+    /// Latest completion time across all devices (the fleet's makespan).
+    pub fleet_lifetime: Duration,
+    /// Distribution of served latency (ms), in request order.
+    pub latency_ms: Option<Summary>,
+    /// Distribution of per-device drawn energy (mJ).
+    pub device_energy_mj: Option<Summary>,
+    /// Distribution of per-device served items.
+    pub device_items: Option<Summary>,
+}
+
+impl FleetRouteReport {
+    fn empty(placement: Placement) -> FleetRouteReport {
+        FleetRouteReport {
+            placement,
+            requests: 0,
+            served: 0,
+            late: 0,
+            misses: 0,
+            dropped: 0,
+            deaths: 0,
+            configurations: 0,
+            total_energy: Energy::ZERO,
+            fleet_lifetime: Duration::ZERO,
+            latency_ms: None,
+            device_energy_mj: None,
+            device_items: None,
+        }
+    }
+}
+
+/// A full fleet-simulation report: the survey and routing phases plus
+/// the fleet shape they ran over.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// Number of simulated devices.
+    pub devices: usize,
+    /// Fleet base seed every per-device stream derives from.
+    pub seed: u64,
+    /// Number of device classes in the mixture.
+    pub classes: usize,
+    /// Survey-phase aggregates (zeroed when `steps == 0`).
+    pub step: FleetStepReport,
+    /// Routing-phase outcome (zeroed when `requests == 0`).
+    pub route: FleetRouteReport,
+}
+
+fn summary_line(name: &str, s: &Option<Summary>) -> String {
+    match s {
+        None => format!("  {name}: (no samples)\n"),
+        Some(s) => format!(
+            "  {name}: n={} mean={:.4} sd={:.4} min={:.4} p50={:.4} p90={:.4} p99={:.4} max={:.4}\n",
+            s.count, s.mean, s.std_dev, s.min, s.p50, s.p90, s.p99, s.max
+        ),
+    }
+}
+
+/// One CSV row per metric under the fixed fleet schema; scalar metrics
+/// carry their value in the `mean` column, the other statistic columns
+/// stay empty.
+fn scalar_row(csv: &mut Csv, section: &str, metric: &str, value: String) {
+    let empty = String::new;
+    csv.row(&[
+        section.to_string(),
+        metric.to_string(),
+        empty(),
+        value,
+        empty(),
+        empty(),
+        empty(),
+        empty(),
+        empty(),
+        empty(),
+        empty(),
+    ]);
+}
+
+fn dist_row(csv: &mut Csv, section: &str, metric: &str, s: &Option<Summary>) {
+    if let Some(s) = s {
+        let f = |v: f64| format!("{v}");
+        csv.row(&[
+            section.to_string(),
+            metric.to_string(),
+            s.count.to_string(),
+            f(s.mean),
+            f(s.std_dev),
+            f(s.min),
+            f(s.p50),
+            f(s.p90),
+            f(s.p95),
+            f(s.p99),
+            f(s.max),
+        ]);
+    }
+}
+
+impl FleetReport {
+    /// Multi-line human-readable rendering of both phases.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "fleet: {} devices, {} class(es), seed {}",
+            self.devices, self.classes, self.seed
+        );
+        let s = &self.step;
+        if s.steps > 0 {
+            let _ = writeln!(
+                out,
+                "survey: {} gaps/device, {} items served, {} device(s) exhausted",
+                s.steps, s.items, s.exhausted
+            );
+            out.push_str(&summary_line("energy_mj", &s.energy_mj));
+            out.push_str(&summary_line("lifetime_h", &s.lifetime_h));
+            out.push_str(&summary_line("late_rate", &s.late_rate));
+        }
+        let r = &self.route;
+        if r.requests > 0 {
+            let _ = writeln!(
+                out,
+                "routing: placement={} requests={} served={} late={} misses={} dropped={} deaths={}",
+                r.placement, r.requests, r.served, r.late, r.misses, r.dropped, r.deaths
+            );
+            let _ = writeln!(
+                out,
+                "  total_energy={:.4} J  configurations={}  fleet_lifetime={:.4} s",
+                r.total_energy.joules(),
+                r.configurations,
+                r.fleet_lifetime.secs()
+            );
+            out.push_str(&summary_line("latency_ms", &r.latency_ms));
+            out.push_str(&summary_line("device_energy_mj", &r.device_energy_mj));
+            out.push_str(&summary_line("device_items", &r.device_items));
+        }
+        out
+    }
+
+    /// The report as a fixed-schema CSV document
+    /// (`section,metric,count,mean,std_dev,min,p50,p90,p95,p99,max`):
+    /// distribution metrics fill every column, scalar metrics carry
+    /// their value in the `mean` column. Float cells use shortest
+    /// round-trip formatting, so the bytes are a determinism witness.
+    pub fn to_csv(&self) -> Csv {
+        let mut csv = Csv::new(&[
+            "section", "metric", "count", "mean", "std_dev", "min", "p50", "p90", "p95", "p99",
+            "max",
+        ]);
+        scalar_row(&mut csv, "fleet", "devices", self.devices.to_string());
+        scalar_row(&mut csv, "fleet", "classes", self.classes.to_string());
+        scalar_row(&mut csv, "fleet", "seed", self.seed.to_string());
+        let s = &self.step;
+        scalar_row(&mut csv, "survey", "steps", s.steps.to_string());
+        scalar_row(&mut csv, "survey", "items", s.items.to_string());
+        scalar_row(&mut csv, "survey", "exhausted", s.exhausted.to_string());
+        dist_row(&mut csv, "survey", "energy_mj", &s.energy_mj);
+        dist_row(&mut csv, "survey", "lifetime_h", &s.lifetime_h);
+        dist_row(&mut csv, "survey", "late_rate", &s.late_rate);
+        let r = &self.route;
+        scalar_row(&mut csv, "route", "placement", r.placement.name().to_string());
+        scalar_row(&mut csv, "route", "requests", r.requests.to_string());
+        scalar_row(&mut csv, "route", "served", r.served.to_string());
+        scalar_row(&mut csv, "route", "late", r.late.to_string());
+        scalar_row(&mut csv, "route", "misses", r.misses.to_string());
+        scalar_row(&mut csv, "route", "dropped", r.dropped.to_string());
+        scalar_row(&mut csv, "route", "deaths", r.deaths.to_string());
+        scalar_row(&mut csv, "route", "configurations", r.configurations.to_string());
+        scalar_row(
+            &mut csv,
+            "route",
+            "total_energy_j",
+            format!("{}", r.total_energy.joules()),
+        );
+        scalar_row(
+            &mut csv,
+            "route",
+            "fleet_lifetime_s",
+            format!("{}", r.fleet_lifetime.secs()),
+        );
+        dist_row(&mut csv, "route", "latency_ms", &r.latency_ms);
+        dist_row(&mut csv, "route", "device_energy_mj", &r.device_energy_mj);
+        dist_row(&mut csv, "route", "device_items", &r.device_items);
+        csv
+    }
+}
+
+/// A device class with its policy constructor inputs resolved: the
+/// config's optional fields defaulted against the workload block.
+struct DeviceClass {
+    policy: PolicySpec,
+    params: PolicyParams,
+    battery: Energy,
+    model: Analytical,
+}
+
+/// Resolve the fleet's class mixture. An empty `fleet.classes` block
+/// means one implicit class running the workload's own policy/params on
+/// the workload budget. Returns the classes plus their cumulative
+/// weights (for the per-device mixture draw).
+fn resolve_classes(config: &SimConfig) -> (Vec<DeviceClass>, Vec<f64>) {
+    let default_battery = config.workload.energy_budget;
+    let mut classes = Vec::new();
+    let mut cum = Vec::new();
+    if config.fleet.classes.is_empty() {
+        classes.push(DeviceClass {
+            policy: config.workload.policy,
+            params: config.workload.params,
+            battery: default_battery,
+            model: Analytical::new(&config.item, default_battery),
+        });
+        cum.push(1.0);
+    } else {
+        let mut total = 0.0;
+        for c in &config.fleet.classes {
+            let battery = c.battery.unwrap_or(default_battery);
+            classes.push(DeviceClass {
+                policy: c.policy,
+                params: c.params,
+                battery,
+                model: Analytical::new(&config.item, battery),
+            });
+            total += c.weight;
+            cum.push(total);
+        }
+    }
+    (classes, cum)
+}
+
+/// Which class a device belongs to: a weighted draw from the device's
+/// own derived stream, so the assignment is a pure function of
+/// `(fleet_seed, device_index)` — independent of sharding and threads.
+fn class_index(fleet_seed: u64, device: u64, cum: &[f64]) -> usize {
+    if cum.len() <= 1 {
+        return 0;
+    }
+    let total = cum[cum.len() - 1];
+    let draw = Xoshiro256ss::new(derive_seed(fleet_seed ^ CLASS_SALT, device)).next_f64() * total;
+    cum.iter()
+        .position(|&c| draw < c)
+        .unwrap_or(cum.len() - 1)
+}
+
+/// Build device `device`'s policy: its class's spec/params with the
+/// per-device seed spliced in.
+fn device_policy(
+    classes: &[DeviceClass],
+    class: usize,
+    fleet_seed: u64,
+    device: u64,
+) -> Box<dyn Policy> {
+    let c = &classes[class];
+    let mut params = c.params;
+    params.seed = derive_seed(fleet_seed, device);
+    build_with(c.policy, &c.model, &params)
+}
+
+/// Materialize `count` inter-arrival gaps from the workload's arrival
+/// spec on a salted fleet stream (IO only for `arrival: trace` specs).
+fn materialize_gaps(config: &SimConfig, count: usize, salt: u64) -> std::io::Result<Vec<Duration>> {
+    let mut process = requests::build(
+        &config.workload.arrival,
+        derive_seed(config.fleet.seed ^ salt, 0),
+    )?;
+    Ok((0..count).map(|_| process.next_gap()).collect())
+}
+
+/// Streaming per-shard aggregates: exact moments + bounded reservoir
+/// sketches, mergeable in shard order.
+#[derive(Debug, Clone)]
+struct ShardAgg {
+    energy_mj: ReservoirQuantiles,
+    lifetime_h: ReservoirQuantiles,
+    late_rate: ReservoirQuantiles,
+    items: u64,
+    exhausted: u64,
+}
+
+impl ShardAgg {
+    fn new(fleet_seed: u64, shard: u64, cap: usize) -> ShardAgg {
+        ShardAgg {
+            energy_mj: ReservoirQuantiles::new(cap, derive_seed(fleet_seed ^ ENERGY_SALT, shard)),
+            lifetime_h: ReservoirQuantiles::new(
+                cap,
+                derive_seed(fleet_seed ^ LIFETIME_SALT, shard),
+            ),
+            late_rate: ReservoirQuantiles::new(cap, derive_seed(fleet_seed ^ LATE_SALT, shard)),
+            items: 0,
+            exhausted: 0,
+        }
+    }
+
+    fn push(&mut self, report: &SimReport, expected_items: u64) {
+        self.items += report.items;
+        if report.items < expected_items {
+            self.exhausted += 1;
+        }
+        self.energy_mj.push(report.energy_exact.millijoules());
+        self.lifetime_h.push(report.lifetime.hours());
+        let rate = if report.items > 0 {
+            report.late_requests as f64 / report.items as f64
+        } else {
+            0.0
+        };
+        self.late_rate.push(rate);
+    }
+
+    fn merge(&mut self, other: &ShardAgg) {
+        self.items += other.items;
+        self.exhausted += other.exhausted;
+        self.energy_mj.merge(&other.energy_mj);
+        self.lifetime_h.merge(&other.lifetime_h);
+        self.late_rate.merge(&other.late_rate);
+    }
+}
+
+/// The survey phase: shard the fleet, replay the shared trace on every
+/// device, fold shard aggregates in shard order.
+fn run_survey(
+    config: &SimConfig,
+    gaps: &[Duration],
+    runner: &SweepRunner,
+    classes: &[DeviceClass],
+    cum: &[f64],
+) -> FleetStepReport {
+    let seed = config.fleet.seed;
+    let devices = config.fleet.devices;
+    let label = format!("trace({} gaps)", gaps.len());
+    let mean = requests::trace_mean(gaps);
+    // a device finishing the whole trace serves gaps+1 items (unless the
+    // workload's own item cap is tighter); fewer means its budget died
+    let expected = (gaps.len() as u64 + 1).min(config.workload.max_items.unwrap_or(u64::MAX));
+    let shards: Vec<(usize, usize)> = (0..devices)
+        .step_by(SHARD_DEVICES)
+        .map(|start| (start, (start + SHARD_DEVICES).min(devices)))
+        .collect();
+    let grid = Grid::new(shards);
+    let aggs: Vec<ShardAgg> = runner.run_with_state(
+        &grid,
+        || SimWorker::new(config),
+        |worker, cell| {
+            let (start, end) = *cell.params;
+            let mut agg = ShardAgg::new(seed, cell.index as u64, SHARD_DEVICES);
+            for device in start..end {
+                let class = class_index(seed, device as u64, cum);
+                let mut policy = device_policy(classes, class, seed, device as u64);
+                let report = worker.run_batch(config, policy.as_mut(), gaps, &label, mean);
+                agg.push(&report, expected);
+            }
+            agg
+        },
+    );
+    let mut total = ShardAgg::new(seed, GLOBAL_AGG, FLEET_RESERVOIR_CAP);
+    for shard in &aggs {
+        total.merge(shard);
+    }
+    FleetStepReport {
+        steps: gaps.len(),
+        items: total.items,
+        exhausted: total.exhausted,
+        energy_mj: total.energy_mj.summary(),
+        lifetime_h: total.lifetime_h.summary(),
+        late_rate: total.late_rate.summary(),
+    }
+}
+
+/// Replay exactly what the survey runs for one device — same class
+/// assignment, same derived seed, same trace labeling — on a fresh
+/// worker. A size-1 homogeneous fleet survey is therefore bit-equal to
+/// [`simulate_batch`](crate::strategies::simulate_batch) with the
+/// device-0 policy (pinned by `tests/fleet_determinism.rs`).
+pub fn survey_device(config: &SimConfig, gaps: &[Duration], device: usize) -> SimReport {
+    let (classes, cum) = resolve_classes(config);
+    let seed = config.fleet.seed;
+    let class = class_index(seed, device as u64, &cum);
+    let mut policy = device_policy(&classes, class, seed, device as u64);
+    SimWorker::new(config).run_batch(
+        config,
+        policy.as_mut(),
+        gaps,
+        &format!("trace({} gaps)", gaps.len()),
+        requests::trace_mean(gaps),
+    )
+}
+
+/// Compact per-device routing state — no `Board`, no event queue, no
+/// per-gap history: the committed gap plan is applied lazily when the
+/// next request lands on the device, using the calibrated
+/// [`DeviceCosts`] arithmetic.
+struct FleetDevice {
+    policy: Box<dyn Policy>,
+    /// Plan committed at the last completion, applied lazily on the next
+    /// request (or peeked by wake-aware placement).
+    plan: GapPlan,
+    /// Battery remaining.
+    battery: Energy,
+    /// Energy drawn so far.
+    used: Energy,
+    /// Completion time of the last served request.
+    completion: Duration,
+    /// Arrival time of the last served request (the realized gap fed to
+    /// `Policy::observe`).
+    prev_arrival: Duration,
+    /// The fabric currently holds its configuration.
+    configured: bool,
+    items: u64,
+    late: u64,
+    configurations: u64,
+    alive: bool,
+}
+
+/// What happened when a request was placed on a device.
+enum ServeOutcome {
+    /// Served; arrival-to-completion latency.
+    Served(Duration),
+    /// The device's battery died paying for this request — the device is
+    /// dead and the request dropped.
+    Died,
+}
+
+impl FleetDevice {
+    fn new(policy: Box<dyn Policy>, battery: Energy) -> FleetDevice {
+        FleetDevice {
+            policy,
+            // devices start powered off and unconfigured
+            plan: GapPlan::PowerOff,
+            battery,
+            used: Energy::ZERO,
+            completion: Duration::ZERO,
+            prev_arrival: Duration::ZERO,
+            configured: false,
+            items: 0,
+            late: 0,
+            configurations: 0,
+            alive: true,
+        }
+    }
+
+    /// Whether the device would be awake and configured at time `t`
+    /// under its committed plan (busy devices count as awake). Used by
+    /// the wake-aware placement policies; pure read, no state change.
+    fn awake_at(&self, t: Duration) -> bool {
+        if !self.alive || !self.configured || self.items == 0 {
+            return false;
+        }
+        match self.plan {
+            GapPlan::Idle(_) => true,
+            GapPlan::PowerOff => false,
+            GapPlan::IdleThenOff { timeout, .. } => (t - self.completion) <= timeout,
+        }
+    }
+
+    /// Serve a request arriving at `t`: lazily charge the idle window
+    /// since the last completion under the committed plan, reconfigure
+    /// if the fabric lost its image, pay the item, then commit the next
+    /// plan. The whole charge is checked against the battery up front —
+    /// a device that cannot afford it dies and the request is dropped.
+    fn serve(&mut self, t: Duration, costs: &DeviceCosts) -> ServeOutcome {
+        let mut charge = Energy::ZERO;
+        if self.items > 0 {
+            let window = (t - self.completion).max(Duration::ZERO);
+            match self.plan {
+                GapPlan::Idle(saving) => charge += costs.idle_power(saving) * window,
+                GapPlan::PowerOff => {}
+                GapPlan::IdleThenOff { saving, timeout } => {
+                    charge += costs.idle_power(saving) * window.min(timeout);
+                    if window > timeout {
+                        self.configured = false;
+                    }
+                }
+            }
+        }
+        let reconfigure = !self.configured;
+        let mut serve_time = costs.item_latency;
+        if reconfigure {
+            charge += costs.config_energy;
+            serve_time += costs.config_time;
+        }
+        charge += costs.item_energy;
+        if charge > self.battery {
+            self.alive = false;
+            return ServeOutcome::Died;
+        }
+        self.battery -= charge;
+        self.used += charge;
+        if reconfigure {
+            self.configured = true;
+            self.configurations += 1;
+        }
+        let start = t.max(self.completion);
+        if self.completion > t {
+            self.late += 1;
+        }
+        self.completion = start + serve_time;
+        self.items += 1;
+        // the policy observes the realized gap it planned for, then
+        // plans the gap that starts now — the same plan/observe
+        // interleaving the per-device simulators maintain
+        if self.items > 1 {
+            self.policy.observe(t - self.prev_arrival);
+        }
+        self.prev_arrival = t;
+        self.plan = self.policy.plan_gap(&GapContext {
+            items_done: self.items,
+            now: self.completion,
+        });
+        if self.plan == GapPlan::PowerOff {
+            self.configured = false;
+        }
+        ServeOutcome::Served(self.completion - t)
+    }
+}
+
+/// The lowest-index alive device passing `pred` with the earliest
+/// completion time.
+fn least_completion(devices: &[FleetDevice], pred: impl Fn(&FleetDevice) -> bool) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, d) in devices.iter().enumerate() {
+        if !d.alive || !pred(d) {
+            continue;
+        }
+        let better = match best {
+            None => true,
+            Some(b) => d.completion < devices[b].completion,
+        };
+        if better {
+            best = Some(i);
+        }
+    }
+    best
+}
+
+/// Pick the device that serves a request arriving at `t`.
+fn pick(
+    placement: Placement,
+    devices: &[FleetDevice],
+    t: Duration,
+    cursor: &mut usize,
+) -> Option<usize> {
+    match placement {
+        Placement::RoundRobin => {
+            let n = devices.len();
+            for k in 0..n {
+                let i = (*cursor + k) % n;
+                if devices[i].alive {
+                    *cursor = (i + 1) % n;
+                    return Some(i);
+                }
+            }
+            None
+        }
+        Placement::LeastLoaded => least_completion(devices, |_| true),
+        Placement::PreferConfigured => least_completion(devices, |d| d.awake_at(t))
+            .or_else(|| least_completion(devices, |_| true)),
+        Placement::PreferIdleAwake => {
+            least_completion(devices, |d| d.awake_at(t) && d.completion <= t)
+                .or_else(|| least_completion(devices, |d| d.awake_at(t)))
+                .or_else(|| least_completion(devices, |_| true))
+        }
+        Placement::BatteryAware => {
+            let mut best: Option<usize> = None;
+            for (i, d) in devices.iter().enumerate() {
+                if !d.alive {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some(b) => d.battery > devices[b].battery,
+                };
+                if better {
+                    best = Some(i);
+                }
+            }
+            best
+        }
+    }
+}
+
+/// The routing phase: drive the shared arrival stream through the
+/// placement policy across the compact device states. Sequential —
+/// deterministic regardless of the thread count.
+fn run_routing(
+    config: &SimConfig,
+    gaps: &[Duration],
+    placement: Placement,
+    classes: &[DeviceClass],
+    cum: &[f64],
+) -> FleetRouteReport {
+    let seed = config.fleet.seed;
+    let costs = DeviceCosts::measure(config);
+    let deadline = config
+        .fleet
+        .deadline
+        .unwrap_or_else(|| config.workload.arrival.mean_period());
+    let mut devices: Vec<FleetDevice> = (0..config.fleet.devices)
+        .map(|i| {
+            let class = class_index(seed, i as u64, cum);
+            FleetDevice::new(
+                device_policy(classes, class, seed, i as u64),
+                classes[class].battery,
+            )
+        })
+        .collect();
+    let mut latency = ReservoirQuantiles::new(
+        FLEET_RESERVOIR_CAP,
+        derive_seed(seed ^ LATENCY_SALT, GLOBAL_AGG),
+    );
+    let mut cursor = 0usize;
+    let (mut served, mut misses, mut dropped, mut deaths) = (0u64, 0u64, 0u64, 0u64);
+    let mut t = Duration::ZERO;
+    let mut remaining = gaps.iter();
+    loop {
+        match pick(placement, &devices, t, &mut cursor) {
+            None => {
+                dropped += 1;
+                misses += 1;
+            }
+            Some(i) => match devices[i].serve(t, &costs) {
+                ServeOutcome::Died => {
+                    deaths += 1;
+                    dropped += 1;
+                    misses += 1;
+                }
+                ServeOutcome::Served(l) => {
+                    served += 1;
+                    latency.push(l.millis());
+                    if l > deadline {
+                        misses += 1;
+                    }
+                }
+            },
+        }
+        match remaining.next() {
+            Some(gap) => t += *gap,
+            None => break,
+        }
+    }
+    // fold per-device tallies into the streaming sketches in device
+    // order (deterministic; never a per-device result vector upstream)
+    let mut device_energy = ReservoirQuantiles::new(
+        FLEET_RESERVOIR_CAP,
+        derive_seed(seed ^ DEV_ENERGY_SALT, GLOBAL_AGG),
+    );
+    let mut device_items = ReservoirQuantiles::new(
+        FLEET_RESERVOIR_CAP,
+        derive_seed(seed ^ DEV_ITEMS_SALT, GLOBAL_AGG),
+    );
+    let mut total_energy = Energy::ZERO;
+    let mut configurations = 0u64;
+    let mut late = 0u64;
+    let mut fleet_lifetime = Duration::ZERO;
+    for d in &devices {
+        device_energy.push(d.used.millijoules());
+        device_items.push(d.items as f64);
+        total_energy += d.used;
+        configurations += d.configurations;
+        late += d.late;
+        fleet_lifetime = fleet_lifetime.max(d.completion);
+    }
+    FleetRouteReport {
+        placement,
+        requests: gaps.len() + 1,
+        served,
+        late,
+        misses,
+        dropped,
+        deaths,
+        configurations,
+        total_energy,
+        fleet_lifetime,
+        latency_ms: latency.summary(),
+        device_energy_mj: device_energy.summary(),
+        device_items: device_items.summary(),
+    }
+}
+
+/// Run a full fleet simulation of `config`'s fleet block: the survey
+/// phase (sharded over `runner`, byte-identical at any thread count)
+/// and the routing phase (sequential). IO can only fail while
+/// materializing a `trace:`-file arrival stream.
+pub fn run_fleet(
+    config: &SimConfig,
+    options: &FleetOptions,
+    runner: &SweepRunner,
+) -> std::io::Result<FleetReport> {
+    let (classes, cum) = resolve_classes(config);
+    let step = if options.steps > 0 {
+        let gaps = materialize_gaps(config, options.steps, SURVEY_SALT)?;
+        run_survey(config, &gaps, runner, &classes, &cum)
+    } else {
+        FleetStepReport::empty()
+    };
+    let route = if options.requests > 0 {
+        let gaps = materialize_gaps(config, options.requests - 1, ROUTE_SALT)?;
+        run_routing(config, &gaps, options.placement, &classes, &cum)
+    } else {
+        FleetRouteReport::empty(options.placement)
+    };
+    Ok(FleetReport {
+        devices: config.fleet.devices,
+        seed: config.fleet.seed,
+        classes: classes.len(),
+        step,
+        route,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_default;
+    use crate::config::schema::FleetClassSpec;
+
+    fn fleet_config(devices: usize) -> SimConfig {
+        let mut cfg = paper_default();
+        cfg.fleet.devices = devices;
+        cfg.fleet.seed = 42;
+        cfg
+    }
+
+    fn opts(steps: usize, requests: usize, placement: Placement) -> FleetOptions {
+        FleetOptions {
+            steps,
+            requests,
+            placement,
+        }
+    }
+
+    #[test]
+    fn placement_names_round_trip() {
+        for p in Placement::ALL {
+            assert_eq!(Placement::parse(p.name()), Some(p));
+            assert_eq!(format!("{p}"), p.name());
+        }
+        assert_eq!(Placement::parse("nope"), None);
+    }
+
+    #[test]
+    fn homogeneous_survey_devices_are_identical() {
+        // one implicit idle-waiting class on a periodic trace: every
+        // device's replay is deterministic and identical, so the spread
+        // collapses to zero while counts stay per-device
+        let cfg = fleet_config(4);
+        let report = run_fleet(&cfg, &opts(16, 0, Placement::RoundRobin), &SweepRunner::single())
+            .unwrap();
+        assert_eq!(report.step.steps, 16);
+        assert_eq!(report.step.items, 4 * 17);
+        assert_eq!(report.step.exhausted, 0);
+        let s = report.step.energy_mj.unwrap();
+        assert_eq!(s.count, 4);
+        assert!(s.std_dev.abs() < 1e-12, "{}", s.std_dev);
+        assert_eq!(s.min, s.max);
+        // routing skipped
+        assert_eq!(report.route.requests, 0);
+        assert!(report.route.latency_ms.is_none());
+    }
+
+    #[test]
+    fn mixed_classes_partition_devices_deterministically() {
+        let mut cfg = fleet_config(32);
+        cfg.fleet.classes = vec![
+            FleetClassSpec {
+                weight: 1.0,
+                policy: PolicySpec::IdleWaiting,
+                params: PolicyParams::default(),
+                battery: None,
+            },
+            FleetClassSpec {
+                weight: 1.0,
+                policy: PolicySpec::OnOff,
+                params: PolicyParams::default(),
+                battery: None,
+            },
+        ];
+        let (classes, cum) = resolve_classes(&cfg);
+        assert_eq!(classes.len(), 2);
+        let picks: Vec<usize> = (0..32).map(|i| class_index(cfg.fleet.seed, i, &cum)).collect();
+        let again: Vec<usize> = (0..32).map(|i| class_index(cfg.fleet.seed, i, &cum)).collect();
+        assert_eq!(picks, again, "class assignment must be pure");
+        assert!(picks.contains(&0) && picks.contains(&1), "{picks:?}");
+    }
+
+    #[test]
+    fn round_robin_spreads_requests_evenly() {
+        let cfg = fleet_config(3);
+        let r = run_fleet(&cfg, &opts(0, 9, Placement::RoundRobin), &SweepRunner::single())
+            .unwrap()
+            .route;
+        assert_eq!(r.requests, 9);
+        assert_eq!(r.served, 9);
+        assert_eq!(r.dropped, 0);
+        assert_eq!(r.deaths, 0);
+        // 3 devices × 3 requests each, every device configured once
+        let items = r.device_items.unwrap();
+        assert_eq!(items.count, 3);
+        assert_eq!(items.min, 3.0);
+        assert_eq!(items.max, 3.0);
+        assert_eq!(r.configurations, 3);
+    }
+
+    #[test]
+    fn prefer_configured_sticks_to_one_device() {
+        let cfg = fleet_config(3);
+        let r = run_fleet(
+            &cfg,
+            &opts(0, 12, Placement::PreferConfigured),
+            &SweepRunner::single(),
+        )
+        .unwrap()
+        .route;
+        assert_eq!(r.served, 12);
+        // the first device stays configured (idle-waiting) and absorbs
+        // the whole stream: exactly one configuration fleet-wide
+        assert_eq!(r.configurations, 1);
+        let items = r.device_items.unwrap();
+        assert_eq!(items.max, 12.0);
+        assert_eq!(items.min, 0.0);
+        // 40 ms deadline (the arrival mean) is never missed at 36.2 ms
+        assert_eq!(r.misses, 0);
+    }
+
+    #[test]
+    fn battery_aware_balances_the_fleet() {
+        let cfg = fleet_config(2);
+        let r = run_fleet(
+            &cfg,
+            &opts(0, 10, Placement::BatteryAware),
+            &SweepRunner::single(),
+        )
+        .unwrap()
+        .route;
+        assert_eq!(r.served, 10);
+        let items = r.device_items.unwrap();
+        assert_eq!(items.min, 5.0);
+        assert_eq!(items.max, 5.0);
+    }
+
+    #[test]
+    fn tiny_batteries_die_and_drop_requests() {
+        // 13 mJ covers exactly one On-Off configure+item (~11.98 mJ);
+        // the second request per device cannot be paid
+        let mut cfg = fleet_config(2);
+        cfg.fleet.classes = vec![FleetClassSpec {
+            weight: 1.0,
+            policy: PolicySpec::OnOff,
+            params: PolicyParams::default(),
+            battery: Some(Energy::from_joules(0.013)),
+        }];
+        let r = run_fleet(&cfg, &opts(0, 10, Placement::RoundRobin), &SweepRunner::single())
+            .unwrap()
+            .route;
+        assert_eq!(r.deaths, 2);
+        assert_eq!(r.served, 2);
+        assert_eq!(r.dropped, 8);
+        assert_eq!(r.served + r.dropped, 10);
+        assert_eq!(r.misses, 8);
+    }
+
+    #[test]
+    fn csv_has_the_documented_schema() {
+        let cfg = fleet_config(2);
+        let report = run_fleet(&cfg, &opts(4, 4, Placement::LeastLoaded), &SweepRunner::single())
+            .unwrap();
+        let rendered = report.to_csv().render();
+        let mut lines = rendered.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "section,metric,count,mean,std_dev,min,p50,p90,p95,p99,max"
+        );
+        for line in lines {
+            assert_eq!(line.split(',').count(), 11, "{line}");
+        }
+        let text = report.render();
+        assert!(text.contains("least-loaded"), "{text}");
+        assert!(text.contains("2 devices"), "{text}");
+    }
+
+    #[test]
+    fn survey_device_reproduces_the_sharded_run() {
+        let cfg = fleet_config(3);
+        let gaps: Vec<Duration> = (0..12)
+            .map(|i| Duration::from_millis(if i % 4 == 3 { 300.0 } else { 30.0 }))
+            .collect();
+        let solo = survey_device(&cfg, &gaps, 1);
+        assert_eq!(solo.items, 13);
+        // deterministic on repeat
+        let again = survey_device(&cfg, &gaps, 1);
+        crate::testing::assert_sim_reports_bit_identical(&solo, &again, "survey_device repeat");
+    }
+}

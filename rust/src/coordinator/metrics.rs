@@ -5,15 +5,24 @@
 //! arrives — the paper's T_latency < T_req condition) and the simulated
 //! energy ledger, and renders the summary the e2e example prints.
 
-use crate::util::stats::{Summary, Welford};
+use crate::util::stats::{ReservoirQuantiles, Summary};
 use crate::util::table::{fnum, Table};
 use crate::util::units::{Duration, Energy};
 
+/// Latency samples retained for percentile estimation. Bounds serving
+/// memory at O(this) regardless of run length; percentiles stay exact
+/// up to this many requests and become an unbiased reservoir estimate
+/// beyond it (mean/min/max stay exact forever).
+const LATENCY_RESERVOIR_CAP: usize = 4096;
+
+/// Fixed seed for the latency reservoir's replacement decisions, so two
+/// identical serving runs render identical summaries.
+const LATENCY_RESERVOIR_SEED: u64 = 0x1D1E_5EED;
+
 /// Rolling serving metrics.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Metrics {
-    latencies_ms: Vec<f64>,
-    welford: Welford,
+    latencies: ReservoirQuantiles,
     /// Requests served.
     pub requests: u64,
     /// Requests whose serve latency exceeded the deadline.
@@ -26,12 +35,22 @@ pub struct Metrics {
     pub sim_elapsed: Duration,
 }
 
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::new()
+    }
+}
+
 impl Metrics {
     /// An empty metrics ledger.
     pub fn new() -> Metrics {
         Metrics {
-            welford: Welford::new(),
-            ..Default::default()
+            latencies: ReservoirQuantiles::new(LATENCY_RESERVOIR_CAP, LATENCY_RESERVOIR_SEED),
+            requests: 0,
+            deadline_misses: 0,
+            forecasts_emitted: 0,
+            sim_energy: Energy::ZERO,
+            sim_elapsed: Duration::ZERO,
         }
     }
 
@@ -39,23 +58,24 @@ impl Metrics {
     pub fn record_request(&mut self, host_latency: Duration, deadline: Duration) {
         self.requests += 1;
         self.forecasts_emitted += 1;
-        let ms = host_latency.millis();
-        self.latencies_ms.push(ms);
-        self.welford.push(ms);
+        self.latencies.push(host_latency.millis());
         if host_latency > deadline {
             self.deadline_misses += 1;
         }
     }
 
-    /// Percentile summary of recorded latencies (None before any request).
+    /// Percentile summary of recorded latencies (None before any
+    /// request). Served from a bounded reservoir: exact for the first
+    /// `LATENCY_RESERVOIR_CAP` (4096) requests, an unbiased
+    /// deterministic sample after — memory never grows with run length.
     pub fn latency_summary(&self) -> Option<Summary> {
-        Summary::of(&self.latencies_ms)
+        self.latencies.summary()
     }
 
     /// Mean recorded host latency in ms (`NaN` before any request —
     /// mirrors [`Welford::mean`](crate::util::stats::Welford::mean)).
     pub fn mean_latency_ms(&self) -> f64 {
-        self.welford.mean()
+        self.latencies.mean()
     }
 
     /// Requests per simulated second.
@@ -111,6 +131,22 @@ mod tests {
         assert_eq!(m.deadline_misses, 0);
         let s = m.latency_summary().unwrap();
         assert!(s.p50 > 0.5 && s.p50 < 1.5);
+    }
+
+    #[test]
+    fn latency_memory_is_bounded_beyond_reservoir_cap() {
+        let mut m = Metrics::new();
+        for i in 0..10_000u64 {
+            m.record_request(
+                Duration::from_millis(1.0 + (i % 100) as f64 * 0.1),
+                Duration::from_millis(40.0),
+            );
+        }
+        assert_eq!(m.requests, 10_000);
+        let s = m.latency_summary().unwrap();
+        assert_eq!(s.count, 10_000); // counts the stream, not the reservoir
+        assert!(s.p50 > 1.0 && s.p50 < 11.0, "p50={}", s.p50);
+        assert!((m.mean_latency_ms() - s.mean).abs() < 1e-12); // mean exact
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! and the serving loop that executes real inference via the PJRT runtime
 //! while accounting energy on the simulated board.
 
+pub mod fleet;
 pub mod metrics;
 pub mod requests;
 pub mod multi_sim;
@@ -9,6 +10,10 @@ pub mod scheduler;
 pub mod server;
 pub mod tracegen;
 
+pub use fleet::{
+    run_fleet, survey_device, FleetOptions, FleetReport, FleetRouteReport, FleetStepReport,
+    Placement,
+};
 pub use metrics::Metrics;
 pub use requests::{ArrivalProcess, Periodic, Poisson, TraceReplay};
 pub use tracegen::TraceKind;

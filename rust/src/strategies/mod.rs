@@ -15,7 +15,9 @@ pub mod replay;
 pub mod simulate;
 pub mod strategy;
 
-pub use replay::{item_phases, BatchRun, GapBatch, GapCostTable, GapExecution, ReplayCore, SlotId};
+pub use replay::{
+    item_phases, BatchRun, DeviceCosts, GapBatch, GapCostTable, GapExecution, ReplayCore, SlotId,
+};
 pub use simulate::{
     simulate, simulate_batch, simulate_golden, GapDecisions, PrefixSim, SimReport, SimWorker,
     GAP_BATCH,

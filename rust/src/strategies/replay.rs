@@ -31,7 +31,7 @@ use crate::device::config_fsm::ConfigProfile;
 use crate::device::fpga::FpgaState;
 use crate::device::rails::{PowerSaving, RailSet};
 use crate::strategies::strategy::GapPlan;
-use crate::util::units::{Duration, Power};
+use crate::util::units::{Duration, Energy, Power};
 
 /// Interned handle for a flash slot: index into the core's
 /// [`GapCostTable`], resolved once via [`ReplayCore::slot_id`] so the
@@ -849,6 +849,65 @@ impl ReplayCore {
     }
 }
 
+/// Precomputed per-device arithmetic constants for the fleet DES: the
+/// Table 3 idle powers, the cost of one power-on + configure of the
+/// device's slot (inrush transient included) and the serve cost of one
+/// workload item, extracted once from a scratch [`ReplayCore`]. A fleet
+/// device accounts a gap + serve step with a handful of multiplies on
+/// this `Copy` struct — no `Board`, no event queue, O(bytes) of state
+/// per device — which is what lets `repro fleet` hold 100k+ devices in
+/// one process.
+///
+/// The constants are *measured* off the same `configure_slot` /
+/// `run_phases` path every event-driven runtime uses (battery-ledger
+/// deltas across one configure and one item), so fleet-level energy
+/// arithmetic agrees with the per-device simulators by construction.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceCosts {
+    /// Table 3 idle power per power-saving combination ([`saving_index`]
+    /// encoding, same layout as [`GapCostTable`]).
+    idle_power: [Power; 4],
+    /// The slot's T_config (the paper's configuration time).
+    pub config_time: Duration,
+    /// Energy of one power-on + configure: inrush + the three stages.
+    pub config_energy: Energy,
+    /// Latency of the three active phases (T_latency without config).
+    pub item_latency: Duration,
+    /// Energy of the three active phases.
+    pub item_energy: Energy,
+}
+
+impl DeviceCosts {
+    /// Measure the constants for `config`'s platform by driving a scratch
+    /// fast-path core through one configure + one item and reading the
+    /// energy-ledger deltas.
+    pub fn measure(config: &SimConfig) -> DeviceCosts {
+        let mut core = ReplayCore::from_config(config);
+        let before = core.board.fpga_energy;
+        let config_time = core
+            .configure("lstm")
+            .expect("a fresh battery covers one configuration");
+        let after_config = core.board.fpga_energy;
+        let item_latency = core
+            .run_phases()
+            .expect("a fresh battery covers one workload item");
+        let after_item = core.board.fpga_energy;
+        DeviceCosts {
+            idle_power: core.table.idle_power,
+            config_time,
+            config_energy: after_config - before,
+            item_latency,
+            item_energy: after_item - after_config,
+        }
+    }
+
+    /// Cached Table 3 idle power for a power-saving level.
+    #[inline]
+    pub fn idle_power(&self, saving: PowerSaving) -> Power {
+        self.idle_power[saving_index(saving)]
+    }
+}
+
 /// Table 2 active phases as (power, duration) tuples.
 pub fn item_phases(item: &crate::config::schema::WorkloadItemSpec) -> [(Power, Duration); 3] {
     [
@@ -1262,6 +1321,30 @@ mod tests {
             assert_eq!(run.reconfigured, reconf, "golden={golden}");
             assert_eq!(config_time.secs().to_bits(), ct.secs().to_bits());
             assert_eq!(ledger(&core), ledger(&scalar), "golden={golden}");
+        }
+    }
+
+    #[test]
+    fn device_costs_match_the_calibrated_energies() {
+        let cfg = paper_default();
+        let costs = DeviceCosts::measure(&cfg);
+        // Table 2 / DESIGN.md §6 constants
+        assert!((costs.config_time.millis() - 36.145).abs() < 0.01);
+        // 11.852 mJ config stages + 0.1244 mJ inrush
+        assert!(
+            (costs.config_energy.millijoules() - 11.976).abs() < 0.01,
+            "{}",
+            costs.config_energy.millijoules()
+        );
+        assert!((costs.item_latency.millis() - 0.0401).abs() < 1e-9);
+        assert!((costs.item_energy.millijoules() - 0.0065).abs() < 1e-4);
+        // the idle rows are the GapCostTable's, bit for bit
+        let core = ReplayCore::from_config(&cfg);
+        for saving in [PowerSaving::BASELINE, PowerSaving::M1, PowerSaving::M12] {
+            assert_eq!(
+                costs.idle_power(saving).milliwatts().to_bits(),
+                core.table().idle_power(saving).milliwatts().to_bits()
+            );
         }
     }
 

@@ -1,6 +1,8 @@
 //! Streaming and batch statistics used by the bench harness, the PAC1934
 //! monitor model and the experiment reports.
 
+use crate::util::rng::Xoshiro256ss;
+
 /// Welford's online algorithm: numerically-stable streaming mean/variance.
 #[derive(Debug, Clone, Default)]
 pub struct Welford {
@@ -151,6 +153,134 @@ impl Summary {
     }
 }
 
+/// Bounded streaming quantile estimator: a fixed-capacity uniform sample
+/// (Vitter's Algorithm R, deterministically seeded) plus an embedded
+/// [`Welford`] accumulator, so `count`/`mean`/`std_dev`/`min`/`max` stay
+/// **exact** at any stream length while percentiles come from the
+/// reservoir. Memory is O(capacity) forever — this is the estimator
+/// behind `Metrics::latency_summary` and the fleet aggregates, replacing
+/// the old grow-without-bound latency vector. Percentiles are exact while
+/// the stream is no longer than the capacity, and an unbiased uniform
+/// subsample beyond it. Everything is a pure function of
+/// `(capacity, seed, pushed values, merge order)`.
+#[derive(Debug, Clone)]
+pub struct ReservoirQuantiles {
+    cap: usize,
+    samples: Vec<f64>,
+    rng: Xoshiro256ss,
+    moments: Welford,
+}
+
+impl ReservoirQuantiles {
+    /// An empty reservoir holding at most `cap` samples (`cap > 0`),
+    /// with replacement decisions driven by `seed`.
+    pub fn new(cap: usize, seed: u64) -> ReservoirQuantiles {
+        assert!(cap > 0, "reservoir capacity must be positive");
+        ReservoirQuantiles {
+            cap,
+            samples: Vec::new(),
+            rng: Xoshiro256ss::new(seed),
+            moments: Welford::new(),
+        }
+    }
+
+    /// Add one observation (Algorithm R: kept with probability cap/seen).
+    pub fn push(&mut self, x: f64) {
+        self.moments.push(x);
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            let j = self.rng.below(self.moments.count());
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = x;
+            }
+        }
+    }
+
+    /// Observations pushed so far (the full stream, not the reservoir).
+    pub fn count(&self) -> u64 {
+        self.moments.count()
+    }
+
+    /// Exact running mean (`NaN` before any observation).
+    pub fn mean(&self) -> f64 {
+        self.moments.mean()
+    }
+
+    /// True while every observation is still retained, i.e. percentiles
+    /// are exact rather than sampled.
+    pub fn is_exact(&self) -> bool {
+        self.moments.count() <= self.cap as u64
+    }
+
+    /// Percentile summary. Moments (`count`, `mean`, `std_dev`, `min`,
+    /// `max`) are exact over the whole stream; percentiles interpolate
+    /// over the reservoir. `None` before any observation.
+    pub fn summary(&self) -> Option<Summary> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in reservoir"));
+        Some(Summary {
+            count: self.moments.count() as usize,
+            mean: self.moments.mean(),
+            std_dev: self.moments.std_dev(),
+            min: self.moments.min(),
+            p50: percentile_sorted(&sorted, 50.0),
+            p90: percentile_sorted(&sorted, 90.0),
+            p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
+            max: self.moments.max(),
+        })
+    }
+
+    /// Fold another reservoir into this one. Moments merge exactly
+    /// (parallel Welford); samples are re-drawn by weighted sampling
+    /// without replacement (Efraimidis–Spirakis keys, each retained
+    /// sample weighted by the stream length it represents), with all
+    /// randomness from `self`'s generator — so the result is a pure
+    /// function of the two inputs and merges applied in a fixed order
+    /// (the fleet's shard order) are reproducible bit-for-bit.
+    pub fn merge(&mut self, other: &ReservoirQuantiles) {
+        if other.moments.count() == 0 {
+            return;
+        }
+        let self_w = if self.samples.is_empty() {
+            0.0
+        } else {
+            self.moments.count() as f64 / self.samples.len() as f64
+        };
+        let other_w = other.moments.count() as f64 / other.samples.len() as f64;
+        self.moments.merge(&other.moments);
+        let mut pool: Vec<(f64, f64)> =
+            Vec::with_capacity(self.samples.len() + other.samples.len());
+        pool.extend(self.samples.iter().map(|&x| (x, self_w)));
+        pool.extend(other.samples.iter().map(|&x| (x, other_w)));
+        if pool.len() <= self.cap {
+            self.samples = pool.into_iter().map(|(x, _)| x).collect();
+            return;
+        }
+        let mut keyed: Vec<(f64, usize, f64)> = pool
+            .iter()
+            .enumerate()
+            .map(|(i, &(x, w))| {
+                let u = self.rng.next_f64().max(f64::MIN_POSITIVE);
+                (u.powf(1.0 / w), i, x)
+            })
+            .collect();
+        keyed.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .expect("NaN merge key")
+                .then(a.1.cmp(&b.1))
+        });
+        keyed.truncate(self.cap);
+        // restore stream order so later merges see a stable layout
+        keyed.sort_by_key(|e| e.1);
+        self.samples = keyed.into_iter().map(|(_, _, x)| x).collect();
+    }
+}
+
 /// Linear-interpolated percentile of an ascending-sorted slice.
 pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
     assert!(!sorted.is_empty());
@@ -276,6 +406,95 @@ mod tests {
         assert!((a - 3.0).abs() < 1e-9);
         assert!((b - 2.5).abs() < 1e-9);
         assert!((r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reservoir_exact_under_capacity() {
+        let mut r = ReservoirQuantiles::new(4096, 9);
+        let xs: Vec<f64> = (0..100).map(|i| 0.5 + i as f64 * 0.01).collect();
+        for &x in &xs {
+            r.push(x);
+        }
+        assert!(r.is_exact());
+        let got = r.summary().unwrap();
+        let want = Summary::of(&xs).unwrap();
+        assert_eq!(got.count, want.count);
+        assert_eq!(got.p50.to_bits(), want.p50.to_bits());
+        assert_eq!(got.p99.to_bits(), want.p99.to_bits());
+        assert_eq!(got.min.to_bits(), want.min.to_bits());
+        assert_eq!(got.max.to_bits(), want.max.to_bits());
+    }
+
+    #[test]
+    fn reservoir_bounded_with_exact_moments() {
+        let mut r = ReservoirQuantiles::new(512, 1);
+        for i in 0..100_000u64 {
+            r.push(i as f64);
+        }
+        assert!(!r.is_exact());
+        assert_eq!(r.count(), 100_000);
+        assert_eq!(r.samples.len(), 512);
+        let s = r.summary().unwrap();
+        assert_eq!(s.count, 100_000);
+        assert!((s.mean - 49_999.5).abs() < 1e-6); // exact, via Welford
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 99_999.0);
+        // sampled percentile of a uniform ramp: loose statistical bound
+        assert!((s.p50 - 50_000.0).abs() < 10_000.0, "p50={}", s.p50);
+    }
+
+    #[test]
+    fn reservoir_is_deterministic() {
+        let mut a = ReservoirQuantiles::new(64, 42);
+        let mut b = ReservoirQuantiles::new(64, 42);
+        for i in 0..10_000u64 {
+            let x = (i as f64).sin() * 5.0;
+            a.push(x);
+            b.push(x);
+        }
+        assert_eq!(a.samples, b.samples);
+        let (sa, sb) = (a.summary().unwrap(), b.summary().unwrap());
+        assert_eq!(sa.p50.to_bits(), sb.p50.to_bits());
+        assert_eq!(sa.p95.to_bits(), sb.p95.to_bits());
+    }
+
+    #[test]
+    fn reservoir_merge_keeps_exact_moments_and_bound() {
+        let xs: Vec<f64> = (0..5_000).map(|i| (i as f64).cos() * 3.0 + 7.0).collect();
+        let mut whole = Welford::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut a = ReservoirQuantiles::new(256, 5);
+        let mut b = ReservoirQuantiles::new(256, 6);
+        for &x in &xs[..1_700] {
+            a.push(x);
+        }
+        for &x in &xs[1_700..] {
+            b.push(x);
+        }
+        let mut a2 = a.clone();
+        a.merge(&b);
+        a2.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!(a.samples.len() <= 256);
+        // merge is deterministic: same inputs, same result
+        assert_eq!(a.samples, a2.samples);
+    }
+
+    #[test]
+    fn reservoir_merge_into_empty() {
+        let mut a = ReservoirQuantiles::new(32, 1);
+        let mut b = ReservoirQuantiles::new(32, 2);
+        for i in 0..10u64 {
+            b.push(i as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 10);
+        assert_eq!(a.samples.len(), 10);
+        a.merge(&ReservoirQuantiles::new(32, 3)); // empty other: no-op
+        assert_eq!(a.count(), 10);
     }
 
     #[test]

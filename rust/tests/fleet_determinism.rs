@@ -1,0 +1,135 @@
+//! Fleet DES guarantees: byte-identical output at any thread count, a
+//! size-1 homogeneous fleet bit-equal to the single-device batched
+//! simulator, and the routing phase cross-checked against the
+//! event-driven `multi_sim` energy accounting.
+
+use idlewait::config::paper_default;
+use idlewait::config::schema::{FleetClassSpec, PolicyParams, PolicySpec};
+use idlewait::coordinator::fleet::{run_fleet, survey_device, FleetOptions, Placement};
+use idlewait::coordinator::multi_sim::{run as run_multi, MultiSimConfig};
+use idlewait::coordinator::scheduler::Policy as SchedPolicy;
+use idlewait::coordinator::tracegen::{generate_durations, TraceKind};
+use idlewait::energy::analytical::Analytical;
+use idlewait::runner::grid::derive_seed;
+use idlewait::runner::SweepRunner;
+use idlewait::strategies::simulate::simulate_batch;
+use idlewait::strategies::strategy::build_with;
+use idlewait::testing::assert_sim_reports_bit_identical;
+use idlewait::util::units::Energy;
+
+/// A heterogeneous 1000-device fleet (4 survey shards, mixture draws,
+/// reservoir merging, routing) rendered at `--threads 1` vs several
+/// parallel widths: the report and the CSV must be byte-identical.
+#[test]
+fn fleet_output_identical_at_any_thread_count() {
+    let mut cfg = paper_default();
+    cfg.fleet.devices = 1000;
+    cfg.fleet.seed = 99;
+    cfg.fleet.classes = vec![
+        FleetClassSpec {
+            weight: 3.0,
+            policy: PolicySpec::IdleWaitingM12,
+            params: PolicyParams::default(),
+            battery: None,
+        },
+        FleetClassSpec {
+            weight: 1.0,
+            policy: PolicySpec::RandomizedSkiRental,
+            params: PolicyParams::default(),
+            battery: Some(Energy::from_joules(2000.0)),
+        },
+    ];
+    let options = FleetOptions {
+        steps: 24,
+        requests: 120,
+        placement: Placement::PreferIdleAwake,
+    };
+    let reference = run_fleet(&cfg, &options, &SweepRunner::single()).unwrap();
+    let ref_text = reference.render();
+    let ref_csv = reference.to_csv().render();
+    for threads in [2, 3, 7, 16] {
+        let report = run_fleet(&cfg, &options, &SweepRunner::new(threads)).unwrap();
+        assert_eq!(report.render(), ref_text, "render, threads={threads}");
+        assert_eq!(report.to_csv().render(), ref_csv, "csv, threads={threads}");
+    }
+}
+
+/// A size-1 homogeneous fleet's survey is the single-device batched
+/// simulator: every `SimReport` field bit-equal to `simulate_batch` with
+/// the device-0 derived seed — including a seed-sensitive randomized
+/// policy, so the per-device seed plumbing is what's being pinned.
+#[test]
+fn size_one_fleet_matches_simulate_batch_bit_for_bit() {
+    let mut cfg = paper_default();
+    cfg.fleet.devices = 1;
+    cfg.fleet.seed = 123;
+    cfg.workload.policy = PolicySpec::RandomizedSkiRental;
+    let gaps = generate_durations(TraceKind::BurstyIot, 96, 40.0, 5);
+
+    let fleet_report = survey_device(&cfg, &gaps, 0);
+
+    let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
+    let mut params = cfg.workload.params;
+    params.seed = derive_seed(cfg.fleet.seed, 0);
+    let mut policy = build_with(cfg.workload.policy, &model, &params);
+    let solo_report = simulate_batch(&cfg, policy.as_mut(), &gaps);
+
+    assert_sim_reports_bit_identical(&fleet_report, &solo_report, "size-1 fleet vs simulate_batch");
+}
+
+/// The routing phase against `multi_sim` semantics: a 2-device
+/// prefer-configured fleet concentrates a periodic stream on one
+/// device that configures once and never misses — the same shape the
+/// event-driven multi-accelerator simulation produces for a pure
+/// single-slot FIFO stream — and the two accountings agree on total
+/// energy to within 5%.
+#[test]
+fn prefer_configured_routing_matches_multi_sim_energy() {
+    let requests = 400u64;
+    let mut cfg = paper_default();
+    cfg.fleet.devices = 2;
+    cfg.fleet.seed = 7;
+
+    let options = FleetOptions {
+        steps: 0,
+        requests: requests as usize,
+        placement: Placement::PreferConfigured,
+    };
+    let fleet = run_fleet(&cfg, &options, &SweepRunner::single())
+        .unwrap()
+        .route;
+    assert_eq!(fleet.served, requests);
+    assert_eq!(fleet.dropped, 0);
+    assert_eq!(fleet.deaths, 0);
+    assert_eq!(fleet.misses, 0);
+    // prefer-configured sticks to the device it warmed up: exactly one
+    // configuration, the second device untouched
+    assert_eq!(fleet.configurations, 1);
+    let items = fleet.device_items.as_ref().unwrap();
+    assert_eq!(items.max, requests as f64);
+    assert_eq!(items.min, 0.0);
+
+    let multi = run_multi(
+        &cfg,
+        &MultiSimConfig {
+            mix: 0.0, // every request targets slot A: one image, FIFO order
+            requests,
+            burst: 1,
+            policy: SchedPolicy::Fifo,
+            gap_policy: cfg.workload.policy,
+            slot_policies: Vec::new(),
+            seed: 7,
+        },
+    );
+    assert_eq!(multi.served, requests);
+    assert_eq!(multi.reordered, 0);
+    assert!(multi.reconfigurations <= 1, "{}", multi.reconfigurations);
+
+    let fleet_j = fleet.total_energy.joules();
+    let multi_j = multi.energy.joules();
+    let rel = (fleet_j - multi_j).abs() / multi_j;
+    assert!(
+        rel < 0.05,
+        "fleet {fleet_j:.4} J vs multi_sim {multi_j:.4} J (rel {rel:.4})"
+    );
+}
