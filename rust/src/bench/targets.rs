@@ -9,8 +9,11 @@
 
 use crate::bench::{black_box, Bench, BenchResult};
 use crate::config::loader::SimConfig;
+use crate::config::schema::{PolicyParams, PolicySpec};
 use crate::coordinator::fleet::{run_fleet, FleetOptions, Placement};
 use crate::coordinator::requests::Periodic;
+use crate::coordinator::scheduler::Policy as SchedPolicy;
+use crate::coordinator::serving::{poisson_sources, serve_multi, MultiServeOptions};
 use crate::runner::SweepRunner;
 use crate::sim::{EventQueue, SimTime};
 use crate::strategies::simulate::{simulate_golden, SimWorker};
@@ -219,6 +222,32 @@ pub fn fleet_route_requests<'a>(
     })
 }
 
+/// Multi-client serving coordinator throughput: N Poisson sources merged
+/// into one admission queue, batch-by-slot scheduling, and every dispatch
+/// executed on the shared energy ledger — the whole [`serve_multi`]
+/// engine including source materialization each iteration. Throughput
+/// unit: offered requests (sources × per-source requests).
+pub fn serve_queue_requests<'a>(
+    bench: &'a mut Bench,
+    name: &str,
+    config: &SimConfig,
+    quick: bool,
+) -> &'a BenchResult {
+    let (sources, per_source) = if quick { (4, 250) } else { (8, 1000) };
+    let opts = MultiServeOptions {
+        sched: SchedPolicy::BatchBySlot { window: 8 },
+        max_queue: 64,
+        gap_policy: PolicySpec::IdleWaitingM12,
+        params: PolicyParams::default(),
+    };
+    let cfg = config.clone();
+    bench.bench_units(name, (sources * per_source) as f64, move || {
+        let mean_gap = Duration::from_millis(40.0 * sources as f64);
+        let streams = poisson_sources(sources, per_source, mean_gap, mean_gap, 7);
+        black_box(serve_multi(&cfg, &opts, &streams).served);
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -244,6 +273,8 @@ mod tests {
         assert_eq!(r.units_per_iter, 6400.0);
         let r = fleet_route_requests(&mut bench, "fleet-route", &cfg, true);
         assert_eq!(r.units_per_iter, 1000.0);
-        assert_eq!(bench.results().len(), 8);
+        let r = serve_queue_requests(&mut bench, "serve-queue", &cfg, true);
+        assert_eq!(r.units_per_iter, 1000.0);
+        assert_eq!(bench.results().len(), 9);
     }
 }

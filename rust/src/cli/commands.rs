@@ -14,8 +14,13 @@
 //!            [--budget 64] [--split 0.7] [--max-late-rate R] [--seed 0]
 //!            [--csv PATH] [--emit PATH] [--threads N]
 //!                                     # auto-search PolicyParams on a trace
+//! repro exp5 [--requests 250] [--sources 4] [--period 40] [--seed 5]
+//!            [--csv PATH] [--threads N]
+//!                                     # scheduling policy × offered load grid
 //! repro serve [--policy idle-waiting] [--period 40] [--requests 100]
-//!             [--variant int8] [--arrival poisson]
+//!             [--variant int8] [--arrival poisson] [--keep-alive]
+//!             [--sources N] [--max-queue N] [--deadline-slack-ms T]
+//!             [--quick]               # --sources >= 2: multi-client coordinator
 //!             [--timeout-ms T] [--ema-alpha A] [--window W] [--quantile Q]
 //!             [--saving m12]          # per-policy tunables
 //! repro plan --period 75              # policy recommendation
@@ -62,12 +67,14 @@ COMMANDS:
   exp2        Experiment 2 (Figs 8-9): Idle-Waiting vs On-Off
   exp3        Experiment 3 (Table 3, Figs 10-11): idle power-saving
   exp4        Online gap policies \u{d7} tunables \u{d7} arrival processes (\u{a7}7 future work)
+  exp5        Multi-client scheduling \u{d7} offered load on the serving coordinator
   gen-trace   Synthesize a gap-trace workload file (bursty-iot, diurnal-poisson, onoff-mmpp)
   tune        Auto-search PolicyParams for a policy on a gap trace (grid/random/halving)
   validate    \u{a7}5.3 validation: analytical model vs discrete-event sim
   ablate      ablations: flash floor, power-on transient, multi-accel
   multi       event-driven multi-accelerator simulation (\u{a7}4.2 extension)
-  serve       Duty-cycle serving with REAL LSTM inference via PJRT
+  serve       Duty-cycle serving: 1 source = REAL LSTM inference via PJRT;
+              --sources >= 2 = the event-driven multi-client coordinator
   plan        Recommend a strategy for a given request period
   fleet       Fleet-scale DES: 100k+ devices, streaming aggregates, wake-placement routing
   bench       Time the hot paths (DES, sweeps, tuner); --json emits {name, iters, ns_per_iter, throughput}
@@ -152,6 +159,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "exp2" => cmd_exp2(rest),
         "exp3" => cmd_exp3(rest),
         "exp4" => cmd_exp4(rest),
+        "exp5" => cmd_exp5(rest),
         "gen-trace" => cmd_gen_trace(rest),
         "tune" => cmd_tune(rest),
         "validate" => cmd_validate(rest),
@@ -297,6 +305,51 @@ fn cmd_exp4(argv: &[String]) -> Result<()> {
     };
     let result = exp4_policies::run_threaded(&config, &e4, &sweep_runner(&args)?)
         .context("loading the configured arrival trace for exp4")?;
+    print!("{}", result.render());
+    maybe_write_csv(&args, result.to_csv())
+}
+
+fn cmd_exp5(argv: &[String]) -> Result<()> {
+    use crate::experiments::exp5_serving::{self, Exp5Config};
+
+    let args = Args::parse(
+        argv,
+        &[
+            ("requests", true),
+            ("sources", true),
+            ("period", true),
+            ("seed", true),
+            ("csv", true),
+            ("config", true),
+            ("threads", true),
+            ("help", false),
+        ],
+    )?;
+    if help_and_done(&args, "exp5") {
+        return Ok(());
+    }
+    let config = load_config(&args)?;
+    let defaults = Exp5Config::default();
+    let requests = args.u64_opt("requests")?.unwrap_or(defaults.requests as u64) as usize;
+    if requests == 0 {
+        bail!("--requests must be at least 1");
+    }
+    let sources = match args.u64_opt("sources")? {
+        Some(0) => bail!("--sources must be at least 1"),
+        Some(n) => n as usize,
+        None => defaults.sources,
+    };
+    let period_ms = args.f64_opt("period")?.unwrap_or(defaults.period_ms);
+    if !(period_ms.is_finite() && period_ms > 0.0) {
+        bail!("--period must be a positive number of milliseconds (got {period_ms})");
+    }
+    let e5 = Exp5Config {
+        requests,
+        sources,
+        period_ms,
+        seed: args.u64_opt("seed")?.unwrap_or(defaults.seed),
+    };
+    let result = exp5_serving::run_threaded(&config, &e5, &sweep_runner(&args)?);
     print!("{}", result.render());
     maybe_write_csv(&args, result.to_csv())
 }
@@ -616,6 +669,69 @@ fn cmd_multi(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// The `--sources >= 2` branch of `repro serve`: the event-driven
+/// multi-client coordinator on the shared energy ledger. Artifact-free —
+/// it exercises scheduling/admission/gap-policy accounting, not PJRT.
+#[allow(clippy::too_many_arguments)]
+fn serve_multi_cli(
+    args: &Args,
+    config: &SimConfig,
+    kind: PolicySpec,
+    params: PolicyParams,
+    period: Duration,
+    sources: usize,
+    max_requests: u64,
+    seed: u64,
+) -> Result<()> {
+    use crate::coordinator::scheduler::Policy as SchedPolicy;
+    use crate::coordinator::serving::{poisson_sources, serve_multi, MultiServeOptions};
+
+    // in multi mode --window is the scheduler's batching window; it rides
+    // the same flag as the quantile-policy window and shares its >= 1
+    // validation (policy_params_from_args already rejected 0)
+    let window = match args.u64_opt("window")? {
+        Some(w) => w as usize,
+        None => config.serve.window,
+    };
+    let max_queue = match args.u64_opt("max-queue")? {
+        Some(0) => bail!("--max-queue must be at least 1"),
+        Some(n) => n as usize,
+        None => config.serve.max_queue,
+    };
+    // offered load is conserved: n sources at mean gap n·period present
+    // the same aggregate rate as one client at `period`
+    let mean_gap = Duration::from_millis(period.millis() * sources as f64);
+    let slack = match args.f64_opt("deadline-slack-ms")? {
+        Some(ms) => {
+            if !(ms.is_finite() && ms > 0.0) {
+                bail!("--deadline-slack-ms must be a positive number of milliseconds (got {ms})");
+            }
+            Duration::from_millis(ms)
+        }
+        None => config.serve.deadline_slack.unwrap_or(mean_gap),
+    };
+    let per_source = ((max_requests as usize) / sources).max(1);
+    let streams = poisson_sources(sources, per_source, mean_gap, slack, seed);
+    let opts = MultiServeOptions {
+        sched: SchedPolicy::BatchBySlot { window },
+        max_queue,
+        gap_policy: kind,
+        params,
+    };
+    println!(
+        "multi-client serve: {sources} sources x {per_source} requests, window {window}, \
+         max queue {max_queue}, gap policy {}",
+        kind.name()
+    );
+    let report = serve_multi(config, &opts, &streams);
+    print!("{}", report.metrics.render());
+    println!(
+        "served: {} | reconfigurations: {} | reordered: {} | budget exhausted: {}",
+        report.served, report.reconfigurations, report.reordered, report.budget_exhausted
+    );
+    Ok(())
+}
+
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let args = Args::parse(
         argv,
@@ -628,6 +744,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             ("arrival", true),
             ("trace", true),
             ("seed", true),
+            ("sources", true),
+            ("max-queue", true),
+            ("deadline-slack-ms", true),
+            ("keep-alive", false),
+            ("quick", false),
             ("timeout-ms", true),
             ("ema-alpha", true),
             ("window", true),
@@ -647,9 +768,36 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         None => config.workload.policy,
     };
     let params = policy_params_from_args(&args, config.workload.params)?;
-    let period = Duration::from_millis(args.f64_opt("period")?.unwrap_or(40.0));
-    let max_requests = args.u64_opt("requests")?.unwrap_or(100);
+    let period_ms = args.f64_opt("period")?.unwrap_or(40.0);
+    if !(period_ms.is_finite() && period_ms > 0.0) {
+        bail!("--period must be a positive number of milliseconds (got {period_ms})");
+    }
+    let period = Duration::from_millis(period_ms);
+    let quick = args.flag("quick") || crate::bench::quick_mode();
+    let max_requests = args
+        .u64_opt("requests")?
+        .unwrap_or(if quick { 40 } else { 100 });
+    if max_requests == 0 {
+        bail!("--requests must be at least 1");
+    }
     let seed = args.u64_opt("seed")?.unwrap_or(0);
+    let sources = match args.u64_opt("sources")? {
+        Some(0) => bail!("--sources must be at least 1"),
+        Some(n) => n as usize,
+        None => config.serve.sources,
+    };
+    if sources >= 2 {
+        return serve_multi_cli(
+            &args,
+            &config,
+            kind,
+            params,
+            period,
+            sources,
+            max_requests,
+            seed,
+        );
+    }
     let variant = match args.str_opt("variant") {
         Some("int8") => Variant::ForecastInt8,
         Some("f32") | None => Variant::Forecast,
@@ -693,6 +841,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         sim: &config,
         variant,
         max_requests,
+        keep_alive: args.flag("keep-alive"),
     };
     let report = serve(&server_cfg, &runtime, policy.as_mut(), arrivals.as_mut())?;
     print!("{}", report.metrics.render());
@@ -880,7 +1029,7 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
 /// Every target `repro bench` can register, in registration order — the
 /// vocabulary `--filter` matches against, listed verbatim when a filter
 /// matches nothing.
-const BENCH_TARGETS: [&str; 11] = [
+const BENCH_TARGETS: [&str; 12] = [
     "des_idle_waiting_items",
     "des_onoff_items",
     "des_idle_waiting_scalar_items",
@@ -889,6 +1038,7 @@ const BENCH_TARGETS: [&str; 11] = [
     "event_queue_events",
     "fleet_step_devices",
     "fleet_route_requests",
+    "serve_queue_requests",
     "sweep_exp2_cells",
     "sweep_exp4_cells",
     "tune_halving_evals",
@@ -967,6 +1117,11 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
     }
     if want("fleet_route_requests") {
         targets::fleet_route_requests(&mut bench, "fleet_route_requests", &config, quick);
+    }
+
+    // --- the multi-client serving coordinator (queue + ledger on one clock) ---
+    if want("serve_queue_requests") {
+        targets::serve_queue_requests(&mut bench, "serve_queue_requests", &config, quick);
     }
 
     // --- the sweep engine (the benches/sweep.rs gate targets) ---
@@ -1239,6 +1394,16 @@ fn cmd_all(argv: &[String]) -> Result<()> {
         .context("exp4 arrival trace")?
         .render()
     );
+    println!("\n=== Experiment 5 (multi-client scheduling \u{d7} offered load) ===");
+    print!(
+        "{}",
+        crate::experiments::exp5_serving::run_threaded(
+            &config,
+            &crate::experiments::exp5_serving::Exp5Config::default(),
+            &runner,
+        )
+        .render()
+    );
     Ok(())
 }
 
@@ -1291,6 +1456,35 @@ mod tests {
     }
 
     #[test]
+    fn exp5_small_grid_runs() {
+        run(&sv(&["exp5", "--requests", "40", "--threads", "2"])).unwrap();
+    }
+
+    #[test]
+    fn exp5_rejects_bad_inputs() {
+        assert!(run(&sv(&["exp5", "--requests", "0"])).is_err());
+        assert!(run(&sv(&["exp5", "--sources", "0"])).is_err());
+        assert!(run(&sv(&["exp5", "--period", "-4"])).is_err());
+    }
+
+    #[test]
+    fn serve_multi_source_runs_without_artifacts() {
+        // the >= 2 sources branch exercises the coordinator on the
+        // simulated ledger only — no PJRT artifacts involved
+        run(&sv(&["serve", "--sources", "2", "--requests", "24", "--quick"])).unwrap();
+    }
+
+    #[test]
+    fn serve_multi_rejects_bad_inputs() {
+        assert!(run(&sv(&["serve", "--sources", "0"])).is_err());
+        assert!(run(&sv(&["serve", "--sources", "2", "--max-queue", "0"])).is_err());
+        assert!(run(&sv(&["serve", "--sources", "2", "--deadline-slack-ms", "-1"])).is_err());
+        assert!(run(&sv(&["serve", "--sources", "2", "--window", "0"])).is_err());
+        assert!(run(&sv(&["serve", "--sources", "2", "--period", "-4"])).is_err());
+        assert!(run(&sv(&["serve", "--requests", "0"])).is_err());
+    }
+
+    #[test]
     fn gen_trace_prints_to_stdout() {
         run(&sv(&["gen-trace", "--kind", "mmpp", "--gaps", "16"])).unwrap();
     }
@@ -1340,6 +1534,7 @@ mod tests {
             "exp2",
             "exp3",
             "exp4",
+            "exp5",
             "gen-trace",
             "tune",
             "validate",

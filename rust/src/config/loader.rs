@@ -5,7 +5,7 @@
 use std::path::Path;
 
 use crate::config::schema::{
-    ConfigError, FleetSpec, PlatformSpec, WorkloadItemSpec, WorkloadSpec,
+    ConfigError, FleetSpec, PlatformSpec, ServeSpec, WorkloadItemSpec, WorkloadSpec,
 };
 use crate::config::{validate, yaml};
 use crate::util::json::Json;
@@ -21,6 +21,8 @@ pub struct SimConfig {
     pub platform: PlatformSpec,
     /// The fleet description (`repro fleet`; defaults when absent).
     pub fleet: FleetSpec,
+    /// The serving description (`repro serve`; defaults when absent).
+    pub serve: ServeSpec,
 }
 
 /// Why a config failed to load.
@@ -75,6 +77,7 @@ pub fn load_str(text: &str) -> Result<SimConfig, LoadError> {
         item: WorkloadItemSpec::from_json(&root)?,
         platform: PlatformSpec::from_json(&root)?,
         fleet: FleetSpec::from_json(&root)?,
+        serve: ServeSpec::from_json(&root)?,
     };
     validate::validate(&config).map_err(LoadError::Invalid)?;
     Ok(config)

@@ -879,6 +879,96 @@ impl FleetSpec {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Serving description (multi-client coordinator)
+// ---------------------------------------------------------------------------
+
+/// The optional `serving` block consumed by `repro serve` when more than
+/// one client source feeds the board: how many sources, the scheduler's
+/// batching window, the admission queue bound, and the per-request
+/// deadline slack. Absent block = a single-source serve loop with the
+/// defaults below.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSpec {
+    /// Number of concurrent client sources.
+    pub sources: usize,
+    /// Scheduler look-ahead window (requests the batching policy may
+    /// reorder across; also the single-source quantile window).
+    pub window: usize,
+    /// Admission bound: arrivals beyond this many queued requests drop.
+    pub max_queue: usize,
+    /// Deadline slack granted to every request (arrival + slack =
+    /// deadline); `None` = one mean inter-arrival period per source.
+    pub deadline_slack: Option<Duration>,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        ServeSpec {
+            sources: 1,
+            window: 8,
+            max_queue: 64,
+            deadline_slack: None,
+        }
+    }
+}
+
+impl ServeSpec {
+    /// Decode the optional `serving` mapping; absent keys keep defaults.
+    pub fn from_json(root: &Json) -> Result<ServeSpec, ConfigError> {
+        let v = match root.get("serving") {
+            Some(s) => s,
+            None => return Ok(ServeSpec::default()),
+        };
+        let path = "serving";
+        let mut spec = ServeSpec::default();
+        if let Some(n) = opt_u64(v, path, "sources")? {
+            spec.sources = n as usize;
+        }
+        if let Some(w) = opt_u64(v, path, "window")? {
+            spec.window = w as usize;
+        }
+        if let Some(q) = opt_u64(v, path, "max_queue")? {
+            spec.max_queue = q as usize;
+        }
+        if let Some(ms) = opt_f64(v, path, "deadline_slack_ms")? {
+            spec.deadline_slack = Some(Duration::from_millis(ms));
+        }
+        Ok(spec)
+    }
+
+    /// Range-check the serving block; returns an actionable message.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.sources == 0 {
+            return Err("serving.sources must be at least 1 client source".into());
+        }
+        if self.window == 0 {
+            return Err(
+                "serving.window must be at least 1 request (got 0); the scheduler \
+                 needs a look-ahead window to batch within"
+                    .into(),
+            );
+        }
+        if self.max_queue == 0 {
+            return Err(
+                "serving.max_queue must be at least 1 (got 0); a zero-length queue \
+                 would drop every arrival at admission"
+                    .into(),
+            );
+        }
+        if let Some(s) = self.deadline_slack {
+            if !(s.secs().is_finite() && s.secs() > 0.0) {
+                return Err(format!(
+                    "serving.deadline_slack_ms must be positive and finite (got {}); \
+                     omit it to default to one mean inter-arrival period",
+                    s.millis()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1186,6 +1276,49 @@ workload_item:
         let e = FleetSpec::from_json(&v).unwrap_err();
         assert!(e.msg.contains("unknown policy"), "{e}");
         assert!(e.path.contains("classes[0]"), "{e}");
+    }
+
+    #[test]
+    fn serving_defaults_when_absent() {
+        let spec = ServeSpec::from_json(&Json::Null).unwrap();
+        assert_eq!(spec, ServeSpec::default());
+        assert_eq!(spec.sources, 1);
+        assert_eq!(spec.window, 8);
+        assert_eq!(spec.max_queue, 64);
+        assert_eq!(spec.deadline_slack, None);
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn serving_block_parses() {
+        let v = yaml::parse(
+            "serving:\n  sources: 4\n  window: 16\n  max_queue: 32\n  deadline_slack_ms: 120.5\n",
+        )
+        .unwrap();
+        let spec = ServeSpec::from_json(&v).unwrap();
+        assert_eq!(spec.sources, 4);
+        assert_eq!(spec.window, 16);
+        assert_eq!(spec.max_queue, 32);
+        assert_eq!(spec.deadline_slack, Some(Duration::from_millis(120.5)));
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn serving_validate_rejects_bad_values() {
+        let mut spec = ServeSpec {
+            sources: 0,
+            ..ServeSpec::default()
+        };
+        assert!(spec.validate().unwrap_err().contains("sources"));
+        spec.sources = 2;
+        spec.window = 0;
+        assert!(spec.validate().unwrap_err().contains("window"));
+        spec.window = 8;
+        spec.max_queue = 0;
+        assert!(spec.validate().unwrap_err().contains("max_queue"));
+        spec.max_queue = 64;
+        spec.deadline_slack = Some(Duration::from_millis(-5.0));
+        assert!(spec.validate().unwrap_err().contains("deadline_slack_ms"));
     }
 
     #[test]

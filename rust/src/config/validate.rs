@@ -17,6 +17,7 @@ pub fn validate(cfg: &SimConfig) -> Result<(), String> {
     validate_item(cfg)?;
     validate_workload(cfg)?;
     cfg.fleet.validate()?;
+    cfg.serve.validate()?;
     validate_profile(cfg)?;
     Ok(())
 }
@@ -200,6 +201,32 @@ mod tests {
     fn zero_phase_time_rejected() {
         let e = mutate("time_ms: 0.0281", "time_ms: 0").unwrap_err();
         assert!(e.contains("inference"));
+    }
+
+    /// Out-of-range `serving` knobs must fail at load time, same as the
+    /// policy tunables below.
+    #[test]
+    fn out_of_range_serving_block_rejected() {
+        let with_serving = |serving_yaml: &str| -> Result<SimConfig, String> {
+            let doc = format!("{PAPER_DEFAULT_YAML}serving:\n{serving_yaml}");
+            match load_str(&doc) {
+                Ok(cfg) => Ok(cfg),
+                Err(crate::config::loader::LoadError::Invalid(msg)) => Err(msg),
+                Err(other) => panic!("unexpected load error: {other}"),
+            }
+        };
+        let e = with_serving("  sources: 0\n").unwrap_err();
+        assert!(e.contains("serving.sources"), "{e}");
+        let e = with_serving("  window: 0\n").unwrap_err();
+        assert!(e.contains("serving.window"), "{e}");
+        let e = with_serving("  max_queue: 0\n").unwrap_err();
+        assert!(e.contains("serving.max_queue"), "{e}");
+        let e = with_serving("  deadline_slack_ms: -10\n").unwrap_err();
+        assert!(e.contains("serving.deadline_slack_ms"), "{e}");
+        // in-range block loads fine
+        let cfg = with_serving("  sources: 4\n  max_queue: 16\n").unwrap();
+        assert_eq!(cfg.serve.sources, 4);
+        assert_eq!(cfg.serve.max_queue, 16);
     }
 
     /// Out-of-range per-policy tunables must be rejected at load time

@@ -731,6 +731,7 @@ impl FleetDevice {
         self.plan = self.policy.plan_gap(&GapContext {
             items_done: self.items,
             now: self.completion,
+            queued: 0,
         });
         if self.plan == GapPlan::PowerOff {
             self.configured = false;

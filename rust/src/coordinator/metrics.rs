@@ -23,10 +23,16 @@ const LATENCY_RESERVOIR_SEED: u64 = 0x1D1E_5EED;
 #[derive(Debug, Clone)]
 pub struct Metrics {
     latencies: ReservoirQuantiles,
+    /// Simulated arrival-to-dispatch queueing delays (multi-source runs).
+    queue_waits: ReservoirQuantiles,
+    /// Simulated arrival-to-completion sojourn times (multi-source runs).
+    sojourns: ReservoirQuantiles,
     /// Requests served.
     pub requests: u64,
     /// Requests whose serve latency exceeded the deadline.
     pub deadline_misses: u64,
+    /// Requests rejected at admission because the queue was full.
+    pub dropped: u64,
     /// Forecast outputs produced by the LSTM runtime.
     pub forecasts_emitted: u64,
     /// Simulated FPGA-side energy attributed to served requests.
@@ -46,8 +52,17 @@ impl Metrics {
     pub fn new() -> Metrics {
         Metrics {
             latencies: ReservoirQuantiles::new(LATENCY_RESERVOIR_CAP, LATENCY_RESERVOIR_SEED),
+            queue_waits: ReservoirQuantiles::new(
+                LATENCY_RESERVOIR_CAP,
+                LATENCY_RESERVOIR_SEED ^ 1,
+            ),
+            sojourns: ReservoirQuantiles::new(
+                LATENCY_RESERVOIR_CAP,
+                LATENCY_RESERVOIR_SEED ^ 2,
+            ),
             requests: 0,
             deadline_misses: 0,
+            dropped: 0,
             forecasts_emitted: 0,
             sim_energy: Energy::ZERO,
             sim_elapsed: Duration::ZERO,
@@ -64,12 +79,64 @@ impl Metrics {
         }
     }
 
+    /// Record one request served by the multi-source coordinator, all on
+    /// simulated time: its queueing delay (arrival → dispatch), its
+    /// sojourn (arrival → completion), and whether the completion missed
+    /// the request's deadline. Increments `requests`/`deadline_misses`
+    /// itself — the coordinator path does not also call
+    /// [`record_request`](Self::record_request), which tracks *host*
+    /// latency for the PJRT-backed single-source loop.
+    pub fn record_sojourn(&mut self, wait: Duration, sojourn: Duration, missed: bool) {
+        self.requests += 1;
+        self.queue_waits.push(wait.millis());
+        self.sojourns.push(sojourn.millis());
+        if missed {
+            self.deadline_misses += 1;
+        }
+    }
+
+    /// Record one request rejected at admission (queue full).
+    pub fn record_drop(&mut self) {
+        self.dropped += 1;
+    }
+
+    /// Deadline-miss rate over served requests (0 before any request).
+    pub fn miss_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.deadline_misses as f64 / self.requests as f64
+        }
+    }
+
+    /// Drop rate over offered requests (served + dropped).
+    pub fn drop_rate(&self) -> f64 {
+        let offered = self.requests + self.dropped;
+        if offered == 0 {
+            0.0
+        } else {
+            self.dropped as f64 / offered as f64
+        }
+    }
+
     /// Percentile summary of recorded latencies (None before any
     /// request). Served from a bounded reservoir: exact for the first
     /// `LATENCY_RESERVOIR_CAP` (4096) requests, an unbiased
     /// deterministic sample after — memory never grows with run length.
     pub fn latency_summary(&self) -> Option<Summary> {
         self.latencies.summary()
+    }
+
+    /// Percentile summary of simulated queueing delays (None before any
+    /// [`record_sojourn`](Self::record_sojourn)).
+    pub fn queue_wait_summary(&self) -> Option<Summary> {
+        self.queue_waits.summary()
+    }
+
+    /// Percentile summary of simulated sojourn times (None before any
+    /// [`record_sojourn`](Self::record_sojourn)).
+    pub fn sojourn_summary(&self) -> Option<Summary> {
+        self.sojourns.summary()
     }
 
     /// Mean recorded host latency in ms (`NaN` before any request —
@@ -97,6 +164,19 @@ impl Metrics {
             t.row(&["host latency p95 (ms)".into(), fnum(s.p95, 4)]);
             t.row(&["host latency p99 (ms)".into(), fnum(s.p99, 4)]);
             t.row(&["host latency max (ms)".into(), fnum(s.max, 4)]);
+        }
+        if let Some(s) = self.queue_wait_summary() {
+            t.row(&["queue wait p50 (ms)".into(), fnum(s.p50, 4)]);
+            t.row(&["queue wait p95 (ms)".into(), fnum(s.p95, 4)]);
+            t.row(&["queue wait p99 (ms)".into(), fnum(s.p99, 4)]);
+        }
+        if let Some(s) = self.sojourn_summary() {
+            t.row(&["sojourn p50 (ms)".into(), fnum(s.p50, 4)]);
+            t.row(&["sojourn p95 (ms)".into(), fnum(s.p95, 4)]);
+            t.row(&["sojourn p99 (ms)".into(), fnum(s.p99, 4)]);
+            t.row(&["deadline-miss rate".into(), fnum(self.miss_rate(), 4)]);
+            t.row(&["dropped".into(), self.dropped.to_string()]);
+            t.row(&["drop rate".into(), fnum(self.drop_rate(), 4)]);
         }
         t.row(&[
             "sim energy (J)".into(),
@@ -163,6 +243,44 @@ mod tests {
         m.requests = 250;
         m.sim_elapsed = Duration::from_secs(10.0);
         assert!((m.throughput_per_sim_sec() - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sojourns_track_sla_rates_and_render() {
+        let mut m = Metrics::new();
+        for i in 0..10 {
+            m.record_sojourn(
+                Duration::from_millis(i as f64),
+                Duration::from_millis(5.0 + i as f64),
+                i >= 8,
+            );
+        }
+        m.record_drop();
+        assert_eq!(m.requests, 10);
+        assert_eq!(m.deadline_misses, 2);
+        assert_eq!(m.dropped, 1);
+        assert!((m.miss_rate() - 0.2).abs() < 1e-12);
+        assert!((m.drop_rate() - 1.0 / 11.0).abs() < 1e-12);
+        let w = m.queue_wait_summary().unwrap();
+        assert_eq!(w.count, 10);
+        let s = m.sojourn_summary().unwrap();
+        assert!(s.p50 >= 5.0 && s.p99 <= 14.0, "p50={} p99={}", s.p50, s.p99);
+        let rendered = m.render();
+        assert!(rendered.contains("queue wait p95"));
+        assert!(rendered.contains("sojourn p99"));
+        assert!(rendered.contains("deadline-miss rate"));
+        assert!(rendered.contains("drop rate"));
+        // no host-latency rows: nothing called record_request
+        assert!(!rendered.contains("host latency"));
+    }
+
+    #[test]
+    fn empty_rates_are_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.miss_rate(), 0.0);
+        assert_eq!(m.drop_rate(), 0.0);
+        assert!(m.queue_wait_summary().is_none());
+        assert!(m.sojourn_summary().is_none());
     }
 
     #[test]

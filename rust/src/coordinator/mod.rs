@@ -8,6 +8,7 @@ pub mod requests;
 pub mod multi_sim;
 pub mod scheduler;
 pub mod server;
+pub mod serving;
 pub mod tracegen;
 
 pub use fleet::{
@@ -17,4 +18,7 @@ pub use fleet::{
 pub use metrics::Metrics;
 pub use requests::{ArrivalProcess, Periodic, Poisson, TraceReplay};
 pub use tracegen::TraceKind;
-pub use server::{serve, SensorSource, ServeReport, ServerConfig, Served};
+pub use server::{serve, serve_with, Compute, SensorSource, ServeReport, ServerConfig, Served};
+pub use serving::{
+    poisson_sources, serve_multi, MultiServeOptions, MultiServeReport, ServeSource,
+};

@@ -212,6 +212,7 @@ impl State {
         let ctx = GapContext {
             items_done: self.served,
             now: finish.as_duration(),
+            queued: self.scheduler.pending() as u64,
         };
         let slot = dispatch.request.slot.min(self.gap_policies.len() - 1);
         self.current_plan = self.gap_policies[slot].plan_gap(&ctx);
@@ -319,7 +320,7 @@ pub fn run(config: &SimConfig, ms: &MultiSimConfig) -> MultiSimReport {
                 if ctx.now() < state.busy_until {
                     return; // stale wake-up
                 }
-                if let Some(dispatch) = state.scheduler.next() {
+                if let Some(dispatch) = state.scheduler.next_at(ctx.now().as_duration()) {
                     let finish = state.serve(ctx.now(), &dispatch);
                     state.busy_until = finish;
                     ctx.schedule_at(finish, Event::FabricFree);

@@ -116,6 +116,16 @@ impl MultiAccelScheduler {
         self.queue.push_back(request);
     }
 
+    /// [`next`](Self::next) with the scheduler clock re-anchored to the
+    /// caller's clock first. The serving engine passes the `ReplayCore`
+    /// ledger time here at every dispatch, so deadline accounting and
+    /// energy accounting share one clock — the internal projection only
+    /// bridges the decision itself, and drift can never accumulate.
+    pub fn next_at(&mut self, now: Duration) -> Option<Dispatch> {
+        self.now = self.now.max(now);
+        self.next()
+    }
+
     /// Pick the next request according to the policy. Returns `None` when
     /// the queue is empty.
     pub fn next(&mut self) -> Option<Dispatch> {
@@ -164,9 +174,13 @@ impl MultiAccelScheduler {
             }
         }
         let Some(i) = candidate else { return 0 };
-        // skipping queue[0..i] delays each by ≈ i item latencies; veto the
-        // reorder if any skipped request would blow its deadline
-        let delay = self.item_latency * i as f64 + self.config_time;
+        // a skipped request waits behind the *entire* same-slot batch the
+        // scheduler will keep preferring within the window, not just the
+        // i requests ahead of the candidate — bound the projection by the
+        // full batch run-length, then veto the reorder if any skipped
+        // request would blow its deadline
+        let batch_len = (0..horizon).filter(|&k| self.queue[k].slot == loaded).count();
+        let delay = self.item_latency * batch_len as f64 + self.config_time;
         for j in 0..i {
             let projected = self.now.max(self.queue[j].arrival) + delay + self.item_latency;
             if projected > self.queue[j].deadline {
@@ -287,6 +301,54 @@ mod tests {
         }
         while s.next().is_some() {}
         assert!(s.stats.deadline_violations > 0);
+    }
+
+    #[test]
+    fn reorder_veto_accounts_for_the_full_batch_run_length() {
+        // Regression: the veto used to project only `i` item latencies of
+        // extra wait for a skipped request, but a skipped request waits
+        // behind the *whole* same-slot batch inside the window. With a
+        // 10 ms item latency, skipping one slot-1 request to serve a
+        // 5-item slot-0 batch delays it by 5 items + the eventual switch
+        // (≈ 86 ms), not 1 item + switch (≈ 46 ms) — the old projection
+        // approved a reorder that blew the deadline it claimed to check.
+        let mut s = MultiAccelScheduler::new(
+            Policy::BatchBySlot { window: 8 },
+            Duration::from_millis(36.15),
+            Duration::from_millis(10.0),
+        );
+        // load slot 0; internal clock advances to 46.15 ms
+        s.submit(req(0, 0, 0.0, 1000.0));
+        assert!(s.next().unwrap().reconfigure);
+        // one slot-1 request with 60 ms slack, then a 5-deep slot-0 batch
+        s.submit(req(1, 1, 46.15, 60.0));
+        for i in 2..7 {
+            s.submit(req(i, 0, 46.15, 100_000.0));
+        }
+        let first = s.next().unwrap();
+        assert_eq!(
+            first.request.id, 1,
+            "slot-1 request must not be skipped behind a 5-item batch"
+        );
+        while s.next().is_some() {}
+        assert_eq!(s.stats.deadline_violations, 0);
+    }
+
+    #[test]
+    fn next_at_anchors_the_clock_to_the_caller() {
+        let mut s = scheduler(Policy::Fifo);
+        s.submit(req(0, 0, 0.0, 1000.0));
+        // the caller's (ledger) clock is already at 500 ms; the dispatch
+        // projection must start there, not at the private zero
+        let d = s.next_at(Duration::from_millis(500.0)).unwrap();
+        assert_eq!(d.request.id, 0);
+        // 500 + config 36.15 + item 0.04 < deadline 1000 → no violation
+        assert_eq!(s.stats.deadline_violations, 0);
+        // a second request with a deadline before the anchored clock
+        // must now be counted as violated
+        s.submit(req(1, 0, 0.0, 100.0));
+        let _ = s.next_at(Duration::from_millis(500.0));
+        assert_eq!(s.stats.deadline_violations, 1);
     }
 
     #[test]

@@ -44,6 +44,11 @@ pub struct ServerConfig<'a> {
     pub variant: Variant,
     /// Stop after this many requests (the budget still applies).
     pub max_requests: u64,
+    /// Execute a gap plan after the final request too, charging n gaps
+    /// for n requests. Off by default: the paper's Eq 2 charges exactly
+    /// n−1 gaps (the service ends with the last request, not with an
+    /// open-ended idle window).
+    pub keep_alive: bool,
 }
 
 /// Outcome of a serving run.
@@ -97,10 +102,45 @@ impl SensorSource {
     }
 }
 
+/// One inference computation: consumes a sensor window, returns the
+/// forecast value and the host-side latency. [`serve`] plugs in the PJRT
+/// runtime; tests plug in a synthetic stand-in so the serving loop's
+/// accounting is testable without compiled artifacts.
+pub type Compute<'r> = dyn FnMut(&[f32]) -> Result<(f32, Duration)> + 'r;
+
 /// Run the duty-cycle server: real inference, simulated energy.
 pub fn serve(
     cfg: &ServerConfig<'_>,
     runtime: &LstmRuntime,
+    policy: &mut dyn Policy,
+    arrivals: &mut dyn ArrivalProcess,
+) -> Result<ServeReport> {
+    let variant = cfg.variant;
+    serve_with(
+        cfg,
+        runtime.window_shape(),
+        &mut |window| {
+            let result = runtime.forecast(window, variant)?;
+            Ok((result.forecast, result.latency))
+        },
+        policy,
+        arrivals,
+    )
+}
+
+/// The serving loop behind [`serve`], generic over the compute step.
+///
+/// Deadline accounting follows the paper's per-request condition
+/// T_latency < T_req: each request's deadline is the *realized* gap
+/// before the next arrival, not the arrival process's mean. Energy
+/// accounting follows Eq 2: n requests pay n−1 inter-request gaps —
+/// the trailing gap is charged only with [`ServerConfig::keep_alive`].
+/// The gap is drawn for every request either way, so the arrival
+/// process's RNG stream is consumed identically in both modes.
+pub fn serve_with(
+    cfg: &ServerConfig<'_>,
+    window_shape: (usize, usize),
+    compute: &mut Compute<'_>,
     policy: &mut dyn Policy,
     arrivals: &mut dyn ArrivalProcess,
 ) -> Result<ServeReport> {
@@ -109,7 +149,7 @@ pub fn serve(
     let mut core = ReplayCore::from_config(sim);
     let mut metrics = Metrics::new();
     let mut served = Vec::new();
-    let (rows, cols) = runtime.window_shape();
+    let (rows, cols) = window_shape;
     let mut sensor = SensorSource::new(rows, cols, sim.workload.seed ^ 0x5EED);
     let mut budget_exhausted = false;
     let mut config_time = sim.item.configuration.time;
@@ -139,25 +179,33 @@ pub fn serve(
             budget_exhausted = true;
             break;
         }
-        // 3. real compute on the PJRT runtime
+        // 3. real compute (PJRT in production, a stub under test)
         let window = sensor.next_window();
-        let result = runtime.forecast(&window, cfg.variant)?;
-        metrics.record_request(result.latency, arrivals.mean());
+        let (forecast, host_latency) = compute(&window)?;
+        // the realized gap until the next request IS this request's
+        // deadline (T_latency < T_req, per request — not the mean)
+        let gap = arrivals.next_gap();
+        metrics.record_request(host_latency, gap);
         served.push(Served {
             request_id,
-            forecast: result.forecast,
-            host_latency: result.latency,
+            forecast,
+            host_latency,
         });
 
         // 4. gap handling per policy (shared gap-plan execution core).
         // The serving loop is offline in the same sense as the lifetime
         // DES (it draws the gap before spending it), so oracle policies
         // get clairvoyance via `decide`; online policies plan blind and
-        // then observe the realized gap.
-        let gap = arrivals.next_gap();
+        // then observe the realized gap. Eq 2 charges n−1 gaps: the gap
+        // after the final request is skipped unless keep-alive asks for
+        // an open-ended idle window.
+        if request_id + 1 == cfg.max_requests && !cfg.keep_alive {
+            break;
+        }
         let gap_ctx = GapContext {
             items_done: request_id + 1,
             now: core.board.now.as_duration(),
+            queued: 0,
         };
         let plan = decide(policy, &gap_ctx, gap);
         if core.execute_plan(plan, gap, config_time, item_latency).is_err() {
@@ -181,7 +229,7 @@ pub fn serve(
 mod tests {
     use super::*;
     use crate::config::paper_default;
-    use crate::coordinator::requests::Periodic;
+    use crate::coordinator::requests::{Periodic, TraceReplay};
     use crate::strategies::strategy::{IdleWaiting, OnOff};
 
     fn runtime() -> Option<std::rc::Rc<LstmRuntime>> {
@@ -201,6 +249,7 @@ mod tests {
             sim: &sim,
             variant: Variant::Forecast,
             max_requests: 25,
+            keep_alive: false,
         };
         let mut arr = Periodic {
             period: Duration::from_millis(40.0),
@@ -213,10 +262,10 @@ mod tests {
         let fs: Vec<f32> = report.served.iter().map(|s| s.forecast).collect();
         assert!(fs.iter().all(|f| f.is_finite()));
         assert!(fs.windows(2).any(|w| w[0] != w[1]));
-        // energy ledger: init + 25 items + 25 gaps (the server keeps
-        // idling after the last request, unlike Eq 2's n−1 gaps)
+        // energy ledger per Eq 2: init + 25 items + 24 inter-request gaps
+        // (no trailing idle window after the final request)
         let e = report.metrics.sim_energy.millijoules();
-        assert!((e - (11.98 + 25.0 * 0.0065 + 25.0 * 5.3666)).abs() < 0.5, "e={e}");
+        assert!((e - (11.98 + 25.0 * 0.0065 + 24.0 * 5.3666)).abs() < 0.5, "e={e}");
     }
 
     #[test]
@@ -227,6 +276,7 @@ mod tests {
             sim: &sim,
             variant: Variant::Forecast,
             max_requests: 10,
+            keep_alive: false,
         };
         let mut arr = Periodic {
             period: Duration::from_millis(40.0),
@@ -244,12 +294,113 @@ mod tests {
             sim: &sim,
             variant: Variant::ForecastInt8,
             max_requests: 5,
+            keep_alive: false,
         };
         let mut arr = Periodic {
             period: Duration::from_millis(40.0),
         };
         let report = serve(&cfg, &rt, &mut IdleWaiting::method12(), &mut arr).unwrap();
         assert_eq!(report.metrics.requests, 5);
+    }
+
+    /// A fixed-latency compute stand-in so the loop's accounting is
+    /// testable without PJRT artifacts.
+    fn stub(latency_ms: f64) -> impl FnMut(&[f32]) -> Result<(f32, Duration)> {
+        move |_window| Ok((0.5, Duration::from_millis(latency_ms)))
+    }
+
+    #[test]
+    fn eq2_charges_n_minus_one_gaps_by_default() {
+        // Regression (Eq 2 off-by-one): the loop used to execute a gap
+        // plan after the final request too, charging n idle gaps where
+        // Eq 2 charges n−1.
+        let sim = paper_default();
+        let cfg = ServerConfig {
+            sim: &sim,
+            variant: Variant::Forecast,
+            max_requests: 25,
+            keep_alive: false,
+        };
+        let mut arr = Periodic {
+            period: Duration::from_millis(40.0),
+        };
+        let report = serve_with(
+            &cfg,
+            (24, 6),
+            &mut stub(1.0),
+            &mut IdleWaiting::baseline(),
+            &mut arr,
+        )
+        .unwrap();
+        assert_eq!(report.metrics.requests, 25);
+        // init + 25 items + 24 gaps idled at the 134.3 mW baseline
+        let e = report.metrics.sim_energy.millijoules();
+        let want = 11.98 + 25.0 * 0.0065 + 24.0 * 5.3666;
+        assert!((e - want).abs() < 0.5, "e={e} want={want}");
+    }
+
+    #[test]
+    fn keep_alive_charges_the_trailing_gap() {
+        let sim = paper_default();
+        let run = |keep_alive| {
+            let cfg = ServerConfig {
+                sim: &sim,
+                variant: Variant::Forecast,
+                max_requests: 25,
+                keep_alive,
+            };
+            let mut arr = Periodic {
+                period: Duration::from_millis(40.0),
+            };
+            serve_with(
+                &cfg,
+                (24, 6),
+                &mut stub(1.0),
+                &mut IdleWaiting::baseline(),
+                &mut arr,
+            )
+            .unwrap()
+        };
+        let default = run(false).metrics.sim_energy.millijoules();
+        let kept = run(true).metrics.sim_energy.millijoules();
+        // exactly one extra 40 ms baseline idle gap (≈ 5.3666 mJ)
+        assert!(
+            ((kept - default) - 5.3666).abs() < 0.05,
+            "kept={kept} default={default}"
+        );
+    }
+
+    #[test]
+    fn deadline_misses_count_against_the_realized_gap() {
+        // Regression (deadline vs realized gap): misses used to be
+        // counted against the arrival process's *mean* period. On a
+        // bursty trace alternating 5 ms / 75 ms gaps (mean 40 ms) with a
+        // fixed 10 ms host latency, the mean-based rule counts 0 misses;
+        // the paper's per-request T_latency < T_req counts one miss per
+        // 5 ms gap — half the requests.
+        let sim = paper_default();
+        let cfg = ServerConfig {
+            sim: &sim,
+            variant: Variant::Forecast,
+            max_requests: 10,
+            keep_alive: false,
+        };
+        let mut arr = TraceReplay::new(vec![
+            Duration::from_millis(5.0),
+            Duration::from_millis(75.0),
+        ]);
+        assert!((arr.mean().millis() - 40.0).abs() < 1e-9);
+        let report = serve_with(
+            &cfg,
+            (24, 6),
+            &mut stub(10.0),
+            &mut IdleWaiting::baseline(),
+            &mut arr,
+        )
+        .unwrap();
+        assert_eq!(report.metrics.requests, 10);
+        // every 5 ms realized gap is shorter than the 10 ms latency
+        assert_eq!(report.metrics.deadline_misses, 5);
     }
 
     #[test]

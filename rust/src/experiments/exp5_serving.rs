@@ -1,0 +1,319 @@
+//! Experiment 5 (beyond the paper): scheduling policy × offered load on
+//! the multi-client serving coordinator.
+//!
+//! The paper serves one periodic client. This grid asks what happens
+//! when several clients share the board: every scheduling policy
+//! (FIFO and same-slot batching at three window sizes) runs against
+//! four offered-load levels (0.5× to 4× the nominal per-board rate),
+//! with Poisson sources alternating between the two accelerator slots.
+//! Each cell runs the full [`serve_multi`] coordinator — admission
+//! bound, batching window, gap policy and energy ledger on one clock —
+//! and reports served/dropped counts, reconfigurations, energy and the
+//! sojourn-time SLA percentiles.
+//!
+//! Determinism: every policy row of a load column replays the *same*
+//! materialized source columns (drawn once per load from seeds derived
+//! off the experiment seed, Arc-shared across rows), and cells are pure
+//! functions of their grid point — so the CSV is byte-identical at any
+//! `--threads N`.
+
+use crate::config::loader::SimConfig;
+use crate::config::schema::{PolicyParams, PolicySpec};
+use crate::coordinator::scheduler::Policy as SchedPolicy;
+use crate::coordinator::serving::{poisson_sources, serve_multi, MultiServeOptions, ServeSource};
+use crate::runner::grid::{cross, derive_seed};
+use crate::runner::SweepRunner;
+use crate::util::csv::Csv;
+use crate::util::table::{fcount, fnum, Table};
+use crate::util::units::Duration;
+
+/// The scheduling-policy axis, in output order.
+pub const POLICIES: [(&str, SchedPolicy); 4] = [
+    ("fifo", SchedPolicy::Fifo),
+    ("batch-4", SchedPolicy::BatchBySlot { window: 4 }),
+    ("batch-8", SchedPolicy::BatchBySlot { window: 8 }),
+    ("batch-16", SchedPolicy::BatchBySlot { window: 16 }),
+];
+
+/// The offered-load axis: multiples of the nominal per-board rate
+/// (1.0× = one request per `period_ms` across all sources combined).
+pub const LOADS: [(&str, f64); 4] = [
+    ("0.5x", 0.5),
+    ("1.0x", 1.0),
+    ("2.0x", 2.0),
+    ("4.0x", 4.0),
+];
+
+/// Admission bound every cell runs with.
+const MAX_QUEUE: usize = 64;
+
+/// Per-run parameters.
+#[derive(Debug, Clone)]
+pub struct Exp5Config {
+    /// Requests generated per source.
+    pub requests: usize,
+    /// Concurrent client sources (alternating accelerator slots).
+    pub sources: usize,
+    /// Nominal per-board mean inter-arrival time at 1.0× load (ms).
+    pub period_ms: f64,
+    /// Experiment seed; source streams derive from it per load column.
+    pub seed: u64,
+}
+
+impl Default for Exp5Config {
+    fn default() -> Self {
+        Exp5Config {
+            requests: 250,
+            sources: 4,
+            period_ms: 40.0,
+            seed: 5,
+        }
+    }
+}
+
+/// One grid cell's outcome.
+#[derive(Debug, Clone)]
+pub struct Exp5Row {
+    /// Scheduling-policy label (`fifo`, `batch-8`, …).
+    pub policy: &'static str,
+    /// Offered-load label (`0.5x`, …).
+    pub load: &'static str,
+    /// Requests served to completion.
+    pub served: u64,
+    /// Requests dropped at admission.
+    pub dropped: u64,
+    /// FPGA configurations performed.
+    pub reconfigurations: u64,
+    /// Exact FPGA-side energy drawn (mJ).
+    pub energy_mj: f64,
+    /// Sojourn-time percentiles (ms); zero when nothing was served.
+    pub sojourn_p50_ms: f64,
+    /// 95th-percentile sojourn (ms).
+    pub sojourn_p95_ms: f64,
+    /// 99th-percentile sojourn (ms).
+    pub sojourn_p99_ms: f64,
+    /// Deadline-miss rate over served requests.
+    pub miss_rate: f64,
+    /// Drop rate over offered requests.
+    pub drop_rate: f64,
+}
+
+/// Full Experiment 5 results (row-major: policy outer, load inner).
+#[derive(Debug, Clone)]
+pub struct Exp5Result {
+    /// All grid cells in row-major order.
+    pub rows: Vec<Exp5Row>,
+    /// Requests per source.
+    pub requests: usize,
+    /// Concurrent sources.
+    pub sources: usize,
+}
+
+/// Run the grid single-threaded; see [`run_threaded`] for the parallel
+/// path.
+pub fn run(config: &SimConfig, e5: &Exp5Config) -> Exp5Result {
+    run_threaded(config, e5, &SweepRunner::single())
+}
+
+/// The scheduling-policy × offered-load grid on the sweep engine.
+pub fn run_threaded(config: &SimConfig, e5: &Exp5Config, runner: &SweepRunner) -> Exp5Result {
+    let sources = e5.sources.max(1);
+    // One materialized source set per load column, Arc-shared by every
+    // policy row: same arrivals, different scheduling. The deadline
+    // slack tracks the per-source mean gap, so "equal miss pressure"
+    // holds across load levels.
+    let columns: Vec<Vec<ServeSource>> = LOADS
+        .iter()
+        .enumerate()
+        .map(|(load_idx, (_, factor))| {
+            let mean_gap = Duration::from_millis(e5.period_ms * sources as f64 / factor);
+            poisson_sources(
+                sources,
+                e5.requests,
+                mean_gap,
+                mean_gap,
+                derive_seed(e5.seed, 0x200 + load_idx as u64),
+            )
+        })
+        .collect();
+
+    let load_axis: Vec<usize> = (0..LOADS.len()).collect();
+    let grid = cross(&POLICIES, &load_axis);
+    let rows = runner.run(&grid, |cell| {
+        let ((policy_name, sched), load_idx) = cell.params;
+        let (load_name, _) = LOADS[*load_idx];
+        let opts = MultiServeOptions {
+            sched: *sched,
+            max_queue: MAX_QUEUE,
+            gap_policy: PolicySpec::IdleWaitingM12,
+            params: PolicyParams::default(),
+        };
+        let r = serve_multi(config, &opts, &columns[*load_idx]);
+        let sojourn = r.metrics.sojourn_summary();
+        Exp5Row {
+            policy: *policy_name,
+            load: load_name,
+            served: r.served,
+            dropped: r.metrics.dropped,
+            reconfigurations: r.reconfigurations,
+            energy_mj: r.metrics.sim_energy.millijoules(),
+            sojourn_p50_ms: sojourn.as_ref().map_or(0.0, |s| s.p50),
+            sojourn_p95_ms: sojourn.as_ref().map_or(0.0, |s| s.p95),
+            sojourn_p99_ms: sojourn.as_ref().map_or(0.0, |s| s.p99),
+            miss_rate: r.metrics.miss_rate(),
+            drop_rate: r.metrics.drop_rate(),
+        }
+    });
+    Exp5Result {
+        rows,
+        requests: e5.requests,
+        sources,
+    }
+}
+
+impl Exp5Result {
+    /// The row for a (policy label, load label) cell.
+    pub fn row(&self, policy: &str, load: &str) -> &Exp5Row {
+        self.rows
+            .iter()
+            .find(|r| r.policy == policy && r.load == load)
+            .expect("cell present")
+    }
+
+    /// Render the ASCII results table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            "policy",
+            "load",
+            "served",
+            "dropped",
+            "reconfigs",
+            "energy (mJ)",
+            "sojourn p95 (ms)",
+            "miss rate",
+            "drop rate",
+        ])
+        .with_title(format!(
+            "Experiment 5: scheduling x load ({} sources x {} requests)",
+            self.sources, self.requests
+        ));
+        for r in &self.rows {
+            t.row(&[
+                r.policy.into(),
+                r.load.into(),
+                fcount(r.served),
+                fcount(r.dropped),
+                fcount(r.reconfigurations),
+                fnum(r.energy_mj, 2),
+                fnum(r.sojourn_p95_ms, 3),
+                fnum(r.miss_rate, 4),
+                fnum(r.drop_rate, 4),
+            ]);
+        }
+        t.render()
+    }
+
+    /// The grid as CSV (the published `repro exp5 --csv` schema).
+    pub fn to_csv(&self) -> Csv {
+        let mut csv = Csv::new(&[
+            "policy",
+            "load",
+            "served",
+            "dropped",
+            "reconfigs",
+            "energy_mj",
+            "sojourn_p50_ms",
+            "sojourn_p95_ms",
+            "sojourn_p99_ms",
+            "miss_rate",
+            "drop_rate",
+        ]);
+        for r in &self.rows {
+            csv.row(&[
+                r.policy.to_string(),
+                r.load.to_string(),
+                r.served.to_string(),
+                r.dropped.to_string(),
+                r.reconfigurations.to_string(),
+                format!("{}", r.energy_mj),
+                format!("{}", r.sojourn_p50_ms),
+                format!("{}", r.sojourn_p95_ms),
+                format!("{}", r.sojourn_p99_ms),
+                format!("{}", r.miss_rate),
+                format!("{}", r.drop_rate),
+            ]);
+        }
+        csv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_default;
+
+    fn small() -> Exp5Config {
+        Exp5Config {
+            requests: 60,
+            sources: 4,
+            period_ms: 40.0,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn grid_covers_every_policy_and_load() {
+        let r = run(&paper_default(), &small());
+        assert_eq!(r.rows.len(), POLICIES.len() * LOADS.len());
+        for (policy, _) in POLICIES {
+            for (load, _) in LOADS {
+                let row = r.row(policy, load);
+                assert_eq!(row.served + row.dropped, 4 * 60, "{policy}/{load}");
+            }
+        }
+    }
+
+    #[test]
+    fn rows_of_a_load_column_see_the_same_arrivals() {
+        // the offered total is a property of the column, not the policy
+        let r = run(&paper_default(), &small());
+        for (load, _) in LOADS {
+            let offered: Vec<u64> = POLICIES
+                .iter()
+                .map(|(p, _)| {
+                    let row = r.row(p, load);
+                    row.served + row.dropped
+                })
+                .collect();
+            assert!(offered.windows(2).all(|w| w[0] == w[1]), "{load}: {offered:?}");
+        }
+    }
+
+    #[test]
+    fn batching_amortizes_switches_under_pressure() {
+        // at 4x load the queue backs up, which is exactly where the
+        // batching window pays: fewer switches than FIFO, less energy
+        let r = run(&paper_default(), &small());
+        let fifo = r.row("fifo", "4.0x");
+        let batched = r.row("batch-16", "4.0x");
+        assert!(
+            batched.reconfigurations < fifo.reconfigurations,
+            "batched {} vs fifo {}",
+            batched.reconfigurations,
+            fifo.reconfigurations
+        );
+        assert!(batched.energy_mj < fifo.energy_mj);
+    }
+
+    #[test]
+    fn renders_and_csv() {
+        let r = run(&paper_default(), &small());
+        assert!(r.render().contains("Experiment 5"));
+        let csv = r.to_csv();
+        assert_eq!(csv.n_rows(), r.rows.len());
+        assert!(csv.render().starts_with("policy,load,served"));
+    }
+
+    // Thread-count invariance (threads=1 vs N byte-identical CSV) is
+    // covered by tests/serve_determinism.rs.
+}

@@ -9,6 +9,7 @@
 //! | Table 3, Figs 10–11, 499.06 ms, 12.39× | [`exp3`] |
 //! | §5.3 validation (2.8%/2.7%) | [`validation`] |
 //! | §7 future work: online policies × irregular arrivals | [`exp4_policies`] |
+//! | §4.2 extension: multi-client scheduling × offered load | [`exp5_serving`] |
 //! | Published values | [`paper`] |
 
 pub mod ablation;
@@ -16,6 +17,7 @@ pub mod exp1;
 pub mod exp2;
 pub mod exp3;
 pub mod exp4_policies;
+pub mod exp5_serving;
 pub mod fig2;
 pub mod paper;
 pub mod validation;

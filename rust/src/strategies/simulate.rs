@@ -243,6 +243,7 @@ fn plan_gap(
     let gap_ctx = GapContext {
         items_done: ledger.items,
         now: arrival,
+        queued: 0,
     };
     let plan = decide(policy, &gap_ctx, gap);
     match core.execute_plan(plan, gap, ledger.config_time, ledger.item_latency) {
@@ -371,6 +372,7 @@ fn drive_trace(
             scratch.ctxs.push(GapContext {
                 items_done: ledger.items + k as u64,
                 now: at.as_duration(),
+                queued: 0,
             });
             scratch.arrivals.push(at + gap);
         }

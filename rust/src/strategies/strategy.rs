@@ -69,6 +69,11 @@ pub struct GapContext {
     pub items_done: u64,
     /// Simulated time at item completion.
     pub now: Duration,
+    /// Requests already waiting behind the item just served (the serving
+    /// coordinator's queue depth; 0 in single-stream contexts). A queued
+    /// burst is known work, not a forecast — policies may plan "stay
+    /// configured" on it without clairvoyance.
+    pub queued: u64,
 }
 
 /// Escape hatch for clairvoyant policies: sees the true upcoming gap.
@@ -608,6 +613,46 @@ impl Policy for RandomizedSkiRental {
     }
 }
 
+/// Wrapper that holds configuration whenever requests are already queued
+/// behind the item just served, delegating to the inner policy only for
+/// genuinely empty gaps. The serving coordinator wraps its gap policy in
+/// this: a queued burst is certain future work ([`GapContext::queued`]),
+/// so powering off before it would pay a reconfiguration for nothing —
+/// no clairvoyance involved, unlike [`Oracle`].
+pub struct BurstHold {
+    inner: Box<dyn Policy>,
+    saving: PowerSaving,
+}
+
+impl BurstHold {
+    /// Wrap `inner`, idling at `saving` while the queue is non-empty.
+    pub fn new(inner: Box<dyn Policy>, saving: PowerSaving) -> BurstHold {
+        BurstHold { inner, saving }
+    }
+}
+
+impl Policy for BurstHold {
+    fn kind(&self) -> PolicySpec {
+        self.inner.kind()
+    }
+
+    fn plan_gap(&mut self, ctx: &GapContext) -> GapPlan {
+        if ctx.queued > 0 {
+            GapPlan::Idle(self.saving)
+        } else {
+            self.inner.plan_gap(ctx)
+        }
+    }
+
+    fn observe(&mut self, actual_gap: Duration) {
+        self.inner.observe(actual_gap);
+    }
+
+    fn label(&self) -> String {
+        format!("burst-hold({})", self.inner.label())
+    }
+}
+
 /// Construct the policy for a config-level [`PolicySpec`] with explicit
 /// tunables. The named Idle-Waiting variants keep their fixed levels;
 /// every advanced policy takes its idle mode (and any tunable it reads)
@@ -675,6 +720,7 @@ mod tests {
         GapContext {
             items_done: 0,
             now: Duration::ZERO,
+            queued: 0,
         }
     }
 
@@ -901,6 +947,7 @@ mod tests {
             .map(|i| GapContext {
                 items_done: i as u64 + 1,
                 now: Duration::ZERO,
+                queued: 0,
             })
             .collect()
     }
@@ -938,6 +985,7 @@ mod tests {
             let next = GapContext {
                 items_done: gaps.len() as u64 + 1,
                 now: Duration::ZERO,
+                queued: 0,
             };
             if spec != PolicySpec::RandomizedSkiRental {
                 assert_eq!(
@@ -991,6 +1039,18 @@ mod tests {
             assert_eq!(fast.savings(), slow.savings(), "{spec}");
             assert_eq!(fast.timeouts(), slow.timeouts(), "{spec}");
         }
+    }
+
+    #[test]
+    fn burst_hold_idles_while_the_queue_is_nonempty() {
+        let mut p = BurstHold::new(Box::new(OnOff), PowerSaving::M12);
+        let queued = GapContext { queued: 3, ..ctx() };
+        // a queued burst holds configuration even over a power-off policy
+        assert_eq!(p.plan_gap(&queued), GapPlan::Idle(PowerSaving::M12));
+        // an empty queue delegates to the inner policy
+        assert_eq!(p.plan_gap(&ctx()), GapPlan::PowerOff);
+        assert_eq!(p.kind(), PolicySpec::OnOff);
+        assert_eq!(p.label(), "burst-hold(on-off)");
     }
 
     #[test]

@@ -171,6 +171,7 @@ pub fn analytical_replay(
         .map(|i| GapContext {
             items_done: i as u64 + 1,
             now: Duration::ZERO,
+            queued: 0,
         })
         .collect();
     let mut batch = GapBatch::default();

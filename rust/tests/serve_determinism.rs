@@ -1,0 +1,124 @@
+//! Serving-coordinator determinism: `serve_multi` and the exp5 grid are
+//! pure functions of (config, options, sources) — reruns and thread
+//! counts must be byte-identical, per the CLI's `--threads` contract.
+
+use idlewait::config::paper_default;
+use idlewait::config::schema::{PolicyParams, PolicySpec};
+use idlewait::coordinator::scheduler::Policy as SchedPolicy;
+use idlewait::coordinator::{poisson_sources, serve_multi, MultiServeOptions, ServeSource};
+use idlewait::experiments::exp5_serving::{self, Exp5Config};
+use idlewait::runner::SweepRunner;
+use idlewait::util::units::Duration;
+
+fn e5() -> Exp5Config {
+    Exp5Config {
+        requests: 50,
+        sources: 4,
+        period_ms: 40.0,
+        seed: 11,
+    }
+}
+
+/// The exp5 policy × load grid: threads 1 vs N vs auto → byte-identical
+/// CSV (order + formatting + values).
+#[test]
+fn exp5_csv_identical_at_any_thread_count() {
+    let cfg = paper_default();
+    let reference = exp5_serving::run_threaded(&cfg, &e5(), &SweepRunner::single())
+        .to_csv()
+        .render();
+    for threads in [2, 5, 8] {
+        let out = exp5_serving::run_threaded(&cfg, &e5(), &SweepRunner::new(threads))
+            .to_csv()
+            .render();
+        assert_eq!(out, reference, "threads={threads}");
+    }
+    let auto = exp5_serving::run_threaded(&cfg, &e5(), &SweepRunner::auto())
+        .to_csv()
+        .render();
+    assert_eq!(auto, reference, "threads=0 (auto)");
+}
+
+/// Rerunning the same exp5 grid in-process reproduces the exact CSV —
+/// no hidden global state between runs.
+#[test]
+fn exp5_reruns_are_byte_identical() {
+    let cfg = paper_default();
+    let runner = SweepRunner::new(3);
+    let a = exp5_serving::run_threaded(&cfg, &e5(), &runner).to_csv().render();
+    let b = exp5_serving::run_threaded(&cfg, &e5(), &runner).to_csv().render();
+    assert_eq!(a, b);
+}
+
+/// The raw coordinator: identical (options, sources) inputs produce the
+/// same rendered metrics and counters across independent runs.
+#[test]
+fn serve_multi_reruns_are_byte_identical() {
+    let cfg = paper_default();
+    let opts = MultiServeOptions {
+        sched: SchedPolicy::BatchBySlot { window: 8 },
+        max_queue: 64,
+        gap_policy: PolicySpec::IdleWaitingM12,
+        params: PolicyParams::default(),
+    };
+    let gap = Duration::from_millis(160.0);
+    let sources = poisson_sources(4, 60, gap, gap, 13);
+    let a = serve_multi(&cfg, &opts, &sources);
+    let b = serve_multi(&cfg, &opts, &sources);
+    assert_eq!(a.metrics.render(), b.metrics.render());
+    assert_eq!(a.served, b.served);
+    assert_eq!(a.reconfigurations, b.reconfigurations);
+    assert_eq!(a.reordered, b.reordered);
+    assert_eq!(
+        a.metrics.sim_energy.millijoules().to_bits(),
+        b.metrics.sim_energy.millijoules().to_bits()
+    );
+}
+
+/// The end-to-end acceptance check: same-slot batching beats FIFO on
+/// energy at an equal (zero) deadline-miss rate, on identical arrival
+/// streams. Two periodic clients pinned to opposite accelerator slots
+/// arrive together every tick — FIFO switches images twice per tick,
+/// batching once — and the generous slack keeps both schedules
+/// deadline-clean, so the comparison isolates energy.
+#[test]
+fn batching_beats_fifo_on_energy_at_equal_miss_rate() {
+    let cfg = paper_default();
+    let periodic = |slot: usize| {
+        let mut gaps = vec![Duration::from_millis(80.0); 40];
+        gaps[0] = Duration::ZERO;
+        ServeSource {
+            slot,
+            gaps: gaps.into(),
+            slack: Duration::from_millis(4000.0),
+        }
+    };
+    let sources = [periodic(0), periodic(1)];
+    let run = |sched| {
+        let opts = MultiServeOptions {
+            sched,
+            max_queue: 512,
+            gap_policy: PolicySpec::IdleWaitingM12,
+            params: PolicyParams::default(),
+        };
+        serve_multi(&cfg, &opts, &sources)
+    };
+    let fifo = run(SchedPolicy::Fifo);
+    let batched = run(SchedPolicy::BatchBySlot { window: 8 });
+    assert_eq!(fifo.metrics.miss_rate(), 0.0, "fifo misses");
+    assert_eq!(batched.metrics.miss_rate(), 0.0, "batched misses");
+    assert_eq!(fifo.served, 80);
+    assert_eq!(batched.served, 80);
+    assert!(
+        batched.reconfigurations < fifo.reconfigurations,
+        "batched {} vs fifo {}",
+        batched.reconfigurations,
+        fifo.reconfigurations
+    );
+    assert!(
+        batched.metrics.sim_energy.millijoules() < fifo.metrics.sim_energy.millijoules(),
+        "batched {} mJ vs fifo {} mJ",
+        batched.metrics.sim_energy.millijoules(),
+        fifo.metrics.sim_energy.millijoules()
+    );
+}
