@@ -14,10 +14,11 @@ use crate::coordinator::fleet::{run_fleet, FleetOptions, Placement};
 use crate::coordinator::requests::Periodic;
 use crate::coordinator::scheduler::Policy as SchedPolicy;
 use crate::coordinator::serving::{poisson_sources, serve_multi, MultiServeOptions};
+use crate::energy::analytical::Analytical;
 use crate::runner::SweepRunner;
 use crate::sim::{EventQueue, SimTime};
-use crate::strategies::simulate::{simulate_golden, SimWorker};
-use crate::strategies::strategy::{IdleWaiting, OnOff};
+use crate::strategies::simulate::{simulate_batch, simulate_golden, SimWorker};
+use crate::strategies::strategy::{build_with, IdleWaiting, OnOff};
 use crate::util::units::Duration;
 
 /// The canonical DES request period (the paper's 40 ms duty cycle).
@@ -248,6 +249,29 @@ pub fn serve_queue_requests<'a>(
     })
 }
 
+/// The learned policies' batched planning hot path: one Bayes-mixture
+/// and one bandit pass over a materialized trace through the batched
+/// structure-of-arrays kernel. Their `plan_gaps` overrides interleave
+/// plan/observe faithfully, so this times the online posterior/feature
+/// updates too — the cost the sweep and tuner pay per gap. Throughput
+/// unit: simulated items (both policies per iteration).
+pub fn learned_policy_plan_gaps<'a>(
+    bench: &'a mut Bench,
+    name: &str,
+    config: &SimConfig,
+    items: u64,
+) -> &'a BenchResult {
+    let cfg = capped(config, items);
+    let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
+    let (gaps, _) = trace_for(items);
+    bench.bench_units(name, 2.0 * items as f64, move || {
+        for spec in [PolicySpec::BayesMixture, PolicySpec::BanditPolicy] {
+            let mut policy = build_with(spec, &model, &cfg.workload.params);
+            black_box(simulate_batch(&cfg, policy.as_mut(), &gaps).items);
+        }
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -275,6 +299,8 @@ mod tests {
         assert_eq!(r.units_per_iter, 1000.0);
         let r = serve_queue_requests(&mut bench, "serve-queue", &cfg, true);
         assert_eq!(r.units_per_iter, 1000.0);
-        assert_eq!(bench.results().len(), 9);
+        let r = learned_policy_plan_gaps(&mut bench, "learned", &cfg, 5);
+        assert_eq!(r.units_per_iter, 10.0);
+        assert_eq!(bench.results().len(), 10);
     }
 }

@@ -14,6 +14,10 @@
 //!            [--budget 64] [--split 0.7] [--max-late-rate R] [--seed 0]
 //!            [--csv PATH] [--emit PATH] [--threads N]
 //!                                     # auto-search PolicyParams on a trace
+//! repro train [--trace workloads/bursty_iot.csv] [--budget 8] [--split 0.7]
+//!             [--objective energy|lifetime] [--max-late-rate R] [--seed 0]
+//!             [--quick] [--csv PATH] [--emit PATH] [--threads N]
+//!                                     # fit the bandit's action table offline
 //! repro exp5 [--requests 250] [--sources 4] [--period 40] [--seed 5]
 //!            [--csv PATH] [--threads N]
 //!                                     # scheduling policy × offered load grid
@@ -22,7 +26,8 @@
 //!             [--sources N] [--max-queue N] [--deadline-slack-ms T]
 //!             [--quick]               # --sources >= 2: multi-client coordinator
 //!             [--timeout-ms T] [--ema-alpha A] [--window W] [--quantile Q]
-//!             [--saving m12]          # per-policy tunables
+//!             [--saving m12] [--components K] [--table CELLS]
+//!             [--params-file PATH]    # per-policy tunables / tuned fragment
 //! repro plan --period 75              # policy recommendation
 //! repro fleet [--devices 1000] [--steps 256] [--requests 2000]
 //!             [--placement round-robin] [--trace FILE] [--period MS]
@@ -70,6 +75,7 @@ COMMANDS:
   exp5        Multi-client scheduling \u{d7} offered load on the serving coordinator
   gen-trace   Synthesize a gap-trace workload file (bursty-iot, diurnal-poisson, onoff-mmpp)
   tune        Auto-search PolicyParams for a policy on a gap trace (grid/random/halving)
+  train       Fit the contextual bandit's per-cell action table offline on a gap trace
   validate    \u{a7}5.3 validation: analytical model vs discrete-event sim
   ablate      ablations: flash floor, power-on transient, multi-accel
   multi       event-driven multi-accelerator simulation (\u{a7}4.2 extension)
@@ -109,11 +115,13 @@ fn sweep_runner(args: &Args) -> Result<SweepRunner> {
 }
 
 /// Overlay the per-policy tunable flags (`--timeout-ms`, `--ema-alpha`,
-/// `--window`, `--quantile`, `--saving`) onto the config's
-/// `policy_params`, then range-check the result — the same validation
-/// the config loader applies, so a bad flag fails with the same
-/// actionable message instead of reaching a sweep.
+/// `--window`, `--quantile`, `--components`, `--table`, `--saving`) onto
+/// the config's `policy_params`, then range-check the result — the same
+/// validation the config loader applies, so a bad flag fails with the
+/// same actionable message instead of reaching a sweep.
 fn policy_params_from_args(args: &Args, base: PolicyParams) -> Result<PolicyParams> {
+    use crate::config::schema::PolicyTable;
+
     let mut params = base;
     if let Some(ms) = args.f64_opt("timeout-ms")? {
         params.timeout = Some(Duration::from_millis(ms));
@@ -126,6 +134,18 @@ fn policy_params_from_args(args: &Args, base: PolicyParams) -> Result<PolicyPara
     }
     if let Some(q) = args.f64_opt("quantile")? {
         params.quantile = q;
+    }
+    if let Some(k) = args.u64_opt("components")? {
+        params.components = k as usize;
+    }
+    if let Some(text) = args.str_opt("table") {
+        params.table = Some(PolicyTable::parse(text).with_context(|| {
+            format!(
+                "--table must be {} letters from {{i, o, t}} (got {} chars)",
+                PolicyTable::CELLS,
+                text.chars().count()
+            )
+        })?);
     }
     if let Some(name) = args.str_opt("saving") {
         params.saving = parse_saving(name)
@@ -162,6 +182,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "exp5" => cmd_exp5(rest),
         "gen-trace" => cmd_gen_trace(rest),
         "tune" => cmd_tune(rest),
+        "train" => cmd_train(rest),
         "validate" => cmd_validate(rest),
         "ablate" => cmd_ablate(rest),
         "multi" => cmd_multi(rest),
@@ -506,6 +527,97 @@ fn cmd_tune(argv: &[String]) -> Result<()> {
     maybe_write_csv(&args, outcome.to_csv())
 }
 
+/// `repro train`: fit the contextual bandit's per-cell action table
+/// offline on a gap trace (the `tune` sibling for a policy whose
+/// deployment artifact is a trained table, not a searched knob value).
+/// `--emit` writes the frozen `(alpha, table)` point as the same YAML
+/// fragment surface `repro serve --params-file` and `repro multi` load.
+fn cmd_train(argv: &[String]) -> Result<()> {
+    use crate::tuner::{self, Objective, ObjectiveKind, TrainConfig};
+
+    let args = Args::parse(
+        argv,
+        &[
+            ("trace", true),
+            ("objective", true),
+            ("budget", true),
+            ("split", true),
+            ("seed", true),
+            ("max-late-rate", true),
+            ("quick", false),
+            ("csv", true),
+            ("emit", true),
+            ("config", true),
+            ("threads", true),
+            ("help", false),
+        ],
+    )?;
+    if help_and_done(&args, "train") {
+        return Ok(());
+    }
+    let config = load_config(&args)?;
+    let kind = match args.str_opt("objective") {
+        Some(name) => ObjectiveKind::parse(name)
+            .with_context(|| format!("unknown objective '{name}' (expected energy or lifetime)"))?,
+        None => ObjectiveKind::Energy,
+    };
+    let max_late_rate = args.f64_opt("max-late-rate")?;
+    if let Some(r) = max_late_rate {
+        if !(r.is_finite() && (0.0..=1.0).contains(&r)) {
+            bail!("--max-late-rate must be a fraction in [0, 1] (got {r})");
+        }
+    }
+    let trace_path = match args.str_opt("trace") {
+        Some(path) => path.to_string(),
+        None => match &config.workload.arrival {
+            crate::config::schema::ArrivalSpec::Trace { path, .. } => path.clone(),
+            _ => bail!(
+                "no trace to train on: pass --trace <file> or use a config whose \
+                 arrival_kind is 'trace'"
+            ),
+        },
+    };
+    let replay = requests::TraceReplay::from_file(&trace_path)
+        .with_context(|| format!("loading gap trace {trace_path}"))?;
+    let mut gaps = replay.shared_gaps();
+    // --quick: fit on a bounded prefix so smoke runs stay fast
+    if args.flag("quick") || crate::bench::quick_mode() {
+        const QUICK_GAPS: usize = 256;
+        if gaps.len() > QUICK_GAPS {
+            gaps = gaps[..QUICK_GAPS].to_vec().into();
+        }
+    }
+    let tc = TrainConfig {
+        budget: args.u64_opt("budget")?.unwrap_or(TrainConfig::DEFAULT_BUDGET as u64) as usize,
+        split: args.f64_opt("split")?.unwrap_or(TrainConfig::DEFAULT_SPLIT),
+        seed: args.u64_opt("seed")?.unwrap_or(0),
+        objective: Objective {
+            kind,
+            max_late_rate,
+        },
+    };
+    let runner = sweep_runner(&args)?;
+    println!(
+        "training bandit on {trace_path} ({} gaps): objective {}, {} candidate alphas",
+        gaps.len(),
+        tc.objective.label(),
+        tc.budget
+    );
+    let outcome = tuner::train(&config, &tc, &gaps, &runner)
+        .with_context(|| format!("training bandit on {trace_path}"))?;
+    print!("{}", outcome.render());
+    println!(
+        "apply: {}",
+        tuner::flags_line(PolicySpec::BanditPolicy, &outcome.best)
+    );
+    if let Some(path) = args.str_opt("emit") {
+        std::fs::write(path, tuner::yaml_fragment(PolicySpec::BanditPolicy, &outcome.best))
+            .with_context(|| format!("writing trained params {path}"))?;
+        println!("wrote {path}");
+    }
+    maybe_write_csv(&args, outcome.to_csv())
+}
+
 fn cmd_validate(argv: &[String]) -> Result<()> {
     let args = Args::parse(
         argv,
@@ -754,6 +866,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             ("window", true),
             ("quantile", true),
             ("saving", true),
+            ("components", true),
+            ("table", true),
+            ("params-file", true),
             ("config", true),
             ("help", false),
         ],
@@ -762,12 +877,22 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         return Ok(());
     }
     let config = load_config(&args)?;
+    // --params-file: a tuned/trained fragment (`repro tune|train --emit`)
+    // as the base point; explicit --policy and knob flags still override
+    let fragment = match args.str_opt("params-file") {
+        Some(path) => Some(crate::tuner::load_fragment(path)?),
+        None => None,
+    };
     let kind = match args.str_opt("policy").or_else(|| args.str_opt("strategy")) {
         Some(name) => PolicySpec::parse(name)
             .with_context(|| format!("unknown policy '{name}'"))?,
-        None => config.workload.policy,
+        None => fragment
+            .as_ref()
+            .map(|(spec, _)| *spec)
+            .unwrap_or(config.workload.policy),
     };
-    let params = policy_params_from_args(&args, config.workload.params)?;
+    let base = fragment.map(|(_, p)| p).unwrap_or(config.workload.params);
+    let params = policy_params_from_args(&args, base)?;
     let period_ms = args.f64_opt("period")?.unwrap_or(40.0);
     if !(period_ms.is_finite() && period_ms > 0.0) {
         bail!("--period must be a positive number of milliseconds (got {period_ms})");
@@ -1029,7 +1154,7 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
 /// Every target `repro bench` can register, in registration order — the
 /// vocabulary `--filter` matches against, listed verbatim when a filter
 /// matches nothing.
-const BENCH_TARGETS: [&str; 12] = [
+const BENCH_TARGETS: [&str; 13] = [
     "des_idle_waiting_items",
     "des_onoff_items",
     "des_idle_waiting_scalar_items",
@@ -1042,6 +1167,7 @@ const BENCH_TARGETS: [&str; 12] = [
     "sweep_exp2_cells",
     "sweep_exp4_cells",
     "tune_halving_evals",
+    "learned_policy_plan_gaps",
 ];
 
 /// `repro bench`: time the hot paths in-process and (optionally) write
@@ -1175,6 +1301,11 @@ fn cmd_bench(argv: &[String]) -> Result<()> {
                     .best,
             );
         });
+    }
+
+    // --- the learned policies' batched planning hot path ---
+    if want("learned_policy_plan_gaps") {
+        targets::learned_policy_plan_gaps(&mut bench, "learned_policy_plan_gaps", &config, items);
     }
 
     if bench.results().is_empty() {
@@ -1506,9 +1637,83 @@ mod tests {
             vec!["serve", "--policy", "timeout", "--timeout-ms", "-1"],
             vec!["serve", "--policy", "ema", "--ema-alpha", "7"],
             vec!["serve", "--saving", "turbo"],
+            vec!["serve", "--policy", "bayes", "--components", "9"],
+            vec!["serve", "--policy", "bandit", "--table", "iii"],
         ] {
             assert!(run(&sv(&argv)).is_err(), "{argv:?}");
         }
+    }
+
+    #[test]
+    fn serve_accepts_a_trained_params_file() {
+        let dir = std::env::temp_dir().join("idlewait_serve_params_file");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trained.yaml");
+        let mut table = crate::config::schema::PolicyTable::hedge();
+        table.0[0] = b'i';
+        let params = PolicyParams {
+            ema_alpha: 0.25,
+            table: Some(table),
+            ..PolicyParams::default()
+        };
+        std::fs::write(
+            &path,
+            crate::tuner::yaml_fragment(PolicySpec::BanditPolicy, &params),
+        )
+        .unwrap();
+        // the fragment supplies both the policy and its params; the multi
+        // source branch needs no PJRT artifacts
+        run(&sv(&[
+            "serve",
+            "--sources",
+            "2",
+            "--requests",
+            "24",
+            "--quick",
+            "--params-file",
+            path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert!(run(&sv(&["serve", "--sources", "2", "--params-file", "/no/such.yaml"])).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn train_quick_runs_and_emits_a_loadable_fragment() {
+        let dir = std::env::temp_dir().join("idlewait_cmd_train");
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace = dir.join("trace.csv");
+        crate::coordinator::tracegen::write_file(
+            trace.to_str().unwrap(),
+            crate::coordinator::tracegen::TraceKind::BurstyIot,
+            96,
+            40.0,
+            1,
+        )
+        .unwrap();
+        let emit = dir.join("trained.yaml");
+        run(&sv(&[
+            "train",
+            "--trace",
+            trace.to_str().unwrap(),
+            "--budget",
+            "4",
+            "--quick",
+            "--emit",
+            emit.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let (spec, params) = crate::tuner::load_fragment(&emit).unwrap();
+        assert_eq!(spec, PolicySpec::BanditPolicy);
+        assert!(params.table.is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn train_rejects_bad_inputs() {
+        // default config has a periodic arrival: no trace to train on
+        assert!(run(&sv(&["train"])).is_err());
+        assert!(run(&sv(&["train", "--trace", "/no/such/trace.csv"])).is_err());
     }
 
     #[test]
@@ -1537,6 +1742,7 @@ mod tests {
             "exp5",
             "gen-trace",
             "tune",
+            "train",
             "validate",
             "ablate",
             "multi",

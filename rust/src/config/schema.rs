@@ -110,6 +110,17 @@ pub enum PolicySpec {
     /// Ski-rental with the timeout drawn per gap from the
     /// e/(e−1)-competitive density over [0, τ].
     RandomizedSkiRental,
+    /// Online Bayesian mixture-of-exponentials gap model (2–4
+    /// components); plans Idle/Off/IdleThenOff by posterior expected
+    /// cost against the analytical crossover constants.
+    BayesMixture,
+    /// Contextual bandit / tabular-Q over discretized [`GapContext`]
+    /// features (recent-gap EMA and variance buckets, diurnal phase,
+    /// queue depth), optionally seeded from an offline-trained
+    /// [`PolicyTable`] (`repro train --emit`).
+    ///
+    /// [`GapContext`]: crate::strategies::strategy::GapContext
+    BanditPolicy,
 }
 
 impl PolicySpec {
@@ -131,6 +142,8 @@ impl PolicySpec {
             "randomized-ski-rental" | "randomized-timeout" | "rand-ski-rental" => {
                 Some(PolicySpec::RandomizedSkiRental)
             }
+            "bayes-mixture" | "bayes" | "mixture" => Some(PolicySpec::BayesMixture),
+            "bandit" | "contextual-bandit" | "tabular-q" => Some(PolicySpec::BanditPolicy),
             _ => None,
         }
     }
@@ -147,11 +160,13 @@ impl PolicySpec {
             PolicySpec::EmaPredictor => "ema-predictor",
             PolicySpec::WindowedQuantile => "windowed-quantile",
             PolicySpec::RandomizedSkiRental => "randomized-ski-rental",
+            PolicySpec::BayesMixture => "bayes-mixture",
+            PolicySpec::BanditPolicy => "bandit",
         }
     }
 
     /// Every policy, in the order tables and sweeps enumerate them.
-    pub const ALL: [PolicySpec; 9] = [
+    pub const ALL: [PolicySpec; 11] = [
         PolicySpec::OnOff,
         PolicySpec::IdleWaiting,
         PolicySpec::IdleWaitingM1,
@@ -161,6 +176,8 @@ impl PolicySpec {
         PolicySpec::EmaPredictor,
         PolicySpec::WindowedQuantile,
         PolicySpec::RandomizedSkiRental,
+        PolicySpec::BayesMixture,
+        PolicySpec::BanditPolicy,
     ];
 }
 
@@ -174,6 +191,57 @@ impl fmt::Display for PolicySpec {
 // Per-policy tunables
 // ---------------------------------------------------------------------------
 
+/// An offline-trained action table for the contextual bandit policy:
+/// one action letter per discretized context cell, `i` = idle, `o` =
+/// power off, `t` = idle-then-off at the break-even timeout.
+///
+/// The canonical text form is a 64-character string of those letters
+/// (cell 0 first), which is what `repro train --emit` writes and the
+/// `policy_params.table` config key parses. Letters were chosen over
+/// digits so the mini-YAML scalar always decodes as a string.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PolicyTable(pub [u8; 64]);
+
+impl PolicyTable {
+    /// Number of context cells (4 EMA buckets × 2 variance buckets ×
+    /// 4 diurnal-phase buckets × 2 queue-depth buckets).
+    pub const CELLS: usize = 64;
+
+    /// Parse the 64-letter text form; `None` on wrong length or any
+    /// character outside `{i, o, t}`.
+    pub fn parse(s: &str) -> Option<PolicyTable> {
+        let bytes = s.as_bytes();
+        if bytes.len() != Self::CELLS {
+            return None;
+        }
+        let mut cells = [b't'; 64];
+        for (cell, &b) in cells.iter_mut().zip(bytes) {
+            if !matches!(b, b'i' | b'o' | b't') {
+                return None;
+            }
+            *cell = b;
+        }
+        Some(PolicyTable(cells))
+    }
+
+    /// The canonical 64-letter text form (`parse` round-trips it).
+    pub fn render(&self) -> String {
+        self.0.iter().map(|&b| b as char).collect()
+    }
+
+    /// A table that hedges every cell with idle-then-off at τ — the
+    /// same cold-start behaviour the untrained policy uses.
+    pub fn hedge() -> PolicyTable {
+        PolicyTable([b't'; 64])
+    }
+}
+
+impl fmt::Display for PolicyTable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.render())
+    }
+}
+
 /// The per-policy tunable table (config key `policy_params`). Every field
 /// has a paper-faithful default, so the block is entirely optional; each
 /// policy reads only the tunables it understands:
@@ -182,10 +250,12 @@ impl fmt::Display for PolicySpec {
 /// |---|---|---|
 /// | `saving` | all advanced policies | idle power-saving level (`baseline`/`m1`/`m12`) |
 /// | `timeout_ms` | `timeout`, `randomized-ski-rental`, cold-start hedges | idle window before cutting power (default: the analytical break-even τ) |
-/// | `ema_alpha` | `ema-predictor` | EMA smoothing factor in (0, 1] |
+/// | `ema_alpha` | `ema-predictor`, `bandit` | EMA smoothing factor in (0, 1] |
 /// | `window` | `windowed-quantile` | ring-buffer length W ≥ 1 of observed gaps |
 /// | `quantile` | `windowed-quantile` | planning quantile in (0, 1) |
-/// | `seed` | `randomized-ski-rental` | RNG stream for the per-gap timeout draw |
+/// | `seed` | `randomized-ski-rental`, `bayes-mixture` | RNG stream for randomized draws / init jitter |
+/// | `components` | `bayes-mixture` | mixture components K in 2..=4 |
+/// | `table` | `bandit` | 64-letter offline-trained action table (see [`PolicyTable`]) |
 ///
 /// Range checks live in [`PolicyParams::validate`], called from
 /// `config::validate` on load and from the CLI when flags override the
@@ -205,6 +275,11 @@ pub struct PolicyParams {
     pub quantile: f64,
     /// Seed for randomized policies (the per-gap timeout draw).
     pub seed: u64,
+    /// Mixture components for the Bayesian gap model (2..=4).
+    pub components: usize,
+    /// Offline-trained action table for the contextual bandit;
+    /// `None` = cold start (hedge until cells warm up online).
+    pub table: Option<PolicyTable>,
 }
 
 impl PolicyParams {
@@ -217,6 +292,9 @@ impl PolicyParams {
     /// Default planning quantile: 0.9 plans conservatively against the
     /// long tail of recent gaps.
     pub const DEFAULT_QUANTILE: f64 = 0.9;
+    /// Default mixture size: 3 components separate burst, nominal and
+    /// silence gap modes on the bundled corpus.
+    pub const DEFAULT_COMPONENTS: usize = 3;
 
     /// Decode a `policy_params` mapping (all keys optional; absent keys
     /// keep their paper-faithful defaults). `path` locates errors.
@@ -250,6 +328,26 @@ impl PolicyParams {
         }
         if let Some(s) = opt_u64(v, path, "seed")? {
             p.seed = s;
+        }
+        if let Some(k) = opt_u64(v, path, "components")? {
+            p.components = k as usize;
+        }
+        if let Some(t) = v.get("table") {
+            if !matches!(t, Json::Null) {
+                let text = t
+                    .as_str()
+                    .ok_or_else(|| cerr(&format!("{path}.table"), "expected a string"))?;
+                p.table = Some(PolicyTable::parse(text).ok_or_else(|| {
+                    cerr(
+                        &format!("{path}.table"),
+                        format!(
+                            "expected {} letters from {{i, o, t}} (got {} chars)",
+                            PolicyTable::CELLS,
+                            text.chars().count()
+                        ),
+                    )
+                })?);
+            }
         }
         Ok(p)
     }
@@ -288,6 +386,13 @@ impl PolicyParams {
                 self.quantile
             ));
         }
+        if !(2..=4).contains(&self.components) {
+            return Err(format!(
+                "policy_params.components must be in 2..=4 mixture components (got {}); \
+                 2 separates burst/silence, 4 adds nominal and tail modes",
+                self.components
+            ));
+        }
         Ok(())
     }
 }
@@ -303,6 +408,8 @@ impl Default for PolicyParams {
             window: Self::DEFAULT_WINDOW,
             quantile: Self::DEFAULT_QUANTILE,
             seed: 0,
+            components: Self::DEFAULT_COMPONENTS,
+            table: None,
         }
     }
 }
@@ -1124,6 +1231,12 @@ workload_item:
             PolicySpec::parse("rand-ski-rental"),
             Some(PolicySpec::RandomizedSkiRental)
         );
+        assert_eq!(PolicySpec::parse("bayes"), Some(PolicySpec::BayesMixture));
+        assert_eq!(
+            PolicySpec::parse("contextual-bandit"),
+            Some(PolicySpec::BanditPolicy)
+        );
+        assert_eq!(PolicySpec::parse("tabular-q"), Some(PolicySpec::BanditPolicy));
     }
 
     #[test]
@@ -1155,6 +1268,47 @@ workload_item:
         assert!((p.quantile - 0.75).abs() < 1e-12);
         assert_eq!(p.seed, 9);
         assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn policy_table_round_trips_and_rejects_bad_text() {
+        let text: String = (0..64)
+            .map(|i| match i % 3 {
+                0 => 'i',
+                1 => 'o',
+                _ => 't',
+            })
+            .collect();
+        let table = PolicyTable::parse(&text).unwrap();
+        assert_eq!(table.render(), text);
+        assert_eq!(PolicyTable::parse(&table.render()), Some(table));
+        assert_eq!(PolicyTable::hedge().render(), "t".repeat(64));
+        assert_eq!(PolicyTable::parse("iot"), None, "wrong length");
+        assert_eq!(PolicyTable::parse(&"x".repeat(64)), None, "bad letter");
+    }
+
+    #[test]
+    fn learned_policy_params_parse() {
+        let table_text = "t".repeat(64);
+        let v = yaml::parse(&format!(
+            "energy_budget_j: 1\nrequest_period_ms: 40\npolicy: bandit\n\
+             policy_params:\n  components: 4\n  table: {table_text}\n",
+        ))
+        .unwrap();
+        let p = WorkloadSpec::from_json(&v).unwrap().params;
+        assert_eq!(p.components, 4);
+        assert_eq!(p.table, Some(PolicyTable::hedge()));
+        assert!(p.validate().is_ok());
+
+        // a malformed table string is an actionable config error
+        let v = yaml::parse(
+            "energy_budget_j: 1\nrequest_period_ms: 40\npolicy: bandit\n\
+             policy_params:\n  table: short\n",
+        )
+        .unwrap();
+        let e = WorkloadSpec::from_json(&v).unwrap_err();
+        assert!(e.path.contains("table"), "{e}");
+        assert!(e.msg.contains("64 letters"), "{e}");
     }
 
     #[test]
@@ -1201,6 +1355,14 @@ workload_item:
             },
             PolicyParams {
                 ema_alpha: 1.5,
+                ..PolicyParams::default()
+            },
+            PolicyParams {
+                components: 1,
+                ..PolicyParams::default()
+            },
+            PolicyParams {
+                components: 5,
                 ..PolicyParams::default()
             },
         ];

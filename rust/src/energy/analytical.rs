@@ -71,7 +71,9 @@ impl ItemEnergetics {
             | PolicySpec::Timeout
             | PolicySpec::EmaPredictor
             | PolicySpec::WindowedQuantile
-            | PolicySpec::RandomizedSkiRental => RailSet::idle_power(PowerSaving::M12),
+            | PolicySpec::RandomizedSkiRental
+            | PolicySpec::BayesMixture
+            | PolicySpec::BanditPolicy => RailSet::idle_power(PowerSaving::M12),
             PolicySpec::OnOff => self.idle_power_baseline,
         }
     }
@@ -188,9 +190,15 @@ impl Analytical {
                     self.item.e_active + self.e_idle(t_req, p_idle),
                 )
             }
-            PolicySpec::Oracle | PolicySpec::EmaPredictor | PolicySpec::WindowedQuantile => {
+            PolicySpec::Oracle
+            | PolicySpec::EmaPredictor
+            | PolicySpec::WindowedQuantile
+            | PolicySpec::BayesMixture
+            | PolicySpec::BanditPolicy => {
                 // per-gap winner at the M1+2 idle mode these policies are
-                // built with; the predictors degenerate to it after one gap
+                // built with; the predictors (and both learned policies —
+                // the posterior mean and the per-cell action costs of a
+                // constant gap are that gap's) degenerate to it
                 let onoff = self.predict(PolicySpec::OnOff, t_req);
                 let iw = self.predict(PolicySpec::IdleWaitingM12, t_req);
                 return if onoff.n_max.unwrap_or(0) >= iw.n_max.unwrap_or(0) {
@@ -448,6 +456,23 @@ mod tests {
                 m.predict(PolicySpec::Oracle, ms(t_ms)).n_max,
                 "t={t_ms}"
             );
+        }
+    }
+
+    #[test]
+    fn learned_predictions_equal_oracle_closed_form() {
+        // on strictly periodic arrivals both learned policies converge to
+        // the per-gap winner: the Bayes posterior mean is the period, and
+        // every visited bandit cell's cheapest action is the oracle's
+        let m = model();
+        for spec in [PolicySpec::BayesMixture, PolicySpec::BanditPolicy] {
+            for t_ms in [40.0, 200.0, 600.0] {
+                assert_eq!(
+                    m.predict(spec, ms(t_ms)).n_max,
+                    m.predict(PolicySpec::Oracle, ms(t_ms)).n_max,
+                    "{spec} t={t_ms}"
+                );
+            }
         }
     }
 

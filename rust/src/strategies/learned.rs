@@ -1,0 +1,706 @@
+//! Learned gap policies: an online Bayesian mixture gap model and a
+//! contextual bandit over discretized [`GapContext`] features.
+//!
+//! Both policies work in **p_idle-normalized cost units**: idling
+//! through a gap of `g` seconds costs `g`, buying (power off + later
+//! reconfigure) costs the break-even timeout τ from
+//! [`crossover::ski_rental_timeout`] — the scale at which the ski-rental
+//! literature states its bounds. Minimizing expected normalized cost per
+//! gap therefore minimizes expected gap energy at the policy's idle
+//! mode, and the property suite (`tests/prop_learned.rs`) sandwiches
+//! both learners between the clairvoyant [`Oracle`] lower bound and the
+//! e/(e−1) randomized upper bound.
+//!
+//! Determinism contract: neither policy samples during planning.
+//! [`BayesMixture`] uses its seed only to jitter the initial component
+//! means (one [`SplitMix64`] stream consumed at construction), and
+//! [`BanditPolicy`] is RNG-free; all online updates are plain f64
+//! arithmetic in observation order, so the sweep byte-identity
+//! guarantees at any `--threads N` carry over unchanged.
+//!
+//! [`Oracle`]: crate::strategies::strategy::Oracle
+
+use crate::config::schema::{PolicyParams, PolicySpec, PolicyTable};
+use crate::device::rails::PowerSaving;
+use crate::energy::analytical::Analytical;
+use crate::energy::crossover;
+use crate::strategies::replay::GapBatch;
+use crate::strategies::strategy::{GapContext, GapPlan, Policy};
+use crate::util::rng::SplitMix64;
+use crate::util::units::Duration;
+
+/// Floor for observed gaps (seconds) so a zero-length gap cannot produce
+/// an infinite component rate.
+const MIN_GAP_SECS: f64 = 1e-9;
+
+/// One exponential mixture component with a Gamma posterior over its
+/// arrival rate λ: `shape / rate_total` is the posterior-mean rate,
+/// `rate_total / shape` the posterior-mean gap.
+#[derive(Debug, Clone, Copy)]
+struct Component {
+    /// Gamma shape: prior pseudo-count + responsibility-weighted count.
+    shape: f64,
+    /// Gamma rate: prior mean + responsibility-weighted gap seconds.
+    rate_total: f64,
+    /// Mixture-weight numerator (responsibility mass).
+    mass: f64,
+}
+
+impl Component {
+    /// Posterior-mean arrival rate λ (1/seconds).
+    fn rate(&self) -> f64 {
+        self.shape / self.rate_total
+    }
+
+    /// Posterior-mean gap (seconds).
+    fn mean(&self) -> f64 {
+        self.rate_total / self.shape
+    }
+}
+
+/// Online Bayesian mixture-of-exponentials gap model: K ∈ 2..=4
+/// components whose rate posteriors take responsibility-weighted
+/// conjugate updates per observed gap, planned by posterior expected
+/// cost.
+///
+/// Planning compares, in normalized units (buy = τ):
+///
+/// * **Idle**: `E[g] = Σ wₖ·mₖ`
+/// * **Off**: `τ`
+/// * **IdleThenOff(t)**: `E[min(g, t)] + P(g > t)·τ`
+///   `= Σ wₖ·(mₖ·(1 − e^(−t/mₖ)) + e^(−t/mₖ)·τ)`
+///
+/// over a deterministic candidate-timeout set (component means and 3×
+/// means clamped to (0, τ], plus τ itself). On a unimodal gap stream
+/// this degenerates to the crossover decision (idle iff the mean gap is
+/// below τ); on multi-modal streams the interior IdleThenOff timeouts
+/// rent through the short mode and buy at the long one.
+#[derive(Debug, Clone)]
+pub struct BayesMixture {
+    /// Idle mode used while configured.
+    pub saving: PowerSaving,
+    /// Break-even gap duration of the idle mode (reporting only).
+    pub crossover: Duration,
+    /// The normalized buy cost τ (also the cold-start hedge timeout).
+    pub tau: Duration,
+    /// Cold-start hedge timeout (`policy_params.timeout_ms` overrides τ).
+    pub hedge: Duration,
+    components: Vec<Component>,
+    /// Observations folded in so far.
+    observed: u64,
+}
+
+impl BayesMixture {
+    /// Initial component means as multiples of τ: spread geometrically so
+    /// the prior covers burst gaps (≈τ/20) through long silences (≈8τ).
+    const MEAN_LADDER: [f64; 4] = [0.05, 0.5, 2.0, 8.0];
+
+    /// Build from the analytical model with `k` components (clamped to
+    /// 2..=4), seeding the deterministic init jitter from `seed`.
+    pub fn from_model(
+        model: &Analytical,
+        saving: PowerSaving,
+        k: usize,
+        seed: u64,
+    ) -> BayesMixture {
+        let p_idle = crate::device::rails::RailSet::idle_power(saving);
+        let tau = crossover::ski_rental_timeout(model, p_idle);
+        let k = k.clamp(2, 4);
+        let mut jitter = SplitMix64::new(seed);
+        let components = Self::MEAN_LADDER[..k]
+            .iter()
+            .map(|&ladder| {
+                // multiplicative jitter in [0.9, 1.1): distinct seeds start
+                // from distinct priors without changing the ladder's shape
+                let u = (jitter.next() >> 11) as f64 / (1u64 << 53) as f64;
+                let mean = tau.secs() * ladder * (0.9 + 0.2 * u);
+                Component {
+                    shape: 1.0,
+                    rate_total: mean.max(MIN_GAP_SECS),
+                    mass: 1.0,
+                }
+            })
+            .collect();
+        BayesMixture {
+            saving,
+            crossover: crossover::asymptotic(model, p_idle),
+            tau,
+            hedge: tau,
+            components,
+            observed: 0,
+        }
+    }
+
+    /// Number of mixture components K.
+    pub fn component_count(&self) -> usize {
+        self.components.len()
+    }
+
+    /// Observations folded into the posterior so far.
+    pub fn observed(&self) -> u64 {
+        self.observed
+    }
+
+    /// Posterior expected gap `E[g] = Σ wₖ·mₖ` in seconds.
+    pub fn expected_gap(&self) -> f64 {
+        let total: f64 = self.components.iter().map(|c| c.mass).sum();
+        self.components
+            .iter()
+            .map(|c| (c.mass / total) * c.mean())
+            .sum()
+    }
+
+    /// Expected normalized cost of `IdleThenOff(t)` under the posterior.
+    fn idle_then_off_cost(&self, t: f64, tau: f64, total_mass: f64) -> f64 {
+        self.components
+            .iter()
+            .map(|c| {
+                let w = c.mass / total_mass;
+                let survive = (-c.rate() * t).exp();
+                w * (c.mean() * (1.0 - survive) + survive * tau)
+            })
+            .sum()
+    }
+
+    /// The posterior-optimal plan: the cheapest of Idle, Off and
+    /// IdleThenOff over the candidate-timeout set, ties broken in that
+    /// order (deterministic).
+    fn posterior_plan(&self) -> GapPlan {
+        let tau = self.tau.secs();
+        let total_mass: f64 = self.components.iter().map(|c| c.mass).sum();
+        let mut best_plan = GapPlan::Idle(self.saving);
+        let mut best_cost = self.expected_gap();
+        if tau < best_cost {
+            best_plan = GapPlan::PowerOff;
+            best_cost = tau;
+        }
+        // candidate timeouts: each component mean and 3× mean (the knee of
+        // its survival curve), clamped into (0, τ], plus τ itself
+        let mut consider = |t: f64| {
+            let t = t.clamp(MIN_GAP_SECS, tau);
+            let cost = self.idle_then_off_cost(t, tau, total_mass);
+            if cost < best_cost {
+                best_cost = cost;
+                best_plan = GapPlan::IdleThenOff {
+                    saving: self.saving,
+                    timeout: Duration::from_secs(t),
+                };
+            }
+        };
+        for i in 0..self.components.len() {
+            let mean = self.components[i].mean();
+            consider(mean);
+            consider(3.0 * mean);
+        }
+        consider(tau);
+        best_plan
+    }
+}
+
+impl Policy for BayesMixture {
+    fn kind(&self) -> PolicySpec {
+        PolicySpec::BayesMixture
+    }
+
+    fn plan_gap(&mut self, _ctx: &GapContext) -> GapPlan {
+        if self.observed == 0 {
+            // cold start: no evidence yet → the 2-competitive hedge
+            return GapPlan::IdleThenOff {
+                saving: self.saving,
+                timeout: self.hedge,
+            };
+        }
+        self.posterior_plan()
+    }
+
+    fn observe(&mut self, actual_gap: Duration) {
+        let g = actual_gap.secs().max(MIN_GAP_SECS);
+        // responsibilities under the posterior-mean rates, computed in log
+        // space (log-sum-exp) so huge gaps cannot underflow every component
+        let mut log_like = [0.0f64; 4];
+        for (ll, c) in log_like.iter_mut().zip(&self.components) {
+            let rate = c.rate();
+            *ll = c.mass.ln() + rate.ln() - rate * g;
+        }
+        let k = self.components.len();
+        let max_ll = log_like[..k].iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut resp = [0.0f64; 4];
+        let mut total = 0.0;
+        for (r, ll) in resp[..k].iter_mut().zip(&log_like[..k]) {
+            *r = (ll - max_ll).exp();
+            total += *r;
+        }
+        for (c, r) in self.components.iter_mut().zip(&resp[..k]) {
+            let r = r / total;
+            c.shape += r;
+            c.rate_total += r * g;
+            c.mass += r;
+        }
+        self.observed += 1;
+    }
+
+    /// Same plan/observe interleaving as the default loop, statically
+    /// dispatched so the mixture updates inline over the batch — the
+    /// post-batch posterior is bit-identical to the scalar path's.
+    fn plan_gaps(&mut self, ctxs: &[GapContext], gaps: &[Duration], out: &mut GapBatch) {
+        debug_assert_eq!(ctxs.len(), gaps.len());
+        for (ctx, &gap) in ctxs.iter().zip(gaps) {
+            let plan = self.plan_gap(ctx);
+            out.push(gap, plan);
+            self.observe(gap);
+        }
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "bayes-mixture({}, k {}, tau {:.2} ms)",
+            self.saving.label(),
+            self.components.len(),
+            self.tau.millis()
+        )
+    }
+}
+
+/// The bandit's action alphabet, in deterministic tie-break order:
+/// idle first (cheapest when wrong by a little), then the hedge, then
+/// the irreversible power-off.
+const ACTIONS: [u8; 3] = [b'i', b't', b'o'];
+
+/// Per-cell running statistics: observation count and the running-mean
+/// normalized cost of each action, updated counterfactually (every
+/// realized gap prices all three actions, not just the chosen one).
+#[derive(Debug, Clone, Copy)]
+struct CellStats {
+    count: u64,
+    cost: [f64; 3],
+}
+
+impl Default for CellStats {
+    fn default() -> Self {
+        CellStats {
+            count: 0,
+            cost: [0.0; 3],
+        }
+    }
+}
+
+/// Contextual bandit / tabular-Q gap policy over 64 discretized
+/// [`GapContext`] cells: 4 recent-gap-EMA buckets (relative to the
+/// crossover) × 2 coefficient-of-variation buckets × 4 diurnal-phase
+/// buckets (from `ctx.now`) × 2 queue-depth buckets (`ctx.queued`).
+///
+/// Because the realized gap prices **all three** actions (idle costs
+/// `g`, off costs τ, idle-then-off costs `min(g, τ) + [g > τ]·τ` in
+/// normalized units), the policy needs no exploration: every cell's
+/// running-mean action costs converge from full information, and the
+/// greedy argmin is deterministic. Cold cells fall back to an
+/// offline-trained [`PolicyTable`] (`repro train --emit`) when one is
+/// loaded, else to the 2-competitive hedge.
+#[derive(Debug, Clone)]
+pub struct BanditPolicy {
+    /// Idle mode used while configured.
+    pub saving: PowerSaving,
+    /// Break-even gap duration of the idle mode (EMA bucket scale).
+    pub crossover: Duration,
+    /// Normalized buy cost τ; also the `t` action's timeout.
+    pub tau: Duration,
+    /// Feature-EMA smoothing factor in (0, 1].
+    pub alpha: f64,
+    /// Offline-trained fallback for cold cells, if loaded.
+    table: Option<PolicyTable>,
+    /// EMA of observed gaps in seconds (`None` until the first gap).
+    ema: Option<f64>,
+    /// EMA of squared deviations from the gap EMA (variance proxy).
+    var_ema: f64,
+    cells: [CellStats; PolicyTable::CELLS],
+    /// Cell the most recent `plan_gap` planned in, so `observe` credits
+    /// the realized gap to the context it was planned under.
+    last_cell: Option<usize>,
+}
+
+impl BanditPolicy {
+    /// Online estimates take over from the table/hedge once a cell has
+    /// seen this many gaps.
+    pub const MIN_CELL_OBS: u64 = 3;
+
+    /// Diurnal feature period in seconds: one day of the bundled diurnal
+    /// corpus (96 gaps at the paper's 40 ms duty cycle).
+    pub const DIURNAL_CYCLE_SECS: f64 = 96.0 * 0.040;
+
+    /// Build from the analytical model, optionally with an
+    /// offline-trained action table for cold cells.
+    pub fn from_model(
+        model: &Analytical,
+        saving: PowerSaving,
+        alpha: f64,
+        table: Option<PolicyTable>,
+    ) -> BanditPolicy {
+        let p_idle = crate::device::rails::RailSet::idle_power(saving);
+        BanditPolicy {
+            saving,
+            crossover: crossover::asymptotic(model, p_idle),
+            tau: crossover::ski_rental_timeout(model, p_idle),
+            alpha: alpha.clamp(f64::EPSILON, 1.0),
+            table,
+            ema: None,
+            var_ema: 0.0,
+            cells: [CellStats::default(); PolicyTable::CELLS],
+            last_cell: None,
+        }
+    }
+
+    /// Whether an offline-trained table is loaded.
+    pub fn trained(&self) -> bool {
+        self.table.is_some()
+    }
+
+    /// The context cell the policy would plan `ctx` in, under its current
+    /// feature state. Public so offline training replays the exact
+    /// bucketing the online policy uses.
+    pub fn context_cell(&self, ctx: &GapContext) -> usize {
+        let cross = self.crossover.secs();
+        let ema_bucket = match self.ema {
+            None => 0,
+            Some(m) => {
+                let r = m / cross;
+                if r < 0.25 {
+                    0
+                } else if r < 1.0 {
+                    1
+                } else if r < 4.0 {
+                    2
+                } else {
+                    3
+                }
+            }
+        };
+        let var_bucket = match self.ema {
+            Some(m) if m > 0.0 && self.var_ema.sqrt() / m >= 0.5 => 1,
+            _ => 0,
+        };
+        let frac = (ctx.now.secs() / Self::DIURNAL_CYCLE_SECS).fract();
+        let phase_bucket = ((frac * 4.0) as usize).min(3);
+        let queue_bucket = usize::from(ctx.queued > 0);
+        ((ema_bucket * 2 + var_bucket) * 4 + phase_bucket) * 2 + queue_bucket
+    }
+
+    /// The normalized cost every action would have paid on a realized gap
+    /// of `gap_secs`, given buy cost `tau_secs` — the full-information
+    /// counterfactual update (order matches [`ACTIONS`]).
+    pub fn action_costs(tau_secs: f64, gap_secs: f64) -> [f64; 3] {
+        let idle = gap_secs;
+        let hedge = if gap_secs > tau_secs {
+            2.0 * tau_secs
+        } else {
+            gap_secs
+        };
+        let off = tau_secs;
+        [idle, hedge, off]
+    }
+
+    /// Map an action letter onto its [`GapPlan`].
+    fn plan_for_action(&self, action: u8) -> GapPlan {
+        match action {
+            b'i' => GapPlan::Idle(self.saving),
+            b'o' => GapPlan::PowerOff,
+            _ => GapPlan::IdleThenOff {
+                saving: self.saving,
+                timeout: self.tau,
+            },
+        }
+    }
+
+    /// The greedy action for a warm cell: strict-min scan in [`ACTIONS`]
+    /// order, so ties resolve deterministically toward idling.
+    fn greedy_action(stats: &CellStats) -> u8 {
+        let mut best = ACTIONS[0];
+        let mut best_cost = stats.cost[0];
+        for (a, &cost) in ACTIONS.iter().zip(&stats.cost).skip(1) {
+            if cost < best_cost {
+                best = *a;
+                best_cost = cost;
+            }
+        }
+        best
+    }
+
+    /// The greedy per-cell action table under the current statistics:
+    /// warm cells take their argmin action, cold cells the hedge. This is
+    /// what `repro train` emits after replaying a training split.
+    pub fn greedy_table(&self) -> PolicyTable {
+        let mut table = PolicyTable::hedge();
+        for (slot, stats) in table.0.iter_mut().zip(&self.cells) {
+            if stats.count >= Self::MIN_CELL_OBS {
+                *slot = Self::greedy_action(stats);
+            }
+        }
+        table
+    }
+
+    /// Gaps credited to `cell` so far.
+    pub fn cell_count(&self, cell: usize) -> u64 {
+        self.cells[cell].count
+    }
+}
+
+impl Policy for BanditPolicy {
+    fn kind(&self) -> PolicySpec {
+        PolicySpec::BanditPolicy
+    }
+
+    fn plan_gap(&mut self, ctx: &GapContext) -> GapPlan {
+        let cell = self.context_cell(ctx);
+        self.last_cell = Some(cell);
+        let stats = &self.cells[cell];
+        let action = if stats.count >= Self::MIN_CELL_OBS {
+            Self::greedy_action(stats)
+        } else if let Some(table) = &self.table {
+            table.0[cell]
+        } else {
+            b't'
+        };
+        self.plan_for_action(action)
+    }
+
+    fn observe(&mut self, actual_gap: Duration) {
+        let g = actual_gap.secs().max(MIN_GAP_SECS);
+        // credit the counterfactual action costs to the planning cell
+        // (absent when observe arrives before any plan, e.g. fleet replay)
+        if let Some(cell) = self.last_cell {
+            let stats = &mut self.cells[cell];
+            stats.count += 1;
+            let n = stats.count as f64;
+            for (mean, cost) in stats
+                .cost
+                .iter_mut()
+                .zip(Self::action_costs(self.tau.secs(), g))
+            {
+                *mean += (cost - *mean) / n;
+            }
+        }
+        // then roll the context features forward
+        match self.ema {
+            None => {
+                self.ema = Some(g);
+                self.var_ema = 0.0;
+            }
+            Some(m) => {
+                let d = g - m;
+                self.ema = Some(m + self.alpha * d);
+                self.var_ema += self.alpha * (d * d - self.var_ema);
+            }
+        }
+    }
+
+    /// Same plan/observe interleaving as the default loop, statically
+    /// dispatched so the cell updates inline over the batch — the
+    /// post-batch table state is bit-identical to the scalar path's.
+    fn plan_gaps(&mut self, ctxs: &[GapContext], gaps: &[Duration], out: &mut GapBatch) {
+        debug_assert_eq!(ctxs.len(), gaps.len());
+        for (ctx, &gap) in ctxs.iter().zip(gaps) {
+            let plan = self.plan_gap(ctx);
+            out.push(gap, plan);
+            self.observe(gap);
+        }
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "bandit({}, alpha {:.2}, {})",
+            self.saving.label(),
+            self.alpha,
+            if self.table.is_some() { "trained" } else { "cold" }
+        )
+    }
+}
+
+/// Build a [`BayesMixture`] from config-level tunables (`components`,
+/// `seed`, `saving`, with `timeout_ms` overriding the cold-start hedge).
+pub fn bayes_from_params(model: &Analytical, params: &PolicyParams) -> BayesMixture {
+    let mut b = BayesMixture::from_model(model, params.saving, params.components, params.seed);
+    if let Some(timeout) = params.timeout {
+        b.hedge = timeout; // cold-start hedge override
+    }
+    b
+}
+
+/// Build a [`BanditPolicy`] from config-level tunables (`ema_alpha`,
+/// `table`, `saving`).
+pub fn bandit_from_params(model: &Analytical, params: &PolicyParams) -> BanditPolicy {
+    BanditPolicy::from_model(model, params.saving, params.ema_alpha, params.table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_default;
+
+    fn model() -> Analytical {
+        let cfg = paper_default();
+        Analytical::new(&cfg.item, cfg.workload.energy_budget)
+    }
+
+    fn ctx() -> GapContext {
+        GapContext {
+            items_done: 0,
+            now: Duration::ZERO,
+            queued: 0,
+        }
+    }
+
+    #[test]
+    fn bayes_cold_start_hedges_then_becomes_deterministic_per_seed() {
+        let m = model();
+        let mut a = BayesMixture::from_model(&m, PowerSaving::M12, 3, 7);
+        let mut b = BayesMixture::from_model(&m, PowerSaving::M12, 3, 7);
+        assert!(matches!(a.plan_gap(&ctx()), GapPlan::IdleThenOff { .. }));
+        for i in 0..64 {
+            let gap = Duration::from_millis(if i % 5 == 4 { 900.0 } else { 20.0 });
+            a.observe(gap);
+            b.observe(gap);
+            assert_eq!(a.plan_gap(&ctx()), b.plan_gap(&ctx()), "gap {i}");
+        }
+        assert_eq!(a.observed(), 64);
+        assert_eq!(a.component_count(), 3);
+    }
+
+    #[test]
+    fn bayes_converges_to_the_crossover_decision_on_constant_gaps() {
+        let m = model();
+        // constant short gaps: the posterior mean sits far below τ → idle
+        let mut short = BayesMixture::from_model(&m, PowerSaving::M12, 2, 0);
+        for _ in 0..200 {
+            short.observe(Duration::from_millis(40.0));
+        }
+        assert!(short.expected_gap() < short.tau.secs());
+        match short.plan_gap(&ctx()) {
+            GapPlan::Idle(_) => {}
+            // a never-expiring hedge is energy-equivalent to idling
+            GapPlan::IdleThenOff { timeout, .. } => {
+                assert!(timeout > Duration::from_millis(40.0), "{timeout:?}")
+            }
+            other => panic!("expected idle-shaped plan, got {other:?}"),
+        }
+        // constant long gaps: the posterior mean sits above τ → power off
+        let mut long = BayesMixture::from_model(&m, PowerSaving::M12, 2, 0);
+        for _ in 0..200 {
+            long.observe(Duration::from_secs(2.0));
+        }
+        assert_eq!(long.plan_gap(&ctx()), GapPlan::PowerOff);
+    }
+
+    #[test]
+    fn bayes_separates_a_bimodal_stream_with_an_interior_timeout() {
+        let m = model();
+        let mut p = BayesMixture::from_model(&m, PowerSaving::M12, 3, 1);
+        // bursty shape: 4 short gaps then a long silence, repeated
+        for i in 0..400 {
+            let gap = Duration::from_millis(if i % 5 == 4 { 660.0 } else { 16.0 });
+            p.observe(gap);
+        }
+        match p.plan_gap(&ctx()) {
+            GapPlan::IdleThenOff { timeout, .. } => {
+                // rents through the 16 ms bursts, buys before τ
+                assert!(timeout > Duration::from_millis(16.0), "{timeout:?}");
+                assert!(timeout <= p.tau, "{timeout:?} vs tau {:?}", p.tau);
+            }
+            other => panic!("expected an interior ski-rental plan, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bayes_survives_enormous_gaps_without_nan() {
+        let m = model();
+        let mut p = BayesMixture::from_model(&m, PowerSaving::M12, 4, 0);
+        p.observe(Duration::from_secs(1e6));
+        p.observe(Duration::ZERO);
+        p.observe(Duration::from_millis(40.0));
+        assert!(p.expected_gap().is_finite());
+        // whatever the plan, it must be well-formed
+        let _ = p.plan_gap(&ctx());
+    }
+
+    #[test]
+    fn bandit_cold_cells_hedge_and_trained_cells_follow_the_table() {
+        let m = model();
+        let mut cold = BanditPolicy::from_model(&m, PowerSaving::M12, 0.2, None);
+        assert!(matches!(cold.plan_gap(&ctx()), GapPlan::IdleThenOff { .. }));
+        assert!(!cold.trained());
+
+        let mut table = PolicyTable::hedge();
+        let cell = cold.context_cell(&ctx());
+        table.0[cell] = b'o';
+        let mut trained = BanditPolicy::from_model(&m, PowerSaving::M12, 0.2, Some(table));
+        assert!(trained.trained());
+        assert_eq!(trained.plan_gap(&ctx()), GapPlan::PowerOff);
+    }
+
+    #[test]
+    fn bandit_learns_the_crossover_decision_per_cell() {
+        let m = model();
+        let mut p = BanditPolicy::from_model(&m, PowerSaving::M12, 0.2, None);
+        // constant short gaps: the (only) visited cell learns to idle
+        for _ in 0..16 {
+            let _ = p.plan_gap(&ctx());
+            p.observe(Duration::from_millis(40.0));
+        }
+        assert_eq!(p.plan_gap(&ctx()), GapPlan::Idle(PowerSaving::M12));
+
+        // constant long gaps: the visited cells learn to power off
+        let mut p = BanditPolicy::from_model(&m, PowerSaving::M12, 0.2, None);
+        for _ in 0..32 {
+            let _ = p.plan_gap(&ctx());
+            p.observe(Duration::from_secs(3.0));
+        }
+        assert_eq!(p.plan_gap(&ctx()), GapPlan::PowerOff);
+    }
+
+    #[test]
+    fn bandit_greedy_table_reflects_learned_cells() {
+        let m = model();
+        let mut p = BanditPolicy::from_model(&m, PowerSaving::M12, 0.2, None);
+        for _ in 0..16 {
+            let _ = p.plan_gap(&ctx());
+            p.observe(Duration::from_millis(40.0));
+        }
+        let cell = p.context_cell(&ctx());
+        let table = p.greedy_table();
+        assert_eq!(table.0[cell], b'i');
+        // unvisited cells keep the hedge
+        assert!(table.0.iter().filter(|&&a| a == b't').count() >= 60);
+        assert!(p.cell_count(cell) > 0);
+    }
+
+    #[test]
+    fn bandit_action_costs_price_the_ski_rental_shapes() {
+        let tau = 0.5;
+        // short gap: idle and hedge pay the gap, off pays the buy
+        assert_eq!(BanditPolicy::action_costs(tau, 0.02), [0.02, 0.02, 0.5]);
+        // long gap: idle pays the gap, hedge pays rent + buy, off the buy
+        assert_eq!(BanditPolicy::action_costs(tau, 2.0), [2.0, 1.0, 0.5]);
+    }
+
+    #[test]
+    fn bandit_queue_depth_and_phase_split_cells() {
+        let m = model();
+        let p = BanditPolicy::from_model(&m, PowerSaving::M12, 0.2, None);
+        let base = ctx();
+        let queued = GapContext { queued: 2, ..base };
+        assert_ne!(p.context_cell(&base), p.context_cell(&queued));
+        let later = GapContext {
+            now: Duration::from_secs(BanditPolicy::DIURNAL_CYCLE_SECS / 2.0),
+            ..base
+        };
+        assert_ne!(p.context_cell(&base), p.context_cell(&later));
+    }
+
+    #[test]
+    fn bandit_observe_before_any_plan_is_harmless() {
+        let m = model();
+        let mut p = BanditPolicy::from_model(&m, PowerSaving::M12, 0.2, None);
+        // the fleet replay path observes the previous gap before planning
+        p.observe(Duration::from_millis(40.0));
+        assert_eq!(p.cell_count(p.context_cell(&ctx())), 0);
+        let _ = p.plan_gap(&ctx());
+    }
+}

@@ -11,10 +11,12 @@
 //! `coordinator::server` — one energy-accounting code path for every
 //! event-driven runtime.
 
+pub mod learned;
 pub mod replay;
 pub mod simulate;
 pub mod strategy;
 
+pub use learned::{BanditPolicy, BayesMixture};
 pub use replay::{
     item_phases, BatchRun, DeviceCosts, GapBatch, GapCostTable, GapExecution, ReplayCore, SlotId,
 };

@@ -31,11 +31,16 @@
 //! | [`EmaPredictor`] | observed gap history | idle iff EMA-predicted gap < crossover |
 //! | [`WindowedQuantile`] | last W observed gaps | idle iff the q-quantile of the window < crossover — robust on heavy tails |
 //! | [`RandomizedSkiRental`] | none (τ + its own RNG) | `IdleThenOff` at a timeout drawn per gap from the e/(e−1)-competitive density over [0, τ] |
+//! | [`BayesMixture`] | observed gap history | posterior-expected-cost argmin over Idle/Off/IdleThenOff under an online mixture-of-exponentials gap model |
+//! | [`BanditPolicy`] | observed gaps + [`GapContext`] features | per-cell greedy action over 64 discretized contexts, counterfactually priced; cold cells fall back to a trained table or the hedge |
 //!
 //! Every policy's tunables (`saving`, `timeout_ms`, `ema_alpha`,
-//! `window`, `quantile`, `seed`) come from the config-level
+//! `window`, `quantile`, `seed`, `components`, `table`) come from the config-level
 //! [`PolicyParams`] table via [`build_with`]; [`build`] uses the
 //! defaults, which reproduce the paper's setup.
+//!
+//! [`BayesMixture`]: crate::strategies::learned::BayesMixture
+//! [`BanditPolicy`]: crate::strategies::learned::BanditPolicy
 
 use crate::config::schema::{PolicyParams, PolicySpec};
 use crate::device::rails::PowerSaving;
@@ -696,6 +701,12 @@ pub fn build_with(
             params.timeout,
             params.seed,
         )),
+        PolicySpec::BayesMixture => {
+            Box::new(crate::strategies::learned::bayes_from_params(model, params))
+        }
+        PolicySpec::BanditPolicy => {
+            Box::new(crate::strategies::learned::bandit_from_params(model, params))
+        }
     }
 }
 
@@ -1063,6 +1074,7 @@ mod tests {
             window: 5,
             quantile: 0.25,
             seed: 3,
+            ..PolicyParams::default()
         };
         let t = build_with(PolicySpec::Timeout, &m, &params);
         assert_eq!(

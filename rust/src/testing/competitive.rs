@@ -1,0 +1,196 @@
+//! Shared statistical harness for competitive-ratio properties.
+//!
+//! Several suites pin the same shape of claim: a policy's (expected) gap
+//! energy stays within `bound × oracle` on a trace, up to a stated
+//! tolerance. For randomized or online-learning policies the measured
+//! cost is a sample mean over seeds, so a fixed seed count with a fixed
+//! fudge factor either wastes simulations (too many seeds) or flakes
+//! (too few). [`competitive_bound`] derives the seed count from the
+//! evidence instead: it keeps adding seeded realizations until the 95%
+//! confidence interval of the mean clears (or provably straddles) the
+//! bound, then reports the interval so the asserting test can print
+//! exactly how close the margin was.
+//!
+//! The helper never asserts itself — it returns a [`CompetitiveReport`]
+//! and the caller checks [`CompetitiveReport::holds`], so it composes
+//! with the mini-prop framework (whose properties are plain `bool`
+//! functions and shrink on failure) as well as with direct `assert!`s.
+
+/// The claim to check: measured cost vs `bound × oracle`, with explicit
+/// tolerances and seed-count limits.
+#[derive(Debug, Clone)]
+pub struct CompetitiveSpec {
+    /// Label for failure messages.
+    pub name: &'static str,
+    /// The clairvoyant baseline cost (same units as the cost function).
+    pub oracle: f64,
+    /// The competitive ratio being pinned (e.g. 2.0 or e/(e−1)).
+    pub bound: f64,
+    /// Multiplicative tolerance on the bound (sampling noise, FSM vs
+    /// Table-2 config-energy differences).
+    pub slack: f64,
+    /// Additive tolerance (guards the oracle ≈ 0 corner).
+    pub abs_tol: f64,
+    /// Lower sanity floor as a fraction of the oracle: the mean must not
+    /// fall below `floor_frac × oracle` (a cost materially *below* the
+    /// optimum means the accounting, not the policy, is wrong). Use 0.0
+    /// to disable.
+    pub floor_frac: f64,
+    /// Seeds to draw before the first interval check.
+    pub min_seeds: usize,
+    /// Hard cap on drawn seeds; reaching it stops extension and the
+    /// interval is reported as-is.
+    pub max_seeds: usize,
+}
+
+impl CompetitiveSpec {
+    /// Default starting sample size.
+    pub const DEFAULT_MIN_SEEDS: usize = 4;
+    /// Default seed cap.
+    pub const DEFAULT_MAX_SEEDS: usize = 24;
+
+    /// A spec with the default tolerances (no slack, 1e-6 additive, no
+    /// floor) and seed limits.
+    pub fn new(name: &'static str, oracle: f64, bound: f64) -> CompetitiveSpec {
+        CompetitiveSpec {
+            name,
+            oracle,
+            bound,
+            slack: 1.0,
+            abs_tol: 1e-6,
+            floor_frac: 0.0,
+            min_seeds: Self::DEFAULT_MIN_SEEDS,
+            max_seeds: Self::DEFAULT_MAX_SEEDS,
+        }
+    }
+}
+
+/// The measured outcome of a [`competitive_bound`] run.
+#[derive(Debug, Clone)]
+pub struct CompetitiveReport {
+    /// Label copied from the spec.
+    pub name: &'static str,
+    /// Seeds actually drawn.
+    pub seeds: usize,
+    /// Sample mean of the per-seed costs.
+    pub mean: f64,
+    /// 95% confidence half-width of the mean (0 for a deterministic
+    /// cost function — every draw identical).
+    pub half_width: f64,
+    /// The upper limit the claim allows:
+    /// `bound × oracle × slack + abs_tol`.
+    pub limit: f64,
+    /// The lower sanity floor: `floor_frac × oracle − abs_tol`.
+    pub floor: f64,
+}
+
+impl CompetitiveReport {
+    /// Whether the claim holds: the whole confidence interval sits at or
+    /// under the limit, and the mean respects the floor.
+    pub fn holds(&self) -> bool {
+        self.mean + self.half_width <= self.limit && self.mean >= self.floor
+    }
+
+    /// One-line summary for assertion messages.
+    pub fn render(&self) -> String {
+        format!(
+            "{}: mean {:.6} ± {:.6} over {} seed(s), limit {:.6}, floor {:.6}",
+            self.name, self.mean, self.half_width, self.seeds, self.limit, self.floor
+        )
+    }
+}
+
+/// The 95% half-width of the mean of `costs` (normal approximation,
+/// sample variance); 0.0 below two samples.
+fn half_width(costs: &[f64]) -> f64 {
+    let n = costs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mean = costs.iter().sum::<f64>() / n as f64;
+    let var = costs.iter().map(|c| (c - mean) * (c - mean)).sum::<f64>() / (n - 1) as f64;
+    1.96 * (var / n as f64).sqrt()
+}
+
+/// Measure `cost(seed)` for seeds `0, 1, …`, extending the sample until
+/// the 95% interval of the mean no longer straddles the spec's limit (a
+/// clear pass or a clear fail) or `max_seeds` is reached, and return the
+/// final interval. The seed sequence is fixed, so the whole procedure is
+/// deterministic: the same spec and cost function always draw the same
+/// seeds and produce the same report.
+pub fn competitive_bound(
+    spec: &CompetitiveSpec,
+    mut cost: impl FnMut(u64) -> f64,
+) -> CompetitiveReport {
+    assert!(
+        spec.oracle.is_finite() && spec.bound.is_finite() && spec.min_seeds >= 1,
+        "{}: degenerate competitive spec",
+        spec.name
+    );
+    let limit = spec.bound * spec.oracle * spec.slack + spec.abs_tol;
+    let floor = spec.floor_frac * spec.oracle - spec.abs_tol;
+    let mut costs: Vec<f64> = Vec::with_capacity(spec.min_seeds);
+    while costs.len() < spec.min_seeds.max(1) {
+        costs.push(cost(costs.len() as u64));
+    }
+    loop {
+        let mean = costs.iter().sum::<f64>() / costs.len() as f64;
+        let half = half_width(&costs);
+        // stop on a decisive interval (entirely under or entirely over
+        // the limit) or when the seed budget is spent
+        let decisive = mean + half <= limit || mean - half > limit;
+        if decisive || costs.len() >= spec.max_seeds {
+            return CompetitiveReport {
+                name: spec.name,
+                seeds: costs.len(),
+                mean,
+                half_width: half,
+                limit,
+                floor,
+            };
+        }
+        costs.push(cost(costs.len() as u64));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_cost_needs_only_the_minimum_seeds() {
+        let spec = CompetitiveSpec::new("det", 1.0, 2.0);
+        let report = competitive_bound(&spec, |_| 1.5);
+        assert_eq!(report.seeds, spec.min_seeds);
+        assert_eq!(report.half_width, 0.0);
+        assert!(report.holds(), "{}", report.render());
+    }
+
+    #[test]
+    fn noisy_cost_extends_the_sample_until_the_interval_clears() {
+        // alternating draws whose mean (≈1.5) is inside the limit 1.582
+        // but whose 4-seed interval straddles it: the helper must keep
+        // drawing until the interval tightens under the limit
+        let spec = CompetitiveSpec::new("noisy", 1.0, 1.582);
+        let report = competitive_bound(&spec, |seed| if seed % 2 == 0 { 1.35 } else { 1.65 });
+        assert!(report.seeds > spec.min_seeds, "{}", report.render());
+        assert!(report.seeds <= spec.max_seeds);
+        assert!(report.holds(), "{}", report.render());
+    }
+
+    #[test]
+    fn violations_and_floor_breaches_are_reported_not_hidden() {
+        let spec = CompetitiveSpec::new("violation", 1.0, 2.0);
+        let report = competitive_bound(&spec, |_| 5.0);
+        assert!(!report.holds(), "{}", report.render());
+        // a decisively-over interval stops early instead of burning seeds
+        assert!(report.seeds < spec.max_seeds, "{}", report.render());
+
+        let spec = CompetitiveSpec {
+            floor_frac: 0.95,
+            ..CompetitiveSpec::new("floor", 1.0, 2.0)
+        };
+        let report = competitive_bound(&spec, |_| 0.5);
+        assert!(!report.holds(), "{}", report.render());
+    }
+}

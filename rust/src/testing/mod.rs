@@ -1,8 +1,10 @@
 //! Test support: the mini property-testing framework used by unit and
 //! integration tests (offline substitute for proptest — see DESIGN.md §3).
 
+pub mod competitive;
 pub mod prop;
 pub mod report;
 
+pub use competitive::{competitive_bound, CompetitiveReport, CompetitiveSpec};
 pub use prop::{check, Below, Gen, InRange, Shrink};
 pub use report::assert_sim_reports_bit_identical;

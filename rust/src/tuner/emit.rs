@@ -48,7 +48,18 @@ fn knob_pairs(spec: PolicySpec, params: &PolicyParams) -> Vec<(&'static str, Str
             Knob::EMA_ALPHA => out.push(("ema-alpha", format!("{}", params.ema_alpha))),
             Knob::WINDOW => out.push(("window", params.window.to_string())),
             Knob::QUANTILE => out.push(("quantile", format!("{}", params.quantile))),
+            Knob::COMPONENTS => out.push(("components", params.components.to_string())),
             _ => {}
+        }
+    }
+    // the bandit's trained action table is not a searched knob, but a
+    // trained deployment artifact (`repro train --emit`) — emit it so the
+    // fragment reconstructs the deployed policy exactly. The value is 64
+    // letters from {i, o, t}, which the mini-YAML scalar parser can never
+    // mistake for a number.
+    if spec == PolicySpec::BanditPolicy {
+        if let Some(table) = &params.table {
+            out.push(("table", table.render()));
         }
     }
     out
@@ -222,6 +233,47 @@ mod tests {
         assert_eq!(params.window, 24);
         assert!((params.quantile - 0.35).abs() < 1e-12);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bandit_table_round_trips_through_the_fragment() {
+        use crate::config::schema::PolicyTable;
+        let mut table = PolicyTable::hedge();
+        table.0[0] = b'i';
+        table.0[63] = b'o';
+        let params = PolicyParams {
+            saving: PowerSaving::M12,
+            ema_alpha: 0.25,
+            table: Some(table),
+            ..PolicyParams::default()
+        };
+        let line = flags_line(PolicySpec::BanditPolicy, &params);
+        assert!(line.starts_with("--policy bandit --saving m12 --ema-alpha 0.25 --table i"));
+        let dir = std::env::temp_dir().join("idlewait_tuner_emit_table");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trained.yaml");
+        std::fs::write(&path, yaml_fragment(PolicySpec::BanditPolicy, &params)).unwrap();
+        let (spec, loaded) = load_fragment(&path).unwrap();
+        assert_eq!(spec, PolicySpec::BanditPolicy);
+        assert_eq!(loaded.table, Some(table));
+        assert!((loaded.ema_alpha - 0.25).abs() < 1e-12);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bayes_fragment_emits_components() {
+        let params = PolicyParams {
+            components: 4,
+            ..PolicyParams::default()
+        };
+        assert_eq!(
+            flags_line(PolicySpec::BayesMixture, &params),
+            "--policy bayes-mixture --saving m12 --components 4"
+        );
+        assert_eq!(
+            params_label(PolicySpec::BayesMixture, &params),
+            "saving=m12 components=4"
+        );
     }
 
     #[test]

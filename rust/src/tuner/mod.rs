@@ -30,16 +30,23 @@
 //!    config YAML fragment, and (via [`emit::load_fragment`]) the input
 //!    format for per-accelerator tuning in `repro multi`.
 //!
+//! [`train::train`] (`repro train`) is the offline sibling for the
+//! contextual bandit: instead of searching knob values it **fits** the
+//! bandit's per-cell action table on the train split and emits the
+//! frozen `(alpha, table)` point through the same [`emit`] surfaces.
+//!
 //! [`PolicyParams`]: crate::config::schema::PolicyParams
 
 pub mod emit;
 pub mod objective;
 pub mod search;
 pub mod space;
+pub mod train;
 pub mod tune;
 
 pub use emit::{flags_line, load_fragment, params_label, yaml_fragment};
 pub use objective::{Objective, ObjectiveKind};
 pub use search::SearchStrategy;
 pub use space::{Knob, ParamSpace, Scale};
+pub use train::{train, TrainConfig, TrainOutcome, TrainPoint};
 pub use tune::{tune, TuneConfig, TuneError, TuneOutcome};

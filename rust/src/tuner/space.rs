@@ -31,7 +31,7 @@ pub enum Scale {
 pub struct Knob {
     /// The `PolicyParams` field this knob drives; one of
     /// [`Knob::TIMEOUT_MS`], [`Knob::EMA_ALPHA`], [`Knob::WINDOW`],
-    /// [`Knob::QUANTILE`].
+    /// [`Knob::QUANTILE`], [`Knob::COMPONENTS`].
     pub name: &'static str,
     /// Range traversal (see [`Scale`]).
     pub scale: Scale,
@@ -54,6 +54,8 @@ impl Knob {
     pub const WINDOW: &'static str = "window";
     /// Knob name for the windowed-quantile planning quantile.
     pub const QUANTILE: &'static str = "quantile";
+    /// Knob name for the Bayes-mixture component count.
+    pub const COMPONENTS: &'static str = "components";
 
     /// The knob value at normalized position `t ∈ [0, 1]`.
     fn value_at(&self, t: f64) -> f64 {
@@ -91,6 +93,7 @@ impl Knob {
             Self::EMA_ALPHA => params.ema_alpha = value,
             Self::WINDOW => params.window = value.round().max(1.0) as usize,
             Self::QUANTILE => params.quantile = value,
+            Self::COMPONENTS => params.components = value.round().clamp(2.0, 4.0) as usize,
             other => unreachable!("unknown knob '{other}'"),
         }
     }
@@ -162,6 +165,24 @@ impl ParamSpace {
                     grid_levels: 7,
                 },
             ],
+            PolicySpec::BayesMixture => vec![Knob {
+                name: Knob::COMPONENTS,
+                scale: Scale::Linear,
+                lo: 2.0,
+                hi: 4.0,
+                integer: true,
+                grid_levels: 3,
+            }],
+            // the bandit's action table is trained (`repro train`), not
+            // searched; only its feature-EMA smoothing is a knob
+            PolicySpec::BanditPolicy => vec![Knob {
+                name: Knob::EMA_ALPHA,
+                scale: Scale::Log,
+                lo: 0.02,
+                hi: 1.0,
+                integer: false,
+                grid_levels: 6,
+            }],
         };
         let savings = match spec {
             // the named strategies carry their level in the spec itself
@@ -272,6 +293,22 @@ mod tests {
         // extreme corners are present
         assert!(grid.iter().any(|p| p.window == 2 && (p.quantile - 0.05).abs() < 1e-12));
         assert!(grid.iter().any(|p| p.window == 256 && (p.quantile - 0.95).abs() < 1e-12));
+    }
+
+    #[test]
+    fn learned_policy_spaces_search_their_own_knobs() {
+        let bayes = ParamSpace::for_spec(PolicySpec::BayesMixture);
+        let grid = bayes.grid_candidates(&PolicyParams::default());
+        // savings axis × component counts {2, 3, 4}
+        assert_eq!(grid.len(), 3 * 3);
+        assert!(grid.iter().all(|p| (2..=4).contains(&p.components)));
+        assert!(grid.iter().all(|p| p.validate().is_ok()));
+        let bandit = ParamSpace::for_spec(PolicySpec::BanditPolicy);
+        assert!(bandit.knobs.iter().any(|k| k.name == Knob::EMA_ALPHA));
+        assert!(bandit
+            .grid_candidates(&PolicyParams::default())
+            .iter()
+            .all(|p| p.validate().is_ok()));
     }
 
     #[test]

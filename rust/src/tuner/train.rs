@@ -1,0 +1,411 @@
+//! Offline training for the contextual bandit gap policy
+//! (`repro train`): replay a trace's train split through a cold
+//! [`BanditPolicy`], freeze the greedy per-cell action table it learned,
+//! and emit it as a `policy_params` fragment (`--emit`, the same
+//! round-trippable surface as `repro tune --emit`) that `repro serve`,
+//! `repro exp4` and the fleet classes can load back.
+//!
+//! Train/eval split: the table is **fit** on the chronological train
+//! prefix (the bandit observes each gap once, full-information
+//! counterfactual updates, no exploration noise) and **scored** on it by
+//! a from-scratch DES evaluation of the frozen `(alpha, table)` point;
+//! the winner among the candidate feature-smoothing alphas is then
+//! reported against the held-out tail — the same anti-overfit discipline
+//! `tuner::tune` applies, specialized to the bandit's two-phase
+//! (fit table, then deploy frozen) lifecycle.
+//!
+//! Determinism: the candidate-alpha ladder is a pure log grid, the
+//! fit replay is sequential per candidate, and scoring runs on the
+//! [`SweepRunner`](crate::runner::SweepRunner) grid in candidate order —
+//! byte-identical output at any `--threads N`.
+
+use std::sync::Arc;
+
+use crate::config::loader::SimConfig;
+use crate::config::schema::{PolicyParams, PolicySpec, PolicyTable};
+use crate::energy::analytical::Analytical;
+use crate::runner::grid::Grid;
+use crate::runner::SweepRunner;
+use crate::strategies::learned::BanditPolicy;
+use crate::strategies::strategy::{GapContext, Policy};
+use crate::tuner::emit;
+use crate::tuner::objective::Objective;
+use crate::tuner::tune::{evaluate, ScoreCard, TuneError};
+use crate::util::csv::Csv;
+use crate::util::units::Duration;
+
+/// Everything a training run needs besides the config and the trace.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Number of candidate feature-smoothing alphas on the log ladder.
+    pub budget: usize,
+    /// Train fraction of the trace in (0, 1); the rest is held out.
+    pub split: f64,
+    /// Stored into the emitted params (the bandit itself is RNG-free).
+    pub seed: u64,
+    /// What the candidate scores minimize.
+    pub objective: Objective,
+}
+
+impl TrainConfig {
+    /// Default candidate-alpha budget.
+    pub const DEFAULT_BUDGET: usize = 8;
+    /// Default train fraction (matches `tune`).
+    pub const DEFAULT_SPLIT: f64 = 0.7;
+    /// Alpha ladder endpoints: sluggish features to track-newest.
+    pub const ALPHA_LO: f64 = 0.02;
+    /// Upper ladder endpoint.
+    pub const ALPHA_HI: f64 = 1.0;
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            budget: Self::DEFAULT_BUDGET,
+            split: Self::DEFAULT_SPLIT,
+            seed: 0,
+            objective: Objective::default(),
+        }
+    }
+}
+
+/// One scored candidate of the alpha ladder (one CSV row).
+#[derive(Debug, Clone)]
+pub struct TrainPoint {
+    /// Ladder position (CSV row order).
+    pub candidate: usize,
+    /// The feature-smoothing alpha fitted and scored.
+    pub alpha: f64,
+    /// The greedy table the fit replay froze.
+    pub table: PolicyTable,
+    /// Frozen-point score on the train split.
+    pub train: ScoreCard,
+}
+
+/// The result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    /// The deployable parameter point: winning alpha + frozen table.
+    pub best: PolicyParams,
+    /// Winning candidate's index on the ladder.
+    pub best_candidate: usize,
+    /// Winning point scored on the train split.
+    pub best_train: ScoreCard,
+    /// Winning point scored on the held-out split.
+    pub best_val: ScoreCard,
+    /// The default fixed `Timeout` policy on the same held-out split —
+    /// the deployment-relevant baseline the trained table must beat.
+    pub timeout_val: ScoreCard,
+    /// Every candidate, in ladder order.
+    pub candidates: Vec<TrainPoint>,
+    /// Gaps in the train split.
+    pub train_gaps: usize,
+    /// Gaps in the validation split.
+    pub val_gaps: usize,
+}
+
+impl TrainOutcome {
+    /// Whether the trained point beats the default `Timeout` baseline on
+    /// the held-out split.
+    pub fn beats_timeout_on_holdout(&self) -> bool {
+        self.best_val.score <= self.timeout_val.score
+    }
+
+    /// The candidate ladder as CSV (`repro train --csv`).
+    pub fn to_csv(&self) -> Csv {
+        let mut csv = Csv::new(&[
+            "candidate",
+            "ema_alpha",
+            "gaps",
+            "score",
+            "energy_mj_per_item",
+            "late_rate",
+            "items",
+            "table",
+        ]);
+        for p in &self.candidates {
+            csv.row(&[
+                p.candidate.to_string(),
+                format!("{}", p.alpha),
+                self.train_gaps.to_string(),
+                format!("{}", p.train.score),
+                format!("{}", p.train.metrics.energy_mj_per_item),
+                format!("{}", p.train.metrics.late_rate),
+                p.train.metrics.items.to_string(),
+                p.table.render(),
+            ]);
+        }
+        csv
+    }
+
+    /// Human-readable summary (the `repro train` report body).
+    pub fn render(&self) -> String {
+        let trained = self
+            .best
+            .table
+            .map(|t| t.0.iter().filter(|&&a| a != b't').count())
+            .unwrap_or(0);
+        let mut out = String::new();
+        out.push_str(&format!(
+            "trained bandit over {} train / {} validation gaps ({} candidate alphas)\n",
+            self.train_gaps,
+            self.val_gaps,
+            self.candidates.len(),
+        ));
+        out.push_str(&format!(
+            "best params:  {} ({} of {} cells learned)\n",
+            emit::params_label(PolicySpec::BanditPolicy, &self.best),
+            trained,
+            PolicyTable::CELLS,
+        ));
+        out.push_str(&format!(
+            "train:        {:.4} | holdout: {:.4} (overfit gap {:+.4})\n",
+            self.best_train.score,
+            self.best_val.score,
+            self.best_val.score - self.best_train.score,
+        ));
+        out.push_str(&format!(
+            "holdout vs default timeout policy: trained {:.4} vs timeout {:.4} ({})\n",
+            self.best_val.score,
+            self.timeout_val.score,
+            if self.beats_timeout_on_holdout() {
+                "trained wins"
+            } else {
+                "timeout wins"
+            },
+        ));
+        out
+    }
+}
+
+/// Fit replay: run a cold bandit over `gaps` with the exact plan/observe
+/// interleaving the online runtimes use (single stream: `queued` 0, the
+/// clock advancing by the realized gaps) and freeze its greedy table.
+pub fn fit_table(
+    model: &Analytical,
+    base: &PolicyParams,
+    alpha: f64,
+    gaps: &[Duration],
+) -> PolicyTable {
+    let mut policy = BanditPolicy::from_model(model, base.saving, alpha, None);
+    let mut now = Duration::ZERO;
+    for (i, &gap) in gaps.iter().enumerate() {
+        let ctx = GapContext {
+            items_done: i as u64 + 1,
+            now,
+            queued: 0,
+        };
+        let _ = policy.plan_gap(&ctx);
+        policy.observe(gap);
+        now = now + gap;
+    }
+    policy.greedy_table()
+}
+
+/// Train the bandit's action table on `gaps`: fit + score one frozen
+/// `(alpha, table)` point per ladder candidate, pick the best train
+/// score (ties toward the lower ladder index), report it on the held-out
+/// tail next to the default `Timeout` baseline.
+pub fn train(
+    config: &SimConfig,
+    tc: &TrainConfig,
+    gaps: &Arc<[Duration]>,
+    runner: &SweepRunner,
+) -> Result<TrainOutcome, TuneError> {
+    if gaps.len() < 4 {
+        return Err(TuneError::TraceTooShort { have: gaps.len() });
+    }
+    if !(tc.split.is_finite() && tc.split > 0.0 && tc.split < 1.0) {
+        return Err(TuneError::BadSplit { split: tc.split });
+    }
+    if tc.budget == 0 {
+        return Err(TuneError::BadBudget);
+    }
+    let train_len = ((gaps.len() as f64 * tc.split).round() as usize).clamp(1, gaps.len() - 1);
+    let (train, val) = gaps.split_at(train_len);
+    let model = Analytical::new(&config.item, config.workload.energy_budget);
+    let base = config.workload.params;
+
+    // the candidate ladder: log-spaced alphas, low to high
+    let n = tc.budget;
+    let denom = n.saturating_sub(1).max(1) as f64;
+    let alphas: Vec<f64> = (0..n)
+        .map(|i| {
+            let t = i as f64 / denom;
+            TrainConfig::ALPHA_LO * (TrainConfig::ALPHA_HI / TrainConfig::ALPHA_LO).powf(t)
+        })
+        .collect();
+
+    // fit + score every candidate on the sweep runner (candidate order is
+    // canonical; each cell is a pure function of its alpha)
+    let grid = Grid::new(alphas.clone());
+    let points: Vec<(PolicyTable, ScoreCard)> = runner.run(&grid, |cell| {
+        let alpha = *cell.params;
+        let table = fit_table(&model, &base, alpha, train);
+        let params = PolicyParams {
+            ema_alpha: alpha,
+            table: Some(table),
+            seed: tc.seed,
+            ..base
+        };
+        let card = evaluate(
+            config,
+            &model,
+            PolicySpec::BanditPolicy,
+            &params,
+            &tc.objective,
+            train,
+        );
+        (table, card)
+    });
+    let candidates: Vec<TrainPoint> = points
+        .iter()
+        .enumerate()
+        .map(|(i, (table, card))| TrainPoint {
+            candidate: i,
+            alpha: alphas[i],
+            table: *table,
+            train: *card,
+        })
+        .collect();
+    let mut best_candidate = 0usize;
+    for (i, p) in candidates.iter().enumerate() {
+        if p.train
+            .score
+            .total_cmp(&candidates[best_candidate].train.score)
+            .is_lt()
+        {
+            best_candidate = i;
+        }
+    }
+    let winner = &candidates[best_candidate];
+    let best = PolicyParams {
+        ema_alpha: winner.alpha,
+        table: Some(winner.table),
+        seed: tc.seed,
+        ..base
+    };
+    let best_val = evaluate(
+        config,
+        &model,
+        PolicySpec::BanditPolicy,
+        &best,
+        &tc.objective,
+        val,
+    );
+    let timeout_val = evaluate(
+        config,
+        &model,
+        PolicySpec::Timeout,
+        &PolicyParams::default(),
+        &tc.objective,
+        val,
+    );
+    Ok(TrainOutcome {
+        best,
+        best_candidate,
+        best_train: winner.train,
+        best_val,
+        timeout_val,
+        candidates,
+        train_gaps: train.len(),
+        val_gaps: val.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_default;
+    use crate::coordinator::tracegen::{generate_durations, TraceKind};
+
+    fn bursty(n: usize, seed: u64) -> Arc<[Duration]> {
+        generate_durations(TraceKind::BurstyIot, n, 40.0, seed).into()
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs() {
+        let cfg = paper_default();
+        let runner = SweepRunner::single();
+        let short: Arc<[Duration]> = vec![Duration::from_millis(40.0); 2].into();
+        assert!(matches!(
+            train(&cfg, &TrainConfig::default(), &short, &runner),
+            Err(TuneError::TraceTooShort { have: 2 })
+        ));
+        let gaps = bursty(32, 1);
+        let bad = TrainConfig {
+            split: 0.0,
+            ..TrainConfig::default()
+        };
+        assert!(matches!(
+            train(&cfg, &bad, &gaps, &runner),
+            Err(TuneError::BadSplit { .. })
+        ));
+        let bad = TrainConfig {
+            budget: 0,
+            ..TrainConfig::default()
+        };
+        assert!(matches!(train(&cfg, &bad, &gaps, &runner), Err(TuneError::BadBudget)));
+    }
+
+    #[test]
+    fn training_learns_cells_and_is_identical_at_any_thread_count() {
+        let cfg = paper_default();
+        let gaps = bursty(128, 1);
+        let tc = TrainConfig::default();
+        let serial = train(&cfg, &tc, &gaps, &SweepRunner::single()).unwrap();
+        let parallel = train(&cfg, &tc, &gaps, &SweepRunner::new(8)).unwrap();
+        assert_eq!(serial.best, parallel.best);
+        assert_eq!(serial.to_csv().render(), parallel.to_csv().render());
+        // the fit replay visited cells and learned non-hedge actions
+        let table = serial.best.table.expect("training always emits a table");
+        assert!(table.0.iter().any(|&a| a != b't'), "{}", table.render());
+        assert_eq!(serial.candidates.len(), tc.budget);
+        assert!(!serial.render().is_empty());
+    }
+
+    #[test]
+    fn trained_table_beats_the_timeout_baseline_on_bursty_holdout() {
+        // the acceptance-criteria comparison in miniature: on a bursty
+        // trace the frozen table idles through bursts and buys at
+        // silences, beating the fixed break-even timeout out-of-sample
+        let cfg = paper_default();
+        let runner = SweepRunner::single();
+        let out = train(&cfg, &TrainConfig::default(), &bursty(192, 3), &runner).unwrap();
+        assert!(
+            out.beats_timeout_on_holdout(),
+            "trained {} vs timeout {}",
+            out.best_val.score,
+            out.timeout_val.score
+        );
+        assert!(out.best_val.metrics.late_rate <= out.timeout_val.metrics.late_rate);
+    }
+
+    #[test]
+    fn emitted_fragment_reconstructs_the_trained_policy() {
+        let cfg = paper_default();
+        let runner = SweepRunner::single();
+        let out = train(&cfg, &TrainConfig::default(), &bursty(96, 2), &runner).unwrap();
+        let dir = std::env::temp_dir().join("idlewait_train_emit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trained.yaml");
+        std::fs::write(&path, emit::yaml_fragment(PolicySpec::BanditPolicy, &out.best)).unwrap();
+        let (spec, loaded) = emit::load_fragment(&path).unwrap();
+        assert_eq!(spec, PolicySpec::BanditPolicy);
+        assert_eq!(loaded.table, out.best.table);
+        assert!((loaded.ema_alpha - out.best.ema_alpha).abs() < 1e-9);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn csv_has_the_published_schema() {
+        let cfg = paper_default();
+        let runner = SweepRunner::single();
+        let out = train(&cfg, &TrainConfig::default(), &bursty(48, 1), &runner).unwrap();
+        let csv = out.to_csv().render();
+        assert!(csv.starts_with(
+            "candidate,ema_alpha,gaps,score,energy_mj_per_item,late_rate,items,table"
+        ));
+        assert_eq!(out.to_csv().n_rows(), out.candidates.len());
+    }
+}

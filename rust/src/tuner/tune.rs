@@ -302,7 +302,7 @@ fn score_report(config: &SimConfig, objective: &Objective, report: &SimReport) -
 
 /// Exact-identity key of a parameter point (f64 fields compared by
 /// bits), used to deduplicate candidates before DES time is spent.
-type ParamsKey = (u8, bool, u64, u64, usize, u64, u64);
+type ParamsKey = (u8, bool, u64, u64, usize, u64, u64, usize, Option<[u8; 64]>);
 
 fn params_key(p: &PolicyParams) -> ParamsKey {
     (
@@ -313,6 +313,8 @@ fn params_key(p: &PolicyParams) -> ParamsKey {
         p.window,
         p.quantile.to_bits(),
         p.seed,
+        p.components,
+        p.table.map(|t| t.0),
     )
 }
 

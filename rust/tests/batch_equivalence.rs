@@ -84,7 +84,13 @@ fn batched_golden_worker_matches_scalar_golden_on_the_corpus() {
     for (trace_name, gaps) in corpus_traces() {
         let mut capped = cfg.clone();
         capped.workload.max_items = Some(gaps.len() as u64 + 1);
-        for spec in [PolicySpec::OnOff, PolicySpec::Timeout, PolicySpec::WindowedQuantile] {
+        for spec in [
+            PolicySpec::OnOff,
+            PolicySpec::Timeout,
+            PolicySpec::WindowedQuantile,
+            PolicySpec::BayesMixture,
+            PolicySpec::BanditPolicy,
+        ] {
             let mut policy = build(spec, &model);
             let batched = SimWorker::golden(&capped).run_batch(
                 &capped,
@@ -105,6 +111,9 @@ fn batched_golden_worker_matches_scalar_golden_on_the_corpus() {
 /// `GAP_BATCH` + 1 → full trace) equals from-scratch capped runs: a
 /// resumed run chunks the tail differently than a fresh run chunks the
 /// whole, which must never change a value — only the grouping of work.
+/// The learned policies are the sharpest case: their posterior/cell
+/// state carries across the resume and must land bit-identical to a
+/// fresh policy replaying the same prefix.
 #[test]
 fn prefix_resume_across_chunk_boundaries_matches_from_scratch() {
     let cfg = paper_default();
@@ -113,7 +122,12 @@ fn prefix_resume_across_chunk_boundaries_matches_from_scratch() {
     let (name, gaps) = corpus_traces().swap_remove(1);
     assert!(gaps.len() > GAP_BATCH + 1, "corpus trace shorter than a chunk");
     let shared: Arc<[Duration]> = gaps.clone().into();
-    for spec in [PolicySpec::IdleWaitingM12, PolicySpec::WindowedQuantile] {
+    for spec in [
+        PolicySpec::IdleWaitingM12,
+        PolicySpec::WindowedQuantile,
+        PolicySpec::BayesMixture,
+        PolicySpec::BanditPolicy,
+    ] {
         let mut sim = PrefixSim::new(&cfg, build(spec, &model), shared.clone());
         for prefix in [GAP_BATCH - 1, GAP_BATCH + 1, gaps.len()] {
             let resumed = sim.advance_to(prefix);

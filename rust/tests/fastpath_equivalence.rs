@@ -111,21 +111,25 @@ fn paper_constants_hold_on_both_paths() {
 }
 
 /// The resumable prefix simulation (tuner rungs) equals from-scratch
-/// runs on a real corpus trace, at every rung size.
+/// runs on a real corpus trace, at every rung size — for a static
+/// policy and for both learned policies, whose carried-over online
+/// state must replay bit-identically.
 #[test]
 fn prefix_resume_on_corpus_trace_matches_from_scratch() {
     let cfg = paper_default();
     let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
     let (name, gaps) = corpus_traces().swap_remove(0);
     let shared: Arc<[Duration]> = gaps.clone().into();
-    let mut sim = PrefixSim::new(&cfg, build(PolicySpec::Timeout, &model), shared);
-    for prefix in [16usize, 32, 64, gaps.len()] {
-        let resumed = sim.advance_to(prefix);
-        let mut capped = cfg.clone();
-        capped.workload.max_items = Some(prefix as u64 + 1);
-        let mut policy = build(PolicySpec::Timeout, &model);
-        let mut arrivals = TraceReplay::new(gaps[..prefix].to_vec());
-        let scratch = simulate(&capped, policy.as_mut(), &mut arrivals);
-        assert_identical(&resumed, &scratch, &format!("{name} prefix {prefix}"));
+    for spec in [PolicySpec::Timeout, PolicySpec::BayesMixture, PolicySpec::BanditPolicy] {
+        let mut sim = PrefixSim::new(&cfg, build(spec, &model), shared.clone());
+        for prefix in [16usize, 32, 64, gaps.len()] {
+            let resumed = sim.advance_to(prefix);
+            let mut capped = cfg.clone();
+            capped.workload.max_items = Some(prefix as u64 + 1);
+            let mut policy = build(spec, &model);
+            let mut arrivals = TraceReplay::new(gaps[..prefix].to_vec());
+            let scratch = simulate(&capped, policy.as_mut(), &mut arrivals);
+            assert_identical(&resumed, &scratch, &format!("{spec} on {name} prefix {prefix}"));
+        }
     }
 }

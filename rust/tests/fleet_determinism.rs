@@ -19,7 +19,9 @@ use idlewait::util::units::Energy;
 
 /// A heterogeneous 1000-device fleet (4 survey shards, mixture draws,
 /// reservoir merging, routing) rendered at `--threads 1` vs several
-/// parallel widths: the report and the CSV must be byte-identical.
+/// parallel widths: the report and the CSV must be byte-identical. One
+/// class runs the contextual bandit, so a device's online cell state is
+/// part of what must not leak across shards or schedule orders.
 #[test]
 fn fleet_output_identical_at_any_thread_count() {
     let mut cfg = paper_default();
@@ -37,6 +39,12 @@ fn fleet_output_identical_at_any_thread_count() {
             policy: PolicySpec::RandomizedSkiRental,
             params: PolicyParams::default(),
             battery: Some(Energy::from_joules(2000.0)),
+        },
+        FleetClassSpec {
+            weight: 1.0,
+            policy: PolicySpec::BanditPolicy,
+            params: PolicyParams::default(),
+            battery: None,
         },
     ];
     let options = FleetOptions {

@@ -1,0 +1,415 @@
+//! Properties of the learned gap policies (`BayesMixture`,
+//! `BanditPolicy`): the Oracle ≤ learned ≤ e/(e−1)·Oracle sandwich on
+//! every corpus trace and on adversarial synthetics, per-seed bit
+//! determinism, convergence to the crossover decision on periodic
+//! arrivals, thread-count byte-identity of the policy sweep, and the
+//! bursty-IoT holdout win over the fixed `Timeout` baseline.
+//!
+//! Warm-up discipline for the sandwich: each learner takes one full
+//! plan/observe pass over the trace before the measured run, so the
+//! bound pins steady-state behaviour (the cold-start hedge is itself
+//! only 2-competitive and is covered by the spec's slack elsewhere).
+//! The stated tolerance is multiplicative slack on e/(e−1): 1.05 where
+//! the learner provably collapses to the exact crossover decision
+//! (constant gaps), 1.10 on mixed traces, covering model misfit, regime
+//! transitions and the ~1e-4 FSM-vs-Table-2 config-energy difference.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use idlewait::config::paper_default;
+use idlewait::config::schema::{ArrivalSpec, PolicyParams, PolicySpec};
+use idlewait::coordinator::requests::{Periodic, TraceReplay};
+use idlewait::device::rails::{PowerSaving, RailSet};
+use idlewait::energy::analytical::Analytical;
+use idlewait::energy::crossover;
+use idlewait::experiments::exp4_policies::{run_threaded, Exp4Config};
+use idlewait::runner::SweepRunner;
+use idlewait::strategies::simulate::{simulate, SimReport};
+use idlewait::strategies::strategy::{build_with, GapContext, OnOff, Oracle, Policy};
+use idlewait::testing::competitive::{competitive_bound, CompetitiveSpec};
+use idlewait::testing::report::assert_sim_reports_bit_identical;
+use idlewait::tuner::tune::evaluate;
+use idlewait::tuner::{train, TrainConfig};
+use idlewait::util::units::Duration;
+
+/// The randomized ski-rental competitive ratio e/(e−1) ≈ 1.582.
+const BOUND: f64 = std::f64::consts::E / (std::f64::consts::E - 1.0);
+
+/// The two learned policy variants under test.
+const LEARNED: [PolicySpec; 2] = [PolicySpec::BayesMixture, PolicySpec::BanditPolicy];
+
+fn model() -> Analytical {
+    let cfg = paper_default();
+    Analytical::new(&cfg.item, cfg.workload.energy_budget)
+}
+
+/// Build a learned policy at its default tunables (M1+2 idle mode) with
+/// an explicit seed.
+fn learned_policy(spec: PolicySpec, seed: u64) -> Box<dyn Policy> {
+    let m = model();
+    let params = PolicyParams {
+        seed,
+        ..PolicyParams::default()
+    };
+    build_with(spec, &m, &params)
+}
+
+/// One full warm-up pass: plan and observe every gap in arrival order,
+/// exactly as the simulator interleaves them, without scoring energy.
+fn warm(policy: &mut dyn Policy, gaps: &[Duration]) {
+    let mut now = Duration::ZERO;
+    for (i, &gap) in gaps.iter().enumerate() {
+        let ctx = GapContext {
+            items_done: i as u64 + 1,
+            now,
+            queued: 0,
+        };
+        let _ = policy.plan_gap(&ctx);
+        policy.observe(gap);
+        now = now + gap;
+    }
+}
+
+/// Run a policy over an explicit gap trace (each gap used exactly once:
+/// n gaps → n+1 items).
+fn run_trace(policy: &mut dyn Policy, gaps: &[Duration]) -> SimReport {
+    let mut cfg = paper_default();
+    cfg.workload.max_items = Some(gaps.len() as u64 + 1);
+    let mut arrivals = TraceReplay::new(gaps.to_vec());
+    simulate(&cfg, policy, &mut arrivals)
+}
+
+/// The DES cost of one power-on + configuration (FSM mechanism), in mJ.
+fn config_cycle_mj() -> f64 {
+    let mut cfg = paper_default();
+    cfg.workload.max_items = Some(1);
+    let mut arrivals = Periodic {
+        period: Duration::from_millis(40.0),
+    };
+    let report = simulate(&cfg, &mut OnOff, &mut arrivals);
+    let m = model();
+    report.energy_exact.millijoules() - m.item.e_active.millijoules()
+}
+
+/// Energy attributable to the gaps alone: total minus the active phases
+/// and minus the initial configuration. Reconfigurations after power-off
+/// gaps stay included — they are the price of the off decision.
+fn gap_energy_mj(report: &SimReport, config_cycle_mj: f64) -> f64 {
+    let m = model();
+    report.energy_exact.millijoules()
+        - report.items as f64 * m.item.e_active.millijoules()
+        - config_cycle_mj
+}
+
+/// The bundled corpus traces, in corpus order.
+fn corpus() -> Vec<(&'static str, Arc<[Duration]>)> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("../workloads");
+    ["bursty_iot.csv", "diurnal_poisson.csv", "onoff_mmpp.csv"]
+        .iter()
+        .map(|name| {
+            let replay = TraceReplay::from_file(dir.join(name))
+                .unwrap_or_else(|e| panic!("corpus trace {name}: {e}"));
+            (*name, replay.shared_gaps())
+        })
+        .collect()
+}
+
+/// Pin `oracle ≤ warmed-learner ≤ BOUND × oracle × slack` on one trace,
+/// via the shared evidence-driven [`competitive_bound`] harness. The
+/// seed varies the learner's init jitter (a no-op for the RNG-free
+/// bandit, whose interval is then zero-width). Returns a failure line
+/// instead of asserting so callers can report every violation at once.
+fn sandwich(
+    name: &'static str,
+    gaps: &[Duration],
+    spec: PolicySpec,
+    slack: f64,
+) -> Option<String> {
+    let m = model();
+    let c = config_cycle_mj();
+    let oracle = gap_energy_mj(
+        &run_trace(&mut Oracle::from_model(&m, PowerSaving::M12), gaps),
+        c,
+    );
+    let cspec = CompetitiveSpec {
+        slack,
+        // the oracle really is a lower bound: a learner materially below
+        // it means the energy accounting broke, not that it learned well
+        floor_frac: 0.995,
+        ..CompetitiveSpec::new(name, oracle, BOUND)
+    };
+    let report = competitive_bound(&cspec, |seed| {
+        let mut policy = learned_policy(spec, seed);
+        warm(policy.as_mut(), gaps);
+        gap_energy_mj(&run_trace(policy.as_mut(), gaps), c)
+    });
+    if report.holds() {
+        None
+    } else {
+        Some(format!("{} [{}]: {}", name, spec.name(), report.render()))
+    }
+}
+
+/// The acceptance sandwich: on every bundled corpus trace, both learned
+/// policies sit between the clairvoyant oracle and e/(e−1) × oracle
+/// (slack 1.10) after one warm-up pass.
+#[test]
+fn learned_policies_are_sandwiched_on_every_corpus_trace() {
+    let mut failures = Vec::new();
+    for (name, gaps) in corpus() {
+        for spec in LEARNED {
+            if let Some(f) = sandwich(name, &gaps, spec, 1.10) {
+                failures.push(f);
+            }
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "sandwich violations:\n{}",
+        failures.join("\n")
+    );
+}
+
+/// The sandwich on adversarial synthetics: constant gaps on either side
+/// of the M1+2 crossover (the classic ski-rental adversary — a warmed
+/// learner must collapse to the exact crossover decision, slack 1.05),
+/// and a regime-switching block-bimodal trace (32 burst gaps, then 32
+/// silences, repeated) whose blocks the feature EMA must track.
+///
+/// Deliberately NOT an i.i.d. bimodal mix: for a per-cell deterministic
+/// rule an i.i.d. short/long coin flip is indistinguishable inside one
+/// context cell, and the best single action there provably exceeds
+/// e/(e−1) (it only satisfies the deterministic 2× bound). The e/(e−1)
+/// claim for the learners is about *learnable* structure, so the
+/// adversary switches regimes in blocks the context features can see.
+#[test]
+fn learned_policies_hold_the_sandwich_on_adversarial_synthetics() {
+    let constant_short = vec![Duration::from_millis(40.0); 160];
+    let constant_long = vec![Duration::from_millis(600.0); 160];
+    let mut blocks = Vec::with_capacity(256);
+    for _ in 0..4 {
+        for _ in 0..32 {
+            blocks.push(Duration::from_millis(16.0));
+        }
+        for _ in 0..32 {
+            blocks.push(Duration::from_millis(640.0));
+        }
+    }
+    let synthetics: [(&'static str, &[Duration], f64); 3] = [
+        ("constant-40ms", &constant_short, 1.05),
+        ("constant-600ms", &constant_long, 1.05),
+        ("block-bimodal", &blocks, 1.10),
+    ];
+    let mut failures = Vec::new();
+    for (name, gaps, slack) in synthetics {
+        for spec in LEARNED {
+            if let Some(f) = sandwich(name, gaps, spec, slack) {
+                failures.push(f);
+            }
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "sandwich violations:\n{}",
+        failures.join("\n")
+    );
+}
+
+/// Same seed ⇒ bit-identical `SimReport`: the learners' online updates
+/// are plain arithmetic in observation order and the only randomness
+/// (the mixture's init jitter) is consumed at construction.
+#[test]
+fn learned_policies_are_bit_deterministic_per_seed() {
+    let (name, gaps) = corpus().remove(0);
+    for spec in LEARNED {
+        let run = |seed: u64| {
+            let mut policy = learned_policy(spec, seed);
+            run_trace(policy.as_mut(), &gaps)
+        };
+        assert_sim_reports_bit_identical(
+            &run(7),
+            &run(7),
+            &format!("{} on {name}, seed 7", spec.name()),
+        );
+    }
+}
+
+/// On strictly periodic arrivals below the M1+2 crossover, both learners
+/// degenerate to Idle-Waiting bit-for-bit: the cold-start hedge timeout
+/// is τ > period (the timer never fires, so the hedged gaps already
+/// spend pure idle energy), and every converged plan idles.
+#[test]
+fn learned_policies_degenerate_to_idle_waiting_below_crossover() {
+    let mut cfg = paper_default();
+    cfg.workload.max_items = Some(400);
+    let m = model();
+    let run = |policy: &mut dyn Policy| {
+        let mut arrivals = Periodic {
+            period: Duration::from_millis(40.0),
+        };
+        simulate(&cfg, policy, &mut arrivals)
+    };
+    let iw = run(build_with(PolicySpec::IdleWaitingM12, &m, &PolicyParams::default()).as_mut());
+    for spec in LEARNED {
+        let r = run(learned_policy(spec, 0).as_mut());
+        assert_eq!(r.items, iw.items, "{}", spec.name());
+        assert_eq!(r.configurations, 1, "{}", spec.name());
+        assert_eq!(r.decisions.idled, 399, "{}", spec.name());
+        assert_eq!(r.decisions.powered_off, 0, "{}", spec.name());
+        assert_eq!(r.decisions.timeouts_expired, 0, "{}", spec.name());
+        assert_eq!(
+            r.energy_exact,
+            iw.energy_exact,
+            "{}: exact degeneracy",
+            spec.name()
+        );
+    }
+}
+
+/// Above the crossover on periodic arrivals, both learners converge to
+/// the On-Off decision: every gap ends powered off (the transient plans
+/// are expiring hedges, never pure idles), planned power-offs dominate
+/// once the posterior/cells warm up, and the total energy exceeds pure
+/// On-Off by at most the transient's rent.
+#[test]
+fn learned_policies_converge_to_power_off_above_crossover() {
+    let mut cfg = paper_default();
+    cfg.workload.arrival = ArrivalSpec::Periodic {
+        period: Duration::from_secs(2.0),
+    };
+    cfg.workload.max_items = Some(400);
+    let m = model();
+    let run = |policy: &mut dyn Policy| {
+        let mut arrivals = Periodic {
+            period: Duration::from_secs(2.0),
+        };
+        simulate(&cfg, policy, &mut arrivals)
+    };
+    let onoff = run(&mut OnOff);
+    let p_idle = RailSet::idle_power(PowerSaving::M12);
+    let tau = crossover::ski_rental_timeout(&m, p_idle);
+    let premium_mj = (p_idle * tau).millijoules();
+    for spec in LEARNED {
+        let r = run(learned_policy(spec, 0).as_mut());
+        assert_eq!(r.items, onoff.items, "{}", spec.name());
+        // every gap powers off: hedges expire (2 s > τ), nothing idles
+        assert_eq!(r.decisions.idled, 0, "{}", spec.name());
+        assert_eq!(
+            r.decisions.powered_off + r.decisions.timeouts_expired,
+            399,
+            "{}",
+            spec.name()
+        );
+        assert!(
+            r.decisions.powered_off >= 360,
+            "{}: only {} of 399 gaps converged to a planned power-off",
+            spec.name(),
+            r.decisions.powered_off
+        );
+        assert_eq!(r.configurations, onoff.configurations, "{}", spec.name());
+        // each transient hedge rents at most τ·P_idle before buying
+        let extra = r.energy_exact.millijoules() - onoff.energy_exact.millijoules();
+        assert!(
+            extra >= -1e-6 && extra <= 40.0 * premium_mj,
+            "{}: extra {extra} mJ vs per-hedge premium {premium_mj} mJ",
+            spec.name()
+        );
+    }
+}
+
+/// The acceptance holdout: trained on the bursty-IoT corpus's 70% train
+/// split, both learned policies beat the default fixed `Timeout` on
+/// energy over the held-out 30% — at an equal-or-lower late rate. The
+/// bandit goes through `tuner::train` (the `repro train` path, which
+/// scores the trained table against the same baseline); the mixture is
+/// deployed cold on the identical holdout slice.
+#[test]
+fn learned_policies_beat_the_fixed_timeout_on_the_bursty_holdout() {
+    let cfg = paper_default();
+    let m = model();
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("../workloads");
+    let gaps = TraceReplay::from_file(dir.join("bursty_iot.csv"))
+        .expect("bursty corpus trace")
+        .shared_gaps();
+    let runner = SweepRunner::single();
+    let tc = TrainConfig::default();
+    let outcome = train(&cfg, &tc, &gaps, &runner).expect("train on the bursty corpus");
+    let timeout = outcome.timeout_val.metrics;
+    assert!(
+        outcome.beats_timeout_on_holdout(),
+        "trained bandit {} must not lose to timeout {} on the holdout",
+        outcome.best_val.score,
+        outcome.timeout_val.score
+    );
+    assert!(
+        outcome.best_val.metrics.energy_mj_per_item < timeout.energy_mj_per_item,
+        "trained bandit {} mJ/item must beat timeout {} mJ/item",
+        outcome.best_val.metrics.energy_mj_per_item,
+        timeout.energy_mj_per_item
+    );
+    assert!(
+        outcome.best_val.metrics.late_rate <= timeout.late_rate,
+        "trained bandit late rate {} exceeds timeout {}",
+        outcome.best_val.metrics.late_rate,
+        timeout.late_rate
+    );
+
+    // the mixture, deployed cold on the same held-out slice
+    let split = ((gaps.len() as f64 * tc.split).round() as usize).clamp(1, gaps.len() - 1);
+    let bayes = evaluate(
+        &cfg,
+        &m,
+        PolicySpec::BayesMixture,
+        &PolicyParams::default(),
+        &tc.objective,
+        &gaps[split..],
+    );
+    assert!(
+        bayes.metrics.energy_mj_per_item < timeout.energy_mj_per_item,
+        "bayes {} mJ/item must beat timeout {} mJ/item on the holdout",
+        bayes.metrics.energy_mj_per_item,
+        timeout.energy_mj_per_item
+    );
+    assert!(
+        bayes.metrics.late_rate <= timeout.late_rate,
+        "bayes late rate {} exceeds timeout {}",
+        bayes.metrics.late_rate,
+        timeout.late_rate
+    );
+}
+
+/// The policy-grid sweep (which now carries both learned variants on
+/// its `PolicySpec::ALL` axis) renders byte-identical CSV at
+/// `--threads 1`, `--threads 4` and `--threads auto` — the learners'
+/// online state never leaks across cells or schedule orders.
+#[test]
+fn exp4_sweep_with_learned_variants_is_byte_identical_at_any_thread_count() {
+    let cfg = paper_default();
+    let e4 = Exp4Config {
+        items: 400,
+        period_ms: 40.0,
+        seed: 4,
+    };
+    let csv = |runner: &SweepRunner| {
+        run_threaded(&cfg, &e4, runner)
+            .expect("exp4 grid")
+            .to_csv()
+            .render()
+    };
+    let serial = csv(&SweepRunner::single());
+    assert!(
+        serial.contains("bayes-mixture") && serial.contains("bandit"),
+        "the sweep must cover both learned variants"
+    );
+    assert_eq!(
+        serial,
+        csv(&SweepRunner::new(4)),
+        "--threads 4 must be byte-identical to serial"
+    );
+    assert_eq!(
+        serial,
+        csv(&SweepRunner::auto()),
+        "--threads auto must be byte-identical to serial"
+    );
+}

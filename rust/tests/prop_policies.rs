@@ -12,6 +12,7 @@ use idlewait::strategies::strategy::{
     EmaPredictor, IdleWaiting, OnOff, Oracle, Policy, RandomizedSkiRental, Timeout,
     WindowedQuantile,
 };
+use idlewait::testing::competitive::{competitive_bound, CompetitiveSpec};
 use idlewait::testing::prop::{check, Below, InRange};
 use idlewait::util::rng::Xoshiro256ss;
 use idlewait::util::units::Duration;
@@ -114,10 +115,15 @@ fn prop_oracle_lower_bounds_the_statics() {
 /// e/(e−1) ≈ 1.582 (+ ε for sampling noise and the ~1e-4 FSM-vs-Table-2
 /// config-energy difference) of the clairvoyant oracle's. The classic
 /// density equalizes the ratio, so this holds on both sides of
-/// τ ≈ 89.17 ms; gaps are drawn from 60–400 ms, where a 480-draw sample
-/// mean concentrates well inside the ε margin (below ~30 ms the
+/// τ ≈ 89.17 ms; gaps are drawn from 60–400 ms (below ~30 ms the
 /// optimum shrinks toward zero and the fire-event noise would need far
 /// more draws for the same confidence).
+///
+/// The seed count is *derived from the evidence*, not fixed: the shared
+/// [`competitive_bound`] harness keeps adding seeded realizations until
+/// the 95% confidence interval of the mean clears the bound, and the
+/// property asserts that the whole interval — not just the point
+/// estimate — sits under the limit.
 #[test]
 fn prop_randomized_ski_rental_is_e_over_e_minus_1_competitive() {
     let m = model();
@@ -129,23 +135,23 @@ fn prop_randomized_ski_rental_is_e_over_e_minus_1_competitive() {
             &run_trace(&mut Oracle::from_model(&m, PowerSaving::BASELINE), &gaps),
             c,
         );
-        // expectation over the timeout draw: average several seeded runs
-        let runs = 4u64;
-        let total: f64 = (0..runs)
-            .map(|seed| {
-                let mut p = RandomizedSkiRental::from_model(
-                    &m,
-                    PowerSaving::BASELINE,
-                    None,
-                    0xBEE5 + seed,
-                );
-                gap_energy_mj(&run_trace(&mut p, &gaps), c)
-            })
-            .sum();
-        let avg = total / runs as f64;
-        // within the competitive bound, and genuinely randomized (never
-        // materially below the optimum either)
-        avg <= bound * oracle * 1.08 + 1e-6 && avg >= oracle * 0.95
+        let spec = CompetitiveSpec {
+            slack: 1.08,
+            // genuinely randomized: never materially below the optimum
+            floor_frac: 0.95,
+            ..CompetitiveSpec::new("randomized-ski-rental", oracle, bound)
+        };
+        // expectation over the timeout draw: seeded runs until the
+        // interval is decisive
+        let report = competitive_bound(&spec, |seed| {
+            let mut p =
+                RandomizedSkiRental::from_model(&m, PowerSaving::BASELINE, None, 0xBEE5 + seed);
+            gap_energy_mj(&run_trace(&mut p, &gaps), c)
+        });
+        if !report.holds() {
+            eprintln!("gap {} ms: {}", gap_ms.0, report.render());
+        }
+        report.holds()
     });
 }
 
