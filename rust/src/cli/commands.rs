@@ -31,9 +31,13 @@
 //! repro plan --period 75              # policy recommendation
 //! repro fleet [--devices 1000] [--steps 256] [--requests 2000]
 //!             [--placement round-robin] [--trace FILE] [--period MS]
-//!             [--seed S] [--deadline-ms T] [--quick] [--csv PATH]
+//!             [--seed S] [--deadline-ms T] [--fault-config-rate R]
+//!             [--retry-max N] [--backoff-ms T] [--quick] [--csv PATH]
 //!             [--config FILE] [--threads N]
 //!                                     # fleet-scale DES + wake-placement routing
+//! repro faults [--items 2000] [--period 40] [--seed 250] [--retry-max 3]
+//!              [--backoff-ms 10] [--quick] [--csv PATH] [--config FILE]
+//!              [--threads N]          # fault rate × policy robustness sweep
 //! repro bench [--json PATH] [--quick] [--filter NAME] [--items N] [--threads N]
 //!                                     # in-process perf benchmarks, optionally as JSON
 //! repro bench-compare <before.json> <after.json> [--out PATH] [--max-regress 0.25]
@@ -83,6 +87,7 @@ COMMANDS:
               --sources >= 2 = the event-driven multi-client coordinator
   plan        Recommend a strategy for a given request period
   fleet       Fleet-scale DES: 100k+ devices, streaming aggregates, wake-placement routing
+  faults      Robustness sweep: configuration fault rate \u{d7} gap policy under retries
   bench       Time the hot paths (DES, sweeps, tuner); --json emits {name, iters, ns_per_iter, throughput}
   bench-compare  Diff two bench --json recordings: speedup table + regression verdict
   all         Run every experiment in paper order
@@ -189,6 +194,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "serve" => cmd_serve(rest),
         "plan" => cmd_plan(rest),
         "fleet" => cmd_fleet(rest),
+        "faults" => cmd_faults(rest),
         "bench" => cmd_bench(rest),
         "bench-compare" => cmd_bench_compare(rest),
         "all" => cmd_all(rest),
@@ -1072,6 +1078,9 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
             ("period", true),
             ("seed", true),
             ("deadline-ms", true),
+            ("fault-config-rate", true),
+            ("retry-max", true),
+            ("backoff-ms", true),
             ("quick", false),
             ("csv", true),
             ("config", true),
@@ -1097,6 +1106,33 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
             bail!("--deadline-ms must be a positive number of milliseconds (got {ms})");
         }
         config.fleet.deadline = Some(Duration::from_millis(ms));
+    }
+    // fault-injection overrides: a composite configuration fault rate
+    // (split across the four scenarios exactly as `repro faults` splits
+    // it) plus the retry policy knobs, written into the config's faults
+    // block so every device derives its stream from it
+    if let Some(rate) = args.f64_opt("fault-config-rate")? {
+        if !(rate.is_finite() && (0.0..=1.0).contains(&rate)) {
+            bail!("--fault-config-rate must be in [0, 1] (got {rate})");
+        }
+        config.faults = crate::experiments::faults::spec_for_rate(
+            rate,
+            config.faults.seed,
+            config.faults.retry_max,
+            config.faults.backoff,
+        );
+    }
+    if let Some(n) = args.u64_opt("retry-max")? {
+        if n == 0 {
+            bail!("--retry-max must be at least 1");
+        }
+        config.faults.retry_max = n as u32;
+    }
+    if let Some(ms) = args.f64_opt("backoff-ms")? {
+        if !(ms.is_finite() && ms >= 0.0) {
+            bail!("--backoff-ms must be a non-negative number of milliseconds (got {ms})");
+        }
+        config.faults.backoff = Duration::from_millis(ms);
     }
     // arrival overrides: a gap-trace file beats --period beats the config
     if let Some(path) = args.str_opt("trace") {
@@ -1149,6 +1185,68 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
     let report = run_fleet(&config, &options, &runner).context("running the fleet simulation")?;
     print!("{}", report.render());
     maybe_write_csv(&args, report.to_csv())
+}
+
+/// `repro faults`: the robustness sweep — configuration fault rate ×
+/// gap policy under the deterministic fault injector, answering at what
+/// failure rate Idle-Waiting's energy advantage over On-Off widens
+/// beyond its fault-free baseline. `--quick` shrinks the run for smoke
+/// tests; output is byte-identical at any `--threads N`.
+fn cmd_faults(argv: &[String]) -> Result<()> {
+    use crate::experiments::faults::{self, FaultsConfig};
+
+    let args = Args::parse(
+        argv,
+        &[
+            ("items", true),
+            ("period", true),
+            ("seed", true),
+            ("retry-max", true),
+            ("backoff-ms", true),
+            ("quick", false),
+            ("csv", true),
+            ("config", true),
+            ("threads", true),
+            ("help", false),
+        ],
+    )?;
+    if help_and_done(&args, "faults") {
+        return Ok(());
+    }
+    let config = load_config(&args)?;
+    let defaults = FaultsConfig::default();
+    let quick = args.flag("quick") || crate::bench::quick_mode();
+    let items = args
+        .u64_opt("items")?
+        .unwrap_or(if quick { 300 } else { defaults.items });
+    if items == 0 {
+        bail!("--items must be at least 1");
+    }
+    let period_ms = args
+        .f64_opt("period")?
+        .unwrap_or_else(|| config.workload.arrival.mean_period().millis());
+    if !(period_ms.is_finite() && period_ms > 0.0) {
+        bail!("--period must be a positive number of milliseconds (got {period_ms})");
+    }
+    let retry_max = match args.u64_opt("retry-max")? {
+        Some(0) => bail!("--retry-max must be at least 1"),
+        Some(n) => n as u32,
+        None => defaults.retry_max,
+    };
+    let backoff_ms = args.f64_opt("backoff-ms")?.unwrap_or(defaults.backoff_ms);
+    if !(backoff_ms.is_finite() && backoff_ms >= 0.0) {
+        bail!("--backoff-ms must be a non-negative number of milliseconds (got {backoff_ms})");
+    }
+    let fc = FaultsConfig {
+        items,
+        period_ms,
+        seed: args.u64_opt("seed")?.unwrap_or(defaults.seed),
+        retry_max,
+        backoff_ms,
+    };
+    let result = faults::run_threaded(&config, &fc, &sweep_runner(&args)?);
+    print!("{}", result.render());
+    maybe_write_csv(&args, result.to_csv())
 }
 
 /// Every target `repro bench` can register, in registration order — the
@@ -1749,6 +1847,7 @@ mod tests {
             "serve",
             "plan",
             "fleet",
+            "faults",
             "bench",
             "bench-compare",
             "all",
@@ -1782,6 +1881,57 @@ mod tests {
         assert!(run(&sv(&["fleet", "--period", "-4"])).is_err());
         assert!(run(&sv(&["fleet", "--deadline-ms", "0"])).is_err());
         assert!(run(&sv(&["fleet", "--trace", "/no/such/trace.csv"])).is_err());
+        assert!(run(&sv(&["fleet", "--fault-config-rate", "2"])).is_err());
+        assert!(run(&sv(&["fleet", "--retry-max", "0"])).is_err());
+        assert!(run(&sv(&["fleet", "--backoff-ms", "-1"])).is_err());
+    }
+
+    #[test]
+    fn fleet_faulty_small_runs() {
+        run(&sv(&[
+            "fleet",
+            "--devices",
+            "6",
+            "--steps",
+            "8",
+            "--requests",
+            "24",
+            "--fault-config-rate",
+            "0.3",
+            "--retry-max",
+            "2",
+            "--threads",
+            "2",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn faults_small_runs_and_writes_csv() {
+        let dir = std::env::temp_dir().join("idlewait_faults_csv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("faults.csv");
+        run(&sv(&[
+            "faults",
+            "--items",
+            "120",
+            "--threads",
+            "2",
+            "--csv",
+            path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("rate,policy,items,energy_mj"), "{body}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn faults_rejects_bad_inputs() {
+        assert!(run(&sv(&["faults", "--items", "0"])).is_err());
+        assert!(run(&sv(&["faults", "--period", "-4"])).is_err());
+        assert!(run(&sv(&["faults", "--retry-max", "0"])).is_err());
+        assert!(run(&sv(&["faults", "--backoff-ms", "-1"])).is_err());
     }
 
     #[test]

@@ -5,7 +5,7 @@
 use std::path::Path;
 
 use crate::config::schema::{
-    ConfigError, FleetSpec, PlatformSpec, ServeSpec, WorkloadItemSpec, WorkloadSpec,
+    ConfigError, FaultSpec, FleetSpec, PlatformSpec, ServeSpec, WorkloadItemSpec, WorkloadSpec,
 };
 use crate::config::{validate, yaml};
 use crate::util::json::Json;
@@ -23,6 +23,9 @@ pub struct SimConfig {
     pub fleet: FleetSpec,
     /// The serving description (`repro serve`; defaults when absent).
     pub serve: ServeSpec,
+    /// The fault-injection description (all rates zero when absent, which
+    /// keeps every simulation path bit-identical to the fault-free build).
+    pub faults: FaultSpec,
 }
 
 /// Why a config failed to load.
@@ -78,6 +81,7 @@ pub fn load_str(text: &str) -> Result<SimConfig, LoadError> {
         platform: PlatformSpec::from_json(&root)?,
         fleet: FleetSpec::from_json(&root)?,
         serve: ServeSpec::from_json(&root)?,
+        faults: FaultSpec::from_json(&root)?,
     };
     validate::validate(&config).map_err(LoadError::Invalid)?;
     Ok(config)

@@ -8,6 +8,6 @@ pub mod yaml;
 
 pub use loader::{load_file, load_str, paper_default, SimConfig};
 pub use schema::{
-    ArrivalSpec, FleetClassSpec, FleetSpec, FpgaModel, PhaseSpec, PlatformSpec, PolicyParams,
-    PolicySpec, SpiConfig, WorkloadItemSpec, WorkloadSpec,
+    ArrivalSpec, FaultSpec, FleetClassSpec, FleetSpec, FpgaModel, PhaseSpec, PlatformSpec,
+    PolicyParams, PolicySpec, SpiConfig, WorkloadItemSpec, WorkloadSpec,
 };

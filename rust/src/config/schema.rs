@@ -1076,6 +1076,177 @@ impl ServeSpec {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Fault-injection description (deterministic robustness layer)
+// ---------------------------------------------------------------------------
+
+/// The optional `faults` block: deterministic, seeded fault injection for
+/// the device layer. Four per-attempt failure scenarios cover the realistic
+/// configuration hazards (bitstream CRC mismatch, corrupted SPI transfer,
+/// supply brownout mid-configuration, transient flash read error) plus a
+/// brownout during inference, and a retry policy (attempt cap + capped
+/// exponential backoff in **sim time**) governs recovery. All rates default
+/// to zero — [`FaultSpec::none`] — in which case no fault stream is ever
+/// instantiated and every simulation path is bit-identical to a build
+/// without this block. See `docs/ROBUSTNESS.md`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Per-attempt probability that configuration aborts on a bitstream
+    /// CRC mismatch (detected at the end of the load, so nearly the whole
+    /// configuration energy is wasted).
+    pub config_crc_rate: f64,
+    /// Per-attempt probability that configuration aborts on a corrupted
+    /// SPI transfer.
+    pub spi_corrupt_rate: f64,
+    /// Per-attempt probability that configuration aborts on a supply
+    /// brownout.
+    pub brownout_config_rate: f64,
+    /// Per-attempt probability that configuration aborts on a transient
+    /// flash read error (fails early: little energy wasted).
+    pub flash_read_rate: f64,
+    /// Per-item probability that a supply brownout interrupts the
+    /// inference phases, clearing the configuration and forcing a full
+    /// (fault-prone) reconfiguration before the item can be served.
+    pub brownout_infer_rate: f64,
+    /// Base seed of the fault draw streams; per-device streams derive
+    /// from it via the `derive_seed` family so sweeps stay byte-identical
+    /// at any `--threads`.
+    pub seed: u64,
+    /// Attempt cap: a configuration that has failed this many times in a
+    /// row gives up ([`crate::device::board::BoardError::RetriesExhausted`]).
+    pub retry_max: u32,
+    /// Backoff spent powered off (sim time) after the first failed
+    /// attempt; doubles per subsequent failure.
+    pub backoff: Duration,
+    /// Saturation cap on the exponential backoff.
+    pub backoff_cap: Duration,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            config_crc_rate: 0.0,
+            spi_corrupt_rate: 0.0,
+            brownout_config_rate: 0.0,
+            flash_read_rate: 0.0,
+            brownout_infer_rate: 0.0,
+            seed: 0xFA_17,
+            retry_max: 3,
+            backoff: Duration::from_millis(10.0),
+            backoff_cap: Duration::from_millis(1000.0),
+        }
+    }
+}
+
+impl FaultSpec {
+    /// The fault-free spec: all rates zero, retry policy at defaults.
+    /// `FaultSpec::none() == FaultSpec::default()`, spelled explicitly so
+    /// call sites read as a statement of intent.
+    pub fn none() -> FaultSpec {
+        FaultSpec::default()
+    }
+
+    /// Whether any fault scenario has a non-zero rate. When `false`, no
+    /// RNG stream is created and the device layer takes the exact same
+    /// code paths (and f64 operation order) as before this block existed.
+    pub fn enabled(&self) -> bool {
+        self.config_fault_rate() > 0.0 || self.brownout_infer_rate > 0.0
+    }
+
+    /// Total per-attempt probability that a configuration fails (the four
+    /// configuration scenarios are disjoint, so rates add).
+    pub fn config_fault_rate(&self) -> f64 {
+        self.config_crc_rate
+            + self.spi_corrupt_rate
+            + self.brownout_config_rate
+            + self.flash_read_rate
+    }
+
+    /// Decode the optional `faults` mapping; absent keys keep defaults.
+    pub fn from_json(root: &Json) -> Result<FaultSpec, ConfigError> {
+        let v = match root.get("faults") {
+            Some(f) => f,
+            None => return Ok(FaultSpec::none()),
+        };
+        let path = "faults";
+        let mut spec = FaultSpec::none();
+        if let Some(r) = opt_f64(v, path, "config_crc_rate")? {
+            spec.config_crc_rate = r;
+        }
+        if let Some(r) = opt_f64(v, path, "spi_corrupt_rate")? {
+            spec.spi_corrupt_rate = r;
+        }
+        if let Some(r) = opt_f64(v, path, "brownout_config_rate")? {
+            spec.brownout_config_rate = r;
+        }
+        if let Some(r) = opt_f64(v, path, "flash_read_rate")? {
+            spec.flash_read_rate = r;
+        }
+        if let Some(r) = opt_f64(v, path, "brownout_infer_rate")? {
+            spec.brownout_infer_rate = r;
+        }
+        if let Some(s) = opt_u64(v, path, "seed")? {
+            spec.seed = s;
+        }
+        if let Some(n) = opt_u64(v, path, "retry_max")? {
+            spec.retry_max = n as u32;
+        }
+        if let Some(ms) = opt_f64(v, path, "backoff_ms")? {
+            spec.backoff = Duration::from_millis(ms);
+        }
+        if let Some(ms) = opt_f64(v, path, "backoff_cap_ms")? {
+            spec.backoff_cap = Duration::from_millis(ms);
+        }
+        Ok(spec)
+    }
+
+    /// Range-check the faults block; returns an actionable message.
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, rate) in [
+            ("config_crc_rate", self.config_crc_rate),
+            ("spi_corrupt_rate", self.spi_corrupt_rate),
+            ("brownout_config_rate", self.brownout_config_rate),
+            ("flash_read_rate", self.flash_read_rate),
+            ("brownout_infer_rate", self.brownout_infer_rate),
+        ] {
+            if !(rate.is_finite() && (0.0..=1.0).contains(&rate)) {
+                return Err(format!(
+                    "faults.{name} must be a probability in [0, 1] (got {rate})"
+                ));
+            }
+        }
+        if self.config_fault_rate() > 1.0 {
+            return Err(format!(
+                "faults: the four configuration fault rates are disjoint scenarios \
+                 and must sum to at most 1 (got {})",
+                self.config_fault_rate()
+            ));
+        }
+        if self.retry_max == 0 {
+            return Err(
+                "faults.retry_max must be at least 1 attempt (got 0); a device that \
+                 may never try cannot configure at all"
+                    .into(),
+            );
+        }
+        if !(self.backoff.secs().is_finite() && self.backoff.secs() >= 0.0) {
+            return Err(format!(
+                "faults.backoff_ms must be non-negative and finite (got {})",
+                self.backoff.millis()
+            ));
+        }
+        if !(self.backoff_cap.secs().is_finite() && self.backoff_cap >= self.backoff) {
+            return Err(format!(
+                "faults.backoff_cap_ms must be finite and at least backoff_ms \
+                 (got cap {} < base {})",
+                self.backoff_cap.millis(),
+                self.backoff.millis()
+            ));
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1522,5 +1693,55 @@ workload_item:
     fn spi_labels() {
         assert_eq!(SpiConfig::optimal().label(), "Quad SPI @ 66 MHz, compressed");
         assert_eq!(SpiConfig::worst().label(), "Single SPI @ 3 MHz, uncompressed");
+    }
+
+    #[test]
+    fn faults_default_when_absent_and_disabled() {
+        let spec = FaultSpec::from_json(&Json::Null).unwrap();
+        assert_eq!(spec, FaultSpec::none());
+        assert!(!spec.enabled());
+        assert_eq!(spec.config_fault_rate(), 0.0);
+        assert_eq!(spec.retry_max, 3);
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn faults_block_parses() {
+        let v = yaml::parse(
+            "faults:\n  config_crc_rate: 0.02\n  spi_corrupt_rate: 0.01\n  \
+             brownout_config_rate: 0.005\n  flash_read_rate: 0.015\n  \
+             brownout_infer_rate: 0.001\n  seed: 99\n  retry_max: 5\n  \
+             backoff_ms: 20\n  backoff_cap_ms: 640\n",
+        )
+        .unwrap();
+        let spec = FaultSpec::from_json(&v).unwrap();
+        assert!(spec.enabled());
+        assert!((spec.config_fault_rate() - 0.05).abs() < 1e-12);
+        assert_eq!(spec.seed, 99);
+        assert_eq!(spec.retry_max, 5);
+        assert_eq!(spec.backoff, Duration::from_millis(20.0));
+        assert_eq!(spec.backoff_cap, Duration::from_millis(640.0));
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn faults_validate_rejects_bad_values() {
+        let mut spec = FaultSpec {
+            config_crc_rate: 1.5,
+            ..FaultSpec::none()
+        };
+        assert!(spec.validate().unwrap_err().contains("config_crc_rate"));
+        spec.config_crc_rate = 0.8;
+        spec.spi_corrupt_rate = 0.8;
+        assert!(spec.validate().unwrap_err().contains("sum to at most 1"));
+        spec.spi_corrupt_rate = 0.0;
+        spec.retry_max = 0;
+        assert!(spec.validate().unwrap_err().contains("retry_max"));
+        spec.retry_max = 3;
+        spec.backoff = Duration::from_millis(-1.0);
+        assert!(spec.validate().unwrap_err().contains("backoff_ms"));
+        spec.backoff = Duration::from_millis(50.0);
+        spec.backoff_cap = Duration::from_millis(10.0);
+        assert!(spec.validate().unwrap_err().contains("backoff_cap_ms"));
     }
 }

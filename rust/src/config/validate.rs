@@ -18,6 +18,7 @@ pub fn validate(cfg: &SimConfig) -> Result<(), String> {
     validate_workload(cfg)?;
     cfg.fleet.validate()?;
     cfg.serve.validate()?;
+    cfg.faults.validate()?;
     validate_profile(cfg)?;
     Ok(())
 }
@@ -227,6 +228,34 @@ mod tests {
         let cfg = with_serving("  sources: 4\n  max_queue: 16\n").unwrap();
         assert_eq!(cfg.serve.sources, 4);
         assert_eq!(cfg.serve.max_queue, 16);
+    }
+
+    /// Out-of-range `faults` knobs must fail at load time with the same
+    /// actionable-message contract as the other blocks.
+    #[test]
+    fn out_of_range_faults_block_rejected() {
+        let with_faults = |faults_yaml: &str| -> Result<SimConfig, String> {
+            let doc = format!("{PAPER_DEFAULT_YAML}faults:\n{faults_yaml}");
+            match load_str(&doc) {
+                Ok(cfg) => Ok(cfg),
+                Err(crate::config::loader::LoadError::Invalid(msg)) => Err(msg),
+                Err(other) => panic!("unexpected load error: {other}"),
+            }
+        };
+        let e = with_faults("  config_crc_rate: 2\n").unwrap_err();
+        assert!(e.contains("faults.config_crc_rate"), "{e}");
+        let e = with_faults("  brownout_infer_rate: -0.5\n").unwrap_err();
+        assert!(e.contains("faults.brownout_infer_rate"), "{e}");
+        let e = with_faults("  config_crc_rate: 0.6\n  spi_corrupt_rate: 0.6\n").unwrap_err();
+        assert!(e.contains("sum to at most 1"), "{e}");
+        let e = with_faults("  retry_max: 0\n").unwrap_err();
+        assert!(e.contains("faults.retry_max"), "{e}");
+        let e = with_faults("  backoff_ms: 100\n  backoff_cap_ms: 10\n").unwrap_err();
+        assert!(e.contains("faults.backoff_cap_ms"), "{e}");
+        // in-range block loads fine and reports enabled
+        let cfg = with_faults("  config_crc_rate: 0.05\n  retry_max: 4\n").unwrap();
+        assert!(cfg.faults.enabled());
+        assert_eq!(cfg.faults.retry_max, 4);
     }
 
     /// Out-of-range per-policy tunables must be rejected at load time

@@ -54,6 +54,7 @@ use std::fmt::Write as _;
 
 use crate::config::schema::{PolicyParams, PolicySpec};
 use crate::config::SimConfig;
+use crate::device::faults::FaultState;
 use crate::coordinator::requests;
 use crate::coordinator::requests::ArrivalProcess as _;
 use crate::energy::analytical::Analytical;
@@ -85,6 +86,7 @@ const FLEET_RESERVOIR_CAP: usize = 4096;
 const CLASS_SALT: u64 = 0x666C_6565_7463_6C73;
 const SURVEY_SALT: u64 = 0x666C_6565_7473_7276;
 const ROUTE_SALT: u64 = 0x666C_6565_7472_7465;
+const FLEET_FAULT_SALT: u64 = 0x666C_6565_7466_6C74;
 const ENERGY_SALT: u64 = 0x666C_6565_7400_0001;
 const LIFETIME_SALT: u64 = 0x666C_6565_7400_0002;
 const LATE_SALT: u64 = 0x666C_6565_7400_0003;
@@ -190,6 +192,13 @@ pub struct FleetStepReport {
     pub lifetime_h: Option<Summary>,
     /// Distribution of per-device late-request rates.
     pub late_rate: Option<Summary>,
+    /// Faulted configuration/inference attempts retried across the fleet
+    /// (zero whenever fault injection is disabled).
+    pub retries: u64,
+    /// Requests shed after a device exhausted its retry cap.
+    pub shed: u64,
+    /// Energy destroyed by faulted attempts across the fleet.
+    pub recovery_energy: Energy,
 }
 
 impl FleetStepReport {
@@ -201,6 +210,9 @@ impl FleetStepReport {
             energy_mj: None,
             lifetime_h: None,
             late_rate: None,
+            retries: 0,
+            shed: 0,
+            recovery_energy: Energy::ZERO,
         }
     }
 }
@@ -237,6 +249,14 @@ pub struct FleetRouteReport {
     pub device_energy_mj: Option<Summary>,
     /// Distribution of per-device served items.
     pub device_items: Option<Summary>,
+    /// Faulted configuration/inference attempts retried across the fleet
+    /// (zero whenever fault injection is disabled).
+    pub retries: u64,
+    /// Energy destroyed by faulted attempts across the fleet.
+    pub recovery_energy: Energy,
+    /// Requests whose first device gave up configuring (retry cap
+    /// exhausted) and that were re-routed to an alternative device.
+    pub rerouted: u64,
 }
 
 impl FleetRouteReport {
@@ -255,6 +275,9 @@ impl FleetRouteReport {
             latency_ms: None,
             device_energy_mj: None,
             device_items: None,
+            retries: 0,
+            recovery_energy: Energy::ZERO,
+            rerouted: 0,
         }
     }
 }
@@ -305,23 +328,25 @@ fn scalar_row(csv: &mut Csv, section: &str, metric: &str, value: String) {
     ]);
 }
 
+/// Emits the metric's row even with no observations ([`Summary::empty`]
+/// zeros), so the CSV schema is fixed and zero-request runs stay
+/// byte-comparable instead of silently dropping rows.
 fn dist_row(csv: &mut Csv, section: &str, metric: &str, s: &Option<Summary>) {
-    if let Some(s) = s {
-        let f = |v: f64| format!("{v}");
-        csv.row(&[
-            section.to_string(),
-            metric.to_string(),
-            s.count.to_string(),
-            f(s.mean),
-            f(s.std_dev),
-            f(s.min),
-            f(s.p50),
-            f(s.p90),
-            f(s.p95),
-            f(s.p99),
-            f(s.max),
-        ]);
-    }
+    let s = s.clone().unwrap_or_else(Summary::empty);
+    let f = |v: f64| format!("{v}");
+    csv.row(&[
+        section.to_string(),
+        metric.to_string(),
+        s.count.to_string(),
+        f(s.mean),
+        f(s.std_dev),
+        f(s.min),
+        f(s.p50),
+        f(s.p90),
+        f(s.p95),
+        f(s.p99),
+        f(s.max),
+    ]);
 }
 
 impl FleetReport {
@@ -343,6 +368,15 @@ impl FleetReport {
             out.push_str(&summary_line("energy_mj", &s.energy_mj));
             out.push_str(&summary_line("lifetime_h", &s.lifetime_h));
             out.push_str(&summary_line("late_rate", &s.late_rate));
+            if s.retries > 0 || s.shed > 0 {
+                let _ = writeln!(
+                    out,
+                    "  faults: retries={} shed={} recovery_energy={:.4} mJ",
+                    s.retries,
+                    s.shed,
+                    s.recovery_energy.millijoules()
+                );
+            }
         }
         let r = &self.route;
         if r.requests > 0 {
@@ -361,6 +395,15 @@ impl FleetReport {
             out.push_str(&summary_line("latency_ms", &r.latency_ms));
             out.push_str(&summary_line("device_energy_mj", &r.device_energy_mj));
             out.push_str(&summary_line("device_items", &r.device_items));
+            if r.retries > 0 || r.rerouted > 0 {
+                let _ = writeln!(
+                    out,
+                    "  faults: retries={} rerouted={} recovery_energy={:.4} mJ",
+                    r.retries,
+                    r.rerouted,
+                    r.recovery_energy.millijoules()
+                );
+            }
         }
         out
     }
@@ -385,6 +428,14 @@ impl FleetReport {
         dist_row(&mut csv, "survey", "energy_mj", &s.energy_mj);
         dist_row(&mut csv, "survey", "lifetime_h", &s.lifetime_h);
         dist_row(&mut csv, "survey", "late_rate", &s.late_rate);
+        scalar_row(&mut csv, "survey", "retries", s.retries.to_string());
+        scalar_row(&mut csv, "survey", "shed", s.shed.to_string());
+        scalar_row(
+            &mut csv,
+            "survey",
+            "recovery_energy_mj",
+            format!("{}", s.recovery_energy.millijoules()),
+        );
         let r = &self.route;
         scalar_row(&mut csv, "route", "placement", r.placement.name().to_string());
         scalar_row(&mut csv, "route", "requests", r.requests.to_string());
@@ -409,6 +460,14 @@ impl FleetReport {
         dist_row(&mut csv, "route", "latency_ms", &r.latency_ms);
         dist_row(&mut csv, "route", "device_energy_mj", &r.device_energy_mj);
         dist_row(&mut csv, "route", "device_items", &r.device_items);
+        scalar_row(&mut csv, "route", "retries", r.retries.to_string());
+        scalar_row(&mut csv, "route", "rerouted", r.rerouted.to_string());
+        scalar_row(
+            &mut csv,
+            "route",
+            "recovery_energy_mj",
+            format!("{}", r.recovery_energy.millijoules()),
+        );
         csv
     }
 }
@@ -483,6 +542,30 @@ fn device_policy(
     build_with(c.policy, &c.model, &params)
 }
 
+/// Replay one device's survey trace on `worker`. With fault injection
+/// enabled the device gets its own fault stream — the spec's seed is
+/// respliced through the `FLEET_FAULT_SALT` family, a pure function of
+/// `(fleet_seed, device_index)` — so fault sequences are reproducible at
+/// any thread count. Fault-free surveys pass the shared config through
+/// untouched (no clone).
+fn survey_one(
+    worker: &mut SimWorker,
+    config: &SimConfig,
+    policy: &mut dyn Policy,
+    gaps: &[Duration],
+    label: &str,
+    mean: Duration,
+    device: u64,
+) -> SimReport {
+    if config.faults.enabled() {
+        let mut dev_cfg = config.clone();
+        dev_cfg.faults.seed = derive_seed(config.fleet.seed ^ FLEET_FAULT_SALT, device);
+        worker.run_batch(&dev_cfg, policy, gaps, label, mean)
+    } else {
+        worker.run_batch(config, policy, gaps, label, mean)
+    }
+}
+
 /// Materialize `count` inter-arrival gaps from the workload's arrival
 /// spec on a salted fleet stream (IO only for `arrival: trace` specs).
 fn materialize_gaps(config: &SimConfig, count: usize, salt: u64) -> std::io::Result<Vec<Duration>> {
@@ -502,6 +585,9 @@ struct ShardAgg {
     late_rate: ReservoirQuantiles,
     items: u64,
     exhausted: u64,
+    retries: u64,
+    shed: u64,
+    recovery_energy: Energy,
 }
 
 impl ShardAgg {
@@ -515,6 +601,9 @@ impl ShardAgg {
             late_rate: ReservoirQuantiles::new(cap, derive_seed(fleet_seed ^ LATE_SALT, shard)),
             items: 0,
             exhausted: 0,
+            retries: 0,
+            shed: 0,
+            recovery_energy: Energy::ZERO,
         }
     }
 
@@ -523,6 +612,9 @@ impl ShardAgg {
         if report.items < expected_items {
             self.exhausted += 1;
         }
+        self.retries += report.retries;
+        self.shed += report.shed_requests;
+        self.recovery_energy += report.recovery_energy;
         self.energy_mj.push(report.energy_exact.millijoules());
         self.lifetime_h.push(report.lifetime.hours());
         let rate = if report.items > 0 {
@@ -536,6 +628,9 @@ impl ShardAgg {
     fn merge(&mut self, other: &ShardAgg) {
         self.items += other.items;
         self.exhausted += other.exhausted;
+        self.retries += other.retries;
+        self.shed += other.shed;
+        self.recovery_energy += other.recovery_energy;
         self.energy_mj.merge(&other.energy_mj);
         self.lifetime_h.merge(&other.lifetime_h);
         self.late_rate.merge(&other.late_rate);
@@ -572,7 +667,8 @@ fn run_survey(
             for device in start..end {
                 let class = class_index(seed, device as u64, cum);
                 let mut policy = device_policy(classes, class, seed, device as u64);
-                let report = worker.run_batch(config, policy.as_mut(), gaps, &label, mean);
+                let report =
+                    survey_one(worker, config, policy.as_mut(), gaps, &label, mean, device as u64);
                 agg.push(&report, expected);
             }
             agg
@@ -589,6 +685,9 @@ fn run_survey(
         energy_mj: total.energy_mj.summary(),
         lifetime_h: total.lifetime_h.summary(),
         late_rate: total.late_rate.summary(),
+        retries: total.retries,
+        shed: total.shed,
+        recovery_energy: total.recovery_energy,
     }
 }
 
@@ -602,12 +701,14 @@ pub fn survey_device(config: &SimConfig, gaps: &[Duration], device: usize) -> Si
     let seed = config.fleet.seed;
     let class = class_index(seed, device as u64, &cum);
     let mut policy = device_policy(&classes, class, seed, device as u64);
-    SimWorker::new(config).run_batch(
+    survey_one(
+        &mut SimWorker::new(config),
         config,
         policy.as_mut(),
         gaps,
         &format!("trace({} gaps)", gaps.len()),
         requests::trace_mean(gaps),
+        device as u64,
     )
 }
 
@@ -631,9 +732,15 @@ struct FleetDevice {
     prev_arrival: Duration,
     /// The fabric currently holds its configuration.
     configured: bool,
+    /// Per-device fault stream (`None` with fault injection disabled).
+    faults: Option<FaultState>,
     items: u64,
     late: u64,
     configurations: u64,
+    /// Faulted attempts this device retried or gave up on.
+    retries: u64,
+    /// Energy destroyed by this device's faulted attempts.
+    recovery_energy: Energy,
     alive: bool,
 }
 
@@ -644,10 +751,56 @@ enum ServeOutcome {
     /// The device's battery died paying for this request — the device is
     /// dead and the request dropped.
     Died,
+    /// The device exhausted its configuration retry cap: it paid for the
+    /// destroyed partial attempts, stays alive but unconfigured, and the
+    /// request should be re-routed to another device.
+    GaveUp,
+}
+
+/// Outcome of one (possibly retried) configuration under a device's
+/// fault stream, in [`DeviceCosts`] arithmetic: the productive charge
+/// (zero on give-up), the destroyed partial-attempt energy, the elapsed
+/// time (partial walks + backoffs + the final clean configure) and the
+/// faulted-attempt count.
+struct ConfigAttempt {
+    charge: Energy,
+    destroyed: Energy,
+    time: Duration,
+    retries: u32,
+    gave_up: bool,
+}
+
+/// Mirror of the replay core's recovering configure on the calibrated
+/// constants: each faulted attempt destroys `fraction` of the nominal
+/// configuration energy/time, backs off exponentially, and gives up
+/// after `retry_max` faulted attempts (no backoff after the last).
+fn attempt_configure(faults: &mut Option<FaultState>, costs: &DeviceCosts) -> ConfigAttempt {
+    let mut out = ConfigAttempt {
+        charge: Energy::ZERO,
+        destroyed: Energy::ZERO,
+        time: Duration::ZERO,
+        retries: 0,
+        gave_up: false,
+    };
+    if let Some(f) = faults.as_mut() {
+        while let Some(fault) = f.next_config_fault() {
+            out.retries += 1;
+            out.destroyed += costs.config_energy * fault.fraction;
+            out.time += costs.config_time * fault.fraction;
+            if out.retries >= f.retry_max() {
+                out.gave_up = true;
+                return out;
+            }
+            out.time += f.backoff_after(out.retries);
+        }
+    }
+    out.charge = costs.config_energy;
+    out.time += costs.config_time;
+    out
 }
 
 impl FleetDevice {
-    fn new(policy: Box<dyn Policy>, battery: Energy) -> FleetDevice {
+    fn new(policy: Box<dyn Policy>, battery: Energy, faults: Option<FaultState>) -> FleetDevice {
         FleetDevice {
             policy,
             // devices start powered off and unconfigured
@@ -657,9 +810,12 @@ impl FleetDevice {
             completion: Duration::ZERO,
             prev_arrival: Duration::ZERO,
             configured: false,
+            faults,
             items: 0,
             late: 0,
             configurations: 0,
+            retries: 0,
+            recovery_energy: Energy::ZERO,
             alive: true,
         }
     }
@@ -678,11 +834,34 @@ impl FleetDevice {
         }
     }
 
+    /// Pay for a given-up configure: the destroyed partial-attempt
+    /// energy is drawn from the battery (Eq-2 honesty — retries spend
+    /// real budget), the fabric is left unconfigured, and the device
+    /// stays alive unless even the partial attempts exceeded its
+    /// battery. Completion time and the committed plan are untouched,
+    /// so the pending idle window is still charged lazily at the next
+    /// successful serve.
+    fn give_up(&mut self, retries: u64, destroyed: Energy) -> ServeOutcome {
+        self.retries += retries;
+        self.configured = false;
+        if destroyed > self.battery {
+            self.alive = false;
+            return ServeOutcome::Died;
+        }
+        self.battery -= destroyed;
+        self.used += destroyed;
+        self.recovery_energy += destroyed;
+        ServeOutcome::GaveUp
+    }
+
     /// Serve a request arriving at `t`: lazily charge the idle window
     /// since the last completion under the committed plan, reconfigure
-    /// if the fabric lost its image, pay the item, then commit the next
-    /// plan. The whole charge is checked against the battery up front —
-    /// a device that cannot afford it dies and the request is dropped.
+    /// if the fabric lost its image (retrying through the device's
+    /// fault stream, if any), pay the item, then commit the next plan.
+    /// The whole charge is checked against the battery up front — a
+    /// device that cannot afford it dies and the request is dropped. A
+    /// configure that exhausts its retry cap returns
+    /// [`ServeOutcome::GaveUp`] so the router can re-place the request.
     fn serve(&mut self, t: Duration, costs: &DeviceCosts) -> ServeOutcome {
         let mut charge = Energy::ZERO;
         if self.items > 0 {
@@ -700,21 +879,51 @@ impl FleetDevice {
         }
         let reconfigure = !self.configured;
         let mut serve_time = costs.item_latency;
+        let mut destroyed = Energy::ZERO;
+        let mut retries = 0u64;
+        let mut extra_configs = 0u64;
         if reconfigure {
-            charge += costs.config_energy;
-            serve_time += costs.config_time;
+            let a = attempt_configure(&mut self.faults, costs);
+            retries += a.retries as u64;
+            destroyed += a.destroyed;
+            if a.gave_up {
+                return self.give_up(retries, destroyed);
+            }
+            charge += a.charge;
+            serve_time += a.time;
         }
+        // at most one brownout per item (the per-device simulators'
+        // convention): the partial phases are destroyed, the image is
+        // lost, and the recovery configure runs the same retry policy
+        if let Some(frac) = self.faults.as_mut().and_then(|f| f.next_infer_fault()) {
+            destroyed += costs.item_energy * frac;
+            serve_time += costs.item_latency * frac;
+            let a = attempt_configure(&mut self.faults, costs);
+            retries += 1 + a.retries as u64;
+            destroyed += a.destroyed;
+            if a.gave_up {
+                return self.give_up(retries, destroyed);
+            }
+            charge += a.charge;
+            serve_time += a.time;
+            extra_configs += 1;
+        }
+        charge += destroyed;
         charge += costs.item_energy;
         if charge > self.battery {
+            self.retries += retries;
             self.alive = false;
             return ServeOutcome::Died;
         }
         self.battery -= charge;
         self.used += charge;
+        self.retries += retries;
+        self.recovery_energy += destroyed;
         if reconfigure {
             self.configured = true;
             self.configurations += 1;
         }
+        self.configurations += extra_configs;
         let start = t.max(self.completion);
         if self.completion > t {
             self.late += 1;
@@ -741,11 +950,16 @@ impl FleetDevice {
 }
 
 /// The lowest-index alive device passing `pred` with the earliest
-/// completion time.
-fn least_completion(devices: &[FleetDevice], pred: impl Fn(&FleetDevice) -> bool) -> Option<usize> {
+/// completion time, skipping `exclude` (a device that just gave up on
+/// this request).
+fn least_completion(
+    devices: &[FleetDevice],
+    exclude: Option<usize>,
+    pred: impl Fn(&FleetDevice) -> bool,
+) -> Option<usize> {
     let mut best: Option<usize> = None;
     for (i, d) in devices.iter().enumerate() {
-        if !d.alive || !pred(d) {
+        if Some(i) == exclude || !d.alive || !pred(d) {
             continue;
         }
         let better = match best {
@@ -759,37 +973,40 @@ fn least_completion(devices: &[FleetDevice], pred: impl Fn(&FleetDevice) -> bool
     best
 }
 
-/// Pick the device that serves a request arriving at `t`.
+/// Pick the device that serves a request arriving at `t`. `exclude`
+/// skips a device that already gave up on this request (re-routing
+/// after graceful degradation).
 fn pick(
     placement: Placement,
     devices: &[FleetDevice],
     t: Duration,
     cursor: &mut usize,
+    exclude: Option<usize>,
 ) -> Option<usize> {
     match placement {
         Placement::RoundRobin => {
             let n = devices.len();
             for k in 0..n {
                 let i = (*cursor + k) % n;
-                if devices[i].alive {
+                if devices[i].alive && Some(i) != exclude {
                     *cursor = (i + 1) % n;
                     return Some(i);
                 }
             }
             None
         }
-        Placement::LeastLoaded => least_completion(devices, |_| true),
-        Placement::PreferConfigured => least_completion(devices, |d| d.awake_at(t))
-            .or_else(|| least_completion(devices, |_| true)),
+        Placement::LeastLoaded => least_completion(devices, exclude, |_| true),
+        Placement::PreferConfigured => least_completion(devices, exclude, |d| d.awake_at(t))
+            .or_else(|| least_completion(devices, exclude, |_| true)),
         Placement::PreferIdleAwake => {
-            least_completion(devices, |d| d.awake_at(t) && d.completion <= t)
-                .or_else(|| least_completion(devices, |d| d.awake_at(t)))
-                .or_else(|| least_completion(devices, |_| true))
+            least_completion(devices, exclude, |d| d.awake_at(t) && d.completion <= t)
+                .or_else(|| least_completion(devices, exclude, |d| d.awake_at(t)))
+                .or_else(|| least_completion(devices, exclude, |_| true))
         }
         Placement::BatteryAware => {
             let mut best: Option<usize> = None;
             for (i, d) in devices.iter().enumerate() {
-                if !d.alive {
+                if !d.alive || Some(i) == exclude {
                     continue;
                 }
                 let better = match best {
@@ -821,12 +1038,22 @@ fn run_routing(
         .fleet
         .deadline
         .unwrap_or_else(|| config.workload.arrival.mean_period());
+    let faults_on = config.faults.enabled();
     let mut devices: Vec<FleetDevice> = (0..config.fleet.devices)
         .map(|i| {
             let class = class_index(seed, i as u64, cum);
+            // the routing fault stream shares the survey's per-device
+            // seed family: a pure function of (fleet_seed, device)
+            let faults = faults_on.then(|| {
+                FaultState::with_seed(
+                    &config.faults,
+                    derive_seed(seed ^ FLEET_FAULT_SALT, i as u64),
+                )
+            });
             FleetDevice::new(
                 device_policy(classes, class, seed, i as u64),
                 classes[class].battery,
+                faults,
             )
         })
         .collect();
@@ -836,28 +1063,46 @@ fn run_routing(
     );
     let mut cursor = 0usize;
     let (mut served, mut misses, mut dropped, mut deaths) = (0u64, 0u64, 0u64, 0u64);
+    let mut rerouted = 0u64;
     let mut t = Duration::ZERO;
     let mut remaining = gaps.iter();
     loop {
-        match pick(placement, &devices, t, &mut cursor) {
-            None => {
-                dropped += 1;
-                misses += 1;
-            }
-            Some(i) => match devices[i].serve(t, &costs) {
-                ServeOutcome::Died => {
-                    deaths += 1;
+        // first placement, plus at most one re-route after a give-up:
+        // graceful degradation sheds the request to another device
+        // instead of dropping it outright
+        let mut excluded: Option<usize> = None;
+        loop {
+            match pick(placement, &devices, t, &mut cursor, excluded) {
+                None => {
                     dropped += 1;
                     misses += 1;
                 }
-                ServeOutcome::Served(l) => {
-                    served += 1;
-                    latency.push(l.millis());
-                    if l > deadline {
+                Some(i) => match devices[i].serve(t, &costs) {
+                    ServeOutcome::Died => {
+                        deaths += 1;
+                        dropped += 1;
                         misses += 1;
                     }
-                }
-            },
+                    ServeOutcome::GaveUp => {
+                        if excluded.is_none() {
+                            rerouted += 1;
+                            excluded = Some(i);
+                            continue;
+                        }
+                        // the re-routed device gave up too
+                        dropped += 1;
+                        misses += 1;
+                    }
+                    ServeOutcome::Served(l) => {
+                        served += 1;
+                        latency.push(l.millis());
+                        if l > deadline {
+                            misses += 1;
+                        }
+                    }
+                },
+            }
+            break;
         }
         match remaining.next() {
             Some(gap) => t += *gap,
@@ -877,6 +1122,8 @@ fn run_routing(
     let mut total_energy = Energy::ZERO;
     let mut configurations = 0u64;
     let mut late = 0u64;
+    let mut retries = 0u64;
+    let mut recovery_energy = Energy::ZERO;
     let mut fleet_lifetime = Duration::ZERO;
     for d in &devices {
         device_energy.push(d.used.millijoules());
@@ -884,6 +1131,8 @@ fn run_routing(
         total_energy += d.used;
         configurations += d.configurations;
         late += d.late;
+        retries += d.retries;
+        recovery_energy += d.recovery_energy;
         fleet_lifetime = fleet_lifetime.max(d.completion);
     }
     FleetRouteReport {
@@ -900,6 +1149,9 @@ fn run_routing(
         latency_ms: latency.summary(),
         device_energy_mj: device_energy.summary(),
         device_items: device_items.summary(),
+        retries,
+        recovery_energy,
+        rerouted,
     }
 }
 
@@ -938,7 +1190,7 @@ pub fn run_fleet(
 mod tests {
     use super::*;
     use crate::config::paper_default;
-    use crate::config::schema::FleetClassSpec;
+    use crate::config::schema::{FaultSpec, FleetClassSpec};
 
     fn fleet_config(devices: usize) -> SimConfig {
         let mut cfg = paper_default();
@@ -1086,6 +1338,53 @@ mod tests {
     }
 
     #[test]
+    fn certain_faults_shed_every_request() {
+        // every configuration attempt CRC-faults, so every device gives
+        // up after retry_max attempts: each request is re-routed once,
+        // gives up again, and is dropped — nothing is ever served, but
+        // the destroyed partial attempts are still paid for
+        let mut cfg = fleet_config(3);
+        cfg.faults.config_crc_rate = 1.0;
+        cfg.faults.retry_max = 2;
+        let r = run_fleet(&cfg, &opts(0, 6, Placement::RoundRobin), &SweepRunner::single())
+            .unwrap()
+            .route;
+        assert_eq!(r.served, 0);
+        assert_eq!(r.dropped, 6);
+        assert_eq!(r.rerouted, 6);
+        // 2 faulted attempts per give-up, 2 give-ups per request
+        assert_eq!(r.retries, 24);
+        assert!(r.recovery_energy > Energy::ZERO);
+        assert_eq!(r.deaths, 0);
+        assert_eq!(r.configurations, 0);
+    }
+
+    #[test]
+    fn faulty_fleet_is_deterministic_across_threads() {
+        let mut cfg = fleet_config(64);
+        cfg.faults.spi_corrupt_rate = 0.2;
+        cfg.faults.brownout_infer_rate = 0.05;
+        let o = opts(12, 60, Placement::LeastLoaded);
+        let a = run_fleet(&cfg, &o, &SweepRunner::single()).unwrap();
+        let b = run_fleet(&cfg, &o, &SweepRunner::new(4)).unwrap();
+        assert_eq!(a.render(), b.render(), "faulty fleet must not depend on threads");
+        assert_eq!(a.to_csv().render(), b.to_csv().render());
+        // ~64 survey configures at a 20% fault rate: some retries fired,
+        // and the recovery spend is visible in the fleet aggregates
+        assert!(a.step.retries > 0, "{}", a.step.retries);
+        assert!(a.step.recovery_energy > Energy::ZERO);
+        let r = &a.route;
+        assert_eq!(r.served + r.dropped, 60);
+        // the fault-free control run reports all-zero fault scalars
+        let clean = fleet_config(64);
+        let c = run_fleet(&clean, &o, &SweepRunner::single()).unwrap();
+        assert_eq!(c.step.retries, 0);
+        assert_eq!(c.route.retries, 0);
+        assert_eq!(c.route.rerouted, 0);
+        assert_eq!(c.step.recovery_energy, Energy::ZERO);
+    }
+
+    #[test]
     fn csv_has_the_documented_schema() {
         let cfg = fleet_config(2);
         let report = run_fleet(&cfg, &opts(4, 4, Placement::LeastLoaded), &SweepRunner::single())
@@ -1102,6 +1401,29 @@ mod tests {
         let text = report.render();
         assert!(text.contains("least-loaded"), "{text}");
         assert!(text.contains("2 devices"), "{text}");
+    }
+
+    #[test]
+    fn zero_observation_csv_rows_render_defined_zeros() {
+        // routing skipped entirely: the distribution rows must still be
+        // emitted, with Summary::empty zeros rather than NaN or absence
+        let cfg = fleet_config(2);
+        let report = run_fleet(&cfg, &opts(4, 0, Placement::RoundRobin), &SweepRunner::single())
+            .unwrap();
+        let rendered = report.to_csv().render();
+        assert!(
+            rendered.contains("route,latency_ms,0,0,0,0,0,0,0,0,0"),
+            "{rendered}"
+        );
+        assert!(
+            rendered.contains("route,device_energy_mj,0,0,0,0,0,0,0,0,0"),
+            "{rendered}"
+        );
+        assert!(!rendered.contains("NaN"), "{rendered}");
+        // byte-stable on repeat
+        let again = run_fleet(&cfg, &opts(4, 0, Placement::RoundRobin), &SweepRunner::single())
+            .unwrap();
+        assert_eq!(rendered, again.to_csv().render());
     }
 
     #[test]

@@ -39,6 +39,19 @@ pub struct Metrics {
     pub sim_energy: Energy,
     /// Simulated elapsed duty-cycle time.
     pub sim_elapsed: Duration,
+    /// Faulted configuration/inference attempts that were retried
+    /// (fault injection; zero when disabled).
+    pub retries: u64,
+    /// Energy destroyed by faulted attempts — drawn from the budget but
+    /// producing nothing (partial configurations, interrupted inference).
+    pub recovery_energy: Energy,
+    /// Simulated time spent in fault recovery (partial attempts,
+    /// backoffs, brownout reconfigurations) instead of useful serving.
+    pub recovery_time: Duration,
+    /// Requests degraded: shed by the retry policy after its attempt cap
+    /// ([`BoardError`](crate::device::board::BoardError)`::RetriesExhausted`),
+    /// or dropped because their device was stuck recovering.
+    pub degraded: u64,
 }
 
 impl Default for Metrics {
@@ -66,6 +79,10 @@ impl Metrics {
             forecasts_emitted: 0,
             sim_energy: Energy::ZERO,
             sim_elapsed: Duration::ZERO,
+            retries: 0,
+            recovery_energy: Energy::ZERO,
+            recovery_time: Duration::ZERO,
+            degraded: 0,
         }
     }
 
@@ -154,6 +171,42 @@ impl Metrics {
         }
     }
 
+    /// Fraction of simulated time the device was doing useful work (or
+    /// idling by choice) rather than fault recovery: `1 −
+    /// recovery_time / sim_elapsed`. Defined as `1.0` before any time
+    /// has elapsed, so zero-observation runs render a number, not NaN.
+    pub fn availability(&self) -> f64 {
+        if self.sim_elapsed.secs() <= 0.0 {
+            1.0
+        } else {
+            (1.0 - self.recovery_time.secs() / self.sim_elapsed.secs()).max(0.0)
+        }
+    }
+
+    /// Degraded-request rate over offered requests (served + dropped +
+    /// degraded); 0 before any request is offered.
+    pub fn degraded_rate(&self) -> f64 {
+        let offered = self.requests + self.dropped + self.degraded;
+        if offered == 0 {
+            0.0
+        } else {
+            self.degraded as f64 / offered as f64
+        }
+    }
+
+    /// Record one degraded request (shed by the retry policy or dropped
+    /// because its device was stuck in recovery).
+    pub fn record_degraded(&mut self) {
+        self.degraded += 1;
+    }
+
+    /// Fold a device's fault-recovery ledger into the serving tally.
+    pub fn record_recovery(&mut self, retries: u64, energy: Energy, time: Duration) {
+        self.retries += retries;
+        self.recovery_energy += energy;
+        self.recovery_time += time;
+    }
+
     /// Render the end-of-run report table.
     pub fn render(&self) -> String {
         let mut t = Table::new(&["metric", "value"]).with_title("serving metrics");
@@ -190,6 +243,16 @@ impl Metrics {
             "throughput (req/sim-s)".into(),
             fnum(self.throughput_per_sim_sec(), 2),
         ]);
+        if self.retries > 0 || self.degraded > 0 {
+            t.row(&["fault retries".into(), self.retries.to_string()]);
+            t.row(&[
+                "recovery energy (mJ)".into(),
+                fnum(self.recovery_energy.millijoules(), 4),
+            ]);
+            t.row(&["degraded requests".into(), self.degraded.to_string()]);
+            t.row(&["degraded rate".into(), fnum(self.degraded_rate(), 4)]);
+            t.row(&["availability".into(), fnum(self.availability(), 6)]);
+        }
         t.render()
     }
 }
@@ -300,5 +363,35 @@ mod tests {
         let s = m.render();
         assert!(s.contains("requests"));
         assert!(!s.contains("p50")); // no latency rows without data
+        assert!(!s.contains("fault retries")); // no fault rows either
+    }
+
+    #[test]
+    fn availability_and_degradation_accounting() {
+        let mut m = Metrics::new();
+        // no time elapsed: availability is defined, not NaN
+        assert_eq!(m.availability(), 1.0);
+        assert_eq!(m.degraded_rate(), 0.0);
+        m.requests = 8;
+        m.sim_elapsed = Duration::from_secs(10.0);
+        m.record_recovery(3, Energy::from_millijoules(7.5), Duration::from_secs(2.5));
+        m.record_degraded();
+        m.record_degraded();
+        assert_eq!(m.retries, 3);
+        assert!((m.recovery_energy.millijoules() - 7.5).abs() < 1e-12);
+        assert!((m.availability() - 0.75).abs() < 1e-12);
+        assert!((m.degraded_rate() - 0.2).abs() < 1e-12);
+        let s = m.render();
+        assert!(s.contains("fault retries"));
+        assert!(s.contains("availability"));
+        assert!(s.contains("degraded rate"));
+    }
+
+    #[test]
+    fn availability_saturates_at_zero() {
+        let mut m = Metrics::new();
+        m.sim_elapsed = Duration::from_secs(1.0);
+        m.recovery_time = Duration::from_secs(5.0);
+        assert_eq!(m.availability(), 0.0);
     }
 }

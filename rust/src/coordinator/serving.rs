@@ -28,11 +28,12 @@ use crate::coordinator::scheduler::{
     Dispatch, MultiAccelScheduler, Policy as SchedPolicy, SlotRequest,
 };
 use crate::device::bitstream::Bitstream;
+use crate::device::board::BoardError;
 use crate::device::rails::PowerSaving;
 use crate::energy::analytical::Analytical;
 use crate::runner::grid::derive_seed;
 use crate::sim::{Ctx, Engine, SimTime};
-use crate::strategies::replay::ReplayCore;
+use crate::strategies::replay::{ReplayCore, SlotId};
 use crate::strategies::strategy::{build_with, BurstHold, GapContext, GapPlan, Policy as GapPolicy};
 use crate::util::units::Duration;
 
@@ -96,6 +97,9 @@ pub struct MultiServeReport {
 
 struct State {
     core: ReplayCore,
+    /// Interned slot of the active image (the recovering phase wrapper
+    /// needs it to reconfigure after a mid-item brownout).
+    slot: SlotId,
     scheduler: MultiAccelScheduler,
     gap_policy: Box<dyn GapPolicy>,
     metrics: Metrics,
@@ -148,7 +152,26 @@ impl State {
         self.ledger_at = now;
     }
 
-    /// Serve one dispatch starting at `now`; returns the completion time.
+    /// A dispatch exhausted its configuration retries mid-recovery:
+    /// graceful degradation. The request is dropped (counted as
+    /// degraded), the fabric stays off, and the fabric-busy window
+    /// covers the stuck time (failed partial attempts + backoffs, read
+    /// off the core's recovery ledger) so the serving clock and the
+    /// board clock stay aligned. The coordinator then simply moves on
+    /// to the next queued request.
+    fn degrade(&mut self, now: SimTime, recovery_before: Duration) -> SimTime {
+        self.metrics.record_degraded();
+        let stuck = self.core.recovery().recovery_time - recovery_before;
+        let finish = now + stuck;
+        self.ledger_at = finish;
+        finish
+    }
+
+    /// Serve one dispatch starting at `now`; returns the completion
+    /// time. With a fault stream installed the configure and phase steps
+    /// route through the recovering wrappers (identical calls when no
+    /// fault is drawn); a dispatch whose retries are exhausted degrades
+    /// via [`State::degrade`] instead of killing the run.
     fn serve(&mut self, now: SimTime, dispatch: &Dispatch) -> SimTime {
         self.idle_until(now);
         // feed the realized inactivity back to the policy that planned it
@@ -156,10 +179,14 @@ impl State {
             self.gap_policy.observe(now.since(self.last_completion));
         }
         let mut finish = now;
+        let recovery_before = self.core.recovery().recovery_time;
         if dispatch.reconfigure {
             // a switch means loading a different image: power-cycle path
-            match self.core.power_cycle_configure("lstm") {
-                Ok(t) => finish += t,
+            match self.core.power_cycle_configure_recovering("lstm") {
+                Ok(rec) => finish += rec.total_time,
+                Err(BoardError::RetriesExhausted(_)) => {
+                    return self.degrade(now, recovery_before);
+                }
                 Err(_) => {
                     self.dead = true;
                     return now;
@@ -167,16 +194,22 @@ impl State {
             }
         } else if !self.core.is_ready() {
             // the gap policy cut power; pay the reconfiguration preamble
-            match self.core.configure("lstm") {
-                Ok(t) => finish += t,
+            match self.core.configure_recovering("lstm") {
+                Ok(rec) => finish += rec.total_time,
+                Err(BoardError::RetriesExhausted(_)) => {
+                    return self.degrade(now, recovery_before);
+                }
                 Err(_) => {
                     self.dead = true;
                     return now;
                 }
             }
         }
-        match self.core.run_phases() {
-            Ok(t) => finish += t,
+        match self.core.run_phases_recovering(self.slot) {
+            Ok(ph) => finish += ph.latency,
+            Err(BoardError::RetriesExhausted(_)) => {
+                return self.degrade(now, recovery_before);
+            }
             Err(_) => {
                 self.dead = true;
                 return now;
@@ -230,6 +263,9 @@ pub fn serve_multi(
         config.platform.spi.compressed,
     );
     core.rebuild_table();
+    let slot = core
+        .slot_id("lstm")
+        .expect("the serving platform programs the lstm image");
     let model = Analytical::new(&config.item, config.workload.energy_budget);
     let gap_policy: Box<dyn GapPolicy> = Box::new(BurstHold::new(
         build_with(opts.gap_policy, &model, &opts.params),
@@ -267,6 +303,7 @@ pub fn serve_multi(
             config.item.latency_without_config(),
         ),
         core,
+        slot,
         gap_policy,
         metrics: Metrics::new(),
         max_queue: opts.max_queue,
@@ -316,9 +353,13 @@ pub fn serve_multi(
 
     let stats = engine.run(&mut state, u64::MAX, handler);
 
+    let recovery = state.core.recovery();
     let mut metrics = state.metrics;
     metrics.sim_energy = state.core.board.fpga_energy;
     metrics.sim_elapsed = stats.end_time.as_duration();
+    // fold the core's cumulative fault ledger in once at the end (it
+    // also covers the partial attempts of dispatches that gave up)
+    metrics.record_recovery(recovery.retries, recovery.recovery_energy, recovery.recovery_time);
     MultiServeReport {
         metrics,
         served: state.served,
@@ -507,6 +548,32 @@ mod tests {
         assert_eq!(a.metrics.sim_energy, b.metrics.sim_energy);
         assert_eq!(a.served, b.served);
         assert_eq!(a.reordered, b.reordered);
+    }
+
+    #[test]
+    fn faulty_serving_degrades_gracefully_and_stays_deterministic() {
+        let mut cfg = paper_default();
+        cfg.faults.config_crc_rate = 0.35;
+        cfg.faults.spi_corrupt_rate = 0.15;
+        cfg.faults.brownout_infer_rate = 0.1;
+        cfg.faults.retry_max = 2;
+        let sources = [
+            periodic_source(0, 10, 80.0, 1000.0),
+            periodic_source(1, 10, 80.0, 1000.0),
+        ];
+        let r = serve_multi(&cfg, &opts(SchedPolicy::Fifo), &sources);
+        // faults never kill the run — requests degrade, the rest serve
+        assert!(!r.budget_exhausted);
+        assert_eq!(r.served + r.metrics.degraded, 20);
+        assert!(r.metrics.retries > 0, "rates this high must fault");
+        assert!(r.metrics.recovery_energy.millijoules() > 0.0);
+        assert!(r.metrics.availability() < 1.0);
+        assert!(r.metrics.degraded_rate() <= 1.0);
+        // the seeded fault stream makes the whole run reproducible
+        let again = serve_multi(&cfg, &opts(SchedPolicy::Fifo), &sources);
+        assert_eq!(r.served, again.served);
+        assert_eq!(r.metrics.degraded, again.metrics.degraded);
+        assert_eq!(r.metrics.render(), again.metrics.render());
     }
 
     #[test]

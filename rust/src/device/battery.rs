@@ -84,9 +84,35 @@ impl Battery {
         self.try_draw(power * dur)
     }
 
+    /// Saturation value for [`endurance_at`](Battery::endurance_at):
+    /// 10^15 seconds (≈ 31.7 million years). Any draw small enough to
+    /// hit this bound is indistinguishable from "forever" at the
+    /// paper's time scales, and a finite cap keeps downstream lifetime
+    /// arithmetic (subtraction, comparisons, CSV formatting) free of
+    /// `inf`/`NaN`.
+    pub fn endurance_cap() -> Duration {
+        Duration::from_secs(1.0e15)
+    }
+
     /// How long the battery can sustain `power` from its current level.
+    ///
+    /// Total over every input: a zero, negative, or `NaN` power draw
+    /// cannot run the battery down, so the result saturates at
+    /// [`endurance_cap`](Battery::endurance_cap) instead of dividing
+    /// through to `inf`/`NaN`. Finite positive draws are also clamped
+    /// to the same cap so the return value is always a finite,
+    /// comparable duration.
     pub fn endurance_at(&self, power: Power) -> Duration {
-        self.remaining() / power
+        let watts = power.watts();
+        if watts.is_nan() || watts <= 0.0 {
+            return Battery::endurance_cap();
+        }
+        let t = self.remaining() / power;
+        if t > Battery::endurance_cap() {
+            Battery::endurance_cap()
+        } else {
+            t
+        }
     }
 }
 
@@ -152,6 +178,24 @@ mod tests {
         let t = b.endurance_at(Power::from_milliwatts(134.3));
         // ≈ 4147/0.1343 s ≈ 8.58 h — the paper's Idle-Waiting avg lifetime
         assert!((t.hours() - 8.577).abs() < 0.01, "{}", t.hours());
+    }
+
+    #[test]
+    fn endurance_is_total_at_degenerate_power() {
+        let b = Battery::paper_budget();
+        let cap = Battery::endurance_cap();
+        // zero, negative, and NaN draws saturate instead of producing
+        // inf/NaN durations
+        assert_eq!(b.endurance_at(Power::from_watts(0.0)), cap);
+        assert_eq!(b.endurance_at(Power::from_watts(-1.0)), cap);
+        assert_eq!(b.endurance_at(Power::from_watts(f64::NAN)), cap);
+        // a vanishingly small but positive draw clamps to the same cap
+        assert_eq!(b.endurance_at(Power::from_watts(1e-30)), cap);
+        assert!(cap.secs().is_finite());
+        // ordinary draws are untouched by the clamp
+        let t = b.endurance_at(Power::from_milliwatts(134.3));
+        assert!(t < cap);
+        assert!((t.hours() - 8.577).abs() < 0.01);
     }
 
     #[test]

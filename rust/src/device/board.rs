@@ -53,6 +53,12 @@ pub enum BoardError {
     /// The battery budget is exhausted.
     #[error(transparent)]
     Exhausted(#[from] Exhausted),
+    /// Every configuration attempt the retry policy allows has faulted;
+    /// the device gives up on this request and stays powered off. The
+    /// payload is the number of attempts made. Recoverable at the
+    /// coordinator layer (shed/re-route), unlike `Exhausted`.
+    #[error("configuration gave up after {0} faulted attempts")]
+    RetriesExhausted(u32),
 }
 
 /// The assembled platform.

@@ -1,0 +1,297 @@
+//! Deterministic, seeded fault injection and the retry/backoff policy.
+//!
+//! A [`FaultState`] is the per-device fault stream: it owns a
+//! [`Xoshiro256ss`] seeded from the config's [`FaultSpec`] (or a
+//! `derive_seed`-split of it for fleet devices) and answers two questions
+//! the device layer asks at well-defined points:
+//!
+//! * [`FaultState::next_config_fault`] — does **this configuration
+//!   attempt** fail, and if so with which scenario and after what fraction
+//!   of the configuration has already been paid for?
+//! * [`FaultState::next_infer_fault`] — is **this inference run**
+//!   interrupted by a supply brownout (clearing the loaded image)?
+//!
+//! Draw discipline (the determinism argument, see `docs/ROBUSTNESS.md`):
+//! a question whose total rate is zero consumes **no** RNG output, so a
+//! fault-free spec never advances the stream and — since the stream is
+//! only ever consulted behind an `Option<FaultState>` that is `None` when
+//! [`FaultSpec::enabled`] is false — a fault-free run takes byte-identical
+//! code paths to a build without this module. With faults enabled, the
+//! sequence of outcomes is a pure function of `(spec, seed, call
+//! sequence)`, independent of wall clock, thread count, or allocation
+//! order.
+
+use crate::config::schema::FaultSpec;
+use crate::util::rng::Xoshiro256ss;
+use crate::util::units::Duration;
+
+/// Which configuration fault scenario struck an attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConfigFaultKind {
+    /// Bitstream CRC mismatch, detected at the end of the load: the whole
+    /// configuration energy is wasted.
+    CrcError,
+    /// Corrupted SPI transfer, aborting mid-load.
+    SpiCorrupt,
+    /// Supply brownout mid-configuration.
+    Brownout,
+    /// Transient flash read error; fails early in the load, so little
+    /// energy is wasted.
+    FlashRead,
+}
+
+/// One injected configuration fault: the scenario and the fraction of the
+/// nominal configuration (time and energy) already spent when it struck.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConfigFault {
+    /// The scenario that fired.
+    pub kind: ConfigFaultKind,
+    /// Fraction of the configuration completed before the abort, in
+    /// `[0, 1]`. CRC errors pin this to `1.0` (detected at the end);
+    /// flash read errors scale it into `[0, 0.1)` (detected early).
+    pub fraction: f64,
+}
+
+/// Running tally of injected faults, exposed so tests can pin "same seed
+/// ⇒ same fault sequence" and reports can break recovery down by cause.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Configuration attempts aborted by a CRC mismatch.
+    pub crc_errors: u64,
+    /// Configuration attempts aborted by a corrupted SPI transfer.
+    pub spi_corruptions: u64,
+    /// Configuration attempts aborted by a supply brownout.
+    pub config_brownouts: u64,
+    /// Configuration attempts aborted by a transient flash read error.
+    pub flash_read_errors: u64,
+    /// Inference runs interrupted by a supply brownout.
+    pub infer_brownouts: u64,
+}
+
+impl FaultCounters {
+    /// Total configuration-attempt faults across all four scenarios.
+    pub fn config_faults(&self) -> u64 {
+        self.crc_errors + self.spi_corruptions + self.config_brownouts + self.flash_read_errors
+    }
+}
+
+/// A seeded per-device fault stream plus the retry policy knobs.
+#[derive(Debug, Clone)]
+pub struct FaultState {
+    spec: FaultSpec,
+    rng: Xoshiro256ss,
+    counters: FaultCounters,
+    draws: u64,
+}
+
+impl FaultState {
+    /// A stream seeded directly from the spec's own seed (single-device
+    /// simulations).
+    pub fn new(spec: &FaultSpec) -> FaultState {
+        FaultState::with_seed(spec, spec.seed)
+    }
+
+    /// A stream with an explicit seed (fleet devices split the spec seed
+    /// through the `derive_seed` family so every device gets an
+    /// independent, reproducible stream at any thread count).
+    pub fn with_seed(spec: &FaultSpec, seed: u64) -> FaultState {
+        FaultState {
+            spec: spec.clone(),
+            rng: Xoshiro256ss::new(seed),
+            counters: FaultCounters::default(),
+            draws: 0,
+        }
+    }
+
+    /// The spec this stream was built from.
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// The fault tally so far.
+    pub fn counters(&self) -> FaultCounters {
+        self.counters
+    }
+
+    /// How many RNG outputs have been consumed — zero-rate questions must
+    /// never advance the stream, and tests pin that here.
+    pub fn draws(&self) -> u64 {
+        self.draws
+    }
+
+    /// Attempt cap from the spec's retry policy.
+    pub fn retry_max(&self) -> u32 {
+        self.spec.retry_max
+    }
+
+    #[inline]
+    fn draw(&mut self) -> f64 {
+        self.draws += 1;
+        self.rng.next_f64()
+    }
+
+    /// Decide whether the next configuration attempt faults. Consumes no
+    /// RNG when all four configuration rates are zero; otherwise exactly
+    /// one draw on success and two on a fault (scenario + fraction).
+    pub fn next_config_fault(&mut self) -> Option<ConfigFault> {
+        let spec = &self.spec;
+        let total = spec.config_fault_rate();
+        if total <= 0.0 {
+            return None;
+        }
+        let u = self.draw();
+        // the four scenarios are disjoint slices of [0, total)
+        let crc = spec.config_crc_rate;
+        let spi = crc + spec.spi_corrupt_rate;
+        let brown = spi + spec.brownout_config_rate;
+        let kind = if u < crc {
+            ConfigFaultKind::CrcError
+        } else if u < spi {
+            ConfigFaultKind::SpiCorrupt
+        } else if u < brown {
+            ConfigFaultKind::Brownout
+        } else if u < total {
+            ConfigFaultKind::FlashRead
+        } else {
+            return None;
+        };
+        let frac_draw = self.draw();
+        let fraction = match kind {
+            // CRC mismatch is only detectable once the full bitstream is in
+            ConfigFaultKind::CrcError => {
+                self.counters.crc_errors += 1;
+                1.0
+            }
+            ConfigFaultKind::SpiCorrupt => {
+                self.counters.spi_corruptions += 1;
+                frac_draw
+            }
+            ConfigFaultKind::Brownout => {
+                self.counters.config_brownouts += 1;
+                frac_draw
+            }
+            // flash read faults surface in the first command phase
+            ConfigFaultKind::FlashRead => {
+                self.counters.flash_read_errors += 1;
+                0.1 * frac_draw
+            }
+        };
+        Some(ConfigFault { kind, fraction })
+    }
+
+    /// Decide whether the next inference run is interrupted by a supply
+    /// brownout; `Some(fraction)` gives how far through the item's compute
+    /// phases the supply collapsed. Consumes no RNG at rate zero.
+    pub fn next_infer_fault(&mut self) -> Option<f64> {
+        if self.spec.brownout_infer_rate <= 0.0 {
+            return None;
+        }
+        let u = self.draw();
+        if u < self.spec.brownout_infer_rate {
+            self.counters.infer_brownouts += 1;
+            Some(self.draw())
+        } else {
+            None
+        }
+    }
+
+    /// Backoff charged (powered off, in sim time) after the `failures`-th
+    /// consecutive failed attempt: `backoff × 2^(failures−1)`, saturating
+    /// at `backoff_cap`.
+    pub fn backoff_after(&self, failures: u32) -> Duration {
+        let doubling = 2f64.powi(failures.saturating_sub(1).min(62) as i32);
+        (self.spec.backoff * doubling).min(self.spec.backoff_cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec_with(rates: [f64; 5]) -> FaultSpec {
+        FaultSpec {
+            config_crc_rate: rates[0],
+            spi_corrupt_rate: rates[1],
+            brownout_config_rate: rates[2],
+            flash_read_rate: rates[3],
+            brownout_infer_rate: rates[4],
+            ..FaultSpec::none()
+        }
+    }
+
+    #[test]
+    fn zero_rates_consume_no_rng() {
+        let mut s = FaultState::new(&FaultSpec::none());
+        for _ in 0..1000 {
+            assert_eq!(s.next_config_fault(), None);
+            assert_eq!(s.next_infer_fault(), None);
+        }
+        assert_eq!(s.draws(), 0);
+        assert_eq!(s.counters(), FaultCounters::default());
+    }
+
+    #[test]
+    fn same_seed_same_fault_sequence() {
+        let spec = spec_with([0.05, 0.04, 0.03, 0.02, 0.1]);
+        let mut a = FaultState::with_seed(&spec, 42);
+        let mut b = FaultState::with_seed(&spec, 42);
+        for _ in 0..5000 {
+            assert_eq!(a.next_config_fault(), b.next_config_fault());
+            assert_eq!(a.next_infer_fault(), b.next_infer_fault());
+        }
+        assert_eq!(a.counters(), b.counters());
+        assert!(a.counters().config_faults() > 0, "rates this high must fire");
+        assert!(a.counters().infer_brownouts > 0);
+    }
+
+    #[test]
+    fn rate_one_always_faults_and_fractions_are_sane() {
+        let spec = spec_with([0.25, 0.25, 0.25, 0.25, 1.0]);
+        let mut s = FaultState::new(&spec);
+        for _ in 0..500 {
+            let f = s.next_config_fault().expect("total rate 1.0 must fault");
+            assert!((0.0..=1.0).contains(&f.fraction), "{f:?}");
+            match f.kind {
+                ConfigFaultKind::CrcError => assert_eq!(f.fraction, 1.0),
+                ConfigFaultKind::FlashRead => assert!(f.fraction < 0.1),
+                _ => {}
+            }
+            let g = s.next_infer_fault().expect("rate 1.0 must fault");
+            assert!((0.0..1.0).contains(&g));
+        }
+        let c = s.counters();
+        assert_eq!(c.config_faults(), 500);
+        assert_eq!(c.infer_brownouts, 500);
+        // all four scenarios fire at equal rates over 500 attempts
+        for n in [c.crc_errors, c.spi_corruptions, c.config_brownouts, c.flash_read_errors] {
+            assert!(n > 60, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn backoff_doubles_and_saturates() {
+        let spec = FaultSpec {
+            backoff: Duration::from_millis(10.0),
+            backoff_cap: Duration::from_millis(75.0),
+            ..FaultSpec::none()
+        };
+        let s = FaultState::new(&spec);
+        assert_eq!(s.backoff_after(1), Duration::from_millis(10.0));
+        assert_eq!(s.backoff_after(2), Duration::from_millis(20.0));
+        assert_eq!(s.backoff_after(3), Duration::from_millis(40.0));
+        assert_eq!(s.backoff_after(4), Duration::from_millis(75.0));
+        assert_eq!(s.backoff_after(200), Duration::from_millis(75.0));
+    }
+
+    #[test]
+    fn different_seeds_give_different_streams() {
+        let spec = spec_with([0.1, 0.1, 0.1, 0.1, 0.0]);
+        let mut a = FaultState::with_seed(&spec, 1);
+        let mut b = FaultState::with_seed(&spec, 2);
+        let mut diverged = false;
+        for _ in 0..200 {
+            diverged |= a.next_config_fault() != b.next_config_fault();
+        }
+        assert!(diverged);
+    }
+}

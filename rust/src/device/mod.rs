@@ -14,6 +14,8 @@
 //! * [`fpga`] / [`mcu`] / [`battery`] / [`monitor`] — the Spartan-7 state
 //!   machine, the RP2040 request source, the 4147 J budget and the
 //!   PAC1934 sampling monitor.
+//! * [`faults`] — deterministic, seeded fault injection (configuration
+//!   CRC/SPI/brownout/flash scenarios) and the retry/backoff policy.
 //! * [`board`] — the assembled platform the simulations drive.
 
 pub mod battery;
@@ -22,6 +24,7 @@ pub mod board;
 pub mod calib;
 pub mod compression;
 pub mod config_fsm;
+pub mod faults;
 pub mod flash;
 pub mod fpga;
 pub mod mcu;

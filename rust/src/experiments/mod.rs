@@ -10,6 +10,7 @@
 //! | §5.3 validation (2.8%/2.7%) | [`validation`] |
 //! | §7 future work: online policies × irregular arrivals | [`exp4_policies`] |
 //! | §4.2 extension: multi-client scheduling × offered load | [`exp5_serving`] |
+//! | Robustness study: fault rate × policy | [`faults`] |
 //! | Published values | [`paper`] |
 
 pub mod ablation;
@@ -18,6 +19,7 @@ pub mod exp2;
 pub mod exp3;
 pub mod exp4_policies;
 pub mod exp5_serving;
+pub mod faults;
 pub mod fig2;
 pub mod paper;
 pub mod validation;

@@ -28,6 +28,7 @@ use crate::config::loader::SimConfig;
 use crate::config::schema::SpiConfig;
 use crate::device::board::{Board, BoardError};
 use crate::device::config_fsm::ConfigProfile;
+use crate::device::faults::FaultState;
 use crate::device::fpga::FpgaState;
 use crate::device::rails::{PowerSaving, RailSet};
 use crate::strategies::strategy::GapPlan;
@@ -298,6 +299,17 @@ pub struct BatchRun {
     pub reconfigured: Vec<bool>,
     /// The energy budget ran out mid-batch.
     pub exhausted: bool,
+    /// Per-served-item extra busy time from fault recovery (partial
+    /// attempts, backoffs, brownout reconfigurations), parallel to
+    /// `reconfigured`. Left empty on a core without a fault stream, so
+    /// the fault-free hot path never touches it.
+    pub extra: Vec<Duration>,
+    /// The retry policy gave up serving the item after the last executed
+    /// gap ([`BoardError::RetriesExhausted`]); the batch stopped there
+    /// with `execs.len() == reconfigured.len() + 1` and the fabric off.
+    /// Unlike `exhausted` this is recoverable: the driver sheds that one
+    /// request and resumes from the next.
+    pub shed: bool,
 }
 
 impl BatchRun {
@@ -306,6 +318,8 @@ impl BatchRun {
         self.execs.clear();
         self.reconfigured.clear();
         self.exhausted = false;
+        self.extra.clear();
+        self.shed = false;
     }
 
     /// Gaps whose plan fully executed.
@@ -337,6 +351,105 @@ pub struct ReplayCore {
     /// When true, every operation routes through the original `Board`
     /// FSM accounting (the golden reference path).
     golden: bool,
+    /// Seeded fault stream; `None` when the config's [`FaultSpec`] has
+    /// every rate at zero, in which case the `*_recovering` wrappers
+    /// delegate straight to the plain calls — zero behavioural delta.
+    ///
+    /// [`FaultSpec`]: crate::config::schema::FaultSpec
+    faults: Option<FaultState>,
+    /// Cumulative recovery ledger (always zero with faults disabled).
+    recovery: RecoveryLedger,
+}
+
+/// Cumulative fault-recovery ledger of one [`ReplayCore`], reset with the
+/// board. Unlike the per-call [`Recovery`] return values, the ledger also
+/// captures attempts whose call ultimately gave up
+/// ([`BoardError::RetriesExhausted`]) — their partial energy is already
+/// charged to the battery, so a report built from the ledger conserves
+/// energy exactly.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RecoveryLedger {
+    /// Faulted configuration attempts plus inference brownouts.
+    pub retries: u64,
+    /// Energy destroyed by faults: partial configuration attempts
+    /// (inrush + truncated stage walk) and partial phase runs. Productive
+    /// spends (the eventual successful configuration) are not counted —
+    /// battery drawn = productive spends + this, exactly.
+    pub recovery_energy: Energy,
+    /// Sim time lost to faults: partial attempts, backoffs, and forced
+    /// recovery reconfigurations after an inference brownout.
+    pub recovery_time: Duration,
+}
+
+/// What one fault-aware configuration call did: the nominal configuration
+/// time of the successful attempt plus the retry ledger accumulated on
+/// the way there. With no fault injected this is
+/// [`Recovery::clean`]`(config_time)` — all retry fields zero.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Recovery {
+    /// T_config of the **successful** attempt (what the busy-window math
+    /// keys on, exactly the plain `configure_slot` return value).
+    pub config_time: Duration,
+    /// Total wall time of the call: failed partial attempts + backoffs +
+    /// the successful configuration.
+    pub total_time: Duration,
+    /// Faulted attempts that preceded the success.
+    pub retries: u32,
+    /// Energy charged to the battery for the failed partial attempts
+    /// (inrush + partial stage walk per attempt) — what Eq 2 would not
+    /// have spent on a fault-free device.
+    pub recovery_energy: Energy,
+    /// Wall time of the failed attempts + backoffs (excludes the
+    /// successful configuration itself).
+    pub recovery_time: Duration,
+}
+
+impl Recovery {
+    /// The fault-free outcome: one clean configuration of `config_time`.
+    pub fn clean(config_time: Duration) -> Recovery {
+        Recovery {
+            config_time,
+            total_time: config_time,
+            retries: 0,
+            recovery_energy: Energy::ZERO,
+            recovery_time: Duration::ZERO,
+        }
+    }
+}
+
+/// What one fault-aware phase replay did: the total busy latency (equal
+/// to the plain `run_phases` latency when no brownout struck) plus the
+/// recovery ledger of any mid-inference brownout.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PhaseRecovery {
+    /// Total busy time serving the item: partial phases + backoffs +
+    /// recovery reconfiguration + the clean re-run (just the three active
+    /// phases when no fault struck).
+    pub latency: Duration,
+    /// The brownout itself plus any faulted configuration attempts during
+    /// its recovery.
+    pub retries: u32,
+    /// Energy destroyed by the fault: the wasted partial phases plus any
+    /// partial configuration attempts during recovery (the successful
+    /// reconfiguration is productive spend and is not counted).
+    pub recovery_energy: Energy,
+    /// `latency` minus the final clean phase run.
+    pub recovery_time: Duration,
+    /// A supply brownout interrupted the phases (at most one per item).
+    pub browned_out: bool,
+}
+
+impl PhaseRecovery {
+    /// The fault-free outcome: one clean phase replay of `latency`.
+    pub fn clean(latency: Duration) -> PhaseRecovery {
+        PhaseRecovery {
+            latency,
+            retries: 0,
+            recovery_energy: Energy::ZERO,
+            recovery_time: Duration::ZERO,
+            browned_out: false,
+        }
+    }
 }
 
 impl ReplayCore {
@@ -351,6 +464,8 @@ impl ReplayCore {
             spi,
             table,
             golden: false,
+            faults: config.faults.enabled().then(|| FaultState::new(&config.faults)),
+            recovery: RecoveryLedger::default(),
         }
     }
 
@@ -417,6 +532,9 @@ impl ReplayCore {
     /// same platform.
     pub fn reset_for(&mut self, config: &SimConfig) {
         self.phases = item_phases(&config.item);
+        // fresh fault stream + ledger per run, exactly as from_config
+        self.faults = config.faults.enabled().then(|| FaultState::new(&config.faults));
+        self.recovery = RecoveryLedger::default();
         let spi = config.platform.spi;
         if config.platform.fpga != self.board.fpga.model || spi.compressed != self.spi.compressed {
             // different device or on-flash encoding: the stored image
@@ -481,6 +599,197 @@ impl ReplayCore {
             self.board.fpga.power_off();
         }
         self.board.power_on_and_configure(slot, self.spi)
+    }
+
+    /// Replace the fault stream (fleet devices install a
+    /// `derive_seed`-split stream per device; `None` disables injection).
+    pub fn set_fault_state(&mut self, faults: Option<FaultState>) {
+        self.faults = faults;
+    }
+
+    /// The fault stream, if injection is enabled (counters live here).
+    pub fn fault_state(&self) -> Option<&FaultState> {
+        self.faults.as_ref()
+    }
+
+    /// The cumulative fault-recovery ledger (all-zero with faults off).
+    pub fn recovery(&self) -> RecoveryLedger {
+        self.recovery
+    }
+
+    /// Fault-aware [`configure_slot`](ReplayCore::configure_slot): before
+    /// each attempt the fault stream is consulted; a faulted attempt
+    /// charges the *partial* configuration energy actually spent (inrush
+    /// + stage walk up to the fault's fraction), powers back off, waits
+    /// the capped-exponential backoff in sim time, and retries — up to
+    /// the spec's `retry_max` attempts, after which
+    /// [`BoardError::RetriesExhausted`] is returned with the fabric off.
+    /// Every retry re-draws from the battery, so Eq-2 accounting stays
+    /// honest; a battery death mid-retry surfaces as `Exhausted` as
+    /// everywhere else. With faults disabled this *is* `configure_slot`
+    /// (same single call, zero extra arithmetic).
+    pub fn configure_slot_recovering(&mut self, slot: SlotId) -> Result<Recovery, BoardError> {
+        if self.faults.is_none() {
+            return Ok(Recovery::clean(self.configure_slot(slot)?));
+        }
+        self.recover_configure(slot.index, |core| core.configure_slot(slot))
+    }
+
+    /// Fault-aware [`configure`](ReplayCore::configure) (by slot name).
+    pub fn configure_recovering(&mut self, name: &str) -> Result<Recovery, BoardError> {
+        if self.faults.is_none() {
+            return Ok(Recovery::clean(self.configure(name)?));
+        }
+        match self.table.slot_id(name) {
+            Some(slot) => self.recover_configure(slot.index, move |core| {
+                let name = core.table.slots[slot.index].name.clone();
+                core.configure(&name)
+            }),
+            // unknown slot: the plain path produces the right error
+            None => Ok(Recovery::clean(self.configure(name)?)),
+        }
+    }
+
+    /// Fault-aware [`power_cycle_configure`](ReplayCore::power_cycle_configure).
+    pub fn power_cycle_configure_recovering(&mut self, name: &str) -> Result<Recovery, BoardError> {
+        if self.board.fpga.is_configured() {
+            self.board.fpga.power_off();
+        }
+        self.configure_recovering(name)
+    }
+
+    /// The shared retry loop: consult the stream, charge partials, back
+    /// off, and run `success` (one of the plain configure calls) on a
+    /// clean draw. `slot_index` names the table row whose stage costs a
+    /// partial attempt charges.
+    fn recover_configure(
+        &mut self,
+        slot_index: usize,
+        mut success: impl FnMut(&mut Self) -> Result<Duration, BoardError>,
+    ) -> Result<Recovery, BoardError> {
+        let mut retries = 0u32;
+        let mut recovery_energy = Energy::ZERO;
+        let mut recovery_time = Duration::ZERO;
+        loop {
+            let fault = self
+                .faults
+                .as_mut()
+                .expect("recover_configure requires an installed fault stream")
+                .next_config_fault();
+            match fault {
+                None => {
+                    let config_time = success(self)?;
+                    return Ok(Recovery {
+                        config_time,
+                        total_time: recovery_time + config_time,
+                        retries,
+                        recovery_energy,
+                        recovery_time,
+                    });
+                }
+                Some(f) => {
+                    let before = self.board.fpga_energy;
+                    let partial = self.charge_partial_attempt(slot_index, f.fraction)?;
+                    let destroyed = self.board.fpga_energy - before;
+                    recovery_energy += destroyed;
+                    recovery_time += partial;
+                    retries += 1;
+                    self.recovery.retries += 1;
+                    self.recovery.recovery_energy += destroyed;
+                    self.recovery.recovery_time += partial;
+                    let faults = self.faults.as_ref().expect("stream installed");
+                    if retries >= faults.retry_max() {
+                        return Err(BoardError::RetriesExhausted(retries));
+                    }
+                    let backoff = faults.backoff_after(retries);
+                    self.pass_off_time(backoff);
+                    recovery_time += backoff;
+                    self.recovery.recovery_time += backoff;
+                }
+            }
+        }
+    }
+
+    /// Charge one *failed* configuration attempt: the inrush transient
+    /// plus the stage walk truncated at `fraction` of the slot's nominal
+    /// T_config, then power back off. `configurations` does not advance
+    /// (the image never became live); `power_ons` does, one per attempt.
+    /// Returns the partial wall time spent.
+    fn charge_partial_attempt(
+        &mut self,
+        slot_index: usize,
+        fraction: f64,
+    ) -> Result<Duration, BoardError> {
+        let (stages, total_time) = {
+            let costs = &self.table.slots[slot_index];
+            (costs.stages, costs.total_time)
+        };
+        let inrush = self.board.fpga.power_on();
+        self.board.spend_transient(inrush)?;
+        let cutoff = total_time * fraction;
+        let mut elapsed = Duration::ZERO;
+        for (power, time) in stages {
+            if elapsed >= cutoff {
+                break;
+            }
+            let span = time.min(cutoff - elapsed);
+            self.board.spend(power, span)?;
+            elapsed += span;
+        }
+        self.board.fpga.power_off();
+        Ok(elapsed)
+    }
+
+    /// Fault-aware [`run_phases`](ReplayCore::run_phases): at most one
+    /// supply brownout may interrupt the item's active phases, wasting
+    /// the partial phase energy, clearing the configuration, and forcing
+    /// a full (itself fault-prone) recovering reconfiguration of `slot`
+    /// before the phases re-run cleanly. Propagates
+    /// [`BoardError::RetriesExhausted`] when that recovery gives up. With
+    /// faults disabled this *is* `run_phases`.
+    pub fn run_phases_recovering(&mut self, slot: SlotId) -> Result<PhaseRecovery, BoardError> {
+        let fault = match self.faults.as_mut() {
+            None => None,
+            Some(f) => f.next_infer_fault(),
+        };
+        let Some(fraction) = fault else {
+            return Ok(PhaseRecovery::clean(self.run_phases()?));
+        };
+        let before = self.board.fpga_energy;
+        // partial phase walk up to the brownout instant, then rails drop
+        self.board.fpga.begin_work()?;
+        let phases = self.phases;
+        let total = phases
+            .iter()
+            .fold(Duration::ZERO, |acc, &(_, t)| acc + t);
+        let cutoff = total * fraction;
+        let mut elapsed = Duration::ZERO;
+        for (power, time) in phases {
+            if elapsed >= cutoff {
+                break;
+            }
+            let span = time.min(cutoff - elapsed);
+            self.board.spend(power, span)?;
+            elapsed += span;
+        }
+        self.board.fpga.power_off();
+        let destroyed = self.board.fpga_energy - before;
+        self.recovery.retries += 1;
+        self.recovery.recovery_energy += destroyed;
+        self.recovery.recovery_time += elapsed;
+        // full recovery reconfiguration (may itself fault and retry; its
+        // own partial attempts land on the ledger through the inner call)
+        let rec = self.configure_slot_recovering(slot)?;
+        self.recovery.recovery_time += rec.config_time;
+        let clean = self.run_phases()?;
+        let recovery_time = elapsed + rec.total_time;
+        Ok(PhaseRecovery {
+            latency: recovery_time + clean,
+            retries: rec.retries + 1,
+            recovery_energy: destroyed + rec.recovery_energy,
+            recovery_time,
+            browned_out: true,
+        })
     }
 
     /// Cut the rails without advancing time (a policy's mid-gap decision;
@@ -633,21 +942,55 @@ impl ReplayCore {
             }
             // the request ending this gap: reconfigure if the plan cut
             // power, then replay the active phases — same order, same
-            // spends as the scalar event handler
+            // spends as the scalar event handler. With a fault stream
+            // installed both steps route through the recovering wrappers
+            // (identical calls when no fault is drawn).
             let mut reconfigured = false;
+            let mut extra = Duration::ZERO;
             if !self.is_ready() {
-                match self.configure_slot(slot) {
-                    Ok(t) => {
-                        *config_time = t;
-                        reconfigured = true;
+                if self.faults.is_some() {
+                    match self.configure_slot_recovering(slot) {
+                        Ok(rec) => {
+                            *config_time = rec.config_time;
+                            reconfigured = true;
+                            extra += rec.recovery_time;
+                        }
+                        Err(BoardError::RetriesExhausted(_)) => {
+                            out.shed = true;
+                            return;
+                        }
+                        Err(_) => {
+                            out.exhausted = true;
+                            return;
+                        }
+                    }
+                } else {
+                    match self.configure_slot(slot) {
+                        Ok(t) => {
+                            *config_time = t;
+                            reconfigured = true;
+                        }
+                        Err(_) => {
+                            out.exhausted = true;
+                            return;
+                        }
+                    }
+                }
+            }
+            if self.faults.is_some() {
+                match self.run_phases_recovering(slot) {
+                    Ok(ph) => extra += ph.recovery_time,
+                    Err(BoardError::RetriesExhausted(_)) => {
+                        out.shed = true;
+                        return;
                     }
                     Err(_) => {
                         out.exhausted = true;
                         return;
                     }
                 }
-            }
-            if self.run_phases().is_err() {
+                out.extra.push(extra);
+            } else if self.run_phases().is_err() {
                 out.exhausted = true;
                 return;
             }

@@ -39,6 +39,8 @@ use std::sync::Arc;
 
 use crate::config::loader::SimConfig;
 use crate::coordinator::requests::ArrivalProcess;
+use crate::device::board::BoardError;
+use crate::device::rails::PowerSaving;
 use crate::sim::{Ctx, Engine, SimTime};
 use crate::strategies::replay::{BatchRun, GapBatch, ReplayCore, SlotId};
 use crate::strategies::strategy::{decide, decide_batch, GapContext, Policy};
@@ -92,6 +94,17 @@ pub struct SimReport {
     /// Final engine clock: the arrival time of the last request
     /// processed (n−1 inter-arrival gaps for n items).
     pub sim_time: Duration,
+    /// Faulted configuration/inference attempts that were retried (or
+    /// given up on). Zero whenever fault injection is disabled.
+    pub retries: u64,
+    /// Energy destroyed by faulted attempts — partial configurations and
+    /// interrupted inference runs. Recovery overhead drawn from the same
+    /// battery budget, not productive spend; zero with faults disabled.
+    pub recovery_energy: Energy,
+    /// Requests shed after the retry policy exhausted its attempt cap
+    /// ([`BoardError::RetriesExhausted`]): not served, not counted in
+    /// `items`, the device powered off through the following gap.
+    pub shed_requests: u64,
 }
 
 /// Events of the single-accelerator duty cycle: a request arrives. Each
@@ -124,6 +137,12 @@ struct RunLedger {
     /// A board operation failed (budget exhausted): the run is over and
     /// cannot be resumed.
     exhausted: bool,
+    /// Requests shed after the retry policy gave up (fault injection).
+    shed_requests: u64,
+    /// A request was just shed and its following gap has not been
+    /// consumed yet: the batched driver must pass that gap powered off,
+    /// without consulting the policy, before planning resumes.
+    shed_pending: bool,
 }
 
 impl RunLedger {
@@ -139,6 +158,8 @@ impl RunLedger {
             config_time: config.item.configuration.time,
             item_latency: config.item.latency_without_config(),
             exhausted: false,
+            shed_requests: 0,
+            shed_pending: false,
         }
     }
 }
@@ -164,7 +185,10 @@ impl LifetimeState<'_> {
     ///
     /// Stops (without counting the in-flight item) as soon as any energy
     /// draw would exceed the remaining budget — Eq 3's `≤ E_Budget`
-    /// criterion.
+    /// criterion. With a fault stream installed the configure and phase
+    /// steps route through the recovering wrappers (identical calls when
+    /// no fault is drawn); a request whose retries are exhausted is
+    /// *shed* instead of killing the run ([`shed_and_pass_gap`]).
     fn on_request(&mut self, ctx: &mut Ctx<LifetimeEvent>) {
         let ledger = &mut *self.ledger;
         if ledger.items >= ledger.max_items {
@@ -174,11 +198,17 @@ impl LifetimeState<'_> {
         let arrival = ctx.now().as_duration();
         // 1. ensure configured (interned slot: no per-item flash lookup)
         let mut reconfigured = false;
+        let mut extra = Duration::ZERO;
         if !self.core.is_ready() {
-            match self.core.configure_slot(ledger.slot) {
-                Ok(t) => {
-                    ledger.config_time = t;
+            match self.core.configure_slot_recovering(ledger.slot) {
+                Ok(rec) => {
+                    ledger.config_time = rec.config_time;
                     reconfigured = true;
+                    extra = extra + rec.recovery_time;
+                }
+                Err(BoardError::RetriesExhausted(_)) => {
+                    shed_and_pass_gap(self.core, self.arrivals, ledger, ctx);
+                    return;
                 }
                 Err(_) => {
                     ledger.exhausted = true;
@@ -187,32 +217,21 @@ impl LifetimeState<'_> {
                 }
             }
         }
-        // 2. active phases
-        if self.core.run_phases().is_err() {
-            ledger.exhausted = true;
-            ctx.stop();
-            return;
+        // 2. active phases (a supply brownout mid-item recovers in place)
+        match self.core.run_phases_recovering(ledger.slot) {
+            Ok(ph) => extra = extra + ph.recovery_time,
+            Err(BoardError::RetriesExhausted(_)) => {
+                shed_and_pass_gap(self.core, self.arrivals, ledger, ctx);
+                return;
+            }
+            Err(_) => {
+                ledger.exhausted = true;
+                ctx.stop();
+                return;
+            }
         }
-        ledger.items += 1;
-        // served latency: queue behind a late predecessor, then pay any
-        // reconfiguration plus the active phases
-        let serve = if reconfigured {
-            ledger.config_time + ledger.item_latency
-        } else {
-            ledger.item_latency
-        };
-        let start = arrival.max(ledger.prev_completion);
-        // late = arrived before the previous item finished. Counted here,
-        // at arrival, from the same queue state the latency ledger uses —
-        // so cascaded lateness (a request delayed by a predecessor that
-        // was itself late) is counted, which the plan-local
-        // `GapExecution::late` flag cannot see.
-        if start > arrival {
-            ledger.late_requests += 1;
-        }
-        let completion = start + serve;
-        ledger.latency.push((completion - arrival).millis());
-        ledger.prev_completion = completion;
+        // late/latency bookkeeping shared verbatim with the batched driver
+        account_served_item(ledger, arrival, reconfigured, extra);
         if ledger.items >= ledger.max_items {
             // Eq 2 counts n−1 idle gaps: no gap after the final item.
             ctx.stop();
@@ -226,6 +245,29 @@ impl LifetimeState<'_> {
             Err(()) => ctx.stop(),
         }
     }
+}
+
+/// Graceful degradation on the scalar event path: the retry policy gave
+/// up on this request ([`BoardError::RetriesExhausted`]), so it is shed —
+/// not served, not counted — and the device stays powered off through
+/// the following inter-arrival gap. The policy is neither consulted nor
+/// fed the gap: it plans at item completions, and no item completed.
+fn shed_and_pass_gap(
+    core: &mut ReplayCore,
+    arrivals: &mut dyn ArrivalProcess,
+    ledger: &mut RunLedger,
+    ctx: &mut Ctx<LifetimeEvent>,
+) {
+    ledger.shed_requests += 1;
+    let gap = arrivals.next_gap();
+    // the fabric is off after a give-up, so this passes the gap in the
+    // (paper-model, zero-energy) off state on both core flavours
+    if core.elapse(PowerSaving::BASELINE, gap).is_err() {
+        ledger.exhausted = true;
+        ctx.stop();
+        return;
+    }
+    ctx.schedule_in(gap, LifetimeEvent::Request);
 }
 
 /// The gap-planning tail of one served item: ask the policy, execute the
@@ -290,16 +332,31 @@ struct BatchScratch {
 }
 
 /// The serve-side accounting of one request: item count, queueing,
-/// served latency. Extracted verbatim from the event handler so the
-/// batched driver shares the exact arithmetic (and f64 op order).
-fn account_served_item(ledger: &mut RunLedger, arrival: Duration, reconfigured: bool) {
+/// served latency. Shared by the event handler and the batched driver so
+/// both use the exact arithmetic (and f64 op order). `extra` is the
+/// fault-recovery overhead (partial attempts, backoffs, brownout
+/// reconfigurations) the request waited through on top of its nominal
+/// busy window; it is exactly zero on the fault-free path, where adding
+/// it to the strictly positive serve time cannot perturb a single bit.
+fn account_served_item(
+    ledger: &mut RunLedger,
+    arrival: Duration,
+    reconfigured: bool,
+    extra: Duration,
+) {
     ledger.items += 1;
-    let serve = if reconfigured {
+    let base = if reconfigured {
         ledger.config_time + ledger.item_latency
     } else {
         ledger.item_latency
     };
+    let serve = base + extra;
     let start = arrival.max(ledger.prev_completion);
+    // late = arrived before the previous item finished. Counted here,
+    // at arrival, from the same queue state the latency ledger uses —
+    // so cascaded lateness (a request delayed by a predecessor that
+    // was itself late) is counted, which the plan-local
+    // `GapExecution::late` flag cannot see.
     if start > arrival {
         ledger.late_requests += 1;
     }
@@ -310,17 +367,27 @@ fn account_served_item(ledger: &mut RunLedger, arrival: Duration, reconfigured: 
 
 /// Serve the first request (arrival t = 0) outside the batch loop: pay
 /// power-on + configuration + the active phases, account the item. After
-/// this every chunk element is one (gap, following item) pair.
+/// this every chunk element is one (gap, following item) pair. If the
+/// retry policy gives up on the very first request it is shed and
+/// `shed_pending` is raised, so [`drive_trace`] passes gap 0 powered off
+/// before any planning happens — exactly like the scalar handler.
 fn serve_first_item(core: &mut ReplayCore, ledger: &mut RunLedger) {
     if ledger.max_items == 0 {
         return;
     }
     let mut reconfigured = false;
+    let mut extra = Duration::ZERO;
     if !core.is_ready() {
-        match core.configure_slot(ledger.slot) {
-            Ok(t) => {
-                ledger.config_time = t;
+        match core.configure_slot_recovering(ledger.slot) {
+            Ok(rec) => {
+                ledger.config_time = rec.config_time;
                 reconfigured = true;
+                extra = extra + rec.recovery_time;
+            }
+            Err(BoardError::RetriesExhausted(_)) => {
+                ledger.shed_requests += 1;
+                ledger.shed_pending = true;
+                return;
             }
             Err(_) => {
                 ledger.exhausted = true;
@@ -328,11 +395,19 @@ fn serve_first_item(core: &mut ReplayCore, ledger: &mut RunLedger) {
             }
         }
     }
-    if core.run_phases().is_err() {
-        ledger.exhausted = true;
-        return;
+    match core.run_phases_recovering(ledger.slot) {
+        Ok(ph) => extra = extra + ph.recovery_time,
+        Err(BoardError::RetriesExhausted(_)) => {
+            ledger.shed_requests += 1;
+            ledger.shed_pending = true;
+            return;
+        }
+        Err(_) => {
+            ledger.exhausted = true;
+            return;
+        }
     }
-    account_served_item(ledger, Duration::ZERO, reconfigured);
+    account_served_item(ledger, Duration::ZERO, reconfigured, extra);
 }
 
 /// The batched inner loop: drive the run through `gaps[..limit]` in
@@ -359,10 +434,32 @@ fn drive_trace(
     consumed: &mut usize,
     scratch: &mut BatchScratch,
 ) {
+    // With a fault stream installed, chunks shrink to one gap. A shed
+    // request must stop planning immediately — its following gap passes
+    // powered off without consulting the policy — and a multi-gap chunk
+    // would already have planned (and let a learning policy observe)
+    // gaps past the shed point, making chunk boundaries visible in the
+    // results. One-gap chunks keep the policy-visible plan/observe
+    // sequence identical to the scalar event path; fault-free runs keep
+    // the full [`GAP_BATCH`] and are untouched.
+    let span_cap = if core.fault_state().is_some() { 1 } else { GAP_BATCH };
     while !ledger.exhausted && ledger.items < ledger.max_items && *consumed < limit {
-        let span = GAP_BATCH
+        if ledger.shed_pending {
+            // tail of a shed request: its gap passes powered off,
+            // unplanned and unobserved (mirrors `shed_and_pass_gap`)
+            let gap = gaps[*consumed];
+            if core.elapse(PowerSaving::BASELINE, gap).is_err() {
+                ledger.exhausted = true;
+                return;
+            }
+            *clock = *clock + gap;
+            *consumed += 1;
+            ledger.shed_pending = false;
+            continue;
+        }
+        let span = span_cap
             .min(limit - *consumed)
-            .min((ledger.max_items - ledger.items).min(GAP_BATCH as u64) as usize);
+            .min((ledger.max_items - ledger.items).min(span_cap as u64) as usize);
         let chunk = &gaps[*consumed..*consumed + span];
         scratch.ctxs.clear();
         scratch.arrivals.clear();
@@ -395,20 +492,33 @@ fn drive_trace(
                 ledger.decisions.timeouts_expired += 1;
             }
             if k < run.reconfigured.len() {
+                // `extra` is empty on a fault-free core: zero overhead
+                let extra = run.extra.get(k).copied().unwrap_or(Duration::ZERO);
                 account_served_item(
                     ledger,
                     scratch.arrivals[k + 1].as_duration(),
                     run.reconfigured[k],
+                    extra,
                 );
             }
         }
         *clock = scratch.arrivals[run.execs.len()];
-        *consumed += if run.exhausted {
-            // the failed gap was drawn (consumed) before it was refused
-            run.execs.len() + (run.execs.len() == run.reconfigured.len()) as usize
+        if run.shed {
+            // the item after the last executed gap exhausted its retry
+            // cap: shed it (not served, not counted); its following gap
+            // — the next in the trace — passes powered off through the
+            // `shed_pending` arm on the next iteration
+            ledger.shed_requests += 1;
+            ledger.shed_pending = true;
+            *consumed += run.execs.len();
         } else {
-            span
-        };
+            *consumed += if run.exhausted {
+                // the failed gap was drawn (consumed) before it was refused
+                run.execs.len() + (run.execs.len() == run.reconfigured.len()) as usize
+            } else {
+                span
+            };
+        }
         if run.exhausted {
             ledger.exhausted = true;
         }
@@ -425,6 +535,7 @@ fn build_report(
     end_time: SimTime,
 ) -> SimReport {
     let board = &core.board;
+    let recovery = core.recovery();
     SimReport {
         policy: policy_label,
         arrival: arrival_label,
@@ -443,6 +554,9 @@ fn build_report(
         }),
         decisions: ledger.decisions,
         sim_time: end_time.as_duration(),
+        retries: recovery.retries,
+        recovery_energy: recovery.recovery_energy,
+        shed_requests: ledger.shed_requests,
     }
 }
 

@@ -53,6 +53,13 @@ pub fn assert_sim_reports_bit_identical(a: &SimReport, b: &SimReport, what: &str
         b.sim_time.secs().to_bits(),
         "{what}: clock"
     );
+    assert_eq!(a.retries, b.retries, "{what}: fault retries");
+    assert_eq!(
+        a.recovery_energy.joules().to_bits(),
+        b.recovery_energy.joules().to_bits(),
+        "{what}: recovery energy"
+    );
+    assert_eq!(a.shed_requests, b.shed_requests, "{what}: shed requests");
 }
 
 #[cfg(test)]

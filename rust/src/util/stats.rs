@@ -128,6 +128,25 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// The defined zero-observation summary: `count == 0` and every
+    /// statistic exactly `0.0`. Report rows built from an empty sample
+    /// set render these zeros instead of `NaN` (which would break CSV
+    /// byte-comparison across runs) or being skipped (which would make
+    /// the CSV schema depend on the data).
+    pub fn empty() -> Summary {
+        Summary {
+            count: 0,
+            mean: 0.0,
+            std_dev: 0.0,
+            min: 0.0,
+            p50: 0.0,
+            p90: 0.0,
+            p95: 0.0,
+            p99: 0.0,
+            max: 0.0,
+        }
+    }
+
     /// Summarize a sample set. Returns `None` on an empty slice.
     pub fn of(samples: &[f64]) -> Option<Summary> {
         if samples.is_empty() {
@@ -233,6 +252,14 @@ impl ReservoirQuantiles {
             p99: percentile_sorted(&sorted, 99.0),
             max: self.moments.max(),
         })
+    }
+
+    /// Total-function variant of [`summary`](Self::summary): returns
+    /// [`Summary::empty`] before any observation, so callers that
+    /// render a fixed report shape never have to special-case the
+    /// zero-observation reservoir.
+    pub fn summary_or_empty(&self) -> Summary {
+        self.summary().unwrap_or_else(Summary::empty)
     }
 
     /// Fold another reservoir into this one. Moments merge exactly
@@ -396,6 +423,29 @@ mod tests {
     #[test]
     fn summary_empty_is_none() {
         assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn empty_summary_is_defined_zeros() {
+        let s = Summary::empty();
+        assert_eq!(s.count, 0);
+        for v in [s.mean, s.std_dev, s.min, s.p50, s.p90, s.p95, s.p99, s.max] {
+            assert_eq!(v.to_bits(), 0.0f64.to_bits(), "empty stat must be +0.0, not NaN");
+        }
+    }
+
+    #[test]
+    fn reservoir_summary_or_empty_is_total() {
+        let r = ReservoirQuantiles::new(16, 7);
+        assert!(r.summary().is_none());
+        let s = r.summary_or_empty();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p99.to_bits(), 0.0f64.to_bits());
+        let mut r = r;
+        r.push(3.5);
+        let s = r.summary_or_empty();
+        assert_eq!(s.count, 1);
+        assert_eq!(s.p50, 3.5);
     }
 
     #[test]

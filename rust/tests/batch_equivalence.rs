@@ -74,6 +74,38 @@ fn every_policy_every_trace_every_boundary_is_bit_identical() {
     }
 }
 
+/// Installing an all-zero `FaultSpec` — even with non-default seed and
+/// retry knobs — is invisible: batched and scalar runs stay bit-identical
+/// to the stock fault-free config on every field. Disabled fault
+/// machinery must cost nothing: not one RNG draw, not one ULP.
+#[test]
+fn fault_spec_none_leaves_every_path_bit_identical() {
+    use idlewait::config::schema::FaultSpec;
+    let cfg = paper_default();
+    let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
+    let (trace_name, gaps) = corpus_traces().swap_remove(2);
+    let mut capped = cfg.clone();
+    capped.workload.max_items = Some(gaps.len() as u64 + 1);
+    let mut dressed_cfg = capped.clone();
+    dressed_cfg.faults = FaultSpec::none();
+    dressed_cfg.faults.seed = 0xDEAD_BEEF;
+    dressed_cfg.faults.retry_max = 9;
+    for spec in PolicySpec::ALL {
+        let tag = format!("{spec} on {trace_name}: FaultSpec::none");
+        let mut policy = build(spec, &model);
+        let plain = simulate_batch(&capped, policy.as_mut(), &gaps);
+        let mut policy = build(spec, &model);
+        let dressed = simulate_batch(&dressed_cfg, policy.as_mut(), &gaps);
+        assert_identical(&plain, &dressed, &format!("batched: {tag}"));
+        let mut policy = build(spec, &model);
+        let mut arrivals = TraceReplay::new(gaps.clone());
+        let scalar = simulate(&dressed_cfg, policy.as_mut(), &mut arrivals);
+        assert_identical(&plain, &scalar, &format!("scalar: {tag}"));
+        assert_eq!(dressed.retries, 0);
+        assert_eq!(dressed.shed_requests, 0);
+    }
+}
+
 /// The batched driver on a golden-reference worker (`SimWorker::golden`
 /// + `run_batch`) equals the scalar golden path: chunking composes with
 /// the `Board` FSM, not just with the gap-cost kernel.

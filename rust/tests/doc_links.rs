@@ -111,8 +111,9 @@ fn cli_guide_covers_every_subcommand() {
     // every command the CLI dispatches must be documented in docs/CLI.md
     let guide = std::fs::read_to_string(repo_root().join("docs/CLI.md")).unwrap();
     for cmd in [
-        "fig2", "exp1", "exp2", "exp3", "exp4", "gen-trace", "tune", "validate", "ablate",
-        "multi", "serve", "plan", "bench", "all",
+        "fig2", "exp1", "exp2", "exp3", "exp4", "exp5", "gen-trace", "tune", "train",
+        "validate", "ablate", "multi", "fleet", "faults", "serve", "plan", "bench",
+        "bench-compare", "all",
     ] {
         assert!(
             guide.contains(&format!("`repro {cmd}`")),

@@ -51,6 +51,40 @@ fn every_policy_on_every_corpus_trace_is_bit_identical() {
     }
 }
 
+/// An explicit all-zero `FaultSpec` (non-default seed/retry knobs
+/// included) leaves both the fast path and the golden `Board`-FSM path
+/// bit-identical to the untouched default config: the fault hooks take
+/// the same code paths and draw no randomness when disabled.
+#[test]
+fn fault_spec_none_is_invisible_on_both_paths() {
+    use idlewait::config::schema::FaultSpec;
+    let cfg = paper_default();
+    let model = Analytical::new(&cfg.item, cfg.workload.energy_budget);
+    let (trace_name, gaps) = corpus_traces().swap_remove(0);
+    let mut capped = cfg.clone();
+    capped.workload.max_items = Some(gaps.len() as u64 + 1);
+    let mut dressed_cfg = capped.clone();
+    dressed_cfg.faults = FaultSpec::none();
+    dressed_cfg.faults.seed = 0x5EED;
+    dressed_cfg.faults.retry_max = 7;
+    for spec in PolicySpec::ALL {
+        let tag = format!("{spec} on {trace_name}: FaultSpec::none");
+        let mut policy = build(spec, &model);
+        let mut arrivals = TraceReplay::new(gaps.clone());
+        let plain = simulate(&capped, policy.as_mut(), &mut arrivals);
+        let mut policy = build(spec, &model);
+        let mut arrivals = TraceReplay::new(gaps.clone());
+        let fast = simulate(&dressed_cfg, policy.as_mut(), &mut arrivals);
+        assert_identical(&plain, &fast, &format!("fast: {tag}"));
+        let mut policy = build(spec, &model);
+        let mut arrivals = TraceReplay::new(gaps.clone());
+        let golden = simulate_golden(&dressed_cfg, policy.as_mut(), &mut arrivals);
+        assert_identical(&plain, &golden, &format!("golden: {tag}"));
+        assert_eq!(fast.retries, 0);
+        assert_eq!(fast.recovery_energy.joules(), 0.0);
+    }
+}
+
 /// Tight Poisson arrivals drive the late/queueing paths (zero idle
 /// windows, mid-busy arrivals); the paths must still agree bit-for-bit.
 #[test]
